@@ -1,0 +1,39 @@
+//! Quickstart: the WebLLM "hello world" — create an engine handle, send
+//! an OpenAI-style chat completion, print the reply.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! The frontend engine (`ServiceWorkerMLCEngine`) spawns a worker thread
+//! that loads the model (compiles AOT HLO artifacts, uploads quantized
+//! weights) and then behaves like an endpoint. Weights are synthetic
+//! (seeded random, see DESIGN.md §5), so the text is gibberish — the
+//! point is the full engine pipeline.
+
+use webllm::api::ChatCompletionRequest;
+use webllm::coordinator::{EngineConfig, ServiceWorkerMLCEngine};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    println!("loading tiny-2m (compiling AOT artifacts in the worker)...");
+    let mut engine = ServiceWorkerMLCEngine::create(EngineConfig::native(&["tiny-2m"]))?;
+    println!("models ready: {:?}", engine.models());
+
+    let mut request = ChatCompletionRequest::new("tiny-2m")
+        .system("You are a helpful assistant running entirely on-device.")
+        .user("Tell me about running language models in the browser.");
+    request.max_tokens = 32;
+    request.sampling.temperature = 0.8;
+    request.sampling.seed = Some(42);
+
+    let response = engine.chat_completion(request)?;
+    println!("\nassistant: {}", response.text());
+    println!(
+        "\nusage: {} prompt + {} completion tokens | ttft {:.3}s | decode {:.1} tok/s",
+        response.usage.prompt_tokens,
+        response.usage.completion_tokens,
+        response.usage.ttft_s,
+        response.usage.decode_tokens_per_s,
+    );
+    Ok(())
+}

@@ -1,0 +1,152 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E run): boots the
+//! full stack — HTTP endpoint -> frontend engine -> worker thread ->
+//! continuous-batching scheduler -> PJRT executables — fires a batch of
+//! concurrent OpenAI-style requests over real TCP (mixed streaming and
+//! non-streaming), and reports latency/throughput percentiles.
+//!
+//! ```bash
+//! cargo run --release --example serve_benchmark [-- --model phi-web-38m --requests 12 --browser]
+//! ```
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+use webllm::http::{ServerConfig};
+use webllm::coordinator::EngineConfig;
+use webllm::json::{parse, Value};
+use webllm::metrics::Histogram;
+
+fn flag(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let model = flag("--model").unwrap_or_else(|| "tiny-2m".into());
+    let n_requests: usize = flag("--requests").and_then(|v| v.parse().ok()).unwrap_or(10);
+    let max_tokens: usize = flag("--max-tokens").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let browser = std::env::args().any(|a| a == "--browser");
+    let addr = "127.0.0.1:18080";
+
+    let engine_cfg = if browser {
+        EngineConfig::browser(&[&model])
+    } else {
+        EngineConfig::native(&[&model])
+    };
+    println!("booting endpoint on {addr} (model={model}, browser={browser})...");
+    let server_cfg = ServerConfig {
+        addr: addr.to_string(),
+        engine: engine_cfg,
+        max_requests: Some(n_requests),
+    };
+    let server = std::thread::spawn(move || webllm::http::serve(server_cfg));
+
+    // Wait for readiness.
+    let t_boot = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(mut s) => {
+                let _ = write!(s, "GET /health HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n");
+                let mut buf = String::new();
+                let _ = s.read_to_string(&mut buf);
+                if buf.contains("200 OK") {
+                    break;
+                }
+            }
+            Err(_) => {}
+        }
+        if t_boot.elapsed() > Duration::from_secs(600) {
+            return Err("server did not become ready".into());
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    println!("endpoint ready after {:.1}s (model load + AOT compile)", t_boot.elapsed().as_secs_f64());
+
+    // Fire concurrent clients.
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for i in 0..n_requests {
+        let model = model.clone();
+        clients.push(std::thread::spawn(move || -> Result<(f64, usize, bool), String> {
+            let stream_mode = i % 2 == 0;
+            let body = format!(
+                r#"{{"model":"{model}","messages":[{{"role":"user","content":"Request number {i}: say a few words about page {i}."}}],"max_tokens":{max_tokens},"seed":{i},"stream":{stream_mode}}}"#
+            );
+            let t = Instant::now();
+            let mut s = TcpStream::connect("127.0.0.1:18080").map_err(|e| e.to_string())?;
+            write!(
+                s,
+                "POST /v1/chat/completions HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+                body.len(),
+                body
+            )
+            .map_err(|e| e.to_string())?;
+            let mut resp = String::new();
+            s.read_to_string(&mut resp).map_err(|e| e.to_string())?;
+            let elapsed = t.elapsed().as_secs_f64();
+            let completion_tokens = extract_tokens(&resp, stream_mode)?;
+            Ok((elapsed, completion_tokens, stream_mode))
+        }));
+    }
+
+    let mut latency = Histogram::new();
+    let mut total_tokens = 0usize;
+    let mut failures = 0usize;
+    for c in clients {
+        match c.join().expect("client thread") {
+            Ok((secs, toks, _)) => {
+                latency.push(secs);
+                total_tokens += toks;
+            }
+            Err(e) => {
+                eprintln!("client error: {e}");
+                failures += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let _ = server.join().expect("server thread");
+
+    println!("\n=== serve_benchmark report ===");
+    println!("model                 : {model}");
+    println!("mode                  : {}", if browser { "browser" } else { "native" });
+    println!("requests              : {n_requests} ({failures} failed)");
+    println!("wall time             : {wall:.2} s");
+    println!("completion tokens     : {total_tokens}");
+    println!("aggregate throughput  : {:.2} tok/s", total_tokens as f64 / wall);
+    println!("request latency p50   : {:.2} s", latency.percentile(50.0));
+    println!("request latency p95   : {:.2} s", latency.percentile(95.0));
+    println!("request latency max   : {:.2} s", latency.percentile(100.0));
+    Ok(())
+}
+
+/// Pull completion-token counts out of either response form.
+fn extract_tokens(raw: &str, stream_mode: bool) -> Result<usize, String> {
+    let body = raw.split_once("\r\n\r\n").map(|x| x.1).unwrap_or(raw);
+    if stream_mode {
+        let (events, done) = webllm::http::sse_parse(body);
+        if !done {
+            return Err("stream did not finish".into());
+        }
+        let last_usage = events
+            .iter()
+            .rev()
+            .find_map(|v: &Value| v.get("usage").cloned())
+            .ok_or("no usage in stream")?;
+        last_usage
+            .get("completion_tokens")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| "bad usage".into())
+    } else {
+        let v = parse(body.trim()).map_err(|e| format!("{e}: {body:.120}"))?;
+        if let Some(err) = v.get("error") {
+            return Err(webllm::json::to_string(err));
+        }
+        v.get("usage")
+            .and_then(|u| u.get("completion_tokens"))
+            .and_then(Value::as_usize)
+            .ok_or_else(|| "no usage".into())
+    }
+}

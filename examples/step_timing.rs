@@ -1,0 +1,21 @@
+fn main() {
+    let manifest = webllm::models::Manifest::load(&webllm::artifacts_dir()).unwrap();
+    let client = webllm::runtime::thread_client().unwrap();
+    for model in ["llama-web-80m", "phi-web-38m"] {
+        let mut rt = webllm::runtime::ModelRuntime::load_subset(&client, &manifest, model, None, Some(&[16]), Some(&[1,8])).unwrap();
+        let mc = rt.config().clone();
+        let mp = mc.max_pages_per_seq();
+        for b in [1usize, 8] {
+            let ids = vec![5i32; b]; let pos = vec![3i32; b]; let lens = vec![4i32; b];
+            let mut tables = vec![0i32; b*mp];
+            for r in 0..b { tables[r*mp] = 1 + r as i32; }
+            // warmup
+            for _ in 0..2 { rt.decode(&ids,&pos,&lens,&tables).unwrap(); }
+            let n = 10;
+            let t0 = std::time::Instant::now();
+            for _ in 0..n { rt.decode(&ids,&pos,&lens,&tables).unwrap(); }
+            let ms = t0.elapsed().as_secs_f64()*1e3/n as f64;
+            println!("{model} decode b={b}: {ms:.1} ms/step ({:.2} tok/s at b=1)", 1000.0/ms);
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Streaming chat: token deltas arrive over the worker message channel as
+//! OpenAI-style chunks (paper §2.1 "streams back output in an OpenAI-
+//! style response, which the web application can use to update the
+//! frontend").
+//!
+//! Also demonstrates browser mode: pass `--browser` to run the engine
+//! under the WebGPU/WASM cost model and compare the reported decode
+//! throughput against native mode.
+//!
+//! ```bash
+//! cargo run --release --example streaming_chat [-- --browser]
+//! ```
+
+use std::io::Write;
+use webllm::api::ChatCompletionRequest;
+use webllm::coordinator::{EngineConfig, ServiceWorkerMLCEngine};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let browser = std::env::args().any(|a| a == "--browser");
+    let cfg = if browser {
+        println!("mode: browser (WebGPU dispatch + WASM slowdown cost model)");
+        EngineConfig::browser(&["tiny-2m"])
+    } else {
+        println!("mode: native (the MLC-LLM baseline shape)");
+        EngineConfig::native(&["tiny-2m"])
+    };
+    let mut engine = ServiceWorkerMLCEngine::create(cfg)?;
+
+    let turns = [
+        "What can run in a web browser these days?",
+        "And how do the kernels get there without CUDA?",
+    ];
+    let mut history: Vec<(webllm::tokenizer::Role, String)> = Vec::new();
+
+    for user_turn in turns {
+        println!("\nuser: {user_turn}");
+        print!("assistant: ");
+        std::io::stdout().flush()?;
+
+        history.push((webllm::tokenizer::Role::User, user_turn.to_string()));
+        let mut req = ChatCompletionRequest::new("tiny-2m")
+            .system("You answer in short sentences.");
+        for (role, content) in &history {
+            req = req.message(*role, content.clone());
+        }
+        req.max_tokens = 24;
+        req.sampling.temperature = 0.7;
+        req.sampling.seed = Some(7);
+
+        let mut n_chunks = 0usize;
+        let resp = engine.chat_completion_stream(req, |chunk| {
+            n_chunks += 1;
+            print!("{}", chunk.delta);
+            let _ = std::io::stdout().flush();
+        })?;
+        println!();
+        println!(
+            "  [{} chunks | {} tokens | {:.1} tok/s decode]",
+            n_chunks, resp.usage.completion_tokens, resp.usage.decode_tokens_per_s
+        );
+        history.push((webllm::tokenizer::Role::Assistant, resp.text().to_string()));
+    }
+
+    let stats = engine.stats()?;
+    println!("\nengine stats: {}", webllm::json::to_string_pretty(&stats));
+    Ok(())
+}

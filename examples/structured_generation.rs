@@ -1,0 +1,64 @@
+//! Structured generation (paper §2.1): JSON-Schema-constrained and
+//! EBNF-grammar-constrained decoding through the XGrammar-analog engine.
+//! Every sampled token is masked by the grammar automaton, so the output
+//! is guaranteed to parse — even from an untrained model.
+//!
+//! ```bash
+//! cargo run --release --example structured_generation
+//! ```
+
+use webllm::api::{ChatCompletionRequest, ResponseFormat};
+use webllm::coordinator::{EngineConfig, ServiceWorkerMLCEngine};
+use webllm::json::parse;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut engine = ServiceWorkerMLCEngine::create(EngineConfig::native(&["tiny-2m"]))?;
+
+    // 1. JSON Schema: a tool-call-like payload.
+    let schema = parse(
+        r#"{
+        "type": "object",
+        "properties": {
+            "city": {"type": "string"},
+            "days": {"type": "integer"},
+            "units": {"enum": ["celsius", "fahrenheit"]}
+        },
+        "required": ["city", "days", "units"]
+    }"#,
+    )?;
+    let mut req = ChatCompletionRequest::new("tiny-2m")
+        .system("Extract the weather query as JSON.")
+        .user("What's the weather in Paris for the next 3 days, in celsius?");
+    req.max_tokens = 96;
+    req.sampling.seed = Some(11);
+    req.response_format = ResponseFormat::JsonSchema(schema);
+
+    let resp = engine.chat_completion(req)?;
+    println!("json_schema output : {}", resp.text());
+    let v = parse(resp.text()).expect("guaranteed-parseable JSON");
+    println!("  parsed keys      : {:?}", v.as_object().map(|o| o.keys().cloned().collect::<Vec<_>>()));
+
+    // 2. JSON mode: any valid JSON value.
+    let mut req = ChatCompletionRequest::new("tiny-2m").user("Emit any JSON.");
+    req.max_tokens = 48;
+    req.sampling.seed = Some(5);
+    req.response_format = ResponseFormat::JsonObject;
+    let resp = engine.chat_completion(req)?;
+    println!("json_object output : {}", resp.text());
+    assert!(parse(resp.text()).is_ok());
+
+    // 3. Raw EBNF grammar: a tiny command language.
+    let grammar = r#"
+root ::= command " " target
+command ::= "open" | "close" | "toggle"
+target ::= "door" | "window" | [a-z]+ "-light"
+"#;
+    let mut req = ChatCompletionRequest::new("tiny-2m").user("Pick an action.");
+    req.max_tokens = 24;
+    req.sampling.seed = Some(13);
+    req.response_format = ResponseFormat::Grammar(grammar.to_string());
+    let resp = engine.chat_completion(req)?;
+    println!("ebnf output        : {}", resp.text());
+
+    Ok(())
+}

@@ -1,0 +1,384 @@
+"""AOT artifact builder — the "MLC-LLM compile" analog (build-time only).
+
+Produces everything the Rust runtime needs, so Python is never on the
+request path:
+
+  artifacts/
+    manifest.json                      — models, arg schemas, file map
+    tokenizer.json                     — byte-level BPE vocab
+    <model>/config.json                — ModelConfig dump
+    <model>/weights_q4.bin             — packed q4 weights + scales (raw LE)
+    <model>/prefill_c<T>.hlo.txt       — one executable per chunk size
+    <model>/decode_b<B>.hlo.txt        — one executable per batch size
+
+HLO **text** is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the Rust `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Argument order convention (shared with rust/src/runtime/artifact.rs):
+  prefill: [ids(T) i32, seq_len(1) i32, block_table(MP) i32] + weights + [k_pages, v_pages]
+  decode:  [ids(B) i32, positions(B) i32, seq_lens(B) i32, block_tables(B,MP) i32] + weights + [k_pages, v_pages]
+Outputs (a flat tuple): (logits f32, k_pages, v_pages).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import ALL_CONFIGS, ModelConfig
+from .kernels.ref import GROUP_SIZE, PACK
+from .tokenizer_gen import build_tokenizer
+
+DTYPES = {"f32": jnp.float32, "u32": jnp.uint32, "i32": jnp.int32}
+NP_DTYPES = {"f32": np.float32, "u32": np.uint32, "i32": np.int32}
+ALIGN = 64
+
+# Attention schedule for lowered artifacts: the CPU-specialized one
+# (DESIGN.md §Hardware-Adaptation — per-backend kernel specialization is
+# what MLC/TVM do for WebGPU vs Metal vs CUDA).
+ARTIFACT_SCHEDULE = "gather"
+# q4 GEMM schedule for CPU artifacts (see kernels/q4_matmul.py): "single"
+# collapses the N-tile grid, which interpret-mode serializes.
+ARTIFACT_Q4_SCHEDULE = "single"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _struct(shape, ty: str) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPES[ty])
+
+
+def _spec_dicts(specs) -> List[Dict]:
+    return [{"name": n, "shape": list(s), "dtype": t} for n, s, t in specs]
+
+
+def build_weights(cfg: ModelConfig, out_dir: str, seed: int) -> List[Dict]:
+    """Write weights_q4.bin; returns manifest entries with offsets."""
+    weights = M.init_weights(cfg, seed=seed)
+    entries: List[Dict] = []
+    path = os.path.join(out_dir, cfg.name, "weights_q4.bin")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    off = 0
+    with open(path, "wb") as f:
+        for name, shape, ty in M.weight_specs(cfg):
+            arr = np.ascontiguousarray(weights[name].astype(NP_DTYPES[ty], copy=False))
+            pad = (-off) % ALIGN
+            f.write(b"\0" * pad)
+            off += pad
+            raw = arr.tobytes()
+            entries.append(
+                {
+                    "name": name,
+                    "shape": list(shape),
+                    "dtype": ty,
+                    "offset": off,
+                    "nbytes": len(raw),
+                }
+            )
+            f.write(raw)
+            off += len(raw)
+    return entries
+
+
+def lower_prefill(cfg: ModelConfig, chunk: int) -> str:
+    wspecs = M.weight_specs(cfg)
+    cshape = M.cache_specs(cfg)[0][1]
+
+    def fn(ids, seq_len, block_table, *flat):
+        w = {n: a for (n, _, _), a in zip(wspecs, flat[: len(wspecs)])}
+        k_pages, v_pages = flat[len(wspecs):]
+        return M.prefill(
+            cfg, ids, seq_len[0], block_table, w, k_pages, v_pages,
+            q4_schedule=ARTIFACT_Q4_SCHEDULE,
+        )
+
+    args = [
+        _struct((chunk,), "i32"),
+        _struct((1,), "i32"),
+        _struct((cfg.max_pages_per_seq,), "i32"),
+        *[_struct(s, t) for _, s, t in wspecs],
+        _struct(cshape, "f32"),
+        _struct(cshape, "f32"),
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_decode(cfg: ModelConfig, batch: int) -> str:
+    wspecs = M.weight_specs(cfg)
+    cshape = M.cache_specs(cfg)[0][1]
+
+    def fn(ids, positions, seq_lens, block_tables, *flat):
+        w = {n: a for (n, _, _), a in zip(wspecs, flat[: len(wspecs)])}
+        k_pages, v_pages = flat[len(wspecs):]
+        return M.decode(
+            cfg, ids, positions, seq_lens, block_tables, w, k_pages, v_pages,
+            attention_schedule=ARTIFACT_SCHEDULE,
+            q4_schedule=ARTIFACT_Q4_SCHEDULE,
+            # Per-batch layer-loop specialization (EXPERIMENTS.md §Perf):
+            # unrolled layers avoid XLA:CPU scan-carry copies at bs 1-2.
+            layer_mode="unroll" if batch <= 2 else "scan",
+        )
+
+    args = [
+        _struct((batch,), "i32"),
+        _struct((batch,), "i32"),
+        _struct((batch,), "i32"),
+        _struct((batch, cfg.max_pages_per_seq), "i32"),
+        *[_struct(s, t) for _, s, t in wspecs],
+        _struct(cshape, "f32"),
+        _struct(cshape, "f32"),
+    ]
+    # Donate the KV pools on the unrolled (small-batch) artifacts:
+    # input_output_alias survives the HLO text round-trip, so PJRT updates
+    # the pools in place instead of materializing fresh copies — measured
+    # -15%/-40% per step at b=1 (EXPERIMENTS.md §Perf). Under lax.scan the
+    # aliasing measurably *hurts* (forces copies at loop boundaries on
+    # XLA:CPU 0.5.1), so scan-mode artifacts stay undonated. The Rust
+    # runtime chains output buffers and never touches donated inputs.
+    if batch <= 2:
+        donate = (len(args) - 2, len(args) - 1)
+        return to_hlo_text(jax.jit(fn, donate_argnums=donate).lower(*args))
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def build_model(cfg: ModelConfig, out_dir: str, seed: int, verbose: bool = True) -> Dict:
+    mdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(mdir, exist_ok=True)
+
+    t0 = time.time()
+    weight_entries = build_weights(cfg, out_dir, seed)
+    if verbose:
+        print(f"[{cfg.name}] weights ({time.time() - t0:.1f}s)")
+
+    with open(os.path.join(mdir, "config.json"), "w") as f:
+        json.dump(cfg.to_dict(), f, indent=2)
+
+    prefill_entries = {}
+    for chunk in cfg.prefill_chunks:
+        t0 = time.time()
+        rel = f"{cfg.name}/prefill_c{chunk}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(lower_prefill(cfg, chunk))
+        prefill_entries[str(chunk)] = {
+            "path": rel,
+            "inputs": _spec_dicts(
+                [
+                    ("ids", (chunk,), "i32"),
+                    ("seq_len", (1,), "i32"),
+                    ("block_table", (cfg.max_pages_per_seq,), "i32"),
+                ]
+            ),
+        }
+        if verbose:
+            print(f"[{cfg.name}] prefill c{chunk} ({time.time() - t0:.1f}s)")
+
+    decode_entries = {}
+    for batch in cfg.decode_batches:
+        t0 = time.time()
+        rel = f"{cfg.name}/decode_b{batch}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(lower_decode(cfg, batch))
+        decode_entries[str(batch)] = {
+            "path": rel,
+            "inputs": _spec_dicts(
+                [
+                    ("ids", (batch,), "i32"),
+                    ("positions", (batch,), "i32"),
+                    ("seq_lens", (batch,), "i32"),
+                    ("block_tables", (batch, cfg.max_pages_per_seq), "i32"),
+                ]
+            ),
+        }
+        if verbose:
+            print(f"[{cfg.name}] decode b{batch} ({time.time() - t0:.1f}s)")
+
+    return {
+        "config": cfg.to_dict(),
+        "weights_bin": f"{cfg.name}/weights_q4.bin",
+        "weights": weight_entries,
+        "cache": _spec_dicts(M.cache_specs(cfg)),
+        "prefill": prefill_entries,
+        "decode": decode_entries,
+        # Outputs of every executable, in tuple order.
+        "outputs": ["logits", "k_pages", "v_pages"],
+    }
+
+
+def build_kernel_benches(out_dir: str) -> Dict:
+    """Micro-bench artifacts for the kernel ablation (DESIGN.md A2):
+    the fused dequant-GEMM Pallas kernel vs the unfused dequantize-then-
+    matmul graph, at the GEMM shapes of both Table-1 models; plus the two
+    paged-attention schedules."""
+    import jax.numpy as jnp
+    from .kernels import paged_attention_decode, q4_matmul
+    from .kernels import ref as kref
+
+    kdir = os.path.join(out_dir, "kernel_bench")
+    os.makedirs(kdir, exist_ok=True)
+    entries = {}
+
+    # GEMM shapes: (M=batch rows, K, N) drawn from llama-web / phi-web.
+    shapes = {
+        "llama_qkv": (8, 768, 768),
+        "llama_ffn": (8, 768, 2048),
+        "llama_head": (1, 768, 4096),
+        "phi_ffn": (8, 512, 2048),
+    }
+    for name, (m, k, n) in shapes.items():
+        for variant, fn in (
+            ("fused", lambda x, wp, ws: (q4_matmul(x, wp, ws, schedule="single"),)),
+            ("fused_tiled", lambda x, wp, ws: (q4_matmul(x, wp, ws, schedule="tiled"),)),
+            ("unfused", lambda x, wp, ws: (kref.q4_matmul(x, wp, ws),)),
+        ):
+            args = [
+                jax.ShapeDtypeStruct((m, k), jnp.float32),
+                jax.ShapeDtypeStruct((k // 8, n), jnp.uint32),
+                jax.ShapeDtypeStruct((k // GROUP_SIZE, n), jnp.float32),
+            ]
+            rel = f"kernel_bench/q4_{name}_{variant}.hlo.txt"
+            with open(os.path.join(out_dir, rel), "w") as f:
+                f.write(to_hlo_text(jax.jit(fn).lower(*args)))
+            entries[f"q4_{name}_{variant}"] = {
+                "path": rel,
+                "inputs": _spec_dicts(
+                    [
+                        ("x", (m, k), "f32"),
+                        ("w_packed", (k // 8, n), "u32"),
+                        ("w_scales", (k // GROUP_SIZE, n), "f32"),
+                    ]
+                ),
+            }
+
+    # Paged attention schedules at llama-web geometry.
+    b, h, kvh, dh, p_total, page, mp = 8, 12, 4, 64, 192, 16, 16
+    for sched in ("paged_loop", "gather"):
+        def attn(q, kp, vp, bt, sl, _s=sched):
+            return (paged_attention_decode(q, kp, vp, bt, sl, schedule=_s),)
+
+        args = [
+            jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+            jax.ShapeDtypeStruct((p_total, page, kvh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((p_total, page, kvh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, mp), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ]
+        rel = f"kernel_bench/paged_attention_{sched}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(to_hlo_text(jax.jit(attn).lower(*args)))
+        entries[f"paged_attention_{sched}"] = {
+            "path": rel,
+            "inputs": _spec_dicts(
+                [
+                    ("q", (b, h, dh), "f32"),
+                    ("k_pages", (p_total, page, kvh, dh), "f32"),
+                    ("v_pages", (p_total, page, kvh, dh), "f32"),
+                    ("block_tables", (b, mp), "i32"),
+                    ("seq_lens", (b,), "i32"),
+                ]
+            ),
+        }
+    return entries
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` skip cleanly."""
+    h = hashlib.sha256()
+    base = os.path.dirname(__file__)
+    for root, _, files in sorted(os.walk(base)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="all", help="comma-separated names or 'all'")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    fp = source_fingerprint()
+
+    if not args.force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("fingerprint") == fp:
+            print(f"artifacts up to date (fingerprint {fp}); use --force to rebuild")
+            return
+
+    names = list(ALL_CONFIGS) if args.models == "all" else args.models.split(",")
+
+    t0 = time.time()
+    tok = build_tokenizer()
+    with open(os.path.join(out_dir, "tokenizer.json"), "w") as f:
+        json.dump(tok, f)
+    # Cross-language fixtures: the Rust encoder must reproduce these ids
+    # exactly (rust/src/tokenizer/tests.rs::fixtures_match_python).
+    from .tokenizer_gen import encode as tok_encode
+    fixture_texts = [
+        "Hello, world!",
+        "The engine streams tokens back to the application.",
+        '{"key": [1, 2.5, true], "path": "/v1/chat"}',
+        "  leading and   multiple   spaces  ",
+        "tabs\tand\nnewlines\r\n",
+        "mixed CASE words AND numbers 12345 67x89",
+        "na\u00efve caf\u00e9 \u2014 d\u00e9j\u00e0 vu \u2014 \u65e5\u672c\u8a9e\u30c6\u30ad\u30b9\u30c8 \u2014 \U0001f600\U0001f389",
+        "a" * 100,
+        "punctuation!!! ???, ;;; :: () [] {} <> || && ##",
+        "vertical\x0btab and \x0c formfeed",
+    ]
+    fixtures = [{"text": t, "ids": tok_encode(tok, t)} for t in fixture_texts]
+    with open(os.path.join(out_dir, "tokenizer_fixtures.json"), "w") as f:
+        json.dump(fixtures, f)
+    print(f"tokenizer: {len(tok['merges'])} merges ({time.time() - t0:.1f}s)")
+
+    models = {}
+    for name in names:
+        models[name] = build_model(ALL_CONFIGS[name], out_dir, args.seed)
+
+    t0 = time.time()
+    kernel_bench = build_kernel_benches(out_dir)
+    print(f"kernel bench artifacts ({time.time() - t0:.1f}s)")
+
+    manifest = {
+        "version": 1,
+        "fingerprint": fp,
+        "group_size": GROUP_SIZE,
+        "pack": PACK,
+        "seed": args.seed,
+        "tokenizer": "tokenizer.json",
+        "attention_schedule": ARTIFACT_SCHEDULE,
+        "models": models,
+        "kernel_bench": kernel_bench,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Model zoo for the WebLLM reproduction.
+
+Table 1 of the paper evaluates Llama-3.1-8B and Phi-3.5-mini (3.8B), both
+4-bit quantized. 8B-class models are not feasible on this CPU-PJRT
+testbed, so we ship architecture-preserving scaled stand-ins (DESIGN.md §5):
+
+  * ``llama-web-80m`` — Llama-family shape: GQA (12 q heads / 4 kv heads),
+    SwiGLU FFN at ~2.7x, deeper stack. Stand-in for Llama-3.1-8B.
+  * ``phi-web-38m``   — Phi-family shape: MHA (kv heads == q heads), 4x
+    FFN, shallower/wider-per-param stack. Stand-in for Phi-3.5-mini.
+  * ``tiny-2m``       — test-only config so pytest / cargo test stay fast.
+
+The *size contrast* (80M vs 38M ≈ 2.1x, paper: 8B vs 3.8B ≈ 2.1x) and the
+architectural contrasts are preserved; absolute tok/s is not a target.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    ffn_dim: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # Paged KV cache geometry. Pool sized for max_decode_batch sequences
+    # at max_seq_len plus slack; smaller pools also mean less buffer
+    # traffic per step on the CPU substrate (EXPERIMENTS.md §Perf).
+    page_size: int = 16
+    num_pages: int = 136          # 8 seqs x 16 pages + garbage + slack
+    max_seq_len: int = 256
+    # Static-shape menu compiled ahead of time (TVM/WebGPU-style discipline).
+    prefill_chunks: List[int] = field(default_factory=lambda: [16, 32, 64, 128])
+    decode_batches: List[int] = field(default_factory=lambda: [1, 2, 4, 8])
+
+    @property
+    def max_pages_per_seq(self) -> int:
+        return self.max_seq_len // self.page_size
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.ffn_dim, self.vocab_size
+        per_layer = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d + 3 * d * f
+        per_layer += 2 * d  # norms
+        return v * d + self.n_layers * per_layer + d + d * v
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["max_pages_per_seq"] = self.max_pages_per_seq
+        d["param_count"] = self.param_count()
+        return d
+
+
+LLAMA_WEB = ModelConfig(
+    name="llama-web-80m",
+    vocab_size=4096,
+    d_model=768,
+    n_layers=12,
+    n_heads=12,
+    n_kv_heads=4,
+    head_dim=64,
+    ffn_dim=2048,
+    rope_theta=500000.0,  # Llama-3 family value
+)
+
+PHI_WEB = ModelConfig(
+    name="phi-web-38m",
+    vocab_size=4096,
+    d_model=512,
+    n_layers=8,
+    n_heads=8,
+    n_kv_heads=8,   # MHA, like Phi-3.5-mini's 32/32 layout at scale
+    head_dim=64,
+    ffn_dim=2048,   # 4x ratio
+    rope_theta=10000.0,
+)
+
+TINY = ModelConfig(
+    name="tiny-2m",
+    vocab_size=4096,
+    d_model=128,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    ffn_dim=256,
+    page_size=8,
+    num_pages=64,
+    max_seq_len=128,
+    prefill_chunks=[16, 32, 64, 128],
+    decode_batches=[1, 2, 4],
+)
+
+ALL_CONFIGS = {c.name: c for c in (LLAMA_WEB, PHI_WEB, TINY)}
+
+
+def get_config(name: str) -> ModelConfig:
+    return ALL_CONFIGS[name]

@@ -1,0 +1,73 @@
+"""Causal prefill attention Pallas kernel (flash-style, one chunk).
+
+WebLLM compiles a FlashAttention-like WebGPU kernel per model; the
+threadblock-per-(head, query-tile) decomposition maps here to a Pallas
+grid over heads with the whole chunk's scores kept in VMEM (chunks are
+<= 128 tokens, so the [T, T] score tile fits comfortably; see DESIGN.md §7).
+
+GQA is expressed in the BlockSpec index maps: query head h reads kv head
+h // (H / KVH), so no repeated K/V is ever materialized.
+
+Padding: positions >= seq_len are masked out of the keys; their output
+rows are well-defined (softmax over the valid prefix) but the model
+discards them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _prefill_attention_kernel(seq_ref, q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[...][:, 0, :]  # [T, Dh]
+    k = k_ref[...][:, 0, :]  # [T, Dh]
+    v = v_ref[...][:, 0, :]
+    seq_len = seq_ref[0]
+
+    t = q.shape[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [T, T]
+    pos = jax.lax.iota(jnp.int32, t)
+    causal = pos[None, :] <= pos[:, None]
+    valid = pos[None, :] < seq_len
+    s = jnp.where(causal & valid, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)[:, None, :]
+
+
+def prefill_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    seq_len: jnp.ndarray,
+) -> jnp.ndarray:
+    """Causal attention over one padded chunk.
+
+    q: f32[T, H, Dh]; k, v: f32[T, KVH, Dh]; seq_len: i32[] or i32[1].
+    returns f32[T, H, Dh].
+    """
+    t, h, dh = q.shape
+    kvh = k.shape[1]
+    assert h % kvh == 0
+    group = h // kvh
+    scale = 1.0 / float(dh) ** 0.5
+    seq_len = jnp.asarray(seq_len, jnp.int32).reshape(1)
+
+    return pl.pallas_call(
+        functools.partial(_prefill_attention_kernel, scale=scale),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda hh: (0,)),
+            pl.BlockSpec((t, 1, dh), lambda hh: (0, hh, 0)),
+            pl.BlockSpec((t, 1, dh), lambda hh: (0, hh // group, 0)),
+            pl.BlockSpec((t, 1, dh), lambda hh: (0, hh // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, 1, dh), lambda hh: (0, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h, dh), jnp.float32),
+        interpret=True,
+    )(seq_len, q, k, v)

@@ -1,0 +1,100 @@
+"""Fused 4-bit dequant + GEMM Pallas kernel.
+
+This is the WebLLM-critical kernel: MLC-LLM's WebGPU codegen fuses the
+group-wise int4 dequantization into the GEMM so the fp weights are never
+materialized in (browser) memory — each workgroup unpacks the nibbles for
+its tile right before the multiply. We express the same schedule for the
+TPU model: packed u32 words stream HBM->VMEM tile-by-tile via BlockSpec,
+the nibble unpack happens in registers, and the product targets the MXU
+(jnp.dot with f32 accumulation).
+
+Layout (shared with ref.py and the Rust runtime):
+  x:        f32[M, K]
+  w_packed: u32[K // 8, N]   — 8 nibbles per word along K
+  w_scales: f32[K // G, N]   — G = GROUP_SIZE = 64
+  out:      f32[M, N]
+
+Grid: one program per N-tile (M is small on the decode path: the batch).
+K is kept whole per tile: for the model sizes this repo ships, a full-K
+tile is (K/8)*BN*4 + (K/G)*BN*4 + M*K*4 bytes of VMEM — see DESIGN.md §7
+for the budget table. interpret=True is mandatory on CPU PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import GROUP_SIZE, PACK
+
+
+def _q4_matmul_kernel(x_ref, wp_ref, ws_ref, o_ref):
+    x = x_ref[...]  # [M, K]
+    wp = wp_ref[...]  # [K//8, BN] u32
+    ws = ws_ref[...]  # [K//G, BN] f32
+
+    k8, bn = wp.shape
+    shifts = jnp.arange(PACK, dtype=jnp.uint32) * 4
+    # Unpack in-register: [K//8, 8, BN] -> [K, BN]; nibble i of word k8 is
+    # row k8*8+i. (q - 8) centers the 4-bit code.
+    nib = (wp[:, None, :] >> shifts[None, :, None]) & jnp.uint32(0xF)
+    q = nib.reshape(k8 * PACK, bn).astype(jnp.float32) - 8.0
+    scales = jnp.repeat(ws, GROUP_SIZE, axis=0)  # [K, BN]
+    w = q * scales
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def q4_matmul(
+    x: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    w_scales: jnp.ndarray,
+    schedule: str = "tiled",
+) -> jnp.ndarray:
+    """x @ dequant(w_packed, w_scales) via the fused Pallas kernel.
+
+    schedule:
+      * "tiled"  — N-tiled grid, the TPU/WebGPU-shaped schedule (each
+        program's tile sized for VMEM/workgroup memory). Default, used by
+        the correctness tests.
+      * "single" — one program over the whole matrix: the XLA:CPU
+        specialization (interpret-mode grids serialize, so per-tile loop
+        overhead dominates at decode's M=1; measured up to 13x on the
+        lm_head GEMM — EXPERIMENTS.md §Perf). aot.py lowers artifacts
+        with this, the same per-backend kernel specialization MLC/TVM
+        performs for WebGPU vs Metal.
+    """
+    m, k = x.shape
+    k8, n = w_packed.shape
+    assert k8 * PACK == k, f"packed K mismatch: {k8}*{PACK} != {k}"
+    assert w_scales.shape == (k // GROUP_SIZE, n)
+
+    if schedule == "single":
+        return pl.pallas_call(
+            _q4_matmul_kernel,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(x, w_packed, w_scales)
+
+    bn = _pick_bn(n)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _q4_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((k8, bn), lambda j: (0, j)),
+            pl.BlockSpec((k // GROUP_SIZE, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w_packed, w_scales)
+
+
+def _pick_bn(n: int) -> int:
+    """Largest MXU-friendly N-tile that divides N (<= 512)."""
+    for bn in (512, 256, 128, 64, 32, 16, 8):
+        if n % bn == 0:
+            return bn
+    return n

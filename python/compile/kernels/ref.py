@@ -1,0 +1,126 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: deliberately simple, no tiling, no
+fused dequantization, no paging tricks. pytest (python/tests/) asserts the
+Pallas kernels match these under `interpret=True`, and the L2 model has a
+full-attention reference (`ref_forward` in model.py) built from the same
+primitives.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Group size for 4-bit group-wise quantization (along the reduction dim K).
+GROUP_SIZE = 64
+# Nibbles packed per u32 word (along K).
+PACK = 8
+
+
+def dequant_q4(w_packed: jnp.ndarray, w_scales: jnp.ndarray) -> jnp.ndarray:
+    """Unpack group-quantized 4-bit weights to f32.
+
+    w_packed: u32[K // 8, N]   — 8 nibbles per word along K.
+    w_scales: f32[K // G, N]   — one scale per (group, output).
+    returns:  f32[K, N] with w = (q - 8) * scale.
+    """
+    k8, n = w_packed.shape
+    shifts = jnp.arange(PACK, dtype=jnp.uint32) * 4
+    # [K//8, 8, N] — nibble `i` of word `k8` is element k8*8+i along K.
+    nibbles = (w_packed[:, None, :] >> shifts[None, :, None]) & jnp.uint32(0xF)
+    q = nibbles.reshape(k8 * PACK, n).astype(jnp.float32) - 8.0
+    scales = jnp.repeat(w_scales, GROUP_SIZE, axis=0)
+    return q * scales
+
+
+def q4_matmul(x: jnp.ndarray, w_packed: jnp.ndarray, w_scales: jnp.ndarray) -> jnp.ndarray:
+    """Reference for the fused dequant-GEMM kernel: x @ dequant(w).
+
+    x: f32[M, K]; returns f32[M, N].
+    """
+    return x @ dequant_q4(w_packed, w_scales)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Reference RMSNorm over the last axis. x: f32[T, D], w: f32[D]."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax_rsqrt(ms + eps) * w
+
+
+def jax_rsqrt(x: jnp.ndarray) -> jnp.ndarray:
+    return 1.0 / jnp.sqrt(x)
+
+
+def prefill_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    seq_len: int,
+) -> jnp.ndarray:
+    """Reference causal attention over one (padded) prefill chunk.
+
+    q: f32[T, H, Dh]; k, v: f32[T, KVH, Dh] (GQA: H % KVH == 0).
+    Positions >= seq_len are padding; their keys are masked out and their
+    outputs are unconstrained garbage (the model discards them).
+    returns f32[T, H, Dh].
+    """
+    t, h, dh = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    kq = jnp.repeat(k, group, axis=1)  # [T, H, Dh]
+    vq = jnp.repeat(v, group, axis=1)
+    # [H, T, T]
+    s = jnp.einsum("qhd,khd->hqk", q, kq) * scale
+    pos = jnp.arange(t)
+    causal = pos[None, :] <= pos[:, None]  # key j attends-to query i iff j <= i
+    valid = pos[None, :] < seq_len
+    mask = (causal & valid)[None, :, :]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", p, vq)
+
+
+def paged_attention_decode(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    block_tables: jnp.ndarray,
+    seq_lens: jnp.ndarray,
+) -> jnp.ndarray:
+    """Reference decode attention over a paged KV pool.
+
+    q:            f32[B, H, Dh]     — one query token per sequence.
+    k_pages:      f32[P, page, KVH, Dh] — global page pool.
+    v_pages:      f32[P, page, KVH, Dh]
+    block_tables: i32[B, max_pages] — page ids per sequence, in order.
+    seq_lens:     i32[B]            — tokens valid per sequence (incl. current).
+    returns       f32[B, H, Dh].
+
+    Gathers each sequence's pages into a contiguous [max_pages*page] KV run,
+    masks beyond seq_len, and does dense softmax attention. Sequences with
+    seq_len == 0 (padding slots) produce zeros.
+    """
+    b, h, dh = q.shape
+    p_total, page, kvh, _ = k_pages.shape
+    group = h // kvh
+    max_pages = block_tables.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    # [B, max_pages, page, KVH, Dh] -> [B, L, KVH, Dh], L = max_pages * page
+    k_seq = k_pages[block_tables].reshape(b, max_pages * page, kvh, dh)
+    v_seq = v_pages[block_tables].reshape(b, max_pages * page, kvh, dh)
+    k_seq = jnp.repeat(k_seq, group, axis=2)  # [B, L, H, Dh]
+    v_seq = jnp.repeat(v_seq, group, axis=2)
+
+    s = jnp.einsum("bhd,blhd->bhl", q, k_seq) * scale
+    pos = jnp.arange(max_pages * page)
+    valid = pos[None, :] < seq_lens[:, None]  # [B, L]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhl,blhd->bhd", p, v_seq) / jnp.maximum(denom, 1e-30)
+    # Zero out padding sequences entirely (denom there is degenerate).
+    return jnp.where((seq_lens > 0)[:, None, None], out, 0.0)

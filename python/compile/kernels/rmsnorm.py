@@ -1,0 +1,45 @@
+"""Fused RMSNorm Pallas kernel.
+
+WebLLM/MLC fuse normalization with the adjacent elementwise ops into one
+WebGPU dispatch; here the whole normalize-and-scale is one Pallas program
+per row-tile so the row statistics never leave VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...]  # [BT, D]
+    w = w_ref[...]  # [1, D]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm over the last axis. x: f32[T, D], w: f32[D] -> f32[T, D]."""
+    t, d = x.shape
+    bt = _pick_bt(t)
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(x, w.reshape(1, d))
+
+
+def _pick_bt(t: int) -> int:
+    for bt in (64, 32, 16, 8, 4, 2, 1):
+        if t % bt == 0:
+            return bt
+    return 1

@@ -1,0 +1,360 @@
+"""Layer-2 JAX model: Llama-architecture decoder over the Pallas kernels.
+
+This is the compute graph MLC-LLM would compile to WebGPU; here it lowers
+(once, at build time) to HLO text that the Rust runtime compiles with the
+PJRT CPU client. Two entry points, both with fully static shapes, mirroring
+the static-shape discipline TVM imposes on WebLLM's WebGPU artifacts:
+
+  * ``prefill``  — one sequence, one padded chunk of T tokens. Writes the
+    chunk's K/V into the sequence's pages and returns the last valid
+    token's logits.
+  * ``decode``   — B sequences, one token each (continuous-batching step).
+    Appends each token's K/V to its page and runs PagedAttention.
+
+The transformer layer stack runs under ``lax.scan`` with weights stacked on
+a leading layer axis — this keeps the lowered HLO (and the Rust-side
+argument marshalling) small: ~20 arrays instead of ~20 * n_layers.
+
+Weights are group-quantized 4-bit (see quantize.py); every matmul goes
+through the fused dequant-GEMM Pallas kernel. The KV cache is a paged pool
+(functional: passed in, returned updated) managed by the Rust kvcache
+module. Page 0 is reserved as the garbage page: padding slots write there.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import paged_attention_decode, prefill_attention, q4_matmul, rmsnorm
+from .kernels.ref import GROUP_SIZE, PACK
+from .quantize import quantize_q4
+
+Array = jnp.ndarray
+
+# ---------------------------------------------------------------------------
+# Parameter schema
+# ---------------------------------------------------------------------------
+
+# Weight arrays, in the canonical order shared with aot.py's manifest and
+# the Rust runtime (models/weights.rs). Stacked on a leading n_layers axis
+# where noted. (name, kind) with kind in {f32, u32}.
+
+
+def weight_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    d, f, v = cfg.d_model, cfg.ffn_dim, cfg.vocab_size
+    qd, kvd, l = cfg.q_dim, cfg.kv_dim, cfg.n_layers
+    g = GROUP_SIZE
+
+    def q4(name: str, k: int, n: int, stacked: bool = True):
+        lead = (l,) if stacked else ()
+        return [
+            (f"{name}_packed", lead + (k // PACK, n), "u32"),
+            (f"{name}_scales", lead + (k // g, n), "f32"),
+        ]
+
+    specs: List[Tuple[str, Tuple[int, ...], str]] = []
+    specs.append(("embed", (v, d), "f32"))
+    specs.append(("attn_norm", (l, d), "f32"))
+    specs += q4("wq", d, qd)
+    specs += q4("wk", d, kvd)
+    specs += q4("wv", d, kvd)
+    specs += q4("wo", qd, d)
+    specs.append(("mlp_norm", (l, d), "f32"))
+    specs += q4("wgate", d, f)
+    specs += q4("wup", d, f)
+    specs += q4("wdown", f, d)
+    specs.append(("final_norm", (d,), "f32"))
+    specs += q4("lm_head", d, v, stacked=False)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    shape = (cfg.n_layers, cfg.num_pages, cfg.page_size, cfg.n_kv_heads, cfg.head_dim)
+    return [("k_pages", shape, "f32"), ("v_pages", shape, "f32")]
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Seeded synthetic weights, quantized to q4 where the schema says so.
+
+    GPT-2-style init scales keep logits in a sane range so sampling and
+    the grammar-constrained path behave like a real (if untrained) model.
+    """
+    rng = np.random.default_rng(seed)
+    d, f, v = cfg.d_model, cfg.ffn_dim, cfg.vocab_size
+    qd, kvd, l = cfg.q_dim, cfg.kv_dim, cfg.n_layers
+    std = 0.02
+    resid_std = std / np.sqrt(2 * l)
+
+    def mat(k: int, n: int, s: float) -> np.ndarray:
+        return (rng.standard_normal((k, n)) * s).astype(np.float32)
+
+    out: Dict[str, np.ndarray] = {}
+    out["embed"] = mat(v, d, std)
+    out["attn_norm"] = np.ones((l, d), np.float32)
+    out["mlp_norm"] = np.ones((l, d), np.float32)
+    out["final_norm"] = np.ones((d,), np.float32)
+
+    def q4_stack(name: str, k: int, n: int, s: float) -> None:
+        packed = np.empty((l, k // PACK, n), np.uint32)
+        scales = np.empty((l, k // GROUP_SIZE, n), np.float32)
+        for i in range(l):
+            packed[i], scales[i] = quantize_q4(mat(k, n, s))
+        out[f"{name}_packed"] = packed
+        out[f"{name}_scales"] = scales
+
+    q4_stack("wq", d, qd, std)
+    q4_stack("wk", d, kvd, std)
+    q4_stack("wv", d, kvd, std)
+    q4_stack("wo", qd, d, resid_std)
+    q4_stack("wgate", d, f, std)
+    q4_stack("wup", d, f, std)
+    q4_stack("wdown", f, d, resid_std)
+    p, s = quantize_q4(mat(d, v, std))
+    out["lm_head_packed"], out["lm_head_scales"] = p, s
+
+    for name, shape, ty in weight_specs(cfg):
+        assert out[name].shape == shape, (name, out[name].shape, shape)
+        assert str(out[name].dtype) == {"f32": "float32", "u32": "uint32"}[ty]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def _rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding, half-rotation convention.
+
+    x: [T, H, Dh]; positions: i32[T] -> same shape out.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]  # [T, half]
+    cos = jnp.cos(ang)[:, None, :]  # [T, 1, half]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _layer(
+    cfg: ModelConfig,
+    x: Array,
+    lw: Dict[str, Array],
+    positions: Array,
+    attend,
+    q4_schedule: str = "tiled",
+) -> Array:
+    """One transformer layer body, shared by prefill and decode.
+
+    x: [T, D]; ``attend(q, k, v) -> [T, H, Dh]`` is phase-specific (and owns
+    the cache write). Returns the new residual stream.
+    """
+    t = x.shape[0]
+    mm = lambda a, name: q4_matmul(
+        a, lw[f"{name}_packed"], lw[f"{name}_scales"], schedule=q4_schedule
+    )
+    h = rmsnorm(x, lw["attn_norm"], eps=cfg.norm_eps)
+    q = mm(h, "wq").reshape(t, cfg.n_heads, cfg.head_dim)
+    k = mm(h, "wk").reshape(t, cfg.n_kv_heads, cfg.head_dim)
+    v = mm(h, "wv").reshape(t, cfg.n_kv_heads, cfg.head_dim)
+    q = _rope(q, positions, cfg.rope_theta)
+    k = _rope(k, positions, cfg.rope_theta)
+    att = attend(q, k, v).reshape(t, cfg.q_dim)
+    x = x + mm(att, "wo")
+
+    h = rmsnorm(x, lw["mlp_norm"], eps=cfg.norm_eps)
+    act = jax.nn.silu(mm(h, "wgate")) * mm(h, "wup")
+    x = x + mm(act, "wdown")
+    return x
+
+
+_LAYER_KEYS = [
+    "attn_norm",
+    "wq_packed", "wq_scales",
+    "wk_packed", "wk_scales",
+    "wv_packed", "wv_scales",
+    "wo_packed", "wo_scales",
+    "mlp_norm",
+    "wgate_packed", "wgate_scales",
+    "wup_packed", "wup_scales",
+    "wdown_packed", "wdown_scales",
+]
+
+
+def _stacked_layer_tree(weights: Dict[str, Array]) -> Dict[str, Array]:
+    return {k: weights[k] for k in _LAYER_KEYS}
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    cfg: ModelConfig,
+    ids: Array,          # i32[T]           padded token ids
+    seq_len: Array,      # i32[]            valid length (<= T)
+    block_table: Array,  # i32[max_pages]   pages allocated to this sequence
+    weights: Dict[str, Array],
+    k_pages: Array,      # f32[L, P, page, KVH, Dh]
+    v_pages: Array,
+    q4_schedule: str = "tiled",
+) -> Tuple[Array, Array, Array]:
+    """Run one prompt chunk; returns (last-token logits [V], new caches)."""
+    t = ids.shape[0]
+    pg = cfg.page_size
+    positions = jax.lax.iota(jnp.int32, t)
+    valid = positions < seq_len
+
+    x = weights["embed"][ids]  # [T, D]
+
+    # Where each chunk position's K/V lands: its sequence page, or the
+    # garbage page 0 when padding.
+    page_ids = jnp.where(valid, block_table[positions // pg], 0)  # i32[T]
+    offsets = positions % pg
+
+    def body(x, layer_in):
+        lw, kp, vp = layer_in  # kp/vp: [P, page, KVH, Dh]
+
+        def attend(q, k, v):
+            nonlocal kp, vp
+            kp = kp.at[page_ids, offsets].set(k)
+            vp = vp.at[page_ids, offsets].set(v)
+            return prefill_attention(q, k, v, seq_len)
+
+        x = _layer(cfg, x, lw, positions, attend, q4_schedule=q4_schedule)
+        return x, (kp, vp)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (_stacked_layer_tree(weights), k_pages, v_pages)
+    )
+
+    x = rmsnorm(x, weights["final_norm"], eps=cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, seq_len - 1, 1, axis=0)  # [1, D]
+    logits = q4_matmul(
+        last, weights["lm_head_packed"], weights["lm_head_scales"], schedule=q4_schedule
+    )[0]
+    return logits, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode(
+    cfg: ModelConfig,
+    ids: Array,           # i32[B]             current token per sequence
+    positions: Array,     # i32[B]             its position (seq_len - 1)
+    seq_lens: Array,      # i32[B]             0 => padding slot
+    block_tables: Array,  # i32[B, max_pages]
+    weights: Dict[str, Array],
+    k_pages: Array,       # f32[L, P, page, KVH, Dh]
+    v_pages: Array,
+    attention_schedule: str = "paged_loop",
+    q4_schedule: str = "tiled",
+    layer_mode: str = "scan",
+) -> Tuple[Array, Array, Array]:
+    """One continuous-batching decode step; returns (logits [B, V], caches).
+
+    layer_mode:
+      * "scan"   — layers under ``lax.scan`` (small HLO; best for larger
+        batches on XLA:CPU).
+      * "unroll" — layers inlined (XLA:CPU elides the scan's per-iteration
+        cache-carry copies; measured 2.6x at batch=1 — EXPERIMENTS.md
+        §Perf). aot.py picks per compiled batch size.
+    """
+    b = ids.shape[0]
+    pg = cfg.page_size
+    valid = seq_lens > 0
+
+    x = weights["embed"][ids]  # [B, D]
+
+    batch_idx = jax.lax.iota(jnp.int32, b)
+    page_ids = jnp.where(valid, block_tables[batch_idx, positions // pg], 0)
+    offsets = positions % pg
+
+    if layer_mode == "unroll":
+        kp_all, vp_all = k_pages, v_pages
+        for l in range(cfg.n_layers):
+            lw = {k: weights[k][l] for k in _LAYER_KEYS}
+
+            def attend(q, k, v, l=l):
+                nonlocal kp_all, vp_all
+                kp_all = kp_all.at[l, page_ids, offsets].set(k)
+                vp_all = vp_all.at[l, page_ids, offsets].set(v)
+                return paged_attention_decode(
+                    q, kp_all[l], vp_all[l], block_tables, seq_lens,
+                    schedule=attention_schedule,
+                )
+
+            x = _layer(cfg, x, lw, positions, attend, q4_schedule=q4_schedule)
+        k_new, v_new = kp_all, vp_all
+    else:
+        def body(x, layer_in):
+            lw, kp, vp = layer_in
+
+            def attend(q, k, v):
+                nonlocal kp, vp
+                kp = kp.at[page_ids, offsets].set(k)
+                vp = vp.at[page_ids, offsets].set(v)
+                return paged_attention_decode(
+                    q, kp, vp, block_tables, seq_lens, schedule=attention_schedule
+                )
+
+            x = _layer(cfg, x, lw, positions, attend, q4_schedule=q4_schedule)
+            return x, (kp, vp)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (_stacked_layer_tree(weights), k_pages, v_pages)
+        )
+
+    x = rmsnorm(x, weights["final_norm"], eps=cfg.norm_eps)
+    logits = q4_matmul(
+        x, weights["lm_head_packed"], weights["lm_head_scales"], schedule=q4_schedule
+    )
+    return logits, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Full-attention reference (no paging, no kernels) for numeric validation
+# ---------------------------------------------------------------------------
+
+
+def ref_forward(cfg: ModelConfig, ids: np.ndarray, weights: Dict[str, np.ndarray]) -> np.ndarray:
+    """Dense reference forward over a whole sequence; returns logits [T, V].
+
+    Uses the jnp oracles only (ref.q4_matmul etc.) — no Pallas, no paging —
+    so prefill/decode consistency tests have an independent ground truth.
+    """
+    from .kernels import ref as R
+
+    t = len(ids)
+    positions = jnp.arange(t, dtype=jnp.int32)
+    x = jnp.asarray(weights["embed"])[jnp.asarray(ids)]
+    for l in range(cfg.n_layers):
+        lw = {k: jnp.asarray(weights[k][l]) for k in _LAYER_KEYS}
+        h = R.rmsnorm(x, lw["attn_norm"], eps=cfg.norm_eps)
+        q = R.q4_matmul(h, lw["wq_packed"], lw["wq_scales"]).reshape(t, cfg.n_heads, cfg.head_dim)
+        k = R.q4_matmul(h, lw["wk_packed"], lw["wk_scales"]).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+        v = R.q4_matmul(h, lw["wv_packed"], lw["wv_scales"]).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+        att = R.prefill_attention(q, k, v, t).reshape(t, cfg.q_dim)
+        x = x + R.q4_matmul(att, lw["wo_packed"], lw["wo_scales"])
+        h = R.rmsnorm(x, lw["mlp_norm"], eps=cfg.norm_eps)
+        act = jax.nn.silu(R.q4_matmul(h, lw["wgate_packed"], lw["wgate_scales"])) * R.q4_matmul(
+            h, lw["wup_packed"], lw["wup_scales"]
+        )
+        x = x + R.q4_matmul(act, lw["wdown_packed"], lw["wdown_scales"])
+    x = R.rmsnorm(x, jnp.asarray(weights["final_norm"]), eps=cfg.norm_eps)
+    return np.asarray(
+        R.q4_matmul(x, jnp.asarray(weights["lm_head_packed"]), jnp.asarray(weights["lm_head_scales"]))
+    )

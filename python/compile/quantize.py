@@ -1,0 +1,43 @@
+"""Group-wise 4-bit weight quantization ("q4" — MLC's q4f32 analog).
+
+Produces the "converted weights" artifact of the paper's pipeline: each
+[K, N] weight matrix becomes a packed u32[K//8, N] nibble tensor plus a
+f32[K//G, N] scale tensor (G = 64, along the reduction dim). Dequant is
+w = (q - 8) * scale, matching kernels/ref.py and the fused Pallas GEMM.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .kernels.ref import GROUP_SIZE, PACK
+
+
+def quantize_q4(w: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Quantize f32[K, N] -> (u32[K//8, N] packed, f32[K//G, N] scales)."""
+    k, n = w.shape
+    assert k % GROUP_SIZE == 0 and k % PACK == 0, (k, n)
+    g = k // GROUP_SIZE
+    grouped = w.reshape(g, GROUP_SIZE, n)
+    absmax = np.abs(grouped).max(axis=1)  # [G, N]
+    scales = (absmax / 7.0).astype(np.float32)
+    scales = np.maximum(scales, 1e-8)
+    q = np.rint(grouped / scales[:, None, :]).astype(np.int32) + 8
+    q = np.clip(q, 0, 15).astype(np.uint32).reshape(k, n)
+
+    words = q.reshape(k // PACK, PACK, n)
+    packed = np.zeros((k // PACK, n), dtype=np.uint32)
+    for i in range(PACK):
+        packed |= words[:, i, :] << np.uint32(4 * i)
+    return packed, scales
+
+
+def dequantize_q4(packed: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    """Inverse of quantize_q4 (up to rounding): f32[K, N]."""
+    k8, n = packed.shape
+    k = k8 * PACK
+    q = np.zeros((k8, PACK, n), dtype=np.uint32)
+    for i in range(PACK):
+        q[:, i, :] = (packed >> np.uint32(4 * i)) & np.uint32(0xF)
+    q = q.reshape(k, n).astype(np.float32) - 8.0
+    return q * np.repeat(scales, GROUP_SIZE, axis=0)

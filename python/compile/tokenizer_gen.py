@@ -1,0 +1,209 @@
+"""Byte-level BPE tokenizer trainer (build-time).
+
+WebLLM ships HuggingFace tokenizers compiled to WASM; the Rust engine here
+loads a vocabulary trained by this module instead (DESIGN.md §5 sub. 5 —
+same merge-rank BPE algorithm, synthetic corpus). Output is
+``artifacts/tokenizer.json``:
+
+  {
+    "vocab_size": 4096,
+    "specials": {"<pad>": 0, ...},
+    "byte_offset": 8,              # byte b  <->  id 8 + b
+    "merges": [[a, b], ...]        # merge i creates id 264 + i
+  }
+
+Token id space: [0, 8) specials, [8, 264) raw bytes, [264, 264+#merges)
+merged tokens, remainder up to vocab_size unused (decoded as empty).
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import re
+from typing import Dict, List, Tuple
+
+SPECIALS = {
+    "<pad>": 0,
+    "<bos>": 1,
+    "<eos>": 2,
+    "<unk>": 3,
+    "<|system|>": 4,
+    "<|user|>": 5,
+    "<|assistant|>": 6,
+    "<|end|>": 7,
+}
+BYTE_OFFSET = 8
+FIRST_MERGE_ID = BYTE_OFFSET + 256
+
+# GPT-2-style pretokenizer: words keep their leading space. The Rust
+# tokenizer (rust/src/tokenizer/) mirrors this split exactly; re.ASCII so
+# \s means ASCII whitespace in both implementations.
+_PRETOKEN_RE = re.compile(r" ?[A-Za-z]+| ?[0-9]+| ?[^\sA-Za-z0-9]+|\s+", re.ASCII)
+
+
+# An original corpus: enough distributional structure for BPE to learn
+# word-level merges. Repetition below weights common constructions.
+_BASE_CORPUS = """
+The web browser is a natural platform for running language models on the
+device. A user opens a page and the model loads, compiles, and generates
+text locally, with no server in the loop. The engine streams tokens back
+to the application as they are produced, and the application updates the
+interface. Local inference preserves privacy because the prompt never
+leaves the machine. It also reduces latency for short requests and makes
+personalization with local data straightforward.
+
+Large language models answer questions, write and explain code, draft
+messages, summarize documents, and call tools. Smaller open models in the
+one to eight billion parameter range now run on consumer hardware when
+quantized to four bits. Group quantization stores a scale for every block
+of weights, and the kernel dequantizes each tile right before the matrix
+multiply, so the full precision weights are never materialized in memory.
+
+The inference engine keeps a paged key value cache. Each sequence owns a
+list of pages, and the attention kernel walks the page table to gather
+keys and values for every head. A scheduler batches prefill and decode
+requests so the device stays busy while responses stream out token by
+token. Structured generation constrains sampling with a grammar so the
+output always parses as JSON when the application requires it.
+
+A request arrives as a JSON object with a list of messages. The engine
+renders the chat template, tokenizes the prompt, allocates pages, runs
+prefill, and then decodes one token per step until a stop condition is
+met. The response contains choices, usage counts, and a finish reason.
+Temperature, top p, presence and frequency penalties, logit bias, and
+seeds control sampling. Streaming responses deliver deltas in chunks.
+
+def add(a, b): return a + b
+for i in range(10): print(i)
+let x = {"key": "value", "count": 42, "items": [1, 2, 3], "ok": true};
+SELECT name, count FROM models WHERE params < 8000000000 ORDER BY name;
+{"model": "llama", "temperature": 0.7, "max_tokens": 128, "stream": true}
+fn main() { println!("hello, world"); }
+<html><body><p>hello</p></body></html>
+http://example.com/models?size=small&format=q4
+
+zero one two three four five six seven eight nine ten eleven twelve
+alpha beta gamma delta epsilon zeta eta theta iota kappa lambda mu nu
+red orange yellow green blue indigo violet black white gray brown pink
+monday tuesday wednesday thursday friday saturday sunday january june
+run ran running walk walked walking think thought thinking say said
+good better best bad worse worst big bigger biggest small smaller
+I you he she it we they me him her us them my your his its our their
+a an the and or but if then else when while for to of in on at by with
+is are was were be been being have has had do does did will would can
+could should may might must not no yes this that these those there here
+what which who whom whose why how all any both each few more most other
+some such only own same so than too very just now also after before
+"""
+
+
+def default_corpus() -> str:
+    # Weight the prose 3x so natural-language merges dominate, then add
+    # the structured tails once.
+    return _BASE_CORPUS * 3
+
+
+def pretokenize(text: str) -> List[str]:
+    return _PRETOKEN_RE.findall(text)
+
+
+def train_bpe(corpus: str, vocab_size: int) -> List[Tuple[int, int]]:
+    """Train merge list on the corpus. Returns merges in rank order."""
+    word_counts = collections.Counter(pretokenize(corpus))
+    # Each unique word as a list of symbol ids (bytes shifted by offset).
+    words: List[List[int]] = []
+    counts: List[int] = []
+    for w, c in word_counts.items():
+        words.append([BYTE_OFFSET + b for b in w.encode("utf-8")])
+        counts.append(c)
+
+    merges: List[Tuple[int, int]] = []
+    next_id = FIRST_MERGE_ID
+    max_merges = vocab_size - FIRST_MERGE_ID
+
+    while len(merges) < max_merges:
+        pair_counts: collections.Counter = collections.Counter()
+        for seq, c in zip(words, counts):
+            for a, b in zip(seq, seq[1:]):
+                pair_counts[(a, b)] += c
+        if not pair_counts:
+            break
+        (a, b), freq = pair_counts.most_common(1)[0]
+        if freq < 2:
+            break
+        merges.append((a, b))
+        for i, seq in enumerate(words):
+            if len(seq) < 2:
+                continue
+            out = []
+            j = 0
+            while j < len(seq):
+                if j + 1 < len(seq) and seq[j] == a and seq[j + 1] == b:
+                    out.append(next_id)
+                    j += 2
+                else:
+                    out.append(seq[j])
+                    j += 1
+            words[i] = out
+        next_id += 1
+    return merges
+
+
+def token_bytes(merges: List[Tuple[int, int]]) -> List[bytes]:
+    """Materialize the byte string of every id (empty for specials/unused)."""
+    table: List[bytes] = [b""] * BYTE_OFFSET
+    table += [bytes([i]) for i in range(256)]
+    for a, b in merges:
+        table.append(table[a] + table[b])
+    return table
+
+
+def build_tokenizer(vocab_size: int = 4096, corpus: str | None = None) -> Dict:
+    merges = train_bpe(corpus or default_corpus(), vocab_size)
+    return {
+        "vocab_size": vocab_size,
+        "specials": SPECIALS,
+        "byte_offset": BYTE_OFFSET,
+        "merges": [list(m) for m in merges],
+    }
+
+
+def encode(tok: Dict, text: str) -> List[int]:
+    """Reference encoder (mirrors the Rust implementation) for tests."""
+    ranks = {tuple(m): FIRST_MERGE_ID + i for i, m in enumerate(tok["merges"])}
+    ids: List[int] = []
+    for word in pretokenize(text):
+        seq = [BYTE_OFFSET + b for b in word.encode("utf-8")]
+        while len(seq) >= 2:
+            best = None
+            for j, pair in enumerate(zip(seq, seq[1:])):
+                r = ranks.get(pair)
+                if r is not None and (best is None or r < best[0]):
+                    best = (r, j)
+            if best is None:
+                break
+            r, j = best
+            seq = seq[:j] + [r] + seq[j + 2:]
+        ids.extend(seq)
+    return ids
+
+
+def decode(tok: Dict, ids: List[int]) -> str:
+    table = token_bytes([tuple(m) for m in tok["merges"]])
+    out = b""
+    for i in ids:
+        if 0 <= i < len(table):
+            out += table[i]
+    return out.decode("utf-8", errors="replace")
+
+
+if __name__ == "__main__":
+    import sys
+
+    tok = build_tokenizer()
+    path = sys.argv[1] if len(sys.argv) > 1 else "tokenizer.json"
+    with open(path, "w") as f:
+        json.dump(tok, f)
+    ids = encode(tok, "The browser runs the model locally.")
+    print(f"{len(tok['merges'])} merges; roundtrip: {decode(tok, ids)!r}")

@@ -1,0 +1,105 @@
+"""AOT artifact integrity: manifest schema, weight layout, HLO text shape.
+
+These tests validate the *contract* between aot.py and the Rust runtime
+(rust/src/runtime/artifact.rs): argument order, offsets, dtypes.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import ALL_CONFIGS, TINY
+from compile.aot import lower_decode, lower_prefill
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "../../artifacts"))
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_models(manifest):
+    assert set(manifest["models"]) == set(ALL_CONFIGS)
+
+
+def test_weight_entries_match_specs(manifest):
+    for name, entry in manifest["models"].items():
+        cfg = ALL_CONFIGS[name]
+        specs = M.weight_specs(cfg)
+        assert [e["name"] for e in entry["weights"]] == [n for n, _, _ in specs]
+        for e, (n, shape, ty) in zip(entry["weights"], specs):
+            assert tuple(e["shape"]) == shape
+            assert e["dtype"] == ty
+            itemsize = 4  # f32/u32/i32 all 4 bytes
+            assert e["nbytes"] == int(np.prod(shape)) * itemsize
+            assert e["offset"] % 64 == 0
+
+
+def test_weights_bin_size(manifest):
+    for name, entry in manifest["models"].items():
+        path = os.path.join(ART, entry["weights_bin"])
+        last = entry["weights"][-1]
+        assert os.path.getsize(path) == last["offset"] + last["nbytes"]
+
+
+def test_hlo_files_exist_and_are_entry_modules(manifest):
+    for name, entry in manifest["models"].items():
+        cfg = ALL_CONFIGS[name]
+        assert set(entry["prefill"]) == {str(c) for c in cfg.prefill_chunks}
+        assert set(entry["decode"]) == {str(b) for b in cfg.decode_batches}
+        for phase in ("prefill", "decode"):
+            for sub in entry[phase].values():
+                path = os.path.join(ART, sub["path"])
+                assert os.path.exists(path), path
+                with open(path) as f:
+                    text = f.read()
+                assert "ENTRY" in text and text.startswith("HloModule"), path
+
+
+def test_prefill_param_count_matches_manifest(manifest):
+    name = TINY.name
+    entry = manifest["models"][name]
+    cfg = ALL_CONFIGS[name]
+    n_weights = len(entry["weights"])
+    chunk = cfg.prefill_chunks[0]
+    hlo = lower_prefill(cfg, chunk)
+    # parameter count = phase inputs + weights + 2 caches
+    n_inputs = len(entry["prefill"][str(chunk)]["inputs"])
+    expected = n_inputs + n_weights + 2
+    assert hlo.count("parameter(") >= expected
+
+
+def test_decode_batch_shapes_in_hlo(manifest):
+    cfg = ALL_CONFIGS[TINY.name]
+    b = cfg.decode_batches[-1]
+    hlo = lower_decode(cfg, b)
+    assert f"s32[{b}]" in hlo  # ids / positions / seq_lens params
+    assert f"f32[{b},{cfg.vocab_size}]" in hlo  # logits output
+
+
+def test_cache_spec_shape(manifest):
+    for name, entry in manifest["models"].items():
+        cfg = ALL_CONFIGS[name]
+        for c in entry["cache"]:
+            assert tuple(c["shape"]) == (
+                cfg.n_layers,
+                cfg.num_pages,
+                cfg.page_size,
+                cfg.n_kv_heads,
+                cfg.head_dim,
+            )
+
+
+def test_manifest_constants(manifest):
+    assert manifest["group_size"] == 64
+    assert manifest["pack"] == 8
+    assert manifest["attention_schedule"] == "gather"
+    assert manifest["outputs"] if "outputs" in manifest else True

@@ -1,0 +1,206 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the GQA/MHA axis) per the repro contract;
+all kernels run under interpret=True on CPU.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    paged_attention_decode,
+    prefill_attention,
+    q4_matmul,
+    rmsnorm,
+)
+from compile.kernels import ref
+from compile.kernels.ref import GROUP_SIZE, PACK
+
+SET = dict(deadline=None, max_examples=25)
+
+
+def rng_for(*dims) -> np.random.Generator:
+    return np.random.default_rng(hash(dims) % 2**31)
+
+
+# ---------------------------------------------------------------------------
+# q4_matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    m=st.integers(1, 16),
+    k_groups=st.integers(1, 8),
+    n=st.sampled_from([8, 16, 64, 96, 128, 256, 512]),
+)
+def test_q4_matmul_matches_ref(m, k_groups, n):
+    k = k_groups * GROUP_SIZE
+    rng = rng_for(m, k, n)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    wp = jnp.asarray(rng.integers(0, 2**32, (k // PACK, n), dtype=np.uint32))
+    ws = jnp.asarray((rng.standard_normal((k // GROUP_SIZE, n)) * 0.05).astype(np.float32))
+    got = np.asarray(q4_matmul(x, wp, ws))
+    want = np.asarray(ref.q4_matmul(x, wp, ws))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_q4_matmul_exact_on_integer_scales():
+    # Integer x and power-of-two scales make the product exactly
+    # representable: fused kernel must be bit-identical to the oracle.
+    rng = rng_for(7)
+    k, n = 128, 64
+    x = jnp.asarray(rng.integers(-4, 5, (3, k)).astype(np.float32))
+    wp = jnp.asarray(rng.integers(0, 2**32, (k // PACK, n), dtype=np.uint32))
+    ws = jnp.full((k // GROUP_SIZE, n), 0.25, jnp.float32)
+    got = np.asarray(q4_matmul(x, wp, ws))
+    want = np.asarray(ref.q4_matmul(x, wp, ws))
+    assert (got == want).all()
+
+
+def test_q4_matmul_rejects_bad_pack():
+    x = jnp.zeros((1, 64), jnp.float32)
+    wp = jnp.zeros((9, 8), jnp.uint32)  # 9*8 != 64
+    ws = jnp.zeros((1, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        q4_matmul(x, wp, ws)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(t=st.integers(1, 40), d=st.sampled_from([8, 32, 96, 128, 768]))
+def test_rmsnorm_matches_ref(t, d):
+    rng = rng_for(t, d)
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+    got = np.asarray(rmsnorm(x, w))
+    want = np.asarray(ref.rmsnorm(x, w))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rmsnorm_scale_invariance():
+    # RMSNorm(a * x) == RMSNorm(x) for a > 0 (eps is negligible here).
+    rng = rng_for(11)
+    x = jnp.asarray(rng.standard_normal((4, 64)) + 1.0, jnp.float32)
+    w = jnp.ones((64,), jnp.float32)
+    a = np.asarray(rmsnorm(x, w))
+    b = np.asarray(rmsnorm(x * 16.0, w))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# prefill attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    t=st.sampled_from([8, 16, 32, 64]),
+    heads=st.sampled_from([(4, 4), (4, 2), (8, 4), (8, 1), (12, 4)]),
+    dh=st.sampled_from([16, 32, 64]),
+    frac=st.floats(0.1, 1.0),
+)
+def test_prefill_attention_matches_ref(t, heads, dh, frac):
+    h, kvh = heads
+    seq_len = max(1, int(t * frac))
+    rng = rng_for(t, h, kvh, dh, seq_len)
+    q = jnp.asarray(rng.standard_normal((t, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((t, kvh, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((t, kvh, dh)), jnp.float32)
+    got = np.asarray(prefill_attention(q, k, v, jnp.int32(seq_len)))
+    want = np.asarray(ref.prefill_attention(q, k, v, seq_len))
+    # Compare only valid rows; padding rows are unconstrained.
+    np.testing.assert_allclose(got[:seq_len], want[:seq_len], rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_attention_first_token_is_v():
+    # Causal: the first token attends only to itself -> output == v[0].
+    rng = rng_for(3)
+    t, h, dh = 8, 4, 16
+    q = jnp.asarray(rng.standard_normal((t, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((t, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((t, h, dh)), jnp.float32)
+    out = np.asarray(prefill_attention(q, k, v, jnp.int32(t)))
+    np.testing.assert_allclose(out[0], np.asarray(v)[0], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged attention (both schedules)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    b=st.integers(1, 8),
+    heads=st.sampled_from([(4, 4), (4, 2), (8, 4), (8, 8), (12, 4)]),
+    dh=st.sampled_from([16, 32, 64]),
+    page=st.sampled_from([8, 16]),
+    max_pages=st.integers(1, 6),
+    schedule=st.sampled_from(["paged_loop", "gather"]),
+    data=st.data(),
+)
+def test_paged_attention_matches_ref(b, heads, dh, page, max_pages, schedule, data):
+    h, kvh = heads
+    p_total = max_pages * 4 + 1
+    rng = rng_for(b, h, kvh, dh, page, max_pages)
+    q = jnp.asarray(rng.standard_normal((b, h, dh)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((p_total, page, kvh, dh)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((p_total, page, kvh, dh)), jnp.float32)
+    bt = jnp.asarray(rng.integers(1, p_total, (b, max_pages), dtype=np.int32))
+    lens = data.draw(
+        st.lists(st.integers(0, max_pages * page), min_size=b, max_size=b)
+    )
+    sl = jnp.asarray(np.array(lens, np.int32))
+    got = np.asarray(paged_attention_decode(q, kp, vp, bt, sl, schedule=schedule))
+    want = np.asarray(ref.paged_attention_decode(q, kp, vp, bt, sl))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_paged_attention_schedules_agree():
+    rng = rng_for(42)
+    b, h, kvh, dh, page, mp, p = 4, 8, 4, 32, 16, 4, 17
+    q = jnp.asarray(rng.standard_normal((b, h, dh)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((p, page, kvh, dh)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((p, page, kvh, dh)), jnp.float32)
+    bt = jnp.asarray(rng.integers(1, p, (b, mp), dtype=np.int32))
+    sl = jnp.asarray([1, 17, 64, 33], np.int32)
+    a = np.asarray(paged_attention_decode(q, kp, vp, bt, sl, schedule="paged_loop"))
+    g = np.asarray(paged_attention_decode(q, kp, vp, bt, sl, schedule="gather"))
+    np.testing.assert_allclose(a, g, rtol=1e-4, atol=1e-5)
+
+
+def test_paged_attention_zero_len_is_zero():
+    rng = rng_for(5)
+    b, h, kvh, dh, page, mp, p = 2, 4, 2, 16, 8, 2, 5
+    q = jnp.asarray(rng.standard_normal((b, h, dh)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((p, page, kvh, dh)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((p, page, kvh, dh)), jnp.float32)
+    bt = jnp.zeros((b, mp), jnp.int32)
+    sl = jnp.zeros((b,), jnp.int32)
+    for sched in ("paged_loop", "gather"):
+        out = np.asarray(paged_attention_decode(q, kp, vp, bt, sl, schedule=sched))
+        assert (out == 0).all(), sched
+
+
+def test_paged_attention_ignores_pages_beyond_len():
+    # Garbage in pages past seq_len must not affect the output.
+    rng = rng_for(6)
+    b, h, kvh, dh, page, mp, p = 1, 4, 4, 16, 8, 4, 9
+    q = jnp.asarray(rng.standard_normal((b, h, dh)), jnp.float32)
+    kp = np.asarray(rng.standard_normal((p, page, kvh, dh)), np.float32)
+    vp = np.asarray(rng.standard_normal((p, page, kvh, dh)), np.float32)
+    bt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    sl = jnp.asarray([9], jnp.int32)  # only pages 1 and 2 used
+    base = np.asarray(paged_attention_decode(q, jnp.asarray(kp), jnp.asarray(vp), bt, sl))
+    kp[3:] = 1e6
+    vp[3:] = -1e6
+    poisoned = np.asarray(
+        paged_attention_decode(q, jnp.asarray(kp), jnp.asarray(vp), bt, sl)
+    )
+    np.testing.assert_allclose(base, poisoned, rtol=1e-6, atol=1e-6)

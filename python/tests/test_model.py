@@ -1,0 +1,257 @@
+"""L2 model correctness: prefill/decode (paged, kernelized, scanned) vs the
+dense full-attention reference, plus padding/batching invariants."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import TINY
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = TINY
+    w = M.init_weights(cfg, seed=0)
+    wj = {k: jnp.asarray(v) for k, v in w.items()}
+    return cfg, w, wj
+
+
+def fresh_cache(cfg):
+    shape = (cfg.n_layers, cfg.num_pages, cfg.page_size, cfg.n_kv_heads, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def seq_block_table(cfg, start_page, n):
+    bt = np.zeros(cfg.max_pages_per_seq, np.int32)
+    npages = (n + cfg.page_size - 1) // cfg.page_size
+    bt[: npages + 1] = np.arange(start_page, start_page + npages + 1)
+    return bt
+
+
+def test_prefill_matches_dense_reference(setup):
+    cfg, w, wj = setup
+    rng = np.random.default_rng(1)
+    for n in (1, 5, 16, 31):
+        ids = rng.integers(8, 1000, n).astype(np.int32)
+        ref_logits = M.ref_forward(cfg, ids, w)
+        T = 32
+        pad = np.zeros(T, np.int32)
+        pad[:n] = ids
+        kp, vp = fresh_cache(cfg)
+        bt = seq_block_table(cfg, 1, n)
+        logits, _, _ = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
+        np.testing.assert_allclose(np.asarray(logits), ref_logits[n - 1], rtol=1e-4, atol=1e-4)
+
+
+def test_decode_continues_prefill_exactly(setup):
+    cfg, w, wj = setup
+    rng = np.random.default_rng(2)
+    n = 13
+    ids = rng.integers(8, 1000, n).astype(np.int32)
+    steps = [101, 202, 303]
+    full = np.concatenate([ids, steps]).astype(np.int32)
+    ref_logits = M.ref_forward(cfg, full, w)
+
+    kp, vp = fresh_cache(cfg)
+    pad = np.zeros(16, np.int32)
+    pad[:n] = ids
+    bt = seq_block_table(cfg, 1, n + len(steps))
+    logits, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
+    np.testing.assert_allclose(np.asarray(logits), ref_logits[n - 1], rtol=1e-4, atol=1e-4)
+
+    d_bt = np.zeros((1, cfg.max_pages_per_seq), np.int32)
+    d_bt[0] = bt
+    for i, tok in enumerate(steps):
+        pos = n + i
+        logits, kp, vp = M.decode(
+            cfg,
+            jnp.asarray([tok], jnp.int32),
+            jnp.asarray([pos], jnp.int32),
+            jnp.asarray([pos + 1], jnp.int32),
+            jnp.asarray(d_bt),
+            wj,
+            kp,
+            vp,
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits)[0], ref_logits[pos], rtol=1e-4, atol=1e-4
+        )
+
+
+def test_batched_decode_independent_sequences(setup):
+    # Two sequences decoded together must produce the same logits as each
+    # decoded alone (continuous batching must not leak state).
+    cfg, w, wj = setup
+    rng = np.random.default_rng(3)
+    n1, n2 = 7, 11
+    s1 = rng.integers(8, 1000, n1 + 1).astype(np.int32)
+    s2 = rng.integers(8, 1000, n2 + 1).astype(np.int32)
+    ref1 = M.ref_forward(cfg, s1, w)
+    ref2 = M.ref_forward(cfg, s2, w)
+
+    kp, vp = fresh_cache(cfg)
+    bt1 = seq_block_table(cfg, 1, n1 + 1)
+    bt2 = seq_block_table(cfg, 4, n2 + 1)
+    pad = np.zeros(16, np.int32)
+    pad[:n1] = s1[:-1]
+    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n1), jnp.asarray(bt1), wj, kp, vp)
+    pad = np.zeros(16, np.int32)
+    pad[:n2] = s2[:-1]
+    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n2), jnp.asarray(bt2), wj, kp, vp)
+
+    bts = np.stack([bt1, bt2])
+    logits, _, _ = M.decode(
+        cfg,
+        jnp.asarray([s1[-1], s2[-1]], jnp.int32),
+        jnp.asarray([n1, n2], jnp.int32),
+        jnp.asarray([n1 + 1, n2 + 1], jnp.int32),
+        jnp.asarray(bts),
+        wj,
+        kp,
+        vp,
+    )
+    np.testing.assert_allclose(np.asarray(logits)[0], ref1[n1], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(logits)[1], ref2[n2], rtol=1e-4, atol=1e-4)
+
+
+def test_padding_slots_do_not_corrupt_real_pages(setup):
+    # A padding slot (seq_len = 0) writes to the garbage page 0 only.
+    cfg, w, wj = setup
+    rng = np.random.default_rng(4)
+    n = 9
+    ids = rng.integers(8, 1000, n + 1).astype(np.int32)
+    ref_logits = M.ref_forward(cfg, ids, w)
+
+    kp, vp = fresh_cache(cfg)
+    bt = seq_block_table(cfg, 1, n + 1)
+    pad = np.zeros(16, np.int32)
+    pad[:n] = ids[:-1]
+    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
+
+    bts = np.zeros((2, cfg.max_pages_per_seq), np.int32)
+    bts[0] = bt
+    logits, _, _ = M.decode(
+        cfg,
+        jnp.asarray([ids[-1], 999], jnp.int32),
+        jnp.asarray([n, 0], jnp.int32),
+        jnp.asarray([n + 1, 0], jnp.int32),
+        jnp.asarray(bts),
+        wj,
+        kp,
+        vp,
+    )
+    np.testing.assert_allclose(np.asarray(logits)[0], ref_logits[n], rtol=1e-4, atol=1e-4)
+
+
+def test_decode_gather_schedule_matches_default(setup):
+    cfg, w, wj = setup
+    rng = np.random.default_rng(5)
+    n = 6
+    ids = rng.integers(8, 1000, n).astype(np.int32)
+    kp, vp = fresh_cache(cfg)
+    bt = seq_block_table(cfg, 1, n + 1)
+    pad = np.zeros(16, np.int32)
+    pad[:n] = ids
+    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
+    d_bt = np.zeros((1, cfg.max_pages_per_seq), np.int32)
+    d_bt[0] = bt
+    args = (
+        jnp.asarray([42], jnp.int32),
+        jnp.asarray([n], jnp.int32),
+        jnp.asarray([n + 1], jnp.int32),
+        jnp.asarray(d_bt),
+        wj,
+        kp,
+        vp,
+    )
+    a, _, _ = M.decode(cfg, *args, attention_schedule="paged_loop")
+    b, _, _ = M.decode(cfg, *args, attention_schedule="gather")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_weight_specs_cover_init(setup):
+    cfg, w, _ = setup
+    names = {n for n, _, _ in M.weight_specs(cfg)}
+    assert names == set(w.keys())
+
+
+def test_rope_position_sensitivity():
+    # Same token at different positions must produce different K.
+    cfg = TINY
+    x = jnp.ones((2, cfg.n_heads, cfg.head_dim), jnp.float32)
+    a = M._rope(x, jnp.asarray([3, 3], jnp.int32), cfg.rope_theta)
+    b = M._rope(x, jnp.asarray([3, 7], jnp.int32), cfg.rope_theta)
+    assert np.allclose(np.asarray(a)[0], np.asarray(b)[0])
+    assert not np.allclose(np.asarray(a)[1], np.asarray(b)[1])
+
+
+def test_rope_preserves_norm():
+    cfg = TINY
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((5, cfg.n_heads, cfg.head_dim)), jnp.float32)
+    y = M._rope(x, jnp.arange(5, dtype=jnp.int32), cfg.rope_theta)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_backend_schedules_agree(setup):
+    # Every (layer_mode, attention, q4) artifact specialization must be
+    # semantically identical to the reference configuration.
+    cfg, w, wj = setup
+    rng = np.random.default_rng(7)
+    n = 9
+    ids = rng.integers(8, 1000, n).astype(np.int32)
+    kp, vp = fresh_cache(cfg)
+    bt = seq_block_table(cfg, 1, n + 1)
+    pad = np.zeros(16, np.int32)
+    pad[:n] = ids
+    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
+    d_bt = np.zeros((2, cfg.max_pages_per_seq), np.int32)
+    d_bt[0] = bt
+    args = (
+        jnp.asarray([42, 0], jnp.int32),
+        jnp.asarray([n, 0], jnp.int32),
+        jnp.asarray([n + 1, 0], jnp.int32),
+        jnp.asarray(d_bt),
+        wj,
+        kp,
+        vp,
+    )
+    base, bk, bv = M.decode(cfg, *args)
+    for attention in ("paged_loop", "gather"):
+        for q4 in ("tiled", "single"):
+            for mode in ("scan", "unroll"):
+                got, gk, gv = M.decode(
+                    cfg, *args,
+                    attention_schedule=attention, q4_schedule=q4, layer_mode=mode,
+                )
+                np.testing.assert_allclose(
+                    np.asarray(got), np.asarray(base), rtol=1e-4, atol=1e-5,
+                    err_msg=f"{attention}/{q4}/{mode}",
+                )
+                np.testing.assert_allclose(
+                    np.asarray(gk), np.asarray(bk), rtol=1e-5, atol=1e-6,
+                    err_msg=f"{attention}/{q4}/{mode} k_pages",
+                )
+
+
+def test_prefill_q4_single_matches_tiled(setup):
+    cfg, w, wj = setup
+    rng = np.random.default_rng(8)
+    n = 11
+    ids = rng.integers(8, 1000, n).astype(np.int32)
+    pad = np.zeros(16, np.int32)
+    pad[:n] = ids
+    bt = seq_block_table(cfg, 1, n)
+    kp, vp = fresh_cache(cfg)
+    a, _, _ = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp,
+                        q4_schedule="tiled")
+    b, _, _ = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp,
+                        q4_schedule="single")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)

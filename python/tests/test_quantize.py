@@ -1,0 +1,59 @@
+"""Quantization pack/unpack properties."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import dequantize_q4, quantize_q4
+from compile.kernels.ref import GROUP_SIZE, PACK
+import jax.numpy as jnp
+
+SET = dict(deadline=None, max_examples=25)
+
+
+@settings(**SET)
+@given(kg=st.integers(1, 6), n=st.integers(1, 64), scale=st.floats(0.01, 10.0))
+def test_roundtrip_error_bound(kg, n, scale):
+    k = kg * GROUP_SIZE
+    rng = np.random.default_rng(kg * 1000 + n)
+    w = (rng.standard_normal((k, n)) * scale).astype(np.float32)
+    packed, scales = quantize_q4(w)
+    deq = dequantize_q4(packed, scales)
+    # Max quantization error is scale/2 per element; scale = absmax/7.
+    group_absmax = np.abs(w.reshape(-1, GROUP_SIZE, n)).max(axis=1, keepdims=True)
+    bound = np.repeat(group_absmax / 7.0 / 2.0, GROUP_SIZE, axis=1).reshape(k, n)
+    assert (np.abs(deq - w) <= bound + 1e-6).all()
+
+
+@settings(**SET)
+@given(kg=st.integers(1, 4), n=st.integers(1, 32))
+def test_quantized_values_are_fixed_point(kg, n):
+    # Quantize(dequantize(q)) is idempotent: codes survive a roundtrip.
+    k = kg * GROUP_SIZE
+    rng = np.random.default_rng(kg * 77 + n)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    p1, s1 = quantize_q4(w)
+    p2, s2 = quantize_q4(dequantize_q4(p1, s1))
+    assert (p1 == p2).all()
+    np.testing.assert_allclose(s1, s2, rtol=1e-5)
+
+
+def test_packing_layout_matches_jnp_ref():
+    # numpy packer and the jnp dequant used by kernels must agree bit-for-bit.
+    from compile.kernels import ref
+
+    rng = np.random.default_rng(0)
+    k, n = 2 * GROUP_SIZE, 24
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    packed, scales = quantize_q4(w)
+    np_deq = dequantize_q4(packed, scales)
+    jnp_deq = np.asarray(ref.dequant_q4(jnp.asarray(packed), jnp.asarray(scales)))
+    np.testing.assert_allclose(np_deq, jnp_deq, rtol=0, atol=0)
+
+
+def test_all_16_codes_reachable():
+    w = np.linspace(-7, 7, GROUP_SIZE)[:, None].astype(np.float32)
+    packed, scales = quantize_q4(w)
+    codes = []
+    for i in range(PACK):
+        codes.extend(((packed >> np.uint32(4 * i)) & np.uint32(0xF)).ravel())
+    assert set(np.asarray(codes).tolist()) >= set(range(1, 16))

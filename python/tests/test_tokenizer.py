@@ -1,0 +1,79 @@
+"""Tokenizer trainer properties (the Rust encoder mirrors encode())."""
+
+import json
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.tokenizer_gen import (
+    BYTE_OFFSET,
+    FIRST_MERGE_ID,
+    SPECIALS,
+    build_tokenizer,
+    decode,
+    encode,
+    token_bytes,
+)
+
+SET = dict(deadline=None, max_examples=40)
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return build_tokenizer(vocab_size=4096)
+
+
+@settings(**SET)
+@given(st.text(min_size=0, max_size=200))
+def test_roundtrip_any_text(text):
+    tok = _TOK
+    assert decode(tok, encode(tok, text)) == text
+
+
+@settings(**SET)
+@given(st.binary(min_size=1, max_size=64))
+def test_roundtrip_binaryish(data):
+    tok = _TOK
+    text = data.decode("utf-8", errors="replace")
+    assert decode(tok, encode(tok, text)) == text
+
+
+def test_specials_reserved(tok):
+    assert SPECIALS["<pad>"] == 0
+    assert max(SPECIALS.values()) < BYTE_OFFSET
+    for m in tok["merges"]:
+        assert m[0] >= BYTE_OFFSET and m[1] >= BYTE_OFFSET
+
+
+def test_merges_reference_earlier_ids_only(tok):
+    for i, (a, b) in enumerate(tok["merges"]):
+        assert a < FIRST_MERGE_ID + i
+        assert b < FIRST_MERGE_ID + i
+
+
+def test_compression_on_corpus_text(tok):
+    text = "The engine streams tokens back to the application."
+    ids = encode(tok, text)
+    assert len(ids) < len(text.encode()) * 0.5  # BPE actually compresses
+
+
+def test_token_bytes_consistent(tok):
+    table = token_bytes([tuple(m) for m in tok["merges"]])
+    assert table[BYTE_OFFSET + ord("a")] == b"a"
+    # every merged token's bytes are the concat of its parts
+    for i, (a, b) in enumerate(tok["merges"]):
+        assert table[FIRST_MERGE_ID + i] == table[a] + table[b]
+
+
+def test_artifact_tokenizer_loadable():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/tokenizer.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        t = json.load(f)
+    assert t["vocab_size"] == 4096
+    assert decode(t, encode(t, "hello world")) == "hello world"
+
+
+_TOK = build_tokenizer(vocab_size=4096)

@@ -1,0 +1,71 @@
+//! Shared mini-bench harness (criterion is not in the vendored set).
+//!
+//! Conventions: every bench binary is `harness = false`, prints a
+//! uniform table, honors `WEBLLM_BENCH_QUICK=1` for a fast smoke run,
+//! and exits 0 so `cargo bench` chains them.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+use webllm::metrics::Histogram;
+
+pub fn quick() -> bool {
+    std::env::var("WEBLLM_BENCH_QUICK").map_or(false, |v| v == "1")
+}
+
+/// Pick between a full and a quick iteration count.
+pub fn iters(full: usize, fast: usize) -> usize {
+    if quick() {
+        fast
+    } else {
+        full
+    }
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+/// Time `f` for `n` iterations after `warmup` runs.
+pub fn time_it(name: &str, warmup: usize, n: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut h = Histogram::new();
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        h.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iterations: n,
+        mean_ms: h.mean(),
+        p50_ms: h.percentile(50.0),
+        p95_ms: h.percentile(95.0),
+    }
+}
+
+pub fn print_header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12}",
+        "case", "iters", "mean ms", "p50 ms", "p95 ms"
+    );
+}
+
+pub fn print_result(r: &BenchResult) {
+    println!(
+        "{:<44} {:>8} {:>12.3} {:>12.3} {:>12.3}",
+        r.name, r.iterations, r.mean_ms, r.p50_ms, r.p95_ms
+    );
+}
+
+/// A labeled throughput row (tok/s style tables).
+pub fn print_tps_row(label: &str, tps: f64, extra: &str) {
+    println!("{label:<44} {tps:>10.2} tok/s  {extra}");
+}

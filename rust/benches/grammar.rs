@@ -1,0 +1,112 @@
+//! Structured-generation overhead (DESIGN.md A3; paper §2.1/§2.2 — the
+//! grammar engine is one of the WASM-compiled CPU subsystems).
+//!
+//! Measures: (1) decode throughput with vs without a JSON-Schema
+//! constraint on the real engine; (2) the raw mask-computation cost and
+//! the adaptive mask-cache hit rate that makes constrained decoding
+//! near-free after warmup (the XGrammar claim).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::rc::Rc;
+use webllm::api::{ChatCompletionRequest, ResponseFormat};
+use webllm::coordinator::{EngineConfig, MLCEngine};
+use webllm::grammar::{schema_to_grammar, GrammarMatcher, MaskCache, VocabTrie};
+use webllm::json::parse;
+use webllm::tokenizer::Tokenizer;
+
+const SCHEMA: &str = r#"{
+    "type": "object",
+    "properties": {
+        "title": {"type": "string"},
+        "tags": {"type": "array", "items": {"type": "string"}, "maxItems": 4},
+        "score": {"type": "number"}
+    },
+    "required": ["title", "tags", "score"]
+}"#;
+
+fn main() {
+    let max_tokens = common::iters(48, 8);
+    let reps = common::iters(6, 2);
+
+    let mut engine = MLCEngine::new(&EngineConfig::native(&["tiny-2m"])).expect("engine");
+    let base = |constrained: bool| {
+        let mut r = ChatCompletionRequest::new("tiny-2m").user("Summarize as JSON.");
+        r.max_tokens = max_tokens;
+        r.sampling.seed = Some(17);
+        if constrained {
+            r.response_format = ResponseFormat::JsonSchema(parse(SCHEMA).unwrap());
+        }
+        r
+    };
+    engine.chat_completion(base(false)).unwrap(); // warmup
+
+    let mut free_tps = 0.0;
+    let rf = common::time_it("unconstrained decode", 1, reps, || {
+        let resp = engine.chat_completion(base(false)).unwrap();
+        free_tps += resp.usage.decode_tokens_per_s;
+    });
+    let mut cons_tps = 0.0;
+    let rc = common::time_it("json-schema constrained", 1, reps, || {
+        let resp = engine.chat_completion(base(true)).unwrap();
+        cons_tps += resp.usage.decode_tokens_per_s;
+    });
+
+    common::print_header(&format!("engine decode, {max_tokens} tokens (tiny-2m)"));
+    common::print_result(&rf);
+    common::print_result(&rc);
+    println!(
+        "\nconstrained-decoding overhead: {:.1}% (decode tok/s: {:.1} free vs {:.1} constrained)",
+        100.0 * (rc.mean_ms - rf.mean_ms) / rf.mean_ms,
+        free_tps / reps as f64,
+        cons_tps / reps as f64,
+    );
+
+    // -- raw mask computation + cache --------------------------------------
+    let manifest = webllm::models::Manifest::load(&webllm::artifacts_dir()).expect("artifacts");
+    let tok = Tokenizer::from_file(&manifest.tokenizer_path).expect("tokenizer");
+    let trie = Rc::new(VocabTrie::build(tok.vocab_size(), |i| tok.token_bytes(i)));
+    let grammar = Rc::new(schema_to_grammar(&parse(SCHEMA).unwrap()).unwrap());
+
+    let m = GrammarMatcher::new(grammar.clone());
+    let r = common::time_it(
+        &format!("cold token mask (vocab {}, trie {} nodes)", tok.vocab_size(), trie.node_count()),
+        2,
+        common::iters(50, 5),
+        || {
+            let mask = m.token_mask_trie(&trie);
+            std::hint::black_box(&mask);
+        },
+    );
+    common::print_header("grammar mask micro-bench");
+    common::print_result(&r);
+
+    // Simulated decode walk with the cache (greedy-ish random choices).
+    let mut cache = MaskCache::new(trie.clone(), 256);
+    let mut matcher = GrammarMatcher::new(grammar);
+    let mut rng: u64 = 0x1234_5678;
+    let steps = common::iters(400, 40);
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        let mask = cache.get_or_compute(&matcher);
+        let allowed: Vec<u32> =
+            (0..tok.vocab_size() as u32).filter(|&i| mask[i as usize]).collect();
+        if allowed.is_empty() {
+            break;
+        }
+        rng ^= rng << 13;
+        rng ^= rng >> 7;
+        rng ^= rng << 17;
+        let t = allowed[(rng % allowed.len() as u64) as usize];
+        if !matcher.accept_token(tok.token_bytes(t)) {
+            break;
+        }
+    }
+    let (hits, misses) = cache.stats();
+    println!(
+        "cached walk: {steps} steps in {:.1} ms | mask cache {hits} hits / {misses} misses ({:.0}% hit rate)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        100.0 * hits as f64 / (hits + misses).max(1) as f64
+    );
+}

@@ -1,0 +1,87 @@
+//! Kernel ablation (DESIGN.md A2): the fused dequant-GEMM Pallas kernel
+//! vs the unfused dequantize-then-matmul graph (§2.3's "no WebGPU kernel
+//! library" problem — MLC's answer is compiler-fused kernels), plus the
+//! two PagedAttention schedules.
+//!
+//! Each case is an AOT HLO artifact (built by aot.py) executed through
+//! the same PJRT path the engine uses.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use webllm::models::Manifest;
+use webllm::runtime::thread_client;
+use xla::{PjRtBuffer, PjRtClient};
+
+fn random_input(
+    client: &PjRtClient,
+    spec: &webllm::models::TensorSpec,
+    seed: u64,
+) -> PjRtBuffer {
+    let n: usize = spec.shape.iter().product();
+    let mut state = seed | 1;
+    let mut next = || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    match spec.dtype.as_str() {
+        "f32" => {
+            let v: Vec<f32> = (0..n).map(|_| (next() % 2000) as f32 / 1000.0 - 1.0).collect();
+            client.buffer_from_host_buffer(&v, &spec.shape, None).unwrap()
+        }
+        "u32" => {
+            let v: Vec<u32> = (0..n).map(|_| next() as u32).collect();
+            client.buffer_from_host_buffer(&v, &spec.shape, None).unwrap()
+        }
+        "i32" => {
+            // valid page ids / seq lens: small positive ints
+            let v: Vec<i32> = (0..n).map(|_| (next() % 64 + 1) as i32).collect();
+            client.buffer_from_host_buffer(&v, &spec.shape, None).unwrap()
+        }
+        other => panic!("dtype {other}"),
+    }
+}
+
+fn main() {
+    let manifest = Manifest::load(&webllm::artifacts_dir()).expect("artifacts");
+    let client = thread_client().expect("client");
+    let n = common::iters(50, 5);
+
+    common::print_header("kernel ablations (AOT HLO via PJRT, CPU)");
+    let mut pairs: Vec<(String, f64)> = Vec::new();
+    for (name, entry) in &manifest.kernel_bench {
+        let proto = xla::HloModuleProto::from_text_file(&entry.path).expect("parse hlo");
+        let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).expect("compile");
+        let inputs: Vec<PjRtBuffer> = entry
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| random_input(&client, s, 0x9E37 + i as u64))
+            .collect();
+        let refs: Vec<&PjRtBuffer> = inputs.iter().collect();
+        let r = common::time_it(name, 3, n, || {
+            let out = exe.execute_b(&refs).unwrap();
+            std::hint::black_box(&out);
+        });
+        pairs.push((name.clone(), r.mean_ms));
+        common::print_result(&r);
+    }
+
+    // Fused-vs-unfused summary.
+    println!("\nfused dequant-GEMM vs unfused (mean speedup):");
+    let lookup = |n: &str| pairs.iter().find(|(k, _)| k == n).map(|(_, v)| *v);
+    for shape in ["llama_qkv", "llama_ffn", "llama_head", "phi_ffn"] {
+        if let (Some(f), Some(u)) =
+            (lookup(&format!("q4_{shape}_fused")), lookup(&format!("q4_{shape}_unfused")))
+        {
+            println!("  {shape:<14} fused {f:>8.3} ms | unfused {u:>8.3} ms | ratio {:.2}x", u / f);
+        }
+    }
+    if let (Some(l), Some(g)) =
+        (lookup("paged_attention_paged_loop"), lookup("paged_attention_gather"))
+    {
+        println!("paged attention: loop {l:.3} ms | gather {g:.3} ms | gather speedup {:.1}x (CPU backend specialization)", l / g);
+    }
+}

@@ -1,0 +1,94 @@
+//! Paged-KV metadata throughput (DESIGN.md A4; the WASM "sequence
+//! management in the paged KV-cache" subsystem of §2.2): allocator churn,
+//! admission/free cycles, block-table materialization, and prefix-cache
+//! hit rates under a shared-prefix workload.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use webllm::kvcache::{BlockAllocator, KvCacheManager};
+
+fn main() {
+    let n = common::iters(200_000, 5_000);
+
+    // -- raw allocator ------------------------------------------------------
+    let mut alloc = BlockAllocator::new(4096, 16);
+    let r = common::time_it("alloc/release pair", 1000, 5, || {
+        for _ in 0..n {
+            let p = alloc.alloc().unwrap();
+            alloc.release(p, false);
+        }
+    });
+    common::print_header("block allocator");
+    println!(
+        "{:<44} {:>12.1} Mops/s",
+        "alloc+release",
+        n as f64 / (r.mean_ms / 1e3) / 1e6
+    );
+
+    // -- sequence admission / decode growth / free --------------------------
+    let seqs = common::iters(2000, 100);
+    let mut m = KvCacheManager::new(8192, 16, 32, false);
+    let r = common::time_it("admit(64 tok) + 64 appends + free", 5, 5, || {
+        for i in 0..seqs {
+            let id = i as u64 + 1;
+            let toks: Vec<u32> = (0..64).map(|t| (i * 64 + t) as u32 % 1000).collect();
+            m.admit(id, &toks).unwrap();
+            for t in 0..64u32 {
+                m.append_token(id, t).unwrap();
+            }
+            m.free(id);
+        }
+    });
+    common::print_header("sequence lifecycle");
+    common::print_result(&r);
+    println!(
+        "{:<44} {:>12.1} k seqs/s",
+        "full lifecycle",
+        seqs as f64 / (r.mean_ms / 1e3) / 1e3
+    );
+
+    // -- block-table materialization (per decode step, hot path) ------------
+    let mut m = KvCacheManager::new(1024, 16, 16, false);
+    for i in 0..8u64 {
+        m.admit(i + 1, &vec![7u32; 100]).unwrap();
+    }
+    let steps = common::iters(100_000, 2_000);
+    let r = common::time_it("block_table_row x8 (one decode step)", 100, 5, || {
+        for _ in 0..steps {
+            for i in 0..8u64 {
+                std::hint::black_box(m.block_table_row(i + 1));
+            }
+        }
+    });
+    common::print_header("decode-step table build");
+    println!(
+        "{:<44} {:>12.2} us/step",
+        "8-row block tables",
+        r.mean_ms * 1e3 / steps as f64
+    );
+
+    // -- prefix cache under shared-prefix workload ---------------------------
+    common::print_header("prefix cache (shared system prompt)");
+    for enabled in [false, true] {
+        let mut m = KvCacheManager::new(4096, 16, 32, enabled);
+        let prefix: Vec<u32> = (0..64).collect(); // 4 full pages
+        let rounds = common::iters(500, 50);
+        for i in 0..rounds {
+            let id = i as u64 + 1;
+            let mut toks = prefix.clone();
+            toks.extend((0..10).map(|t| 1000 + (i * 10 + t) as u32));
+            m.admit(id, &toks).unwrap();
+            m.free(id);
+        }
+        let (hits, misses) = m.prefix_stats();
+        println!(
+            "prefix_cache={:<5} lookups {:>6} | hits {:>6} | hit rate {:>5.1}% | cached tokens avoided/seq ~{}",
+            enabled,
+            hits + misses,
+            hits,
+            100.0 * hits as f64 / (hits + misses).max(1) as f64,
+            if enabled { 64 } else { 0 }
+        );
+    }
+}

@@ -1,0 +1,61 @@
+//! Time-to-first-token vs prompt length (DESIGN.md A6): prefill cost
+//! across the compiled chunk menu, native vs browser mode, llama-web.
+//!
+//! WebLLM compiles a fixed menu of prefill shapes (TVM static shapes);
+//! the engine pads the prompt up to the smallest admissible chunk, so
+//! TTFT is a staircase in prompt length — this bench draws the staircase.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use webllm::models::Manifest;
+use webllm::runtime::{thread_client, ModelRuntime};
+
+fn main() {
+    let model = if common::quick() { "tiny-2m" } else { "llama-web-80m" };
+    let manifest = Manifest::load(&webllm::artifacts_dir()).expect("artifacts");
+    let client = thread_client().unwrap();
+    let mut rt = ModelRuntime::load(&client, &manifest, model, None).expect("runtime");
+    let mc = rt.config().clone();
+    let mp = mc.max_pages_per_seq();
+    let reps = common::iters(8, 2);
+
+    common::print_header(&format!("prefill staircase ({model})"));
+    let chunks = mc.prefill_chunks.clone();
+    let mut per_chunk = Vec::new();
+    for &chunk in &chunks {
+        let seq_len = chunk; // fully-used chunk
+        let ids = vec![9i32; chunk];
+        let mut bt = vec![0i32; mp];
+        let pages_needed = (seq_len + 1 + mc.page_size - 1) / mc.page_size;
+        for (i, b) in bt.iter_mut().take(pages_needed).enumerate() {
+            *b = 1 + i as i32;
+        }
+        rt.reset_cache().unwrap();
+        let r = common::time_it(&format!("prefill chunk={chunk}"), 1, reps, || {
+            rt.prefill(&ids, seq_len, &bt).unwrap();
+        });
+        per_chunk.push((chunk, r.mean_ms));
+        common::print_result(&r);
+    }
+
+    println!("\nTTFT staircase (prompt length -> padded chunk -> cost):");
+    let lens: Vec<usize> = [4usize, 12, 24, 48, 96, 120]
+        .iter()
+        .copied()
+        .filter(|&l| l <= *chunks.last().unwrap())
+        .collect();
+    for len in lens {
+        let chunk = chunks.iter().copied().find(|&c| c >= len).unwrap();
+        let cost = per_chunk.iter().find(|(c, _)| *c == chunk).unwrap().1;
+        println!(
+            "  prompt {len:>4} tok -> chunk {chunk:>4} -> {cost:>8.1} ms ({:.0}% padding waste)",
+            100.0 * (chunk - len) as f64 / chunk as f64
+        );
+    }
+
+    println!("\nper-token prefill efficiency:");
+    for (chunk, ms) in &per_chunk {
+        println!("  chunk {chunk:>4}: {:>7.2} ms/token", ms / *chunk as f64);
+    }
+}

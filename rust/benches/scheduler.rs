@@ -1,0 +1,95 @@
+//! Scheduler ablation (DESIGN.md A5): continuous batching vs sequential
+//! service, and raw decode-step scaling across compiled batch sizes.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Instant;
+use webllm::api::ChatCompletionRequest;
+use webllm::coordinator::{EngineConfig, EngineEvent, MLCEngine};
+use webllm::metrics::Histogram;
+use webllm::models::Manifest;
+use webllm::runtime::{thread_client, ModelRuntime};
+
+fn req(i: usize, max_tokens: usize) -> ChatCompletionRequest {
+    let mut r = ChatCompletionRequest::new("tiny-2m").user(format!("request number {i}"));
+    r.max_tokens = max_tokens;
+    r.sampling.temperature = 0.0;
+    r
+}
+
+fn main() {
+    let n_requests = common::iters(12, 4);
+    let max_tokens = common::iters(24, 6);
+
+    // -- continuous batching vs sequential --------------------------------
+    let mut engine = MLCEngine::new(&EngineConfig::native(&["tiny-2m"])).expect("engine");
+    engine.chat_completion(req(0, 2)).unwrap(); // warmup
+
+    let t0 = Instant::now();
+    let mut lat_seq = Histogram::new();
+    for i in 0..n_requests {
+        let t = Instant::now();
+        engine.chat_completion(req(i, max_tokens)).unwrap();
+        lat_seq.push(t.elapsed().as_secs_f64());
+    }
+    let seq_wall = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        engine.submit(req(i, max_tokens)).unwrap();
+    }
+    engine.run_to_completion().unwrap();
+    let mut lat_cb = Histogram::new();
+    let mut tokens_cb = 0usize;
+    for ev in engine.poll_events() {
+        if let EngineEvent::Done(_, resp) = ev {
+            lat_cb.push(resp.usage.e2e_s);
+            tokens_cb += resp.usage.completion_tokens;
+        }
+    }
+    let cb_wall = t0.elapsed().as_secs_f64();
+
+    println!("=== continuous batching vs sequential ({n_requests} requests x {max_tokens} tokens, tiny-2m) ===");
+    println!(
+        "sequential : wall {seq_wall:>6.2}s | throughput {:>7.1} tok/s | p50 lat {:.2}s",
+        (n_requests * max_tokens) as f64 / seq_wall,
+        lat_seq.percentile(50.0)
+    );
+    println!(
+        "continuous : wall {cb_wall:>6.2}s | throughput {:>7.1} tok/s | p50 lat {:.2}s",
+        tokens_cb as f64 / cb_wall,
+        lat_cb.percentile(50.0)
+    );
+    println!("speedup    : {:.2}x wall-clock", seq_wall / cb_wall);
+
+    // -- raw decode-step batch scaling -------------------------------------
+    let manifest = Manifest::load(&webllm::artifacts_dir()).expect("artifacts");
+    let client = thread_client().unwrap();
+    let mut rt = ModelRuntime::load(&client, &manifest, "tiny-2m", None).expect("runtime");
+    let mc = rt.config().clone();
+    let mp = mc.max_pages_per_seq();
+    let reps = common::iters(40, 5);
+
+    common::print_header("decode step vs compiled batch size (tiny-2m)");
+    let mut per_token = Vec::new();
+    for &b in &mc.decode_batches.clone() {
+        // b fake sequences, page 1.. (content irrelevant for timing)
+        let ids = vec![5i32; b];
+        let positions = vec![3i32; b];
+        let seq_lens = vec![4i32; b];
+        let mut tables = vec![0i32; b * mp];
+        for row in 0..b {
+            tables[row * mp] = 1 + row as i32;
+        }
+        let r = common::time_it(&format!("decode b={b}"), 3, reps, || {
+            rt.decode(&ids, &positions, &seq_lens, &tables).unwrap();
+        });
+        per_token.push((b, r.mean_ms / b as f64));
+        common::print_result(&r);
+    }
+    println!("\nper-sequence cost (batching amortization):");
+    for (b, ms) in per_token {
+        println!("  b={b:<3} {ms:>8.2} ms/seq/step");
+    }
+}

@@ -1,0 +1,71 @@
+//! Tokenizer throughput (DESIGN.md A7): the CPU-side subsystem the paper
+//! runs as WASM. Native encode/decode rates, the modeled WASM slowdown,
+//! and the streaming detokenizer.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use webllm::browser::{BrowserConfig, BrowserEnv};
+use webllm::models::Manifest;
+use webllm::tokenizer::{StreamDecoder, Tokenizer};
+
+const SAMPLE: &str = "The inference engine keeps a paged key value cache. Each sequence owns \
+a list of pages, and the attention kernel walks the page table to gather keys and values for \
+every head. A scheduler batches prefill and decode requests so the device stays busy while \
+responses stream out token by token. {\"json\": [1, 2.5, true], \"path\": \"/v1/chat\"} ";
+
+fn main() {
+    let manifest = Manifest::load(&webllm::artifacts_dir()).expect("artifacts");
+    let tok = Tokenizer::from_file(&manifest.tokenizer_path).expect("tokenizer");
+
+    let text = SAMPLE.repeat(common::iters(64, 8));
+    let bytes = text.len();
+    let reps = common::iters(100, 10);
+
+    common::print_header(&format!("byte-level BPE over {} KiB", bytes / 1024));
+    let ids = tok.encode(&text);
+    let re = common::time_it("encode (native)", 3, reps, || {
+        std::hint::black_box(tok.encode(&text));
+    });
+    common::print_result(&re);
+    println!(
+        "{:<44} {:>10.2} MiB/s | {:.2} chars/token",
+        "",
+        bytes as f64 / (re.mean_ms / 1e3) / (1 << 20) as f64,
+        text.len() as f64 / ids.len() as f64
+    );
+
+    let rd = common::time_it("decode (native)", 3, reps, || {
+        std::hint::black_box(tok.decode(&ids));
+    });
+    common::print_result(&rd);
+
+    // WASM slowdown model: same work charged with the browser env.
+    let env = BrowserEnv::new(BrowserConfig::default());
+    let rw = common::time_it("encode (browser/WASM model)", 3, reps, || {
+        std::hint::black_box(env.cpu_stage(|| tok.encode(&text)));
+    });
+    common::print_result(&rw);
+    println!(
+        "modeled WASM factor: {:.2}x (configured {:.2}x)",
+        rw.mean_ms / re.mean_ms,
+        BrowserConfig::default().wasm_slowdown
+    );
+
+    // Streaming detokenizer (per-token path in the engine hot loop).
+    let rs = common::time_it("streaming detokenize (per stream)", 3, reps, || {
+        let mut d = StreamDecoder::new();
+        let mut out = String::new();
+        for &id in &ids {
+            out.push_str(&d.push(tok.token_bytes(id)));
+        }
+        out.push_str(&d.finish());
+        std::hint::black_box(out);
+    });
+    common::print_result(&rs);
+    println!(
+        "{:<44} {:>10.2} ns/token",
+        "",
+        rs.mean_ms * 1e6 / ids.len() as f64
+    );
+}

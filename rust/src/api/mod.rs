@@ -1,0 +1,72 @@
+//! OpenAI-style API types (the paper's §2.1 contract).
+//!
+//! JSON-in-JSON-out: every type (de)serializes through `crate::json` and
+//! is exactly what crosses the worker message boundary and the HTTP
+//! endpoint. Field names and semantics follow the OpenAI chat-completions
+//! API, plus the WebLLM extensions (`response_format: grammar`, `top_k`,
+//! `min_p`, `repetition_penalty`).
+
+mod request;
+mod response;
+
+pub use request::{ChatCompletionRequest, ResponseFormat};
+pub use response::{ChatChunk, ChatCompletionResponse, Choice, FinishReason, LogprobEntry, Usage};
+
+use crate::json::Value;
+
+/// API-level error with an HTTP-ish status code, serialized OpenAI-style:
+/// `{"error": {"message": ..., "type": ..., "code": ...}}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    pub status: u16,
+    pub kind: String,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn invalid(message: impl Into<String>) -> Self {
+        Self { status: 400, kind: "invalid_request_error".into(), message: message.into() }
+    }
+
+    pub fn not_found(message: impl Into<String>) -> Self {
+        Self { status: 404, kind: "not_found_error".into(), message: message.into() }
+    }
+
+    pub fn overloaded(message: impl Into<String>) -> Self {
+        Self { status: 429, kind: "overloaded_error".into(), message: message.into() }
+    }
+
+    pub fn internal(message: impl Into<String>) -> Self {
+        Self { status: 500, kind: "internal_error".into(), message: message.into() }
+    }
+
+    pub fn to_json(&self) -> Value {
+        crate::obj! {
+            "error" => crate::obj! {
+                "message" => self.message.clone(),
+                "type" => self.kind.clone(),
+                "code" => self.status as i64,
+            }
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Option<Self> {
+        let e = v.get("error")?;
+        Some(Self {
+            status: e.get("code")?.as_u64()? as u16,
+            kind: e.get("type")?.as_str()?.to_string(),
+            message: e.get("message")?.as_str()?.to_string(),
+        })
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} ({}): {}", self.kind, self.status, self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,273 @@
+//! Chat-completion request parsing + validation.
+
+use super::ApiError;
+use crate::json::Value;
+use crate::sampler::SamplingParams;
+use crate::tokenizer::{ChatMessage, Role};
+use std::collections::HashMap;
+
+/// `response_format` — structured generation controls (WebLLM supports
+/// JSON mode, JSON Schema, and raw EBNF grammars via XGrammar).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ResponseFormat {
+    Text,
+    /// Any syntactically valid JSON value.
+    JsonObject,
+    /// JSON constrained by a schema.
+    JsonSchema(Value),
+    /// GBNF-style grammar text.
+    Grammar(String),
+}
+
+#[derive(Clone, Debug)]
+pub struct ChatCompletionRequest {
+    pub model: String,
+    pub messages: Vec<ChatMessage>,
+    pub max_tokens: usize,
+    pub stream: bool,
+    pub stop: Vec<String>,
+    pub sampling: SamplingParams,
+    pub response_format: ResponseFormat,
+}
+
+impl ChatCompletionRequest {
+    pub fn new(model: impl Into<String>) -> Self {
+        Self {
+            model: model.into(),
+            messages: Vec::new(),
+            max_tokens: 128,
+            stream: false,
+            stop: Vec::new(),
+            sampling: SamplingParams::default(),
+            response_format: ResponseFormat::Text,
+        }
+    }
+
+    pub fn message(mut self, role: Role, content: impl Into<String>) -> Self {
+        self.messages.push(ChatMessage::new(role, content));
+        self
+    }
+
+    pub fn system(self, content: impl Into<String>) -> Self {
+        self.message(Role::System, content)
+    }
+
+    pub fn user(self, content: impl Into<String>) -> Self {
+        self.message(Role::User, content)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self, ApiError> {
+        let model = v
+            .get("model")
+            .and_then(Value::as_str)
+            .ok_or_else(|| ApiError::invalid("'model' is required"))?
+            .to_string();
+        let messages_v = v
+            .get("messages")
+            .and_then(Value::as_array)
+            .ok_or_else(|| ApiError::invalid("'messages' is required"))?;
+        if messages_v.is_empty() {
+            return Err(ApiError::invalid("'messages' must be non-empty"));
+        }
+        let mut messages = Vec::with_capacity(messages_v.len());
+        for m in messages_v {
+            let role_s = m
+                .get("role")
+                .and_then(Value::as_str)
+                .ok_or_else(|| ApiError::invalid("message missing 'role'"))?;
+            let role = Role::from_str(role_s)
+                .ok_or_else(|| ApiError::invalid(format!("unsupported role '{role_s}'")))?;
+            let content = m
+                .get("content")
+                .and_then(Value::as_str)
+                .ok_or_else(|| ApiError::invalid("message missing 'content'"))?;
+            messages.push(ChatMessage::new(role, content));
+        }
+
+        let f = |k: &str, d: f32| -> Result<f32, ApiError> {
+            match v.get(k) {
+                None | Some(Value::Null) => Ok(d),
+                Some(x) => x
+                    .as_f64()
+                    .map(|x| x as f32)
+                    .ok_or_else(|| ApiError::invalid(format!("'{k}' must be a number"))),
+            }
+        };
+
+        let mut logit_bias = HashMap::new();
+        if let Some(lb) = v.get("logit_bias").and_then(Value::as_object) {
+            for (k, bias) in lb.iter() {
+                let tok: u32 = k
+                    .parse()
+                    .map_err(|_| ApiError::invalid(format!("logit_bias key '{k}' not a token id")))?;
+                let b = bias
+                    .as_f64()
+                    .ok_or_else(|| ApiError::invalid("logit_bias values must be numbers"))?;
+                logit_bias.insert(tok, b as f32);
+            }
+        }
+
+        let logprobs = v.get("logprobs").and_then(Value::as_bool).unwrap_or(false);
+        let top_logprobs = v.get("top_logprobs").and_then(Value::as_usize).unwrap_or(0);
+        if top_logprobs > 0 && !logprobs {
+            return Err(ApiError::invalid("'top_logprobs' requires 'logprobs': true"));
+        }
+        let sampling = SamplingParams {
+            temperature: f("temperature", 1.0)?,
+            top_p: f("top_p", 1.0)?,
+            top_k: v.get("top_k").and_then(Value::as_usize).unwrap_or(0),
+            min_p: f("min_p", 0.0)?,
+            repetition_penalty: f("repetition_penalty", 1.0)?,
+            presence_penalty: f("presence_penalty", 0.0)?,
+            frequency_penalty: f("frequency_penalty", 0.0)?,
+            logit_bias,
+            seed: v.get("seed").and_then(Value::as_u64),
+            logprobs,
+            top_logprobs,
+        };
+        sampling.validate().map_err(ApiError::invalid)?;
+
+        let stop = match v.get("stop") {
+            None | Some(Value::Null) => Vec::new(),
+            Some(Value::String(s)) => vec![s.clone()],
+            Some(Value::Array(a)) => a
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| ApiError::invalid("'stop' entries must be strings"))
+                })
+                .collect::<Result<_, _>>()?,
+            _ => return Err(ApiError::invalid("'stop' must be a string or array")),
+        };
+        if stop.len() > 4 {
+            return Err(ApiError::invalid("at most 4 stop sequences"));
+        }
+
+        let response_format = match v.get("response_format") {
+            None | Some(Value::Null) => ResponseFormat::Text,
+            Some(rf) => {
+                let ty = rf
+                    .get("type")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| ApiError::invalid("response_format missing 'type'"))?;
+                match ty {
+                    "text" => ResponseFormat::Text,
+                    "json_object" => ResponseFormat::JsonObject,
+                    "json_schema" => {
+                        let schema = rf
+                            .get("json_schema")
+                            .and_then(|s| s.get("schema"))
+                            .or_else(|| rf.get("schema"))
+                            .ok_or_else(|| ApiError::invalid("json_schema needs a 'schema'"))?;
+                        ResponseFormat::JsonSchema(schema.clone())
+                    }
+                    "grammar" => {
+                        let g = rf
+                            .get("grammar")
+                            .and_then(Value::as_str)
+                            .ok_or_else(|| ApiError::invalid("grammar format needs 'grammar'"))?;
+                        ResponseFormat::Grammar(g.to_string())
+                    }
+                    other => {
+                        return Err(ApiError::invalid(format!(
+                            "unsupported response_format type '{other}'"
+                        )))
+                    }
+                }
+            }
+        };
+
+        let max_tokens = match v.get("max_tokens") {
+            None | Some(Value::Null) => 128,
+            Some(x) => {
+                let n = x.as_usize().ok_or_else(|| ApiError::invalid("'max_tokens' must be a positive integer"))?;
+                if n == 0 {
+                    return Err(ApiError::invalid("'max_tokens' must be >= 1"));
+                }
+                n
+            }
+        };
+
+        Ok(Self {
+            model,
+            messages,
+            max_tokens,
+            stream: v.get("stream").and_then(Value::as_bool).unwrap_or(false),
+            stop,
+            sampling,
+            response_format,
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut msgs = Vec::new();
+        for m in &self.messages {
+            msgs.push(crate::obj! {
+                "role" => m.role.as_str(),
+                "content" => m.content.clone(),
+            });
+        }
+        let mut v = crate::obj! {
+            "model" => self.model.clone(),
+            "messages" => Value::Array(msgs),
+            "max_tokens" => self.max_tokens,
+            "stream" => self.stream,
+            "temperature" => self.sampling.temperature as f64,
+            "top_p" => self.sampling.top_p as f64,
+        };
+        if self.sampling.top_k > 0 {
+            v.set("top_k", self.sampling.top_k);
+        }
+        if self.sampling.min_p > 0.0 {
+            v.set("min_p", self.sampling.min_p as f64);
+        }
+        if self.sampling.repetition_penalty != 1.0 {
+            v.set("repetition_penalty", self.sampling.repetition_penalty as f64);
+        }
+        if self.sampling.presence_penalty != 0.0 {
+            v.set("presence_penalty", self.sampling.presence_penalty as f64);
+        }
+        if self.sampling.frequency_penalty != 0.0 {
+            v.set("frequency_penalty", self.sampling.frequency_penalty as f64);
+        }
+        if let Some(seed) = self.sampling.seed {
+            v.set("seed", seed as i64);
+        }
+        if self.sampling.logprobs {
+            v.set("logprobs", true);
+            if self.sampling.top_logprobs > 0 {
+                v.set("top_logprobs", self.sampling.top_logprobs);
+            }
+        }
+        if !self.sampling.logit_bias.is_empty() {
+            let mut lb = crate::json::Map::new();
+            for (&t, &b) in &self.sampling.logit_bias {
+                lb.insert(t.to_string(), b as f64);
+            }
+            v.set("logit_bias", lb);
+        }
+        if !self.stop.is_empty() {
+            v.set("stop", self.stop.clone());
+        }
+        match &self.response_format {
+            ResponseFormat::Text => {}
+            ResponseFormat::JsonObject => {
+                v.set("response_format", crate::obj! {"type" => "json_object"});
+            }
+            ResponseFormat::JsonSchema(s) => {
+                v.set(
+                    "response_format",
+                    crate::obj! {"type" => "json_schema", "schema" => s.clone()},
+                );
+            }
+            ResponseFormat::Grammar(g) => {
+                v.set(
+                    "response_format",
+                    crate::obj! {"type" => "grammar", "grammar" => g.clone()},
+                );
+            }
+        }
+        v
+    }
+}

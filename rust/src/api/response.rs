@@ -1,0 +1,252 @@
+//! Chat-completion responses, streaming chunks, usage accounting.
+
+use crate::json::Value;
+
+/// Per-token logprob entry in a choice (OpenAI `logprobs.content[i]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogprobEntry {
+    pub token: String,
+    pub logprob: f64,
+    pub top: Vec<(String, f64)>,
+}
+
+impl LogprobEntry {
+    fn to_json(&self) -> Value {
+        let top: Vec<Value> = self
+            .top
+            .iter()
+            .map(|(t, lp)| crate::obj! {"token" => t.clone(), "logprob" => *lp})
+            .collect();
+        crate::obj! {
+            "token" => self.token.clone(),
+            "logprob" => self.logprob,
+            "top_logprobs" => Value::Array(top),
+        }
+    }
+
+    fn from_json(v: &Value) -> Option<Self> {
+        Some(Self {
+            token: v.get("token")?.as_str()?.to_string(),
+            logprob: v.get("logprob")?.as_f64()?,
+            top: v
+                .get("top_logprobs")?
+                .as_array()?
+                .iter()
+                .filter_map(|t| {
+                    Some((t.get("token")?.as_str()?.to_string(), t.get("logprob")?.as_f64()?))
+                })
+                .collect(),
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Stop,
+    Length,
+    Abort,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Stop => "stop",
+            FinishReason::Length => "length",
+            FinishReason::Abort => "abort",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "stop" => Some(FinishReason::Stop),
+            "length" => Some(FinishReason::Length),
+            "abort" => Some(FinishReason::Abort),
+            _ => None,
+        }
+    }
+}
+
+/// Token + timing accounting; the `extra` fields mirror WebLLM's
+/// `CompletionUsage.extra` (prefill/decode tokens-per-second).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Usage {
+    pub prompt_tokens: usize,
+    pub completion_tokens: usize,
+    pub prefill_tokens_per_s: f64,
+    pub decode_tokens_per_s: f64,
+    /// Seconds from admission to first token (time-to-first-token).
+    pub ttft_s: f64,
+    /// End-to-end seconds.
+    pub e2e_s: f64,
+}
+
+impl Usage {
+    pub fn to_json(&self) -> Value {
+        crate::obj! {
+            "prompt_tokens" => self.prompt_tokens,
+            "completion_tokens" => self.completion_tokens,
+            "total_tokens" => self.prompt_tokens + self.completion_tokens,
+            "extra" => crate::obj! {
+                "prefill_tokens_per_s" => self.prefill_tokens_per_s,
+                "decode_tokens_per_s" => self.decode_tokens_per_s,
+                "ttft_s" => self.ttft_s,
+                "e2e_s" => self.e2e_s,
+            },
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Option<Self> {
+        let extra = v.get("extra");
+        let g = |k: &str| extra.and_then(|e| e.get(k)).and_then(Value::as_f64).unwrap_or(0.0);
+        Some(Self {
+            prompt_tokens: v.get("prompt_tokens")?.as_usize()?,
+            completion_tokens: v.get("completion_tokens")?.as_usize()?,
+            prefill_tokens_per_s: g("prefill_tokens_per_s"),
+            decode_tokens_per_s: g("decode_tokens_per_s"),
+            ttft_s: g("ttft_s"),
+            e2e_s: g("e2e_s"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Choice {
+    pub index: usize,
+    pub content: String,
+    pub finish_reason: FinishReason,
+    /// Present when the request set `logprobs: true`.
+    pub logprobs: Option<Vec<LogprobEntry>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ChatCompletionResponse {
+    pub id: String,
+    pub model: String,
+    pub created: u64,
+    pub choices: Vec<Choice>,
+    pub usage: Usage,
+}
+
+impl ChatCompletionResponse {
+    pub fn text(&self) -> &str {
+        self.choices.first().map(|c| c.content.as_str()).unwrap_or("")
+    }
+
+    pub fn to_json(&self) -> Value {
+        let choices: Vec<Value> = self
+            .choices
+            .iter()
+            .map(|c| {
+                let mut v = crate::obj! {
+                    "index" => c.index,
+                    "message" => crate::obj! {
+                        "role" => "assistant",
+                        "content" => c.content.clone(),
+                    },
+                    "finish_reason" => c.finish_reason.as_str(),
+                };
+                if let Some(lps) = &c.logprobs {
+                    let content: Vec<Value> = lps.iter().map(LogprobEntry::to_json).collect();
+                    v.set("logprobs", crate::obj! {"content" => Value::Array(content)});
+                }
+                v
+            })
+            .collect();
+        crate::obj! {
+            "id" => self.id.clone(),
+            "object" => "chat.completion",
+            "created" => self.created as i64,
+            "model" => self.model.clone(),
+            "choices" => Value::Array(choices),
+            "usage" => self.usage.to_json(),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Option<Self> {
+        let choices = v
+            .get("choices")?
+            .as_array()?
+            .iter()
+            .map(|c| {
+                let logprobs = c
+                    .get("logprobs")
+                    .and_then(|l| l.get("content"))
+                    .and_then(Value::as_array)
+                    .map(|a| a.iter().filter_map(LogprobEntry::from_json).collect());
+                Some(Choice {
+                    index: c.get("index")?.as_usize()?,
+                    content: c.get("message")?.get("content")?.as_str()?.to_string(),
+                    finish_reason: FinishReason::from_str(
+                        c.get("finish_reason")?.as_str()?,
+                    )?,
+                    logprobs,
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(Self {
+            id: v.get("id")?.as_str()?.to_string(),
+            model: v.get("model")?.as_str()?.to_string(),
+            created: v.get("created")?.as_u64()?,
+            choices,
+            usage: Usage::from_json(v.get("usage")?)?,
+        })
+    }
+}
+
+/// One streaming delta (`object: chat.completion.chunk`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChatChunk {
+    pub id: String,
+    pub model: String,
+    pub delta: String,
+    /// Set on the final chunk.
+    pub finish_reason: Option<FinishReason>,
+    /// Usage rides on the final chunk (stream_options include_usage style).
+    pub usage: Option<Usage>,
+}
+
+impl ChatChunk {
+    pub fn to_json(&self) -> Value {
+        let mut delta = Value::object();
+        if !self.delta.is_empty() {
+            delta.set("content", self.delta.clone());
+        }
+        let choice = crate::obj! {
+            "index" => 0,
+            "delta" => delta,
+            "finish_reason" => match self.finish_reason {
+                Some(fr) => Value::from(fr.as_str()),
+                None => Value::Null,
+            },
+        };
+        let mut v = crate::obj! {
+            "id" => self.id.clone(),
+            "object" => "chat.completion.chunk",
+            "model" => self.model.clone(),
+            "choices" => Value::Array(vec![choice]),
+        };
+        if let Some(u) = &self.usage {
+            v.set("usage", u.to_json());
+        }
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Option<Self> {
+        let c0 = v.get("choices")?.at(0)?;
+        Some(Self {
+            id: v.get("id")?.as_str()?.to_string(),
+            model: v.get("model")?.as_str()?.to_string(),
+            delta: c0
+                .get("delta")
+                .and_then(|d| d.get("content"))
+                .and_then(Value::as_str)
+                .unwrap_or("")
+                .to_string(),
+            finish_reason: c0
+                .get("finish_reason")
+                .and_then(Value::as_str)
+                .and_then(FinishReason::from_str),
+            usage: v.get("usage").and_then(Usage::from_json),
+        })
+    }
+}

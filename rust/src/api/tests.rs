@@ -1,0 +1,162 @@
+use super::*;
+use crate::json::{parse, to_string, Value};
+use crate::tokenizer::Role;
+
+#[test]
+fn request_roundtrip_through_wire_format() {
+    let req = ChatCompletionRequest::new("tiny-2m")
+        .system("be terse")
+        .user("hello");
+    let mut req = req;
+    req.max_tokens = 32;
+    req.stream = true;
+    req.stop = vec!["\n\n".into()];
+    req.sampling.temperature = 0.5;
+    req.sampling.seed = Some(7);
+    req.response_format = ResponseFormat::JsonObject;
+
+    let wire = to_string(&req.to_json());
+    let back = ChatCompletionRequest::from_json(&parse(&wire).unwrap()).unwrap();
+    assert_eq!(back.model, "tiny-2m");
+    assert_eq!(back.messages.len(), 2);
+    assert_eq!(back.messages[0].role, Role::System);
+    assert_eq!(back.max_tokens, 32);
+    assert!(back.stream);
+    assert_eq!(back.stop, vec!["\n\n".to_string()]);
+    assert_eq!(back.sampling.temperature, 0.5);
+    assert_eq!(back.sampling.seed, Some(7));
+    assert_eq!(back.response_format, ResponseFormat::JsonObject);
+}
+
+#[test]
+fn request_validation_errors() {
+    for (body, needle) in [
+        (r#"{}"#, "model"),
+        (r#"{"model":"m"}"#, "messages"),
+        (r#"{"model":"m","messages":[]}"#, "non-empty"),
+        (r#"{"model":"m","messages":[{"role":"wizard","content":"x"}]}"#, "role"),
+        (r#"{"model":"m","messages":[{"role":"user"}]}"#, "content"),
+        (r#"{"model":"m","messages":[{"role":"user","content":"x"}],"temperature":9}"#, "temperature"),
+        (r#"{"model":"m","messages":[{"role":"user","content":"x"}],"max_tokens":0}"#, "max_tokens"),
+        (r#"{"model":"m","messages":[{"role":"user","content":"x"}],"stop":["a","b","c","d","e"]}"#, "stop"),
+        (r#"{"model":"m","messages":[{"role":"user","content":"x"}],"logit_bias":{"abc":1}}"#, "logit_bias"),
+        (r#"{"model":"m","messages":[{"role":"user","content":"x"}],"response_format":{"type":"yaml"}}"#, "response_format"),
+    ] {
+        let err = ChatCompletionRequest::from_json(&parse(body).unwrap()).unwrap_err();
+        assert_eq!(err.status, 400, "{body}");
+        assert!(err.message.contains(needle), "{body}: {err}");
+    }
+}
+
+#[test]
+fn request_json_schema_format() {
+    let body = r#"{
+        "model": "m",
+        "messages": [{"role": "user", "content": "x"}],
+        "response_format": {
+            "type": "json_schema",
+            "json_schema": {"name": "out", "schema": {"type": "object"}}
+        }
+    }"#;
+    let req = ChatCompletionRequest::from_json(&parse(body).unwrap()).unwrap();
+    match req.response_format {
+        ResponseFormat::JsonSchema(s) => {
+            assert_eq!(s.get("type").unwrap().as_str(), Some("object"));
+        }
+        other => panic!("wrong format {other:?}"),
+    }
+}
+
+#[test]
+fn response_roundtrip() {
+    let resp = ChatCompletionResponse {
+        id: "chatcmpl-1".into(),
+        model: "tiny-2m".into(),
+        created: 1736500000,
+        choices: vec![Choice {
+            index: 0,
+            content: "hi there".into(),
+            finish_reason: FinishReason::Stop,
+            logprobs: Some(vec![LogprobEntry {
+                token: "hi".into(),
+                logprob: -0.25,
+                top: vec![("hi".into(), -0.25), ("yo".into(), -1.5)],
+            }]),
+        }],
+        usage: Usage {
+            prompt_tokens: 12,
+            completion_tokens: 3,
+            prefill_tokens_per_s: 100.0,
+            decode_tokens_per_s: 40.0,
+            ttft_s: 0.2,
+            e2e_s: 0.3,
+        },
+    };
+    let wire = to_string(&resp.to_json());
+    let v = parse(&wire).unwrap();
+    assert_eq!(v.get("object").unwrap().as_str(), Some("chat.completion"));
+    assert_eq!(
+        v.get("usage").unwrap().get("total_tokens").unwrap().as_usize(),
+        Some(15)
+    );
+    let back = ChatCompletionResponse::from_json(&v).unwrap();
+    assert_eq!(back.text(), "hi there");
+    assert_eq!(back.usage.completion_tokens, 3);
+    assert!((back.usage.decode_tokens_per_s - 40.0).abs() < 1e-9);
+    let lps = back.choices[0].logprobs.as_ref().unwrap();
+    assert_eq!(lps.len(), 1);
+    assert_eq!(lps[0].token, "hi");
+    assert_eq!(lps[0].top.len(), 2);
+}
+
+#[test]
+fn chunk_roundtrip_and_final_chunk() {
+    let mid = ChatChunk {
+        id: "c1".into(),
+        model: "m".into(),
+        delta: "tok".into(),
+        finish_reason: None,
+        usage: None,
+    };
+    let v = mid.to_json();
+    assert_eq!(v.get("object").unwrap().as_str(), Some("chat.completion.chunk"));
+    assert_eq!(ChatChunk::from_json(&v).unwrap(), mid);
+
+    let last = ChatChunk {
+        id: "c1".into(),
+        model: "m".into(),
+        delta: "".into(),
+        finish_reason: Some(FinishReason::Length),
+        usage: Some(Usage { prompt_tokens: 1, completion_tokens: 2, ..Default::default() }),
+    };
+    let back = ChatChunk::from_json(&last.to_json()).unwrap();
+    assert_eq!(back.finish_reason, Some(FinishReason::Length));
+    assert_eq!(back.usage.as_ref().unwrap().completion_tokens, 2);
+}
+
+#[test]
+fn logprobs_roundtrip_and_request_validation() {
+    // request parse
+    let body = r#"{"model":"m","messages":[{"role":"user","content":"x"}],
+                   "logprobs":true,"top_logprobs":3}"#;
+    let req = ChatCompletionRequest::from_json(&parse(body).unwrap()).unwrap();
+    assert!(req.sampling.logprobs);
+    assert_eq!(req.sampling.top_logprobs, 3);
+    // top_logprobs without logprobs -> 400
+    let bad = r#"{"model":"m","messages":[{"role":"user","content":"x"}],"top_logprobs":3}"#;
+    assert!(ChatCompletionRequest::from_json(&parse(bad).unwrap()).is_err());
+    // out-of-range
+    let bad = r#"{"model":"m","messages":[{"role":"user","content":"x"}],
+                  "logprobs":true,"top_logprobs":99}"#;
+    assert!(ChatCompletionRequest::from_json(&parse(bad).unwrap()).is_err());
+}
+
+#[test]
+fn api_error_shape() {
+    let e = ApiError::invalid("bad thing");
+    let v = e.to_json();
+    assert_eq!(v.get("error").unwrap().get("code").unwrap().as_u64(), Some(400));
+    let back = ApiError::from_json(&v).unwrap();
+    assert_eq!(back, e);
+    assert_eq!(ApiError::from_json(&Value::Null), None);
+}

@@ -1,0 +1,169 @@
+//! Browser-environment cost model.
+//!
+//! The physical testbed has no browser, WebGPU, or WASM sandbox, so the
+//! *costs* the paper's in-browser deployment pays relative to native
+//! MLC-LLM are modeled explicitly (DESIGN.md §5, substitution 1):
+//!
+//! 1. **Worker message boundary** — real: requests/responses cross a
+//!    channel as serialized JSON (`coordinator::messages`). Nothing to
+//!    model; the serialization and thread hop actually happen.
+//! 2. **WebGPU execution overhead** — two real mechanisms:
+//!    (a) per-dispatch cost: every kernel launch goes through the WebGPU
+//!    command encoder + Dawn/wgpu validation before reaching Metal
+//!    (`dispatch_overhead_us` x the per-step dispatch count estimated
+//!    from the model structure, `runtime::exec::dispatch_estimate`);
+//!    (b) a bandwidth tax: WebGPU mandates bounds-checked ("robust")
+//!    storage-buffer access, taxing every byte of weight traffic —
+//!    decode is weight-bandwidth-bound, so this is the dominant term
+//!    (`bandwidth_tax_us_per_mb` x weight MB touched per step). The tax
+//!    is what makes the *bigger* (more bandwidth-bound) model retain
+//!    less in browser mode, reproducing Table 1's ordering from a real
+//!    mechanism rather than a fitted curve; the magnitude is calibrated
+//!    to the scaled testbed in EXPERIMENTS.md §Calibration.
+//! 3. **WASM CPU slowdown** — CPU-side subsystems (tokenizer, grammar,
+//!    detokenizer) run ~1.5-2.5x slower compiled to WASM (Haas et al.
+//!    2017, Jangda et al. 2019). Modeled as a busy-wait proportional to
+//!    the *measured* duration of each CPU stage (`charge_cpu`).
+//!
+//! Native mode = no `BrowserEnv` at all; Table 1's "Perf. Retained" is
+//! browser-mode tok/s over native tok/s.
+
+use std::cell::Cell;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BrowserConfig {
+    /// Per-dispatch WebGPU submit/validation overhead, microseconds.
+    /// Default calibrated in EXPERIMENTS.md §Calibration.
+    pub dispatch_overhead_us: f64,
+    /// Bounds-checked ("robust access") storage-buffer tax on weight
+    /// traffic, microseconds per MiB touched per step.
+    pub bandwidth_tax_us_per_mb: f64,
+    /// WASM slowdown multiplier applied to CPU-stage durations (the model
+    /// charges (factor - 1) x measured native duration).
+    pub wasm_slowdown: f64,
+}
+
+impl Default for BrowserConfig {
+    fn default() -> Self {
+        Self {
+            // See EXPERIMENTS.md §Calibration for how these were picked.
+            dispatch_overhead_us: 8.0,
+            bandwidth_tax_us_per_mb: 1000.0,
+            wasm_slowdown: 1.8,
+        }
+    }
+}
+
+/// Browser-mode overhead injector. Cloneable handle; accounting is
+/// per-instance (one per engine).
+pub struct BrowserEnv {
+    cfg: BrowserConfig,
+    injected_us: Cell<f64>,
+    dispatches: Cell<u64>,
+}
+
+impl BrowserEnv {
+    pub fn new(cfg: BrowserConfig) -> Self {
+        Self { cfg, injected_us: Cell::new(0.0), dispatches: Cell::new(0) }
+    }
+
+    pub fn config(&self) -> &BrowserConfig {
+        &self.cfg
+    }
+
+    /// Charge one engine step's kernel dispatches plus the robust-access
+    /// bandwidth tax on the step's weight traffic.
+    pub fn charge_dispatches(&self, base_dispatches: usize, weight_bytes: usize) {
+        self.dispatches.set(self.dispatches.get() + base_dispatches as u64);
+        let mb = weight_bytes as f64 / (1 << 20) as f64;
+        self.busy_wait_us(
+            base_dispatches as f64 * self.cfg.dispatch_overhead_us
+                + mb * self.cfg.bandwidth_tax_us_per_mb,
+        );
+    }
+
+    /// Charge a CPU-side stage (tokenize/grammar/detokenize) that took
+    /// `native` wall time: inject the extra time WASM would have cost.
+    pub fn charge_cpu(&self, native: Duration) {
+        let extra_us = native.as_secs_f64() * 1e6 * (self.cfg.wasm_slowdown - 1.0);
+        self.busy_wait_us(extra_us);
+    }
+
+    /// Run `f`, then charge its WASM slowdown. Returns f's output.
+    pub fn cpu_stage<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.charge_cpu(t0.elapsed());
+        out
+    }
+
+    /// Total overhead injected so far (microseconds) — reported by the
+    /// benches to show where browser-mode time goes.
+    pub fn injected_us(&self) -> f64 {
+        self.injected_us.get()
+    }
+
+    pub fn dispatch_count(&self) -> u64 {
+        self.dispatches.get()
+    }
+
+    fn busy_wait_us(&self, us: f64) {
+        self.injected_us.set(self.injected_us.get() + us);
+        let until = Instant::now() + Duration::from_nanos((us * 1e3) as u64);
+        // Busy-wait rather than sleep: models synchronous validation work
+        // on the submitting thread (and keeps sub-ms precision).
+        while Instant::now() < until {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_charging_accumulates() {
+        let env = BrowserEnv::new(BrowserConfig {
+            dispatch_overhead_us: 10.0,
+            bandwidth_tax_us_per_mb: 5.0,
+            wasm_slowdown: 2.0,
+        });
+        let t0 = Instant::now();
+        env.charge_dispatches(10, 3 << 20); // 100us dispatch + 15us tax
+        let elapsed = t0.elapsed();
+        assert_eq!(env.dispatch_count(), 10);
+        assert!((env.injected_us() - 115.0).abs() < 1e-9);
+        assert!(elapsed >= Duration::from_micros(110), "{elapsed:?}");
+    }
+
+    #[test]
+    fn cpu_stage_charges_slowdown() {
+        let env = BrowserEnv::new(BrowserConfig {
+            dispatch_overhead_us: 0.0,
+            bandwidth_tax_us_per_mb: 0.0,
+            wasm_slowdown: 3.0,
+        });
+        let t0 = Instant::now();
+        let out = env.cpu_stage(|| {
+            let until = Instant::now() + Duration::from_millis(2);
+            while Instant::now() < until {}
+            42
+        });
+        assert_eq!(out, 42);
+        // 2ms native + ~4ms injected
+        assert!(t0.elapsed() >= Duration::from_micros(5500), "{:?}", t0.elapsed());
+        assert!(env.injected_us() >= 3900.0);
+    }
+
+    #[test]
+    fn bigger_weights_pay_more_tax() {
+        let env = BrowserEnv::new(BrowserConfig::default());
+        env.charge_dispatches(100, 40 << 20);
+        let big = env.injected_us();
+        let env2 = BrowserEnv::new(BrowserConfig::default());
+        env2.charge_dispatches(100, 18 << 20);
+        assert!(big > env2.injected_us());
+    }
+}

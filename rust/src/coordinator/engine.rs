@@ -1,0 +1,726 @@
+//! `MLCEngine` — the worker-side backend engine.
+//!
+//! Synchronous, single-threaded core (the runtime's PJRT handles are not
+//! `Send`): callers `submit()` requests and drive `step()`; completed
+//! work surfaces through `poll_events()`. The worker harness turns this
+//! into the paper's message-driven engine; benches and "native mode"
+//! drive it directly, which is exactly the MLC-LLM baseline shape.
+//!
+//! Scheduling policy (vLLM-style continuous batching under TVM's static-
+//! shape regime): prefill-prioritized admission — at most one prefill per
+//! step, then batched decode over all running sequences, rounded up to
+//! the nearest compiled batch size with garbage-page padding slots.
+
+use crate::api::{
+    ApiError, ChatChunk, ChatCompletionRequest, ChatCompletionResponse, Choice, FinishReason,
+    LogprobEntry, ResponseFormat, Usage,
+};
+use crate::browser::{BrowserConfig, BrowserEnv};
+use crate::grammar::{parse_ebnf, schema_to_grammar, Grammar, GrammarMatcher, MaskCache, VocabTrie};
+use crate::json::Value;
+use crate::kvcache::KvCacheManager;
+use crate::metrics::EngineStats;
+use crate::models::Manifest;
+use crate::runtime::{thread_client, ModelRuntime, RuntimeError};
+use crate::sampler::LogitsProcessor;
+use crate::tokenizer::{render_chat, StreamDecoder, Tokenizer};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// Engine construction options.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub artifacts_dir: PathBuf,
+    /// Models to load at startup (multi-model engines are first-class,
+    /// §2.1 "loading multiple models in the same engine").
+    pub models: Vec<String>,
+    /// `Some` => browser mode (inject WebGPU/WASM overheads).
+    pub browser: Option<BrowserConfig>,
+    pub enable_prefix_cache: bool,
+}
+
+impl EngineConfig {
+    pub fn native(models: &[&str]) -> Self {
+        Self {
+            artifacts_dir: crate::artifacts_dir(),
+            models: models.iter().map(|s| s.to_string()).collect(),
+            browser: None,
+            enable_prefix_cache: true,
+        }
+    }
+
+    pub fn browser(models: &[&str]) -> Self {
+        Self { browser: Some(BrowserConfig::default()), ..Self::native(models) }
+    }
+}
+
+/// Completion events drained via `poll_events`.
+#[derive(Debug)]
+pub enum EngineEvent {
+    Chunk(RequestId, ChatChunk),
+    Done(RequestId, ChatCompletionResponse),
+    Error(RequestId, ApiError),
+}
+
+struct RunningSeq {
+    req_id: RequestId,
+    seq_id: u64,
+    model: String,
+    processor: LogitsProcessor,
+    matcher: Option<GrammarMatcher>,
+    mask_cache: Option<Rc<RefCell<MaskCache>>>,
+    prompt_tokens: usize,
+    max_tokens: usize,
+    stop: Vec<String>,
+    stream: bool,
+    decoder: StreamDecoder,
+    /// Full decoded text so far.
+    text: String,
+    /// Bytes of `text` already emitted as stream deltas.
+    emitted: usize,
+    completion_tokens: usize,
+    logprobs: Option<Vec<LogprobEntry>>,
+    t_admit: Instant,
+    t_prefilled: Option<Instant>,
+    finish: Option<FinishReason>,
+}
+
+struct PendingReq {
+    req_id: RequestId,
+    req: ChatCompletionRequest,
+    prompt_ids: Vec<u32>,
+    t_admit: Instant,
+}
+
+struct EngineModel {
+    runtime: ModelRuntime,
+    kv: KvCacheManager,
+    waiting: VecDeque<PendingReq>,
+    running: Vec<RunningSeq>,
+}
+
+/// The backend engine. See module docs.
+pub struct MLCEngine {
+    tokenizer: Rc<Tokenizer>,
+    trie: Rc<VocabTrie>,
+    models: BTreeMap<String, EngineModel>,
+    env: Option<Rc<BrowserEnv>>,
+    /// Shared grammar mask caches keyed by grammar identity.
+    grammar_caches: HashMap<String, Rc<RefCell<MaskCache>>>,
+    events: VecDeque<EngineEvent>,
+    next_req: RequestId,
+    next_seq: u64,
+    nonce: u64,
+    stats: EngineStats,
+    eos_ids: Vec<u32>,
+}
+
+impl MLCEngine {
+    /// Load every configured model (compiles AOT artifacts; one-time cost,
+    /// the "model loading" phase of the paper's Figure 1).
+    pub fn new(cfg: &EngineConfig) -> Result<Self, ApiError> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)
+            .map_err(|e| ApiError::internal(format!("manifest: {e}")))?;
+        let tokenizer = Rc::new(
+            Tokenizer::from_file(&manifest.tokenizer_path)
+                .map_err(|e| ApiError::internal(format!("tokenizer: {e}")))?,
+        );
+        let trie = Rc::new(VocabTrie::build(tokenizer.vocab_size(), |i| {
+            tokenizer.token_bytes(i)
+        }));
+        let env = cfg.browser.clone().map(|b| Rc::new(BrowserEnv::new(b)));
+        let client = thread_client().map_err(|e| ApiError::internal(e.to_string()))?;
+
+        let mut models = BTreeMap::new();
+        for name in &cfg.models {
+            let runtime = ModelRuntime::load(
+                &client,
+                &manifest,
+                name,
+                env.as_ref().map(|e| BrowserEnv::new(e.config().clone())),
+            )
+            .map_err(|e| ApiError::internal(format!("load {name}: {e}")))?;
+            let mc = runtime.config().clone();
+            let kv = KvCacheManager::new(
+                mc.num_pages,
+                mc.page_size,
+                mc.max_pages_per_seq(),
+                cfg.enable_prefix_cache,
+            );
+            models.insert(
+                name.clone(),
+                EngineModel { runtime, kv, waiting: VecDeque::new(), running: Vec::new() },
+            );
+        }
+        let eos_ids = ["<eos>", "<|end|>"]
+            .iter()
+            .filter_map(|s| tokenizer.special_id(s))
+            .collect();
+        Ok(Self {
+            tokenizer,
+            trie,
+            models,
+            env,
+            grammar_caches: HashMap::new(),
+            events: VecDeque::new(),
+            next_req: 1,
+            next_seq: 1,
+            nonce: 0x5eed,
+            stats: EngineStats::new(),
+            eos_ids,
+        })
+    }
+
+    pub fn tokenizer(&self) -> &Rc<Tokenizer> {
+        &self.tokenizer
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    pub fn loaded_models(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    pub fn browser_env(&self) -> Option<&Rc<BrowserEnv>> {
+        self.env.as_ref()
+    }
+
+    /// Queue a request. Errors here are synchronous (bad request / unknown
+    /// model / prompt too long); execution errors surface as events.
+    pub fn submit(&mut self, req: ChatCompletionRequest) -> Result<RequestId, ApiError> {
+        req.sampling.validate().map_err(ApiError::invalid)?;
+        let model = self
+            .models
+            .get(&req.model)
+            .ok_or_else(|| ApiError::not_found(format!("model '{}' not loaded", req.model)))?;
+        if req.messages.is_empty() {
+            return Err(ApiError::invalid("messages must be non-empty"));
+        }
+
+        // Tokenize the chat template (a WASM-side CPU stage in the paper).
+        let tokenizer = self.tokenizer.clone();
+        let messages = req.messages.clone();
+        let prompt_ids = match &self.env {
+            Some(env) => env.cpu_stage(|| render_chat(&tokenizer, &messages)),
+            None => render_chat(&tokenizer, &messages),
+        };
+
+        let mc = model.runtime.config();
+        if prompt_ids.len() > mc.max_prefill_chunk() {
+            return Err(ApiError::invalid(format!(
+                "prompt is {} tokens; max prefill chunk is {}",
+                prompt_ids.len(),
+                mc.max_prefill_chunk()
+            )));
+        }
+        if prompt_ids.len() + 1 >= mc.max_seq_len {
+            return Err(ApiError::invalid("prompt exceeds model context length"));
+        }
+        // Validate the grammar up front so errors are synchronous.
+        self.build_grammar(&req.response_format)?;
+
+        let req_id = self.next_req;
+        self.next_req += 1;
+        let pending = PendingReq { req_id, req, prompt_ids, t_admit: Instant::now() };
+        self.models
+            .get_mut(&pending.req.model)
+            .unwrap()
+            .waiting
+            .push_back(pending);
+        Ok(req_id)
+    }
+
+    /// Abort a queued or running request.
+    pub fn abort(&mut self, req_id: RequestId) {
+        for (_, m) in self.models.iter_mut() {
+            if let Some(idx) = m.waiting.iter().position(|p| p.req_id == req_id) {
+                m.waiting.remove(idx);
+                self.events.push_back(EngineEvent::Error(
+                    req_id,
+                    ApiError { status: 499, kind: "aborted".into(), message: "aborted".into() },
+                ));
+                return;
+            }
+            if let Some(seq) = m.running.iter_mut().find(|s| s.req_id == req_id) {
+                seq.finish = Some(FinishReason::Abort);
+                return;
+            }
+        }
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.models
+            .values()
+            .any(|m| !m.waiting.is_empty() || !m.running.is_empty())
+    }
+
+    pub fn poll_events(&mut self) -> Vec<EngineEvent> {
+        self.events.drain(..).collect()
+    }
+
+    /// Drive the engine until idle (convenience for sync callers).
+    pub fn run_to_completion(&mut self) -> Result<(), ApiError> {
+        while self.has_work() {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Submit + run + return the single response (the non-streaming
+    /// "endpoint" call; used by native-mode benches and tests).
+    pub fn chat_completion(
+        &mut self,
+        req: ChatCompletionRequest,
+    ) -> Result<ChatCompletionResponse, ApiError> {
+        let id = self.submit(req)?;
+        self.run_to_completion()?;
+        for ev in self.poll_events() {
+            match ev {
+                EngineEvent::Done(rid, resp) if rid == id => return Ok(resp),
+                EngineEvent::Error(rid, e) if rid == id => return Err(e),
+                _ => {}
+            }
+        }
+        Err(ApiError::internal("request produced no completion"))
+    }
+
+    /// One scheduler step: admit + prefill one request per model, else
+    /// run one batched decode per model.
+    pub fn step(&mut self) -> Result<(), ApiError> {
+        let names: Vec<String> = self.models.keys().cloned().collect();
+        for name in names {
+            self.step_model(&name)
+                .map_err(|e| ApiError::internal(format!("{name}: {e}")))?;
+        }
+        Ok(())
+    }
+
+    fn step_model(&mut self, name: &str) -> Result<(), RuntimeError> {
+        // Admission: prefill-prioritized, one per step (TTFT over
+        // throughput, the interactive-first policy WebLLM wants in a UI).
+        let admit = {
+            let m = self.models.get_mut(name).unwrap();
+            match m.waiting.front() {
+                Some(p)
+                    if m.kv.can_admit(p.prompt_ids.len())
+                        && m.running.len() < m.runtime.config().max_decode_batch() =>
+                {
+                    m.waiting.pop_front()
+                }
+                _ => None,
+            }
+        };
+        if let Some(pending) = admit {
+            self.prefill_one(name, pending)?;
+            return Ok(());
+        }
+        self.decode_batch(name)
+    }
+
+    fn prefill_one(&mut self, name: &str, p: PendingReq) -> Result<(), RuntimeError> {
+        let seq_id = self.next_seq;
+        self.next_seq += 1;
+        self.nonce = self.nonce.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let fallback_seed = self.nonce;
+
+        let matcher = self
+            .build_grammar(&p.req.response_format)
+            .expect("validated at submit");
+        let mask_cache = matcher
+            .as_ref()
+            .map(|_| self.grammar_cache_for(&p.req.response_format));
+
+        let (chunk, t_prefill, logits) = {
+            let m = self.models.get_mut(name).unwrap();
+            let mc = m.runtime.config().clone();
+            let n = p.prompt_ids.len();
+            let chunk = mc.pick_chunk(n).expect("validated at submit");
+            m.kv.admit(seq_id, &p.prompt_ids).map_err(|e| {
+                RuntimeError::Shape(format!("admission raced: {e}"))
+            })?;
+            let mut ids = vec![0i32; chunk];
+            for (i, &t) in p.prompt_ids.iter().enumerate() {
+                ids[i] = t as i32;
+            }
+            let bt = m.kv.block_table_row(seq_id);
+            let t0 = Instant::now();
+            let out = m.runtime.prefill(&ids, n, &bt)?;
+            (chunk, t0.elapsed().as_secs_f64(), out.logits)
+        };
+        let _ = chunk;
+        self.stats.prefill_tokens += p.prompt_ids.len() as u64;
+        self.stats.prefill_time_s += t_prefill;
+
+        let max_ctx = {
+            let m = &self.models[name];
+            m.runtime.config().max_seq_len - 1
+        };
+        let max_tokens = p.req.max_tokens.min(max_ctx.saturating_sub(p.prompt_ids.len()));
+
+        let mut processor = LogitsProcessor::new(p.req.sampling.clone(), fallback_seed);
+        for &t in &p.prompt_ids {
+            processor.observe(t);
+        }
+
+        let mut seq = RunningSeq {
+            req_id: p.req_id,
+            seq_id,
+            model: name.to_string(),
+            processor,
+            matcher,
+            mask_cache,
+            prompt_tokens: p.prompt_ids.len(),
+            max_tokens,
+            stop: p.req.stop.clone(),
+            stream: p.req.stream,
+            decoder: StreamDecoder::new(),
+            text: String::new(),
+            emitted: 0,
+            completion_tokens: 0,
+            logprobs: p.req.sampling.logprobs.then(Vec::new),
+            t_admit: p.t_admit,
+            t_prefilled: None,
+            finish: None,
+        };
+
+        // Sample the first generated token from the prefill logits.
+        let mut logits = logits;
+        self.consume_logits(&mut seq, &mut logits);
+        seq.t_prefilled = Some(Instant::now());
+        self.stats.ttft.push(seq.t_admit.elapsed().as_secs_f64());
+
+        let m = self.models.get_mut(name).unwrap();
+        if seq.finish.is_some() {
+            Self::finalize(&mut self.events, &mut self.stats, &mut m.kv, seq);
+        } else {
+            m.running.push(seq);
+        }
+        Ok(())
+    }
+
+    fn decode_batch(&mut self, name: &str) -> Result<(), RuntimeError> {
+        let (rows, batch, logits, t_decode) = {
+            let m = self.models.get_mut(name).unwrap();
+            if m.running.is_empty() {
+                return Ok(());
+            }
+            let mc = m.runtime.config().clone();
+            let live = m.running.len().min(mc.max_decode_batch());
+            let batch = mc.pick_batch(live).expect("live <= max batch");
+            let mp = mc.max_pages_per_seq();
+
+            let mut ids = vec![0i32; batch];
+            let mut positions = vec![0i32; batch];
+            let mut seq_lens = vec![0i32; batch];
+            let mut tables = vec![0i32; batch * mp];
+            for (row, seq) in m.running.iter().take(live).enumerate() {
+                let s = m.kv.get(seq.seq_id).expect("running seq has kv");
+                let len = s.len();
+                ids[row] = *s.tokens.last().unwrap() as i32;
+                positions[row] = (len - 1) as i32;
+                seq_lens[row] = len as i32;
+                tables[row * mp..row * mp + mp].copy_from_slice(&m.kv.block_table_row(seq.seq_id));
+            }
+            let t0 = Instant::now();
+            let out = m.runtime.decode(&ids, &positions, &seq_lens, &tables)?;
+            (live, batch, out.logits, t0.elapsed().as_secs_f64())
+        };
+        self.stats.decode_time_s += t_decode;
+
+        // Sample per live row; mutate sequences out-of-place to appease
+        // the borrow checker (running list is rebuilt below).
+        let vocab = self.tokenizer.vocab_size();
+        let mut running = std::mem::take(&mut self.models.get_mut(name).unwrap().running);
+        let mut logits = logits;
+        for (row, seq) in running.iter_mut().take(rows).enumerate() {
+            if seq.finish.is_some() {
+                continue; // aborted mid-flight
+            }
+            let row_logits = &mut logits[row * vocab..(row + 1) * vocab];
+            let mut tmp = row_logits.to_vec();
+            self.consume_logits(seq, &mut tmp);
+            self.stats.decode_tokens += 1;
+            self.stats.itl.push(t_decode / rows as f64);
+        }
+        let _ = batch;
+
+        let m = self.models.get_mut(name).unwrap();
+        for seq in running {
+            if seq.finish.is_some() {
+                Self::finalize(&mut self.events, &mut self.stats, &mut m.kv, seq);
+            } else {
+                m.running.push(seq);
+            }
+        }
+        Ok(())
+    }
+
+    /// Sample one token from `logits`, append it, detokenize, stream, and
+    /// update finish state. Shared by the prefill (first token) and decode
+    /// paths.
+    fn consume_logits(&mut self, seq: &mut RunningSeq, logits: &mut [f32]) {
+        // Grammar mask (+ EOS allowance when the derivation is complete).
+        let mask_storage;
+        let mask: Option<&[bool]> = match (&seq.matcher, &seq.mask_cache) {
+            (Some(matcher), Some(cache)) => {
+                let base = cache.borrow_mut().get_or_compute(matcher);
+                let mut mk = (*base).clone();
+                if matcher.is_accepting() {
+                    for &e in &self.eos_ids {
+                        if (e as usize) < mk.len() {
+                            mk[e as usize] = true;
+                        }
+                    }
+                }
+                mask_storage = mk;
+                Some(&mask_storage)
+            }
+            _ => None,
+        };
+
+        let (token, lp) = seq.processor.sample_with_logprobs(logits, mask);
+        if let (Some(list), Some(lp)) = (&mut seq.logprobs, lp) {
+            let tok_str = |t: u32| {
+                String::from_utf8_lossy(self.tokenizer.token_bytes(t)).into_owned()
+            };
+            list.push(LogprobEntry {
+                token: tok_str(lp.token),
+                logprob: lp.logprob as f64,
+                top: lp.top.iter().map(|&(t, l)| (tok_str(t), l as f64)).collect(),
+            });
+        }
+
+        // EOS / special tokens never enter the text.
+        if self.eos_ids.contains(&token) {
+            seq.finish = Some(FinishReason::Stop);
+            return;
+        }
+
+        // Advance the grammar.
+        if let Some(matcher) = &mut seq.matcher {
+            let ok = matcher.accept_token(self.tokenizer.token_bytes(token));
+            if !ok {
+                // Fallback-path token (fully-masked state): end the output.
+                seq.finish = Some(FinishReason::Stop);
+                return;
+            }
+        }
+
+        // Bookkeeping in the KV manager; allocation failure = out of
+        // context (finish with Length, vLLM-style).
+        {
+            let m = self.models.get_mut(&seq.model).unwrap();
+            if m.kv.append_token(seq.seq_id, token).is_err() {
+                seq.finish = Some(FinishReason::Length);
+                return;
+            }
+        }
+        seq.completion_tokens += 1;
+
+        // Detokenize incrementally (WASM CPU stage in browser mode).
+        let bytes = self.tokenizer.token_bytes(token);
+        let piece = match &self.env {
+            Some(env) => env.cpu_stage(|| seq.decoder.push(bytes)),
+            None => seq.decoder.push(bytes),
+        };
+        seq.text.push_str(&piece);
+
+        // Stop strings with holdback.
+        let max_stop = seq.stop.iter().map(String::len).max().unwrap_or(0);
+        if max_stop > 0 {
+            let scan_from = seq.emitted.saturating_sub(max_stop);
+            if let Some((at, _)) = seq
+                .stop
+                .iter()
+                .filter_map(|s| seq.text[scan_from..].find(s.as_str()).map(|i| (scan_from + i, s)))
+                .min_by_key(|(i, _)| *i)
+            {
+                seq.text.truncate(at);
+                seq.finish = Some(FinishReason::Stop);
+                return;
+            }
+        }
+
+        if seq.completion_tokens >= seq.max_tokens {
+            seq.finish = Some(FinishReason::Length);
+        }
+
+        // Grammar complete and nothing more derivable => stop.
+        if let Some(matcher) = &seq.matcher {
+            if matcher.is_accepting() && matcher.is_dead() {
+                seq.finish = Some(FinishReason::Stop);
+            }
+        }
+
+        // Stream the safe region (hold back potential stop-string prefixes).
+        if seq.stream && seq.finish.is_none() {
+            let safe_end = seq.text.len().saturating_sub(max_stop.saturating_sub(1));
+            if safe_end > seq.emitted && seq.text.is_char_boundary(safe_end) {
+                let delta = seq.text[seq.emitted..safe_end].to_string();
+                seq.emitted = safe_end;
+                self.events.push_back(EngineEvent::Chunk(
+                    seq.req_id,
+                    ChatChunk {
+                        id: format!("chatcmpl-{}", seq.req_id),
+                        model: seq.model.clone(),
+                        delta,
+                        finish_reason: None,
+                        usage: None,
+                    },
+                ));
+            }
+        }
+    }
+
+    fn finalize(
+        events: &mut VecDeque<EngineEvent>,
+        stats: &mut EngineStats,
+        kv: &mut KvCacheManager,
+        mut seq: RunningSeq,
+    ) {
+        kv.free(seq.seq_id);
+        seq.text.push_str(&seq.decoder.finish());
+        // The final flush may surface held-back bytes; the contract is
+        // that a stop string never appears in the returned text.
+        if let Some(at) = seq
+            .stop
+            .iter()
+            .filter_map(|s| seq.text.find(s.as_str()))
+            .min()
+        {
+            seq.text.truncate(at);
+            seq.finish = Some(FinishReason::Stop);
+        }
+        let finish = seq.finish.unwrap_or(FinishReason::Stop);
+        let e2e = seq.t_admit.elapsed().as_secs_f64();
+        let ttft = seq
+            .t_prefilled
+            .map(|t| e2e - t.elapsed().as_secs_f64())
+            .unwrap_or(e2e);
+        let decode_s = (e2e - ttft).max(1e-9);
+        let usage = Usage {
+            prompt_tokens: seq.prompt_tokens,
+            completion_tokens: seq.completion_tokens,
+            prefill_tokens_per_s: seq.prompt_tokens as f64 / ttft.max(1e-9),
+            decode_tokens_per_s: seq.completion_tokens as f64 / decode_s,
+            ttft_s: ttft,
+            e2e_s: e2e,
+        };
+        if seq.stream {
+            // Trailing un-emitted text, then the final chunk.
+            if seq.text.len() > seq.emitted {
+                events.push_back(EngineEvent::Chunk(
+                    seq.req_id,
+                    ChatChunk {
+                        id: format!("chatcmpl-{}", seq.req_id),
+                        model: seq.model.clone(),
+                        delta: seq.text[seq.emitted..].to_string(),
+                        finish_reason: None,
+                        usage: None,
+                    },
+                ));
+            }
+            events.push_back(EngineEvent::Chunk(
+                seq.req_id,
+                ChatChunk {
+                    id: format!("chatcmpl-{}", seq.req_id),
+                    model: seq.model.clone(),
+                    delta: String::new(),
+                    finish_reason: Some(finish),
+                    usage: Some(usage.clone()),
+                },
+            ));
+        }
+        let _ = stats;
+        events.push_back(EngineEvent::Done(
+            seq.req_id,
+            ChatCompletionResponse {
+                id: format!("chatcmpl-{}", seq.req_id),
+                model: seq.model.clone(),
+                created: std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .map(|d| d.as_secs())
+                    .unwrap_or(0),
+                choices: vec![Choice {
+                    index: 0,
+                    content: seq.text,
+                    finish_reason: finish,
+                    logprobs: seq.logprobs,
+                }],
+                usage,
+            },
+        ));
+    }
+
+    fn build_grammar(
+        &self,
+        rf: &ResponseFormat,
+    ) -> Result<Option<GrammarMatcher>, ApiError> {
+        let grammar: Option<Grammar> = match rf {
+            ResponseFormat::Text => None,
+            ResponseFormat::JsonObject => Some(
+                schema_to_grammar(&Value::object())
+                    .map_err(|e| ApiError::invalid(e.to_string()))?,
+            ),
+            ResponseFormat::JsonSchema(s) => {
+                Some(schema_to_grammar(s).map_err(|e| ApiError::invalid(e.to_string()))?)
+            }
+            ResponseFormat::Grammar(text) => {
+                let build = || parse_ebnf(text);
+                let g = match &self.env {
+                    Some(env) => env.cpu_stage(build),
+                    None => build(),
+                }
+                .map_err(|e| ApiError::invalid(e.to_string()))?;
+                Some(g)
+            }
+        };
+        Ok(grammar.map(|g| GrammarMatcher::new(Rc::new(g))))
+    }
+
+    fn grammar_cache_for(&mut self, rf: &ResponseFormat) -> Rc<RefCell<MaskCache>> {
+        let key = match rf {
+            ResponseFormat::Text => unreachable!("no cache for free text"),
+            ResponseFormat::JsonObject => "json_object".to_string(),
+            ResponseFormat::JsonSchema(s) => format!("schema:{}", crate::json::to_string(s)),
+            ResponseFormat::Grammar(g) => format!("ebnf:{g}"),
+        };
+        self.grammar_caches
+            .entry(key)
+            .or_insert_with(|| Rc::new(RefCell::new(MaskCache::new(self.trie.clone(), 256))))
+            .clone()
+    }
+
+    /// `runtime_stats_text` analog: a human-readable engine report.
+    pub fn stats_json(&self) -> Value {
+        let mut models = Value::object();
+        for (name, m) in &self.models {
+            let (hits, misses) = m.kv.prefix_stats();
+            models.set(
+                name.clone(),
+                crate::obj! {
+                    "waiting" => m.waiting.len(),
+                    "running" => m.running.len(),
+                    "available_pages" => m.kv.available_pages(),
+                    "prefix_cache_hits" => hits as i64,
+                    "prefix_cache_misses" => misses as i64,
+                    "load_seconds" => m.runtime.load_seconds,
+                },
+            );
+        }
+        crate::obj! {
+            "prefill_tokens" => self.stats.prefill_tokens as i64,
+            "decode_tokens" => self.stats.decode_tokens as i64,
+            "prefill_tps" => self.stats.prefill_tps(),
+            "decode_tps" => self.stats.decode_tps(),
+            "models" => models,
+        }
+    }
+}

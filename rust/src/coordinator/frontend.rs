@@ -1,0 +1,133 @@
+//! `ServiceWorkerMLCEngine` — the lightweight frontend engine a web app
+//! instantiates (paper §2.1): endpoint-like behavior, OpenAI-style
+//! JSON-in-JSON-out, all computation delegated to the worker over the
+//! message channel.
+
+use super::messages::{FromWorker, ToWorker};
+use super::worker::WorkerHandle;
+use super::EngineConfig;
+use crate::api::{ApiError, ChatChunk, ChatCompletionRequest, ChatCompletionResponse};
+use crate::json::Value;
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// Default per-request timeout: generous because CPU-PJRT decode of the
+/// larger model is ~100ms+/token.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(600);
+
+pub struct ServiceWorkerMLCEngine {
+    worker: WorkerHandle,
+    models: Vec<String>,
+    next_id: u64,
+    /// Buffered out-of-order messages (e.g. chunks for another request).
+    pending: VecDeque<FromWorker>,
+}
+
+impl ServiceWorkerMLCEngine {
+    /// Create the engine: spawns the worker, which loads the models.
+    pub fn create(cfg: EngineConfig) -> Result<Self, ApiError> {
+        let (worker, models) =
+            WorkerHandle::spawn(cfg).map_err(ApiError::internal)?;
+        Ok(Self { worker, models, next_id: 1, pending: VecDeque::new() })
+    }
+
+    pub fn models(&self) -> &[String] {
+        &self.models
+    }
+
+    /// Non-streaming completion: returns the full response.
+    pub fn chat_completion(
+        &mut self,
+        mut request: ChatCompletionRequest,
+    ) -> Result<ChatCompletionResponse, ApiError> {
+        request.stream = false;
+        let id = self.post(request)?;
+        loop {
+            match self.next_message_for(id)? {
+                FromWorker::Done { response, .. } => return Ok(response),
+                FromWorker::Error { error, .. } => return Err(error),
+                _ => {} // stray chunk (request was non-streaming) — ignore
+            }
+        }
+    }
+
+    /// Streaming completion: `on_chunk` sees every delta; returns the
+    /// final response.
+    pub fn chat_completion_stream(
+        &mut self,
+        mut request: ChatCompletionRequest,
+        mut on_chunk: impl FnMut(&ChatChunk),
+    ) -> Result<ChatCompletionResponse, ApiError> {
+        request.stream = true;
+        let id = self.post(request)?;
+        loop {
+            match self.next_message_for(id)? {
+                FromWorker::Chunk { chunk, .. } => on_chunk(&chunk),
+                FromWorker::Done { response, .. } => return Ok(response),
+                FromWorker::Error { error, .. } => return Err(error),
+                _ => {}
+            }
+        }
+    }
+
+    /// Fire-and-forget submission for concurrent workloads (the serve
+    /// driver fans out many requests, then drains with `poll`).
+    pub fn submit(&mut self, request: ChatCompletionRequest) -> Result<u64, ApiError> {
+        self.post(request)
+    }
+
+    /// Next message for any request (concurrent mode).
+    pub fn poll(&mut self, timeout: Duration) -> Result<FromWorker, ApiError> {
+        if let Some(m) = self.pending.pop_front() {
+            return Ok(m);
+        }
+        self.worker.recv(timeout).map_err(ApiError::internal)
+    }
+
+    pub fn abort(&mut self, id: u64) -> Result<(), ApiError> {
+        self.worker.post(&ToWorker::Abort { id }).map_err(ApiError::internal)
+    }
+
+    /// Engine runtime stats (the `runtime_stats_text` analog).
+    pub fn stats(&mut self) -> Result<Value, ApiError> {
+        self.worker.post(&ToWorker::Stats).map_err(ApiError::internal)?;
+        loop {
+            match self.poll(REQUEST_TIMEOUT)? {
+                FromWorker::Stats { payload } => return Ok(payload),
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    fn post(&mut self, request: ChatCompletionRequest) -> Result<u64, ApiError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.worker
+            .post(&ToWorker::ChatCompletion { id, request })
+            .map_err(ApiError::internal)?;
+        Ok(id)
+    }
+
+    fn next_message_for(&mut self, id: u64) -> Result<FromWorker, ApiError> {
+        // Serve buffered messages for this id first.
+        if let Some(idx) = self.pending.iter().position(|m| message_id(m) == Some(id)) {
+            return Ok(self.pending.remove(idx).unwrap());
+        }
+        loop {
+            let msg = self.worker.recv(REQUEST_TIMEOUT).map_err(ApiError::internal)?;
+            if message_id(&msg) == Some(id) {
+                return Ok(msg);
+            }
+            self.pending.push_back(msg);
+        }
+    }
+}
+
+fn message_id(m: &FromWorker) -> Option<u64> {
+    match m {
+        FromWorker::Chunk { id, .. }
+        | FromWorker::Done { id, .. }
+        | FromWorker::Error { id, .. } => Some(*id),
+        _ => None,
+    }
+}

@@ -1,0 +1,179 @@
+//! The `postMessage` wire protocol between the frontend engine and the
+//! worker engine (paper §2.2: "the two engines communicate via message-
+//! passing, and the messages are simply OpenAI-style requests and
+//! responses").
+//!
+//! Every message is a JSON envelope `{"kind": ..., "id": ..., "payload":
+//! ...}` carried as a **serialized string** over the channel — the
+//! serialize/parse round-trip is intentional: it is the structured-clone
+//! cost a real browser pays, and the worker-overhead bench measures it.
+
+use crate::api::{ApiError, ChatChunk, ChatCompletionRequest, ChatCompletionResponse};
+use crate::json::{parse, to_string, Value};
+
+/// Frontend -> worker.
+#[derive(Debug)]
+pub enum ToWorker {
+    ChatCompletion { id: u64, request: ChatCompletionRequest },
+    Abort { id: u64 },
+    Stats,
+    Shutdown,
+}
+
+/// Worker -> frontend.
+#[derive(Debug)]
+pub enum FromWorker {
+    Chunk { id: u64, chunk: ChatChunk },
+    Done { id: u64, response: ChatCompletionResponse },
+    Error { id: u64, error: ApiError },
+    Stats { payload: Value },
+    /// Worker finished loading models and is ready for requests.
+    Ready { models: Vec<String> },
+}
+
+impl ToWorker {
+    pub fn to_wire(&self) -> String {
+        let v = match self {
+            ToWorker::ChatCompletion { id, request } => crate::obj! {
+                "kind" => "chat_completion",
+                "id" => *id as i64,
+                "payload" => request.to_json(),
+            },
+            ToWorker::Abort { id } => crate::obj! {
+                "kind" => "abort",
+                "id" => *id as i64,
+            },
+            ToWorker::Stats => crate::obj! { "kind" => "stats" },
+            ToWorker::Shutdown => crate::obj! { "kind" => "shutdown" },
+        };
+        to_string(&v)
+    }
+
+    pub fn from_wire(wire: &str) -> Result<Self, String> {
+        let v = parse(wire).map_err(|e| e.to_string())?;
+        let kind = v.get("kind").and_then(Value::as_str).ok_or("missing kind")?;
+        let id = || v.get("id").and_then(Value::as_u64).ok_or("missing id");
+        match kind {
+            "chat_completion" => Ok(ToWorker::ChatCompletion {
+                id: id()?,
+                request: ChatCompletionRequest::from_json(
+                    v.get("payload").ok_or("missing payload")?,
+                )
+                .map_err(|e| e.to_string())?,
+            }),
+            "abort" => Ok(ToWorker::Abort { id: id()? }),
+            "stats" => Ok(ToWorker::Stats),
+            "shutdown" => Ok(ToWorker::Shutdown),
+            other => Err(format!("unknown message kind '{other}'")),
+        }
+    }
+}
+
+impl FromWorker {
+    pub fn to_wire(&self) -> String {
+        let v = match self {
+            FromWorker::Chunk { id, chunk } => crate::obj! {
+                "kind" => "chunk",
+                "id" => *id as i64,
+                "payload" => chunk.to_json(),
+            },
+            FromWorker::Done { id, response } => crate::obj! {
+                "kind" => "done",
+                "id" => *id as i64,
+                "payload" => response.to_json(),
+            },
+            FromWorker::Error { id, error } => crate::obj! {
+                "kind" => "error",
+                "id" => *id as i64,
+                "payload" => error.to_json(),
+            },
+            FromWorker::Stats { payload } => crate::obj! {
+                "kind" => "stats",
+                "payload" => payload.clone(),
+            },
+            FromWorker::Ready { models } => crate::obj! {
+                "kind" => "ready",
+                "payload" => models.clone(),
+            },
+        };
+        to_string(&v)
+    }
+
+    pub fn from_wire(wire: &str) -> Result<Self, String> {
+        let v = parse(wire).map_err(|e| e.to_string())?;
+        let kind = v.get("kind").and_then(Value::as_str).ok_or("missing kind")?;
+        let id = || v.get("id").and_then(Value::as_u64).ok_or("missing id");
+        let payload = || v.get("payload").ok_or("missing payload");
+        match kind {
+            "chunk" => Ok(FromWorker::Chunk {
+                id: id()?,
+                chunk: ChatChunk::from_json(payload()?).ok_or("bad chunk")?,
+            }),
+            "done" => Ok(FromWorker::Done {
+                id: id()?,
+                response: ChatCompletionResponse::from_json(payload()?).ok_or("bad response")?,
+            }),
+            "error" => Ok(FromWorker::Error {
+                id: id()?,
+                error: ApiError::from_json(payload()?).ok_or("bad error")?,
+            }),
+            "stats" => Ok(FromWorker::Stats { payload: payload()?.clone() }),
+            "ready" => Ok(FromWorker::Ready {
+                models: payload()?
+                    .as_array()
+                    .ok_or("bad ready payload")?
+                    .iter()
+                    .filter_map(|m| m.as_str().map(String::from))
+                    .collect(),
+            }),
+            other => Err(format!("unknown message kind '{other}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::FinishReason;
+
+    #[test]
+    fn to_worker_roundtrip() {
+        let req = ChatCompletionRequest::new("tiny-2m").user("hello");
+        let msg = ToWorker::ChatCompletion { id: 42, request: req };
+        let wire = msg.to_wire();
+        match ToWorker::from_wire(&wire).unwrap() {
+            ToWorker::ChatCompletion { id, request } => {
+                assert_eq!(id, 42);
+                assert_eq!(request.model, "tiny-2m");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(ToWorker::from_wire(r#"{"kind":"stats"}"#).unwrap(), ToWorker::Stats));
+        assert!(ToWorker::from_wire(r#"{"kind":"nope"}"#).is_err());
+        assert!(ToWorker::from_wire("not json").is_err());
+    }
+
+    #[test]
+    fn from_worker_roundtrip() {
+        let chunk = ChatChunk {
+            id: "c".into(),
+            model: "m".into(),
+            delta: "hi".into(),
+            finish_reason: Some(FinishReason::Stop),
+            usage: None,
+        };
+        let wire = FromWorker::Chunk { id: 7, chunk: chunk.clone() }.to_wire();
+        match FromWorker::from_wire(&wire).unwrap() {
+            FromWorker::Chunk { id, chunk: c } => {
+                assert_eq!(id, 7);
+                assert_eq!(c, chunk);
+            }
+            other => panic!("{other:?}"),
+        }
+        let wire = FromWorker::Ready { models: vec!["a".into(), "b".into()] }.to_wire();
+        match FromWorker::from_wire(&wire).unwrap() {
+            FromWorker::Ready { models } => assert_eq!(models, vec!["a", "b"]),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's system contribution (Figure 1): a two-engine architecture
+//! with an OpenAI-style JSON message boundary between them.
+//!
+//! * [`engine::MLCEngine`] — the backend engine that "actually computes
+//!   the LLM workload": continuous-batching scheduler, paged KV cache,
+//!   sampling, grammar-constrained decoding, streaming detokenization,
+//!   multi-model loading. Runs wherever it's constructed — in-process
+//!   ("native mode", the MLC-LLM baseline) or inside a worker thread.
+//! * [`worker::WorkerHandle`] — the web-worker analog: a dedicated thread
+//!   owning an `MLCEngine`, driven by a `postMessage`-style JSON channel.
+//! * [`frontend::ServiceWorkerMLCEngine`] — the lightweight frontend
+//!   handle web apps would instantiate: endpoint-like, JSON-in-JSON-out,
+//!   talks only through the worker channel.
+//! * [`messages`] — the wire protocol (OpenAI requests/responses in JSON
+//!   envelopes), exactly the messages of the paper's §2.2.
+
+pub mod engine;
+pub mod frontend;
+pub mod messages;
+pub mod worker;
+
+pub use engine::{EngineConfig, EngineEvent, MLCEngine, RequestId};
+pub use frontend::ServiceWorkerMLCEngine;
+pub use worker::WorkerHandle;

@@ -1,0 +1,165 @@
+//! The web-worker analog: a dedicated thread owning the `MLCEngine`,
+//! driven entirely by wire messages (paper Figure 1, right half).
+//!
+//! The event loop mirrors a worker's message pump: block on the inbox
+//! when idle; when the engine has in-flight sequences, poll the inbox
+//! without blocking and run one scheduler step per iteration so new
+//! messages (new requests, aborts) interleave with generation — this is
+//! what keeps the "UI thread" responsive in the paper's design.
+
+use super::engine::{EngineConfig, EngineEvent, MLCEngine};
+use super::messages::{FromWorker, ToWorker};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Handle to a running worker thread. Dropping shuts the worker down.
+pub struct WorkerHandle {
+    pub(crate) to_worker: Sender<String>,
+    pub(crate) from_worker: Receiver<String>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Spawn the worker and wait for its Ready message (model loading and
+    /// artifact compilation happen inside the worker, like WebLLM's
+    /// `CreateServiceWorkerMLCEngine` await).
+    pub fn spawn(cfg: EngineConfig) -> Result<(Self, Vec<String>), String> {
+        let (tx_in, rx_in) = channel::<String>();
+        let (tx_out, rx_out) = channel::<String>();
+        let join = std::thread::Builder::new()
+            .name("mlc-worker".into())
+            .spawn(move || worker_main(cfg, rx_in, tx_out))
+            .map_err(|e| e.to_string())?;
+        let handle = Self { to_worker: tx_in, from_worker: rx_out, join: Some(join) };
+        // First message must be Ready (or an Error if loading failed).
+        let first = handle
+            .from_worker
+            .recv_timeout(Duration::from_secs(600))
+            .map_err(|e| format!("worker did not become ready: {e}"))?;
+        match FromWorker::from_wire(&first)? {
+            FromWorker::Ready { models } => Ok((handle, models)),
+            FromWorker::Error { error, .. } => Err(error.to_string()),
+            other => Err(format!("unexpected first message {other:?}")),
+        }
+    }
+
+    pub fn post(&self, msg: &ToWorker) -> Result<(), String> {
+        self.to_worker.send(msg.to_wire()).map_err(|e| e.to_string())
+    }
+
+    pub fn recv(&self, timeout: Duration) -> Result<FromWorker, String> {
+        let wire = self
+            .from_worker
+            .recv_timeout(timeout)
+            .map_err(|e| format!("worker channel: {e}"))?;
+        FromWorker::from_wire(&wire)
+    }
+
+    pub fn try_recv(&self) -> Option<Result<FromWorker, String>> {
+        self.from_worker.try_recv().ok().map(|w| FromWorker::from_wire(&w))
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        let _ = self.post(&ToWorker::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn worker_main(cfg: EngineConfig, inbox: Receiver<String>, outbox: Sender<String>) {
+    let send = |msg: FromWorker| {
+        let _ = outbox.send(msg.to_wire());
+    };
+
+    let mut engine = match MLCEngine::new(&cfg) {
+        Ok(e) => e,
+        Err(e) => {
+            send(FromWorker::Error { id: 0, error: e });
+            return;
+        }
+    };
+    send(FromWorker::Ready { models: engine.loaded_models() });
+
+    // request-id (wire) <-> engine request id mapping.
+    let mut wire_of: HashMap<u64, u64> = HashMap::new();
+
+    'outer: loop {
+        // Message intake: blocking when idle, draining when busy.
+        loop {
+            let msg = if engine.has_work() {
+                match inbox.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => None,
+                }
+            } else {
+                match inbox.recv_timeout(Duration::from_millis(200)) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break 'outer,
+                }
+            };
+            let Some(wire) = msg else { break };
+            match ToWorker::from_wire(&wire) {
+                Ok(ToWorker::ChatCompletion { id, request }) => {
+                    match engine.submit(request) {
+                        Ok(rid) => {
+                            wire_of.insert(rid, id);
+                        }
+                        Err(e) => send(FromWorker::Error { id, error: e }),
+                    }
+                }
+                Ok(ToWorker::Abort { id }) => {
+                    // Find the engine id for this wire id.
+                    if let Some((&rid, _)) = wire_of.iter().find(|(_, &w)| w == id) {
+                        engine.abort(rid);
+                    }
+                }
+                Ok(ToWorker::Stats) => {
+                    send(FromWorker::Stats { payload: engine.stats_json() });
+                }
+                Ok(ToWorker::Shutdown) => break 'outer,
+                Err(e) => send(FromWorker::Error {
+                    id: 0,
+                    error: crate::api::ApiError::invalid(format!("bad message: {e}")),
+                }),
+            }
+        }
+
+        // One scheduler step, then flush events.
+        if engine.has_work() {
+            if let Err(e) = engine.step() {
+                // Engine-level failure: fail every in-flight request.
+                for (&rid, &wid) in &wire_of {
+                    let _ = rid;
+                    send(FromWorker::Error { id: wid, error: e.clone() });
+                }
+                wire_of.clear();
+                continue;
+            }
+        }
+        for ev in engine.poll_events() {
+            match ev {
+                EngineEvent::Chunk(rid, chunk) => {
+                    if let Some(&wid) = wire_of.get(&rid) {
+                        send(FromWorker::Chunk { id: wid, chunk });
+                    }
+                }
+                EngineEvent::Done(rid, response) => {
+                    if let Some(wid) = wire_of.remove(&rid) {
+                        send(FromWorker::Done { id: wid, response });
+                    }
+                }
+                EngineEvent::Error(rid, error) => {
+                    if let Some(wid) = wire_of.remove(&rid) {
+                        send(FromWorker::Error { id: wid, error });
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,337 @@
+//! GBNF-style EBNF parser (the grammar syntax WebLLM/XGrammar accept for
+//! `response_format: {type: "grammar"}`-style requests).
+//!
+//! Syntax:
+//!
+//! ```text
+//! root  ::= "yes" | "no" ws        # comments run to end of line
+//! ws    ::= [ \t\n]*
+//! word  ::= [a-zA-Z]+ ("-" [a-z]+)?
+//! ```
+//!
+//! Literals support \n \t \r \\ \" \xHH escapes; classes support ranges,
+//! negation ([^...]) and the same escapes. Postfix `* + ?` bind to the
+//! immediately preceding item; `( ... )` groups; `|` separates
+//! alternatives.
+
+use super::grammar::{ByteClass, Grammar, GrammarError, Sym};
+use std::collections::HashMap;
+
+pub fn parse_ebnf(text: &str) -> Result<Grammar, GrammarError> {
+    // Pass 1: collect rule names in order (root must become rule 0).
+    let mut defs: Vec<(String, &str)> = Vec::new();
+    let logical: Vec<String> = LogicalLines::new(text).collect();
+    for line in &logical {
+        let line = strip_comment(line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, body)) = line.split_once("::=") else {
+            return Err(GrammarError::Parse(format!("missing '::=' in: {line}")));
+        };
+        defs.push((name.trim().to_string(), body.trim_start()));
+    }
+    if defs.is_empty() {
+        return Err(GrammarError::NoRoot);
+    }
+    // Root first.
+    if let Some(pos) = defs.iter().position(|(n, _)| n == "root") {
+        defs.swap(0, pos);
+    } else {
+        return Err(GrammarError::NoRoot);
+    }
+
+    let mut g = Grammar::new();
+    let mut index: HashMap<String, usize> = HashMap::new();
+    for (name, _) in &defs {
+        if index.contains_key(name) {
+            return Err(GrammarError::Parse(format!("duplicate rule '{name}'")));
+        }
+        index.insert(name.clone(), g.add_rule(name.clone()));
+    }
+
+    for (name, body) in &defs {
+        let rule = index[name];
+        let mut p = P { bytes: body.as_bytes(), pos: 0, g: &mut g, index: &index, hint: name };
+        let alts = p.alternatives()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(GrammarError::Parse(format!(
+                "trailing input in rule '{name}': {:?}",
+                &body[p.pos.min(body.len())..]
+            )));
+        }
+        for alt in alts {
+            g.add_alt(rule, alt);
+        }
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+/// Joins continuation lines: a line whose next line is indented continues
+/// the same rule body (common GBNF formatting).
+struct LogicalLines<'a> {
+    lines: std::iter::Peekable<std::str::Lines<'a>>,
+}
+
+impl<'a> LogicalLines<'a> {
+    fn new(text: &'a str) -> Self {
+        Self { lines: text.lines().peekable() }
+    }
+}
+
+impl<'a> Iterator for LogicalLines<'a> {
+    type Item = String;
+
+    fn next(&mut self) -> Option<String> {
+        let mut cur = self.lines.next()?.to_string();
+        loop {
+            match self.lines.peek() {
+                Some(next)
+                    if (next.starts_with(' ') || next.starts_with('\t'))
+                        && !strip_comment(next).trim().is_empty()
+                        && !strip_comment(next).contains("::=") =>
+                {
+                    cur.push(' ');
+                    cur.push_str(self.lines.next().unwrap().trim());
+                }
+                _ => return Some(cur),
+            }
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted literal or class.
+    let b = line.as_bytes();
+    let mut in_str = false;
+    let mut in_class = false;
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'\\' if in_str || in_class => i += 1,
+            b'"' if !in_class => in_str = !in_str,
+            b'[' if !in_str => in_class = true,
+            b']' if !in_str => in_class = false,
+            b'#' if !in_str && !in_class => return &line[..i],
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+struct P<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    g: &'a mut Grammar,
+    index: &'a HashMap<String, usize>,
+    hint: &'a str,
+}
+
+impl<'a> P<'a> {
+    fn err(&self, m: impl Into<String>) -> GrammarError {
+        GrammarError::Parse(format!("{} (at byte {} of rule '{}')", m.into(), self.pos, self.hint))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t')) {
+            self.pos += 1;
+        }
+    }
+
+    /// alternatives := sequence ('|' sequence)*
+    fn alternatives(&mut self) -> Result<Vec<Vec<Sym>>, GrammarError> {
+        let mut alts = vec![self.sequence()?];
+        loop {
+            self.skip_ws();
+            if self.peek() == Some(b'|') {
+                self.pos += 1;
+                alts.push(self.sequence()?);
+            } else {
+                return Ok(alts);
+            }
+        }
+    }
+
+    /// sequence := (item postfix?)*
+    fn sequence(&mut self) -> Result<Vec<Sym>, GrammarError> {
+        let mut seq = Vec::new();
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                None | Some(b'|') | Some(b')') => return Ok(seq),
+                _ => {}
+            }
+            let item = self.item()?;
+            self.skip_ws();
+            match self.peek() {
+                Some(b'*') => {
+                    self.pos += 1;
+                    let s = self.g.star(item, self.hint);
+                    seq.push(s);
+                }
+                Some(b'+') => {
+                    self.pos += 1;
+                    let s = self.g.plus(item, self.hint);
+                    seq.extend(s);
+                }
+                Some(b'?') => {
+                    self.pos += 1;
+                    let s = self.g.opt(item, self.hint);
+                    seq.push(s);
+                }
+                _ => seq.extend(item),
+            }
+        }
+    }
+
+    /// item := literal | class | '(' alternatives ')' | rule-name
+    fn item(&mut self) -> Result<Vec<Sym>, GrammarError> {
+        match self.peek() {
+            Some(b'"') => self.literal(),
+            Some(b'[') => Ok(vec![Sym::Class(self.class()?)]),
+            Some(b'(') => {
+                self.pos += 1;
+                let alts = self.alternatives()?;
+                self.skip_ws();
+                if self.peek() != Some(b')') {
+                    return Err(self.err("expected ')'"));
+                }
+                self.pos += 1;
+                if alts.len() == 1 {
+                    Ok(alts.into_iter().next().unwrap())
+                } else {
+                    Ok(vec![self.g.choice(alts, self.hint)])
+                }
+            }
+            Some(c) if c.is_ascii_alphanumeric() || c == b'_' || c == b'-' => {
+                let start = self.pos;
+                while matches!(self.peek(), Some(c) if c.is_ascii_alphanumeric() || c == b'_' || c == b'-')
+                {
+                    self.pos += 1;
+                }
+                let name = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+                match self.index.get(name) {
+                    Some(&i) => Ok(vec![Sym::Ref(i)]),
+                    None => Err(GrammarError::UnknownRule(name.to_string())),
+                }
+            }
+            Some(c) => Err(self.err(format!("unexpected character '{}'", c as char))),
+            None => Err(self.err("unexpected end of rule")),
+        }
+    }
+
+    fn literal(&mut self) -> Result<Vec<Sym>, GrammarError> {
+        self.pos += 1; // opening quote
+        let mut bytes = Vec::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated literal")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(Grammar::lit(&bytes));
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    bytes.push(self.escape()?);
+                }
+                Some(c) => {
+                    bytes.push(c);
+                    self.pos += 1;
+                }
+            }
+        }
+    }
+
+    fn class(&mut self) -> Result<ByteClass, GrammarError> {
+        self.pos += 1; // '['
+        let negated = if self.peek() == Some(b'^') {
+            self.pos += 1;
+            true
+        } else {
+            false
+        };
+        let mut ranges = Vec::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated class")),
+                Some(b']') => {
+                    self.pos += 1;
+                    if ranges.is_empty() {
+                        return Err(self.err("empty character class"));
+                    }
+                    return Ok(ByteClass { ranges, negated });
+                }
+                _ => {
+                    let lo = self.class_byte()?;
+                    // range?
+                    if self.peek() == Some(b'-')
+                        && self.bytes.get(self.pos + 1).map_or(false, |&c| c != b']')
+                    {
+                        self.pos += 1;
+                        let hi = self.class_byte()?;
+                        if hi < lo {
+                            return Err(self.err("inverted range"));
+                        }
+                        ranges.push((lo, hi));
+                    } else {
+                        ranges.push((lo, lo));
+                    }
+                }
+            }
+        }
+    }
+
+    fn class_byte(&mut self) -> Result<u8, GrammarError> {
+        match self.peek() {
+            Some(b'\\') => {
+                self.pos += 1;
+                self.escape()
+            }
+            Some(c) => {
+                self.pos += 1;
+                Ok(c)
+            }
+            None => Err(self.err("unterminated class")),
+        }
+    }
+
+    fn escape(&mut self) -> Result<u8, GrammarError> {
+        let c = self.peek().ok_or_else(|| self.err("dangling escape"))?;
+        self.pos += 1;
+        Ok(match c {
+            b'n' => b'\n',
+            b't' => b'\t',
+            b'r' => b'\r',
+            b'\\' => b'\\',
+            b'"' => b'"',
+            b'\'' => b'\'',
+            b'[' => b'[',
+            b']' => b']',
+            b'-' => b'-',
+            b'^' => b'^',
+            b'/' => b'/',
+            b'x' => {
+                let h1 = self.hex()?;
+                let h2 = self.hex()?;
+                h1 * 16 + h2
+            }
+            other => return Err(self.err(format!("unknown escape '\\{}'", other as char))),
+        })
+    }
+
+    fn hex(&mut self) -> Result<u8, GrammarError> {
+        let c = self.peek().ok_or_else(|| self.err("truncated \\x escape"))?;
+        self.pos += 1;
+        (c as char)
+            .to_digit(16)
+            .map(|d| d as u8)
+            .ok_or_else(|| self.err("invalid hex digit"))
+    }
+}

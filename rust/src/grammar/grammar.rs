@@ -1,0 +1,176 @@
+//! Byte-level CFG intermediate representation.
+//!
+//! Normal form: every rule is a list of alternatives; every alternative a
+//! flat sequence of symbols; a symbol is a byte-class terminal or a rule
+//! reference. Repetition sugar (`* + ?`) from the EBNF/schema frontends
+//! is desugared into fresh right-recursive rules at construction time.
+
+use std::fmt;
+
+/// A set of byte ranges, possibly negated ("any byte not in ranges").
+#[derive(Clone, Debug, PartialEq)]
+pub struct ByteClass {
+    pub ranges: Vec<(u8, u8)>, // inclusive
+    pub negated: bool,
+}
+
+impl ByteClass {
+    pub fn byte(b: u8) -> Self {
+        Self { ranges: vec![(b, b)], negated: false }
+    }
+
+    pub fn matches(&self, b: u8) -> bool {
+        let inside = self.ranges.iter().any(|&(lo, hi)| lo <= b && b <= hi);
+        inside != self.negated
+    }
+}
+
+/// One grammar symbol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Sym {
+    /// Terminal: one byte matching the class.
+    Class(ByteClass),
+    /// Nonterminal reference.
+    Ref(usize),
+}
+
+/// A rule: alternatives of symbol sequences.
+#[derive(Clone, Debug, Default)]
+pub struct Rule {
+    pub name: String,
+    pub alts: Vec<Vec<Sym>>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum GrammarError {
+    UnknownRule(String),
+    NoRoot,
+    Parse(String),
+    Schema(String),
+}
+
+impl fmt::Display for GrammarError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GrammarError::UnknownRule(r) => write!(f, "unknown rule '{r}'"),
+            GrammarError::NoRoot => write!(f, "grammar has no 'root' rule"),
+            GrammarError::Parse(m) => write!(f, "grammar parse error: {m}"),
+            GrammarError::Schema(m) => write!(f, "json-schema error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for GrammarError {}
+
+/// A compiled grammar. Rule 0 is always the root.
+#[derive(Clone, Debug, Default)]
+pub struct Grammar {
+    pub rules: Vec<Rule>,
+}
+
+impl Grammar {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an empty rule, returning its index.
+    pub fn add_rule(&mut self, name: impl Into<String>) -> usize {
+        self.rules.push(Rule { name: name.into(), alts: Vec::new() });
+        self.rules.len() - 1
+    }
+
+    pub fn rule_index(&self, name: &str) -> Option<usize> {
+        self.rules.iter().position(|r| r.name == name)
+    }
+
+    /// Append an alternative to a rule.
+    pub fn add_alt(&mut self, rule: usize, alt: Vec<Sym>) {
+        self.rules[rule].alts.push(alt);
+    }
+
+    /// Helper: a literal byte string as a symbol sequence.
+    pub fn lit(s: &[u8]) -> Vec<Sym> {
+        s.iter().map(|&b| Sym::Class(ByteClass::byte(b))).collect()
+    }
+
+    /// Desugar `inner*` into a fresh rule R -> inner R | ε, returning Ref(R).
+    pub fn star(&mut self, inner: Vec<Sym>, hint: &str) -> Sym {
+        let r = self.add_rule(format!("{hint}*"));
+        let mut alt = inner;
+        alt.push(Sym::Ref(r));
+        self.add_alt(r, alt);
+        self.add_alt(r, Vec::new());
+        Sym::Ref(r)
+    }
+
+    /// Desugar `inner+` into inner inner*.
+    pub fn plus(&mut self, inner: Vec<Sym>, hint: &str) -> Vec<Sym> {
+        let star = self.star(inner.clone(), hint);
+        let mut seq = inner;
+        seq.push(star);
+        seq
+    }
+
+    /// Desugar `inner?` into a fresh rule R -> inner | ε.
+    pub fn opt(&mut self, inner: Vec<Sym>, hint: &str) -> Sym {
+        let r = self.add_rule(format!("{hint}?"));
+        self.add_alt(r, inner);
+        self.add_alt(r, Vec::new());
+        Sym::Ref(r)
+    }
+
+    /// Wrap alternatives into a single referencable rule.
+    pub fn choice(&mut self, alts: Vec<Vec<Sym>>, hint: &str) -> Sym {
+        let r = self.add_rule(format!("{hint}|"));
+        for a in alts {
+            self.add_alt(r, a);
+        }
+        Sym::Ref(r)
+    }
+
+    /// Validate: all refs in range, root exists and is rule 0.
+    pub fn validate(&self) -> Result<(), GrammarError> {
+        if self.rules.is_empty() {
+            return Err(GrammarError::NoRoot);
+        }
+        for rule in &self.rules {
+            for alt in &rule.alts {
+                for sym in alt {
+                    if let Sym::Ref(i) = sym {
+                        if *i >= self.rules.len() {
+                            return Err(GrammarError::UnknownRule(format!("#{i}")));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether `rule` can derive the empty string (used by the matcher's
+    /// epsilon closure and by tests).
+    pub fn nullable(&self) -> Vec<bool> {
+        let n = self.rules.len();
+        let mut nullable = vec![false; n];
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for (i, rule) in self.rules.iter().enumerate() {
+                if nullable[i] {
+                    continue;
+                }
+                let can = rule.alts.iter().any(|alt| {
+                    alt.iter().all(|s| match s {
+                        Sym::Class(_) => false,
+                        Sym::Ref(r) => nullable[*r],
+                    })
+                });
+                if can {
+                    nullable[i] = true;
+                    changed = true;
+                }
+            }
+        }
+        nullable
+    }
+}

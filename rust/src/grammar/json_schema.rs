@@ -1,0 +1,479 @@
+//! JSON Schema -> grammar compiler (the `response_format: json_schema`
+//! path of the OpenAI-style API, WebLLM §2.1).
+//!
+//! Supported subset (documented in DESIGN.md): object/properties/required
+//! (additionalProperties treated as false), string, number, integer,
+//! boolean, null, enum (scalars), const, array/items/minItems/maxItems,
+//! anyOf/oneOf, $ref into #/$defs or #/definitions (recursion allowed),
+//! and the empty schema (any JSON value).
+//!
+//! Emitted JSON is **compact** (no inter-token whitespace) — the same
+//! canonicalization XGrammar defaults to; it keeps token masks tight.
+
+use super::grammar::{ByteClass, Grammar, GrammarError, Sym};
+use crate::json::Value;
+use std::collections::HashMap;
+
+pub fn schema_to_grammar(schema: &Value) -> Result<Grammar, GrammarError> {
+    let mut c = Compiler {
+        g: Grammar::new(),
+        root_schema: schema,
+        refs: HashMap::new(),
+        shared: HashMap::new(),
+    };
+    let root = c.g.add_rule("root");
+    debug_assert_eq!(root, 0);
+    let seq = c.compile(schema, "root")?;
+    c.g.add_alt(0, seq);
+    c.g.validate()?;
+    Ok(c.g)
+}
+
+struct Compiler<'a> {
+    g: Grammar,
+    root_schema: &'a Value,
+    /// $ref path -> rule index (memoized; enables recursive schemas).
+    refs: HashMap<String, usize>,
+    /// Shared primitive rules ("string", "number", ...) by name.
+    shared: HashMap<&'static str, usize>,
+}
+
+impl<'a> Compiler<'a> {
+    fn err(m: impl Into<String>) -> GrammarError {
+        GrammarError::Schema(m.into())
+    }
+
+    fn compile(&mut self, schema: &Value, hint: &str) -> Result<Vec<Sym>, GrammarError> {
+        match schema {
+            // `true` / `{}` -> any JSON value.
+            Value::Bool(true) => Ok(vec![Sym::Ref(self.any_value())]),
+            Value::Bool(false) => Err(Self::err("schema 'false' matches nothing")),
+            Value::Object(o) if o.is_empty() => Ok(vec![Sym::Ref(self.any_value())]),
+            Value::Object(_) => self.compile_object_schema(schema, hint),
+            _ => Err(Self::err("schema must be an object or boolean")),
+        }
+    }
+
+    fn compile_object_schema(
+        &mut self,
+        schema: &Value,
+        hint: &str,
+    ) -> Result<Vec<Sym>, GrammarError> {
+        if let Some(r) = schema.get("$ref").and_then(Value::as_str) {
+            return Ok(vec![Sym::Ref(self.resolve_ref(r)?)]);
+        }
+        if let Some(c) = schema.get("const") {
+            return Ok(Grammar::lit(crate::json::to_string(c).as_bytes()));
+        }
+        if let Some(e) = schema.get("enum").and_then(Value::as_array) {
+            let alts: Vec<Vec<Sym>> = e
+                .iter()
+                .map(|v| Grammar::lit(crate::json::to_string(v).as_bytes()))
+                .collect();
+            if alts.is_empty() {
+                return Err(Self::err("empty enum"));
+            }
+            return Ok(vec![self.g.choice(alts, hint)]);
+        }
+        for key in ["anyOf", "oneOf"] {
+            if let Some(list) = schema.get(key).and_then(Value::as_array) {
+                let mut alts = Vec::new();
+                for (i, s) in list.iter().enumerate() {
+                    alts.push(self.compile(s, &format!("{hint}.{key}{i}"))?);
+                }
+                if alts.is_empty() {
+                    return Err(Self::err(format!("empty {key}")));
+                }
+                return Ok(vec![self.g.choice(alts, hint)]);
+            }
+        }
+
+        match schema.get("type").and_then(Value::as_str) {
+            Some("string") => Ok(vec![Sym::Ref(self.string_rule())]),
+            Some("number") => Ok(vec![Sym::Ref(self.number_rule())]),
+            Some("integer") => Ok(vec![Sym::Ref(self.integer_rule())]),
+            Some("boolean") => {
+                Ok(vec![self.g.choice(
+                    vec![Grammar::lit(b"true"), Grammar::lit(b"false")],
+                    hint,
+                )])
+            }
+            Some("null") => Ok(Grammar::lit(b"null")),
+            Some("object") => self.object_rule(schema, hint),
+            Some("array") => self.array_rule(schema, hint),
+            Some(other) => Err(Self::err(format!("unsupported type '{other}'"))),
+            None => Ok(vec![Sym::Ref(self.any_value())]),
+        }
+    }
+
+    fn resolve_ref(&mut self, path: &str) -> Result<usize, GrammarError> {
+        if let Some(&idx) = self.refs.get(path) {
+            return Ok(idx);
+        }
+        let target = path
+            .strip_prefix("#/$defs/")
+            .or_else(|| path.strip_prefix("#/definitions/"))
+            .ok_or_else(|| Self::err(format!("unsupported $ref '{path}'")))?;
+        let defs = self
+            .root_schema
+            .get("$defs")
+            .or_else(|| self.root_schema.get("definitions"))
+            .ok_or_else(|| Self::err("no $defs in schema"))?;
+        let sub = defs
+            .get(target)
+            .ok_or_else(|| Self::err(format!("unresolved $ref '{path}'")))?
+            .clone();
+        // Pre-register the rule to allow recursion, then fill it.
+        let rule = self.g.add_rule(format!("ref:{target}"));
+        self.refs.insert(path.to_string(), rule);
+        let seq = self.compile(&sub, target)?;
+        self.g.add_alt(rule, seq);
+        Ok(rule)
+    }
+
+    fn object_rule(&mut self, schema: &Value, hint: &str) -> Result<Vec<Sym>, GrammarError> {
+        let empty = crate::json::Map::new();
+        let props = schema
+            .get("properties")
+            .and_then(Value::as_object)
+            .unwrap_or(&empty)
+            .clone();
+        let required: Vec<String> = schema
+            .get("required")
+            .and_then(Value::as_array)
+            .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        for r in &required {
+            if !props.contains_key(r) {
+                return Err(Self::err(format!("required property '{r}' not declared")));
+            }
+        }
+
+        if props.is_empty() {
+            // {"type":"object"} with no properties -> any object.
+            return Ok(vec![Sym::Ref(self.any_object())]);
+        }
+
+        // Compile each property's value grammar + its `"name":` prefix.
+        struct Prop {
+            prefix: Vec<u8>,
+            value: Vec<Sym>,
+            required: bool,
+        }
+        let mut plist: Vec<Prop> = Vec::new();
+        for (name, sub) in props.iter() {
+            let mut prefix = crate::json::to_string(&Value::String(name.clone())).into_bytes();
+            prefix.push(b':');
+            plist.push(Prop {
+                prefix,
+                value: self.compile(sub, &format!("{hint}.{name}"))?,
+                required: required.iter().any(|r| r == name),
+            });
+        }
+
+        // members(i, first): the tail of the member list starting at
+        // property i, knowing whether a member was already emitted.
+        // Built back-to-front; at most 2 rules per property.
+        let n = plist.len();
+        let mut memo: HashMap<(usize, bool), usize> = HashMap::new();
+        for i in (0..n).rev() {
+            for &first in &[false, true] {
+                let rule = self.g.add_rule(format!("{hint}.members{i}{}", if first { "F" } else { "" }));
+                memo.insert((i, first), rule);
+            }
+        }
+        // Fill alternatives (memo ids already fixed).
+        for i in (0..n).rev() {
+            for &first in &[false, true] {
+                let rule = memo[&(i, first)];
+                let tail: Vec<Sym> = if i + 1 < n {
+                    vec![Sym::Ref(memo[&(i + 1, false)])]
+                } else {
+                    Vec::new()
+                };
+                let tail_skip: Vec<Sym> = if i + 1 < n {
+                    vec![Sym::Ref(memo[&(i + 1, first)])]
+                } else {
+                    Vec::new()
+                };
+                // emit property i
+                let mut alt = Vec::new();
+                if !first {
+                    alt.extend(Grammar::lit(b","));
+                }
+                alt.extend(Grammar::lit(&plist[i].prefix));
+                alt.extend(plist[i].value.clone());
+                alt.extend(tail);
+                self.g.add_alt(rule, alt);
+                // or skip it, when optional
+                if !plist[i].required {
+                    self.g.add_alt(rule, tail_skip);
+                }
+            }
+        }
+
+        let mut seq = Grammar::lit(b"{");
+        seq.push(Sym::Ref(memo[&(0, true)]));
+        seq.extend(Grammar::lit(b"}"));
+        Ok(seq)
+    }
+
+    fn array_rule(&mut self, schema: &Value, hint: &str) -> Result<Vec<Sym>, GrammarError> {
+        let item = match schema.get("items") {
+            Some(s) => self.compile(s, &format!("{hint}.items"))?,
+            None => vec![Sym::Ref(self.any_value())],
+        };
+        let min = schema.get("minItems").and_then(Value::as_usize).unwrap_or(0);
+        let max = schema.get("maxItems").and_then(Value::as_usize);
+        if let Some(max) = max {
+            if max < min {
+                return Err(Self::err("maxItems < minItems"));
+            }
+            if max > 64 {
+                return Err(Self::err("maxItems > 64 unsupported"));
+            }
+        }
+
+        let mut seq = Grammar::lit(b"[");
+        match (min, max) {
+            (0, None) => {
+                // [ (item ("," item)*)? ]
+                let mut rep = Grammar::lit(b",");
+                rep.extend(item.clone());
+                let more = self.g.star(rep, hint);
+                let mut inner = item;
+                inner.push(more);
+                seq.push(self.g.opt(inner, hint));
+            }
+            (min, None) => {
+                for i in 0..min {
+                    if i > 0 {
+                        seq.extend(Grammar::lit(b","));
+                    }
+                    seq.extend(item.clone());
+                }
+                let mut rep = Grammar::lit(b",");
+                rep.extend(item.clone());
+                seq.push(self.g.star(rep, hint));
+            }
+            (min, Some(max)) => {
+                for i in 0..min {
+                    if i > 0 {
+                        seq.extend(Grammar::lit(b","));
+                    }
+                    seq.extend(item.clone());
+                }
+                // Optional tail built back-to-front so commas nest
+                // correctly: (,item (,item ...)?)? — never "[,x]".
+                let mut tail: Option<Sym> = None;
+                for i in (min..max).rev() {
+                    let mut inner = Vec::new();
+                    if i > 0 {
+                        inner.extend(Grammar::lit(b","));
+                    }
+                    inner.extend(item.clone());
+                    if let Some(t) = tail.take() {
+                        inner.push(t);
+                    }
+                    tail = Some(self.g.opt(inner, hint));
+                }
+                if let Some(t) = tail {
+                    seq.push(t);
+                }
+            }
+        }
+        seq.extend(Grammar::lit(b"]"));
+        Ok(seq)
+    }
+
+    // -- shared primitive rules ---------------------------------------------
+
+    fn shared_rule(&mut self, name: &'static str, build: impl FnOnce(&mut Grammar, usize)) -> usize {
+        if let Some(&r) = self.shared.get(name) {
+            return r;
+        }
+        let r = self.g.add_rule(name);
+        self.shared.insert(name, r);
+        build(&mut self.g, r);
+        r
+    }
+
+    /// JSON string: `"` chars `"` with escapes. Multibyte characters are
+    /// modeled as *valid UTF-8 sequences* (lead byte + the right number of
+    /// continuation bytes, surrogate range excluded), so byte-level token
+    /// masking can never strand a partial character in the output —
+    /// the same treatment XGrammar applies.
+    fn string_rule(&mut self) -> usize {
+        self.shared_rule("json-string", |g, r| {
+            let cls = |ranges: Vec<(u8, u8)>| Sym::Class(ByteClass { ranges, negated: false });
+            let cont = || cls(vec![(0x80, 0xBF)]);
+            // ASCII printable minus quote/backslash.
+            let ascii = cls(vec![(0x20, 0x21), (0x23, 0x5B), (0x5D, 0x7F)]);
+            let utf8 = g.add_rule("json-utf8-char");
+            g.add_alt(utf8, vec![ascii]);
+            g.add_alt(utf8, vec![cls(vec![(0xC2, 0xDF)]), cont()]);
+            g.add_alt(utf8, vec![cls(vec![(0xE0, 0xE0)]), cls(vec![(0xA0, 0xBF)]), cont()]);
+            g.add_alt(utf8, vec![cls(vec![(0xE1, 0xEC), (0xEE, 0xEF)]), cont(), cont()]);
+            g.add_alt(utf8, vec![cls(vec![(0xED, 0xED)]), cls(vec![(0x80, 0x9F)]), cont()]);
+            g.add_alt(utf8, vec![cls(vec![(0xF0, 0xF0)]), cls(vec![(0x90, 0xBF)]), cont(), cont()]);
+            g.add_alt(utf8, vec![cls(vec![(0xF1, 0xF3)]), cont(), cont(), cont()]);
+            g.add_alt(utf8, vec![cls(vec![(0xF4, 0xF4)]), cls(vec![(0x80, 0x8F)]), cont(), cont()]);
+            let plain = Sym::Ref(utf8);
+            let esc_simple = Sym::Class(ByteClass {
+                ranges: [b'"', b'\\', b'/', b'b', b'f', b'n', b'r', b't']
+                    .iter()
+                    .map(|&c| (c, c))
+                    .collect(),
+                negated: false,
+            });
+            let hex = || {
+                Sym::Class(ByteClass {
+                    ranges: vec![(b'0', b'9'), (b'a', b'f'), (b'A', b'F')],
+                    negated: false,
+                })
+            };
+            let chars = g.add_rule("json-string-chars");
+            // chars := ε | plain chars | '\' esc chars
+            g.add_alt(chars, Vec::new());
+            g.add_alt(chars, vec![plain, Sym::Ref(chars)]);
+            let mut esc = vec![Sym::Class(ByteClass::byte(b'\\'))];
+            let esc_alt = g.add_rule("json-escape");
+            g.add_alt(esc_alt, vec![esc_simple]);
+            g.add_alt(
+                esc_alt,
+                vec![Sym::Class(ByteClass::byte(b'u')), hex(), hex(), hex(), hex()],
+            );
+            esc.push(Sym::Ref(esc_alt));
+            esc.push(Sym::Ref(chars));
+            g.add_alt(chars, esc);
+
+            let mut alt = Grammar::lit(b"\"");
+            alt.push(Sym::Ref(chars));
+            alt.extend(Grammar::lit(b"\""));
+            g.add_alt(r, alt);
+        })
+    }
+
+    /// JSON number.
+    fn number_rule(&mut self) -> usize {
+        let int = self.integer_rule();
+        self.shared_rule("json-number", |g, r| {
+            let digit = || Sym::Class(ByteClass { ranges: vec![(b'0', b'9')], negated: false });
+            // frac := "." [0-9]+ ; exp := [eE] [+-]? [0-9]+
+            let digits1 = {
+                let d = g.add_rule("digits");
+                g.add_alt(d, vec![digit()]);
+                g.add_alt(d, vec![digit(), Sym::Ref(d)]);
+                d
+            };
+            let frac = g.add_rule("frac?");
+            g.add_alt(frac, Vec::new());
+            g.add_alt(frac, {
+                let mut v = Grammar::lit(b".");
+                v.push(Sym::Ref(digits1));
+                v
+            });
+            let exp = g.add_rule("exp?");
+            g.add_alt(exp, Vec::new());
+            {
+                let e = Sym::Class(ByteClass { ranges: vec![(b'e', b'e'), (b'E', b'E')], negated: false });
+                let sign = g.add_rule("sign?");
+                g.add_alt(sign, Vec::new());
+                g.add_alt(
+                    sign,
+                    vec![Sym::Class(ByteClass { ranges: vec![(b'+', b'+'), (b'-', b'-')], negated: false })],
+                );
+                g.add_alt(exp, vec![e, Sym::Ref(sign), Sym::Ref(digits1)]);
+            }
+            g.add_alt(r, vec![Sym::Ref(int), Sym::Ref(frac), Sym::Ref(exp)]);
+        })
+    }
+
+    /// JSON integer: -? (0 | [1-9][0-9]*)
+    fn integer_rule(&mut self) -> usize {
+        self.shared_rule("json-integer", |g, r| {
+            let neg = g.add_rule("neg?");
+            g.add_alt(neg, Vec::new());
+            g.add_alt(neg, Grammar::lit(b"-"));
+            let nz = Sym::Class(ByteClass { ranges: vec![(b'1', b'9')], negated: false });
+            let d0 = g.add_rule("digits*");
+            g.add_alt(d0, Vec::new());
+            g.add_alt(
+                d0,
+                vec![
+                    Sym::Class(ByteClass { ranges: vec![(b'0', b'9')], negated: false }),
+                    Sym::Ref(d0),
+                ],
+            );
+            g.add_alt(r, vec![Sym::Ref(neg), Sym::Class(ByteClass::byte(b'0'))]);
+            g.add_alt(r, vec![Sym::Ref(neg), nz, Sym::Ref(d0)]);
+        })
+    }
+
+    /// Any JSON value (compact form).
+    fn any_value(&mut self) -> usize {
+        if let Some(&r) = self.shared.get("json-value") {
+            return r;
+        }
+        let r = self.g.add_rule("json-value");
+        self.shared.insert("json-value", r);
+        let string = self.string_rule();
+        let number = self.number_rule();
+        let object = self.any_object_inner(r);
+        let array = self.any_array_inner(r);
+        self.g.add_alt(r, vec![Sym::Ref(string)]);
+        self.g.add_alt(r, vec![Sym::Ref(number)]);
+        self.g.add_alt(r, vec![Sym::Ref(object)]);
+        self.g.add_alt(r, vec![Sym::Ref(array)]);
+        self.g.add_alt(r, Grammar::lit(b"true"));
+        self.g.add_alt(r, Grammar::lit(b"false"));
+        self.g.add_alt(r, Grammar::lit(b"null"));
+        r
+    }
+
+    fn any_object(&mut self) -> usize {
+        let value = self.any_value();
+        self.any_object_inner(value)
+    }
+
+    fn any_object_inner(&mut self, value: usize) -> usize {
+        if let Some(&r) = self.shared.get("json-object") {
+            return r;
+        }
+        let r = self.g.add_rule("json-object");
+        self.shared.insert("json-object", r);
+        let string = self.string_rule();
+        // member := string ":" value ; obj := "{" (member ("," member)*)? "}"
+        let member = self.g.add_rule("json-member");
+        let mut m = vec![Sym::Ref(string)];
+        m.extend(Grammar::lit(b":"));
+        m.push(Sym::Ref(value));
+        self.g.add_alt(member, m);
+        let mut rep = Grammar::lit(b",");
+        rep.push(Sym::Ref(member));
+        let more = self.g.star(rep, "json-object");
+        let inner = self.g.opt(vec![Sym::Ref(member), more], "json-object");
+        let mut alt = Grammar::lit(b"{");
+        alt.push(inner);
+        alt.extend(Grammar::lit(b"}"));
+        self.g.add_alt(r, alt);
+        r
+    }
+
+    fn any_array_inner(&mut self, value: usize) -> usize {
+        if let Some(&r) = self.shared.get("json-array") {
+            return r;
+        }
+        let r = self.g.add_rule("json-array");
+        self.shared.insert("json-array", r);
+        let mut rep = Grammar::lit(b",");
+        rep.push(Sym::Ref(value));
+        let more = self.g.star(rep, "json-array");
+        let inner = self.g.opt(vec![Sym::Ref(value), more], "json-array");
+        let mut alt = Grammar::lit(b"[");
+        alt.push(inner);
+        alt.extend(Grammar::lit(b"]"));
+        self.g.add_alt(r, alt);
+        r
+    }
+}

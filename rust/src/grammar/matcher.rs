@@ -1,0 +1,414 @@
+//! Pushdown matcher + vocabulary masking.
+//!
+//! The automaton state is a *set* of stacks (the grammar is
+//! nondeterministic); each stack is a list of (rule, alt, dot) frames.
+//! `advance(byte)` steps every stack; a stack survives if some path
+//! consumes the byte. The state is "accepting" when some stack has fully
+//! unwound (the root derivation is complete).
+//!
+//! Token masking walks the tokenizer vocabulary and simulates each
+//! token's bytes (llama.cpp-style), with two XGrammar-inspired
+//! accelerations:
+//!   * an adaptive mask cache keyed by the state fingerprint — decode
+//!     revisits the same automaton states constantly (e.g. "inside a JSON
+//!     string"), so masks are computed once per distinct state;
+//!   * a per-state first-byte filter: tokens whose first byte can't be
+//!     consumed are rejected without simulating the rest.
+
+use super::grammar::{Grammar, Sym};
+use std::collections::HashMap;
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::rc::Rc;
+
+/// One stack frame: position `dot` within alternative `alt` of `rule`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct Frame {
+    rule: u32,
+    alt: u32,
+    dot: u32,
+}
+
+type Stack = Vec<Frame>;
+
+/// Matcher over a compiled grammar.
+pub struct GrammarMatcher {
+    grammar: Rc<Grammar>,
+    stacks: Vec<Stack>,
+    /// Bytes accepted so far (for error reporting / rewind in tests).
+    consumed: usize,
+}
+
+impl GrammarMatcher {
+    pub fn new(grammar: Rc<Grammar>) -> Self {
+        let mut m = Self { grammar, stacks: Vec::new(), consumed: 0 };
+        // Seed: one stack per root alternative, then epsilon-close.
+        let root_alts = m.grammar.rules[0].alts.len();
+        for alt in 0..root_alts {
+            m.push_closed(vec![Frame { rule: 0, alt: alt as u32, dot: 0 }]);
+        }
+        m.dedup();
+        m
+    }
+
+    pub fn consumed(&self) -> usize {
+        self.consumed
+    }
+
+    /// True if the input so far is a complete derivation of the grammar.
+    pub fn is_accepting(&self) -> bool {
+        self.stacks.iter().any(|s| s.is_empty())
+    }
+
+    /// True if no continuation exists (dead state; only possible after
+    /// feeding bytes the grammar rejects — the engine never does).
+    pub fn is_dead(&self) -> bool {
+        self.stacks.is_empty()
+    }
+
+    /// Fingerprint of the automaton state (mask-cache key).
+    pub fn fingerprint(&self) -> u64 {
+        let mut keys: Vec<u64> = self
+            .stacks
+            .iter()
+            .map(|s| {
+                let mut h = DefaultHasher::new();
+                s.hash(&mut h);
+                h.finish()
+            })
+            .collect();
+        keys.sort_unstable();
+        let mut h = DefaultHasher::new();
+        keys.hash(&mut h);
+        h.finish()
+    }
+
+    /// Feed one byte. Returns false (and leaves the state dead) if no
+    /// stack can consume it.
+    pub fn advance(&mut self, b: u8) -> bool {
+        let old = std::mem::take(&mut self.stacks);
+        for stack in &old {
+            self.step_byte(stack, b);
+        }
+        self.dedup();
+        if self.stacks.is_empty() {
+            false
+        } else {
+            self.consumed += 1;
+            true
+        }
+    }
+
+    /// Feed a byte string; false if rejected at any point (state is then
+    /// dead — callers should treat the request as failed).
+    pub fn advance_bytes(&mut self, bytes: &[u8]) -> bool {
+        bytes.iter().all(|&b| self.advance(b))
+    }
+
+    /// Would `bytes` be accepted from the current state? (No mutation.)
+    pub fn test_bytes(&self, bytes: &[u8]) -> bool {
+        let mut stacks: Vec<Stack> = self.stacks.clone();
+        for &b in bytes {
+            let mut next = TempState { grammar: &self.grammar, stacks: Vec::new() };
+            for stack in &stacks {
+                next.step_byte(stack, b);
+            }
+            stacks = next.stacks;
+            if stacks.is_empty() {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Accept a sampled token's bytes (engine hot path).
+    pub fn accept_token(&mut self, token_bytes: &[u8]) -> bool {
+        self.advance_bytes(token_bytes)
+    }
+
+    /// Compute the allowed-token mask for the whole vocabulary.
+    /// `token_bytes(i)` supplies each token's byte string; empty strings
+    /// (specials/unused) are banned except `eos_allowed` handling done by
+    /// the caller via `is_accepting`.
+    pub fn token_mask<'a>(
+        &self,
+        vocab_size: usize,
+        token_bytes: impl Fn(u32) -> &'a [u8],
+    ) -> Vec<bool> {
+        // First-byte filter: which bytes are consumable right now?
+        let mut first = [false; 256];
+        for stack in &self.stacks {
+            self.collect_first_bytes(stack, &mut first);
+        }
+        let mut mask = vec![false; vocab_size];
+        for i in 0..vocab_size {
+            let bytes = token_bytes(i as u32);
+            if bytes.is_empty() {
+                continue;
+            }
+            if !first[bytes[0] as usize] {
+                continue;
+            }
+            mask[i] = if bytes.len() == 1 { true } else { self.test_bytes(bytes) };
+        }
+        mask
+    }
+
+    // -- internals ----------------------------------------------------------
+
+    /// Epsilon-close `stack` (expand Refs / pop completed frames) and add
+    /// every resulting configuration.
+    fn push_closed(&mut self, stack: Stack) {
+        let grammar = self.grammar.clone();
+        close_into(&grammar, stack, &mut self.stacks);
+    }
+
+    fn step_byte(&mut self, stack: &Stack, b: u8) {
+        let grammar = self.grammar.clone();
+        step_byte_into(&grammar, stack, b, &mut self.stacks);
+    }
+
+    fn collect_first_bytes(&self, stack: &Stack, first: &mut [bool; 256]) {
+        // Top frame is epsilon-closed already: its dot sits on a Class or
+        // the stack is empty (accepting; no byte consumable).
+        if let Some(top) = stack.last() {
+            let alt = &self.grammar.rules[top.rule as usize].alts[top.alt as usize];
+            if let Some(Sym::Class(c)) = alt.get(top.dot as usize) {
+                for byte in 0..=255u8 {
+                    if !first[byte as usize] && c.matches(byte) {
+                        first[byte as usize] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    fn dedup(&mut self) {
+        dedup_stacks(&mut self.stacks);
+    }
+}
+
+fn dedup_stacks(stacks: &mut Vec<Stack>) {
+    if stacks.len() <= 1 {
+        return;
+    }
+    let mut seen = std::collections::HashSet::new();
+    stacks.retain(|s| {
+        let mut h = DefaultHasher::new();
+        s.hash(&mut h);
+        seen.insert(h.finish())
+    });
+    // Nondeterminism bound: pathological grammars could explode; keep
+    // the engine deterministic by capping (documented limitation).
+    const MAX_STACKS: usize = 512;
+    if stacks.len() > MAX_STACKS {
+        stacks.truncate(MAX_STACKS);
+    }
+}
+
+/// Stateless helper so `test_bytes` can reuse the same stepping code
+/// without borrowing issues.
+struct TempState<'g> {
+    grammar: &'g Grammar,
+    stacks: Vec<Stack>,
+}
+
+impl<'g> TempState<'g> {
+    fn step_byte(&mut self, stack: &Stack, b: u8) {
+        step_byte_into(self.grammar, stack, b, &mut self.stacks);
+    }
+}
+
+/// Epsilon closure: expand until every stack's top dot is at a Class (or
+/// the stack is empty). Pushes results into `out`.
+fn close_into(grammar: &Grammar, stack: Stack, out: &mut Vec<Stack>) {
+    // Depth-first with an explicit worklist; a visited set guards against
+    // cyclic epsilon derivations (e.g. R -> R | ...).
+    let mut work = vec![stack];
+    let mut visited: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    while let Some(mut s) = work.pop() {
+        // Pop completed frames.
+        loop {
+            match s.last() {
+                None => break,
+                Some(top) => {
+                    let alt = &grammar.rules[top.rule as usize].alts[top.alt as usize];
+                    if top.dot as usize >= alt.len() {
+                        s.pop();
+                        // advance the parent frame past the Ref
+                        if let Some(parent) = s.last_mut() {
+                            parent.dot += 1;
+                        }
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+        let mut h = DefaultHasher::new();
+        s.hash(&mut h);
+        if !visited.insert(h.finish()) {
+            continue;
+        }
+        match s.last() {
+            None => out.push(s), // accepting configuration
+            Some(top) => {
+                let alt = &grammar.rules[top.rule as usize].alts[top.alt as usize];
+                match &alt[top.dot as usize] {
+                    Sym::Class(_) => out.push(s),
+                    Sym::Ref(r) => {
+                        // Tail-call elimination: if the Ref is the frame's
+                        // last symbol, the parent frame has no further work
+                        // once the child completes — replace it instead of
+                        // stacking. Keeps right-recursive rules (the `*`/`+`
+                        // desugaring) at constant stack depth, which also
+                        // makes automaton states recur => mask-cache hits.
+                        let is_tail = top.dot as usize == alt.len() - 1;
+                        let n_alts = grammar.rules[*r].alts.len();
+                        for a in 0..n_alts {
+                            let mut child = s.clone();
+                            if is_tail {
+                                child.pop();
+                            }
+                            child.push(Frame { rule: *r as u32, alt: a as u32, dot: 0 });
+                            work.push(child);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Consume `b` at the top of `stack` (which must be closed: top dot on a
+/// Class) and epsilon-close the successor into `out`.
+fn step_byte_into(grammar: &Grammar, stack: &Stack, b: u8, out: &mut Vec<Stack>) {
+    let Some(top) = stack.last() else { return };
+    let alt = &grammar.rules[top.rule as usize].alts[top.alt as usize];
+    if let Some(Sym::Class(c)) = alt.get(top.dot as usize) {
+        if c.matches(b) {
+            let mut next = stack.clone();
+            next.last_mut().unwrap().dot += 1;
+            close_into(grammar, next, out);
+        }
+    }
+}
+
+/// Byte-trie over the tokenizer vocabulary. Token-mask computation walks
+/// the trie once per automaton state (shared token prefixes are stepped
+/// once), instead of simulating every token independently.
+pub struct VocabTrie {
+    /// Arena of nodes; node 0 is the root.
+    children: Vec<Vec<(u8, u32)>>,
+    /// Token ids that end at each node.
+    terminal: Vec<Vec<u32>>,
+    vocab_size: usize,
+}
+
+impl VocabTrie {
+    pub fn build<'a>(vocab_size: usize, token_bytes: impl Fn(u32) -> &'a [u8]) -> Self {
+        let mut t = Self {
+            children: vec![Vec::new()],
+            terminal: vec![Vec::new()],
+            vocab_size,
+        };
+        for id in 0..vocab_size as u32 {
+            let bytes = token_bytes(id);
+            if bytes.is_empty() {
+                continue; // specials/unused: never grammar-eligible
+            }
+            let mut node = 0usize;
+            for &b in bytes {
+                node = match t.children[node].iter().find(|(c, _)| *c == b) {
+                    Some(&(_, n)) => n as usize,
+                    None => {
+                        let n = t.children.len();
+                        t.children.push(Vec::new());
+                        t.terminal.push(Vec::new());
+                        t.children[node].push((b, n as u32));
+                        n
+                    }
+                };
+            }
+            t.terminal[node].push(id);
+        }
+        t
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.children.len()
+    }
+}
+
+impl GrammarMatcher {
+    /// Trie-accelerated mask: one DFS over the vocabulary trie, stepping
+    /// the stack-set per *distinct byte prefix* instead of per token.
+    pub fn token_mask_trie(&self, trie: &VocabTrie) -> Vec<bool> {
+        let mut mask = vec![false; trie.vocab_size];
+        // Iterative DFS carrying the stack-set per node.
+        let mut work: Vec<(u32, Vec<Stack>)> = vec![(0, self.stacks.clone())];
+        while let Some((node, stacks)) = work.pop() {
+            for &(byte, child) in &trie.children[node as usize] {
+                let mut next: Vec<Stack> = Vec::new();
+                for stack in &stacks {
+                    step_byte_into(&self.grammar, stack, byte, &mut next);
+                }
+                if next.is_empty() {
+                    continue;
+                }
+                dedup_stacks(&mut next);
+                for &tok in &trie.terminal[child as usize] {
+                    mask[tok as usize] = true;
+                }
+                if !trie.children[child as usize].is_empty() {
+                    work.push((child, next));
+                }
+            }
+        }
+        mask
+    }
+}
+
+/// Adaptive token-mask cache: state fingerprint -> mask.
+///
+/// XGrammar precomputes "context-independent token" masks per grammar
+/// position at compile time; here the equivalent saving comes from
+/// caching at runtime — the first visit to an automaton state pays the
+/// full vocabulary walk, subsequent visits are a hash lookup.
+pub struct MaskCache {
+    trie: Rc<VocabTrie>,
+    cache: HashMap<u64, Rc<Vec<bool>>>,
+    hits: u64,
+    misses: u64,
+    capacity: usize,
+}
+
+impl MaskCache {
+    pub fn new(trie: Rc<VocabTrie>, capacity: usize) -> Self {
+        Self { trie, cache: HashMap::new(), hits: 0, misses: 0, capacity }
+    }
+
+    pub fn get_or_compute(&mut self, matcher: &GrammarMatcher) -> Rc<Vec<bool>> {
+        let key = matcher.fingerprint();
+        if let Some(mask) = self.cache.get(&key) {
+            self.hits += 1;
+            return mask.clone();
+        }
+        self.misses += 1;
+        let mask = Rc::new(matcher.token_mask_trie(&self.trie));
+        if self.cache.len() >= self.capacity {
+            // Simple full-flush eviction; states recur quickly.
+            self.cache.clear();
+        }
+        self.cache.insert(key, mask.clone());
+        mask
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}

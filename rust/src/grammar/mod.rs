@@ -1,0 +1,29 @@
+//! Structured generation engine (the paper's XGrammar-in-WASM subsystem,
+//! §2.1/§2.2 — here in native Rust).
+//!
+//! Pipeline:
+//!   * a grammar arrives as GBNF-style EBNF text (`ebnf`) or is compiled
+//!     from a JSON Schema (`json_schema`), producing the byte-level CFG
+//!     IR in `grammar`;
+//!   * `matcher` runs the grammar as a pushdown automaton over a *set* of
+//!     stacks (nondeterminism), advancing one byte at a time;
+//!   * per decode step the matcher produces a vocabulary bitmask for the
+//!     sampler (`GrammarMatcher::token_mask`), with an adaptive mask
+//!     cache keyed by the automaton state fingerprint — the XGrammar
+//!     "context-independent tokens" precomputation, adapted.
+//!
+//! The engine applies the mask in `sampler::LogitsProcessor::sample`, and
+//! `accept_token` advances the automaton with whatever was sampled.
+
+mod ebnf;
+mod grammar;
+mod json_schema;
+mod matcher;
+
+pub use ebnf::parse_ebnf;
+pub use grammar::{Grammar, GrammarError, Sym};
+pub use json_schema::schema_to_grammar;
+pub use matcher::{GrammarMatcher, MaskCache, VocabTrie};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,449 @@
+use super::*;
+use crate::json::parse;
+use crate::testutil::prop::Runner;
+use std::rc::Rc;
+
+fn matcher(g: Grammar) -> GrammarMatcher {
+    GrammarMatcher::new(Rc::new(g))
+}
+
+fn accepts(g: &Rc<Grammar>, input: &str) -> bool {
+    let mut m = GrammarMatcher::new(g.clone());
+    m.advance_bytes(input.as_bytes()) && m.is_accepting()
+}
+
+fn rejects_prefix(g: &Rc<Grammar>, input: &str) -> bool {
+    let mut m = GrammarMatcher::new(g.clone());
+    !m.advance_bytes(input.as_bytes())
+}
+
+// -- EBNF parsing -----------------------------------------------------------
+
+#[test]
+fn ebnf_literal_and_alternation() {
+    let g = Rc::new(parse_ebnf(r#"root ::= "yes" | "no""#).unwrap());
+    assert!(accepts(&g, "yes"));
+    assert!(accepts(&g, "no"));
+    assert!(!accepts(&g, "ye"));
+    assert!(rejects_prefix(&g, "maybe"));
+}
+
+#[test]
+fn ebnf_classes_and_repetition() {
+    let g = Rc::new(parse_ebnf("root ::= [a-z]+ [0-9]*").unwrap());
+    assert!(accepts(&g, "abc"));
+    assert!(accepts(&g, "abc123"));
+    assert!(!accepts(&g, ""));
+    assert!(rejects_prefix(&g, "1abc"));
+}
+
+#[test]
+fn ebnf_groups_optional_refs() {
+    let text = r#"
+root ::= greeting (" " name)?
+greeting ::= "hi" | "hello"
+name ::= [A-Z] [a-z]*
+"#;
+    let g = Rc::new(parse_ebnf(text).unwrap());
+    assert!(accepts(&g, "hi"));
+    assert!(accepts(&g, "hello Bob"));
+    assert!(!accepts(&g, "hello "));
+    assert!(rejects_prefix(&g, "hello bob"));
+}
+
+#[test]
+fn ebnf_escapes_and_comments() {
+    let text = "root ::= \"a\\nb\" [\\x30-\\x39]+  # trailing comment\n";
+    let g = Rc::new(parse_ebnf(text).unwrap());
+    assert!(accepts(&g, "a\nb42"));
+    assert!(!accepts(&g, "a\nb"));
+}
+
+#[test]
+fn ebnf_negated_class() {
+    let g = Rc::new(parse_ebnf(r#"root ::= "\"" [^"]* "\"""#).unwrap());
+    assert!(accepts(&g, "\"anything but quotes\""));
+    assert!(!accepts(&g, "\"unclosed"));
+}
+
+#[test]
+fn ebnf_errors() {
+    assert!(matches!(parse_ebnf(""), Err(GrammarError::NoRoot)));
+    assert!(matches!(parse_ebnf("foo ::= \"x\""), Err(GrammarError::NoRoot)));
+    assert!(matches!(
+        parse_ebnf("root ::= bar"),
+        Err(GrammarError::UnknownRule(_))
+    ));
+    assert!(parse_ebnf("root ::= \"unterminated").is_err());
+    assert!(parse_ebnf("root ::= []").is_err());
+    assert!(parse_ebnf("root ::= \"a\"\nroot ::= \"b\"").is_err());
+}
+
+#[test]
+fn ebnf_recursive_rule_balanced_parens() {
+    let text = r#"
+root ::= expr
+expr ::= "(" expr ")" | "x"
+"#;
+    let g = Rc::new(parse_ebnf(text).unwrap());
+    assert!(accepts(&g, "x"));
+    assert!(accepts(&g, "((x))"));
+    assert!(!accepts(&g, "((x)"));
+    assert!(rejects_prefix(&g, ")"));
+}
+
+// -- matcher mechanics ------------------------------------------------------
+
+#[test]
+fn matcher_accepting_state_transitions() {
+    let g = Rc::new(parse_ebnf(r#"root ::= "ab" "c"?"#).unwrap());
+    let mut m = GrammarMatcher::new(g);
+    assert!(!m.is_accepting());
+    assert!(m.advance(b'a'));
+    assert!(!m.is_accepting());
+    assert!(m.advance(b'b'));
+    assert!(m.is_accepting(), "ab is complete");
+    assert!(m.advance(b'c'));
+    assert!(m.is_accepting(), "abc is complete too");
+    assert!(!m.advance(b'c'), "abcc rejected");
+    assert!(m.is_dead());
+}
+
+#[test]
+fn matcher_token_mask_restricts_vocab() {
+    let g = Rc::new(parse_ebnf(r#"root ::= "yes" | "no""#).unwrap());
+    let m = GrammarMatcher::new(g);
+    let vocab: Vec<&[u8]> = vec![b"y", b"n", b"yes", b"no", b"x", b"ye", b"yn", b""];
+    let mask = m.token_mask(vocab.len(), |i| vocab[i as usize]);
+    assert_eq!(mask, vec![true, true, true, true, false, true, false, false]);
+}
+
+#[test]
+fn matcher_mask_evolves_with_state() {
+    let g = Rc::new(parse_ebnf(r#"root ::= "yes" | "no""#).unwrap());
+    let mut m = GrammarMatcher::new(g);
+    m.advance(b'y');
+    let vocab: Vec<&[u8]> = vec![b"e", b"es", b"o", b"n"];
+    let mask = m.token_mask(vocab.len(), |i| vocab[i as usize]);
+    assert_eq!(mask, vec![true, true, false, false]);
+}
+
+#[test]
+fn matcher_fingerprint_stable_and_state_dependent() {
+    let g = Rc::new(parse_ebnf("root ::= [a-z]+").unwrap());
+    let m1 = GrammarMatcher::new(g.clone());
+    let m2 = GrammarMatcher::new(g.clone());
+    assert_eq!(m1.fingerprint(), m2.fingerprint());
+    let mut m3 = GrammarMatcher::new(g);
+    m3.advance(b'q');
+    // [a-z]+ after one char: state differs from start (can now end).
+    assert_ne!(m1.fingerprint(), m3.fingerprint());
+}
+
+#[test]
+fn mask_cache_hits_on_repeated_states() {
+    let g = Rc::new(parse_ebnf("root ::= [a-z]+").unwrap());
+    let mut m = GrammarMatcher::new(g);
+    let vocab: Vec<&[u8]> = vec![b"a", b"bc", b"1"];
+    let trie = Rc::new(VocabTrie::build(vocab.len(), |i| vocab[i as usize]));
+    let mut cache = MaskCache::new(trie, 64);
+    let _ = cache.get_or_compute(&m);
+    m.advance(b'a');
+    let _ = cache.get_or_compute(&m);
+    m.advance(b'b'); // same automaton state as after 'a'
+    let mask = cache.get_or_compute(&m);
+    assert_eq!(*mask, vec![true, true, false]);
+    let (hits, misses) = cache.stats();
+    assert_eq!(hits, 1);
+    assert_eq!(misses, 2);
+}
+
+// -- JSON-Schema compilation --------------------------------------------------
+
+fn schema(s: &str) -> Rc<Grammar> {
+    Rc::new(schema_to_grammar(&parse(s).unwrap()).unwrap())
+}
+
+#[test]
+fn schema_string() {
+    let g = schema(r#"{"type": "string"}"#);
+    assert!(accepts(&g, "\"hello\""));
+    assert!(accepts(&g, "\"esc \\\" ok\""));
+    assert!(accepts(&g, "\"uni \\u00e9\""));
+    assert!(!accepts(&g, "\"open"));
+    assert!(rejects_prefix(&g, "42"));
+}
+
+#[test]
+fn schema_numbers() {
+    let g = schema(r#"{"type": "number"}"#);
+    for ok in ["0", "-1", "3.25", "1e9", "-2.5E-3", "42"] {
+        assert!(accepts(&g, ok), "{ok}");
+    }
+    for bad in ["01", "+1", ".5", "1."] {
+        let mut m = GrammarMatcher::new(g.clone());
+        let fed = m.advance_bytes(bad.as_bytes());
+        assert!(!(fed && m.is_accepting()), "{bad} wrongly accepted");
+    }
+    let g = schema(r#"{"type": "integer"}"#);
+    assert!(accepts(&g, "-17"));
+    assert!(!accepts(&g, "1.5"));
+}
+
+#[test]
+fn schema_enum_and_const() {
+    let g = schema(r#"{"enum": ["red", "green", 3, true]}"#);
+    assert!(accepts(&g, "\"red\""));
+    assert!(accepts(&g, "3"));
+    assert!(accepts(&g, "true"));
+    assert!(!accepts(&g, "\"blue\""));
+    let g = schema(r#"{"const": {"k": 1}}"#);
+    assert!(accepts(&g, "{\"k\":1}"));
+}
+
+#[test]
+fn schema_object_required_and_optional() {
+    let g = schema(
+        r#"{
+        "type": "object",
+        "properties": {
+            "name": {"type": "string"},
+            "age": {"type": "integer"},
+            "tag": {"type": "string"}
+        },
+        "required": ["name"]
+    }"#,
+    );
+    assert!(accepts(&g, r#"{"name":"bo"}"#));
+    assert!(accepts(&g, r#"{"name":"bo","age":4}"#));
+    assert!(accepts(&g, r#"{"name":"bo","age":4,"tag":"x"}"#));
+    assert!(accepts(&g, r#"{"name":"bo","tag":"x"}"#));
+    // missing required
+    assert!(!accepts(&g, r#"{"age":4}"#));
+    // property order is fixed (schema order) in the compact canon
+    assert!(!accepts(&g, r#"{"age":4,"name":"bo"}"#));
+    // no whitespace in canon
+    assert!(!accepts(&g, r#"{ "name":"bo"}"#));
+}
+
+#[test]
+fn schema_array_bounds() {
+    let g = schema(r#"{"type": "array", "items": {"type": "integer"}}"#);
+    assert!(accepts(&g, "[]"));
+    assert!(accepts(&g, "[1,2,3]"));
+    assert!(!accepts(&g, "[1,]"));
+    let g = schema(r#"{"type":"array","items":{"type":"integer"},"minItems":1,"maxItems":3}"#);
+    assert!(!accepts(&g, "[]"));
+    assert!(accepts(&g, "[1]"));
+    assert!(accepts(&g, "[1,2,3]"));
+    assert!(!accepts(&g, "[1,2,3,4]"));
+    let g = schema(r#"{"type":"array","items":{"type":"integer"},"maxItems":2}"#);
+    assert!(accepts(&g, "[]"));
+    assert!(accepts(&g, "[5,6]"));
+    assert!(!accepts(&g, "[5,6,7]"));
+}
+
+#[test]
+fn schema_nested_and_anyof() {
+    let g = schema(
+        r#"{
+        "type": "object",
+        "properties": {
+            "id": {"anyOf": [{"type": "integer"}, {"type": "string"}]},
+            "tags": {"type": "array", "items": {"type": "string"}}
+        },
+        "required": ["id", "tags"]
+    }"#,
+    );
+    assert!(accepts(&g, r#"{"id":7,"tags":["a","b"]}"#));
+    assert!(accepts(&g, r#"{"id":"x7","tags":[]}"#));
+    assert!(!accepts(&g, r#"{"id":null,"tags":[]}"#));
+}
+
+#[test]
+fn schema_refs_and_recursion() {
+    let g = schema(
+        r##"{
+        "$defs": {
+            "node": {
+                "type": "object",
+                "properties": {
+                    "v": {"type": "integer"},
+                    "next": {"anyOf": [{"$ref": "#/$defs/node"}, {"type": "null"}]}
+                },
+                "required": ["v", "next"]
+            }
+        },
+        "$ref": "#/$defs/node"
+    }"##,
+    );
+    assert!(accepts(&g, r#"{"v":1,"next":null}"#));
+    assert!(accepts(&g, r#"{"v":1,"next":{"v":2,"next":null}}"#));
+    assert!(!accepts(&g, r#"{"v":1}"#));
+}
+
+#[test]
+fn schema_free_value() {
+    let g = schema("{}");
+    for ok in ["null", "true", "[1,\"x\",{}]", "{\"a\":[false]}", "-3.5e2"] {
+        assert!(accepts(&g, ok), "{ok}");
+    }
+    assert!(!accepts(&g, "nope"));
+}
+
+#[test]
+fn schema_errors() {
+    for bad in [
+        r#"{"type": "banana"}"#,
+        r#"{"enum": []}"#,
+        r#"{"type":"object","properties":{"a":{"type":"string"}},"required":["b"]}"#,
+        r##"{"$ref": "#/nope/x"}"##,
+        r#"{"type":"array","minItems":3,"maxItems":1}"#,
+    ] {
+        assert!(schema_to_grammar(&parse(bad).unwrap()).is_err(), "{bad}");
+    }
+}
+
+// -- end-to-end masked generation property ------------------------------------
+
+#[test]
+fn prop_masked_generation_always_yields_valid_json() {
+    // Walk the automaton with random mask-respecting choices over the real
+    // artifact vocabulary; the result must parse and satisfy the schema
+    // shape. This is the core guarantee structured generation sells.
+    let Some(tok) = crate::tokenizer::tests::artifact_tokenizer() else { return };
+    let schema_text = r#"{
+        "type": "object",
+        "properties": {
+            "name": {"type": "string"},
+            "count": {"type": "integer"},
+            "ok": {"type": "boolean"}
+        },
+        "required": ["name", "count", "ok"]
+    }"#;
+    let g = Rc::new(schema_to_grammar(&parse(schema_text).unwrap()).unwrap());
+    let vocab = tok.vocab_size();
+    let trie = VocabTrie::build(vocab, |i| tok.token_bytes(i));
+    Runner::new("masked_generation", 15).run(|rng| {
+        let mut m = GrammarMatcher::new(g.clone());
+        let mut out: Vec<u8> = Vec::new();
+        for _step in 0..400 {
+            if m.is_accepting() && rng.range(4) == 0 {
+                break; // "sample EOS"
+            }
+            let mask = m.token_mask_trie(&trie);
+            let allowed: Vec<u32> =
+                (0..vocab as u32).filter(|&i| mask[i as usize]).collect();
+            if allowed.is_empty() {
+                if m.is_accepting() {
+                    break;
+                }
+                return Err(format!(
+                    "stuck: no allowed token, output so far {:?}",
+                    String::from_utf8_lossy(&out)
+                ));
+            }
+            let t = *rng.choose(&allowed);
+            out.extend_from_slice(tok.token_bytes(t));
+            if !m.accept_token(tok.token_bytes(t)) {
+                return Err("masked token rejected by matcher".into());
+            }
+        }
+        if !m.is_accepting() {
+            // ran out of steps mid-derivation; not an error, just skip
+            return Ok(());
+        }
+        let text = String::from_utf8(out).map_err(|e| e.to_string())?;
+        let v = parse(&text).map_err(|e| format!("invalid JSON {text:?}: {e}"))?;
+        for key in ["name", "count", "ok"] {
+            if v.get(key).is_none() {
+                return Err(format!("missing {key} in {text}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ebnf_masked_generation_matches_grammar() {
+    let Some(tok) = crate::tokenizer::tests::artifact_tokenizer() else { return };
+    let g = Rc::new(
+        parse_ebnf(r#"root ::= ("ab" | "cd")+ [0-9] [0-9]?"#).unwrap(),
+    );
+    let vocab = tok.vocab_size();
+    let trie = VocabTrie::build(vocab, |i| tok.token_bytes(i));
+    Runner::new("ebnf_generation", 25).run(|rng| {
+        let mut m = GrammarMatcher::new(g.clone());
+        let mut out = Vec::new();
+        for _ in 0..60 {
+            if m.is_accepting() && rng.bool() {
+                break;
+            }
+            let mask = m.token_mask_trie(&trie);
+            let allowed: Vec<u32> =
+                (0..vocab as u32).filter(|&i| mask[i as usize]).collect();
+            if allowed.is_empty() {
+                break;
+            }
+            let t = *rng.choose(&allowed);
+            out.extend_from_slice(tok.token_bytes(t));
+            m.accept_token(tok.token_bytes(t));
+        }
+        if !m.is_accepting() {
+            return Ok(());
+        }
+        let s = String::from_utf8(out).unwrap();
+        // shape check: (ab|cd)+ then 1-2 digits
+        let body_len = s.len() - s.chars().rev().take_while(|c| c.is_ascii_digit()).count();
+        let (body, digits) = s.split_at(body_len);
+        if body.is_empty() || body.len() % 2 != 0 {
+            return Err(format!("bad body {s:?}"));
+        }
+        if !(1..=2).contains(&digits.len()) {
+            return Err(format!("bad digits {s:?}"));
+        }
+        for chunk in body.as_bytes().chunks(2) {
+            if chunk != b"ab" && chunk != b"cd" {
+                return Err(format!("bad chunk in {s:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schemaless_grammar_accepts_all_serializer_output() {
+    // Cross-validation: anything crate::json can serialize must be
+    // accepted by the empty-schema ("any JSON value") grammar — the two
+    // independent JSON implementations must agree on the language.
+    use crate::json::{to_string, Map, Value};
+    let g = Rc::new(schema_to_grammar(&parse("{}").unwrap()).unwrap());
+    fn arbitrary(rng: &mut crate::testutil::prop::PropRng, depth: usize) -> Value {
+        match rng.range(if depth > 2 { 4 } else { 6 }) {
+            0 => Value::Null,
+            1 => Value::Bool(rng.bool()),
+            2 => Value::Number(rng.i64_in(-100000, 100000) as f64 / 100.0),
+            3 => Value::String(rng.string(12)),
+            4 => Value::Array((0..rng.range(4)).map(|_| arbitrary(rng, depth + 1)).collect()),
+            _ => {
+                let mut m = Map::new();
+                for _ in 0..rng.range(3) {
+                    m.insert(rng.string(6), arbitrary(rng, depth + 1));
+                }
+                Value::Object(m)
+            }
+        }
+    }
+    Runner::new("grammar_vs_serializer", 200).run(|rng| {
+        let v = arbitrary(rng, 0);
+        let text = to_string(&v);
+        let mut m = GrammarMatcher::new(g.clone());
+        if !m.advance_bytes(text.as_bytes()) {
+            return Err(format!("grammar rejected serializer output: {text}"));
+        }
+        if !m.is_accepting() {
+            return Err(format!("grammar not accepting after: {text}"));
+        }
+        Ok(())
+    });
+}

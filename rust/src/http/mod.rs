@@ -1,0 +1,13 @@
+//! Minimal HTTP/1.1 server + SSE so the engine is literally an endpoint
+//! (`POST /v1/chat/completions`), matching the paper's "treat the engine
+//! like an endpoint" framing. Std-only: `TcpListener` + a thread per
+//! connection; request handling posts to the worker channel.
+
+mod server;
+mod sse;
+
+pub use server::{serve, HttpRequest, HttpResponse, ServerConfig};
+pub use sse::{parse_sse_body as sse_parse, SseWriter};
+
+#[cfg(test)]
+mod tests;

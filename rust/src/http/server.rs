@@ -1,0 +1,263 @@
+//! HTTP/1.1 parsing + the chat-completions endpoint.
+
+use crate::api::{ApiError, ChatCompletionRequest};
+use crate::coordinator::messages::FromWorker;
+use crate::coordinator::{EngineConfig, ServiceWorkerMLCEngine};
+use crate::json::{to_string, Value};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+const MAX_BODY: usize = 4 << 20;
+
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse one request from a stream (blocking).
+    pub fn read_from(stream: &mut BufReader<TcpStream>) -> Result<Self, String> {
+        let mut line = String::new();
+        stream.read_line(&mut line).map_err(|e| e.to_string())?;
+        if line.is_empty() {
+            return Err("connection closed".into());
+        }
+        let mut parts = line.split_whitespace();
+        let method = parts.next().ok_or("bad request line")?.to_string();
+        let path = parts.next().ok_or("bad request line")?.to_string();
+
+        let mut headers = Vec::new();
+        loop {
+            let mut h = String::new();
+            stream.read_line(&mut h).map_err(|e| e.to_string())?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                headers.push((k.trim().to_string(), v.trim().to_string()));
+            }
+        }
+        let req = Self { method, path, headers, body: String::new() };
+        let len: usize = req
+            .header("content-length")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        if len > MAX_BODY {
+            return Err("body too large".into());
+        }
+        let mut body = vec![0u8; len];
+        stream.read_exact(&mut body).map_err(|e| e.to_string())?;
+        let body = String::from_utf8(body).map_err(|e| e.to_string())?;
+        Ok(Self { body, ..req })
+    }
+}
+
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, v: &Value) -> Self {
+        Self { status, content_type: "application/json", body: to_string(v) }
+    }
+
+    pub fn write_to(&self, stream: &mut impl Write) -> std::io::Result<()> {
+        write!(
+            stream,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            self.status,
+            status_text(self.status),
+            self.content_type,
+            self.body.len(),
+            self.body
+        )
+    }
+}
+
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        499 => "Client Closed Request",
+        _ => "Internal Server Error",
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub engine: EngineConfig,
+    /// Stop after handling this many requests (None = run forever). The
+    /// serve_benchmark example uses this for a bounded run.
+    pub max_requests: Option<usize>,
+}
+
+/// Run the endpoint. Single-threaded accept loop; the engine lives in its
+/// worker thread and requests are relayed over an mpsc fan-in so many
+/// connections can be in flight (continuous batching inside the worker).
+pub fn serve(cfg: ServerConfig) -> Result<(), String> {
+    let listener = TcpListener::bind(&cfg.addr).map_err(|e| e.to_string())?;
+    log::info!("listening on http://{}", cfg.addr);
+    let mut frontend = ServiceWorkerMLCEngine::create(cfg.engine.clone()).map_err(|e| e.to_string())?;
+    log::info!("models ready: {:?}", frontend.models());
+
+    // Connection threads parse HTTP and forward (request, reply-channel)
+    // here; this loop owns the frontend (single consumer of worker msgs).
+    let (tx, rx) = channel::<(ChatCompletionRequest, std::sync::mpsc::Sender<Event>)>();
+    let tx_accept = tx.clone();
+    let addr = cfg.addr.clone();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let tx = tx_accept.clone();
+            std::thread::spawn(move || {
+                let _ = handle_connection(stream, tx);
+            });
+        }
+        let _ = addr;
+    });
+
+    let mut handled = 0usize;
+    // pending wire-id -> reply channel
+    let mut replies: std::collections::HashMap<u64, std::sync::mpsc::Sender<Event>> =
+        std::collections::HashMap::new();
+    loop {
+        // New requests (non-blocking when work is pending).
+        while let Ok((req, reply)) = rx.try_recv() {
+            match frontend.submit(req) {
+                Ok(id) => {
+                    replies.insert(id, reply);
+                }
+                Err(e) => {
+                    let _ = reply.send(Event::Error(e));
+                }
+            }
+        }
+        // Worker events.
+        match frontend.poll(Duration::from_millis(20)) {
+            Ok(FromWorker::Chunk { id, chunk }) => {
+                if let Some(r) = replies.get(&id) {
+                    let _ = r.send(Event::Chunk(chunk.to_json()));
+                }
+            }
+            Ok(FromWorker::Done { id, response }) => {
+                if let Some(r) = replies.remove(&id) {
+                    let _ = r.send(Event::Done(response.to_json()));
+                    handled += 1;
+                }
+            }
+            Ok(FromWorker::Error { id, error }) => {
+                if let Some(r) = replies.remove(&id) {
+                    let _ = r.send(Event::Error(error));
+                    handled += 1;
+                }
+            }
+            _ => {}
+        }
+        if let Some(max) = cfg.max_requests {
+            if handled >= max && replies.is_empty() {
+                return Ok(());
+            }
+        }
+    }
+}
+
+pub(crate) enum Event {
+    Chunk(Value),
+    Done(Value),
+    Error(ApiError),
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    tx: std::sync::mpsc::Sender<(ChatCompletionRequest, std::sync::mpsc::Sender<Event>)>,
+) -> Result<(), String> {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+    let req = HttpRequest::read_from(&mut reader)?;
+    let mut out = stream;
+
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/chat/completions") => {
+            let parsed = crate::json::parse(&req.body)
+                .map_err(|e| ApiError::invalid(format!("body: {e}")))
+                .and_then(|v| ChatCompletionRequest::from_json(&v));
+            let request = match parsed {
+                Ok(r) => r,
+                Err(e) => {
+                    let _ = HttpResponse::json(e.status, &e.to_json()).write_to(&mut out);
+                    return Ok(());
+                }
+            };
+            let stream_mode = request.stream;
+            let (reply_tx, reply_rx) = channel::<Event>();
+            tx.send((request, reply_tx)).map_err(|e| e.to_string())?;
+
+            if stream_mode {
+                let mut sse = super::sse::SseWriter::start(&mut out).map_err(|e| e.to_string())?;
+                loop {
+                    match reply_rx.recv_timeout(Duration::from_secs(600)) {
+                        Ok(Event::Chunk(v)) => {
+                            sse.send_json(&v).map_err(|e| e.to_string())?;
+                        }
+                        Ok(Event::Done(_)) => {
+                            sse.done().map_err(|e| e.to_string())?;
+                            break;
+                        }
+                        Ok(Event::Error(e)) => {
+                            sse.send_json(&e.to_json()).map_err(|er| er.to_string())?;
+                            break;
+                        }
+                        Err(_) => break,
+                    }
+                }
+            } else {
+                match reply_rx.recv_timeout(Duration::from_secs(600)) {
+                    Ok(Event::Done(v)) => {
+                        let _ = HttpResponse::json(200, &v).write_to(&mut out);
+                    }
+                    Ok(Event::Error(e)) => {
+                        let _ = HttpResponse::json(e.status, &e.to_json()).write_to(&mut out);
+                    }
+                    Ok(Event::Chunk(_)) => {}
+                    Err(_) => {
+                        let e = ApiError::internal("engine timeout");
+                        let _ = HttpResponse::json(e.status, &e.to_json()).write_to(&mut out);
+                    }
+                }
+            }
+        }
+        ("GET", "/health") => {
+            let _ = HttpResponse::json(200, &crate::obj! {"status" => "ok"}).write_to(&mut out);
+        }
+        ("GET", _) | ("POST", _) => {
+            let e = ApiError::not_found(format!("no route {} {}", req.method, req.path));
+            let _ = HttpResponse::json(404, &e.to_json()).write_to(&mut out);
+        }
+        _ => {
+            let e = ApiError::invalid("method not allowed");
+            let _ = HttpResponse::json(405, &e.to_json()).write_to(&mut out);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Server-Sent Events writer (the `stream: true` transport, OpenAI-style
+//! `data: {...}` frames terminated by `data: [DONE]`).
+
+use crate::json::{to_string, Value};
+use std::io::Write;
+
+pub struct SseWriter<'a, W: Write> {
+    out: &'a mut W,
+}
+
+impl<'a, W: Write> SseWriter<'a, W> {
+    /// Write the SSE response header and return the writer.
+    pub fn start(out: &'a mut W) -> std::io::Result<Self> {
+        write!(
+            out,
+            "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+        )?;
+        out.flush()?;
+        Ok(Self { out })
+    }
+
+    pub fn send_json(&mut self, v: &Value) -> std::io::Result<()> {
+        write!(self.out, "data: {}\n\n", to_string(v))?;
+        self.out.flush()
+    }
+
+    pub fn done(&mut self) -> std::io::Result<()> {
+        write!(self.out, "data: [DONE]\n\n")?;
+        self.out.flush()
+    }
+}
+
+/// Parse SSE frames out of a raw response body (client side, used by the
+/// serve_benchmark driver and tests).
+pub fn parse_sse_body(body: &str) -> (Vec<Value>, bool) {
+    let mut events = Vec::new();
+    let mut done = false;
+    for frame in body.split("\n\n") {
+        let Some(data) = frame.strip_prefix("data: ") else { continue };
+        if data.trim() == "[DONE]" {
+            done = true;
+        } else if let Ok(v) = crate::json::parse(data.trim()) {
+            events.push(v);
+        }
+    }
+    (events, done)
+}

@@ -1,0 +1,55 @@
+use super::server::{status_text, HttpRequest, HttpResponse};
+use super::sse::parse_sse_body;
+use crate::json::parse;
+
+#[test]
+fn response_serialization() {
+    let v = parse(r#"{"ok":true}"#).unwrap();
+    let r = HttpResponse::json(200, &v);
+    let mut buf = Vec::new();
+    r.write_to(&mut buf).unwrap();
+    let s = String::from_utf8(buf).unwrap();
+    assert!(s.starts_with("HTTP/1.1 200 OK\r\n"), "{s}");
+    assert!(s.contains("Content-Type: application/json"));
+    assert!(s.contains("Content-Length: 11"));
+    assert!(s.ends_with(r#"{"ok":true}"#));
+}
+
+#[test]
+fn status_texts() {
+    assert_eq!(status_text(200), "OK");
+    assert_eq!(status_text(404), "Not Found");
+    assert_eq!(status_text(500), "Internal Server Error");
+    assert_eq!(status_text(418), "Internal Server Error");
+}
+
+#[test]
+fn header_lookup_case_insensitive() {
+    let req = HttpRequest {
+        method: "POST".into(),
+        path: "/x".into(),
+        headers: vec![("Content-Length".into(), "42".into())],
+        body: String::new(),
+    };
+    assert_eq!(req.header("content-length"), Some("42"));
+    assert_eq!(req.header("CONTENT-LENGTH"), Some("42"));
+    assert_eq!(req.header("x-nope"), None);
+}
+
+#[test]
+fn sse_writer_and_parser_roundtrip() {
+    let mut buf = Vec::new();
+    {
+        let mut w = super::sse::SseWriter::start(&mut buf).unwrap();
+        w.send_json(&parse(r#"{"n":1}"#).unwrap()).unwrap();
+        w.send_json(&parse(r#"{"n":2}"#).unwrap()).unwrap();
+        w.done().unwrap();
+    }
+    let s = String::from_utf8(buf).unwrap();
+    assert!(s.contains("text/event-stream"));
+    let body = s.split_once("\r\n\r\n").unwrap().1;
+    let (events, done) = parse_sse_body(body);
+    assert_eq!(events.len(), 2);
+    assert!(done);
+    assert_eq!(events[1].get("n").unwrap().as_i64(), Some(2));
+}

@@ -1,0 +1,19 @@
+//! Minimal-dependency JSON substrate.
+//!
+//! WebLLM's user-facing contract is "endpoint-like, JSON-in-JSON-out"
+//! (paper §2.1); the worker boundary also carries JSON messages (§2.2).
+//! The vendored crate set has no serde, so this module owns the JSON
+//! value model, parser, and serializer used by the OpenAI-style API
+//! (`crate::api`), the wire protocol (`crate::coordinator::messages`),
+//! the grammar engine's JSON-Schema compiler, and artifact manifests.
+
+mod parse;
+mod ser;
+mod value;
+
+pub use parse::{parse, ParseError};
+pub use ser::{to_string, to_string_pretty};
+pub use value::{Map, Value};
+
+#[cfg(test)]
+mod tests;

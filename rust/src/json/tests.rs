@@ -1,0 +1,173 @@
+use super::*;
+use crate::testutil::prop::{PropRng, Runner};
+use crate::{arr, obj};
+
+#[test]
+fn parse_scalars() {
+    assert_eq!(parse("null").unwrap(), Value::Null);
+    assert_eq!(parse("true").unwrap(), Value::Bool(true));
+    assert_eq!(parse("false").unwrap(), Value::Bool(false));
+    assert_eq!(parse("42").unwrap(), Value::Number(42.0));
+    assert_eq!(parse("-0.5e2").unwrap(), Value::Number(-50.0));
+    assert_eq!(parse("\"hi\"").unwrap(), Value::String("hi".into()));
+}
+
+#[test]
+fn parse_structures() {
+    let v = parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+    assert_eq!(v.get("a").unwrap().at(2).unwrap().get("b"), Some(&Value::Null));
+    assert_eq!(v.get("c").unwrap().as_str(), Some("x"));
+}
+
+#[test]
+fn parse_escapes_and_unicode() {
+    let v = parse(r#""a\n\t\"\\Aé""#).unwrap();
+    assert_eq!(v.as_str(), Some("a\n\t\"\\Aé"));
+    // surrogate pair: 😀
+    let v = parse(r#""😀""#).unwrap();
+    assert_eq!(v.as_str(), Some("😀"));
+    // raw multibyte passthrough
+    let v = parse("\"日本語\"").unwrap();
+    assert_eq!(v.as_str(), Some("日本語"));
+}
+
+#[test]
+fn parse_rejects_garbage() {
+    for bad in [
+        "", "{", "[1,", "{\"a\":}", "{'a':1}", "[1 2]", "nul", "+1", "01", "1.",
+        "\"\\x\"", "\"unterminated", "{\"a\":1,}", "[1,2,]", "\"\\ud800\"",
+    ] {
+        assert!(parse(bad).is_err(), "should reject {bad:?}");
+    }
+}
+
+#[test]
+fn parse_depth_limit() {
+    let deep = "[".repeat(500) + &"]".repeat(500);
+    assert!(parse(&deep).is_err());
+    let ok = "[".repeat(100) + &"]".repeat(100);
+    assert!(parse(&ok).is_ok());
+}
+
+#[test]
+fn serialize_compact_and_pretty() {
+    let v = obj! {
+        "model" => "llama-web-80m",
+        "n" => 3,
+        "stream" => true,
+        "stop" => arr!["\n", "###"],
+    };
+    let s = to_string(&v);
+    assert_eq!(
+        s,
+        "{\"model\":\"llama-web-80m\",\"n\":3,\"stream\":true,\"stop\":[\"\\n\",\"###\"]}"
+    );
+    let p = to_string_pretty(&v);
+    assert!(p.contains("\n  \"model\": \"llama-web-80m\""));
+    assert_eq!(parse(&p).unwrap(), v);
+}
+
+#[test]
+fn numbers_roundtrip_js_style() {
+    assert_eq!(to_string(&Value::Number(3.0)), "3");
+    assert_eq!(to_string(&Value::Number(-0.25)), "-0.25");
+    assert_eq!(to_string(&Value::Number(1e300)), "1e300");
+    assert_eq!(to_string(&Value::Number(f64::NAN)), "null");
+    let v = parse("9007199254740992").unwrap(); // 2^53
+    assert_eq!(v.as_f64(), Some(9007199254740992.0));
+}
+
+#[test]
+fn map_preserves_insertion_order_and_replaces() {
+    let mut m = Map::new();
+    m.insert("b", 1);
+    m.insert("a", 2);
+    m.insert("b", 3);
+    let keys: Vec<_> = m.keys().cloned().collect();
+    assert_eq!(keys, vec!["b", "a"]);
+    assert_eq!(m.get("b").unwrap().as_i64(), Some(3));
+}
+
+#[test]
+fn accessor_helpers() {
+    let v = parse(r#"{"n": 7, "s": "x", "f": 1.5, "b": false, "a": [1]}"#).unwrap();
+    assert_eq!(v.get("n").unwrap().as_usize(), Some(7));
+    assert_eq!(v.get("f").unwrap().as_i64(), None);
+    assert_eq!(v.get_or("missing", &Value::Bool(true)).as_bool(), Some(true));
+    assert_eq!(v.get("a").unwrap().as_array().unwrap().len(), 1);
+}
+
+// -- property tests ---------------------------------------------------------
+
+fn arbitrary_value(rng: &mut PropRng, depth: usize) -> Value {
+    match rng.range(if depth > 3 { 4 } else { 6 }) {
+        0 => Value::Null,
+        1 => Value::Bool(rng.bool()),
+        2 => {
+            // Mix of integers and floats.
+            if rng.bool() {
+                Value::Number(rng.i64_in(-1_000_000, 1_000_000) as f64)
+            } else {
+                Value::Number(f64::from_bits(rng.u64()) % 1e12)
+            }
+        }
+        3 => Value::String(rng.string(24)),
+        4 => {
+            let n = rng.range(4);
+            Value::Array((0..n).map(|_| arbitrary_value(rng, depth + 1)).collect())
+        }
+        _ => {
+            let n = rng.range(4);
+            let mut m = Map::new();
+            for _ in 0..n {
+                m.insert(rng.string(8), arbitrary_value(rng, depth + 1));
+            }
+            Value::Object(m)
+        }
+    }
+}
+
+#[test]
+fn prop_roundtrip_parse_serialize() {
+    Runner::new("json_roundtrip", 300).run(|rng| {
+        let mut v = arbitrary_value(rng, 0);
+        // NaN/Inf intentionally don't roundtrip (serialize to null): skip.
+        fn scrub(v: &mut Value) {
+            match v {
+                Value::Number(n) if !n.is_finite() => *v = Value::Null,
+                Value::Array(a) => a.iter_mut().for_each(scrub),
+                Value::Object(o) => {
+                    let keys: Vec<String> = o.keys().cloned().collect();
+                    for k in keys {
+                        scrub(o.get_mut(&k).unwrap());
+                    }
+                }
+                _ => {}
+            }
+        }
+        scrub(&mut v);
+        let s = to_string(&v);
+        let back = parse(&s).map_err(|e| format!("{e}: {s}"))?;
+        if back != v {
+            return Err(format!("roundtrip mismatch: {v:?} -> {s} -> {back:?}"));
+        }
+        // pretty form parses to the same value
+        let back2 = parse(&to_string_pretty(&v)).map_err(|e| e.to_string())?;
+        if back2 != v {
+            return Err("pretty roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parser_never_panics_on_noise() {
+    Runner::new("json_fuzz", 500).run(|rng| {
+        let len = rng.range(64);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.u64() as u8).collect();
+        if let Ok(s) = std::str::from_utf8(&bytes) {
+            let _ = parse(s); // must not panic
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,159 @@
+//! Reference-counted page allocator over the fixed device pool.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AllocError {
+    /// No free or evictable page available.
+    OutOfPages,
+}
+
+impl fmt::Display for AllocError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AllocError::OutOfPages => write!(f, "KV cache out of pages"),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+/// Allocator over pages `1..num_pages` (page 0 is the garbage page).
+///
+/// Pages are in one of three states:
+///   * free       — on the free list
+///   * active     — refcount > 0 (owned by >= 1 sequence)
+///   * cached     — refcount == 0 but retained for prefix reuse; evictable
+///     in LRU order when the free list runs dry.
+pub struct BlockAllocator {
+    page_size: usize,
+    num_pages: usize,
+    refcount: Vec<u32>,
+    free: Vec<u32>,
+    /// Cached (evictable) pages in LRU order: front = oldest.
+    lru: Vec<u32>,
+    /// Eviction callback target: the prefix cache drops its entry.
+    evicted: Vec<u32>,
+}
+
+impl BlockAllocator {
+    pub fn new(num_pages: usize, page_size: usize) -> Self {
+        assert!(num_pages >= 2, "need at least the garbage page + 1");
+        Self {
+            page_size,
+            num_pages,
+            refcount: vec![0; num_pages],
+            // Hand out low page ids first (nicer to read in tests/logs).
+            free: (1..num_pages as u32).rev().collect(),
+            lru: Vec::new(),
+            evicted: Vec::new(),
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn num_pages(&self) -> usize {
+        self.num_pages
+    }
+
+    /// Pages that can be handed out right now (free + evictable).
+    pub fn available(&self) -> usize {
+        self.free.len() + self.lru.len()
+    }
+
+    pub fn num_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn num_cached(&self) -> usize {
+        self.lru.len()
+    }
+
+    pub fn refcount(&self, page: u32) -> u32 {
+        self.refcount[page as usize]
+    }
+
+    /// Allocate a fresh page (refcount 1), evicting the LRU cached page
+    /// if the free list is empty. Evicted page ids are queued for the
+    /// prefix cache to unmap (`take_evicted`).
+    pub fn alloc(&mut self) -> Result<u32, AllocError> {
+        let page = if let Some(p) = self.free.pop() {
+            p
+        } else if !self.lru.is_empty() {
+            let p = self.lru.remove(0);
+            self.evicted.push(p);
+            p
+        } else {
+            return Err(AllocError::OutOfPages);
+        };
+        debug_assert_eq!(self.refcount[page as usize], 0);
+        self.refcount[page as usize] = 1;
+        Ok(page)
+    }
+
+    /// Add a reference (prefix sharing). Valid on active or cached pages;
+    /// a cached page becomes active again.
+    pub fn retain(&mut self, page: u32) {
+        let rc = &mut self.refcount[page as usize];
+        if *rc == 0 {
+            // Revive from the LRU.
+            if let Some(idx) = self.lru.iter().position(|&p| p == page) {
+                self.lru.remove(idx);
+            } else {
+                panic!("retain on a free page {page}");
+            }
+        }
+        *rc += 1;
+    }
+
+    /// Drop a reference. When the count hits zero the page either parks in
+    /// the LRU (if `keep_cached`, i.e. the prefix cache still maps it) or
+    /// returns to the free list.
+    pub fn release(&mut self, page: u32, keep_cached: bool) {
+        let rc = &mut self.refcount[page as usize];
+        assert!(*rc > 0, "release on unreferenced page {page}");
+        *rc -= 1;
+        if *rc == 0 {
+            if keep_cached {
+                self.lru.push(page);
+            } else {
+                self.free.push(page);
+            }
+        }
+    }
+
+    /// Pages evicted from the cached set since the last call; the prefix
+    /// cache must forget them.
+    pub fn take_evicted(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.evicted)
+    }
+
+    /// Drop a page from the cached set explicitly (prefix-cache unmap path).
+    pub fn drop_cached(&mut self, page: u32) {
+        if let Some(idx) = self.lru.iter().position(|&p| p == page) {
+            self.lru.remove(idx);
+            self.free.push(page);
+        }
+    }
+
+    /// Invariant check for tests: every page is in exactly one state.
+    #[cfg(test)]
+    pub fn check_invariants(&self) {
+        let mut seen = vec![0u32; self.num_pages];
+        for &p in &self.free {
+            seen[p as usize] += 1;
+            assert_eq!(self.refcount[p as usize], 0, "free page {p} has refs");
+        }
+        for &p in &self.lru {
+            seen[p as usize] += 1;
+            assert_eq!(self.refcount[p as usize], 0, "cached page {p} has refs");
+        }
+        for p in 1..self.num_pages {
+            let states = seen[p] + u32::from(self.refcount[p] > 0);
+            assert_eq!(states, 1, "page {p} in {states} states");
+        }
+        assert_eq!(seen[0], 0, "garbage page must never be allocated");
+    }
+}

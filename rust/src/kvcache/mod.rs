@@ -1,0 +1,23 @@
+//! Paged KV-cache management (the WASM "sequence management" subsystem of
+//! the paper, §2.2 — here in native Rust).
+//!
+//! The device-side page *pool* lives in the model's cache tensors
+//! (f32[L, P, page, KVH, Dh], see python/compile/model.py); this module
+//! owns the metadata: which pages belong to which sequence, reference
+//! counts for prefix sharing, and the free list. The scheduler consults
+//! it for admission control; the runtime turns block tables into the i32
+//! tensors the decode/prefill executables consume.
+//!
+//! Page 0 is reserved as the garbage page — padding slots in batched
+//! decode write there (same convention as the L2 model).
+
+mod alloc;
+mod prefix;
+mod seq;
+
+pub use alloc::{AllocError, BlockAllocator};
+pub use prefix::PrefixCache;
+pub use seq::{KvCacheManager, SeqId, Sequence};
+
+#[cfg(test)]
+mod tests;

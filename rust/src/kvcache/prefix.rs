@@ -1,0 +1,94 @@
+//! Prefix cache: content-addressed full pages for prompt reuse.
+//!
+//! Keyed vLLM-style: a page's key is the hash of (parent key, the page's
+//! token ids). Only *full* pages are cached; the values written by a
+//! prefill of the same token prefix are identical, so re-running prefill
+//! over shared pages is a benign rewrite (DESIGN.md §3 kvcache/).
+
+use std::collections::HashMap;
+
+pub type PageKey = u64;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Chain hash for a full page of tokens given the previous page's key.
+pub fn page_key(parent: Option<PageKey>, tokens: &[u32]) -> PageKey {
+    let mut h = FNV_OFFSET ^ parent.unwrap_or(0x9E3779B97F4A7C15);
+    for &t in tokens {
+        h ^= t as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Bidirectional map key <-> page id.
+#[derive(Default)]
+pub struct PrefixCache {
+    by_key: HashMap<PageKey, u32>,
+    by_page: HashMap<u32, PageKey>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PrefixCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn lookup(&mut self, key: PageKey) -> Option<u32> {
+        match self.by_key.get(&key) {
+            Some(&p) => {
+                self.hits += 1;
+                Some(p)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Map a completed full page. A later identical prefix wins the
+    /// existing entry; remapping the same key to a new page keeps the old
+    /// (first writer wins — both hold identical data).
+    pub fn insert(&mut self, key: PageKey, page: u32) {
+        if self.by_key.contains_key(&key) {
+            return;
+        }
+        self.by_key.insert(key, page);
+        self.by_page.insert(page, key);
+    }
+
+    pub fn contains_page(&self, page: u32) -> bool {
+        self.by_page.contains_key(&page)
+    }
+
+    /// Forget a page (on allocator eviction).
+    pub fn forget_page(&mut self, page: u32) {
+        if let Some(key) = self.by_page.remove(&page) {
+            self.by_key.remove(&key);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}

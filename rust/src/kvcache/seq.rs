@@ -1,0 +1,276 @@
+//! Sequence state + the manager tying allocator and prefix cache together.
+
+use super::{AllocError, BlockAllocator, PrefixCache};
+use super::prefix::{page_key, PageKey};
+use std::collections::HashMap;
+
+pub type SeqId = u64;
+
+/// One live sequence's KV residency.
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    pub id: SeqId,
+    /// All tokens in context (prompt + generated).
+    pub tokens: Vec<u32>,
+    /// Pages backing positions [0, tokens.len()), in order.
+    pub block_table: Vec<u32>,
+    /// How many leading tokens were served from the prefix cache.
+    pub cached_tokens: usize,
+    /// Keys of the full pages backing this sequence (parallel prefix of
+    /// block_table), used to register pages on free.
+    page_keys: Vec<PageKey>,
+}
+
+impl Sequence {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// Metadata manager for one model's page pool.
+pub struct KvCacheManager {
+    alloc: BlockAllocator,
+    prefix: PrefixCache,
+    seqs: HashMap<SeqId, Sequence>,
+    max_pages_per_seq: usize,
+    enable_prefix_cache: bool,
+}
+
+impl KvCacheManager {
+    pub fn new(
+        num_pages: usize,
+        page_size: usize,
+        max_pages_per_seq: usize,
+        enable_prefix_cache: bool,
+    ) -> Self {
+        Self {
+            alloc: BlockAllocator::new(num_pages, page_size),
+            prefix: PrefixCache::new(),
+            seqs: HashMap::new(),
+            max_pages_per_seq,
+            enable_prefix_cache,
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.alloc.page_size()
+    }
+
+    pub fn max_pages_per_seq(&self) -> usize {
+        self.max_pages_per_seq
+    }
+
+    pub fn available_pages(&self) -> usize {
+        self.alloc.available()
+    }
+
+    pub fn prefix_stats(&self) -> (u64, u64) {
+        self.prefix.stats()
+    }
+
+    pub fn num_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn get(&self, id: SeqId) -> Option<&Sequence> {
+        self.seqs.get(&id)
+    }
+
+    /// Pages needed to admit a prompt of `n` tokens plus one decode slot,
+    /// ignoring possible prefix hits (conservative admission bound).
+    pub fn pages_needed(&self, n_tokens: usize) -> usize {
+        let ps = self.alloc.page_size();
+        (n_tokens + 1 + ps - 1) / ps
+    }
+
+    /// Whether a prompt of `n` tokens fits right now.
+    pub fn can_admit(&self, n_tokens: usize) -> bool {
+        let need = self.pages_needed(n_tokens);
+        need <= self.max_pages_per_seq && need <= self.alloc.available()
+    }
+
+    /// Allocate residency for a new sequence over `tokens` (the prompt).
+    /// Serves full-page prefixes from the prefix cache where possible.
+    /// Returns the sequence; `cached_tokens` says how many leading tokens
+    /// need no prefill compute (the engine may still prefill them —
+    /// benign rewrite — or skip whole cached chunks).
+    pub fn admit(&mut self, id: SeqId, tokens: &[u32]) -> Result<&Sequence, AllocError> {
+        assert!(!self.seqs.contains_key(&id), "sequence {id} already admitted");
+        let ps = self.alloc.page_size();
+        let n_pages = self.pages_needed(tokens.len());
+        if n_pages > self.max_pages_per_seq {
+            return Err(AllocError::OutOfPages);
+        }
+
+        let mut block_table = Vec::with_capacity(n_pages);
+        let mut page_keys: Vec<PageKey> = Vec::new();
+        let mut cached_tokens = 0usize;
+
+        let full_pages = tokens.len() / ps;
+        let mut parent: Option<PageKey> = None;
+        let mut reusing = self.enable_prefix_cache;
+
+        // Pass 1: reuse cached full pages while the chain matches.
+        for p in 0..full_pages {
+            if !reusing {
+                break;
+            }
+            let key = page_key(parent, &tokens[p * ps..(p + 1) * ps]);
+            match self.prefix.lookup(key) {
+                Some(page) => {
+                    self.alloc.retain(page);
+                    block_table.push(page);
+                    page_keys.push(key);
+                    parent = Some(key);
+                    cached_tokens += ps;
+                }
+                None => {
+                    reusing = false;
+                }
+            }
+        }
+
+        // Pass 2: fresh pages for the remainder (compute keys as we go so
+        // the pages can be registered for future reuse on free).
+        let rollback = |alloc: &mut BlockAllocator,
+                            prefix: &mut PrefixCache,
+                            table: &[u32],
+                            keys: &[PageKey]| {
+            for (i, &page) in table.iter().enumerate() {
+                let keep = i < keys.len() && prefix.contains_page(page);
+                alloc.release(page, keep);
+            }
+        };
+
+        while block_table.len() < n_pages {
+            match self.alloc.alloc() {
+                Ok(page) => {
+                    let idx = block_table.len();
+                    if idx < full_pages && self.enable_prefix_cache {
+                        let key = page_key(parent, &tokens[idx * ps..(idx + 1) * ps]);
+                        page_keys.push(key);
+                        parent = Some(key);
+                    }
+                    block_table.push(page);
+                }
+                Err(e) => {
+                    rollback(&mut self.alloc, &mut self.prefix, &block_table, &page_keys);
+                    self.sync_evictions();
+                    return Err(e);
+                }
+            }
+        }
+        self.sync_evictions();
+
+        let seq = Sequence {
+            id,
+            tokens: tokens.to_vec(),
+            block_table,
+            cached_tokens,
+            page_keys,
+        };
+        Ok(self.seqs.entry(id).or_insert(seq))
+    }
+
+    /// Record a generated token, growing the block table when the new
+    /// position crosses into an unallocated page.
+    pub fn append_token(&mut self, id: SeqId, token: u32) -> Result<(), AllocError> {
+        let ps = self.alloc.page_size();
+        let seq = self.seqs.get_mut(&id).expect("unknown sequence");
+        let pos = seq.tokens.len();
+        let page_idx = pos / ps;
+        if page_idx >= self.max_pages_per_seq {
+            return Err(AllocError::OutOfPages);
+        }
+        if page_idx >= seq.block_table.len() {
+            let page = self.alloc.alloc()?;
+            seq.block_table.push(page);
+        }
+        seq.tokens.push(token);
+        self.sync_evictions();
+        Ok(())
+    }
+
+    /// Free a sequence. Full pages (with computed keys) are registered in
+    /// the prefix cache and parked evictable; the rest return to the free
+    /// list.
+    pub fn free(&mut self, id: SeqId) {
+        let Some(seq) = self.seqs.remove(&id) else { return };
+        let ps = self.alloc.page_size();
+        let full_pages = seq.tokens.len() / ps;
+        for (i, &page) in seq.block_table.iter().enumerate() {
+            let mut keep = false;
+            if self.enable_prefix_cache && i < full_pages {
+                // Key may be missing for pages past the originally-hashed
+                // prompt prefix (tokens generated later); compute lazily.
+                let key = if i < seq.page_keys.len() {
+                    seq.page_keys[i]
+                } else {
+                    let parent = if i == 0 {
+                        None
+                    } else if i - 1 < seq.page_keys.len() {
+                        Some(seq.page_keys[i - 1])
+                    } else {
+                        None
+                    };
+                    match parent {
+                        None if i > 0 => 0, // broken chain: don't cache
+                        p => page_key(p, &seq.tokens[i * ps..(i + 1) * ps]),
+                    }
+                };
+                if key != 0 && self.alloc.refcount(page) == 1 {
+                    self.prefix.insert(key, page);
+                    keep = self.prefix.contains_page(page);
+                }
+            }
+            // Shared pages stay alive through other sequences' refs.
+            let keep = keep || self.prefix.contains_page(page);
+            self.alloc.release(page, keep);
+        }
+        self.sync_evictions();
+    }
+
+    /// The i32 block-table row for an executable call, padded with the
+    /// garbage page 0 to `max_pages_per_seq`.
+    pub fn block_table_row(&self, id: SeqId) -> Vec<i32> {
+        let seq = &self.seqs[&id];
+        let mut row = vec![0i32; self.max_pages_per_seq];
+        for (i, &p) in seq.block_table.iter().enumerate() {
+            row[i] = p as i32;
+        }
+        row
+    }
+
+    fn sync_evictions(&mut self) {
+        for page in self.alloc.take_evicted() {
+            self.prefix.forget_page(page);
+        }
+    }
+
+    #[cfg(test)]
+    pub fn allocator(&self) -> &BlockAllocator {
+        &self.alloc
+    }
+
+    #[cfg(test)]
+    pub fn check_invariants(&self) {
+        self.alloc.check_invariants();
+        // Every live sequence's table pages have refcount >= 1.
+        for seq in self.seqs.values() {
+            for &p in &seq.block_table {
+                assert!(self.alloc.refcount(p) >= 1, "live page {p} unreferenced");
+            }
+            let ps = self.alloc.page_size();
+            let needed = if seq.tokens.is_empty() {
+                0
+            } else {
+                (seq.tokens.len() + ps - 1) / ps
+            };
+            assert!(seq.block_table.len() >= needed, "table too short");
+        }
+    }
+}

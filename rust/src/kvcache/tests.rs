@@ -1,0 +1,254 @@
+use super::prefix::page_key;
+use super::*;
+use crate::testutil::prop::Runner;
+
+#[test]
+fn alloc_exhaustion_and_reuse() {
+    let mut a = BlockAllocator::new(4, 8); // pages 1..3 usable
+    let p1 = a.alloc().unwrap();
+    let p2 = a.alloc().unwrap();
+    let p3 = a.alloc().unwrap();
+    assert_eq!(a.alloc(), Err(AllocError::OutOfPages));
+    a.release(p2, false);
+    assert_eq!(a.alloc().unwrap(), p2);
+    a.check_invariants();
+    assert!(p1 != p3 && p1 > 0 && p2 > 0 && p3 > 0);
+}
+
+#[test]
+fn cached_pages_evict_lru() {
+    let mut a = BlockAllocator::new(4, 8);
+    let p1 = a.alloc().unwrap();
+    let p2 = a.alloc().unwrap();
+    let _p3 = a.alloc().unwrap();
+    a.release(p1, true); // cached, oldest
+    a.release(p2, true);
+    assert_eq!(a.num_cached(), 2);
+    let got = a.alloc().unwrap();
+    assert_eq!(got, p1, "LRU eviction order");
+    assert_eq!(a.take_evicted(), vec![p1]);
+    a.check_invariants();
+}
+
+#[test]
+fn retain_revives_cached_page() {
+    let mut a = BlockAllocator::new(4, 8);
+    let p = a.alloc().unwrap();
+    a.release(p, true);
+    a.retain(p);
+    assert_eq!(a.refcount(p), 1);
+    assert_eq!(a.num_cached(), 0);
+    a.check_invariants();
+}
+
+#[test]
+#[should_panic(expected = "release on unreferenced")]
+fn double_release_panics() {
+    let mut a = BlockAllocator::new(4, 8);
+    let p = a.alloc().unwrap();
+    a.release(p, false);
+    a.release(p, false);
+}
+
+#[test]
+fn page_key_chains() {
+    let k1 = page_key(None, &[1, 2, 3]);
+    let k2 = page_key(Some(k1), &[4, 5, 6]);
+    let k2b = page_key(Some(k1), &[4, 5, 7]);
+    let k2c = page_key(None, &[4, 5, 6]);
+    assert_ne!(k2, k2b);
+    assert_ne!(k2, k2c, "same tokens, different parent");
+    assert_eq!(page_key(None, &[1, 2, 3]), k1);
+}
+
+#[test]
+fn manager_admit_and_free_roundtrip() {
+    let mut m = KvCacheManager::new(16, 4, 8, true);
+    let seq = m.admit(1, &[10, 11, 12, 13, 14]).unwrap();
+    assert_eq!(seq.block_table.len(), 2); // ceil((5+1)/4)
+    assert_eq!(seq.cached_tokens, 0);
+    m.check_invariants();
+    m.free(1);
+    m.check_invariants();
+    assert_eq!(m.num_sequences(), 0);
+}
+
+#[test]
+fn prefix_reuse_after_free() {
+    let mut m = KvCacheManager::new(16, 4, 8, true);
+    let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8, 9]; // two full pages + 1
+    let t1 = m.admit(1, &prompt).unwrap().block_table.clone();
+    m.free(1);
+    let seq2 = m.admit(2, &prompt).unwrap();
+    // the two full pages come back from the prefix cache
+    assert_eq!(seq2.cached_tokens, 8);
+    assert_eq!(&seq2.block_table[..2], &t1[..2]);
+    let (hits, _) = m.prefix_stats();
+    assert_eq!(hits, 2);
+    m.check_invariants();
+}
+
+#[test]
+fn prefix_sharing_between_live_sequences() {
+    let mut m = KvCacheManager::new(16, 4, 8, true);
+    let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8];
+    m.admit(1, &prompt).unwrap();
+    m.free(1); // registers both pages
+    m.admit(2, &prompt).unwrap();
+    let t2 = m.get(2).unwrap().block_table.clone();
+    m.admit(3, &prompt).unwrap();
+    let t3 = m.get(3).unwrap().block_table.clone();
+    assert_eq!(t2[..2], t3[..2], "live sequences share prefix pages");
+    assert_eq!(m.allocator().refcount(t2[0]), 2);
+    m.free(2);
+    assert_eq!(m.allocator().refcount(t2[0]), 1);
+    m.check_invariants();
+    m.free(3);
+    m.check_invariants();
+}
+
+#[test]
+fn divergent_prefix_stops_reuse() {
+    let mut m = KvCacheManager::new(16, 4, 8, true);
+    m.admit(1, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+    m.free(1);
+    let seq = m.admit(2, &[1, 2, 3, 4, 9, 9, 9, 9]).unwrap();
+    assert_eq!(seq.cached_tokens, 4, "only the first page matches");
+    m.check_invariants();
+}
+
+#[test]
+fn append_token_grows_table_on_page_boundary() {
+    let mut m = KvCacheManager::new(16, 4, 8, false);
+    m.admit(1, &[1, 2, 3]).unwrap(); // 3 prompt tokens + 1 slot = 1 page
+    assert_eq!(m.get(1).unwrap().block_table.len(), 1);
+    m.append_token(1, 40).unwrap(); // pos 3, fits page 0
+    assert_eq!(m.get(1).unwrap().block_table.len(), 1);
+    m.append_token(1, 41).unwrap(); // pos 4 -> page 1 allocated
+    assert_eq!(m.get(1).unwrap().block_table.len(), 2);
+    m.check_invariants();
+}
+
+#[test]
+fn append_token_respects_max_pages() {
+    let mut m = KvCacheManager::new(64, 4, 2, false);
+    m.admit(1, &[1, 2, 3, 4, 5, 6, 7]).unwrap(); // 7 tokens: 2 pages
+    m.append_token(1, 8).unwrap(); // pos 7 fills page 2
+    assert_eq!(m.append_token(1, 9), Err(AllocError::OutOfPages));
+}
+
+#[test]
+fn admission_control_bounds() {
+    let m = KvCacheManager::new(8, 4, 4, false); // 7 usable pages
+    assert!(m.can_admit(12));
+    assert!(!m.can_admit(16)); // needs 5 pages > max_pages_per_seq 4
+    let mut m2 = KvCacheManager::new(4, 4, 4, false); // 3 usable
+    assert!(m2.can_admit(8));
+    m2.admit(1, &[0; 8]).unwrap(); // takes 3 pages (8+1 tokens)
+    assert!(!m2.can_admit(8));
+}
+
+#[test]
+fn admit_rolls_back_on_exhaustion() {
+    let mut m = KvCacheManager::new(4, 4, 8, true); // 3 usable pages
+    m.admit(1, &[1, 2, 3, 4, 5, 6]).unwrap(); // 2 pages
+    let err = m.admit(2, &[9; 10]); // needs 3 pages, only 1 left
+    assert!(err.is_err());
+    m.check_invariants();
+    // seq 1 unharmed and pages not leaked
+    assert_eq!(m.available_pages(), 1);
+    m.free(1);
+    m.check_invariants();
+    assert_eq!(m.available_pages(), 3);
+}
+
+#[test]
+fn block_table_row_pads_with_garbage_page() {
+    let mut m = KvCacheManager::new(16, 4, 6, false);
+    m.admit(7, &[1, 2, 3, 4, 5]).unwrap();
+    let row = m.block_table_row(7);
+    assert_eq!(row.len(), 6);
+    assert!(row[0] > 0 && row[1] > 0);
+    assert_eq!(&row[2..], &[0, 0, 0, 0]);
+}
+
+#[test]
+fn disabled_prefix_cache_never_shares() {
+    let mut m = KvCacheManager::new(16, 4, 8, false);
+    let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8];
+    m.admit(1, &prompt).unwrap();
+    m.free(1);
+    let seq = m.admit(2, &prompt).unwrap();
+    assert_eq!(seq.cached_tokens, 0);
+    let (hits, misses) = m.prefix_stats();
+    assert_eq!((hits, misses), (0, 0));
+}
+
+#[test]
+fn prop_random_admit_free_append_keeps_invariants() {
+    Runner::new("kvcache_invariants", 150).run(|rng| {
+        let page_size = *rng.choose(&[4usize, 8, 16]);
+        let num_pages = 2 + rng.range(40);
+        let max_pages = 1 + rng.range(10);
+        let mut m = KvCacheManager::new(num_pages, page_size, max_pages, rng.bool());
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..200 {
+            match rng.range(4) {
+                0 => {
+                    let n = 1 + rng.range(page_size * 3);
+                    let toks: Vec<u32> = (0..n).map(|_| rng.range(64) as u32).collect();
+                    next_id += 1;
+                    if m.admit(next_id, &toks).is_ok() {
+                        live.push(next_id);
+                    }
+                }
+                1 if !live.is_empty() => {
+                    let idx = rng.range(live.len());
+                    let id = live.swap_remove(idx);
+                    m.free(id);
+                }
+                2 if !live.is_empty() => {
+                    let id = *rng.choose(&live);
+                    let _ = m.append_token(id, rng.range(64) as u32);
+                }
+                _ => {}
+            }
+            m.check_invariants();
+        }
+        for id in live {
+            m.free(id);
+        }
+        m.check_invariants();
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prefix_cache_shared_tables_agree() {
+    // Two sequences with a common full-page prefix must end up sharing
+    // exactly the common full pages when cache hits occur.
+    Runner::new("prefix_sharing", 100).run(|rng| {
+        let ps = 4usize;
+        let mut m = KvCacheManager::new(64, ps, 16, true);
+        let common_pages = 1 + rng.range(3);
+        let common: Vec<u32> = (0..common_pages * ps).map(|_| rng.range(32) as u32).collect();
+        let mut p1 = common.clone();
+        let mut p2 = common.clone();
+        p1.extend((0..rng.range(6)).map(|_| 100 + rng.range(32) as u32));
+        p2.extend((0..rng.range(6)).map(|_| 200 + rng.range(32) as u32));
+        m.admit(1, &p1).unwrap();
+        m.free(1); // register prefix
+        m.admit(2, &p2).unwrap();
+        let seq2 = m.get(2).unwrap();
+        if seq2.cached_tokens != common_pages * ps {
+            return Err(format!(
+                "expected {} cached tokens, got {}",
+                common_pages * ps,
+                seq2.cached_tokens
+            ));
+        }
+        m.check_invariants();
+        Ok(())
+    });
+}

@@ -1,0 +1,48 @@
+//! # WebLLM reproduction — in-browser LLM inference engine, rebuilt as a
+//! # Rust + JAX + Pallas three-layer stack
+//!
+//! Reproduction of *WebLLM: A High-Performance In-Browser LLM Inference
+//! Engine* (Ruan et al., 2024). The paper's browser engine maps onto:
+//!
+//! * **L3 (this crate)** — the coordination system: `coordinator` holds
+//!   the `MLCEngine` (worker-side backend) and `ServiceWorkerMLCEngine`
+//!   (frontend handle over a JSON message channel), the continuous-
+//!   batching scheduler, streaming, and multi-model routing. Substrates:
+//!   `json`, `api` (OpenAI-style types), `tokenizer` (byte-level BPE),
+//!   `sampler`, `grammar` (structured generation), `kvcache` (paged KV
+//!   metadata), `http` (endpoint + SSE), `browser` (browser-environment
+//!   cost model), `metrics`.
+//! * **L2/L1 (build-time Python)** — the model graph and Pallas kernels,
+//!   AOT-lowered to HLO text artifacts that `runtime` loads and executes
+//!   through the PJRT CPU client (`xla` crate). Python is never on the
+//!   request path.
+//!
+//! See DESIGN.md for the full inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod api;
+pub mod browser;
+pub mod coordinator;
+pub mod grammar;
+pub mod http;
+pub mod json;
+pub mod kvcache;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod sampler;
+pub mod tokenizer;
+
+pub mod testutil;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Repo-root-relative artifacts directory (override with WEBLLM_ARTIFACTS).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    match std::env::var("WEBLLM_ARTIFACTS") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    }
+}

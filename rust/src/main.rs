@@ -1,0 +1,212 @@
+//! `webllm` CLI — launcher for the reproduction.
+//!
+//! ```text
+//! webllm serve   --model tiny-2m [--addr 127.0.0.1:8080] [--browser]
+//! webllm chat    --model tiny-2m [--browser] [--max-tokens N]
+//! webllm generate --model tiny-2m --prompt "..." [--json] [--seed S]
+//! webllm models
+//! webllm stats   --model tiny-2m
+//! ```
+//!
+//! Hand-rolled arg parsing (no clap in the vendored set).
+
+use std::collections::HashMap;
+use webllm::api::{ChatCompletionRequest, ResponseFormat};
+use webllm::coordinator::{EngineConfig, ServiceWorkerMLCEngine};
+use webllm::http::{serve, ServerConfig};
+use webllm::tokenizer::Role;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().map(String::as_str) else {
+        usage();
+        std::process::exit(2);
+    };
+    let flags = parse_flags(&args[1..]);
+    let result = match cmd {
+        "serve" => cmd_serve(&flags),
+        "chat" => cmd_chat(&flags),
+        "generate" => cmd_generate(&flags),
+        "models" => cmd_models(),
+        "stats" => cmd_stats(&flags),
+        "--help" | "-h" | "help" => {
+            usage();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "webllm {} — in-browser LLM inference engine reproduction
+
+USAGE:
+  webllm serve    --model <name>[,<name>...] [--addr HOST:PORT] [--browser]
+  webllm chat     --model <name> [--browser] [--max-tokens N] [--temperature T]
+  webllm generate --model <name> --prompt TEXT [--json] [--max-tokens N] [--seed S]
+  webllm models
+  webllm stats    --model <name>
+
+FLAGS:
+  --browser     run in browser mode (inject WebGPU/WASM cost model)
+  --artifacts   artifacts directory (default: ./artifacts)",
+        webllm::version()
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = args.get(i + 1).filter(|v| !v.starts_with("--"));
+            match val {
+                Some(v) => {
+                    flags.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                None => {
+                    flags.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig, String> {
+    let models: Vec<&str> = flags
+        .get("model")
+        .map(|m| m.split(',').collect())
+        .ok_or("--model is required")?;
+    let mut cfg = if flags.contains_key("browser") {
+        EngineConfig::browser(&models)
+    } else {
+        EngineConfig::native(&models)
+    };
+    if let Some(dir) = flags.get("artifacts") {
+        cfg.artifacts_dir = dir.into();
+    }
+    Ok(cfg)
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = ServerConfig {
+        addr: flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:8080".into()),
+        engine: engine_config(flags)?,
+        max_requests: flags.get("max-requests").and_then(|v| v.parse().ok()),
+    };
+    eprintln!("loading models {:?} ...", cfg.engine.models);
+    serve(cfg)
+}
+
+fn cmd_chat(flags: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = engine_config(flags)?;
+    let model = cfg.models[0].clone();
+    eprintln!("loading {model} ...");
+    let mut fe = ServiceWorkerMLCEngine::create(cfg).map_err(|e| e.to_string())?;
+    eprintln!("ready. type a message; 'exit' quits.");
+    let max_tokens: usize = flags.get("max-tokens").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let temperature: f32 = flags.get("temperature").and_then(|v| v.parse().ok()).unwrap_or(0.7);
+
+    let mut history: Vec<(Role, String)> = Vec::new();
+    let stdin = std::io::stdin();
+    loop {
+        eprint!("> ");
+        let mut line = String::new();
+        if stdin.read_line(&mut line).map_err(|e| e.to_string())? == 0 {
+            return Ok(());
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "exit" {
+            return Ok(());
+        }
+        history.push((Role::User, line.to_string()));
+        let mut req = ChatCompletionRequest::new(&model);
+        for (role, content) in &history {
+            req = req.message(*role, content.clone());
+        }
+        req.max_tokens = max_tokens;
+        req.sampling.temperature = temperature;
+        let resp = fe
+            .chat_completion_stream(req, |c| {
+                print!("{}", c.delta);
+                use std::io::Write;
+                let _ = std::io::stdout().flush();
+            })
+            .map_err(|e| e.to_string())?;
+        println!();
+        eprintln!(
+            "[{} tok, {:.1} tok/s]",
+            resp.usage.completion_tokens, resp.usage.decode_tokens_per_s
+        );
+        history.push((Role::Assistant, resp.text().to_string()));
+    }
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = engine_config(flags)?;
+    let model = cfg.models[0].clone();
+    let prompt = flags.get("prompt").ok_or("--prompt is required")?.clone();
+    let mut fe = ServiceWorkerMLCEngine::create(cfg).map_err(|e| e.to_string())?;
+    let mut req = ChatCompletionRequest::new(&model).user(prompt);
+    req.max_tokens = flags.get("max-tokens").and_then(|v| v.parse().ok()).unwrap_or(64);
+    req.sampling.seed = flags.get("seed").and_then(|v| v.parse().ok());
+    if flags.contains_key("json") {
+        req.response_format = ResponseFormat::JsonObject;
+    }
+    let resp = fe.chat_completion(req).map_err(|e| e.to_string())?;
+    println!("{}", resp.text());
+    eprintln!(
+        "[prompt {} tok | completion {} tok | ttft {:.3}s | {:.1} tok/s]",
+        resp.usage.prompt_tokens,
+        resp.usage.completion_tokens,
+        resp.usage.ttft_s,
+        resp.usage.decode_tokens_per_s
+    );
+    Ok(())
+}
+
+fn cmd_models() -> Result<(), String> {
+    let manifest = webllm::models::Manifest::load(&webllm::artifacts_dir())?;
+    println!(
+        "{:<16} {:>10} {:>8} {:>8} {:>10} {:>12}",
+        "MODEL", "PARAMS", "LAYERS", "HEADS", "MAX_SEQ", "BATCHES"
+    );
+    for (name, rec) in &manifest.models {
+        let c = &rec.config;
+        println!(
+            "{:<16} {:>10} {:>8} {:>8} {:>10} {:>12}",
+            name,
+            c.param_count,
+            c.n_layers,
+            format!("{}/{}", c.n_heads, c.n_kv_heads),
+            c.max_seq_len,
+            format!("{:?}", c.decode_batches),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_stats(flags: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = engine_config(flags)?;
+    let mut fe = ServiceWorkerMLCEngine::create(cfg).map_err(|e| e.to_string())?;
+    let mut req = ChatCompletionRequest::new(&fe.models()[0].clone()).user("warmup request");
+    req.max_tokens = 16;
+    fe.chat_completion(req).map_err(|e| e.to_string())?;
+    let stats = fe.stats().map_err(|e| e.to_string())?;
+    println!("{}", webllm::json::to_string_pretty(&stats));
+    Ok(())
+}

@@ -1,0 +1,241 @@
+//! Engine metrics: timers, streaming stats, percentile histograms.
+//!
+//! Used by the benches (rust/benches/) for the Table-1 harness and by the
+//! engine's usage/telemetry accounting (`runtime_stats_text` in WebLLM's
+//! API). No external deps; percentile queries sort on demand.
+
+use std::time::{Duration, Instant};
+
+/// Running mean/variance (Welford) + min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self { min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Sample reservoir with percentile queries (stores everything; bench
+/// scales here are thousands of points, not millions).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// p in [0, 100]; nearest-rank.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples
+                .sort_unstable_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+        let rank = ((p / 100.0) * (self.samples.len() as f64 - 1.0)).round() as usize;
+        self.samples[rank.min(self.samples.len() - 1)]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+}
+
+/// Wall-clock scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Decode/prefill throughput accounting for one engine run — the numbers
+/// behind Table 1 and the serve example's report.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub prefill_time_s: f64,
+    pub decode_time_s: f64,
+    /// Time from request admission to first streamed token.
+    pub ttft: Histogram,
+    /// Inter-token latency.
+    pub itl: Histogram,
+}
+
+impl EngineStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn prefill_tps(&self) -> f64 {
+        if self.prefill_time_s == 0.0 {
+            0.0
+        } else {
+            self.prefill_tokens as f64 / self.prefill_time_s
+        }
+    }
+
+    pub fn decode_tps(&self) -> f64 {
+        if self.decode_time_s == 0.0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / self.decode_time_s
+        }
+    }
+
+    pub fn merge(&mut self, other: &EngineStats) {
+        self.prefill_tokens += other.prefill_tokens;
+        self.decode_tokens += other.decode_tokens;
+        self.prefill_time_s += other.prefill_time_s;
+        self.decode_time_s += other.decode_time_s;
+        for &s in &other.ttft.samples {
+            self.ttft.push(s);
+        }
+        for &s in &other.itl.samples {
+            self.itl.push(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-9);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 16.0);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.push(i as f64);
+        }
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(50.0), 51.0); // nearest-rank on 0..99
+        assert_eq!(h.percentile(100.0), 100.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let mut h = Histogram::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn engine_stats_throughput_and_merge() {
+        let mut a = EngineStats::new();
+        a.decode_tokens = 100;
+        a.decode_time_s = 2.0;
+        a.ttft.push(0.1);
+        let mut b = EngineStats::new();
+        b.decode_tokens = 50;
+        b.decode_time_s = 1.0;
+        b.ttft.push(0.3);
+        a.merge(&b);
+        assert_eq!(a.decode_tokens, 150);
+        assert!((a.decode_tps() - 50.0).abs() < 1e-9);
+        assert_eq!(a.ttft.len(), 2);
+    }
+}

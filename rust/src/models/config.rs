@@ -1,0 +1,82 @@
+//! Architecture config (mirrors python/compile/configs.py ModelConfig).
+
+use crate::json::Value;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub page_size: usize,
+    pub num_pages: usize,
+    pub max_seq_len: usize,
+    pub prefill_chunks: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+    pub param_count: u64,
+}
+
+impl ModelConfig {
+    pub fn from_json(v: &Value) -> Result<Self, String> {
+        let get = |k: &str| v.get(k).ok_or_else(|| format!("config missing '{k}'"));
+        let usize_of = |k: &str| -> Result<usize, String> {
+            get(k)?.as_usize().ok_or_else(|| format!("config '{k}' not a usize"))
+        };
+        let list_of = |k: &str| -> Result<Vec<usize>, String> {
+            get(k)?
+                .as_array()
+                .ok_or_else(|| format!("config '{k}' not a list"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| format!("bad entry in '{k}'")))
+                .collect()
+        };
+        Ok(Self {
+            name: get("name")?.as_str().ok_or("name not a string")?.to_string(),
+            vocab_size: usize_of("vocab_size")?,
+            d_model: usize_of("d_model")?,
+            n_layers: usize_of("n_layers")?,
+            n_heads: usize_of("n_heads")?,
+            n_kv_heads: usize_of("n_kv_heads")?,
+            head_dim: usize_of("head_dim")?,
+            ffn_dim: usize_of("ffn_dim")?,
+            rope_theta: get("rope_theta")?.as_f64().ok_or("rope_theta not a number")?,
+            norm_eps: get("norm_eps")?.as_f64().ok_or("norm_eps not a number")?,
+            page_size: usize_of("page_size")?,
+            num_pages: usize_of("num_pages")?,
+            max_seq_len: usize_of("max_seq_len")?,
+            prefill_chunks: list_of("prefill_chunks")?,
+            decode_batches: list_of("decode_batches")?,
+            param_count: get("param_count")?.as_u64().unwrap_or(0),
+        })
+    }
+
+    pub fn max_pages_per_seq(&self) -> usize {
+        self.max_seq_len / self.page_size
+    }
+
+    /// Largest prompt the compiled prefill menu accepts.
+    pub fn max_prefill_chunk(&self) -> usize {
+        self.prefill_chunks.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Largest compiled decode batch.
+    pub fn max_decode_batch(&self) -> usize {
+        self.decode_batches.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Smallest compiled chunk that fits `n` prompt tokens.
+    pub fn pick_chunk(&self, n: usize) -> Option<usize> {
+        self.prefill_chunks.iter().copied().filter(|&c| c >= n).min()
+    }
+
+    /// Smallest compiled batch that fits `n` live sequences.
+    pub fn pick_batch(&self, n: usize) -> Option<usize> {
+        self.decode_batches.iter().copied().filter(|&b| b >= n).min()
+    }
+}

@@ -1,0 +1,17 @@
+//! Model records, configs and weight artifacts.
+//!
+//! The analog of WebLLM's `prebuiltAppConfig` + `mlc-chat-config.json`:
+//! the manifest (written by `python/compile/aot.py`) lists every model
+//! the engine can load, its architecture config, quantized weight shards,
+//! and the AOT executables per (phase, static shape).
+
+mod config;
+mod registry;
+mod weights;
+
+pub use config::ModelConfig;
+pub use registry::{ExeEntry, Manifest, ModelRecord, TensorSpec};
+pub use weights::WeightFile;
+
+#[cfg(test)]
+mod tests;

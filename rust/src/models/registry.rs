@@ -1,0 +1,183 @@
+//! Manifest parsing: the model registry the engine loads from.
+
+use super::ModelConfig;
+use crate::json::{parse, Value};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// dtype + shape of one tensor in the artifact contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "u32" | "i32"
+}
+
+impl TensorSpec {
+    fn from_json(v: &Value) -> Result<Self, String> {
+        Ok(Self {
+            name: v.get("name").and_then(Value::as_str).ok_or("spec missing name")?.into(),
+            shape: v
+                .get("shape")
+                .and_then(Value::as_array)
+                .ok_or("spec missing shape")?
+                .iter()
+                .map(|x| x.as_usize().ok_or("bad shape entry"))
+                .collect::<Result<_, _>>()?,
+            dtype: v.get("dtype").and_then(Value::as_str).ok_or("spec missing dtype")?.into(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.element_count() * 4 // f32/u32/i32 all 4 bytes
+    }
+}
+
+/// A weight tensor entry in weights_q4.bin.
+#[derive(Clone, Debug)]
+pub struct WeightEntry {
+    pub spec: TensorSpec,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// One AOT executable (HLO text file) + its phase-specific input specs.
+#[derive(Clone, Debug)]
+pub struct ExeEntry {
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+}
+
+/// Everything the runtime needs to load one model.
+#[derive(Clone, Debug)]
+pub struct ModelRecord {
+    pub config: ModelConfig,
+    pub weights_bin: PathBuf,
+    pub weights: Vec<WeightEntry>,
+    pub cache: Vec<TensorSpec>,
+    /// chunk size -> prefill executable
+    pub prefill: BTreeMap<usize, ExeEntry>,
+    /// batch size -> decode executable
+    pub decode: BTreeMap<usize, ExeEntry>,
+}
+
+/// Parsed artifacts/manifest.json.
+pub struct Manifest {
+    pub root: PathBuf,
+    pub group_size: usize,
+    pub pack: usize,
+    pub tokenizer_path: PathBuf,
+    pub models: BTreeMap<String, ModelRecord>,
+    /// Micro-bench executables (kernel ablations), name -> entry.
+    pub kernel_bench: BTreeMap<String, ExeEntry>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self, String> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let v = parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(artifacts_dir, &v)
+    }
+
+    pub fn from_json(root: &Path, v: &Value) -> Result<Self, String> {
+        let models_v = v.get("models").and_then(Value::as_object).ok_or("manifest missing models")?;
+        let mut models = BTreeMap::new();
+        for (name, mv) in models_v.iter() {
+            models.insert(name.clone(), Self::model_record(root, mv)?);
+        }
+        let mut kernel_bench = BTreeMap::new();
+        if let Some(kb) = v.get("kernel_bench").and_then(Value::as_object) {
+            for (name, entry) in kb.iter() {
+                let path = root.join(
+                    entry.get("path").and_then(Value::as_str).ok_or("kernel_bench missing path")?,
+                );
+                let inputs = entry
+                    .get("inputs")
+                    .and_then(Value::as_array)
+                    .ok_or("kernel_bench missing inputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>, _>>()?;
+                kernel_bench.insert(name.clone(), ExeEntry { path, inputs });
+            }
+        }
+        Ok(Self {
+            root: root.to_path_buf(),
+            group_size: v.get("group_size").and_then(Value::as_usize).ok_or("missing group_size")?,
+            pack: v.get("pack").and_then(Value::as_usize).ok_or("missing pack")?,
+            tokenizer_path: root.join(
+                v.get("tokenizer").and_then(Value::as_str).unwrap_or("tokenizer.json"),
+            ),
+            models,
+            kernel_bench,
+        })
+    }
+
+    fn model_record(root: &Path, v: &Value) -> Result<ModelRecord, String> {
+        let config = ModelConfig::from_json(v.get("config").ok_or("model missing config")?)?;
+        let weights = v
+            .get("weights")
+            .and_then(Value::as_array)
+            .ok_or("model missing weights")?
+            .iter()
+            .map(|w| {
+                Ok(WeightEntry {
+                    spec: TensorSpec::from_json(w)?,
+                    offset: w.get("offset").and_then(Value::as_usize).ok_or("weight missing offset")?,
+                    nbytes: w.get("nbytes").and_then(Value::as_usize).ok_or("weight missing nbytes")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let cache = v
+            .get("cache")
+            .and_then(Value::as_array)
+            .ok_or("model missing cache")?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let exe_map = |key: &str| -> Result<BTreeMap<usize, ExeEntry>, String> {
+            let mut out = BTreeMap::new();
+            let obj = v.get(key).and_then(Value::as_object).ok_or(format!("missing {key}"))?;
+            for (size, entry) in obj.iter() {
+                let size: usize = size.parse().map_err(|_| format!("bad {key} key '{size}'"))?;
+                let path = root.join(
+                    entry.get("path").and_then(Value::as_str).ok_or("exe missing path")?,
+                );
+                let inputs = entry
+                    .get("inputs")
+                    .and_then(Value::as_array)
+                    .ok_or("exe missing inputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>, _>>()?;
+                out.insert(size, ExeEntry { path, inputs });
+            }
+            Ok(out)
+        };
+        Ok(ModelRecord {
+            config,
+            weights_bin: root.join(
+                v.get("weights_bin").and_then(Value::as_str).ok_or("missing weights_bin")?,
+            ),
+            weights,
+            cache,
+            prefill: exe_map("prefill")?,
+            decode: exe_map("decode")?,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelRecord, String> {
+        self.models
+            .get(name)
+            .ok_or_else(|| {
+                let known: Vec<&str> = self.models.keys().map(String::as_str).collect();
+                format!("unknown model '{name}'; available: {known:?}")
+            })
+    }
+}

@@ -1,0 +1,77 @@
+use super::*;
+use crate::json::parse;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let p = crate::artifacts_dir();
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.models.contains_key("tiny-2m"));
+    assert_eq!(m.group_size, 64);
+    assert_eq!(m.pack, 8);
+    let rec = m.model("tiny-2m").unwrap();
+    assert_eq!(rec.config.n_layers, 2);
+    assert_eq!(rec.config.max_pages_per_seq(), 16);
+    assert!(rec.prefill.contains_key(&16));
+    assert!(rec.decode.contains_key(&1));
+}
+
+#[test]
+fn unknown_model_is_helpful() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let err = m.model("gpt-17").unwrap_err();
+    assert!(err.contains("tiny-2m"), "{err}");
+}
+
+#[test]
+fn weight_file_validates_layout() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for name in ["tiny-2m", "phi-web-38m"] {
+        let rec = m.model(name).unwrap();
+        let f = WeightFile::load(rec).unwrap();
+        // embed is f32[V, D]; spot check a plausible float magnitude
+        let e = &rec.weights[0];
+        assert_eq!(e.spec.name, "embed");
+        let b = f.bytes(e);
+        let x = f32::from_le_bytes(b[0..4].try_into().unwrap());
+        assert!(x.abs() < 1.0, "embed[0] = {x}");
+    }
+}
+
+#[test]
+fn weight_file_rejects_corrupt_manifest() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let mut rec = m.model("tiny-2m").unwrap().clone();
+    rec.weights[0].nbytes += 4; // size mismatch vs spec
+    assert!(WeightFile::load(&rec).is_err());
+}
+
+#[test]
+fn config_pickers() {
+    let v = parse(r#"{
+        "name":"x","vocab_size":4096,"d_model":128,"n_layers":2,"n_heads":4,
+        "n_kv_heads":2,"head_dim":32,"ffn_dim":256,"rope_theta":10000.0,
+        "norm_eps":1e-5,"page_size":8,"num_pages":32,"max_seq_len":64,
+        "prefill_chunks":[16,32],"decode_batches":[1,2,4],"param_count":1}"#).unwrap();
+    let c = ModelConfig::from_json(&v).unwrap();
+    assert_eq!(c.pick_chunk(9), Some(16));
+    assert_eq!(c.pick_chunk(17), Some(32));
+    assert_eq!(c.pick_chunk(33), None);
+    assert_eq!(c.pick_batch(1), Some(1));
+    assert_eq!(c.pick_batch(3), Some(4));
+    assert_eq!(c.pick_batch(5), None);
+    assert_eq!(c.max_prefill_chunk(), 32);
+}
+
+#[test]
+fn config_missing_field_errors() {
+    let v = parse(r#"{"name":"x"}"#).unwrap();
+    assert!(ModelConfig::from_json(&v).is_err());
+}

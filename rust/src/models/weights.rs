@@ -1,0 +1,58 @@
+//! Quantized weight shard loading + layout validation.
+
+use super::registry::{ModelRecord, WeightEntry};
+
+/// The raw weights_q4.bin contents with validated entry bounds.
+pub struct WeightFile {
+    data: Vec<u8>,
+}
+
+impl WeightFile {
+    pub fn load(record: &ModelRecord) -> Result<Self, String> {
+        let data = std::fs::read(&record.weights_bin)
+            .map_err(|e| format!("cannot read {}: {e}", record.weights_bin.display()))?;
+        let f = Self { data };
+        f.validate(record)?;
+        Ok(f)
+    }
+
+    fn validate(&self, record: &ModelRecord) -> Result<(), String> {
+        let mut prev_end = 0usize;
+        for e in &record.weights {
+            if e.offset % 64 != 0 {
+                return Err(format!("weight '{}' misaligned offset {}", e.spec.name, e.offset));
+            }
+            if e.offset < prev_end {
+                return Err(format!("weight '{}' overlaps previous", e.spec.name));
+            }
+            if e.nbytes != e.spec.byte_len() {
+                return Err(format!(
+                    "weight '{}' size {} != spec {}",
+                    e.spec.name,
+                    e.nbytes,
+                    e.spec.byte_len()
+                ));
+            }
+            if e.offset + e.nbytes > self.data.len() {
+                return Err(format!("weight '{}' out of file bounds", e.spec.name));
+            }
+            prev_end = e.offset + e.nbytes;
+        }
+        if prev_end != self.data.len() {
+            return Err(format!(
+                "weight file has {} trailing bytes",
+                self.data.len() - prev_end
+            ));
+        }
+        Ok(())
+    }
+
+    /// Raw little-endian bytes for one weight tensor.
+    pub fn bytes(&self, e: &WeightEntry) -> &[u8] {
+        &self.data[e.offset..e.offset + e.nbytes]
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.data.len()
+    }
+}

@@ -1,0 +1,303 @@
+//! Model execution: compiled executables + device-resident state.
+
+use super::literal::{dtype_of, i32_buffer, raw_buffer, zero_f32_buffer};
+use crate::browser::BrowserEnv;
+use crate::models::{Manifest, ModelRecord, WeightFile};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::rc::Rc;
+use std::time::Instant;
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+#[derive(Debug)]
+pub enum RuntimeError {
+    Xla(xla::Error),
+    Artifact(String),
+    Shape(String),
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RuntimeError::Xla(e) => write!(f, "xla error: {e}"),
+            RuntimeError::Artifact(m) => write!(f, "artifact error: {m}"),
+            RuntimeError::Shape(m) => write!(f, "shape error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e)
+    }
+}
+
+/// Result of one prefill/decode step.
+pub struct StepOutput {
+    /// Row-major logits: prefill -> [vocab]; decode -> [batch, vocab].
+    pub logits: Vec<f32>,
+    /// Kernel dispatches this step (for the browser cost model; estimated
+    /// from the layer structure like WebGPU submit counts would be).
+    pub dispatches: usize,
+    /// Pure executable wall time (excludes overhead injection).
+    pub exec_seconds: f64,
+}
+
+/// One loaded model: compiled executables, device-resident weights, and
+/// the chained KV-pool buffers. Not Send — lives on the worker thread.
+pub struct ModelRuntime {
+    client: PjRtClient,
+    pub record: Rc<ModelRecord>,
+    prefill: BTreeMap<usize, PjRtLoadedExecutable>,
+    decode: BTreeMap<usize, PjRtLoadedExecutable>,
+    weights: Vec<PjRtBuffer>,
+    k_pages: PjRtBuffer,
+    v_pages: PjRtBuffer,
+    /// Per-step kernel dispatch estimate (see `dispatch_estimate`).
+    dispatches_per_step: usize,
+    /// Browser-environment cost model; `None` in native mode.
+    env: Option<BrowserEnv>,
+    /// Compile + upload time, reported once (model load UX in the paper).
+    pub load_seconds: f64,
+}
+
+impl ModelRuntime {
+    /// Load a model from the manifest: compile every phase executable and
+    /// upload weights. `batches`/`chunks` can restrict compilation to the
+    /// shapes a bench actually uses (compile time is per static shape).
+    pub fn load(
+        client: &PjRtClient,
+        manifest: &Manifest,
+        model: &str,
+        env: Option<BrowserEnv>,
+    ) -> Result<Self, RuntimeError> {
+        Self::load_subset(client, manifest, model, env, None, None)
+    }
+
+    pub fn load_subset(
+        client: &PjRtClient,
+        manifest: &Manifest,
+        model: &str,
+        env: Option<BrowserEnv>,
+        chunks: Option<&[usize]>,
+        batches: Option<&[usize]>,
+    ) -> Result<Self, RuntimeError> {
+        let t0 = Instant::now();
+        let record = manifest.model(model).map_err(RuntimeError::Artifact)?;
+
+        let mut prefill = BTreeMap::new();
+        for (&chunk, entry) in &record.prefill {
+            if chunks.map_or(false, |cs| !cs.contains(&chunk)) {
+                continue;
+            }
+            prefill.insert(chunk, compile_hlo(client, &entry.path)?);
+        }
+        let mut decode = BTreeMap::new();
+        for (&batch, entry) in &record.decode {
+            if batches.map_or(false, |bs| !bs.contains(&batch)) {
+                continue;
+            }
+            decode.insert(batch, compile_hlo(client, &entry.path)?);
+        }
+        if prefill.is_empty() || decode.is_empty() {
+            return Err(RuntimeError::Artifact("no executables selected".into()));
+        }
+
+        // Upload weights (once; device-resident for the model's lifetime).
+        let file = WeightFile::load(record).map_err(RuntimeError::Artifact)?;
+        let mut weights = Vec::with_capacity(record.weights.len());
+        for e in &record.weights {
+            let ty = dtype_of(&e.spec.dtype).map_err(RuntimeError::Artifact)?;
+            weights.push(raw_buffer(client, ty, file.bytes(e), &e.spec.shape)?);
+        }
+
+        // Fresh zeroed KV pools.
+        let kc = &record.cache[0];
+        let vc = &record.cache[1];
+        let k_pages = zero_f32_buffer(client, &kc.shape)?;
+        let v_pages = zero_f32_buffer(client, &vc.shape)?;
+
+        let dispatches_per_step = dispatch_estimate(&record.config);
+        Ok(Self {
+            client: client.clone(),
+            record: Rc::new(record.clone()),
+            prefill,
+            decode,
+            weights,
+            k_pages,
+            v_pages,
+            dispatches_per_step,
+            env,
+            load_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    pub fn config(&self) -> &crate::models::ModelConfig {
+        &self.record.config
+    }
+
+    pub fn compiled_chunks(&self) -> Vec<usize> {
+        self.prefill.keys().copied().collect()
+    }
+
+    pub fn compiled_batches(&self) -> Vec<usize> {
+        self.decode.keys().copied().collect()
+    }
+
+    /// Reset the KV pools to zero (bench isolation).
+    pub fn reset_cache(&mut self) -> Result<(), RuntimeError> {
+        let kc = &self.record.cache[0];
+        let vc = &self.record.cache[1];
+        self.k_pages = zero_f32_buffer(&self.client, &kc.shape)?;
+        self.v_pages = zero_f32_buffer(&self.client, &vc.shape)?;
+        Ok(())
+    }
+
+    /// Run one prefill chunk for a single sequence.
+    ///
+    /// `ids` must already be padded to a compiled chunk size; `seq_len` is
+    /// the valid prefix; `block_table` the sequence's pages padded with 0
+    /// to max_pages_per_seq. Returns last-token logits `[vocab]`.
+    pub fn prefill(
+        &mut self,
+        ids: &[i32],
+        seq_len: usize,
+        block_table: &[i32],
+    ) -> Result<StepOutput, RuntimeError> {
+        let chunk = ids.len();
+        let exe = self.prefill.get(&chunk).ok_or_else(|| {
+            RuntimeError::Shape(format!(
+                "no prefill executable for chunk {chunk} (have {:?})",
+                self.compiled_chunks()
+            ))
+        })?;
+        let mp = self.record.config.max_pages_per_seq();
+        if block_table.len() != mp {
+            return Err(RuntimeError::Shape(format!(
+                "block_table len {} != {mp}",
+                block_table.len()
+            )));
+        }
+        if seq_len == 0 || seq_len > chunk {
+            return Err(RuntimeError::Shape(format!("seq_len {seq_len} not in 1..={chunk}")));
+        }
+
+        let ids_b = i32_buffer(&self.client, ids, &[chunk])?;
+        let len_b = i32_buffer(&self.client, &[seq_len as i32], &[1])?;
+        let bt_b = i32_buffer(&self.client, block_table, &[mp])?;
+
+        let t0 = Instant::now();
+        let inputs: Vec<&PjRtBuffer> = [&ids_b, &len_b, &bt_b]
+            .into_iter()
+            .chain(self.weights.iter())
+            .chain([&self.k_pages, &self.v_pages])
+            .collect();
+        let mut out = exe.execute_b(&inputs)?;
+        let logits = self.take_outputs(&mut out)?;
+        let exec_seconds = t0.elapsed().as_secs_f64();
+
+        // Browser mode: the prefill chunk is one round of kernel
+        // dispatches just like a decode step.
+        if let Some(env) = &self.env {
+            env.charge_dispatches(self.dispatches_per_step, self.weight_bytes());
+        }
+        Ok(StepOutput { logits, dispatches: self.dispatches_per_step, exec_seconds })
+    }
+
+    /// Run one batched decode step.
+    ///
+    /// All slices are `batch`-sized (a compiled batch size); padding slots
+    /// use seq_len 0 / position 0 / block-table row of zeros. Returns
+    /// logits `[batch * vocab]`.
+    pub fn decode(
+        &mut self,
+        ids: &[i32],
+        positions: &[i32],
+        seq_lens: &[i32],
+        block_tables: &[i32],
+    ) -> Result<StepOutput, RuntimeError> {
+        let batch = ids.len();
+        let exe = self.decode.get(&batch).ok_or_else(|| {
+            RuntimeError::Shape(format!(
+                "no decode executable for batch {batch} (have {:?})",
+                self.compiled_batches()
+            ))
+        })?;
+        let mp = self.record.config.max_pages_per_seq();
+        if positions.len() != batch || seq_lens.len() != batch {
+            return Err(RuntimeError::Shape("positions/seq_lens length mismatch".into()));
+        }
+        if block_tables.len() != batch * mp {
+            return Err(RuntimeError::Shape(format!(
+                "block_tables len {} != {}",
+                block_tables.len(),
+                batch * mp
+            )));
+        }
+
+        let ids_b = i32_buffer(&self.client, ids, &[batch])?;
+        let pos_b = i32_buffer(&self.client, positions, &[batch])?;
+        let len_b = i32_buffer(&self.client, seq_lens, &[batch])?;
+        let bt_b = i32_buffer(&self.client, block_tables, &[batch, mp])?;
+
+        let t0 = Instant::now();
+        let inputs: Vec<&PjRtBuffer> = [&ids_b, &pos_b, &len_b, &bt_b]
+            .into_iter()
+            .chain(self.weights.iter())
+            .chain([&self.k_pages, &self.v_pages])
+            .collect();
+        let mut out = exe.execute_b(&inputs)?;
+        let logits = self.take_outputs(&mut out)?;
+        let exec_seconds = t0.elapsed().as_secs_f64();
+
+        if let Some(env) = &self.env {
+            env.charge_dispatches(self.dispatches_per_step, self.weight_bytes());
+        }
+        Ok(StepOutput { logits, dispatches: self.dispatches_per_step, exec_seconds })
+    }
+
+    /// Pull (logits, k_pages, v_pages) out of an execute result; the cache
+    /// buffers replace the chained state with zero host traffic.
+    fn take_outputs(&mut self, out: &mut Vec<Vec<PjRtBuffer>>) -> Result<Vec<f32>, RuntimeError> {
+        let outputs = out
+            .pop()
+            .ok_or_else(|| RuntimeError::Shape("no output replica".into()))?;
+        if outputs.len() != 3 {
+            return Err(RuntimeError::Shape(format!(
+                "expected 3 outputs (logits, k, v), got {}",
+                outputs.len()
+            )));
+        }
+        let mut it = outputs.into_iter();
+        let logits_buf = it.next().unwrap();
+        self.k_pages = it.next().unwrap();
+        self.v_pages = it.next().unwrap();
+        let logits = logits_buf.to_literal_sync()?.to_vec::<f32>()?;
+        Ok(logits)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.record.weights.iter().map(|w| w.nbytes).sum()
+    }
+}
+
+fn compile_hlo(
+    client: &PjRtClient,
+    path: &std::path::Path,
+) -> Result<PjRtLoadedExecutable, RuntimeError> {
+    let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+        RuntimeError::Artifact(format!("parse {}: {e}", path.display()))
+    })?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+/// Kernel-dispatch estimate per engine step — the count of WebGPU
+/// `dispatchWorkgroups` submissions WebLLM's compiled model issues per
+/// token: per layer 2 norms + 4 projection GEMMs + rope + attention +
+/// 3 MLP GEMMs + cache append, plus embedding + final norm + lm_head.
+fn dispatch_estimate(cfg: &crate::models::ModelConfig) -> usize {
+    cfg.n_layers * 11 + 3
+}

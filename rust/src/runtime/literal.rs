@@ -1,0 +1,75 @@
+//! Host <-> device marshalling helpers.
+
+use xla::{ElementType, PjRtBuffer, PjRtClient};
+
+/// Upload an i32 tensor.
+pub fn i32_buffer(
+    client: &PjRtClient,
+    data: &[i32],
+    dims: &[usize],
+) -> Result<PjRtBuffer, xla::Error> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    client.buffer_from_host_buffer(data, dims, None)
+}
+
+/// Upload raw little-endian bytes with an explicit element type (weights:
+/// u32 packed nibbles / f32 scales).
+///
+/// NOTE: this deliberately avoids `buffer_from_host_raw_bytes`, which in
+/// xla 0.1.6 passes the `ElementType` discriminant where PJRT expects a
+/// `PrimitiveType` — F32 uploads arrive half-sized. The typed
+/// `buffer_from_host_buffer` path converts correctly; the one-time copy
+/// into an aligned typed Vec happens only at model load.
+pub fn raw_buffer(
+    client: &PjRtClient,
+    ty: ElementType,
+    bytes: &[u8],
+    dims: &[usize],
+) -> Result<PjRtBuffer, xla::Error> {
+    match ty {
+        ElementType::F32 => {
+            let v: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            client.buffer_from_host_buffer(&v, dims, None)
+        }
+        ElementType::U32 => {
+            let v: Vec<u32> = bytes
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            client.buffer_from_host_buffer(&v, dims, None)
+        }
+        ElementType::S32 => {
+            let v: Vec<i32> = bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            client.buffer_from_host_buffer(&v, dims, None)
+        }
+        other => Err(xla::Error::UnsupportedElementType {
+            ty: other.primitive_type(),
+            op: "raw_buffer",
+        }),
+    }
+}
+
+/// Upload an all-zero f32 tensor (fresh KV pool).
+pub fn zero_f32_buffer(
+    client: &PjRtClient,
+    dims: &[usize],
+) -> Result<PjRtBuffer, xla::Error> {
+    let n: usize = dims.iter().product();
+    let zeros = vec![0f32; n];
+    client.buffer_from_host_buffer(&zeros, dims, None)
+}
+
+pub fn dtype_of(name: &str) -> Result<ElementType, String> {
+    match name {
+        "f32" => Ok(ElementType::F32),
+        "u32" => Ok(ElementType::U32),
+        "i32" => Ok(ElementType::S32),
+        other => Err(format!("unsupported dtype '{other}'")),
+    }
+}

@@ -1,0 +1,39 @@
+//! PJRT runtime: load AOT artifacts, keep weights + KV pools device-
+//! resident, execute prefill/decode from the L3 hot path.
+//!
+//! This is the Rust analog of WebLLM's WebGPU runtime glue (TVMjs): the
+//! browser fetches compiled kernels + weights once, uploads them to GPU
+//! buffers, and every request just launches kernels. Here: HLO text is
+//! compiled once per (model, phase, static shape) at load; weights are
+//! uploaded once as `PjRtBuffer`s; each step passes small host inputs
+//! (token ids, block tables) and chains the returned cache buffers into
+//! the next call (the vendored `xla` crate is patched to untuple results
+//! so caches never round-trip through host literals — see DESIGN.md §6).
+//!
+//! Threading: the `xla` crate's handles are `Rc`-based (`!Send`), so a
+//! client and every runtime it owns live on ONE thread — naturally the
+//! worker thread (`coordinator::worker`), exactly where WebLLM's
+//! `MLCEngine` keeps its GPUDevice.
+
+mod exec;
+mod literal;
+
+pub use exec::{ModelRuntime, RuntimeError, StepOutput};
+
+use std::cell::RefCell;
+
+thread_local! {
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// The calling thread's PJRT CPU client (created on first use; one per
+/// thread because the handle is not `Send`).
+pub fn thread_client() -> Result<xla::PjRtClient, xla::Error> {
+    CLIENT.with(|c| {
+        let mut slot = c.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(xla::PjRtClient::cpu()?);
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}

@@ -1,0 +1,318 @@
+//! Logits processing pipeline.
+
+use super::Pcg32;
+use std::collections::HashMap;
+
+/// Log-probability record for one sampled token (OpenAI `logprobs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TokenLogprob {
+    pub token: u32,
+    pub logprob: f32,
+    /// The `top_logprobs` most likely alternatives at this position.
+    pub top: Vec<(u32, f32)>,
+}
+
+/// Per-request sampling controls (OpenAI-style names and semantics).
+#[derive(Clone, Debug)]
+pub struct SamplingParams {
+    /// 0.0 => greedy argmax.
+    pub temperature: f32,
+    /// Nucleus sampling threshold in (0, 1]; 1.0 disables.
+    pub top_p: f32,
+    /// Keep only the k most likely tokens; 0 disables.
+    pub top_k: usize,
+    /// Drop tokens below min_p * max_prob; 0.0 disables.
+    pub min_p: f32,
+    /// > 1.0 penalizes tokens already generated (multiplicative, CTRL-style).
+    pub repetition_penalty: f32,
+    /// Additive penalty on any token that has appeared (OpenAI presence).
+    pub presence_penalty: f32,
+    /// Additive penalty scaled by occurrence count (OpenAI frequency).
+    pub frequency_penalty: f32,
+    /// token id -> additive bias in [-100, 100].
+    pub logit_bias: HashMap<u32, f32>,
+    /// RNG seed (None => engine picks one per request).
+    pub seed: Option<u64>,
+    /// Return per-token log-probabilities (OpenAI `logprobs`).
+    pub logprobs: bool,
+    /// Number of top alternatives per position (OpenAI `top_logprobs`).
+    pub top_logprobs: usize,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self {
+            temperature: 1.0,
+            top_p: 1.0,
+            top_k: 0,
+            min_p: 0.0,
+            repetition_penalty: 1.0,
+            presence_penalty: 0.0,
+            frequency_penalty: 0.0,
+            logit_bias: HashMap::new(),
+            seed: None,
+            logprobs: false,
+            top_logprobs: 0,
+        }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        Self { temperature: 0.0, ..Self::default() }
+    }
+
+    /// Validate ranges (the API layer surfaces these as 400s).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=2.0).contains(&self.temperature) {
+            return Err(format!("temperature {} not in [0, 2]", self.temperature));
+        }
+        if !(0.0..=1.0).contains(&self.top_p) || self.top_p == 0.0 {
+            return Err(format!("top_p {} not in (0, 1]", self.top_p));
+        }
+        if !(0.0..=1.0).contains(&self.min_p) {
+            return Err(format!("min_p {} not in [0, 1]", self.min_p));
+        }
+        if !(-2.0..=2.0).contains(&self.presence_penalty) {
+            return Err(format!("presence_penalty {} not in [-2, 2]", self.presence_penalty));
+        }
+        if !(-2.0..=2.0).contains(&self.frequency_penalty) {
+            return Err(format!("frequency_penalty {} not in [-2, 2]", self.frequency_penalty));
+        }
+        if self.repetition_penalty <= 0.0 {
+            return Err("repetition_penalty must be > 0".into());
+        }
+        for (&t, &b) in &self.logit_bias {
+            if !(-100.0..=100.0).contains(&b) {
+                return Err(format!("logit_bias[{t}] = {b} not in [-100, 100]"));
+            }
+        }
+        if self.top_logprobs > 20 {
+            return Err(format!("top_logprobs {} > 20", self.top_logprobs));
+        }
+        Ok(())
+    }
+}
+
+/// Stateful per-sequence processor: tracks occurrence counts for the
+/// penalty terms and owns the request RNG.
+pub struct LogitsProcessor {
+    params: SamplingParams,
+    rng: Pcg32,
+    counts: HashMap<u32, u32>,
+    /// Scratch reused across steps to keep the decode hot path allocation-free.
+    scratch: Vec<(u32, f32)>,
+}
+
+impl LogitsProcessor {
+    pub fn new(params: SamplingParams, fallback_seed: u64) -> Self {
+        let seed = params.seed.unwrap_or(fallback_seed);
+        Self { params, rng: Pcg32::new(seed), counts: HashMap::new(), scratch: Vec::new() }
+    }
+
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
+    /// Record a token that entered the context (prompt or generated) so
+    /// penalties see it.
+    pub fn observe(&mut self, token: u32) {
+        *self.counts.entry(token).or_insert(0) += 1;
+    }
+
+    /// Apply penalties + bias in place (steps 1-2 of the pipeline).
+    pub fn apply_penalties(&self, logits: &mut [f32]) {
+        let p = &self.params;
+        if p.repetition_penalty != 1.0 || p.presence_penalty != 0.0 || p.frequency_penalty != 0.0
+        {
+            for (&tok, &count) in &self.counts {
+                let Some(l) = logits.get_mut(tok as usize) else { continue };
+                if p.repetition_penalty != 1.0 {
+                    *l = if *l > 0.0 { *l / p.repetition_penalty } else { *l * p.repetition_penalty };
+                }
+                *l -= p.presence_penalty;
+                *l -= p.frequency_penalty * count as f32;
+            }
+        }
+        for (&tok, &bias) in &p.logit_bias {
+            if let Some(l) = logits.get_mut(tok as usize) {
+                *l += bias;
+            }
+        }
+    }
+
+    /// Full pipeline on a raw logits row; `mask` (from the grammar engine)
+    /// bans token i when `mask[i]` is false. Returns the sampled token.
+    pub fn sample(&mut self, logits: &mut [f32], mask: Option<&[bool]>) -> u32 {
+        self.apply_penalties(logits);
+        // Fallback for a degenerate (fully-masking) grammar state: the
+        // pre-mask argmax, so generation still makes progress.
+        let mut fallback = None;
+        if let Some(mask) = mask {
+            debug_assert_eq!(mask.len(), logits.len());
+            if !mask.iter().any(|&ok| ok) {
+                fallback = Some(argmax(logits));
+            }
+            for (l, &ok) in logits.iter_mut().zip(mask) {
+                if !ok {
+                    *l = f32::NEG_INFINITY;
+                }
+            }
+        }
+
+        let token = match fallback {
+            Some(t) => t,
+            None if self.params.temperature == 0.0 => argmax(logits),
+            None => self.sample_stochastic(logits),
+        };
+        self.observe(token);
+        token
+    }
+
+    /// Like `sample`, additionally returning the sampled token's logprob
+    /// and the top-`top_logprobs` alternatives, computed over the final
+    /// (post-penalty, post-mask, temperature-scaled) distribution —
+    /// OpenAI semantics.
+    pub fn sample_with_logprobs(
+        &mut self,
+        logits: &mut [f32],
+        mask: Option<&[bool]>,
+    ) -> (u32, Option<TokenLogprob>) {
+        let token = self.sample(logits, mask);
+        if !self.params.logprobs {
+            return (token, None);
+        }
+        // `logits` now holds the post-penalty/mask values (sample mutates
+        // in place). Log-softmax at the effective temperature.
+        let inv_t = if self.params.temperature > 0.0 { 1.0 / self.params.temperature } else { 1.0 };
+        let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut log_z = 0.0f32;
+        for &l in logits.iter() {
+            if l.is_finite() {
+                log_z += ((l - m) * inv_t).exp();
+            }
+        }
+        let log_z = log_z.ln();
+        let lp = |i: u32| -> f32 {
+            let l = logits[i as usize];
+            if l.is_finite() { (l - m) * inv_t - log_z } else { f32::NEG_INFINITY }
+        };
+        let mut top: Vec<(u32, f32)> = Vec::new();
+        if self.params.top_logprobs > 0 {
+            let mut idx: Vec<u32> = (0..logits.len() as u32)
+                .filter(|&i| logits[i as usize].is_finite())
+                .collect();
+            let k = self.params.top_logprobs.min(idx.len());
+            idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+                logits[b as usize]
+                    .partial_cmp(&logits[a as usize])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            idx.truncate(k);
+            idx.sort_unstable_by(|&a, &b| {
+                logits[b as usize]
+                    .partial_cmp(&logits[a as usize])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            top = idx.into_iter().map(|i| (i, lp(i))).collect();
+        }
+        (token, Some(TokenLogprob { token, logprob: lp(token), top }))
+    }
+
+    fn sample_stochastic(&mut self, logits: &[f32]) -> u32 {
+        let p = &self.params;
+        let inv_t = 1.0 / p.temperature;
+
+        // Collect finite candidates (scratch reuse).
+        self.scratch.clear();
+        for (i, &l) in logits.iter().enumerate() {
+            if l.is_finite() {
+                self.scratch.push((i as u32, l * inv_t));
+            }
+        }
+        if self.scratch.is_empty() {
+            // Everything masked: fall back to argmax over raw logits.
+            return argmax(logits);
+        }
+
+        // Sort descending by logit; truncation filters operate on prefixes.
+        self.scratch
+            .sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+
+        let mut n = self.scratch.len();
+        if p.top_k > 0 {
+            n = n.min(p.top_k);
+        }
+
+        // Softmax over the kept prefix (max-subtracted).
+        let m = self.scratch[0].1;
+        let mut total = 0.0f32;
+        let mut probs: Vec<f32> = Vec::with_capacity(n);
+        for &(_, l) in &self.scratch[..n] {
+            let e = (l - m).exp();
+            probs.push(e);
+            total += e;
+        }
+        for q in &mut probs {
+            *q /= total;
+        }
+
+        // min-p: drop tokens below min_p * p_max.
+        if p.min_p > 0.0 {
+            let floor = p.min_p * probs[0];
+            let keep = probs.iter().take_while(|&&q| q >= floor).count().max(1);
+            if keep < n {
+                n = keep;
+                let t: f32 = probs[..n].iter().sum();
+                probs.truncate(n);
+                for q in &mut probs {
+                    *q /= t;
+                }
+            }
+        }
+
+        // top-p nucleus: smallest prefix with cumulative mass >= top_p.
+        if p.top_p < 1.0 {
+            let mut cum = 0.0f32;
+            let mut keep = n;
+            for (i, &q) in probs.iter().enumerate() {
+                cum += q;
+                if cum >= p.top_p {
+                    keep = i + 1;
+                    break;
+                }
+            }
+            if keep < n {
+                n = keep;
+                let t: f32 = probs[..n].iter().sum();
+                probs.truncate(n);
+                for q in &mut probs {
+                    *q /= t;
+                }
+            }
+        }
+
+        // Inverse-CDF draw.
+        let r = self.rng.f32();
+        let mut cum = 0.0f32;
+        for (i, &q) in probs[..n].iter().enumerate() {
+            cum += q;
+            if r < cum {
+                return self.scratch[i].0;
+            }
+        }
+        self.scratch[n - 1].0
+    }
+}
+
+fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &l) in logits.iter().enumerate() {
+        if l > best_v {
+            best_v = l;
+            best = i;
+        }
+    }
+    best as u32
+}

@@ -1,0 +1,21 @@
+//! Sampling: the logits-to-token pipeline.
+//!
+//! WebLLM implements OpenAI-compatible sampling controls in the worker
+//! engine (temperature, top_p, penalties, logit_bias, seed); this module
+//! is that pipeline, applied in the same order MLC-LLM uses:
+//!
+//!   1. repetition / presence / frequency penalties
+//!   2. logit bias
+//!   3. grammar mask (structured generation, `crate::grammar`)
+//!   4. temperature
+//!   5. top-k / top-p / min-p truncation
+//!   6. sample (seeded PCG) or argmax when temperature == 0
+
+mod logits;
+mod rng;
+
+pub use logits::{LogitsProcessor, SamplingParams, TokenLogprob};
+pub use rng::Pcg32;
+
+#[cfg(test)]
+mod tests;

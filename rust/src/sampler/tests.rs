@@ -1,0 +1,245 @@
+use super::*;
+use crate::testutil::prop::Runner;
+use std::collections::HashMap;
+
+fn logits(v: &[f32]) -> Vec<f32> {
+    v.to_vec()
+}
+
+#[test]
+fn greedy_picks_argmax() {
+    let mut p = LogitsProcessor::new(SamplingParams::greedy(), 0);
+    let mut l = logits(&[0.1, 2.0, -1.0, 1.9]);
+    assert_eq!(p.sample(&mut l, None), 1);
+}
+
+#[test]
+fn temperature_zero_is_deterministic_across_seeds() {
+    for seed in 0..20 {
+        let mut p = LogitsProcessor::new(SamplingParams::greedy(), seed);
+        let mut l = logits(&[0.0, 0.5, 3.0, 0.1]);
+        assert_eq!(p.sample(&mut l, None), 2);
+    }
+}
+
+#[test]
+fn seeded_sampling_reproducible() {
+    let params = SamplingParams { seed: Some(42), ..Default::default() };
+    let draw = |fallback| {
+        let mut p = LogitsProcessor::new(params.clone(), fallback);
+        let mut l = logits(&[1.0, 1.1, 0.9, 1.05]);
+        p.sample(&mut l, None)
+    };
+    // explicit seed wins over fallback seed
+    assert_eq!(draw(1), draw(999));
+}
+
+#[test]
+fn top_k_restricts_support() {
+    let params = SamplingParams { top_k: 2, ..Default::default() };
+    let mut p = LogitsProcessor::new(params, 7);
+    for _ in 0..200 {
+        let mut l = logits(&[5.0, 4.9, -10.0, -10.0]);
+        let t = p.sample(&mut l, None);
+        assert!(t == 0 || t == 1, "top_k=2 sampled {t}");
+    }
+}
+
+#[test]
+fn top_p_restricts_support() {
+    // probs ~ [0.97, 0.01, 0.01, 0.01]; top_p=0.9 keeps only token 0.
+    let params = SamplingParams { top_p: 0.9, ..Default::default() };
+    let mut p = LogitsProcessor::new(params, 11);
+    for _ in 0..100 {
+        let mut l = logits(&[6.0, 1.0, 1.0, 1.0]);
+        assert_eq!(p.sample(&mut l, None), 0);
+    }
+}
+
+#[test]
+fn min_p_drops_tail() {
+    let params = SamplingParams { min_p: 0.5, ..Default::default() };
+    let mut p = LogitsProcessor::new(params, 13);
+    for _ in 0..100 {
+        // p(0) >> others; min_p 0.5 bans everything below half of p_max.
+        let mut l = logits(&[4.0, 2.0, 1.0, 0.0]);
+        assert_eq!(p.sample(&mut l, None), 0);
+    }
+}
+
+#[test]
+fn grammar_mask_bans_tokens() {
+    let mut p = LogitsProcessor::new(SamplingParams::default(), 3);
+    let mask = vec![false, false, true, false];
+    for _ in 0..50 {
+        let mut l = logits(&[10.0, 9.0, -5.0, 8.0]);
+        assert_eq!(p.sample(&mut l, Some(&mask)), 2);
+    }
+}
+
+#[test]
+fn fully_masked_falls_back_to_argmax() {
+    let mut p = LogitsProcessor::new(SamplingParams::default(), 3);
+    let mask = vec![false; 4];
+    let mut l = logits(&[1.0, 3.0, 2.0, 0.0]);
+    assert_eq!(p.sample(&mut l, Some(&mask)), 1);
+}
+
+#[test]
+fn presence_penalty_discourages_repeats() {
+    let params = SamplingParams {
+        temperature: 0.0,
+        presence_penalty: 2.0,
+        ..Default::default()
+    };
+    let mut p = LogitsProcessor::new(params, 0);
+    let mut l = logits(&[1.0, 0.5, 0.0]);
+    assert_eq!(p.sample(&mut l, None), 0); // now observed
+    let mut l = logits(&[1.0, 0.5, 0.0]);
+    // 1.0 - 2.0 < 0.5 -> token 1 wins
+    assert_eq!(p.sample(&mut l, None), 1);
+}
+
+#[test]
+fn frequency_penalty_scales_with_count() {
+    let params = SamplingParams {
+        temperature: 0.0,
+        frequency_penalty: 0.3,
+        ..Default::default()
+    };
+    let mut p = LogitsProcessor::new(params, 0);
+    p.observe(0);
+    p.observe(0);
+    p.observe(0); // count 3 -> -0.9
+    let mut l = logits(&[1.0, 0.2]);
+    assert_eq!(p.sample(&mut l, None), 1);
+}
+
+#[test]
+fn repetition_penalty_divides_positive_multiplies_negative() {
+    let params = SamplingParams { repetition_penalty: 2.0, ..Default::default() };
+    let mut p = LogitsProcessor::new(params, 0);
+    p.observe(0);
+    p.observe(1);
+    let mut l = logits(&[4.0, -4.0, 0.0]);
+    p.apply_penalties(&mut l);
+    assert_eq!(l, vec![2.0, -8.0, 0.0]);
+}
+
+#[test]
+fn logit_bias_applied() {
+    let mut bias = HashMap::new();
+    bias.insert(2u32, 100.0f32);
+    let params = SamplingParams { temperature: 0.0, logit_bias: bias, ..Default::default() };
+    let mut p = LogitsProcessor::new(params, 0);
+    let mut l = logits(&[5.0, 4.0, -50.0]);
+    assert_eq!(p.sample(&mut l, None), 2);
+}
+
+#[test]
+fn validation_catches_bad_ranges() {
+    let ok = SamplingParams::default();
+    assert!(ok.validate().is_ok());
+    assert!(SamplingParams { temperature: 3.0, ..Default::default() }.validate().is_err());
+    assert!(SamplingParams { top_p: 0.0, ..Default::default() }.validate().is_err());
+    assert!(SamplingParams { presence_penalty: 5.0, ..Default::default() }.validate().is_err());
+    assert!(SamplingParams { repetition_penalty: 0.0, ..Default::default() }.validate().is_err());
+    let mut bias = HashMap::new();
+    bias.insert(0u32, 500.0f32);
+    assert!(SamplingParams { logit_bias: bias, ..Default::default() }.validate().is_err());
+}
+
+#[test]
+fn prop_sampled_token_always_unmasked_and_in_range() {
+    Runner::new("sampler_support", 300).run(|rng| {
+        let n = 2 + rng.range(64);
+        let mut l: Vec<f32> = (0..n).map(|_| (rng.f64() * 8.0 - 4.0) as f32).collect();
+        let mask: Vec<bool> = (0..n).map(|_| rng.f64() < 0.7).collect();
+        let any_allowed = mask.iter().any(|&b| b);
+        let params = SamplingParams {
+            temperature: [0.0, 0.5, 1.0, 1.5][rng.range(4)],
+            top_p: [0.3, 0.9, 1.0][rng.range(3)],
+            top_k: [0, 1, 4, 16][rng.range(4)],
+            min_p: [0.0, 0.2][rng.range(2)],
+            ..Default::default()
+        };
+        let mut p = LogitsProcessor::new(params, rng.u64());
+        let t = p.sample(&mut l, Some(&mask)) as usize;
+        if t >= n {
+            return Err(format!("token {t} out of range {n}"));
+        }
+        if any_allowed && !mask[t] {
+            return Err(format!("sampled masked token {t}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_temperature_sharpens_distribution() {
+    // Low temperature must pick the argmax more often than high temperature.
+    let count_argmax = |temp: f32| {
+        let params = SamplingParams { temperature: temp, ..Default::default() };
+        let mut hits = 0;
+        for seed in 0..300u64 {
+            let mut p = LogitsProcessor::new(params.clone(), seed);
+            let mut l = logits(&[1.2, 1.0, 0.8, 0.6]);
+            if p.sample(&mut l, None) == 0 {
+                hits += 1;
+            }
+        }
+        hits
+    };
+    assert!(count_argmax(0.2) > count_argmax(1.8));
+}
+
+#[test]
+fn logprobs_report_sampled_token_and_top_k() {
+    let params = SamplingParams {
+        temperature: 0.0,
+        logprobs: true,
+        top_logprobs: 2,
+        ..Default::default()
+    };
+    let mut p = LogitsProcessor::new(params, 0);
+    let mut l = logits(&[2.0, 1.0, 0.0, -1.0]);
+    let (token, lp) = p.sample_with_logprobs(&mut l, None);
+    assert_eq!(token, 0);
+    let lp = lp.unwrap();
+    assert_eq!(lp.token, 0);
+    // softmax over [2,1,0,-1]: p(0) ≈ 0.643 -> logprob ≈ -0.44
+    assert!((lp.logprob - (-0.4402)).abs() < 1e-3, "{}", lp.logprob);
+    assert_eq!(lp.top.len(), 2);
+    assert_eq!(lp.top[0].0, 0);
+    assert_eq!(lp.top[1].0, 1);
+    assert!(lp.top[0].1 > lp.top[1].1);
+}
+
+#[test]
+fn logprobs_disabled_returns_none() {
+    let mut p = LogitsProcessor::new(SamplingParams::greedy(), 0);
+    let mut l = logits(&[1.0, 0.0]);
+    let (_, lp) = p.sample_with_logprobs(&mut l, None);
+    assert!(lp.is_none());
+}
+
+#[test]
+fn logprobs_respect_mask() {
+    let params = SamplingParams {
+        temperature: 0.0,
+        logprobs: true,
+        top_logprobs: 4,
+        ..Default::default()
+    };
+    let mut p = LogitsProcessor::new(params, 0);
+    let mask = vec![false, true, true, false];
+    let mut l = logits(&[9.0, 1.0, 0.5, 8.0]);
+    let (token, lp) = p.sample_with_logprobs(&mut l, Some(&mask));
+    assert_eq!(token, 1);
+    let lp = lp.unwrap();
+    // masked tokens can't appear among the top alternatives
+    assert!(lp.top.iter().all(|&(t, _)| t == 1 || t == 2), "{:?}", lp.top);
+    // distribution renormalized over the unmasked support
+    let total: f32 = lp.top.iter().map(|&(_, l)| l.exp()).sum();
+    assert!((total - 1.0).abs() < 1e-3, "{total}");
+}

@@ -1,0 +1,8 @@
+//! Test utilities: a minimal property-testing harness.
+//!
+//! The vendored crate set has no proptest/quickcheck, so invariant tests
+//! (scheduler, kv-cache, grammar, json) use this seeded-PRNG runner. It
+//! reports the failing iteration's seed so a failure reproduces with
+//! `WEBLLM_PROP_SEED=<seed> cargo test <name>`.
+
+pub mod prop;

@@ -1,0 +1,152 @@
+//! Seeded property-test runner with PCG64 randomness.
+
+/// PCG-XSH-RR 64/32 — small, fast, good-enough statistics for tests and
+/// the sampler (crate::sampler::rng reuses it).
+#[derive(Clone, Debug)]
+pub struct PropRng {
+    state: u64,
+    inc: u64,
+}
+
+impl PropRng {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (seed << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, n). n == 0 returns 0.
+    pub fn range(&mut self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        (self.u64() % n as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + (self.u64() % ((hi - lo + 1) as u64)) as i64
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u32() & 1 == 1
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Random string (mixed ASCII + some multibyte), length <= max_len.
+    pub fn string(&mut self, max_len: usize) -> String {
+        let len = self.range(max_len + 1);
+        (0..len)
+            .map(|_| match self.range(20) {
+                0 => '\\',
+                1 => '"',
+                2 => '\n',
+                3 => 'é',
+                4 => '日',
+                5 => '😀',
+                _ => (b' ' + (self.range(95) as u8)) as char,
+            })
+            .collect()
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.range(items.len())]
+    }
+}
+
+/// Runs a property `iters` times with derived seeds; panics with the seed
+/// of the first failing case.
+pub struct Runner {
+    name: &'static str,
+    iters: u64,
+}
+
+impl Runner {
+    pub fn new(name: &'static str, iters: u64) -> Self {
+        Self { name, iters }
+    }
+
+    pub fn run(&self, mut prop: impl FnMut(&mut PropRng) -> Result<(), String>) {
+        // Explicit seed reproduces a single failing case.
+        if let Ok(seed) = std::env::var("WEBLLM_PROP_SEED") {
+            let seed: u64 = seed.parse().expect("WEBLLM_PROP_SEED must be a u64");
+            let mut rng = PropRng::new(seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!("[{}] failed with seed {}: {}", self.name, seed, msg);
+            }
+            return;
+        }
+        for i in 0..self.iters {
+            let seed = 0x9E3779B97F4A7C15u64.wrapping_mul(i + 1) ^ 0xD1B54A32D192ED03;
+            let mut rng = PropRng::new(seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!(
+                    "[{}] failed at iter {i} (reproduce: WEBLLM_PROP_SEED={seed}): {msg}",
+                    self.name
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = PropRng::new(7);
+        let mut b = PropRng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn rng_f64_in_unit_interval() {
+        let mut rng = PropRng::new(3);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn rng_range_bounds() {
+        let mut rng = PropRng::new(9);
+        for n in [1usize, 2, 7, 100] {
+            for _ in 0..1000 {
+                assert!(rng.range(n) < n);
+            }
+        }
+        assert_eq!(rng.range(0), 0);
+    }
+
+    #[test]
+    fn runner_reports_seed_on_failure() {
+        let result = std::panic::catch_unwind(|| {
+            Runner::new("always_fails", 1).run(|_| Err("boom".into()));
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("WEBLLM_PROP_SEED="), "{msg}");
+    }
+}

@@ -1,0 +1,336 @@
+//! BPE vocabulary, encoder, and incremental decoder.
+
+use crate::json::Value;
+use std::collections::HashMap;
+use std::fmt;
+
+#[derive(Debug)]
+pub enum TokenizerError {
+    Io(std::io::Error),
+    Format(String),
+}
+
+impl fmt::Display for TokenizerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TokenizerError::Io(e) => write!(f, "tokenizer io error: {e}"),
+            TokenizerError::Format(m) => write!(f, "tokenizer format error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TokenizerError {}
+
+/// Byte-level BPE tokenizer.
+///
+/// Id space (fixed by tokenizer_gen.py): `[0, byte_offset)` specials,
+/// `[byte_offset, byte_offset+256)` raw bytes, then one id per merge.
+pub struct Tokenizer {
+    vocab_size: usize,
+    byte_offset: u32,
+    /// (a, b) -> merged id, rank == merged id (lower id = earlier merge).
+    ranks: HashMap<(u32, u32), u32>,
+    /// Token id -> byte string (empty for specials / unused ids).
+    bytes: Vec<Vec<u8>>,
+    specials: Vec<(String, u32)>,
+}
+
+impl Tokenizer {
+    pub fn from_json(v: &Value) -> Result<Self, TokenizerError> {
+        let fmt_err = |m: &str| TokenizerError::Format(m.to_string());
+        let vocab_size = v
+            .get("vocab_size")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| fmt_err("missing vocab_size"))?;
+        let byte_offset = v
+            .get("byte_offset")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| fmt_err("missing byte_offset"))? as u32;
+        let merges = v
+            .get("merges")
+            .and_then(Value::as_array)
+            .ok_or_else(|| fmt_err("missing merges"))?;
+
+        let first_merge_id = byte_offset + 256;
+        let mut ranks = HashMap::with_capacity(merges.len());
+        let mut bytes: Vec<Vec<u8>> = Vec::with_capacity(vocab_size);
+        bytes.resize(byte_offset as usize, Vec::new());
+        for b in 0..=255u8 {
+            bytes.push(vec![b]);
+        }
+        for (i, m) in merges.iter().enumerate() {
+            let a = m.at(0).and_then(Value::as_u64).ok_or_else(|| fmt_err("bad merge"))? as u32;
+            let b = m.at(1).and_then(Value::as_u64).ok_or_else(|| fmt_err("bad merge"))? as u32;
+            let id = first_merge_id + i as u32;
+            if a >= id || b >= id {
+                return Err(fmt_err("merge references a later id"));
+            }
+            let mut buf = bytes[a as usize].clone();
+            buf.extend_from_slice(&bytes[b as usize]);
+            bytes.push(buf);
+            ranks.insert((a, b), id);
+        }
+        if bytes.len() > vocab_size {
+            return Err(fmt_err("more merges than vocab_size allows"));
+        }
+        bytes.resize(vocab_size, Vec::new()); // unused tail ids decode to ""
+
+        let mut specials = Vec::new();
+        if let Some(sp) = v.get("specials").and_then(Value::as_object) {
+            for (name, id) in sp.iter() {
+                let id = id.as_u64().ok_or_else(|| fmt_err("bad special id"))? as u32;
+                specials.push((name.clone(), id));
+            }
+            // Longest-first so "<|assistant|>" wins over shorter overlaps.
+            specials.sort_by_key(|(name, _)| std::cmp::Reverse(name.len()));
+        }
+
+        Ok(Self { vocab_size, byte_offset, ranks, bytes, specials })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self, TokenizerError> {
+        let text = std::fs::read_to_string(path).map_err(TokenizerError::Io)?;
+        let v = crate::json::parse(&text)
+            .map_err(|e| TokenizerError::Format(e.to_string()))?;
+        Self::from_json(&v)
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    pub fn special_id(&self, name: &str) -> Option<u32> {
+        self.specials.iter().find(|(n, _)| n == name).map(|(_, id)| *id)
+    }
+
+    pub fn special_name(&self, id: u32) -> Option<&str> {
+        self.specials.iter().find(|(_, i)| *i == id).map(|(n, _)| n.as_str())
+    }
+
+    /// Token id -> raw bytes ("" for specials and unused ids).
+    pub fn token_bytes(&self, id: u32) -> &[u8] {
+        self.bytes.get(id as usize).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Encode plain text (no special-token recognition).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids = Vec::with_capacity(text.len() / 3 + 4);
+        for word in Pretokenizer::new(text) {
+            self.encode_word(word, &mut ids);
+        }
+        ids
+    }
+
+    /// Encode text in which special-token spellings (e.g. `<|user|>`) are
+    /// recognized and mapped to their reserved ids — used by the chat
+    /// template renderer.
+    pub fn encode_with_specials(&self, text: &str) -> Vec<u32> {
+        let mut ids = Vec::new();
+        let mut rest = text;
+        'outer: while !rest.is_empty() {
+            // Find the earliest special occurrence.
+            let mut best: Option<(usize, usize, u32)> = None; // (pos, len, id)
+            for (name, id) in &self.specials {
+                if name.is_empty() {
+                    continue;
+                }
+                if let Some(pos) = rest.find(name.as_str()) {
+                    let better = match best {
+                        None => true,
+                        Some((bp, bl, _)) => pos < bp || (pos == bp && name.len() > bl),
+                    };
+                    if better {
+                        best = Some((pos, name.len(), *id));
+                    }
+                }
+            }
+            match best {
+                Some((pos, len, id)) => {
+                    for word in Pretokenizer::new(&rest[..pos]) {
+                        self.encode_word(word, &mut ids);
+                    }
+                    ids.push(id);
+                    rest = &rest[pos + len..];
+                    continue 'outer;
+                }
+                None => {
+                    for word in Pretokenizer::new(rest) {
+                        self.encode_word(word, &mut ids);
+                    }
+                    break;
+                }
+            }
+        }
+        ids
+    }
+
+    fn encode_word(&self, word: &str, out: &mut Vec<u32>) {
+        let mut seq: Vec<u32> =
+            word.bytes().map(|b| self.byte_offset + b as u32).collect();
+        // Merge loop: repeatedly apply the lowest-rank applicable merge.
+        while seq.len() >= 2 {
+            let mut best: Option<(u32, usize)> = None;
+            for j in 0..seq.len() - 1 {
+                if let Some(&id) = self.ranks.get(&(seq[j], seq[j + 1])) {
+                    if best.map_or(true, |(bid, _)| id < bid) {
+                        best = Some((id, j));
+                    }
+                }
+            }
+            match best {
+                Some((id, j)) => {
+                    seq[j] = id;
+                    seq.remove(j + 1);
+                }
+                None => break,
+            }
+        }
+        out.extend_from_slice(&seq);
+    }
+
+    /// Decode ids to text, replacing invalid UTF-8 with U+FFFD.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut buf = Vec::new();
+        for &id in ids {
+            buf.extend_from_slice(self.token_bytes(id));
+        }
+        String::from_utf8_lossy(&buf).into_owned()
+    }
+}
+
+/// Incremental detokenizer for streaming: buffers bytes until they form
+/// complete UTF-8 scalar values, so multi-token multibyte characters never
+/// emit replacement chars mid-stream.
+#[derive(Default)]
+pub struct StreamDecoder {
+    pending: Vec<u8>,
+}
+
+impl StreamDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one token's bytes; returns any newly-complete text.
+    pub fn push(&mut self, token_bytes: &[u8]) -> String {
+        self.pending.extend_from_slice(token_bytes);
+        // Find the longest prefix that is valid UTF-8.
+        match std::str::from_utf8(&self.pending) {
+            Ok(s) => {
+                let out = s.to_string();
+                self.pending.clear();
+                out
+            }
+            Err(e) => {
+                let valid = e.valid_up_to();
+                // If the tail can't possibly complete (error_len is Some),
+                // flush it as replacement chars instead of stalling forever.
+                if e.error_len().is_some() {
+                    let out = String::from_utf8_lossy(&self.pending).into_owned();
+                    self.pending.clear();
+                    out
+                } else {
+                    let out =
+                        unsafe { std::str::from_utf8_unchecked(&self.pending[..valid]) }
+                            .to_string();
+                    self.pending.drain(..valid);
+                    out
+                }
+            }
+        }
+    }
+
+    /// Flush anything buffered (end of stream).
+    pub fn finish(&mut self) -> String {
+        let out = String::from_utf8_lossy(&self.pending).into_owned();
+        self.pending.clear();
+        out
+    }
+}
+
+/// GPT-2-style pretokenizer, mirroring tokenizer_gen._PRETOKEN_RE:
+/// ` ?[A-Za-z]+ | ?[0-9]+ | ?[^\sA-Za-z0-9]+ | \s+`
+struct Pretokenizer<'a> {
+    rest: &'a str,
+}
+
+impl<'a> Pretokenizer<'a> {
+    fn new(text: &'a str) -> Self {
+        Self { rest: text }
+    }
+}
+
+impl<'a> Iterator for Pretokenizer<'a> {
+    type Item = &'a str;
+
+    fn next(&mut self) -> Option<&'a str> {
+        if self.rest.is_empty() {
+            return None;
+        }
+        let b = self.rest.as_bytes();
+        let mut i;
+        // Optional single leading space joined to a following word.
+        let after_space = if b[0] == b' ' { 1 } else { 0 };
+        let class = b.get(after_space).map(|&c| char_class(c));
+        let len = match class {
+            Some(Class::Alpha) => {
+                i = after_space;
+                while i < b.len() && char_class(b[i]) == Class::Alpha {
+                    i += 1;
+                }
+                i
+            }
+            Some(Class::Digit) => {
+                i = after_space;
+                while i < b.len() && char_class(b[i]) == Class::Digit {
+                    i += 1;
+                }
+                i
+            }
+            Some(Class::Other) => {
+                i = after_space;
+                while i < b.len() && char_class(b[i]) == Class::Other {
+                    i += 1;
+                }
+                i
+            }
+            // Lone space(s) at end, or whitespace run.
+            _ => {
+                i = 0;
+                while i < b.len() && char_class(b[i]) == Class::Space {
+                    i += 1;
+                }
+                i.max(1)
+            }
+        };
+        // Every arm consumes at least one byte, and runs never split a
+        // multibyte scalar (continuation bytes are Class::Other), so this
+        // split is always on a char boundary.
+        let len = len.max(1);
+        let (tok, rest) = self.rest.split_at(len);
+        self.rest = rest;
+        Some(tok)
+    }
+}
+
+#[derive(PartialEq, Clone, Copy)]
+enum Class {
+    Alpha,
+    Digit,
+    Space,
+    Other,
+}
+
+fn char_class(c: u8) -> Class {
+    if c.is_ascii_alphabetic() {
+        Class::Alpha
+    } else if c.is_ascii_digit() {
+        Class::Digit
+    } else if c.is_ascii_whitespace() || c == 0x0B {
+        // 0x0B (vertical tab): ASCII \s in the Python reference regex.
+        Class::Space
+    } else {
+        Class::Other
+    }
+}
+

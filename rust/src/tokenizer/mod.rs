@@ -1,0 +1,17 @@
+//! Byte-level BPE tokenizer.
+//!
+//! WebLLM runs HuggingFace tokenizers compiled to WASM on the browser's
+//! CPU; this is the native-Rust equivalent, loading the vocabulary that
+//! `python/compile/tokenizer_gen.py` trains at build time
+//! (`artifacts/tokenizer.json`). Encoding mirrors the Python reference
+//! exactly (same pretokenizer, same merge-rank loop) — pytest and cargo
+//! test both pin the mapping.
+
+mod bpe;
+mod template;
+
+pub use bpe::{StreamDecoder, Tokenizer, TokenizerError};
+pub use template::{render_chat, ChatMessage, Role};
+
+#[cfg(test)]
+pub mod tests;

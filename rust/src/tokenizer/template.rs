@@ -1,0 +1,111 @@
+//! Chat template rendering.
+//!
+//! WebLLM renders each model's conversation template before tokenizing
+//! (the `mlc-chat-config.json` `conv_template` field); our synthetic
+//! models share one template built on the reserved special tokens:
+//!
+//! ```text
+//! <bos><|system|>{system}<|end|><|user|>{user}<|end|><|assistant|>{...}<|end|>
+//! ```
+//!
+//! The assistant turn is left open; generation stops on `<|end|>` / `<eos>`.
+
+use super::Tokenizer;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    System,
+    User,
+    Assistant,
+}
+
+impl Role {
+    pub fn from_str(s: &str) -> Option<Role> {
+        match s {
+            "system" => Some(Role::System),
+            "user" => Some(Role::User),
+            "assistant" => Some(Role::Assistant),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Role::System => "system",
+            Role::User => "user",
+            Role::Assistant => "assistant",
+        }
+    }
+
+    fn tag(&self) -> &'static str {
+        match self {
+            Role::System => "<|system|>",
+            Role::User => "<|user|>",
+            Role::Assistant => "<|assistant|>",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ChatMessage {
+    pub role: Role,
+    pub content: String,
+}
+
+impl ChatMessage {
+    pub fn new(role: Role, content: impl Into<String>) -> Self {
+        Self { role, content: content.into() }
+    }
+}
+
+/// Render a conversation to prompt token ids, ending with an open
+/// assistant turn ready for generation.
+pub fn render_chat(tok: &Tokenizer, messages: &[ChatMessage]) -> Vec<u32> {
+    let mut text = String::from("<bos>");
+    for m in messages {
+        text.push_str(m.role.tag());
+        text.push_str(&m.content);
+        text.push_str("<|end|>");
+    }
+    text.push_str(Role::Assistant.tag());
+    tok.encode_with_specials(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::tests::test_tokenizer;
+
+    #[test]
+    fn render_produces_tagged_ids() {
+        let tok = test_tokenizer();
+        let ids = render_chat(
+            &tok,
+            &[
+                ChatMessage::new(Role::System, "be brief"),
+                ChatMessage::new(Role::User, "hi"),
+            ],
+        );
+        let bos = tok.special_id("<bos>").unwrap();
+        let sys = tok.special_id("<|system|>").unwrap();
+        let user = tok.special_id("<|user|>").unwrap();
+        let asst = tok.special_id("<|assistant|>").unwrap();
+        let end = tok.special_id("<|end|>").unwrap();
+        assert_eq!(ids[0], bos);
+        assert_eq!(ids[1], sys);
+        assert_eq!(*ids.last().unwrap(), asst);
+        assert_eq!(ids.iter().filter(|&&i| i == end).count(), 2);
+        assert!(ids.contains(&user));
+        // Content bytes survive the trip.
+        let text = tok.decode(&ids);
+        assert!(text.contains("be brief"));
+        assert!(text.contains("hi"));
+    }
+
+    #[test]
+    fn role_parsing() {
+        assert_eq!(Role::from_str("user"), Some(Role::User));
+        assert_eq!(Role::from_str("tool"), None);
+        assert_eq!(Role::Assistant.as_str(), "assistant");
+    }
+}

@@ -1,0 +1,180 @@
+use super::bpe::StreamDecoder;
+use super::*;
+use crate::json::parse;
+use crate::testutil::prop::{PropRng, Runner};
+
+/// A small hand-built vocabulary (specials + bytes + a few merges) used
+/// by unit tests that must not depend on `make artifacts`.
+pub fn test_tokenizer() -> Tokenizer {
+    // merges: (h,e)->264, (l,l)->265, (264="he", 265="ll")->266 ("hell"),
+    // (' ', 'w')->267
+    let h = 8 + b'h' as u32;
+    let e = 8 + b'e' as u32;
+    let l = 8 + b'l' as u32;
+    let sp = 8 + b' ' as u32;
+    let w = 8 + b'w' as u32;
+    let json = format!(
+        r#"{{
+        "vocab_size": 512,
+        "byte_offset": 8,
+        "specials": {{"<pad>":0,"<bos>":1,"<eos>":2,"<unk>":3,
+                      "<|system|>":4,"<|user|>":5,"<|assistant|>":6,"<|end|>":7}},
+        "merges": [[{h},{e}],[{l},{l}],[264,265],[{sp},{w}]]
+    }}"#
+    );
+    Tokenizer::from_json(&parse(&json).unwrap()).unwrap()
+}
+
+/// The real trained vocabulary from artifacts/, when present.
+pub fn artifact_tokenizer() -> Option<Tokenizer> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tokenizer.json");
+    Tokenizer::from_file(&path).ok()
+}
+
+#[test]
+fn encode_applies_merges_in_rank_order() {
+    let tok = test_tokenizer();
+    // "hell" -> he+ll -> hell (id 266), then 'o' raw
+    let ids = tok.encode("hello");
+    assert_eq!(ids, vec![266, 8 + b'o' as u32]);
+    // " world" -> ' w' merged (267) + o,r,l,d
+    let ids = tok.encode(" world");
+    assert_eq!(ids[0], 267);
+    assert_eq!(ids.len(), 1 + 4);
+}
+
+#[test]
+fn decode_inverts_encode() {
+    let tok = test_tokenizer();
+    for s in ["hello world", "hhee", "a b  c", "tab\there", "", "42,x=7!"] {
+        assert_eq!(tok.decode(&tok.encode(s)), s, "{s:?}");
+    }
+}
+
+#[test]
+fn specials_not_produced_by_plain_encode() {
+    let tok = test_tokenizer();
+    let ids = tok.encode("<|user|>");
+    assert!(!ids.contains(&5), "plain encode must treat tags as text");
+    let ids = tok.encode_with_specials("<|user|>");
+    assert_eq!(ids, vec![5]);
+}
+
+#[test]
+fn encode_with_specials_mixed_content() {
+    let tok = test_tokenizer();
+    let ids = tok.encode_with_specials("<bos>hello<|end|>");
+    assert_eq!(ids[0], 1);
+    assert_eq!(*ids.last().unwrap(), 7);
+    assert_eq!(tok.decode(&ids[1..ids.len() - 1]), "hello");
+}
+
+#[test]
+fn unused_ids_decode_empty() {
+    let tok = test_tokenizer();
+    assert_eq!(tok.decode(&[400, 501]), "");
+    assert_eq!(tok.token_bytes(9999), b"");
+}
+
+#[test]
+fn rejects_malformed_vocab() {
+    for bad in [
+        r#"{"byte_offset": 8, "merges": []}"#,                       // no vocab_size
+        r#"{"vocab_size": 512, "byte_offset": 8, "merges": [[999, 8]]}"#, // future id
+        r#"{"vocab_size": 10, "byte_offset": 8, "merges": []}"#,     // too small
+    ] {
+        let v = parse(bad).unwrap();
+        assert!(Tokenizer::from_json(&v).is_err(), "{bad}");
+    }
+}
+
+#[test]
+fn stream_decoder_handles_split_multibyte() {
+    let mut d = StreamDecoder::new();
+    // "é" = 0xC3 0xA9 split across two tokens
+    assert_eq!(d.push(&[0xC3]), "");
+    assert_eq!(d.push(&[0xA9]), "é");
+    // mixed: ascii + half of a char
+    assert_eq!(d.push(&[b'a', 0xE6]), "a");
+    assert_eq!(d.push(&[0x97, 0xA5]), "日");
+    assert_eq!(d.finish(), "");
+}
+
+#[test]
+fn stream_decoder_flushes_invalid_bytes() {
+    let mut d = StreamDecoder::new();
+    let out = d.push(&[0xFF, b'x']);
+    assert!(out.contains('\u{FFFD}'));
+    assert!(out.contains('x'));
+    // dangling prefix flushed lossily at finish
+    assert_eq!(d.push(&[0xC3]), "");
+    assert_eq!(d.finish(), "\u{FFFD}");
+}
+
+#[test]
+fn prop_roundtrip_ascii_and_unicode() {
+    let Some(tok) = artifact_tokenizer() else { return };
+    Runner::new("tokenizer_roundtrip", 200).run(|rng: &mut PropRng| {
+        let s = rng.string(80);
+        let ids = tok.encode(&s);
+        let back = tok.decode(&ids);
+        if back != s {
+            return Err(format!("{s:?} -> {ids:?} -> {back:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stream_decode_equals_batch_decode() {
+    let Some(tok) = artifact_tokenizer() else { return };
+    Runner::new("stream_decode", 200).run(|rng: &mut PropRng| {
+        let s = rng.string(60);
+        let ids = tok.encode(&s);
+        let mut d = StreamDecoder::new();
+        let mut streamed = String::new();
+        for &id in &ids {
+            streamed.push_str(&d.push(tok.token_bytes(id)));
+        }
+        streamed.push_str(&d.finish());
+        if streamed != s {
+            return Err(format!("stream {streamed:?} != {s:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn artifact_vocab_compresses_english() {
+    let Some(tok) = artifact_tokenizer() else { return };
+    let text = "The engine streams tokens back to the application.";
+    let ids = tok.encode(text);
+    assert!(ids.len() * 2 < text.len(), "got {} ids", ids.len());
+    assert_eq!(tok.decode(&ids), text);
+}
+
+#[test]
+fn fixtures_match_python() {
+    // Pin the Rust encoder to the Python reference byte-for-byte: the
+    // fixtures are produced at artifact-build time by compile/aot.py.
+    let Some(tok) = artifact_tokenizer() else { return };
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tokenizer_fixtures.json");
+    let Ok(text) = std::fs::read_to_string(&path) else { return };
+    let v = parse(&text).unwrap();
+    let cases = v.as_array().unwrap();
+    assert!(cases.len() >= 8);
+    for case in cases {
+        let s = case.get("text").unwrap().as_str().unwrap();
+        let want: Vec<u32> = case
+            .get("ids")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_u64().unwrap() as u32)
+            .collect();
+        assert_eq!(tok.encode(s), want, "text {s:?}");
+        assert_eq!(tok.decode(&want), s, "decode {s:?}");
+    }
+}

@@ -1,0 +1,74 @@
+//! Browser-mode integration: the cost model must slow things down without
+//! changing any observable output (same tokens, same usage counts).
+
+use webllm::api::ChatCompletionRequest;
+use webllm::browser::BrowserConfig;
+use webllm::coordinator::{EngineConfig, MLCEngine};
+
+fn have_artifacts() -> bool {
+    webllm::artifacts_dir().join("manifest.json").exists()
+}
+
+fn req() -> ChatCompletionRequest {
+    let mut r = ChatCompletionRequest::new("tiny-2m").user("browser parity test");
+    r.max_tokens = 10;
+    r.sampling.temperature = 0.0;
+    r
+}
+
+#[test]
+fn browser_mode_is_output_transparent() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut native = MLCEngine::new(&EngineConfig::native(&["tiny-2m"])).unwrap();
+    let mut browser = MLCEngine::new(&EngineConfig::browser(&["tiny-2m"])).unwrap();
+    let a = native.chat_completion(req()).unwrap();
+    let b = browser.chat_completion(req()).unwrap();
+    assert_eq!(a.text(), b.text(), "cost model must not change outputs");
+    assert_eq!(a.usage.prompt_tokens, b.usage.prompt_tokens);
+    assert_eq!(a.usage.completion_tokens, b.usage.completion_tokens);
+}
+
+#[test]
+fn browser_mode_is_slower_and_accounted() {
+    if !have_artifacts() {
+        return;
+    }
+    // Exaggerated overheads so the delta is unambiguous at tiny scale.
+    let mut cfg = EngineConfig::browser(&["tiny-2m"]);
+    cfg.browser = Some(BrowserConfig {
+        dispatch_overhead_us: 200.0,
+        bandwidth_tax_us_per_mb: 10_000.0,
+        wasm_slowdown: 2.0,
+    });
+    let mut native = MLCEngine::new(&EngineConfig::native(&["tiny-2m"])).unwrap();
+    let mut browser = MLCEngine::new(&cfg).unwrap();
+    native.chat_completion(req()).unwrap(); // warm
+    browser.chat_completion(req()).unwrap();
+    let a = native.chat_completion(req()).unwrap();
+    let b = browser.chat_completion(req()).unwrap();
+    assert!(
+        b.usage.decode_tokens_per_s < a.usage.decode_tokens_per_s,
+        "browser {} >= native {}",
+        b.usage.decode_tokens_per_s,
+        a.usage.decode_tokens_per_s
+    );
+}
+
+#[test]
+fn default_config_retention_is_plausible_for_tiny() {
+    if !have_artifacts() {
+        return;
+    }
+    // tiny-2m steps are so fast (~5ms) that even small absolute overhead
+    // is a large fraction; just require a sane, non-degenerate ratio.
+    let mut native = MLCEngine::new(&EngineConfig::native(&["tiny-2m"])).unwrap();
+    let mut browser = MLCEngine::new(&EngineConfig::browser(&["tiny-2m"])).unwrap();
+    native.chat_completion(req()).unwrap();
+    browser.chat_completion(req()).unwrap();
+    let a = native.chat_completion(req()).unwrap();
+    let b = browser.chat_completion(req()).unwrap();
+    let retention = b.usage.decode_tokens_per_s / a.usage.decode_tokens_per_s;
+    assert!(retention > 0.2 && retention <= 1.5, "retention {retention}");
+}

@@ -1,0 +1,96 @@
+//! HTTP endpoint integration: real TCP round-trips against the served
+//! engine — non-streaming, streaming (SSE), health, and error paths.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+use webllm::coordinator::EngineConfig;
+use webllm::http::{serve, sse_parse, ServerConfig};
+use webllm::json::parse;
+
+fn have_artifacts() -> bool {
+    webllm::artifacts_dir().join("manifest.json").exists()
+}
+
+fn post(addr: &str, path: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn endpoint_serves_completions_and_errors() {
+    if !have_artifacts() {
+        return;
+    }
+    let addr = "127.0.0.1:18091";
+    let cfg = ServerConfig {
+        addr: addr.into(),
+        engine: EngineConfig::native(&["tiny-2m"]),
+        // Only engine-handled completions count toward the shutdown quota
+        // (parse-level 400s and 404s never reach the engine).
+        max_requests: Some(2),
+    };
+    let server = std::thread::spawn(move || serve(cfg));
+
+    // wait for readiness via /health
+    for _ in 0..600 {
+        if let Ok(mut s) = TcpStream::connect(addr) {
+            let _ = write!(s, "GET /health HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n");
+            let mut b = String::new();
+            let _ = s.read_to_string(&mut b);
+            if b.contains("200 OK") {
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+
+    // 1. non-streaming completion
+    let resp = post(
+        addr,
+        "/v1/chat/completions",
+        r#"{"model":"tiny-2m","messages":[{"role":"user","content":"hi"}],"max_tokens":5,"temperature":0}"#,
+    );
+    assert!(resp.contains("200 OK"), "{resp}");
+    let body = resp.split_once("\r\n\r\n").unwrap().1;
+    let v = parse(body).unwrap();
+    assert_eq!(v.get("object").unwrap().as_str(), Some("chat.completion"));
+    assert!(v.get("usage").unwrap().get("completion_tokens").unwrap().as_usize().unwrap() <= 5);
+
+    // 2. streaming completion
+    let resp = post(
+        addr,
+        "/v1/chat/completions",
+        r#"{"model":"tiny-2m","messages":[{"role":"user","content":"hi"}],"max_tokens":5,"temperature":0,"stream":true}"#,
+    );
+    assert!(resp.contains("text/event-stream"), "{resp}");
+    let body = resp.split_once("\r\n\r\n").unwrap().1;
+    let (events, done) = sse_parse(body);
+    assert!(done, "missing [DONE]");
+    assert!(!events.is_empty());
+    assert!(events
+        .last()
+        .unwrap()
+        .get("usage")
+        .is_some());
+
+    // 3. bad request -> 400 with OpenAI error shape
+    let resp = post(addr, "/v1/chat/completions", r#"{"model":"tiny-2m"}"#);
+    assert!(resp.contains("400"), "{resp}");
+    assert!(resp.contains("invalid_request_error"));
+
+    // 4. unknown route -> 404
+    let resp = post(addr, "/v1/nope", "{}");
+    assert!(resp.contains("404"), "{resp}");
+
+    server.join().unwrap().unwrap();
+}

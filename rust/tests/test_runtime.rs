@@ -1,0 +1,148 @@
+//! Runtime-layer integration: artifact loading, shape validation, cache
+//! chaining, and numeric agreement between compiled batch sizes.
+
+use webllm::models::Manifest;
+use webllm::runtime::{thread_client, ModelRuntime};
+
+fn manifest() -> Option<Manifest> {
+    let dir = webllm::artifacts_dir();
+    dir.join("manifest.json").exists().then(|| Manifest::load(&dir).unwrap())
+}
+
+#[test]
+fn load_reports_compiled_shapes() {
+    let Some(m) = manifest() else { return };
+    let client = thread_client().unwrap();
+    let rt = ModelRuntime::load(&client, &m, "tiny-2m", None).unwrap();
+    assert_eq!(rt.compiled_chunks(), vec![16, 32, 64, 128]);
+    assert_eq!(rt.compiled_batches(), vec![1, 2, 4]);
+    assert!(rt.load_seconds > 0.0);
+}
+
+#[test]
+fn load_subset_restricts_compilation() {
+    let Some(m) = manifest() else { return };
+    let client = thread_client().unwrap();
+    let rt =
+        ModelRuntime::load_subset(&client, &m, "tiny-2m", None, Some(&[16]), Some(&[1])).unwrap();
+    assert_eq!(rt.compiled_chunks(), vec![16]);
+    assert_eq!(rt.compiled_batches(), vec![1]);
+}
+
+#[test]
+fn shape_errors_are_reported() {
+    let Some(m) = manifest() else { return };
+    let client = thread_client().unwrap();
+    let mut rt = ModelRuntime::load_subset(&client, &m, "tiny-2m", None, Some(&[16]), Some(&[1]))
+        .unwrap();
+    let mp = rt.config().max_pages_per_seq();
+    // wrong chunk
+    assert!(rt.prefill(&[0; 24], 4, &vec![0; mp]).is_err());
+    // wrong block table length
+    assert!(rt.prefill(&[0; 16], 4, &[0; 3]).is_err());
+    // zero seq_len
+    assert!(rt.prefill(&[0; 16], 0, &vec![0; mp]).is_err());
+    // wrong batch
+    assert!(rt.decode(&[0; 3], &[0; 3], &[0; 3], &vec![0; 3 * mp]).is_err());
+    // inconsistent lengths
+    assert!(rt.decode(&[0; 1], &[0; 2], &[0; 1], &vec![0; mp]).is_err());
+}
+
+#[test]
+fn prefill_then_decode_logits_change_with_context() {
+    let Some(m) = manifest() else { return };
+    let client = thread_client().unwrap();
+    let mut rt = ModelRuntime::load(&client, &m, "tiny-2m", None).unwrap();
+    let mp = rt.config().max_pages_per_seq();
+    let mut bt = vec![0i32; mp];
+    bt[0] = 1;
+    bt[1] = 2;
+
+    let mut ids = vec![0i32; 16];
+    ids[..4].copy_from_slice(&[10, 11, 12, 13]);
+    let out = rt.prefill(&ids, 4, &bt).unwrap();
+    assert_eq!(out.logits.len(), rt.config().vocab_size);
+
+    // Decode the same next token twice at successive positions: context
+    // grew, so logits must differ (cache actually chained).
+    let one = rt.decode(&[42], &[4], &[5], &bt).unwrap();
+    let two = rt.decode(&[42], &[5], &[6], &bt).unwrap();
+    let d: f32 = one
+        .logits
+        .iter()
+        .zip(&two.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(d > 1e-6, "cache state did not affect logits");
+}
+
+#[test]
+fn reset_cache_restores_initial_state() {
+    let Some(m) = manifest() else { return };
+    let client = thread_client().unwrap();
+    let mut rt = ModelRuntime::load_subset(&client, &m, "tiny-2m", None, Some(&[16]), Some(&[1]))
+        .unwrap();
+    let mp = rt.config().max_pages_per_seq();
+    let mut bt = vec![0i32; mp];
+    bt[0] = 1;
+
+    let mut ids = vec![0i32; 16];
+    ids[..3].copy_from_slice(&[7, 8, 9]);
+    let a = rt.prefill(&ids, 3, &bt).unwrap();
+    // pollute cache, then reset, then repeat: identical logits expected
+    rt.decode(&[1], &[3], &[4], &bt).unwrap();
+    rt.reset_cache().unwrap();
+    let b = rt.prefill(&ids, 3, &bt).unwrap();
+    assert_eq!(a.logits, b.logits);
+}
+
+#[test]
+fn batch_sizes_agree_on_shared_sequence() {
+    // The same single sequence decoded through the b=1 and b=2 executables
+    // (padding the second slot) must produce identical logits — the
+    // static-shape menu must be semantically transparent.
+    let Some(m) = manifest() else { return };
+    let client = thread_client().unwrap();
+    let mut rt = ModelRuntime::load(&client, &m, "tiny-2m", None).unwrap();
+    let mp = rt.config().max_pages_per_seq();
+    let mut bt = vec![0i32; mp];
+    bt[0] = 1;
+
+    let mut ids = vec![0i32; 16];
+    ids[..2].copy_from_slice(&[5, 6]);
+    rt.prefill(&ids, 2, &bt).unwrap();
+
+    let one = rt.decode(&[9], &[2], &[3], &bt).unwrap();
+
+    // Fresh runtime to replay with b=2 (cache state must match).
+    let mut rt2 = ModelRuntime::load(&client, &m, "tiny-2m", None).unwrap();
+    rt2.prefill(&ids, 2, &bt).unwrap();
+    let mut bt2 = vec![0i32; 2 * mp];
+    bt2[..mp].copy_from_slice(&bt);
+    let two = rt2.decode(&[9, 0], &[2, 0], &[3, 0], &bt2).unwrap();
+
+    let v = rt.config().vocab_size;
+    let max_diff: f32 = one.logits[..v]
+        .iter()
+        .zip(&two.logits[..v])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(max_diff < 1e-4, "b=1 vs b=2 logits diverge: {max_diff}");
+}
+
+#[test]
+fn dispatches_and_exec_time_reported() {
+    let Some(m) = manifest() else { return };
+    let client = thread_client().unwrap();
+    let mut rt = ModelRuntime::load_subset(&client, &m, "tiny-2m", None, Some(&[16]), Some(&[1]))
+        .unwrap();
+    let mp = rt.config().max_pages_per_seq();
+    let mut bt = vec![0i32; mp];
+    bt[0] = 1;
+    let mut ids = vec![0i32; 16];
+    ids[0] = 3;
+    let out = rt.prefill(&ids, 1, &bt).unwrap();
+    // 2 layers x 11 + 3
+    assert_eq!(out.dispatches, 25);
+    assert!(out.exec_seconds > 0.0);
+}
