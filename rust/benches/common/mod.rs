@@ -69,3 +69,49 @@ pub fn print_result(r: &BenchResult) {
 pub fn print_tps_row(label: &str, tps: f64, extra: &str) {
     println!("{label:<44} {tps:>10.2} tok/s  {extra}");
 }
+
+/// Time `MaskCache::get_or_compute` for a state that is already cached:
+/// ns per hit over 1M iterations. Shared by the sampler and grammar
+/// benches so they report the same quantity the same way.
+pub fn measure_cache_hit_ns(
+    cache: &mut webllm::grammar::MaskCache,
+    matcher: &webllm::grammar::GrammarMatcher,
+) -> f64 {
+    let _warm = cache.get_or_compute(matcher);
+    let iters = 1_000_000usize;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let m = cache.get_or_compute(matcher);
+        std::hint::black_box(&m);
+    }
+    t0.elapsed().as_secs_f64() * 1e9 / iters as f64
+}
+
+/// Deterministic synthetic tokenizer vocabulary (no artifacts needed):
+/// all 256 single bytes first, then pseudo-random short strings over a
+/// JSON-friendly alphabet. Grammar masks over this vocab behave like real
+/// BPE vocabs for benching purposes (tight allowed sets inside strings,
+/// broad ones at value starts).
+pub fn synthetic_vocab(n: usize) -> Vec<Vec<u8>> {
+    const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789 \"{}[]:,.-_etaoinshr";
+    let mut v = Vec::with_capacity(n);
+    for b in 0..=255u8 {
+        if v.len() < n {
+            v.push(vec![b]);
+        }
+    }
+    let mut state = 0x9E37_79B9_7F4A_7C15u64;
+    while v.len() < n {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        let len = 2 + (state % 6) as usize;
+        let mut s = Vec::with_capacity(len);
+        for i in 0..len {
+            let x = (state >> (8 * (i % 8))) as usize;
+            s.push(ALPHABET[x % ALPHABET.len()]);
+        }
+        v.push(s);
+    }
+    v
+}

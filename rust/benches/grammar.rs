@@ -1,10 +1,14 @@
 //! Structured-generation overhead (DESIGN.md A3; paper §2.1/§2.2 — the
 //! grammar engine is one of the WASM-compiled CPU subsystems).
 //!
-//! Measures: (1) decode throughput with vs without a JSON-Schema
-//! constraint on the real engine; (2) the raw mask-computation cost and
-//! the adaptive mask-cache hit rate that makes constrained decoding
-//! near-free after warmup (the XGrammar claim).
+//! Measures, artifact-free on a synthetic vocabulary:
+//!   (1) the raw mask-computation cost (cold `token_mask_trie` walk with
+//!       the arena DFS) at several vocab sizes;
+//!   (2) the adaptive mask-cache hit cost — an `Rc<TokenBitmask>` clone,
+//!       O(1) in vocab size — and the hit rate over a simulated decode;
+//! and, when artifacts are built:
+//!   (3) decode throughput with vs without a JSON-Schema constraint on
+//!       the real engine.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -27,6 +31,97 @@ const SCHEMA: &str = r#"{
 }"#;
 
 fn main() {
+    mask_microbench();
+    if webllm::artifacts_dir().join("manifest.json").exists() {
+        engine_bench();
+    } else {
+        println!("\n(artifacts not built; skipping engine decode section)");
+    }
+}
+
+/// Mask computation + cache on a synthetic vocabulary (no artifacts).
+fn mask_microbench() {
+    let grammar = Rc::new(schema_to_grammar(&parse(SCHEMA).unwrap()).unwrap());
+    let vocab_sizes: &[usize] =
+        if common::quick() { &[32_768] } else { &[32_768, 131_072] };
+
+    common::print_header("grammar mask micro-bench (synthetic vocab)");
+    for &vocab in vocab_sizes {
+        let raw = common::synthetic_vocab(vocab);
+        let trie = Rc::new(VocabTrie::build(vocab, |i| raw[i as usize].as_slice()));
+
+        // Cold walk from two representative states: value start (broad
+        // mask) and inside a string (tight mask).
+        let start = GrammarMatcher::new(grammar.clone());
+        let r = common::time_it(
+            &format!("cold mask @root (vocab {vocab}, trie {} nodes)", trie.node_count()),
+            2,
+            common::iters(30, 4),
+            || {
+                let mask = start.token_mask_trie(&trie);
+                std::hint::black_box(&mask);
+            },
+        );
+        common::print_result(&r);
+
+        let mut in_string = GrammarMatcher::new(grammar.clone());
+        assert!(in_string.advance_bytes(b"{\"title\":\"we"));
+        let allowed = in_string.token_mask_trie(&trie).count_allowed();
+        let r = common::time_it(
+            &format!("cold mask @in-string ({allowed} allowed)"),
+            2,
+            common::iters(30, 4),
+            || {
+                let mask = in_string.token_mask_trie(&trie);
+                std::hint::black_box(&mask);
+            },
+        );
+        common::print_result(&r);
+
+        // Cache hit: must be O(1) — an Rc pointer clone, independent of
+        // vocab size.
+        let mut cache = MaskCache::new(trie.clone(), 256);
+        let warm = cache.get_or_compute(&in_string);
+        let again = cache.get_or_compute(&in_string);
+        assert!(Rc::ptr_eq(&warm, &again), "hit must be a pointer clone");
+        let ns = common::measure_cache_hit_ns(&mut cache, &in_string);
+        println!("cache hit @vocab {vocab}: {ns:.1} ns (Rc clone; O(1) in vocab)");
+    }
+
+    // Simulated decode walk with the cache (greedy-ish random choices)
+    // over the smaller synthetic vocab: steady-state hit rate.
+    let vocab = vocab_sizes[0];
+    let raw = common::synthetic_vocab(vocab);
+    let trie = Rc::new(VocabTrie::build(vocab, |i| raw[i as usize].as_slice()));
+    let mut cache = MaskCache::new(trie.clone(), 256);
+    let mut matcher = GrammarMatcher::new(grammar);
+    let mut rng: u64 = 0x1234_5678;
+    let steps = common::iters(400, 40);
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        let mask = cache.get_or_compute(&matcher);
+        let allowed: Vec<u32> = mask.iter_allowed().map(|i| i as u32).collect();
+        if allowed.is_empty() {
+            break;
+        }
+        rng ^= rng << 13;
+        rng ^= rng >> 7;
+        rng ^= rng << 17;
+        let t = allowed[(rng % allowed.len() as u64) as usize];
+        if !matcher.accept_token(raw[t as usize].as_slice()) {
+            break;
+        }
+    }
+    let (hits, misses) = cache.stats();
+    println!(
+        "cached walk: {steps} steps in {:.1} ms | mask cache {hits} hits / {misses} misses ({:.0}% hit rate)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        100.0 * hits as f64 / (hits + misses).max(1) as f64
+    );
+}
+
+/// Engine decode with vs without a schema constraint (needs artifacts).
+fn engine_bench() {
     let max_tokens = common::iters(48, 8);
     let reps = common::iters(6, 2);
 
@@ -63,13 +158,12 @@ fn main() {
         cons_tps / reps as f64,
     );
 
-    // -- raw mask computation + cache --------------------------------------
+    // Real-tokenizer mask timing for reference against the synthetic one.
     let manifest = webllm::models::Manifest::load(&webllm::artifacts_dir()).expect("artifacts");
     let tok = Tokenizer::from_file(&manifest.tokenizer_path).expect("tokenizer");
     let trie = Rc::new(VocabTrie::build(tok.vocab_size(), |i| tok.token_bytes(i)));
     let grammar = Rc::new(schema_to_grammar(&parse(SCHEMA).unwrap()).unwrap());
-
-    let m = GrammarMatcher::new(grammar.clone());
+    let m = GrammarMatcher::new(grammar);
     let r = common::time_it(
         &format!("cold token mask (vocab {}, trie {} nodes)", tok.vocab_size(), trie.node_count()),
         2,
@@ -79,34 +173,6 @@ fn main() {
             std::hint::black_box(&mask);
         },
     );
-    common::print_header("grammar mask micro-bench");
+    common::print_header("grammar mask micro-bench (artifact tokenizer)");
     common::print_result(&r);
-
-    // Simulated decode walk with the cache (greedy-ish random choices).
-    let mut cache = MaskCache::new(trie.clone(), 256);
-    let mut matcher = GrammarMatcher::new(grammar);
-    let mut rng: u64 = 0x1234_5678;
-    let steps = common::iters(400, 40);
-    let t0 = std::time::Instant::now();
-    for _ in 0..steps {
-        let mask = cache.get_or_compute(&matcher);
-        let allowed: Vec<u32> =
-            (0..tok.vocab_size() as u32).filter(|&i| mask[i as usize]).collect();
-        if allowed.is_empty() {
-            break;
-        }
-        rng ^= rng << 13;
-        rng ^= rng >> 7;
-        rng ^= rng << 17;
-        let t = allowed[(rng % allowed.len() as u64) as usize];
-        if !matcher.accept_token(tok.token_bytes(t)) {
-            break;
-        }
-    }
-    let (hits, misses) = cache.stats();
-    println!(
-        "cached walk: {steps} steps in {:.1} ms | mask cache {hits} hits / {misses} misses ({:.0}% hit rate)",
-        t0.elapsed().as_secs_f64() * 1e3,
-        100.0 * hits as f64 / (hits + misses).max(1) as f64
-    );
 }

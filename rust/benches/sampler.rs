@@ -1,0 +1,308 @@
+//! Per-token sampling cost: the legacy full-sort pipeline vs the fused
+//! bitset + partial-selection pipeline (ISSUE 1 acceptance bench).
+//!
+//! The baseline is the seed's decode-path token cost, kept verbatim:
+//! per-token `Vec<bool>` mask clone (+ EOS bit writes), a logits-row copy,
+//! `-inf` materialization, and a full descending sort of every finite
+//! logit. The fused path is `LogitsProcessor::sample_masked`:
+//! word-skipping bitmask candidate collection, `select_nth`-based
+//! truncation, lazy descending walk, reusable scratch.
+//!
+//! Also measures the grammar mask-cache hit cost (an `Rc` clone) against
+//! the cold mask computation and against the old per-hit `Vec<bool>`
+//! clone, demonstrating the O(1)-hit contract.
+//!
+//! Writes results to ../BENCH_sampling.json (repo root).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::rc::Rc;
+use std::time::Instant;
+use webllm::grammar::{schema_to_grammar, GrammarMatcher, MaskCache, TokenBitmask, VocabTrie};
+use webllm::json::parse;
+use webllm::sampler::{LogitsProcessor, Pcg32, SamplingParams};
+
+// ---------------------------------------------------------------------------
+// baseline: the pre-bitset pipeline, verbatim
+// ---------------------------------------------------------------------------
+
+struct BaselineSampler {
+    rng: Pcg32,
+    scratch: Vec<(u32, f32)>,
+}
+
+impl BaselineSampler {
+    fn new(seed: u64) -> Self {
+        Self { rng: Pcg32::new(seed), scratch: Vec::new() }
+    }
+
+    /// One token, legacy style. `mask`/`eos` trigger the per-token mask
+    /// clone + `-inf` materialization the old engine performed.
+    fn sample(
+        &mut self,
+        logits: &mut [f32],
+        mask: Option<&[bool]>,
+        eos: &[u32],
+        params: &SamplingParams,
+    ) -> u32 {
+        if let Some(m) = mask {
+            let mut mk = m.to_vec(); // the old per-token O(vocab) copy
+            for &e in eos {
+                if (e as usize) < mk.len() {
+                    mk[e as usize] = true;
+                }
+            }
+            if !mk.iter().any(|&ok| ok) {
+                return argmax(logits);
+            }
+            for (l, &ok) in logits.iter_mut().zip(&mk) {
+                if !ok {
+                    *l = f32::NEG_INFINITY;
+                }
+            }
+        }
+        if params.temperature == 0.0 {
+            return argmax(logits);
+        }
+        self.sample_stochastic(logits, params)
+    }
+
+    /// The seed's `sample_stochastic`, unchanged: full descending sort of
+    /// every finite logit, fresh probs Vec per call.
+    fn sample_stochastic(&mut self, logits: &[f32], p: &SamplingParams) -> u32 {
+        let inv_t = 1.0 / p.temperature;
+        self.scratch.clear();
+        for (i, &l) in logits.iter().enumerate() {
+            if l.is_finite() {
+                self.scratch.push((i as u32, l * inv_t));
+            }
+        }
+        if self.scratch.is_empty() {
+            return argmax(logits);
+        }
+        self.scratch
+            .sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        let mut n = self.scratch.len();
+        if p.top_k > 0 {
+            n = n.min(p.top_k);
+        }
+        let m = self.scratch[0].1;
+        let mut total = 0.0f32;
+        let mut probs: Vec<f32> = Vec::with_capacity(n);
+        for &(_, l) in &self.scratch[..n] {
+            let e = (l - m).exp();
+            probs.push(e);
+            total += e;
+        }
+        for q in &mut probs {
+            *q /= total;
+        }
+        if p.min_p > 0.0 {
+            let floor = p.min_p * probs[0];
+            let keep = probs.iter().take_while(|&&q| q >= floor).count().max(1);
+            if keep < n {
+                n = keep;
+                let t: f32 = probs[..n].iter().sum();
+                probs.truncate(n);
+                for q in &mut probs {
+                    *q /= t;
+                }
+            }
+        }
+        if p.top_p < 1.0 {
+            let mut cum = 0.0f32;
+            let mut keep = n;
+            for (i, &q) in probs.iter().enumerate() {
+                cum += q;
+                if cum >= p.top_p {
+                    keep = i + 1;
+                    break;
+                }
+            }
+            if keep < n {
+                n = keep;
+                let t: f32 = probs[..n].iter().sum();
+                probs.truncate(n);
+                for q in &mut probs {
+                    *q /= t;
+                }
+            }
+        }
+        let r = self.rng.f32();
+        let mut cum = 0.0f32;
+        for (i, &q) in probs[..n].iter().enumerate() {
+            cum += q;
+            if r < cum {
+                return self.scratch[i].0;
+            }
+        }
+        self.scratch[n - 1].0
+    }
+}
+
+fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &l) in logits.iter().enumerate() {
+        if l > best_v {
+            best_v = l;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+// ---------------------------------------------------------------------------
+
+fn gen_logits(vocab: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..vocab).map(|_| rng.f32() * 16.0 - 8.0).collect()
+}
+
+/// A grammar-shaped mask allowing roughly `1/stride` of the vocab.
+fn sparse_mask(vocab: usize, stride: usize) -> (Vec<bool>, TokenBitmask) {
+    let bools: Vec<bool> = (0..vocab).map(|i| i % stride == 0).collect();
+    let bits = TokenBitmask::from_bools(&bools);
+    (bools, bits)
+}
+
+struct Case {
+    name: &'static str,
+    params: SamplingParams,
+    mask_stride: Option<usize>,
+}
+
+fn cases() -> Vec<Case> {
+    let topp = SamplingParams { temperature: 0.8, top_p: 0.95, ..Default::default() };
+    let topk = SamplingParams { temperature: 1.0, top_k: 40, top_p: 0.9, ..Default::default() };
+    vec![
+        Case { name: "greedy unmasked", params: SamplingParams::greedy(), mask_stride: None },
+        Case {
+            name: "greedy mask(1/97)",
+            params: SamplingParams::greedy(),
+            mask_stride: Some(97),
+        },
+        Case { name: "top-p .95 t.8 unmasked", params: topp.clone(), mask_stride: None },
+        Case { name: "top-p .95 t.8 mask(1/97)", params: topp, mask_stride: Some(97) },
+        Case { name: "top-k 40 top-p .9 unmasked", params: topk, mask_stride: None },
+    ]
+}
+
+fn main() {
+    let vocabs: Vec<usize> =
+        if common::quick() { vec![32_768] } else { vec![32_768, 131_072] };
+    let mut rows = Vec::new();
+
+    for &vocab in &vocabs {
+        let logits = gen_logits(vocab, 0xBEEF);
+        let iters = common::iters((4_000_000 / vocab).max(64), 32);
+        common::print_header(&format!("per-token sampling, vocab {vocab} ({iters} tokens)"));
+
+        for case in cases() {
+            let masks = case.mask_stride.map(|s| sparse_mask(vocab, s));
+            let eos: &[u32] = &[2];
+
+            // Baseline: per-token row copy + mask clone + full sort.
+            let mut base = BaselineSampler::new(7);
+            let rb = common::time_it(&format!("baseline  {}", case.name), 8, iters, || {
+                let mut row = logits.clone();
+                let t = base.sample(
+                    &mut row,
+                    masks.as_ref().map(|(b, _)| b.as_slice()),
+                    eos,
+                    &case.params,
+                );
+                std::hint::black_box(t);
+            });
+
+            // Fused: in-place, bitmask, partial selection.
+            let mut proc = LogitsProcessor::new(case.params.clone(), 7);
+            let mut row = logits.clone();
+            let rf = common::time_it(&format!("fused     {}", case.name), 8, iters, || {
+                let t = proc.sample_masked(&mut row, masks.as_ref().map(|(_, m)| m), eos);
+                std::hint::black_box(t);
+            });
+
+            common::print_result(&rb);
+            common::print_result(&rf);
+            let speedup = rb.mean_ms / rf.mean_ms.max(1e-9);
+            println!("{:<44} {speedup:>29.2}x", format!("  -> speedup {}", case.name));
+            rows.push(webllm::obj! {
+                "case" => case.name,
+                "vocab" => vocab as i64,
+                "tokens" => iters as i64,
+                "baseline_us_per_token" => rb.mean_ms * 1e3,
+                "fused_us_per_token" => rf.mean_ms * 1e3,
+                "speedup" => speedup,
+            });
+        }
+    }
+
+    // -- grammar mask-cache hit cost (the O(1) contract) --------------------
+    let vocab = vocabs[0];
+    let raw = common::synthetic_vocab(vocab);
+    let trie = Rc::new(VocabTrie::build(vocab, |i| raw[i as usize].as_slice()));
+    let schema = parse(
+        r#"{"type":"object","properties":{"name":{"type":"string"},
+            "count":{"type":"integer"}},"required":["name","count"]}"#,
+    )
+    .unwrap();
+    let grammar = Rc::new(schema_to_grammar(&schema).unwrap());
+    let mut matcher = GrammarMatcher::new(grammar);
+    assert!(matcher.advance_bytes(b"{\"name\":\"we"), "grammar walk");
+
+    let cold_iters = common::iters(30, 4);
+    let rc = common::time_it(&format!("cold mask compute (vocab {vocab})"), 2, cold_iters, || {
+        let m = matcher.token_mask_trie(&trie);
+        std::hint::black_box(&m);
+    });
+
+    let mut cache = MaskCache::new(trie.clone(), 256);
+    let hit_ns = common::measure_cache_hit_ns(&mut cache, &matcher);
+
+    // The old per-hit cost for comparison: cloning an unpacked vocab mask.
+    let bools = vec![true; vocab];
+    let t0 = Instant::now();
+    let clone_iters = 100_000usize;
+    for _ in 0..clone_iters {
+        let c = bools.clone();
+        std::hint::black_box(&c);
+    }
+    let clone_ns = t0.elapsed().as_secs_f64() * 1e9 / clone_iters as f64;
+
+    common::print_header("grammar mask cache");
+    common::print_result(&rc);
+    println!("cache hit (Rc clone):            {hit_ns:>10.1} ns");
+    println!("legacy hit (Vec<bool> clone):    {clone_ns:>10.1} ns");
+    println!(
+        "hit is {:.0}x cheaper than the old vocab-sized copy and {:.0}x cheaper than recompute",
+        clone_ns / hit_ns.max(1e-9),
+        rc.mean_ms * 1e6 / hit_ns.max(1e-9)
+    );
+    let (hits, misses) = cache.stats();
+
+    // -- JSON report --------------------------------------------------------
+    let report = webllm::obj! {
+        "bench" => "sampler",
+        "generated_by" => "cargo bench --bench sampler",
+        "quick_mode" => common::quick(),
+        "per_token_sampling" => webllm::json::Value::Array(rows),
+        "mask_cache" => webllm::obj! {
+            "vocab" => vocab as i64,
+            "cold_mask_compute_us" => rc.mean_ms * 1e3,
+            "cache_hit_ns" => hit_ns,
+            "legacy_vec_bool_clone_ns" => clone_ns,
+            "hits" => hits as i64,
+            "misses" => misses as i64,
+        },
+    };
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_sampling.json");
+    match std::fs::write(&path, webllm::json::to_string_pretty(&report) + "\n") {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
+    }
+}

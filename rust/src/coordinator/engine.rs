@@ -16,7 +16,9 @@ use crate::api::{
     LogprobEntry, ResponseFormat, Usage,
 };
 use crate::browser::{BrowserConfig, BrowserEnv};
-use crate::grammar::{parse_ebnf, schema_to_grammar, Grammar, GrammarMatcher, MaskCache, VocabTrie};
+use crate::grammar::{
+    parse_ebnf, schema_to_grammar, Grammar, GrammarMatcher, MaskCache, TokenBitmask, VocabTrie,
+};
 use crate::json::Value;
 use crate::kvcache::KvCacheManager;
 use crate::metrics::EngineStats;
@@ -97,11 +99,38 @@ struct PendingReq {
     t_admit: Instant,
 }
 
+/// Persistent decode-step input buffers, one set per model. The decode hot
+/// path refills these in place every step instead of allocating four fresh
+/// vectors per token batch.
+#[derive(Default)]
+struct StepBuffers {
+    ids: Vec<i32>,
+    positions: Vec<i32>,
+    seq_lens: Vec<i32>,
+    tables: Vec<i32>,
+}
+
+impl StepBuffers {
+    /// Size for `batch` rows of `mp` pages each, zero-filled (padding rows
+    /// must read as seq_len 0 / position 0 / garbage-page tables).
+    fn reset(&mut self, batch: usize, mp: usize) {
+        self.ids.clear();
+        self.ids.resize(batch, 0);
+        self.positions.clear();
+        self.positions.resize(batch, 0);
+        self.seq_lens.clear();
+        self.seq_lens.resize(batch, 0);
+        self.tables.clear();
+        self.tables.resize(batch * mp, 0);
+    }
+}
+
 struct EngineModel {
     runtime: ModelRuntime,
     kv: KvCacheManager,
     waiting: VecDeque<PendingReq>,
     running: Vec<RunningSeq>,
+    step: StepBuffers,
 }
 
 /// The backend engine. See module docs.
@@ -154,7 +183,13 @@ impl MLCEngine {
             );
             models.insert(
                 name.clone(),
-                EngineModel { runtime, kv, waiting: VecDeque::new(), running: Vec::new() },
+                EngineModel {
+                    runtime,
+                    kv,
+                    waiting: VecDeque::new(),
+                    running: Vec::new(),
+                    step: StepBuffers::default(),
+                },
             );
         }
         let eos_ids = ["<eos>", "<|end|>"]
@@ -354,8 +389,8 @@ impl MLCEngine {
             let out = m.runtime.prefill(&ids, n, &bt)?;
             (chunk, t0.elapsed().as_secs_f64(), out.logits)
         };
-        let _ = chunk;
         self.stats.prefill_tokens += p.prompt_ids.len() as u64;
+        self.stats.prefill_padded_tokens += (chunk - p.prompt_ids.len()) as u64;
         self.stats.prefill_time_s += t_prefill;
 
         let max_ctx = {
@@ -416,26 +451,37 @@ impl MLCEngine {
             let batch = mc.pick_batch(live).expect("live <= max batch");
             let mp = mc.max_pages_per_seq();
 
-            let mut ids = vec![0i32; batch];
-            let mut positions = vec![0i32; batch];
-            let mut seq_lens = vec![0i32; batch];
-            let mut tables = vec![0i32; batch * mp];
+            // Refill the persistent step buffers in place (no per-step
+            // allocations; padding rows stay zeroed).
+            m.step.reset(batch, mp);
             for (row, seq) in m.running.iter().take(live).enumerate() {
                 let s = m.kv.get(seq.seq_id).expect("running seq has kv");
                 let len = s.len();
-                ids[row] = *s.tokens.last().unwrap() as i32;
-                positions[row] = (len - 1) as i32;
-                seq_lens[row] = len as i32;
-                tables[row * mp..row * mp + mp].copy_from_slice(&m.kv.block_table_row(seq.seq_id));
+                m.step.ids[row] = *s.tokens.last().unwrap() as i32;
+                m.step.positions[row] = (len - 1) as i32;
+                m.step.seq_lens[row] = len as i32;
+                m.kv.write_block_table_row(
+                    seq.seq_id,
+                    &mut m.step.tables[row * mp..row * mp + mp],
+                );
             }
             let t0 = Instant::now();
-            let out = m.runtime.decode(&ids, &positions, &seq_lens, &tables)?;
+            let out = m.runtime.decode(
+                &m.step.ids,
+                &m.step.positions,
+                &m.step.seq_lens,
+                &m.step.tables,
+            )?;
             (live, batch, out.logits, t0.elapsed().as_secs_f64())
         };
         self.stats.decode_time_s += t_decode;
+        self.stats.decode_steps += 1;
+        self.stats.decode_live_rows += rows as u64;
+        self.stats.decode_padded_rows += (batch - rows) as u64;
 
-        // Sample per live row; mutate sequences out-of-place to appease
-        // the borrow checker (running list is rebuilt below).
+        // Sample per live row, directly from the row's slice of the
+        // returned [batch, vocab] logits — no per-row copy. Sequences are
+        // moved out so `consume_logits` can borrow the engine mutably.
         let vocab = self.tokenizer.vocab_size();
         let mut running = std::mem::take(&mut self.models.get_mut(name).unwrap().running);
         let mut logits = logits;
@@ -444,12 +490,10 @@ impl MLCEngine {
                 continue; // aborted mid-flight
             }
             let row_logits = &mut logits[row * vocab..(row + 1) * vocab];
-            let mut tmp = row_logits.to_vec();
-            self.consume_logits(seq, &mut tmp);
+            self.consume_logits(seq, row_logits);
             self.stats.decode_tokens += 1;
             self.stats.itl.push(t_decode / rows as f64);
         }
-        let _ = batch;
 
         let m = self.models.get_mut(name).unwrap();
         for seq in running {
@@ -466,26 +510,24 @@ impl MLCEngine {
     /// update finish state. Shared by the prefill (first token) and decode
     /// paths.
     fn consume_logits(&mut self, seq: &mut RunningSeq, logits: &mut [f32]) {
-        // Grammar mask (+ EOS allowance when the derivation is complete).
-        let mask_storage;
-        let mask: Option<&[bool]> = match (&seq.matcher, &seq.mask_cache) {
+        // Grammar mask straight from the cache — an Rc clone, O(1) even at
+        // 128k vocab. The EOS allowance (legal once the derivation is
+        // complete) rides along as `allow_extra` instead of copying the
+        // mask to flip bits on it.
+        let mask_rc: Rc<TokenBitmask>;
+        let mut extra: &[u32] = &[];
+        let mask: Option<&TokenBitmask> = match (&seq.matcher, &seq.mask_cache) {
             (Some(matcher), Some(cache)) => {
-                let base = cache.borrow_mut().get_or_compute(matcher);
-                let mut mk = (*base).clone();
+                mask_rc = cache.borrow_mut().get_or_compute(matcher);
                 if matcher.is_accepting() {
-                    for &e in &self.eos_ids {
-                        if (e as usize) < mk.len() {
-                            mk[e as usize] = true;
-                        }
-                    }
+                    extra = &self.eos_ids;
                 }
-                mask_storage = mk;
-                Some(&mask_storage)
+                Some(&mask_rc)
             }
             _ => None,
         };
 
-        let (token, lp) = seq.processor.sample_with_logprobs(logits, mask);
+        let (token, lp) = seq.processor.sample_with_logprobs_masked(logits, mask, extra);
         if let (Some(list), Some(lp)) = (&mut seq.logprobs, lp) {
             let tok_str = |t: u32| {
                 String::from_utf8_lossy(self.tokenizer.token_bytes(t)).into_owned()
@@ -605,6 +647,7 @@ impl MLCEngine {
             .map(|t| e2e - t.elapsed().as_secs_f64())
             .unwrap_or(e2e);
         let decode_s = (e2e - ttft).max(1e-9);
+        stats.e2e.push(e2e);
         let usage = Usage {
             prompt_tokens: seq.prompt_tokens,
             completion_tokens: seq.completion_tokens,
@@ -638,7 +681,6 @@ impl MLCEngine {
                 },
             ));
         }
-        let _ = stats;
         events.push_back(EngineEvent::Done(
             seq.req_id,
             ChatCompletionResponse {
@@ -720,6 +762,13 @@ impl MLCEngine {
             "decode_tokens" => self.stats.decode_tokens as i64,
             "prefill_tps" => self.stats.prefill_tps(),
             "decode_tps" => self.stats.decode_tps(),
+            "prefill_padded_tokens" => self.stats.prefill_padded_tokens as i64,
+            "decode_steps" => self.stats.decode_steps as i64,
+            "decode_live_rows" => self.stats.decode_live_rows as i64,
+            "decode_padded_rows" => self.stats.decode_padded_rows as i64,
+            "decode_padding_ratio" => self.stats.decode_padding_ratio(),
+            "e2e_requests" => self.stats.e2e.len() as i64,
+            "e2e_mean_s" => self.stats.e2e.mean(),
             "models" => models,
         }
     }

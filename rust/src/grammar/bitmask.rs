@@ -1,0 +1,261 @@
+//! Packed vocabulary bitmask: one `u64` word per 64 token ids.
+//!
+//! The decode hot path hands a mask from the grammar engine to the sampler
+//! every token. With a `Vec<bool>` that is a vocab-sized buffer (128 KiB at
+//! a 128k vocab) that gets allocated, filled, cloned on cache hits, and
+//! scanned bit-by-bit. Packing it XGrammar-style makes the mask 64× smaller,
+//! makes cache hits an `Rc` pointer clone, and — the part that matters for
+//! sampling — lets the sampler *skip 64 banned tokens per word test*
+//! (`word == 0`) instead of branching per token.
+//!
+//! Invariant: bits at positions `>= len` (the tail of the last word) are
+//! always zero. Every constructor and mutator maintains this, so word-level
+//! consumers (popcount, `words()`, iteration) never see phantom tokens.
+
+/// A packed allow/ban mask over token ids `0..len`. Bit set = allowed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TokenBitmask {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl TokenBitmask {
+    /// All tokens banned (the matcher starts from nothing-allowed and
+    /// grants bits).
+    pub fn new(len: usize) -> Self {
+        Self {
+            words: vec![0u64; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    /// All tokens allowed.
+    pub fn all_allowed(len: usize) -> Self {
+        let mut m = Self {
+            words: vec![!0u64; len.div_ceil(64)],
+            len,
+        };
+        m.clear_tail();
+        m
+    }
+
+    pub fn from_bools(bools: &[bool]) -> Self {
+        let mut m = Self::new(bools.len());
+        for (i, &ok) in bools.iter().enumerate() {
+            if ok {
+                m.allow(i);
+            }
+        }
+        m
+    }
+
+    /// Expand to the unpacked representation (tests, compatibility shims).
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.len).map(|i| self.is_allowed(i)).collect()
+    }
+
+    /// Number of token ids covered (the vocab size, not the allowed count).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The packed words; bits past `len` are guaranteed zero.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn is_allowed(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    #[inline]
+    pub fn allow(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn ban(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    /// Intersect with another mask of the same length (e.g. stacking a
+    /// stop-token ban on top of a grammar mask).
+    pub fn and_with(&mut self, other: &TokenBitmask) {
+        debug_assert_eq!(self.len, other.len);
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w &= o;
+        }
+    }
+
+    /// Union with another mask of the same length.
+    pub fn or_with(&mut self, other: &TokenBitmask) {
+        debug_assert_eq!(self.len, other.len);
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w |= o;
+        }
+    }
+
+    /// Popcount over the whole mask.
+    pub fn count_allowed(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn any_allowed(&self) -> bool {
+        self.words.iter().any(|&w| w != 0)
+    }
+
+    /// Iterate allowed token ids in ascending order, skipping 64 ids per
+    /// zero word.
+    pub fn iter_allowed(&self) -> AllowedIter<'_> {
+        AllowedIter {
+            words: &self.words,
+            next_word: 0,
+            current: 0,
+            base: 0,
+        }
+    }
+
+    fn clear_tail(&mut self) {
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+}
+
+/// `mask[i]` compatibility with the old `Vec<bool>` masks.
+impl std::ops::Index<usize> for TokenBitmask {
+    type Output = bool;
+
+    fn index(&self, i: usize) -> &bool {
+        if self.is_allowed(i) {
+            &true
+        } else {
+            &false
+        }
+    }
+}
+
+pub struct AllowedIter<'a> {
+    words: &'a [u64],
+    next_word: usize,
+    /// Remaining bits of the word currently being drained.
+    current: u64,
+    /// Token id of bit 0 of `current`.
+    base: usize,
+}
+
+impl<'a> Iterator for AllowedIter<'a> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        while self.current == 0 {
+            if self.next_word >= self.words.len() {
+                return None;
+            }
+            self.current = self.words[self.next_word];
+            self.base = self.next_word * 64;
+            self.next_word += 1;
+        }
+        let bit = self.current.trailing_zeros() as usize;
+        self.current &= self.current - 1;
+        Some(self.base + bit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_test_roundtrip_across_word_boundaries() {
+        for len in [1usize, 63, 64, 65, 130, 1000] {
+            let mut m = TokenBitmask::new(len);
+            assert_eq!(m.len(), len);
+            assert_eq!(m.count_allowed(), 0);
+            let picks: Vec<usize> =
+                [0, len / 3, len / 2, len - 1].into_iter().filter(|&i| i < len).collect();
+            for &i in &picks {
+                m.allow(i);
+            }
+            for i in 0..len {
+                assert_eq!(m.is_allowed(i), picks.contains(&i), "len {len} bit {i}");
+                assert_eq!(m[i], picks.contains(&i));
+            }
+            let mut uniq = picks.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(m.count_allowed(), uniq.len());
+            assert_eq!(m.iter_allowed().collect::<Vec<_>>(), uniq);
+            for &i in &picks {
+                m.ban(i);
+            }
+            assert!(!m.any_allowed());
+        }
+    }
+
+    #[test]
+    fn all_allowed_clears_tail_bits() {
+        for len in [1usize, 63, 64, 65, 127, 129] {
+            let m = TokenBitmask::all_allowed(len);
+            assert_eq!(m.count_allowed(), len);
+            let total_bits: usize = m.words().len() * 64;
+            assert!(total_bits >= len);
+            // tail invariant: popcount over words == len
+            assert_eq!(
+                m.words().iter().map(|w| w.count_ones() as usize).sum::<usize>(),
+                len
+            );
+        }
+    }
+
+    #[test]
+    fn bools_roundtrip() {
+        let bools: Vec<bool> = (0..150).map(|i| i % 3 == 0 || i % 7 == 0).collect();
+        let m = TokenBitmask::from_bools(&bools);
+        assert_eq!(m.to_bools(), bools);
+        assert_eq!(m.count_allowed(), bools.iter().filter(|&&b| b).count());
+    }
+
+    #[test]
+    fn and_or_combine() {
+        let a = TokenBitmask::from_bools(&[true, true, false, false, true]);
+        let b = TokenBitmask::from_bools(&[true, false, true, false, true]);
+        let mut and = a.clone();
+        and.and_with(&b);
+        assert_eq!(and.to_bools(), vec![true, false, false, false, true]);
+        let mut or = a.clone();
+        or.or_with(&b);
+        assert_eq!(or.to_bools(), vec![true, true, true, false, true]);
+    }
+
+    #[test]
+    fn iter_skips_zero_words() {
+        let mut m = TokenBitmask::new(64 * 40);
+        m.allow(5);
+        m.allow(64 * 20 + 1);
+        m.allow(64 * 39 + 63);
+        assert_eq!(
+            m.iter_allowed().collect::<Vec<_>>(),
+            vec![5, 64 * 20 + 1, 64 * 39 + 63]
+        );
+    }
+
+    #[test]
+    fn empty_mask() {
+        let m = TokenBitmask::new(0);
+        assert!(m.is_empty());
+        assert!(!m.any_allowed());
+        assert_eq!(m.iter_allowed().count(), 0);
+    }
+}

@@ -15,6 +15,7 @@
 //!   * a per-state first-byte filter: tokens whose first byte can't be
 //!     consumed are rejected without simulating the rest.
 
+use super::bitmask::TokenBitmask;
 use super::grammar::{Grammar, Sym};
 use std::collections::HashMap;
 use std::collections::hash_map::DefaultHasher;
@@ -126,21 +127,21 @@ impl GrammarMatcher {
         self.advance_bytes(token_bytes)
     }
 
-    /// Compute the allowed-token mask for the whole vocabulary.
-    /// `token_bytes(i)` supplies each token's byte string; empty strings
-    /// (specials/unused) are banned except `eos_allowed` handling done by
-    /// the caller via `is_accepting`.
+    /// Compute the allowed-token mask for the whole vocabulary as a packed
+    /// [`TokenBitmask`]. `token_bytes(i)` supplies each token's byte
+    /// string; empty strings (specials/unused) are banned except
+    /// `eos_allowed` handling done by the caller via `is_accepting`.
     pub fn token_mask<'a>(
         &self,
         vocab_size: usize,
         token_bytes: impl Fn(u32) -> &'a [u8],
-    ) -> Vec<bool> {
+    ) -> TokenBitmask {
         // First-byte filter: which bytes are consumable right now?
         let mut first = [false; 256];
         for stack in &self.stacks {
             self.collect_first_bytes(stack, &mut first);
         }
-        let mut mask = vec![false; vocab_size];
+        let mut mask = TokenBitmask::new(vocab_size);
         for i in 0..vocab_size {
             let bytes = token_bytes(i as u32);
             if bytes.is_empty() {
@@ -149,7 +150,9 @@ impl GrammarMatcher {
             if !first[bytes[0] as usize] {
                 continue;
             }
-            mask[i] = if bytes.len() == 1 { true } else { self.test_bytes(bytes) };
+            if bytes.len() == 1 || self.test_bytes(bytes) {
+                mask.allow(i);
+            }
         }
         mask
     }
@@ -344,44 +347,75 @@ impl VocabTrie {
     }
 }
 
+/// One in-flight node of the trie DFS: `arena[start..end]` holds the
+/// automaton stack-set after consuming the byte path to `node`; `child` is
+/// the next outgoing edge to try.
+struct DfsFrame {
+    node: u32,
+    start: usize,
+    end: usize,
+    child: usize,
+}
+
 impl GrammarMatcher {
     /// Trie-accelerated mask: one DFS over the vocabulary trie, stepping
     /// the stack-set per *distinct byte prefix* instead of per token.
-    pub fn token_mask_trie(&self, trie: &VocabTrie) -> Vec<bool> {
-        let mut mask = vec![false; trie.vocab_size];
-        // Iterative DFS carrying the stack-set per node.
-        let mut work: Vec<(u32, Vec<Stack>)> = vec![(0, self.stacks.clone())];
-        while let Some((node, stacks)) = work.pop() {
-            for &(byte, child) in &trie.children[node as usize] {
-                let mut next: Vec<Stack> = Vec::new();
-                for stack in &stacks {
-                    step_byte_into(&self.grammar, stack, byte, &mut next);
-                }
-                if next.is_empty() {
-                    continue;
-                }
-                dedup_stacks(&mut next);
-                for &tok in &trie.terminal[child as usize] {
-                    mask[tok as usize] = true;
-                }
-                if !trie.children[child as usize].is_empty() {
-                    work.push((child, next));
-                }
+    ///
+    /// The DFS keeps every live stack-set in one shared arena `Vec` —
+    /// child sets are appended on descent and truncated away on backtrack
+    /// — instead of cloning a fresh `Vec<Stack>` per trie node, so the
+    /// walk's only steady-state allocations are the stacks the grammar
+    /// stepping itself produces.
+    pub fn token_mask_trie(&self, trie: &VocabTrie) -> TokenBitmask {
+        let mut mask = TokenBitmask::new(trie.vocab_size);
+        let mut arena: Vec<Stack> = self.stacks.clone();
+        let mut scratch: Vec<Stack> = Vec::new();
+        let mut dfs = vec![DfsFrame { node: 0, start: 0, end: arena.len(), child: 0 }];
+        while let Some(top) = dfs.last_mut() {
+            let node = top.node as usize;
+            if top.child >= trie.children[node].len() {
+                // Backtrack: drop this node's stack-set (and nothing else —
+                // descendants were truncated when they popped).
+                let start = top.start;
+                dfs.pop();
+                arena.truncate(start);
+                continue;
+            }
+            let (byte, child) = trie.children[node][top.child];
+            top.child += 1;
+            let (s, e) = (top.start, top.end);
+
+            scratch.clear();
+            for i in s..e {
+                step_byte_into(&self.grammar, &arena[i], byte, &mut scratch);
+            }
+            if scratch.is_empty() {
+                continue; // whole subtree dead
+            }
+            dedup_stacks(&mut scratch);
+            for &tok in &trie.terminal[child as usize] {
+                mask.allow(tok as usize);
+            }
+            if !trie.children[child as usize].is_empty() {
+                let start = arena.len();
+                arena.append(&mut scratch);
+                dfs.push(DfsFrame { node: child, start, end: arena.len(), child: 0 });
             }
         }
         mask
     }
 }
 
-/// Adaptive token-mask cache: state fingerprint -> mask.
+/// Adaptive token-mask cache: state fingerprint -> packed mask.
 ///
 /// XGrammar precomputes "context-independent token" masks per grammar
 /// position at compile time; here the equivalent saving comes from
 /// caching at runtime — the first visit to an automaton state pays the
-/// full vocabulary walk, subsequent visits are a hash lookup.
+/// full vocabulary walk, subsequent visits are a hash lookup returning an
+/// `Rc<TokenBitmask>` clone: O(1), never an O(vocab) copy.
 pub struct MaskCache {
     trie: Rc<VocabTrie>,
-    cache: HashMap<u64, Rc<Vec<bool>>>,
+    cache: HashMap<u64, Rc<TokenBitmask>>,
     hits: u64,
     misses: u64,
     capacity: usize,
@@ -392,7 +426,7 @@ impl MaskCache {
         Self { trie, cache: HashMap::new(), hits: 0, misses: 0, capacity }
     }
 
-    pub fn get_or_compute(&mut self, matcher: &GrammarMatcher) -> Rc<Vec<bool>> {
+    pub fn get_or_compute(&mut self, matcher: &GrammarMatcher) -> Rc<TokenBitmask> {
         let key = matcher.fingerprint();
         if let Some(mask) = self.cache.get(&key) {
             self.hits += 1;

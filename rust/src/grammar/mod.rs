@@ -7,19 +7,26 @@
 //!     IR in `grammar`;
 //!   * `matcher` runs the grammar as a pushdown automaton over a *set* of
 //!     stacks (nondeterminism), advancing one byte at a time;
-//!   * per decode step the matcher produces a vocabulary bitmask for the
-//!     sampler (`GrammarMatcher::token_mask`), with an adaptive mask
-//!     cache keyed by the automaton state fingerprint — the XGrammar
-//!     "context-independent tokens" precomputation, adapted.
+//!   * per decode step the matcher produces a packed vocabulary bitmask
+//!     ([`TokenBitmask`], one `u64` word per 64 tokens) for the sampler
+//!     (`GrammarMatcher::token_mask`), with an adaptive mask cache keyed
+//!     by the automaton state fingerprint — the XGrammar
+//!     "context-independent tokens" precomputation, adapted. Cache hits
+//!     hand out `Rc<TokenBitmask>` clones, so the steady-state per-token
+//!     cost of constrained decoding is a hash lookup + pointer bump.
 //!
-//! The engine applies the mask in `sampler::LogitsProcessor::sample`, and
-//! `accept_token` advances the automaton with whatever was sampled.
+//! The engine applies the mask in
+//! `sampler::LogitsProcessor::sample_masked`, which walks the packed words
+//! directly (skipping 64 banned tokens per zero word), and `accept_token`
+//! advances the automaton with whatever was sampled.
 
+mod bitmask;
 mod ebnf;
 mod grammar;
 mod json_schema;
 mod matcher;
 
+pub use bitmask::TokenBitmask;
 pub use ebnf::parse_ebnf;
 pub use grammar::{Grammar, GrammarError, Sym};
 pub use json_schema::schema_to_grammar;

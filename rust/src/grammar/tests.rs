@@ -115,7 +115,8 @@ fn matcher_token_mask_restricts_vocab() {
     let m = GrammarMatcher::new(g);
     let vocab: Vec<&[u8]> = vec![b"y", b"n", b"yes", b"no", b"x", b"ye", b"yn", b""];
     let mask = m.token_mask(vocab.len(), |i| vocab[i as usize]);
-    assert_eq!(mask, vec![true, true, true, true, false, true, false, false]);
+    assert_eq!(mask.to_bools(), vec![true, true, true, true, false, true, false, false]);
+    assert_eq!(mask.count_allowed(), 5);
 }
 
 #[test]
@@ -125,7 +126,7 @@ fn matcher_mask_evolves_with_state() {
     m.advance(b'y');
     let vocab: Vec<&[u8]> = vec![b"e", b"es", b"o", b"n"];
     let mask = m.token_mask(vocab.len(), |i| vocab[i as usize]);
-    assert_eq!(mask, vec![true, true, false, false]);
+    assert_eq!(mask.to_bools(), vec![true, true, false, false]);
 }
 
 #[test]
@@ -152,10 +153,43 @@ fn mask_cache_hits_on_repeated_states() {
     let _ = cache.get_or_compute(&m);
     m.advance(b'b'); // same automaton state as after 'a'
     let mask = cache.get_or_compute(&m);
-    assert_eq!(*mask, vec![true, true, false]);
+    assert_eq!(mask.to_bools(), vec![true, true, false]);
     let (hits, misses) = cache.stats();
     assert_eq!(hits, 1);
     assert_eq!(misses, 2);
+}
+
+#[test]
+fn mask_cache_hit_is_pointer_clone() {
+    // The O(1)-hit contract: repeated visits to the same automaton state
+    // return the *same* Rc allocation, not a vocab-sized copy.
+    let g = Rc::new(parse_ebnf("root ::= [a-z]+").unwrap());
+    let mut m = GrammarMatcher::new(g);
+    let vocab: Vec<&[u8]> = vec![b"a", b"bc", b"1"];
+    let trie = Rc::new(VocabTrie::build(vocab.len(), |i| vocab[i as usize]));
+    let mut cache = MaskCache::new(trie, 64);
+    m.advance(b'a');
+    let first = cache.get_or_compute(&m);
+    m.advance(b'z'); // [a-z]+ loops: same automaton state
+    let second = cache.get_or_compute(&m);
+    assert!(Rc::ptr_eq(&first, &second), "cache hit must be an Rc clone");
+}
+
+#[test]
+fn trie_mask_matches_per_token_mask() {
+    // The arena-DFS trie walk and the straight per-token simulation must
+    // produce identical masks at every state along a derivation.
+    let g = Rc::new(parse_ebnf(r#"root ::= ("ab" | "ac" | "b" [0-9]+)+"#).unwrap());
+    let vocab: Vec<&[u8]> =
+        vec![b"a", b"b", b"ab", b"ac", b"abc", b"b1", b"12", b"1", b"c", b"", b"zz"];
+    let trie = VocabTrie::build(vocab.len(), |i| vocab[i as usize]);
+    let mut m = GrammarMatcher::new(g);
+    for &b in b"abb12ac" {
+        let flat = m.token_mask(vocab.len(), |i| vocab[i as usize]);
+        let fast = m.token_mask_trie(&trie);
+        assert_eq!(flat.to_bools(), fast.to_bools(), "diverged before byte {}", b as char);
+        assert!(m.advance(b), "grammar rejected test input at {}", b as char);
+    }
 }
 
 // -- JSON-Schema compilation --------------------------------------------------

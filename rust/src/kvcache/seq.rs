@@ -237,12 +237,32 @@ impl KvCacheManager {
     /// The i32 block-table row for an executable call, padded with the
     /// garbage page 0 to `max_pages_per_seq`.
     pub fn block_table_row(&self, id: SeqId) -> Vec<i32> {
-        let seq = &self.seqs[&id];
         let mut row = vec![0i32; self.max_pages_per_seq];
-        for (i, &p) in seq.block_table.iter().enumerate() {
-            row[i] = p as i32;
-        }
+        self.write_block_table_row(id, &mut row);
         row
+    }
+
+    /// Allocation-free variant for the decode hot path: write the row for
+    /// `id` into `out` (length `max_pages_per_seq`), padding with the
+    /// garbage page 0.
+    pub fn write_block_table_row(&self, id: SeqId, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), self.max_pages_per_seq);
+        let seq = &self.seqs[&id];
+        // Hard assert (release too): truncating real pages would silently
+        // drop attention context, which is worse than the panic the
+        // pre-refactor out-of-bounds write produced.
+        assert!(
+            seq.block_table.len() <= out.len(),
+            "sequence {id} holds {} pages > max_pages_per_seq {}",
+            seq.block_table.len(),
+            out.len()
+        );
+        for (o, &p) in out.iter_mut().zip(&seq.block_table) {
+            *o = p as i32;
+        }
+        // Pad only the suffix with the garbage page (the prefix was just
+        // written; callers may hand us a non-zeroed buffer).
+        out[seq.block_table.len()..].fill(0);
     }
 
     fn sync_evictions(&mut self) {

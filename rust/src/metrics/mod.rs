@@ -143,10 +143,22 @@ pub struct EngineStats {
     pub decode_tokens: u64,
     pub prefill_time_s: f64,
     pub decode_time_s: f64,
+    /// Prefill padding waste: slots in the compiled chunk beyond the
+    /// actual prompt length, summed over all prefills.
+    pub prefill_padded_tokens: u64,
+    /// Batched decode steps executed.
+    pub decode_steps: u64,
+    /// Rows in decode batches that carried a live sequence.
+    pub decode_live_rows: u64,
+    /// Rows in decode batches that were static-shape padding (the compiled
+    /// batch size exceeded the number of running sequences).
+    pub decode_padded_rows: u64,
     /// Time from request admission to first streamed token.
     pub ttft: Histogram,
     /// Inter-token latency.
     pub itl: Histogram,
+    /// End-to-end request latency (admission to completion).
+    pub e2e: Histogram,
 }
 
 impl EngineStats {
@@ -170,16 +182,34 @@ impl EngineStats {
         }
     }
 
+    /// Fraction of decode-batch rows wasted on static-shape padding
+    /// (0.0 when no decode step has run).
+    pub fn decode_padding_ratio(&self) -> f64 {
+        let total = self.decode_live_rows + self.decode_padded_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.decode_padded_rows as f64 / total as f64
+        }
+    }
+
     pub fn merge(&mut self, other: &EngineStats) {
         self.prefill_tokens += other.prefill_tokens;
         self.decode_tokens += other.decode_tokens;
         self.prefill_time_s += other.prefill_time_s;
         self.decode_time_s += other.decode_time_s;
+        self.prefill_padded_tokens += other.prefill_padded_tokens;
+        self.decode_steps += other.decode_steps;
+        self.decode_live_rows += other.decode_live_rows;
+        self.decode_padded_rows += other.decode_padded_rows;
         for &s in &other.ttft.samples {
             self.ttft.push(s);
         }
         for &s in &other.itl.samples {
             self.itl.push(s);
+        }
+        for &s in &other.e2e.samples {
+            self.e2e.push(s);
         }
     }
 }
@@ -229,6 +259,7 @@ mod tests {
         a.decode_tokens = 100;
         a.decode_time_s = 2.0;
         a.ttft.push(0.1);
+        a.e2e.push(1.5);
         let mut b = EngineStats::new();
         b.decode_tokens = 50;
         b.decode_time_s = 1.0;
@@ -237,5 +268,28 @@ mod tests {
         assert_eq!(a.decode_tokens, 150);
         assert!((a.decode_tps() - 50.0).abs() < 1e-9);
         assert_eq!(a.ttft.len(), 2);
+        assert_eq!(a.e2e.len(), 1);
+    }
+
+    #[test]
+    fn engine_stats_padding_accounting() {
+        let mut s = EngineStats::new();
+        assert_eq!(s.decode_padding_ratio(), 0.0);
+        // Two steps at compiled batch 4: one with 3 live rows, one with 1.
+        s.decode_steps += 1;
+        s.decode_live_rows += 3;
+        s.decode_padded_rows += 1;
+        s.decode_steps += 1;
+        s.decode_live_rows += 1;
+        s.decode_padded_rows += 3;
+        assert_eq!(s.decode_steps, 2);
+        assert!((s.decode_padding_ratio() - 0.5).abs() < 1e-12);
+        let mut other = EngineStats::new();
+        other.decode_padded_rows = 4;
+        other.decode_live_rows = 0;
+        other.prefill_padded_tokens = 7;
+        s.merge(&other);
+        assert_eq!(s.decode_padded_rows, 8);
+        assert_eq!(s.prefill_padded_tokens, 7);
     }
 }

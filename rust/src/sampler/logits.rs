@@ -1,6 +1,35 @@
 //! Logits processing pipeline.
+//!
+//! Two entry paths share one fused core:
+//!
+//! * [`LogitsProcessor::sample_masked`] — the engine's decode hot path.
+//!   Takes the grammar mask as a packed [`TokenBitmask`] and performs
+//!   candidate collection, top-k/top-p/min-p truncation, and the final
+//!   draw without allocating and without a full sort: banned tokens are
+//!   skipped 64-at-a-time on zero mask words, top-k uses
+//!   `select_nth_unstable`, and top-p / the inverse-CDF draw walk a
+//!   lazily-sorted descending prefix that grows in doubling blocks (the
+//!   softmax mass concentrates, so the walk almost always ends inside the
+//!   first block).
+//! * [`LogitsProcessor::sample`] — the legacy `&[bool]` mask signature,
+//!   kept for tests and simple callers; it materializes the mask as
+//!   `-inf` writes and runs the same fused core.
+//!
+//! Determinism contract: a stochastic sample consumes exactly one RNG
+//! draw; candidates are collected in ascending token order; all ordering
+//! comparisons use a total order (probability descending, token id
+//! ascending on ties). The property tests in `sampler::tests` hold the
+//! fused core token-for-token equal to a naive full-sort reference
+//! implementation of the same spec.
+//!
+//! `top_logprobs` reporting still needs the full distribution, so the
+//! logprobs path falls back to materialized masks + per-report
+//! allocations; that path is per-request opt-in and off the default hot
+//! path.
 
 use super::Pcg32;
+use crate::grammar::TokenBitmask;
+use std::cmp::Ordering;
 use std::collections::HashMap;
 
 /// Log-probability record for one sampled token (OpenAI `logprobs`).
@@ -94,20 +123,44 @@ impl SamplingParams {
     }
 }
 
+/// Total order over candidates: unnormalized probability descending,
+/// token id ascending on ties. Using a total order keeps partial
+/// selection and full sorting interchangeable (same kept set, same walk
+/// order) even when probabilities collide.
+#[inline]
+fn cmp_desc(a: &(u32, f32), b: &(u32, f32)) -> Ordering {
+    b.1.partial_cmp(&a.1).unwrap_or(Ordering::Equal).then_with(|| a.0.cmp(&b.0))
+}
+
 /// Stateful per-sequence processor: tracks occurrence counts for the
 /// penalty terms and owns the request RNG.
 pub struct LogitsProcessor {
     params: SamplingParams,
     rng: Pcg32,
     counts: HashMap<u32, u32>,
-    /// Scratch reused across steps to keep the decode hot path allocation-free.
+    /// Candidate scratch reused across steps (the decode hot path makes no
+    /// steady-state allocations): holds `(token, scaled logit)` during
+    /// collection, `(token, unnormalized prob)` afterwards.
     scratch: Vec<(u32, f32)>,
+    /// Token-id scratch for the `top_logprobs` report.
+    idx_scratch: Vec<u32>,
+    /// `allow_extra` folded into per-word OR overlays, sorted by word
+    /// index, so the mask-word loop pays O(1) amortized instead of
+    /// rescanning the extras for every word.
+    extra_scratch: Vec<(usize, u64)>,
 }
 
 impl LogitsProcessor {
     pub fn new(params: SamplingParams, fallback_seed: u64) -> Self {
         let seed = params.seed.unwrap_or(fallback_seed);
-        Self { params, rng: Pcg32::new(seed), counts: HashMap::new(), scratch: Vec::new() }
+        Self {
+            params,
+            rng: Pcg32::new(seed),
+            counts: HashMap::new(),
+            scratch: Vec::new(),
+            idx_scratch: Vec::new(),
+            extra_scratch: Vec::new(),
+        }
     }
 
     pub fn params(&self) -> &SamplingParams {
@@ -120,7 +173,8 @@ impl LogitsProcessor {
         *self.counts.entry(token).or_insert(0) += 1;
     }
 
-    /// Apply penalties + bias in place (steps 1-2 of the pipeline).
+    /// Apply penalties + bias in place (steps 1-2 of the pipeline). Cost is
+    /// O(distinct observed tokens + bias entries), not O(vocab).
     pub fn apply_penalties(&self, logits: &mut [f32]) {
         let p = &self.params;
         if p.repetition_penalty != 1.0 || p.presence_penalty != 0.0 || p.frequency_penalty != 0.0
@@ -141,8 +195,8 @@ impl LogitsProcessor {
         }
     }
 
-    /// Full pipeline on a raw logits row; `mask` (from the grammar engine)
-    /// bans token i when `mask[i]` is false. Returns the sampled token.
+    /// Legacy pipeline entry: `mask` as unpacked bools, banned tokens
+    /// materialized as `-inf` writes. Same fused core as `sample_masked`.
     pub fn sample(&mut self, logits: &mut [f32], mask: Option<&[bool]>) -> u32 {
         self.apply_penalties(logits);
         // Fallback for a degenerate (fully-masking) grammar state: the
@@ -159,14 +213,58 @@ impl LogitsProcessor {
                 }
             }
         }
-
         let token = match fallback {
             Some(t) => t,
-            None if self.params.temperature == 0.0 => argmax(logits),
-            None => self.sample_stochastic(logits),
+            None => self.pick(logits, None, &[]),
         };
         self.observe(token);
         token
+    }
+
+    /// Hot-path pipeline entry: penalties + packed grammar mask +
+    /// temperature + truncation + draw, fused over one pass of the logits
+    /// row. `allow_extra` lists tokens permitted in addition to the mask
+    /// (the engine's EOS allowance when the derivation is accepting) —
+    /// this replaces the old copy-the-mask-to-set-EOS step, so cache hits
+    /// stay O(1). Does not write `-inf` into `logits`.
+    pub fn sample_masked(
+        &mut self,
+        logits: &mut [f32],
+        mask: Option<&TokenBitmask>,
+        allow_extra: &[u32],
+    ) -> u32 {
+        self.apply_penalties(logits);
+        let token = self.pick(logits, mask, allow_extra);
+        self.observe(token);
+        token
+    }
+
+    /// Like `sample_with_logprobs`, but with the packed mask + EOS
+    /// allowance of `sample_masked`. When `logprobs` is off this is the
+    /// allocation-free fused path; when on, it falls back to the
+    /// materialized-mask slow path (the report needs the full masked
+    /// distribution anyway).
+    pub fn sample_with_logprobs_masked(
+        &mut self,
+        logits: &mut [f32],
+        mask: Option<&TokenBitmask>,
+        allow_extra: &[u32],
+    ) -> (u32, Option<TokenLogprob>) {
+        if !self.params.logprobs {
+            return (self.sample_masked(logits, mask, allow_extra), None);
+        }
+        match mask {
+            None => self.sample_with_logprobs(logits, None),
+            Some(m) => {
+                let mut bools = m.to_bools();
+                for &e in allow_extra {
+                    if let Some(slot) = bools.get_mut(e as usize) {
+                        *slot = true;
+                    }
+                }
+                self.sample_with_logprobs(logits, Some(&bools))
+            }
+        }
     }
 
     /// Like `sample`, additionally returning the sampled token's logprob
@@ -198,111 +296,230 @@ impl LogitsProcessor {
             if l.is_finite() { (l - m) * inv_t - log_z } else { f32::NEG_INFINITY }
         };
         let mut top: Vec<(u32, f32)> = Vec::new();
-        if self.params.top_logprobs > 0 {
-            let mut idx: Vec<u32> = (0..logits.len() as u32)
-                .filter(|&i| logits[i as usize].is_finite())
-                .collect();
-            let k = self.params.top_logprobs.min(idx.len());
-            idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
-                logits[b as usize]
-                    .partial_cmp(&logits[a as usize])
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            });
-            idx.truncate(k);
-            idx.sort_unstable_by(|&a, &b| {
-                logits[b as usize]
-                    .partial_cmp(&logits[a as usize])
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            });
-            top = idx.into_iter().map(|i| (i, lp(i))).collect();
+        let k_req = self.params.top_logprobs;
+        if k_req > 0 {
+            self.idx_scratch.clear();
+            self.idx_scratch
+                .extend((0..logits.len() as u32).filter(|&i| logits[i as usize].is_finite()));
+            let k = k_req.min(self.idx_scratch.len());
+            if k > 0 {
+                self.idx_scratch.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+                    logits[b as usize]
+                        .partial_cmp(&logits[a as usize])
+                        .unwrap_or(Ordering::Equal)
+                });
+                self.idx_scratch.truncate(k);
+                self.idx_scratch.sort_unstable_by(|&a, &b| {
+                    logits[b as usize]
+                        .partial_cmp(&logits[a as usize])
+                        .unwrap_or(Ordering::Equal)
+                });
+                top = self.idx_scratch.iter().map(|&i| (i, lp(i))).collect();
+            }
         }
         (token, Some(TokenLogprob { token, logprob: lp(token), top }))
     }
 
-    fn sample_stochastic(&mut self, logits: &[f32]) -> u32 {
-        let p = &self.params;
-        let inv_t = 1.0 / p.temperature;
+    // -- fused core ---------------------------------------------------------
 
-        // Collect finite candidates (scratch reuse).
+    /// Select one token from `logits` under `mask` + `allow_extra`.
+    /// Candidates are collected in ascending token order; greedy takes an
+    /// argmax over them, otherwise `sample_stochastic_fused` draws.
+    fn pick(&mut self, logits: &[f32], mask: Option<&TokenBitmask>, extra: &[u32]) -> u32 {
+        let greedy = self.params.temperature == 0.0;
+        if greedy && mask.is_none() {
+            // No collection needed: plain argmax over the row.
+            return argmax(logits);
+        }
+        let inv_t = if greedy { 1.0 } else { 1.0 / self.params.temperature };
+
         self.scratch.clear();
-        for (i, &l) in logits.iter().enumerate() {
-            if l.is_finite() {
-                self.scratch.push((i as u32, l * inv_t));
+        match mask {
+            Some(m) => {
+                debug_assert_eq!(m.len(), logits.len());
+                // Fold the (tiny) extra allowance into per-word OR
+                // overlays once, sorted by word, so the word loop below
+                // consumes them with a forward cursor instead of scanning
+                // `extra` per word.
+                self.extra_scratch.clear();
+                for &e in extra {
+                    let e = e as usize;
+                    if e < logits.len() {
+                        let (wi, bit) = (e / 64, 1u64 << (e % 64));
+                        match self.extra_scratch.iter_mut().find(|(w, _)| *w == wi) {
+                            Some((_, bits)) => *bits |= bit,
+                            None => self.extra_scratch.push((wi, bit)),
+                        }
+                    }
+                }
+                self.extra_scratch.sort_unstable_by_key(|&(w, _)| w);
+                let mut ei = 0usize;
+                for (wi, &w0) in m.words().iter().enumerate() {
+                    let mut w = w0;
+                    if ei < self.extra_scratch.len() && self.extra_scratch[ei].0 == wi {
+                        w |= self.extra_scratch[ei].1;
+                        ei += 1;
+                    }
+                    if w == 0 {
+                        continue; // 64 banned tokens skipped per test
+                    }
+                    let base = wi * 64;
+                    while w != 0 {
+                        let i = base + w.trailing_zeros() as usize;
+                        w &= w - 1;
+                        // Test the *scaled* value: a tiny (but valid)
+                        // temperature can overflow finite logits to ±inf,
+                        // which would poison step 1 with inf - inf = NaN.
+                        let s = logits[i] * inv_t;
+                        if s.is_finite() {
+                            self.scratch.push((i as u32, s));
+                        }
+                    }
+                }
+            }
+            None => {
+                for (i, &l) in logits.iter().enumerate() {
+                    let s = l * inv_t;
+                    if s.is_finite() {
+                        self.scratch.push((i as u32, s));
+                    }
+                }
             }
         }
         if self.scratch.is_empty() {
-            // Everything masked: fall back to argmax over raw logits.
+            // Degenerate state (fully masked, or every scaled logit
+            // non-finite — e.g. temperature small enough to overflow):
+            // argmax over the raw row, which is also the temperature -> 0
+            // limit of the distribution.
             return argmax(logits);
         }
-
-        // Sort descending by logit; truncation filters operate on prefixes.
-        self.scratch
-            .sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
-
-        let mut n = self.scratch.len();
-        if p.top_k > 0 {
-            n = n.min(p.top_k);
-        }
-
-        // Softmax over the kept prefix (max-subtracted).
-        let m = self.scratch[0].1;
-        let mut total = 0.0f32;
-        let mut probs: Vec<f32> = Vec::with_capacity(n);
-        for &(_, l) in &self.scratch[..n] {
-            let e = (l - m).exp();
-            probs.push(e);
-            total += e;
-        }
-        for q in &mut probs {
-            *q /= total;
-        }
-
-        // min-p: drop tokens below min_p * p_max.
-        if p.min_p > 0.0 {
-            let floor = p.min_p * probs[0];
-            let keep = probs.iter().take_while(|&&q| q >= floor).count().max(1);
-            if keep < n {
-                n = keep;
-                let t: f32 = probs[..n].iter().sum();
-                probs.truncate(n);
-                for q in &mut probs {
-                    *q /= t;
+        if greedy {
+            let mut best = self.scratch[0];
+            for &(i, l) in &self.scratch[1..] {
+                if l > best.1 {
+                    best = (i, l);
                 }
             }
+            return best.0;
         }
-
-        // top-p nucleus: smallest prefix with cumulative mass >= top_p.
-        if p.top_p < 1.0 {
-            let mut cum = 0.0f32;
-            let mut keep = n;
-            for (i, &q) in probs.iter().enumerate() {
-                cum += q;
-                if cum >= p.top_p {
-                    keep = i + 1;
-                    break;
-                }
-            }
-            if keep < n {
-                n = keep;
-                let t: f32 = probs[..n].iter().sum();
-                probs.truncate(n);
-                for q in &mut probs {
-                    *q /= t;
-                }
-            }
-        }
-
-        // Inverse-CDF draw.
-        let r = self.rng.f32();
-        let mut cum = 0.0f32;
-        for (i, &q) in probs[..n].iter().enumerate() {
-            cum += q;
-            if r < cum {
-                return self.scratch[i].0;
-            }
-        }
-        self.scratch[n - 1].0
+        self.sample_stochastic_fused()
     }
+
+    /// Stochastic draw over the candidates in `scratch`.
+    ///
+    /// Spec (mirrored exactly by the reference implementation in the
+    /// property tests):
+    ///   1. values become unnormalized probs `e = exp(l - max_l)`
+    ///      (so `e_max == 1.0` exactly);
+    ///   2. top-k keeps the k largest under the `cmp_desc` total order
+    ///      (partial selection + small sort instead of a full sort);
+    ///   3. min-p keeps `e >= min_p` (threshold filter — equivalent to the
+    ///      classic normalized formulation because `e_max == 1`);
+    ///   4. `total` = sum of kept `e` in the array's current order;
+    ///   5. top-p keeps the smallest `cmp_desc`-descending prefix with
+    ///      cumulative mass `>= top_p * total` (lazy descending walk);
+    ///   6. the inverse-CDF draw walks the kept set in the same descending
+    ///      order with target `r * kept_total`.
+    fn sample_stochastic_fused(&mut self) -> u32 {
+        let top_k = self.params.top_k;
+        let top_p = self.params.top_p;
+        let min_p = self.params.min_p;
+
+        // 1. scaled logits -> unnormalized probs.
+        let max_l = self.scratch.iter().fold(f32::NEG_INFINITY, |a, &(_, l)| a.max(l));
+        for c in &mut self.scratch {
+            c.1 = (c.1 - max_l).exp();
+        }
+
+        // 2. top-k: partial selection, then sort the kept block so the
+        // array order is descending (k is user-small; sorting it is cheap
+        // and makes min-p/top-p prefix logic trivially order-correct).
+        let mut sorted_len = 0usize;
+        if top_k > 0 && top_k < self.scratch.len() {
+            self.scratch.select_nth_unstable_by(top_k - 1, cmp_desc);
+            self.scratch.truncate(top_k);
+            self.scratch.sort_unstable_by(cmp_desc);
+            sorted_len = self.scratch.len();
+        }
+
+        // 3. min-p threshold filter. Clamped to 1.0 so the max candidate
+        // (e == 1.0 exactly) always survives and the kept set can never
+        // empty — even for out-of-range params that bypassed validate().
+        if min_p > 0.0 {
+            let floor = min_p.min(1.0);
+            self.scratch.retain(|&(_, e)| e >= floor);
+            sorted_len = sorted_len.min(self.scratch.len());
+        }
+
+        // 4. total mass in array order.
+        let total: f32 = self.scratch.iter().map(|&(_, e)| e).sum();
+        let mut kept_total = total;
+
+        // 5. top-p: walk the descending order lazily until the nucleus is
+        // covered; everything past the cut is dropped.
+        if top_p < 1.0 {
+            let target = top_p * total;
+            let mut cum = 0.0f32;
+            let mut i = 0usize;
+            let mut kept = self.scratch.len();
+            'nucleus: while i < self.scratch.len() {
+                if i >= sorted_len {
+                    sorted_len = grow_sorted_prefix(&mut self.scratch, sorted_len);
+                }
+                while i < sorted_len {
+                    cum += self.scratch[i].1;
+                    i += 1;
+                    if cum >= target {
+                        kept = i;
+                        kept_total = cum;
+                        break 'nucleus;
+                    }
+                }
+            }
+            self.scratch.truncate(kept);
+            sorted_len = sorted_len.min(kept);
+        }
+
+        // 6. inverse-CDF draw in descending order (the mass concentrates
+        // up front, so this rarely grows the sorted prefix further).
+        let r = self.rng.f32();
+        let target = r * kept_total;
+        let mut cum = 0.0f32;
+        let mut i = 0usize;
+        while i < self.scratch.len() {
+            if i >= sorted_len {
+                sorted_len = grow_sorted_prefix(&mut self.scratch, sorted_len);
+            }
+            while i < sorted_len {
+                cum += self.scratch[i].1;
+                if target < cum {
+                    return self.scratch[i].0;
+                }
+                i += 1;
+            }
+        }
+        // Numerical fallthrough (rounding left target >= cum at the end).
+        self.scratch[self.scratch.len() - 1].0
+    }
+}
+
+/// Grow the `cmp_desc`-sorted prefix of `v` by (at least) a doubling step:
+/// select the next block out of the unsorted tail, then sort just that
+/// block. Every element of the tail orders after the existing prefix
+/// (established by the previous selection), so prefix order stays global.
+fn grow_sorted_prefix(v: &mut [(u32, f32)], sorted_len: usize) -> usize {
+    let n = v.len();
+    if sorted_len >= n {
+        return sorted_len;
+    }
+    let new_len = n.min((sorted_len * 2).max(64));
+    let need = new_len - sorted_len;
+    let tail = &mut v[sorted_len..];
+    if need < tail.len() {
+        tail.select_nth_unstable_by(need - 1, cmp_desc);
+    }
+    tail[..need].sort_unstable_by(cmp_desc);
+    new_len
 }
 
 fn argmax(logits: &[f32]) -> u32 {

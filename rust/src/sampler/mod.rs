@@ -10,6 +10,13 @@
 //!   4. temperature
 //!   5. top-k / top-p / min-p truncation
 //!   6. sample (seeded PCG) or argmax when temperature == 0
+//!
+//! The decode hot path enters through `LogitsProcessor::sample_masked`,
+//! which fuses steps 3-6 into one pass over the logits row driven by the
+//! grammar's packed `TokenBitmask` (zero mask words skip 64 banned tokens
+//! at a time) and replaces the full descending sort with partial
+//! selection; all scratch lives in reusable per-processor buffers. See
+//! `logits` module docs for the determinism contract.
 
 mod logits;
 mod rng;
