@@ -2,12 +2,16 @@
 //! grammar engine is one of the WASM-compiled CPU subsystems).
 //!
 //! Measures, artifact-free on a synthetic vocabulary:
-//!   (1) the raw mask-computation cost (cold `token_mask_trie` walk with
-//!       the arena DFS) at several vocab sizes;
-//!   (2) the adaptive mask-cache hit cost — an `Rc<TokenBitmask>` clone,
+//!   (1) the one-shot AOT compile cost (`CompiledGrammar::compile`, the
+//!       XGrammar compile-time analog) and the vocabulary partition it
+//!       finds (context-independent fraction must be nonzero);
+//!   (2) compile-time amortization: the per-state saving of the residue
+//!       walk over the whole-vocabulary walk, and how many distinct
+//!       automaton states pay back the compile;
+//!   (3) the LRU mask-cache hit cost — an `Rc<TokenBitmask>` clone,
 //!       O(1) in vocab size — and the hit rate over a simulated decode;
 //! and, when artifacts are built:
-//!   (3) decode throughput with vs without a JSON-Schema constraint on
+//!   (4) decode throughput with vs without a JSON-Schema constraint on
 //!       the real engine.
 
 #[path = "common/mod.rs"]
@@ -16,7 +20,9 @@ mod common;
 use std::rc::Rc;
 use webllm::api::{ChatCompletionRequest, ResponseFormat};
 use webllm::coordinator::{EngineConfig, MLCEngine};
-use webllm::grammar::{schema_to_grammar, GrammarMatcher, MaskCache, VocabTrie};
+use webllm::grammar::{
+    parse_ebnf, schema_to_grammar, CompiledGrammar, Grammar, GrammarMatcher, MaskCache, VocabTrie,
+};
 use webllm::json::parse;
 use webllm::tokenizer::Tokenizer;
 
@@ -30,7 +36,10 @@ const SCHEMA: &str = r#"{
     "required": ["title", "tags", "score"]
 }"#;
 
+const EBNF: &str = r#"root ::= ("ab" | "cd")+ [0-9] [0-9]?"#;
+
 fn main() {
+    compile_bench();
     mask_microbench();
     if webllm::artifacts_dir().join("manifest.json").exists() {
         engine_bench();
@@ -39,7 +48,81 @@ fn main() {
     }
 }
 
-/// Mask computation + cache on a synthetic vocabulary (no artifacts).
+/// One-shot AOT compile cost + amortization against per-state savings.
+fn compile_bench() {
+    let vocab = if common::quick() { 32_768 } else { 131_072 };
+    let raw = common::synthetic_vocab(vocab);
+    let trie = Rc::new(VocabTrie::build(vocab, |i| raw[i as usize].as_slice()));
+
+    let grammars: Vec<(&str, Rc<Grammar>)> = vec![
+        ("json-schema", Rc::new(schema_to_grammar(&parse(SCHEMA).unwrap()).unwrap())),
+        ("ebnf", Rc::new(parse_ebnf(EBNF).unwrap())),
+    ];
+
+    common::print_header(&format!(
+        "grammar AOT compile, vocab {vocab} (XGrammar compile-time analog)"
+    ));
+    for (name, grammar) in grammars {
+        let reps = common::iters(3, 1);
+        let mut compiled: Option<CompiledGrammar> = None;
+        let r = common::time_it(&format!("compile {name}"), 1, reps, || {
+            compiled = Some(CompiledGrammar::compile(grammar.clone(), &trie, |i| {
+                raw[i as usize].as_slice()
+            }));
+        });
+        common::print_result(&r);
+        let c = compiled.expect("at least one iteration ran");
+        let ci = c.context_independent_fraction();
+        println!(
+            "  {name}: base_accept {} | base_reject {} | residue {} | \
+             context-independent {:.1}% | {} ({} states)",
+            c.base_accept().count_allowed(),
+            c.base_reject().count_allowed(),
+            c.residue().len(),
+            100.0 * ci,
+            if c.is_exact() { "exact" } else { "NFA approximation" },
+            c.states_explored(),
+        );
+        // Acceptance gate: the AOT pass must classify part of the vocab.
+        assert!(ci > 0.0, "{name}: context-independent fraction must be nonzero");
+
+        // Per-state amortization: cold whole-vocab walk vs residue walk
+        // at two representative states (start + mid-derivation).
+        let states: Vec<GrammarMatcher> = {
+            let start = GrammarMatcher::new(grammar.clone());
+            let mut mid = GrammarMatcher::new(grammar.clone());
+            let probe: &[u8] = if name == "ebnf" { b"ab" } else { b"{\"title\":\"we" };
+            assert!(mid.advance_bytes(probe), "probe prefix rejected");
+            vec![start, mid]
+        };
+        let iters = common::iters(20, 4);
+        for (label, state) in ["@start", "@mid"].iter().zip(&states) {
+            let rf = common::time_it(&format!("  {name} full walk {label}"), 1, iters, || {
+                let m = state.token_mask_trie(&trie);
+                std::hint::black_box(&m);
+            });
+            let rr = common::time_it(&format!("  {name} residue walk {label}"), 1, iters, || {
+                let m = c.mask_for(state);
+                std::hint::black_box(&m);
+            });
+            common::print_result(&rf);
+            common::print_result(&rr);
+            let saving_ms = rf.mean_ms - rr.mean_ms;
+            if saving_ms > 0.0 {
+                println!(
+                    "  -> saves {saving_ms:.3} ms/state; compile ({:.1} ms) amortized after \
+                     ~{:.0} distinct states",
+                    r.mean_ms,
+                    (r.mean_ms / saving_ms).ceil(),
+                );
+            } else {
+                println!("  -> no saving at this state (residue ~ whole vocab)");
+            }
+        }
+    }
+}
+
+/// Mask computation + LRU cache on a synthetic vocabulary (no artifacts).
 fn mask_microbench() {
     let grammar = Rc::new(schema_to_grammar(&parse(SCHEMA).unwrap()).unwrap());
     let vocab_sizes: &[usize] =
@@ -80,7 +163,10 @@ fn mask_microbench() {
 
         // Cache hit: must be O(1) — an Rc pointer clone, independent of
         // vocab size.
-        let mut cache = MaskCache::new(trie.clone(), 256);
+        let compiled = Rc::new(CompiledGrammar::compile(grammar.clone(), &trie, |i| {
+            raw[i as usize].as_slice()
+        }));
+        let mut cache = MaskCache::new(compiled, 256);
         let warm = cache.get_or_compute(&in_string);
         let again = cache.get_or_compute(&in_string);
         assert!(Rc::ptr_eq(&warm, &again), "hit must be a pointer clone");
@@ -93,7 +179,10 @@ fn mask_microbench() {
     let vocab = vocab_sizes[0];
     let raw = common::synthetic_vocab(vocab);
     let trie = Rc::new(VocabTrie::build(vocab, |i| raw[i as usize].as_slice()));
-    let mut cache = MaskCache::new(trie.clone(), 256);
+    let compiled = Rc::new(CompiledGrammar::compile(grammar.clone(), &trie, |i| {
+        raw[i as usize].as_slice()
+    }));
+    let mut cache = MaskCache::new(compiled, 256);
     let mut matcher = GrammarMatcher::new(grammar);
     let mut rng: u64 = 0x1234_5678;
     let steps = common::iters(400, 40);
@@ -112,11 +201,16 @@ fn mask_microbench() {
             break;
         }
     }
-    let (hits, misses) = cache.stats();
+    let c = cache.counters();
     println!(
-        "cached walk: {steps} steps in {:.1} ms | mask cache {hits} hits / {misses} misses ({:.0}% hit rate)",
+        "cached walk: {steps} steps in {:.1} ms | mask cache {} hits / {} misses / {} evictions \
+         ({:.0}% hit rate, {} resident)",
         t0.elapsed().as_secs_f64() * 1e3,
-        100.0 * hits as f64 / (hits + misses).max(1) as f64
+        c.hits,
+        c.misses,
+        c.evictions,
+        100.0 * c.hits as f64 / (c.hits + c.misses).max(1) as f64,
+        c.entries,
     );
 }
 
@@ -157,6 +251,10 @@ fn engine_bench() {
         free_tps / reps as f64,
         cons_tps / reps as f64,
     );
+    // The engine's AOT + cache counters for the constrained run.
+    if let Some(g) = engine.stats_json().get("grammar") {
+        println!("engine grammar stats: {}", webllm::json::to_string(g));
+    }
 
     // Real-tokenizer mask timing for reference against the synthetic one.
     let manifest = webllm::models::Manifest::load(&webllm::artifacts_dir()).expect("artifacts");

@@ -249,7 +249,7 @@ fn main() {
     )
     .unwrap();
     let grammar = Rc::new(schema_to_grammar(&schema).unwrap());
-    let mut matcher = GrammarMatcher::new(grammar);
+    let mut matcher = GrammarMatcher::new(grammar.clone());
     assert!(matcher.advance_bytes(b"{\"name\":\"we"), "grammar walk");
 
     let cold_iters = common::iters(30, 4);
@@ -258,7 +258,10 @@ fn main() {
         std::hint::black_box(&m);
     });
 
-    let mut cache = MaskCache::new(trie.clone(), 256);
+    let compiled = Rc::new(webllm::grammar::CompiledGrammar::compile(grammar, &trie, |i| {
+        raw[i as usize].as_slice()
+    }));
+    let mut cache = MaskCache::new(compiled, 256);
     let hit_ns = common::measure_cache_hit_ns(&mut cache, &matcher);
 
     // The old per-hit cost for comparison: cloning an unpacked vocab mask.

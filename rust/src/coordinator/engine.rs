@@ -17,7 +17,8 @@ use crate::api::{
 };
 use crate::browser::{BrowserConfig, BrowserEnv};
 use crate::grammar::{
-    parse_ebnf, schema_to_grammar, Grammar, GrammarMatcher, MaskCache, TokenBitmask, VocabTrie,
+    parse_ebnf, schema_to_grammar, CompiledGrammar, Grammar, GrammarMatcher, MaskCache,
+    TokenBitmask, VocabTrie,
 };
 use crate::json::Value;
 use crate::kvcache::KvCacheManager;
@@ -133,14 +134,37 @@ struct EngineModel {
     step: StepBuffers,
 }
 
+/// One compiled grammar shared across requests: the AOT vocabulary
+/// partition plus the LRU mask cache over its residue. Cloning is two
+/// `Rc` bumps — every sequence of every request using the same grammar
+/// (and each row of a multi-sequence request) shares both.
+#[derive(Clone)]
+struct GrammarEntry {
+    compiled: Rc<CompiledGrammar>,
+    cache: Rc<RefCell<MaskCache>>,
+}
+
+/// Distinct compiled grammars retained by the engine. Each entry pins a
+/// residue trie plus up to [`MASK_CACHE_CAPACITY`] vocab-sized masks, so
+/// the map is LRU-bounded: traffic with unbounded distinct schemas can't
+/// grow engine memory forever (in-flight sequences keep their evicted
+/// entry alive through their own `Rc`s).
+const MAX_COMPILED_GRAMMARS: usize = 32;
+
+/// Automaton states cached per grammar (see `grammar::MaskCache`).
+const MASK_CACHE_CAPACITY: usize = 256;
+
 /// The backend engine. See module docs.
 pub struct MLCEngine {
     tokenizer: Rc<Tokenizer>,
     trie: Rc<VocabTrie>,
     models: BTreeMap<String, EngineModel>,
     env: Option<Rc<BrowserEnv>>,
-    /// Shared grammar mask caches keyed by grammar identity.
-    grammar_caches: HashMap<String, Rc<RefCell<MaskCache>>>,
+    /// Compiled grammars + mask caches keyed by grammar identity, with a
+    /// recency stamp for LRU bounding (see [`MAX_COMPILED_GRAMMARS`]).
+    grammar_caches: HashMap<String, (GrammarEntry, u64)>,
+    /// Strictly increasing access clock for `grammar_caches` recency.
+    grammar_clock: u64,
     events: VecDeque<EngineEvent>,
     next_req: RequestId,
     next_seq: u64,
@@ -202,6 +226,7 @@ impl MLCEngine {
             models,
             env,
             grammar_caches: HashMap::new(),
+            grammar_clock: 0,
             events: VecDeque::new(),
             next_req: 1,
             next_seq: 1,
@@ -215,6 +240,10 @@ impl MLCEngine {
         &self.tokenizer
     }
 
+    /// The engine's accumulated counters. The `grammar_mask_*` fields
+    /// are *not* live here — the mask caches are their source of truth
+    /// while the engine runs; read [`MLCEngine::stats_json`] (which folds
+    /// the live cache counters into its snapshot) for those.
     pub fn stats(&self) -> &EngineStats {
         &self.stats
     }
@@ -365,12 +394,17 @@ impl MLCEngine {
         self.nonce = self.nonce.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
         let fallback_seed = self.nonce;
 
-        let matcher = self
-            .build_grammar(&p.req.response_format)
-            .expect("validated at submit");
-        let mask_cache = matcher
-            .as_ref()
-            .map(|_| self.grammar_cache_for(&p.req.response_format));
+        // Compile-at-admission: the grammar's AOT vocabulary partition is
+        // built (or fetched) here, once per distinct grammar — never on
+        // the per-token path. The matcher is per-sequence state; the
+        // `Rc<CompiledGrammar>` + mask cache are shared.
+        let (matcher, mask_cache) = match &p.req.response_format {
+            ResponseFormat::Text => (None, None),
+            rf => {
+                let entry = self.grammar_entry_for(rf);
+                (Some(entry.compiled.matcher()), Some(entry.cache))
+            }
+        };
 
         let (chunk, t_prefill, logits) = {
             let m = self.models.get_mut(name).unwrap();
@@ -701,10 +735,10 @@ impl MLCEngine {
         ));
     }
 
-    fn build_grammar(
-        &self,
-        rf: &ResponseFormat,
-    ) -> Result<Option<GrammarMatcher>, ApiError> {
+    /// Parse/compile the request's grammar *source* into the byte-level
+    /// CFG (submit calls this for synchronous validation; admission calls
+    /// it again and hands the result to the AOT compiler).
+    fn build_grammar(&self, rf: &ResponseFormat) -> Result<Option<Grammar>, ApiError> {
         let grammar: Option<Grammar> = match rf {
             ResponseFormat::Text => None,
             ResponseFormat::JsonObject => Some(
@@ -724,24 +758,81 @@ impl MLCEngine {
                 Some(g)
             }
         };
-        Ok(grammar.map(|g| GrammarMatcher::new(Rc::new(g))))
+        Ok(grammar)
     }
 
-    fn grammar_cache_for(&mut self, rf: &ResponseFormat) -> Rc<RefCell<MaskCache>> {
+    /// The shared `CompiledGrammar` + LRU mask cache for this response
+    /// format, compiling on first sight (a hit skips even the CFG
+    /// rebuild). On a miss the finished CFG from the EBNF/JSON-Schema
+    /// frontends is handed to `grammar::compiler` here, together with
+    /// the engine's vocabulary trie.
+    fn grammar_entry_for(&mut self, rf: &ResponseFormat) -> GrammarEntry {
         let key = match rf {
             ResponseFormat::Text => unreachable!("no cache for free text"),
             ResponseFormat::JsonObject => "json_object".to_string(),
             ResponseFormat::JsonSchema(s) => format!("schema:{}", crate::json::to_string(s)),
             ResponseFormat::Grammar(g) => format!("ebnf:{g}"),
         };
+        self.grammar_clock += 1;
+        if let Some((entry, used)) = self.grammar_caches.get_mut(&key) {
+            *used = self.grammar_clock;
+            return entry.clone();
+        }
+        let grammar = self
+            .build_grammar(rf)
+            .expect("validated at submit")
+            .expect("non-text response format");
+        let tokenizer = self.tokenizer.clone();
+        let compiled = Rc::new(CompiledGrammar::compile(Rc::new(grammar), &self.trie, |i| {
+            tokenizer.token_bytes(i)
+        }));
+        self.stats.grammar_compiles += 1;
+        self.stats.grammar_compile_s += compiled.compile_seconds();
+        self.stats.grammar_base_accept_tokens += compiled.base_accept().count_allowed() as u64;
+        self.stats.grammar_base_reject_tokens += compiled.base_reject().count_allowed() as u64;
+        self.stats.grammar_residue_tokens += compiled.residue().len() as u64;
+        let cache = Rc::new(RefCell::new(MaskCache::new(compiled.clone(), MASK_CACHE_CAPACITY)));
+        let entry = GrammarEntry { compiled, cache };
+        if self.grammar_caches.len() >= MAX_COMPILED_GRAMMARS {
+            // LRU-bound the grammar map itself; sequences still decoding
+            // against the victim keep it alive through their own Rcs.
+            let victim = self
+                .grammar_caches
+                .iter()
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| (*k).clone());
+            if let Some(victim) = victim {
+                if let Some((evicted, _)) = self.grammar_caches.remove(&victim) {
+                    // Absorb the victim's counters so stats_json stays
+                    // monotonic across evictions. (Hits scored afterwards
+                    // by in-flight sequences are the one loss.)
+                    let c = evicted.cache.borrow().counters();
+                    self.stats.grammar_mask_hits += c.hits;
+                    self.stats.grammar_mask_misses += c.misses;
+                    self.stats.grammar_mask_evictions += c.evictions;
+                }
+            }
+        }
         self.grammar_caches
-            .entry(key)
-            .or_insert_with(|| Rc::new(RefCell::new(MaskCache::new(self.trie.clone(), 256))))
-            .clone()
+            .insert(key, (entry.clone(), self.grammar_clock));
+        entry
     }
 
-    /// `runtime_stats_text` analog: a human-readable engine report.
+    /// `runtime_stats_text` analog: a human-readable engine report. The
+    /// scalar core (including the grammar compile/mask-cache counters)
+    /// comes from [`EngineStats::stats_json`]; the live mask-cache
+    /// hit/miss/eviction counters are folded into the snapshot here
+    /// because the caches — not the stats struct — are their source of
+    /// truth while the engine runs.
     pub fn stats_json(&self) -> Value {
+        let mut stats = self.stats.clone();
+        for (entry, _) in self.grammar_caches.values() {
+            let c = entry.cache.borrow().counters();
+            stats.grammar_mask_hits += c.hits;
+            stats.grammar_mask_misses += c.misses;
+            stats.grammar_mask_evictions += c.evictions;
+        }
+        let mut out = stats.stats_json();
         let mut models = Value::object();
         for (name, m) in &self.models {
             let (hits, misses) = m.kv.prefix_stats();
@@ -757,19 +848,7 @@ impl MLCEngine {
                 },
             );
         }
-        crate::obj! {
-            "prefill_tokens" => self.stats.prefill_tokens as i64,
-            "decode_tokens" => self.stats.decode_tokens as i64,
-            "prefill_tps" => self.stats.prefill_tps(),
-            "decode_tps" => self.stats.decode_tps(),
-            "prefill_padded_tokens" => self.stats.prefill_padded_tokens as i64,
-            "decode_steps" => self.stats.decode_steps as i64,
-            "decode_live_rows" => self.stats.decode_live_rows as i64,
-            "decode_padded_rows" => self.stats.decode_padded_rows as i64,
-            "decode_padding_ratio" => self.stats.decode_padding_ratio(),
-            "e2e_requests" => self.stats.e2e.len() as i64,
-            "e2e_mean_s" => self.stats.e2e.mean(),
-            "models" => models,
-        }
+        out.set("models", models);
+        out
     }
 }

@@ -59,6 +59,8 @@ impl TokenBitmask {
         self.len
     }
 
+    /// True when the mask covers zero token ids (`len == 0`), *not* when
+    /// all tokens are banned — see [`TokenBitmask::any_allowed`] for that.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -68,18 +70,21 @@ impl TokenBitmask {
         &self.words
     }
 
+    /// Whether token `i` is allowed.
     #[inline]
     pub fn is_allowed(&self, i: usize) -> bool {
         debug_assert!(i < self.len);
         self.words[i / 64] >> (i % 64) & 1 == 1
     }
 
+    /// Allow token `i` (set its bit).
     #[inline]
     pub fn allow(&mut self, i: usize) {
         debug_assert!(i < self.len);
         self.words[i / 64] |= 1u64 << (i % 64);
     }
 
+    /// Ban token `i` (clear its bit).
     #[inline]
     pub fn ban(&mut self, i: usize) {
         debug_assert!(i < self.len);
@@ -103,11 +108,53 @@ impl TokenBitmask {
         }
     }
 
+    /// Remove every token allowed by `other` (set difference, in place).
+    pub fn and_not_with(&mut self, other: &TokenBitmask) {
+        debug_assert_eq!(self.len, other.len);
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w &= !o;
+        }
+    }
+
+    /// The complement mask: every banned token becomes allowed and vice
+    /// versa. The tail invariant is preserved (bits past `len` stay zero).
+    pub fn complement(&self) -> Self {
+        let mut m = Self {
+            words: self.words.iter().map(|w| !w).collect(),
+            len: self.len,
+        };
+        m.clear_tail();
+        m
+    }
+
+    /// True when no token is allowed by both masks.
+    pub fn is_disjoint(&self, other: &TokenBitmask) -> bool {
+        debug_assert_eq!(self.len, other.len);
+        self.words.iter().zip(&other.words).all(|(w, o)| w & o == 0)
+    }
+
+    /// True when every token allowed here is also allowed by `other`.
+    pub fn is_subset_of(&self, other: &TokenBitmask) -> bool {
+        debug_assert_eq!(self.len, other.len);
+        self.words.iter().zip(&other.words).all(|(w, o)| w & !o == 0)
+    }
+
+    /// Popcount of the intersection, without materializing it.
+    pub fn count_and(&self, other: &TokenBitmask) -> usize {
+        debug_assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(w, o)| (w & o).count_ones() as usize)
+            .sum()
+    }
+
     /// Popcount over the whole mask.
     pub fn count_allowed(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
 
+    /// True when at least one token is allowed.
     pub fn any_allowed(&self) -> bool {
         self.words.iter().any(|&w| w != 0)
     }
@@ -237,6 +284,35 @@ mod tests {
         let mut or = a.clone();
         or.or_with(&b);
         assert_eq!(or.to_bools(), vec![true, true, true, false, true]);
+    }
+
+    #[test]
+    fn set_ops_respect_len_and_tail() {
+        for len in [5usize, 64, 70, 130] {
+            let mut a = TokenBitmask::new(len);
+            let mut b = TokenBitmask::new(len);
+            for i in 0..len {
+                if i % 2 == 0 {
+                    a.allow(i);
+                }
+                if i % 3 == 0 {
+                    b.allow(i);
+                }
+            }
+            let c = a.complement();
+            assert_eq!(c.count_allowed(), len - a.count_allowed(), "len {len}");
+            assert!(a.is_disjoint(&c));
+            let mut union = a.clone();
+            union.or_with(&c);
+            assert_eq!(union.count_allowed(), len, "complement partitions 0..len");
+            assert_eq!(a.count_and(&b), (0..len).filter(|i| i % 6 == 0).count());
+            let mut diff = a.clone();
+            diff.and_not_with(&b);
+            assert_eq!(diff.count_allowed(), a.count_allowed() - a.count_and(&b));
+            assert!(diff.is_subset_of(&a));
+            assert!(diff.is_disjoint(&b));
+            assert!(!a.is_subset_of(&b), "evens are not a subset of multiples of 3");
+        }
     }
 
     #[test]

@@ -1,0 +1,468 @@
+//! Ahead-of-time grammar × vocabulary analysis — the XGrammar
+//! *compile-time* half of the adaptive token-mask scheme (WebLLM §2.4).
+//!
+//! XGrammar's key observation is that for most grammars the bulk of the
+//! vocabulary can be classified once, ahead of time, independent of the
+//! matcher state: a token either can never appear (its bytes are not a
+//! path through the grammar's byte structure from *any* state) or is
+//! acceptable from *every* state. Only the context-*dependent* residue
+//! needs per-state runtime work. This module runs that classification
+//! once per compiled grammar and emits a [`CompiledGrammar`]:
+//!
+//!   * `base_accept` — tokens acceptable from every reachable automaton
+//!     state (exact, via bounded reachable-state enumeration);
+//!   * `base_reject` — tokens acceptable from no reachable state (exact
+//!     when enumeration completes, else via a sound position-NFA
+//!     over-approximation that works for unboundedly recursive grammars);
+//!   * `residue` — everything else, materialized as a pruned
+//!     [`VocabTrie`] so the runtime walk steps only residue prefixes.
+//!
+//! A [`super::MaskCache`] miss then costs `base_accept | residue-walk`
+//! instead of a whole-vocabulary walk; the compile-time sweep and the
+//! runtime walk share the same arena DFS ([`VocabTrie::walk`]).
+//!
+//! Soundness invariants (pinned token-for-token by the equivalence
+//! property test in `grammar::tests`): for every reachable state `S`,
+//! `base_accept ⊆ mask(S)` and `base_reject ∩ mask(S) = ∅`, hence
+//! `mask(S) == base_accept ∪ residue_walk(S)` exactly.
+
+use super::bitmask::TokenBitmask;
+use super::grammar::{ByteClass, Grammar, Sym};
+use super::matcher::{GrammarMatcher, VocabTrie};
+use std::collections::HashSet;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Bound on the exact reachable-state enumeration. Grammars whose byte
+/// automaton stays under this (finite-state in practice: no unbounded
+/// recursion) get *exact* base sets; the rest fall back to the sound
+/// position-NFA approximation with an empty `base_accept`.
+const MAX_EXACT_STATES: usize = 512;
+
+/// Work budget for the exact path's per-state mask sweep, as
+/// `states × vocab`. Compilation happens at admission (synchronously, on
+/// the engine thread); past this budget the per-state walks could stall
+/// a first request for seconds on a 100k+ vocabulary, so such grammars
+/// take the NFA partition instead.
+const MAX_EXACT_MASK_WORK: usize = 32 << 20;
+
+/// Result of [`reachable_states`]: the enumerated automaton states and
+/// whether the enumeration closed (visited everything) under the cap.
+pub(crate) struct ReachableStates {
+    pub states: Vec<GrammarMatcher>,
+    pub complete: bool,
+}
+
+/// Byte-level BFS over the automaton's state graph from the start state,
+/// deduplicated by state fingerprint, stopping (with `complete = false`)
+/// once more than `cap` states have been discovered.
+pub(crate) fn reachable_states(grammar: &Rc<Grammar>, cap: usize) -> ReachableStates {
+    let init = GrammarMatcher::new(grammar.clone());
+    let mut seen: HashSet<u64> = HashSet::new();
+    seen.insert(init.fingerprint());
+    let mut states = vec![init];
+    let mut complete = true;
+    let mut i = 0;
+    'bfs: while i < states.len() {
+        let first = states[i].first_byte_set();
+        for b in 0..=255u8 {
+            if !first[b as usize] {
+                continue;
+            }
+            let mut next = states[i].clone();
+            if !next.advance(b) {
+                continue; // unreachable: first_byte_set is exact
+            }
+            if seen.insert(next.fingerprint()) {
+                if states.len() >= cap {
+                    complete = false;
+                    break 'bfs;
+                }
+                states.push(next);
+            }
+        }
+        i += 1;
+    }
+    ReachableStates { states, complete }
+}
+
+/// A grammar compiled against a concrete vocabulary: the
+/// context-independent token partition plus the residue trie the runtime
+/// walks per state. Share one per grammar via `Rc` (the engine keys them
+/// by grammar identity so every sequence of every request reuses the
+/// same compilation).
+pub struct CompiledGrammar {
+    grammar: Rc<Grammar>,
+    vocab_size: usize,
+    base_accept: TokenBitmask,
+    base_reject: TokenBitmask,
+    residue: Vec<u32>,
+    /// Trie over the residue tokens only (full-vocab token ids, so masks
+    /// from it align with whole-vocabulary masks).
+    residue_trie: VocabTrie,
+    exact: bool,
+    states_explored: usize,
+    compile_seconds: f64,
+}
+
+impl CompiledGrammar {
+    /// Run the one-shot vocabulary partition for `grammar` over the
+    /// vocabulary described by `trie` + `token_bytes` (the same pair the
+    /// engine builds at load; `token_bytes` must agree with the trie).
+    ///
+    /// ```
+    /// use std::rc::Rc;
+    /// use webllm::grammar::{parse_ebnf, CompiledGrammar, MaskCache, VocabTrie};
+    ///
+    /// let grammar = Rc::new(parse_ebnf(r#"root ::= ("ab" | "cd")+"#).unwrap());
+    /// let vocab: Vec<&[u8]> = vec![b"a", b"ab", b"cd", b"zz", b"\n"];
+    /// let trie = VocabTrie::build(vocab.len(), |i| vocab[i as usize]);
+    /// let compiled = Rc::new(CompiledGrammar::compile(
+    ///     grammar, &trie, |i| vocab[i as usize],
+    /// ));
+    /// // "zz" and "\n" can never appear: context-independent rejects.
+    /// assert!(compiled.base_reject().is_allowed(3));
+    /// assert!(compiled.base_reject().is_allowed(4));
+    ///
+    /// let mut cache = MaskCache::new(compiled.clone(), 64);
+    /// let mask = cache.get_or_compute(&compiled.matcher());
+    /// assert!(mask.is_allowed(1) && !mask.is_allowed(3));
+    /// ```
+    pub fn compile<'a>(
+        grammar: Rc<Grammar>,
+        trie: &VocabTrie,
+        token_bytes: impl Fn(u32) -> &'a [u8],
+    ) -> CompiledGrammar {
+        let t0 = Instant::now();
+        let vocab_size = trie.vocab_size();
+        let reached = reachable_states(&grammar, MAX_EXACT_STATES);
+        let exact = reached.complete
+            && reached.states.len().saturating_mul(vocab_size) <= MAX_EXACT_MASK_WORK;
+        let (base_accept, base_reject) = if exact {
+            // Exact: intersect/union the true mask of every reachable
+            // state. Tokens in no mask can never appear; tokens in every
+            // mask are state-independent.
+            let mut accept = TokenBitmask::all_allowed(vocab_size);
+            let mut ever = TokenBitmask::new(vocab_size);
+            for state in &reached.states {
+                let mask = state.token_mask_trie(trie);
+                accept.and_with(&mask);
+                ever.or_with(&mask);
+            }
+            (accept, ever.complement())
+        } else {
+            // Either recursion made the state space unbounded, or the
+            // per-state sweep would blow the admission-time budget:
+            // approximate with the position NFA (sound: it
+            // over-approximates what any state could consume, so its
+            // complement is always-rejected), and give up on base_accept
+            // (∅ is trivially sound).
+            let nfa = PositionNfa::build(&grammar);
+            (TokenBitmask::new(vocab_size), nfa.sweep(trie).complement())
+        };
+
+        let mut residue_set = base_accept.clone();
+        residue_set.or_with(&base_reject);
+        let residue_set = residue_set.complement();
+        let residue: Vec<u32> = residue_set.iter_allowed().map(|i| i as u32).collect();
+        let residue_trie = VocabTrie::build(vocab_size, |i| {
+            if residue_set.is_allowed(i as usize) {
+                token_bytes(i)
+            } else {
+                &[]
+            }
+        });
+
+        CompiledGrammar {
+            grammar,
+            vocab_size,
+            base_accept,
+            base_reject,
+            residue,
+            residue_trie,
+            exact,
+            states_explored: reached.states.len(),
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// The grammar this compilation is for.
+    pub fn grammar(&self) -> &Rc<Grammar> {
+        &self.grammar
+    }
+
+    /// A fresh matcher at this grammar's start state.
+    pub fn matcher(&self) -> GrammarMatcher {
+        GrammarMatcher::new(self.grammar.clone())
+    }
+
+    /// Number of token ids the compilation covers.
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    /// Tokens acceptable from **every** reachable state (empty when the
+    /// state enumeration hit its bound).
+    pub fn base_accept(&self) -> &TokenBitmask {
+        &self.base_accept
+    }
+
+    /// Tokens acceptable from **no** reachable state (includes
+    /// empty-byte specials, which are never grammar-eligible).
+    pub fn base_reject(&self) -> &TokenBitmask {
+        &self.base_reject
+    }
+
+    /// The context-dependent token ids (ascending): everything in
+    /// neither base set; the only tokens the per-state runtime walk
+    /// touches.
+    pub fn residue(&self) -> &[u32] {
+        &self.residue
+    }
+
+    /// The pruned trie over [`CompiledGrammar::residue`].
+    pub fn residue_trie(&self) -> &VocabTrie {
+        &self.residue_trie
+    }
+
+    /// Whether the base sets are exact (state enumeration completed
+    /// within the state and mask-work budgets) rather than the sound NFA
+    /// approximation.
+    pub fn is_exact(&self) -> bool {
+        self.exact
+    }
+
+    /// Automaton states visited by the compile-time enumeration.
+    pub fn states_explored(&self) -> usize {
+        self.states_explored
+    }
+
+    /// Wall-clock cost of [`CompiledGrammar::compile`] (the one-shot cost
+    /// the per-state savings amortize; reported by `benches/grammar.rs`).
+    pub fn compile_seconds(&self) -> f64 {
+        self.compile_seconds
+    }
+
+    /// Fraction of the vocabulary classified ahead of time
+    /// (`(|base_accept| + |base_reject|) / vocab`).
+    pub fn context_independent_fraction(&self) -> f64 {
+        if self.vocab_size == 0 {
+            return 0.0;
+        }
+        let ci = self.base_accept.count_allowed() + self.base_reject.count_allowed();
+        ci as f64 / self.vocab_size as f64
+    }
+
+    /// The full vocabulary mask for `matcher`'s current state:
+    /// `base_accept | residue-walk` — equal, token for token, to a
+    /// whole-vocabulary [`GrammarMatcher::token_mask_trie`] walk, but
+    /// only stepping the context-dependent trie.
+    pub fn mask_for(&self, matcher: &GrammarMatcher) -> TokenBitmask {
+        let mut mask = matcher.token_mask_trie(&self.residue_trie);
+        mask.or_with(&self.base_accept);
+        mask
+    }
+}
+
+/// Finite over-approximation of the pushdown automaton, used when exact
+/// state enumeration is impossible (unbounded recursion).
+///
+/// Nodes are the grammar's *positions* — every `(rule, alt, dot)` whose
+/// dot sits on a byte class — connected by "consume the class's byte,
+/// then epsilon-close" edges where rule *returns* are approximated
+/// call-site-insensitively: a completed rule may continue at any
+/// occurrence of a reference to it. Any byte string a real state can
+/// consume traces a path here (the real return discipline is a subset of
+/// the approximated one), so a token whose bytes survive no path from
+/// the reachable-position set is rejected in every state.
+struct PositionNfa {
+    /// 256-bit byte-match table per position.
+    byte_match: Vec<[u64; 4]>,
+    /// Flattened successor bitsets, `words` u64s per position.
+    succ: Vec<u64>,
+    /// Whether the position's post-byte closure can complete the root
+    /// derivation (the analog of the matcher's empty-stack
+    /// configuration): the consumed prefix may be a full derivation even
+    /// with no successor positions.
+    can_complete: Vec<bool>,
+    /// Words per position bitset.
+    words: usize,
+    /// All reachable positions (the conservative "any stack top" start).
+    start: Vec<u64>,
+}
+
+impl PositionNfa {
+    fn build(g: &Grammar) -> Self {
+        let nrules = g.rules.len();
+        // Node numbering: one node per (rule, alt, dot) with dot in
+        // 0..=len (the "after dot" configurations, contiguous per alt so
+        // a byte node's successor configuration is `node + 1`), then a
+        // start node and an end node per rule.
+        let mut after_base: Vec<Vec<usize>> = Vec::with_capacity(nrules);
+        let mut next_id = 0usize;
+        for rule in &g.rules {
+            let mut bases = Vec::with_capacity(rule.alts.len());
+            for alt in &rule.alts {
+                bases.push(next_id);
+                next_id += alt.len() + 1;
+            }
+            after_base.push(bases);
+        }
+        let total_after = next_id;
+        let start_node = |r: usize| total_after + r;
+        let end_node = |r: usize| total_after + nrules + r;
+        let n_nodes = total_after + 2 * nrules;
+
+        let mut eps: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
+        // Byte class at byte nodes (None for pure-epsilon nodes).
+        let mut class_at: Vec<Option<usize>> = vec![None; n_nodes];
+        let mut classes: Vec<&ByteClass> = Vec::new();
+        for (r, rule) in g.rules.iter().enumerate() {
+            for (a, alt) in rule.alts.iter().enumerate() {
+                let base = after_base[r][a];
+                eps[start_node(r)].push(base as u32);
+                for (d, sym) in alt.iter().enumerate() {
+                    match sym {
+                        Sym::Class(c) => {
+                            class_at[base + d] = Some(classes.len());
+                            classes.push(c);
+                        }
+                        Sym::Ref(r2) => {
+                            eps[base + d].push(start_node(*r2) as u32);
+                            // Call-site-insensitive return edge.
+                            eps[end_node(*r2)].push((base + d + 1) as u32);
+                        }
+                    }
+                }
+                eps[base + alt.len()].push(end_node(r) as u32);
+            }
+        }
+
+        // Reachability from the root's start node; byte nodes continue
+        // into their dot+1 node (consuming their byte).
+        let mut reach = vec![false; n_nodes];
+        reach[start_node(0)] = true;
+        let mut work: Vec<usize> = vec![start_node(0)];
+        while let Some(n) = work.pop() {
+            if class_at[n].is_some() && !reach[n + 1] {
+                reach[n + 1] = true;
+                work.push(n + 1);
+            }
+            for &m in &eps[n] {
+                let m = m as usize;
+                if !reach[m] {
+                    reach[m] = true;
+                    work.push(m);
+                }
+            }
+        }
+
+        // Index the reachable byte nodes as positions.
+        let mut pos_of_node: Vec<u32> = vec![u32::MAX; n_nodes];
+        let mut positions: Vec<usize> = Vec::new();
+        for n in 0..n_nodes {
+            if reach[n] && class_at[n].is_some() {
+                pos_of_node[n] = positions.len() as u32;
+                positions.push(n);
+            }
+        }
+        let np = positions.len();
+        let words = np.div_ceil(64);
+
+        let mut byte_match = vec![[0u64; 4]; np];
+        for (i, &n) in positions.iter().enumerate() {
+            let class = classes[class_at[n].unwrap()];
+            for b in 0..=255u8 {
+                if class.matches(b) {
+                    byte_match[i][(b >> 6) as usize] |= 1u64 << (b & 63);
+                }
+            }
+        }
+
+        // Per position: epsilon-closure from `node + 1`, collecting the
+        // byte nodes it can stop at and whether it can complete the root.
+        let mut succ = vec![0u64; np * words];
+        let mut can_complete = vec![false; np];
+        let mut seen = vec![false; n_nodes];
+        for (i, &n) in positions.iter().enumerate() {
+            seen.fill(false);
+            seen[n + 1] = true;
+            let mut work: Vec<usize> = vec![n + 1];
+            while let Some(m) = work.pop() {
+                if m == end_node(0) {
+                    can_complete[i] = true;
+                }
+                if class_at[m].is_some() {
+                    // A byte node needs its byte before continuing: it is
+                    // a successor position, not an epsilon waypoint.
+                    let p = pos_of_node[m] as usize;
+                    succ[i * words + (p >> 6)] |= 1u64 << (p & 63);
+                    continue;
+                }
+                for &k in &eps[m] {
+                    let k = k as usize;
+                    if !seen[k] {
+                        seen[k] = true;
+                        work.push(k);
+                    }
+                }
+            }
+        }
+
+        let mut start = vec![0u64; words];
+        for i in 0..np {
+            start[i >> 6] |= 1u64 << (i & 63);
+        }
+
+        PositionNfa { byte_match, succ, can_complete, words, start }
+    }
+
+    /// Sweep the vocabulary trie once: a token survives iff the NFA can
+    /// consume all its bytes from *some* position path — the complement
+    /// is always-rejected. Shares the arena DFS with the runtime walk;
+    /// the per-branch state is one position bitset instead of a stack
+    /// set.
+    fn sweep(&self, trie: &VocabTrie) -> TokenBitmask {
+        let mut maybe = TokenBitmask::new(trie.vocab_size());
+        let words = self.words;
+        trie.walk(
+            vec![self.start.clone()],
+            |sets: &[Vec<u64>], byte, out: &mut Vec<Vec<u64>>| {
+                let mut next = vec![0u64; words];
+                let mut completes = false;
+                let wi = (byte >> 6) as usize;
+                let wb = 1u64 << (byte & 63);
+                for set in sets {
+                    for (widx, &word) in set.iter().enumerate() {
+                        let mut word = word;
+                        while word != 0 {
+                            let bit = word.trailing_zeros() as usize;
+                            word &= word - 1;
+                            let p = (widx << 6) + bit;
+                            if self.byte_match[p][wi] & wb != 0 {
+                                let row = &self.succ[p * words..(p + 1) * words];
+                                for (n, &r) in next.iter_mut().zip(row) {
+                                    *n |= r;
+                                }
+                                completes |= self.can_complete[p];
+                            }
+                        }
+                    }
+                }
+                // Alive if any successor position remains — or the byte
+                // can complete the root derivation (the matcher's
+                // accepting empty-stack configuration), which still
+                // legitimizes tokens ending exactly here.
+                if completes || next.iter().any(|&w| w != 0) {
+                    out.push(next);
+                }
+            },
+            |tokens| {
+                for &tok in tokens {
+                    maybe.allow(tok as usize);
+                }
+            },
+        );
+        maybe
+    }
+}

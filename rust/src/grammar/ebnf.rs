@@ -17,6 +17,38 @@
 use super::grammar::{ByteClass, Grammar, GrammarError, Sym};
 use std::collections::HashMap;
 
+/// Parse GBNF-style EBNF text into a byte-level [`Grammar`] (rule 0 is
+/// always `root`, which must be defined).
+///
+/// # Examples
+///
+/// A grammar whose language is `yes`, `no`, or two digits:
+///
+/// ```
+/// use std::rc::Rc;
+/// use webllm::grammar::{parse_ebnf, GrammarMatcher};
+///
+/// let grammar = parse_ebnf(
+///     "root  ::= \"yes\" | \"no\" | digit digit  # comment\n\
+///      digit ::= [0-9]",
+/// ).unwrap();
+/// let g = Rc::new(grammar);
+///
+/// let mut m = GrammarMatcher::new(g.clone());
+/// assert!(m.advance_bytes(b"42") && m.is_accepting());
+///
+/// let mut m = GrammarMatcher::new(g);
+/// assert!(!m.advance_bytes(b"maybe"), "rejected mid-prefix");
+/// ```
+///
+/// Errors are structured ([`GrammarError`]):
+///
+/// ```
+/// use webllm::grammar::{parse_ebnf, GrammarError};
+///
+/// assert!(matches!(parse_ebnf("foo ::= \"x\""), Err(GrammarError::NoRoot)));
+/// assert!(matches!(parse_ebnf("root ::= bar"), Err(GrammarError::UnknownRule(_))));
+/// ```
 pub fn parse_ebnf(text: &str) -> Result<Grammar, GrammarError> {
     // Pass 1: collect rule names in order (root must become rule 0).
     let mut defs: Vec<(String, &str)> = Vec::new();

@@ -15,10 +15,12 @@ pub struct ByteClass {
 }
 
 impl ByteClass {
+    /// The singleton class matching exactly `b`.
     pub fn byte(b: u8) -> Self {
         Self { ranges: vec![(b, b)], negated: false }
     }
 
+    /// Whether `b` is in the class (negation applied).
     pub fn matches(&self, b: u8) -> bool {
         let inside = self.ranges.iter().any(|&(lo, hi)| lo <= b && b <= hi);
         inside != self.negated
@@ -41,11 +43,17 @@ pub struct Rule {
     pub alts: Vec<Vec<Sym>>,
 }
 
+/// Errors from the grammar frontends and validation.
 #[derive(Debug, Clone, PartialEq)]
 pub enum GrammarError {
+    /// A rule reference names a rule that is not defined.
     UnknownRule(String),
+    /// The grammar defines no `root` rule (or no rules at all).
     NoRoot,
+    /// EBNF syntax error (message includes rule and byte offset).
     Parse(String),
+    /// JSON-Schema compilation error (unsupported or contradictory
+    /// keywords).
     Schema(String),
 }
 
@@ -69,6 +77,7 @@ pub struct Grammar {
 }
 
 impl Grammar {
+    /// An empty grammar (add a `root` rule before use).
     pub fn new() -> Self {
         Self::default()
     }
@@ -79,6 +88,7 @@ impl Grammar {
         self.rules.len() - 1
     }
 
+    /// Index of the rule named `name`, if any.
     pub fn rule_index(&self, name: &str) -> Option<usize> {
         self.rules.iter().position(|r| r.name == name)
     }

@@ -14,6 +14,33 @@ use super::grammar::{ByteClass, Grammar, GrammarError, Sym};
 use crate::json::Value;
 use std::collections::HashMap;
 
+/// Compile a JSON Schema (as a parsed [`Value`]) into a byte-level
+/// [`Grammar`] matching its *compact* JSON serialization.
+///
+/// # Examples
+///
+/// ```
+/// use std::rc::Rc;
+/// use webllm::grammar::{schema_to_grammar, GrammarMatcher};
+/// use webllm::json::parse;
+///
+/// let schema = parse(r#"{
+///     "type": "object",
+///     "properties": {"ok": {"type": "boolean"}},
+///     "required": ["ok"]
+/// }"#).unwrap();
+/// let g = Rc::new(schema_to_grammar(&schema).unwrap());
+///
+/// let mut m = GrammarMatcher::new(g.clone());
+/// assert!(m.advance_bytes(br#"{"ok":true}"#) && m.is_accepting());
+///
+/// // The canon is compact: whitespace is not part of the language.
+/// let mut m = GrammarMatcher::new(g);
+/// assert!(!m.advance_bytes(br#"{ "ok": true }"#));
+/// ```
+///
+/// The empty schema (`{}`) matches any JSON value; unsupported keywords
+/// produce [`GrammarError::Schema`](super::GrammarError::Schema).
 pub fn schema_to_grammar(schema: &Value) -> Result<Grammar, GrammarError> {
     let mut c = Compiler {
         g: Grammar::new(),

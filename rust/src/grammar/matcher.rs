@@ -7,15 +7,21 @@
 //! unwound (the root derivation is complete).
 //!
 //! Token masking walks the tokenizer vocabulary and simulates each
-//! token's bytes (llama.cpp-style), with two XGrammar-inspired
+//! token's bytes (llama.cpp-style), with three XGrammar-inspired
 //! accelerations:
+//!   * a per-grammar ahead-of-time vocabulary partition
+//!     ([`super::CompiledGrammar`]): context-independent tokens are
+//!     resolved at compile time, so the runtime walk only touches the
+//!     context-dependent residue;
 //!   * an adaptive mask cache keyed by the state fingerprint — decode
 //!     revisits the same automaton states constantly (e.g. "inside a JSON
-//!     string"), so masks are computed once per distinct state;
+//!     string"), so residue masks are computed once per distinct state
+//!     and evicted LRU-style under a capacity bound;
 //!   * a per-state first-byte filter: tokens whose first byte can't be
 //!     consumed are rejected without simulating the rest.
 
 use super::bitmask::TokenBitmask;
+use super::compiler::CompiledGrammar;
 use super::grammar::{Grammar, Sym};
 use std::collections::HashMap;
 use std::collections::hash_map::DefaultHasher;
@@ -33,6 +39,11 @@ struct Frame {
 type Stack = Vec<Frame>;
 
 /// Matcher over a compiled grammar.
+///
+/// Cloning is cheap-ish (the grammar is shared behind an `Rc`; only the
+/// live stack-set is copied) and is how the AOT compiler enumerates
+/// reachable automaton states.
+#[derive(Clone)]
 pub struct GrammarMatcher {
     grammar: Rc<Grammar>,
     stacks: Vec<Stack>,
@@ -41,6 +52,7 @@ pub struct GrammarMatcher {
 }
 
 impl GrammarMatcher {
+    /// Start a matcher at the grammar's root, epsilon-closed.
     pub fn new(grammar: Rc<Grammar>) -> Self {
         let mut m = Self { grammar, stacks: Vec::new(), consumed: 0 };
         // Seed: one stack per root alternative, then epsilon-close.
@@ -52,6 +64,7 @@ impl GrammarMatcher {
         m
     }
 
+    /// Number of bytes accepted so far.
     pub fn consumed(&self) -> usize {
         self.consumed
     }
@@ -137,10 +150,7 @@ impl GrammarMatcher {
         token_bytes: impl Fn(u32) -> &'a [u8],
     ) -> TokenBitmask {
         // First-byte filter: which bytes are consumable right now?
-        let mut first = [false; 256];
-        for stack in &self.stacks {
-            self.collect_first_bytes(stack, &mut first);
-        }
+        let first = self.first_byte_set();
         let mut mask = TokenBitmask::new(vocab_size);
         for i in 0..vocab_size {
             let bytes = token_bytes(i as u32);
@@ -155,6 +165,18 @@ impl GrammarMatcher {
             }
         }
         mask
+    }
+
+    /// The exact set of bytes consumable from the current state. Stack
+    /// tops are epsilon-closed (each sits on a byte class), so `advance`
+    /// succeeds for a byte iff its entry here is `true`. The compile-time
+    /// state enumeration uses this to drive its byte-level BFS.
+    pub(crate) fn first_byte_set(&self) -> [bool; 256] {
+        let mut first = [false; 256];
+        for stack in &self.stacks {
+            self.collect_first_bytes(stack, &mut first);
+        }
+        first
     }
 
     // -- internals ----------------------------------------------------------
@@ -338,17 +360,73 @@ impl VocabTrie {
         t
     }
 
+    /// Number of token ids the trie was built over (including skipped
+    /// empty-byte tokens; masks produced from this trie use this length).
     pub fn vocab_size(&self) -> usize {
         self.vocab_size
     }
 
+    /// Number of arena nodes (distinct byte prefixes, plus the root).
     pub fn node_count(&self) -> usize {
         self.children.len()
+    }
+
+    /// Shared arena DFS over the trie, generic over the per-branch
+    /// simulation state `S`.
+    ///
+    /// Every live state is kept in one shared arena `Vec` — a child
+    /// node's states are appended on descent and truncated away on
+    /// backtrack — instead of cloning a fresh `Vec<S>` per trie node, so
+    /// the walk's only steady-state allocations are whatever `step`
+    /// itself produces. `step` receives the parent's states and one edge
+    /// byte and pushes the surviving successor states; when it pushes
+    /// nothing the whole subtree is dead and is skipped. `grant` receives
+    /// the token ids ending at each node reached alive.
+    ///
+    /// Two callers share this walk (the XGrammar compile/runtime split):
+    /// the runtime residue walk ([`GrammarMatcher::token_mask_trie`],
+    /// `S` = stack set) and the compiler's ahead-of-time vocabulary
+    /// sweep (`S` = position bitset).
+    pub fn walk<S>(
+        &self,
+        init: Vec<S>,
+        mut step: impl FnMut(&[S], u8, &mut Vec<S>),
+        mut grant: impl FnMut(&[u32]),
+    ) {
+        let mut arena: Vec<S> = init;
+        let mut scratch: Vec<S> = Vec::new();
+        let mut dfs = vec![DfsFrame { node: 0, start: 0, end: arena.len(), child: 0 }];
+        while let Some(top) = dfs.last_mut() {
+            let node = top.node as usize;
+            if top.child >= self.children[node].len() {
+                // Backtrack: drop this node's states (and nothing else —
+                // descendants were truncated when they popped).
+                let start = top.start;
+                dfs.pop();
+                arena.truncate(start);
+                continue;
+            }
+            let (byte, child) = self.children[node][top.child];
+            top.child += 1;
+            let (s, e) = (top.start, top.end);
+
+            scratch.clear();
+            step(&arena[s..e], byte, &mut scratch);
+            if scratch.is_empty() {
+                continue; // whole subtree dead
+            }
+            grant(&self.terminal[child as usize]);
+            if !self.children[child as usize].is_empty() {
+                let start = arena.len();
+                arena.append(&mut scratch);
+                dfs.push(DfsFrame { node: child, start, end: arena.len(), child: 0 });
+            }
+        }
     }
 }
 
 /// One in-flight node of the trie DFS: `arena[start..end]` holds the
-/// automaton stack-set after consuming the byte path to `node`; `child` is
+/// simulation states after consuming the byte path to `node`; `child` is
 /// the next outgoing edge to try.
 struct DfsFrame {
     node: u32,
@@ -359,90 +437,147 @@ struct DfsFrame {
 
 impl GrammarMatcher {
     /// Trie-accelerated mask: one DFS over the vocabulary trie, stepping
-    /// the stack-set per *distinct byte prefix* instead of per token.
+    /// the stack-set per *distinct byte prefix* instead of per token (the
+    /// arena mechanics live in [`VocabTrie::walk`]).
     ///
-    /// The DFS keeps every live stack-set in one shared arena `Vec` —
-    /// child sets are appended on descent and truncated away on backtrack
-    /// — instead of cloning a fresh `Vec<Stack>` per trie node, so the
-    /// walk's only steady-state allocations are the stacks the grammar
-    /// stepping itself produces.
+    /// Pass the full vocabulary trie for a from-scratch mask, or a
+    /// [`super::CompiledGrammar`]'s residue trie to walk only the
+    /// context-dependent tokens (the mask is zero outside the trie's
+    /// tokens either way).
     pub fn token_mask_trie(&self, trie: &VocabTrie) -> TokenBitmask {
         let mut mask = TokenBitmask::new(trie.vocab_size);
-        let mut arena: Vec<Stack> = self.stacks.clone();
-        let mut scratch: Vec<Stack> = Vec::new();
-        let mut dfs = vec![DfsFrame { node: 0, start: 0, end: arena.len(), child: 0 }];
-        while let Some(top) = dfs.last_mut() {
-            let node = top.node as usize;
-            if top.child >= trie.children[node].len() {
-                // Backtrack: drop this node's stack-set (and nothing else —
-                // descendants were truncated when they popped).
-                let start = top.start;
-                dfs.pop();
-                arena.truncate(start);
-                continue;
-            }
-            let (byte, child) = trie.children[node][top.child];
-            top.child += 1;
-            let (s, e) = (top.start, top.end);
-
-            scratch.clear();
-            for i in s..e {
-                step_byte_into(&self.grammar, &arena[i], byte, &mut scratch);
-            }
-            if scratch.is_empty() {
-                continue; // whole subtree dead
-            }
-            dedup_stacks(&mut scratch);
-            for &tok in &trie.terminal[child as usize] {
-                mask.allow(tok as usize);
-            }
-            if !trie.children[child as usize].is_empty() {
-                let start = arena.len();
-                arena.append(&mut scratch);
-                dfs.push(DfsFrame { node: child, start, end: arena.len(), child: 0 });
-            }
-        }
+        let grammar = self.grammar.clone();
+        trie.walk(
+            self.stacks.clone(),
+            |stacks, byte, out| {
+                for stack in stacks {
+                    step_byte_into(&grammar, stack, byte, out);
+                }
+                dedup_stacks(out);
+            },
+            |tokens| {
+                for &tok in tokens {
+                    mask.allow(tok as usize);
+                }
+            },
+        );
         mask
     }
 }
 
-/// Adaptive token-mask cache: state fingerprint -> packed mask.
+/// Counter snapshot of a [`MaskCache`] (surfaced through the engine's
+/// `stats_json`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MaskCacheCounters {
+    /// Lookups answered by a cached mask (an `Rc` pointer clone).
+    pub hits: u64,
+    /// Lookups that paid a residue trie walk.
+    pub misses: u64,
+    /// Entries evicted by the LRU capacity bound.
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+    /// Capacity bound.
+    pub capacity: usize,
+}
+
+/// Adaptive token-mask cache: state fingerprint -> packed mask, LRU-bounded.
 ///
-/// XGrammar precomputes "context-independent token" masks per grammar
-/// position at compile time; here the equivalent saving comes from
-/// caching at runtime — the first visit to an automaton state pays the
-/// full vocabulary walk, subsequent visits are a hash lookup returning an
-/// `Rc<TokenBitmask>` clone: O(1), never an O(vocab) copy.
+/// Two layers of the XGrammar adaptive-mask scheme meet here:
+///   * **compile time** — the [`CompiledGrammar`] already classified the
+///     context-independent vocabulary, so a miss only walks the residue
+///     trie and ORs the precomputed base-accept mask;
+///   * **runtime** — decode revisits the same automaton states
+///     constantly, so each distinct state pays that residue walk once;
+///     subsequent visits are a hash lookup returning an
+///     `Rc<TokenBitmask>` clone: O(1), never an O(vocab) copy.
+///
+/// Eviction is a capacity-bounded LRU keyed by the state fingerprint:
+/// when a miss would exceed `capacity`, the single least-recently-used
+/// entry is dropped (deterministically — recency ties are impossible
+/// because the internal clock is strictly increasing). Hot states (e.g.
+/// "inside a JSON string") therefore survive grammars whose state count
+/// exceeds the capacity, where the previous full-flush policy threw the
+/// whole working set away.
 pub struct MaskCache {
-    trie: Rc<VocabTrie>,
-    cache: HashMap<u64, Rc<TokenBitmask>>,
+    compiled: Rc<CompiledGrammar>,
+    entries: HashMap<u64, CacheEntry>,
+    capacity: usize,
+    /// Strictly increasing access clock (recency stamp).
+    clock: u64,
     hits: u64,
     misses: u64,
-    capacity: usize,
+    evictions: u64,
+}
+
+struct CacheEntry {
+    mask: Rc<TokenBitmask>,
+    last_used: u64,
 }
 
 impl MaskCache {
-    pub fn new(trie: Rc<VocabTrie>, capacity: usize) -> Self {
-        Self { trie, cache: HashMap::new(), hits: 0, misses: 0, capacity }
+    /// A cache over `compiled`'s residue masks holding at most `capacity`
+    /// distinct automaton states (at least one).
+    pub fn new(compiled: Rc<CompiledGrammar>, capacity: usize) -> Self {
+        Self {
+            compiled,
+            entries: HashMap::new(),
+            capacity: capacity.max(1),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
     }
 
+    /// The compiled grammar this cache computes masks for.
+    pub fn compiled(&self) -> &Rc<CompiledGrammar> {
+        &self.compiled
+    }
+
+    /// The mask for `matcher`'s current state: a pointer clone on a hit,
+    /// `base_accept | residue-walk` on a miss (cached afterwards, evicting
+    /// the least-recently-used state if at capacity).
     pub fn get_or_compute(&mut self, matcher: &GrammarMatcher) -> Rc<TokenBitmask> {
+        self.clock += 1;
         let key = matcher.fingerprint();
-        if let Some(mask) = self.cache.get(&key) {
+        if let Some(entry) = self.entries.get_mut(&key) {
+            entry.last_used = self.clock;
             self.hits += 1;
-            return mask.clone();
+            return entry.mask.clone();
         }
         self.misses += 1;
-        let mask = Rc::new(matcher.token_mask_trie(&self.trie));
-        if self.cache.len() >= self.capacity {
-            // Simple full-flush eviction; states recur quickly.
-            self.cache.clear();
+        let mask = Rc::new(self.compiled.mask_for(matcher));
+        if self.entries.len() >= self.capacity {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(k, e)| (e.last_used, **k))
+                .map(|(k, _)| *k);
+            if let Some(victim) = victim {
+                self.entries.remove(&victim);
+                self.evictions += 1;
+            }
         }
-        self.cache.insert(key, mask.clone());
+        self.entries
+            .insert(key, CacheEntry { mask: mask.clone(), last_used: self.clock });
         mask
     }
 
+    /// `(hits, misses)` — kept for existing callers; see
+    /// [`MaskCache::counters`] for the full set.
     pub fn stats(&self) -> (u64, u64) {
         (self.hits, self.misses)
+    }
+
+    /// Snapshot of all counters.
+    pub fn counters(&self) -> MaskCacheCounters {
+        MaskCacheCounters {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            entries: self.entries.len(),
+            capacity: self.capacity,
+        }
     }
 }

@@ -2,18 +2,25 @@
 //! §2.1/§2.2 — here in native Rust).
 //!
 //! Pipeline:
-//!   * a grammar arrives as GBNF-style EBNF text (`ebnf`) or is compiled
-//!     from a JSON Schema (`json_schema`), producing the byte-level CFG
-//!     IR in `grammar`;
+//!   * a grammar arrives as GBNF-style EBNF text ([`parse_ebnf`]) or is
+//!     compiled from a JSON Schema ([`schema_to_grammar`]), producing the
+//!     byte-level CFG IR in `grammar`;
+//!   * `compiler` runs once per (grammar, vocabulary): it walks the
+//!     vocabulary trie against the grammar's byte structure and
+//!     partitions tokens into context-*independent* sets — always
+//!     accepted / always rejected regardless of matcher state, XGrammar's
+//!     compile-time adaptive-mask analysis — plus a context-dependent
+//!     residue, emitting a [`CompiledGrammar`];
 //!   * `matcher` runs the grammar as a pushdown automaton over a *set* of
 //!     stacks (nondeterminism), advancing one byte at a time;
-//!   * per decode step the matcher produces a packed vocabulary bitmask
-//!     ([`TokenBitmask`], one `u64` word per 64 tokens) for the sampler
-//!     (`GrammarMatcher::token_mask`), with an adaptive mask cache keyed
-//!     by the automaton state fingerprint — the XGrammar
-//!     "context-independent tokens" precomputation, adapted. Cache hits
-//!     hand out `Rc<TokenBitmask>` clones, so the steady-state per-token
-//!     cost of constrained decoding is a hash lookup + pointer bump.
+//!   * per decode step the engine asks the [`MaskCache`] for the packed
+//!     vocabulary bitmask ([`TokenBitmask`], one `u64` word per 64
+//!     tokens) of the current automaton state: a hit is an
+//!     `Rc<TokenBitmask>` pointer clone; a miss trie-walks only the
+//!     residue and ORs the precomputed base mask. Eviction is a
+//!     capacity-bounded LRU keyed by the state fingerprint, so the
+//!     steady-state per-token cost of constrained decoding is a hash
+//!     lookup + pointer bump.
 //!
 //! The engine applies the mask in
 //! `sampler::LogitsProcessor::sample_masked`, which walks the packed words
@@ -21,16 +28,18 @@
 //! advances the automaton with whatever was sampled.
 
 mod bitmask;
+mod compiler;
 mod ebnf;
 mod grammar;
 mod json_schema;
 mod matcher;
 
 pub use bitmask::TokenBitmask;
+pub use compiler::CompiledGrammar;
 pub use ebnf::parse_ebnf;
 pub use grammar::{Grammar, GrammarError, Sym};
 pub use json_schema::schema_to_grammar;
-pub use matcher::{GrammarMatcher, MaskCache, VocabTrie};
+pub use matcher::{GrammarMatcher, MaskCache, MaskCacheCounters, VocabTrie};
 
 #[cfg(test)]
 mod tests;

@@ -1,3 +1,4 @@
+use super::compiler::reachable_states;
 use super::*;
 use crate::json::parse;
 use crate::testutil::prop::Runner;
@@ -141,13 +142,17 @@ fn matcher_fingerprint_stable_and_state_dependent() {
     assert_ne!(m1.fingerprint(), m3.fingerprint());
 }
 
+fn compiled(g: &Rc<Grammar>, vocab: &'static [&'static [u8]]) -> Rc<CompiledGrammar> {
+    let trie = VocabTrie::build(vocab.len(), |i| vocab[i as usize]);
+    Rc::new(CompiledGrammar::compile(g.clone(), &trie, |i| vocab[i as usize]))
+}
+
 #[test]
 fn mask_cache_hits_on_repeated_states() {
     let g = Rc::new(parse_ebnf("root ::= [a-z]+").unwrap());
-    let mut m = GrammarMatcher::new(g);
-    let vocab: Vec<&[u8]> = vec![b"a", b"bc", b"1"];
-    let trie = Rc::new(VocabTrie::build(vocab.len(), |i| vocab[i as usize]));
-    let mut cache = MaskCache::new(trie, 64);
+    let mut m = GrammarMatcher::new(g.clone());
+    static VOCAB: &[&[u8]] = &[b"a", b"bc", b"1"];
+    let mut cache = MaskCache::new(compiled(&g, VOCAB), 64);
     let _ = cache.get_or_compute(&m);
     m.advance(b'a');
     let _ = cache.get_or_compute(&m);
@@ -164,15 +169,49 @@ fn mask_cache_hit_is_pointer_clone() {
     // The O(1)-hit contract: repeated visits to the same automaton state
     // return the *same* Rc allocation, not a vocab-sized copy.
     let g = Rc::new(parse_ebnf("root ::= [a-z]+").unwrap());
-    let mut m = GrammarMatcher::new(g);
-    let vocab: Vec<&[u8]> = vec![b"a", b"bc", b"1"];
-    let trie = Rc::new(VocabTrie::build(vocab.len(), |i| vocab[i as usize]));
-    let mut cache = MaskCache::new(trie, 64);
+    let mut m = GrammarMatcher::new(g.clone());
+    static VOCAB: &[&[u8]] = &[b"a", b"bc", b"1"];
+    let mut cache = MaskCache::new(compiled(&g, VOCAB), 64);
     m.advance(b'a');
     let first = cache.get_or_compute(&m);
     m.advance(b'z'); // [a-z]+ loops: same automaton state
     let second = cache.get_or_compute(&m);
     assert!(Rc::ptr_eq(&first, &second), "cache hit must be an Rc clone");
+}
+
+#[test]
+fn mask_cache_lru_eviction_is_deterministic() {
+    // Capacity 2, three distinct automaton states: the least-recently-
+    // used entry (and only it) must go, with the recency order decided by
+    // accesses, not hash order.
+    let g = Rc::new(parse_ebnf(r#"root ::= "abc" [0-9]+"#).unwrap());
+    static VOCAB: &[&[u8]] = &[b"a", b"b", b"c", b"1", b"ab"];
+    let mut cache = MaskCache::new(compiled(&g, VOCAB), 2);
+
+    let m0 = GrammarMatcher::new(g.clone());
+    let mut m1 = m0.clone();
+    assert!(m1.advance(b'a'));
+    let mut m2 = m1.clone();
+    assert!(m2.advance(b'b'));
+    assert_ne!(m0.fingerprint(), m1.fingerprint());
+    assert_ne!(m1.fingerprint(), m2.fingerprint());
+
+    let _ = cache.get_or_compute(&m0); // miss, insert {m0}
+    let _ = cache.get_or_compute(&m1); // miss, insert {m0, m1}
+    let a = cache.get_or_compute(&m0); // hit: m0 now more recent than m1
+    let _ = cache.get_or_compute(&m2); // miss at capacity: evicts m1 (LRU)
+    let b = cache.get_or_compute(&m0); // m0 must have survived
+    assert!(Rc::ptr_eq(&a, &b), "m0 evicted despite being recently used");
+
+    let c = cache.counters();
+    assert_eq!((c.hits, c.misses, c.evictions), (2, 3, 1));
+    assert_eq!((c.entries, c.capacity), (2, 2));
+
+    let _ = cache.get_or_compute(&m1); // recompute: evicts m2 (older than m0)
+    let d = cache.get_or_compute(&m0); // still resident
+    assert!(Rc::ptr_eq(&a, &d));
+    let c = cache.counters();
+    assert_eq!((c.hits, c.misses, c.evictions), (3, 4, 2));
 }
 
 #[test]
@@ -190,6 +229,195 @@ fn trie_mask_matches_per_token_mask() {
         assert_eq!(flat.to_bools(), fast.to_bools(), "diverged before byte {}", b as char);
         assert!(m.advance(b), "grammar rejected test input at {}", b as char);
     }
+}
+
+// -- ahead-of-time compiler (context-independent token analysis) --------------
+
+/// Artifact-free vocabulary with realistic byte spread: every single
+/// byte (so control bytes and invalid UTF-8 are represented, token id ==
+/// byte value), then a mix of JSON-ish and junk multi-byte strings.
+fn aot_test_vocab() -> Vec<Vec<u8>> {
+    let mut v: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+    for s in [
+        &b"ab"[..],
+        b"cd",
+        b"abab",
+        b"abc",
+        b"{\"",
+        b"\":",
+        b"\",\"",
+        b"true",
+        b"false",
+        b"null",
+        b"12",
+        b"3.5",
+        b"-7",
+        b"\"x\"",
+        b"name",
+        b"count",
+        b"ok",
+        b"}]",
+        b"\\\"",
+        b"\\u0041",
+        b"zz",
+        b"((x",
+        b"))",
+        b"\n\n",
+        b"\x01\x02",
+        b"\xff\xfe",
+        b"\xc3\xa9", // e-acute, valid UTF-8
+        b"\xe2\x82\xac", // euro sign
+    ] {
+        v.push(s.to_vec());
+    }
+    v.push(Vec::new()); // an empty special: never grammar-eligible
+    v
+}
+
+fn aot_test_grammars() -> Vec<(&'static str, Rc<Grammar>)> {
+    vec![
+        ("ebnf-pairs", Rc::new(parse_ebnf(r#"root ::= ("ab" | "cd")+ [0-9] [0-9]?"#).unwrap())),
+        ("ebnf-letters", Rc::new(parse_ebnf("root ::= [a-z]+").unwrap())),
+        (
+            "ebnf-parens",
+            Rc::new(parse_ebnf("root ::= expr\nexpr ::= \"(\" expr \")\" | \"x\"").unwrap()),
+        ),
+        (
+            "schema-object",
+            schema(
+                r#"{
+                "type": "object",
+                "properties": {
+                    "name": {"type": "string"},
+                    "count": {"type": "integer"},
+                    "ok": {"type": "boolean"}
+                },
+                "required": ["name", "count", "ok"]
+            }"#,
+            ),
+        ),
+        (
+            "schema-recursive",
+            schema(
+                r##"{
+                "$defs": {
+                    "node": {
+                        "type": "object",
+                        "properties": {
+                            "v": {"type": "integer"},
+                            "next": {"anyOf": [{"$ref": "#/$defs/node"}, {"type": "null"}]}
+                        },
+                        "required": ["v", "next"]
+                    }
+                },
+                "$ref": "#/$defs/node"
+            }"##,
+            ),
+        ),
+        ("schema-any", schema("{}")),
+    ]
+}
+
+#[test]
+fn prop_compiled_base_plus_residue_equals_full_walk() {
+    // The compiler's contract, token for token: for every reachable
+    // automaton state, `base_accept ∪ residue-walk(state)` must equal the
+    // whole-vocabulary trie walk. Finite grammars are checked on *all*
+    // reachable states; unboundedly recursive ones on the first 150
+    // states of the byte-level BFS.
+    let vocab = aot_test_vocab();
+    let trie = VocabTrie::build(vocab.len(), |i| vocab[i as usize].as_slice());
+    for (name, g) in aot_test_grammars() {
+        let c = CompiledGrammar::compile(g.clone(), &trie, |i| vocab[i as usize].as_slice());
+        assert!(
+            c.base_accept().is_disjoint(c.base_reject()),
+            "{name}: base sets overlap"
+        );
+        assert_eq!(
+            c.base_accept().count_allowed() + c.base_reject().count_allowed() + c.residue().len(),
+            vocab.len(),
+            "{name}: partition must cover the vocabulary exactly"
+        );
+        let reached = reachable_states(&g, 150);
+        assert!(!reached.states.is_empty(), "{name}: no states");
+        for state in &reached.states {
+            let full = state.token_mask_trie(&trie);
+            let fast = c.mask_for(state);
+            assert_eq!(
+                full.to_bools(),
+                fast.to_bools(),
+                "{name}: mask diverged at state {:x} (exact={}, complete_bfs={})",
+                state.fingerprint(),
+                c.is_exact(),
+                reached.complete,
+            );
+        }
+    }
+}
+
+#[test]
+fn compiled_schema_classifies_impossible_bytes_as_context_independent() {
+    // JSON grammars never consume raw control bytes (strings require
+    // escapes), so those single-byte tokens must be always-rejected —
+    // the nonzero context-independent fraction the bench reports.
+    let vocab = aot_test_vocab();
+    let trie = VocabTrie::build(vocab.len(), |i| vocab[i as usize].as_slice());
+    for (name, g) in aot_test_grammars() {
+        let c = CompiledGrammar::compile(g, &trie, |i| vocab[i as usize].as_slice());
+        for ctl in [0x00usize, 0x0A, 0x1F] {
+            assert!(
+                c.base_reject().is_allowed(ctl),
+                "{name}: control byte {ctl:#x} should be always-rejected"
+            );
+        }
+        // Empty-byte specials are never grammar-eligible.
+        assert!(c.base_reject().is_allowed(vocab.len() - 1), "{name}: empty token");
+        assert!(
+            c.context_independent_fraction() > 0.0,
+            "{name}: expected a nonzero context-independent fraction"
+        );
+    }
+}
+
+#[test]
+fn compiled_loop_grammar_has_exact_nonempty_base_accept() {
+    // `[a-z]+` has two reachable states and every lowercase token is
+    // acceptable in both: the exact analysis must find a nonempty
+    // always-accepted set, and the residue walk must stay correct.
+    let vocab = aot_test_vocab();
+    let trie = VocabTrie::build(vocab.len(), |i| vocab[i as usize].as_slice());
+    let g = Rc::new(parse_ebnf("root ::= [a-z]+").unwrap());
+    let c = CompiledGrammar::compile(g.clone(), &trie, |i| vocab[i as usize].as_slice());
+    assert!(c.is_exact(), "[a-z]+ is finite-state");
+    assert_eq!(c.states_explored(), 2);
+    assert!(c.base_accept().is_allowed(b'a' as usize));
+    let zz = vocab.iter().position(|t| t == b"zz").unwrap();
+    assert!(c.base_accept().is_allowed(zz));
+    assert!(c.base_reject().is_allowed(b'0' as usize));
+    // With everything classified, the residue (and its trie) are empty
+    // and a mask is assembled without stepping the automaton at all.
+    assert!(c.residue().is_empty());
+    let mask = c.mask_for(&GrammarMatcher::new(g));
+    assert_eq!(mask.count_allowed(), c.base_accept().count_allowed());
+}
+
+#[test]
+fn compiled_recursive_grammar_falls_back_to_sound_approximation() {
+    // Unbounded nesting defeats exact state enumeration; the NFA
+    // fallback must report inexactness, an empty base_accept, and a
+    // base_reject that still catches never-consumable tokens.
+    let vocab = aot_test_vocab();
+    let trie = VocabTrie::build(vocab.len(), |i| vocab[i as usize].as_slice());
+    let g = Rc::new(parse_ebnf("root ::= expr\nexpr ::= \"(\" expr \")\" | \"x\"").unwrap());
+    let c = CompiledGrammar::compile(g, &trie, |i| vocab[i as usize].as_slice());
+    assert!(!c.is_exact(), "balanced parens are not finite-state");
+    assert!(!c.base_accept().any_allowed());
+    assert!(c.base_reject().is_allowed(b'z' as usize), "'z' never appears");
+    let open = vocab.iter().position(|t| t == b"((x").unwrap();
+    assert!(
+        !c.base_reject().is_allowed(open),
+        "\"((x\" is consumable from the start state"
+    );
 }
 
 // -- JSON-Schema compilation --------------------------------------------------

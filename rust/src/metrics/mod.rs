@@ -153,6 +153,27 @@ pub struct EngineStats {
     /// Rows in decode batches that were static-shape padding (the compiled
     /// batch size exceeded the number of running sequences).
     pub decode_padded_rows: u64,
+    /// Grammar compilations run at admission (one per distinct grammar;
+    /// later requests share the `CompiledGrammar`).
+    pub grammar_compiles: u64,
+    /// Wall-clock spent in those compilations (the one-shot AOT cost the
+    /// per-state residue savings amortize).
+    pub grammar_compile_s: f64,
+    /// Tokens classified always-accepted at compile time, summed over
+    /// compilations.
+    pub grammar_base_accept_tokens: u64,
+    /// Tokens classified always-rejected at compile time, summed over
+    /// compilations.
+    pub grammar_base_reject_tokens: u64,
+    /// Context-dependent tokens left for the per-state runtime walk,
+    /// summed over compilations.
+    pub grammar_residue_tokens: u64,
+    /// Mask-cache lookups answered by a cached mask (`Rc` clone).
+    pub grammar_mask_hits: u64,
+    /// Mask-cache lookups that paid a residue trie walk.
+    pub grammar_mask_misses: u64,
+    /// Mask-cache entries evicted by the LRU capacity bound.
+    pub grammar_mask_evictions: u64,
     /// Time from request admission to first streamed token.
     pub ttft: Histogram,
     /// Inter-token latency.
@@ -193,6 +214,59 @@ impl EngineStats {
         }
     }
 
+    /// Grammar mask-cache hit rate (0.0 before any constrained decode).
+    pub fn grammar_mask_hit_rate(&self) -> f64 {
+        let total = self.grammar_mask_hits + self.grammar_mask_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.grammar_mask_hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of compiled vocabulary entries classified ahead of time
+    /// (context-independent), averaged over all compilations.
+    pub fn grammar_context_independent_fraction(&self) -> f64 {
+        let ci = self.grammar_base_accept_tokens + self.grammar_base_reject_tokens;
+        let total = ci + self.grammar_residue_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            ci as f64 / total as f64
+        }
+    }
+
+    /// The engine-level numbers as a JSON object (the scalar core of the
+    /// engine's `runtime_stats_text` analog; the engine wraps this with
+    /// per-model state).
+    pub fn stats_json(&self) -> crate::json::Value {
+        crate::obj! {
+            "prefill_tokens" => self.prefill_tokens as i64,
+            "decode_tokens" => self.decode_tokens as i64,
+            "prefill_tps" => self.prefill_tps(),
+            "decode_tps" => self.decode_tps(),
+            "prefill_padded_tokens" => self.prefill_padded_tokens as i64,
+            "decode_steps" => self.decode_steps as i64,
+            "decode_live_rows" => self.decode_live_rows as i64,
+            "decode_padded_rows" => self.decode_padded_rows as i64,
+            "decode_padding_ratio" => self.decode_padding_ratio(),
+            "e2e_requests" => self.e2e.len() as i64,
+            "e2e_mean_s" => self.e2e.mean(),
+            "grammar" => crate::obj! {
+                "compiles" => self.grammar_compiles as i64,
+                "compile_s" => self.grammar_compile_s,
+                "base_accept_tokens" => self.grammar_base_accept_tokens as i64,
+                "base_reject_tokens" => self.grammar_base_reject_tokens as i64,
+                "residue_tokens" => self.grammar_residue_tokens as i64,
+                "context_independent_fraction" => self.grammar_context_independent_fraction(),
+                "mask_hits" => self.grammar_mask_hits as i64,
+                "mask_misses" => self.grammar_mask_misses as i64,
+                "mask_evictions" => self.grammar_mask_evictions as i64,
+                "mask_hit_rate" => self.grammar_mask_hit_rate(),
+            },
+        }
+    }
+
     pub fn merge(&mut self, other: &EngineStats) {
         self.prefill_tokens += other.prefill_tokens;
         self.decode_tokens += other.decode_tokens;
@@ -202,6 +276,14 @@ impl EngineStats {
         self.decode_steps += other.decode_steps;
         self.decode_live_rows += other.decode_live_rows;
         self.decode_padded_rows += other.decode_padded_rows;
+        self.grammar_compiles += other.grammar_compiles;
+        self.grammar_compile_s += other.grammar_compile_s;
+        self.grammar_base_accept_tokens += other.grammar_base_accept_tokens;
+        self.grammar_base_reject_tokens += other.grammar_base_reject_tokens;
+        self.grammar_residue_tokens += other.grammar_residue_tokens;
+        self.grammar_mask_hits += other.grammar_mask_hits;
+        self.grammar_mask_misses += other.grammar_mask_misses;
+        self.grammar_mask_evictions += other.grammar_mask_evictions;
         for &s in &other.ttft.samples {
             self.ttft.push(s);
         }
@@ -291,5 +373,36 @@ mod tests {
         s.merge(&other);
         assert_eq!(s.decode_padded_rows, 8);
         assert_eq!(s.prefill_padded_tokens, 7);
+    }
+
+    #[test]
+    fn engine_stats_grammar_counters_and_json() {
+        let mut s = EngineStats::new();
+        assert_eq!(s.grammar_mask_hit_rate(), 0.0);
+        assert_eq!(s.grammar_context_independent_fraction(), 0.0);
+        s.grammar_compiles = 2;
+        s.grammar_base_accept_tokens = 10;
+        s.grammar_base_reject_tokens = 60;
+        s.grammar_residue_tokens = 30;
+        s.grammar_mask_hits = 9;
+        s.grammar_mask_misses = 1;
+        s.grammar_mask_evictions = 4;
+        assert!((s.grammar_mask_hit_rate() - 0.9).abs() < 1e-12);
+        assert!((s.grammar_context_independent_fraction() - 0.7).abs() < 1e-12);
+
+        let v = s.stats_json();
+        let g = v.get("grammar").expect("grammar section");
+        assert_eq!(g.get("compiles").and_then(|x| x.as_i64()), Some(2));
+        assert_eq!(g.get("mask_evictions").and_then(|x| x.as_i64()), Some(4));
+        assert_eq!(g.get("residue_tokens").and_then(|x| x.as_i64()), Some(30));
+
+        let mut other = EngineStats::new();
+        other.grammar_mask_hits = 1;
+        other.grammar_mask_evictions = 2;
+        other.grammar_compile_s = 0.5;
+        s.merge(&other);
+        assert_eq!(s.grammar_mask_hits, 10);
+        assert_eq!(s.grammar_mask_evictions, 6);
+        assert!((s.grammar_compile_s - 0.5).abs() < 1e-12);
     }
 }

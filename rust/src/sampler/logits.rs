@@ -87,6 +87,7 @@ impl Default for SamplingParams {
 }
 
 impl SamplingParams {
+    /// Deterministic argmax decoding (`temperature == 0`).
     pub fn greedy() -> Self {
         Self { temperature: 0.0, ..Self::default() }
     }
@@ -151,6 +152,8 @@ pub struct LogitsProcessor {
 }
 
 impl LogitsProcessor {
+    /// A per-sequence processor; `fallback_seed` seeds the RNG when the
+    /// request did not pin [`SamplingParams::seed`].
     pub fn new(params: SamplingParams, fallback_seed: u64) -> Self {
         let seed = params.seed.unwrap_or(fallback_seed);
         Self {
@@ -163,6 +166,7 @@ impl LogitsProcessor {
         }
     }
 
+    /// The request's sampling controls.
     pub fn params(&self) -> &SamplingParams {
         &self.params
     }

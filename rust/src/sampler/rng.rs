@@ -3,6 +3,17 @@
 //! Deterministic per request when `seed` is set (OpenAI API semantics);
 //! otherwise seeded from the request id + a process nonce.
 
+/// PCG-XSH-RR 64/32 generator: 64-bit state, 32-bit output. Cloning
+/// forks the stream (both copies then produce identical draws).
+///
+/// ```
+/// use webllm::sampler::Pcg32;
+///
+/// let mut a = Pcg32::new(7);
+/// let mut b = a.clone();
+/// assert_eq!(a.next_u32(), b.next_u32());
+/// assert!((0.0..1.0).contains(&a.f32()));
+/// ```
 #[derive(Clone, Debug)]
 pub struct Pcg32 {
     state: u64,
@@ -10,6 +21,7 @@ pub struct Pcg32 {
 }
 
 impl Pcg32 {
+    /// Seed a generator (any seed is fine, including 0).
     pub fn new(seed: u64) -> Self {
         let mut rng = Self { state: 0, inc: (seed << 1) | 1 };
         rng.next_u32();
@@ -18,6 +30,7 @@ impl Pcg32 {
         rng
     }
 
+    /// Next 32 uniform bits (one PCG step).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
