@@ -24,7 +24,7 @@ use crate::json::Value;
 use crate::kvcache::KvCacheManager;
 use crate::metrics::EngineStats;
 use crate::models::Manifest;
-use crate::runtime::{thread_client, ModelRuntime, RuntimeError};
+use crate::runtime::{thread_client, ModelBackend, ModelRuntime, ReferenceBackend, RuntimeError};
 use crate::sampler::LogitsProcessor;
 use crate::tokenizer::{render_chat, StreamDecoder, Tokenizer};
 use std::cell::RefCell;
@@ -34,6 +34,19 @@ use std::rc::Rc;
 use std::time::Instant;
 
 pub type RequestId = u64;
+
+/// Which [`ModelBackend`] implementation the engine loads models on.
+#[derive(Clone, Debug)]
+pub enum BackendKind {
+    /// Compiled AOT artifacts executed through the PJRT client
+    /// (requires `make artifacts`); the production path.
+    Xla,
+    /// Pure-Rust seeded-deterministic reference backend — no artifacts,
+    /// runs anywhere. Models come from the built-in reference registry
+    /// (`tiny-ref`, `tiny-ref-b`). `seed` fixes every logit the models
+    /// will ever produce.
+    Reference { seed: u64 },
+}
 
 /// Engine construction options.
 #[derive(Clone, Debug)]
@@ -45,6 +58,11 @@ pub struct EngineConfig {
     /// `Some` => browser mode (inject WebGPU/WASM overheads).
     pub browser: Option<BrowserConfig>,
     pub enable_prefix_cache: bool,
+    /// Execution backend (see [`BackendKind`]).
+    pub backend: BackendKind,
+    /// Automaton states cached per grammar (see `grammar::MaskCache`);
+    /// clamped to at least 1.
+    pub mask_cache_capacity: usize,
 }
 
 impl EngineConfig {
@@ -54,11 +72,30 @@ impl EngineConfig {
             models: models.iter().map(|s| s.to_string()).collect(),
             browser: None,
             enable_prefix_cache: true,
+            backend: BackendKind::Xla,
+            mask_cache_capacity: DEFAULT_MASK_CACHE_CAPACITY,
         }
     }
 
     pub fn browser(models: &[&str]) -> Self {
         Self { browser: Some(BrowserConfig::default()), ..Self::native(models) }
+    }
+
+    /// Native-mode engine on the deterministic reference backend: no
+    /// artifacts, no filesystem — the configuration every integration
+    /// test runs on. Struct-update from [`Self::native`] so future
+    /// defaults can't drift between the two.
+    pub fn reference(models: &[&str]) -> Self {
+        Self {
+            artifacts_dir: PathBuf::new(),
+            backend: BackendKind::Reference { seed: 0x5EED_CAFE },
+            ..Self::native(models)
+        }
+    }
+
+    /// Browser-mode engine on the reference backend.
+    pub fn reference_browser(models: &[&str]) -> Self {
+        Self { browser: Some(BrowserConfig::default()), ..Self::reference(models) }
     }
 }
 
@@ -127,7 +164,7 @@ impl StepBuffers {
 }
 
 struct EngineModel {
-    runtime: ModelRuntime,
+    backend: Box<dyn ModelBackend>,
     kv: KvCacheManager,
     waiting: VecDeque<PendingReq>,
     running: Vec<RunningSeq>,
@@ -145,14 +182,14 @@ struct GrammarEntry {
 }
 
 /// Distinct compiled grammars retained by the engine. Each entry pins a
-/// residue trie plus up to [`MASK_CACHE_CAPACITY`] vocab-sized masks, so
-/// the map is LRU-bounded: traffic with unbounded distinct schemas can't
-/// grow engine memory forever (in-flight sequences keep their evicted
-/// entry alive through their own `Rc`s).
+/// residue trie plus up to [`EngineConfig::mask_cache_capacity`]
+/// vocab-sized masks, so the map is LRU-bounded: traffic with unbounded
+/// distinct schemas can't grow engine memory forever (in-flight
+/// sequences keep their evicted entry alive through their own `Rc`s).
 const MAX_COMPILED_GRAMMARS: usize = 32;
 
-/// Automaton states cached per grammar (see `grammar::MaskCache`).
-const MASK_CACHE_CAPACITY: usize = 256;
+/// Default for [`EngineConfig::mask_cache_capacity`].
+pub const DEFAULT_MASK_CACHE_CAPACITY: usize = 256;
 
 /// The backend engine. See module docs.
 pub struct MLCEngine {
@@ -165,6 +202,8 @@ pub struct MLCEngine {
     grammar_caches: HashMap<String, (GrammarEntry, u64)>,
     /// Strictly increasing access clock for `grammar_caches` recency.
     grammar_clock: u64,
+    /// Per-grammar mask-cache capacity (from the config, min 1).
+    mask_cache_capacity: usize,
     events: VecDeque<EngineEvent>,
     next_req: RequestId,
     next_seq: u64,
@@ -174,31 +213,19 @@ pub struct MLCEngine {
 }
 
 impl MLCEngine {
-    /// Load every configured model (compiles AOT artifacts; one-time cost,
-    /// the "model loading" phase of the paper's Figure 1).
+    /// Load every configured model on the configured backend (XLA:
+    /// compiles AOT artifacts, one-time cost, the "model loading" phase
+    /// of the paper's Figure 1; reference: instant, in-process).
     pub fn new(cfg: &EngineConfig) -> Result<Self, ApiError> {
-        let manifest = Manifest::load(&cfg.artifacts_dir)
-            .map_err(|e| ApiError::internal(format!("manifest: {e}")))?;
-        let tokenizer = Rc::new(
-            Tokenizer::from_file(&manifest.tokenizer_path)
-                .map_err(|e| ApiError::internal(format!("tokenizer: {e}")))?,
-        );
+        let env = cfg.browser.clone().map(|b| Rc::new(BrowserEnv::new(b)));
+        let (tokenizer, backends) = Self::load_backends(cfg, env.as_deref())?;
         let trie = Rc::new(VocabTrie::build(tokenizer.vocab_size(), |i| {
             tokenizer.token_bytes(i)
         }));
-        let env = cfg.browser.clone().map(|b| Rc::new(BrowserEnv::new(b)));
-        let client = thread_client().map_err(|e| ApiError::internal(e.to_string()))?;
 
         let mut models = BTreeMap::new();
-        for name in &cfg.models {
-            let runtime = ModelRuntime::load(
-                &client,
-                &manifest,
-                name,
-                env.as_ref().map(|e| BrowserEnv::new(e.config().clone())),
-            )
-            .map_err(|e| ApiError::internal(format!("load {name}: {e}")))?;
-            let mc = runtime.config().clone();
+        for (name, backend) in backends {
+            let mc = backend.config().clone();
             let kv = KvCacheManager::new(
                 mc.num_pages,
                 mc.page_size,
@@ -206,9 +233,9 @@ impl MLCEngine {
                 cfg.enable_prefix_cache,
             );
             models.insert(
-                name.clone(),
+                name,
                 EngineModel {
-                    runtime,
+                    backend,
                     kv,
                     waiting: VecDeque::new(),
                     running: Vec::new(),
@@ -227,6 +254,7 @@ impl MLCEngine {
             env,
             grammar_caches: HashMap::new(),
             grammar_clock: 0,
+            mask_cache_capacity: cfg.mask_cache_capacity.max(1),
             events: VecDeque::new(),
             next_req: 1,
             next_seq: 1,
@@ -234,6 +262,54 @@ impl MLCEngine {
             stats: EngineStats::new(),
             eos_ids,
         })
+    }
+
+    /// Resolve the configured backend into (tokenizer, one backend per
+    /// model). The XLA arm reads the artifacts manifest; the reference
+    /// arm builds everything from the in-code registry.
+    fn load_backends(
+        cfg: &EngineConfig,
+        env: Option<&BrowserEnv>,
+    ) -> Result<(Rc<Tokenizer>, Vec<(String, Box<dyn ModelBackend>)>), ApiError> {
+        let mut backends: Vec<(String, Box<dyn ModelBackend>)> = Vec::new();
+        match &cfg.backend {
+            BackendKind::Xla => {
+                let manifest = Manifest::load(&cfg.artifacts_dir)
+                    .map_err(|e| ApiError::internal(format!("manifest: {e}")))?;
+                let tokenizer = Rc::new(
+                    Tokenizer::from_file(&manifest.tokenizer_path)
+                        .map_err(|e| ApiError::internal(format!("tokenizer: {e}")))?,
+                );
+                let client = thread_client().map_err(|e| ApiError::internal(e.to_string()))?;
+                for name in &cfg.models {
+                    let runtime = ModelRuntime::load(
+                        &client,
+                        &manifest,
+                        name,
+                        env.map(|e| BrowserEnv::new(e.config().clone())),
+                    )
+                    .map_err(|e| ApiError::internal(format!("load {name}: {e}")))?;
+                    backends.push((name.clone(), Box::new(runtime)));
+                }
+                Ok((tokenizer, backends))
+            }
+            BackendKind::Reference { seed } => {
+                let tokenizer = Rc::new(crate::models::reference_tokenizer());
+                let stop_token = tokenizer.special_id("<eos>");
+                for name in &cfg.models {
+                    let mc = crate::models::reference_model_config(name)
+                        .map_err(ApiError::not_found)?;
+                    let backend = ReferenceBackend::new(
+                        mc,
+                        *seed,
+                        stop_token,
+                        env.map(|e| BrowserEnv::new(e.config().clone())),
+                    );
+                    backends.push((name.clone(), Box::new(backend)));
+                }
+                Ok((tokenizer, backends))
+            }
+        }
     }
 
     pub fn tokenizer(&self) -> &Rc<Tokenizer> {
@@ -276,7 +352,7 @@ impl MLCEngine {
             None => render_chat(&tokenizer, &messages),
         };
 
-        let mc = model.runtime.config();
+        let mc = model.backend.config();
         if prompt_ids.len() > mc.max_prefill_chunk() {
             return Err(ApiError::invalid(format!(
                 "prompt is {} tokens; max prefill chunk is {}",
@@ -374,7 +450,7 @@ impl MLCEngine {
             match m.waiting.front() {
                 Some(p)
                     if m.kv.can_admit(p.prompt_ids.len())
-                        && m.running.len() < m.runtime.config().max_decode_batch() =>
+                        && m.running.len() < m.backend.config().max_decode_batch() =>
                 {
                     m.waiting.pop_front()
                 }
@@ -408,7 +484,7 @@ impl MLCEngine {
 
         let (chunk, t_prefill, logits) = {
             let m = self.models.get_mut(name).unwrap();
-            let mc = m.runtime.config().clone();
+            let mc = m.backend.config().clone();
             let n = p.prompt_ids.len();
             let chunk = mc.pick_chunk(n).expect("validated at submit");
             m.kv.admit(seq_id, &p.prompt_ids).map_err(|e| {
@@ -420,7 +496,7 @@ impl MLCEngine {
             }
             let bt = m.kv.block_table_row(seq_id);
             let t0 = Instant::now();
-            let out = m.runtime.prefill(&ids, n, &bt)?;
+            let out = m.backend.prefill(&ids, n, &bt)?;
             (chunk, t0.elapsed().as_secs_f64(), out.logits)
         };
         self.stats.prefill_tokens += p.prompt_ids.len() as u64;
@@ -429,7 +505,7 @@ impl MLCEngine {
 
         let max_ctx = {
             let m = &self.models[name];
-            m.runtime.config().max_seq_len - 1
+            m.backend.config().max_seq_len - 1
         };
         let max_tokens = p.req.max_tokens.min(max_ctx.saturating_sub(p.prompt_ids.len()));
 
@@ -480,7 +556,7 @@ impl MLCEngine {
             if m.running.is_empty() {
                 return Ok(());
             }
-            let mc = m.runtime.config().clone();
+            let mc = m.backend.config().clone();
             let live = m.running.len().min(mc.max_decode_batch());
             let batch = mc.pick_batch(live).expect("live <= max batch");
             let mp = mc.max_pages_per_seq();
@@ -500,7 +576,7 @@ impl MLCEngine {
                 );
             }
             let t0 = Instant::now();
-            let out = m.runtime.decode(
+            let out = m.backend.decode(
                 &m.step.ids,
                 &m.step.positions,
                 &m.step.seq_lens,
@@ -791,7 +867,8 @@ impl MLCEngine {
         self.stats.grammar_base_accept_tokens += compiled.base_accept().count_allowed() as u64;
         self.stats.grammar_base_reject_tokens += compiled.base_reject().count_allowed() as u64;
         self.stats.grammar_residue_tokens += compiled.residue().len() as u64;
-        let cache = Rc::new(RefCell::new(MaskCache::new(compiled.clone(), MASK_CACHE_CAPACITY)));
+        let cache =
+            Rc::new(RefCell::new(MaskCache::new(compiled.clone(), self.mask_cache_capacity)));
         let entry = GrammarEntry { compiled, cache };
         if self.grammar_caches.len() >= MAX_COMPILED_GRAMMARS {
             // LRU-bound the grammar map itself; sequences still decoding
@@ -844,7 +921,7 @@ impl MLCEngine {
                     "available_pages" => m.kv.available_pages(),
                     "prefix_cache_hits" => hits as i64,
                     "prefix_cache_misses" => misses as i64,
-                    "load_seconds" => m.runtime.load_seconds,
+                    "load_seconds" => m.backend.load_seconds(),
                 },
             );
         }

@@ -19,6 +19,8 @@ pub mod frontend;
 pub mod messages;
 pub mod worker;
 
-pub use engine::{EngineConfig, EngineEvent, MLCEngine, RequestId};
+pub use engine::{
+    BackendKind, EngineConfig, EngineEvent, MLCEngine, RequestId, DEFAULT_MASK_CACHE_CAPACITY,
+};
 pub use frontend::ServiceWorkerMLCEngine;
 pub use worker::WorkerHandle;

@@ -37,6 +37,60 @@ fn header_lookup_case_insensitive() {
 }
 
 #[test]
+fn sse_frames_are_line_by_line_well_formed() {
+    // Round-trip a realistic chunk stream through a strict line-by-line
+    // parse: every frame is exactly `data: <json>` + blank line, the
+    // stream ends with `data: [DONE]`, and the deltas reassemble the
+    // original text.
+    let deltas = ["Hel", "lo", ", ", "wor", "ld"];
+    let mut buf = Vec::new();
+    {
+        let mut w = super::sse::SseWriter::start(&mut buf).unwrap();
+        for d in deltas {
+            let chunk = crate::obj! {
+                "object" => "chat.completion.chunk",
+                "choices" => vec![crate::obj! {"delta" => crate::obj! {"content" => d}}],
+            };
+            w.send_json(&chunk).unwrap();
+        }
+        w.done().unwrap();
+    }
+    let s = String::from_utf8(buf).unwrap();
+    let body = s.split_once("\r\n\r\n").unwrap().1;
+
+    let mut lines = body.lines();
+    let mut reassembled = String::new();
+    let mut frames = 0;
+    let mut done = false;
+    while let Some(line) = lines.next() {
+        if line.is_empty() {
+            continue;
+        }
+        let data = line.strip_prefix("data: ").expect("frame must start with 'data: '");
+        assert!(!done, "no frames allowed after [DONE]");
+        if data == "[DONE]" {
+            done = true;
+        } else {
+            frames += 1;
+            let v = parse(data).expect("each frame is one complete JSON document");
+            if let Some(content) = v
+                .get("choices")
+                .and_then(|c| c.at(0))
+                .and_then(|c| c.get("delta"))
+                .and_then(|d| d.get("content"))
+                .and_then(crate::json::Value::as_str)
+            {
+                reassembled.push_str(content);
+            }
+        }
+        assert_eq!(lines.next(), Some(""), "every frame ends with a blank line");
+    }
+    assert!(done, "stream must terminate with [DONE]");
+    assert_eq!(frames, deltas.len());
+    assert_eq!(reassembled, "Hello, world");
+}
+
+#[test]
 fn sse_writer_and_parser_roundtrip() {
     let mut buf = Vec::new();
     {

@@ -54,6 +54,8 @@ USAGE:
 
 FLAGS:
   --browser     run in browser mode (inject WebGPU/WASM cost model)
+  --reference   run on the deterministic reference backend (no artifacts;
+                models: tiny-ref, tiny-ref-b)
   --artifacts   artifacts directory (default: ./artifacts)",
         webllm::version()
     );
@@ -88,13 +90,18 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig, String
         .get("model")
         .map(|m| m.split(',').collect())
         .ok_or("--model is required")?;
-    let mut cfg = if flags.contains_key("browser") {
-        EngineConfig::browser(&models)
-    } else {
-        EngineConfig::native(&models)
+    let mut cfg = match (flags.contains_key("reference"), flags.contains_key("browser")) {
+        (true, true) => EngineConfig::reference_browser(&models),
+        (true, false) => EngineConfig::reference(&models),
+        (false, true) => EngineConfig::browser(&models),
+        (false, false) => EngineConfig::native(&models),
     };
     if let Some(dir) = flags.get("artifacts") {
-        cfg.artifacts_dir = dir.into();
+        if flags.contains_key("reference") {
+            eprintln!("warning: --artifacts is ignored with --reference (in-code registry)");
+        } else {
+            cfg.artifacts_dir = dir.into();
+        }
     }
     Ok(cfg)
 }

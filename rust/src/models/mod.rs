@@ -6,10 +6,14 @@
 //! and the AOT executables per (phase, static shape).
 
 mod config;
+mod reference;
 mod registry;
 mod weights;
 
 pub use config::ModelConfig;
+pub use reference::{
+    reference_model_config, reference_model_names, reference_tokenizer, REFERENCE_VOCAB_SIZE,
+};
 pub use registry::{ExeEntry, Manifest, ModelRecord, TensorSpec};
 pub use weights::WeightFile;
 

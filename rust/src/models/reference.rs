@@ -1,0 +1,108 @@
+//! Built-in reference models: registry entries that need no artifacts.
+//!
+//! The XLA path loads models from `artifacts/manifest.json` (weights,
+//! HLO executables, trained tokenizer). The reference path ships its
+//! registry in code: a couple of `tiny-ref*` configs plus a synthetic
+//! byte-level tokenizer, so `EngineConfig::reference(&["tiny-ref"])`
+//! stands up a full engine — scheduler, paged KV, grammar, streaming,
+//! HTTP — on any machine, which is what lets CI run the entire e2e
+//! suite without `make artifacts`.
+
+use super::ModelConfig;
+use crate::tokenizer::Tokenizer;
+
+/// Vocabulary size shared by every reference model and the reference
+/// tokenizer (8 specials + 256 bytes + a few merges + unused tail).
+pub const REFERENCE_VOCAB_SIZE: usize = 300;
+
+/// Names the reference registry can load.
+pub fn reference_model_names() -> Vec<&'static str> {
+    vec!["tiny-ref", "tiny-ref-b"]
+}
+
+/// Registry lookup. `tiny-ref` and `tiny-ref-b` differ in depth and
+/// pool size (and, through the name-mixed seed, in every logit), so
+/// multi-model scenarios observe genuinely distinct models.
+pub fn reference_model_config(name: &str) -> Result<ModelConfig, String> {
+    let (n_layers, num_pages) = match name {
+        "tiny-ref" => (2, 64),
+        "tiny-ref-b" => (3, 48),
+        _ => {
+            return Err(format!(
+                "unknown model '{name}'; reference registry has: {:?}",
+                reference_model_names()
+            ))
+        }
+    };
+    Ok(ModelConfig {
+        name: name.to_string(),
+        vocab_size: REFERENCE_VOCAB_SIZE,
+        d_model: 32,
+        n_layers,
+        n_heads: 2,
+        n_kv_heads: 2,
+        head_dim: 16,
+        ffn_dim: 64,
+        rope_theta: 10_000.0,
+        norm_eps: 1e-5,
+        page_size: 8,
+        num_pages,
+        max_seq_len: 128,
+        prefill_chunks: vec![16, 32, 64],
+        decode_batches: vec![1, 2, 4, 8],
+        param_count: 262_144,
+    })
+}
+
+/// The synthetic byte-level BPE vocabulary every reference model shares:
+/// the 8 reserved specials the chat template needs, all 256 bytes, and a
+/// few merges so multi-byte tokens exercise the streaming decoder.
+pub fn reference_tokenizer() -> Tokenizer {
+    let h = 8 + b'h' as u32;
+    let e = 8 + b'e' as u32;
+    let l = 8 + b'l' as u32;
+    let sp = 8 + b' ' as u32;
+    let w = 8 + b'w' as u32;
+    let json = format!(
+        r#"{{
+        "vocab_size": {REFERENCE_VOCAB_SIZE},
+        "byte_offset": 8,
+        "specials": {{"<pad>":0,"<bos>":1,"<eos>":2,"<unk>":3,
+                      "<|system|>":4,"<|user|>":5,"<|assistant|>":6,"<|end|>":7}},
+        "merges": [[{h},{e}],[{l},{l}],[264,265],[{sp},{w}]]
+    }}"#
+    );
+    let v = crate::json::parse(&json).expect("reference tokenizer json is static");
+    Tokenizer::from_json(&v).expect("reference tokenizer vocabulary is static")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_configs_are_consistent() {
+        for name in reference_model_names() {
+            let mc = reference_model_config(name).unwrap();
+            assert_eq!(mc.name, name);
+            assert_eq!(mc.vocab_size, REFERENCE_VOCAB_SIZE);
+            assert!(mc.max_pages_per_seq() * mc.page_size == mc.max_seq_len);
+            assert!(mc.max_prefill_chunk() <= mc.max_seq_len);
+            assert!(mc.num_pages >= mc.max_pages_per_seq());
+        }
+        assert!(reference_model_config("tiny-2m").is_err());
+    }
+
+    #[test]
+    fn tokenizer_matches_model_vocab() {
+        let tok = reference_tokenizer();
+        assert_eq!(tok.vocab_size(), REFERENCE_VOCAB_SIZE);
+        for name in ["<bos>", "<eos>", "<|system|>", "<|user|>", "<|assistant|>", "<|end|>"] {
+            assert!(tok.special_id(name).is_some(), "missing special {name}");
+        }
+        // Round-trips text, including merged tokens.
+        for s in ["hello world", "json: {\"ok\": true}", ""] {
+            assert_eq!(tok.decode(&tok.encode(s)), s);
+        }
+    }
+}

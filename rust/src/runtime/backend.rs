@@ -1,0 +1,71 @@
+//! The engine-facing execution contract.
+//!
+//! `MLCEngine` drives models exclusively through [`ModelBackend`]; it
+//! never names a concrete runtime. Two implementations exist:
+//!
+//! * [`super::ModelRuntime`] — compiled AOT artifacts executed through
+//!   the PJRT client (requires `make artifacts`); the production path.
+//! * [`super::ReferenceBackend`] — a pure-Rust, dependency-free,
+//!   seeded-deterministic model of the same contract; what CI runs the
+//!   whole pipeline against when no artifacts exist.
+//!
+//! The contract is the paper's runtime boundary (WebLLM's TVMjs glue):
+//! static-shape prefill/decode executables selected from a compiled
+//! menu, paged KV state owned by the backend and addressed by block
+//! tables, logits returned to the host per step.
+
+use super::exec::{RuntimeError, StepOutput};
+use crate::models::ModelConfig;
+
+/// One loaded model as the engine sees it: a static-shape prefill/decode
+/// menu over backend-resident paged KV state.
+///
+/// Implementations must honor the KV contract: logits are a function of
+/// the *full token prefix* a sequence's block table addresses, so
+/// chunked prefill, batched decode rows, padding slots, and prefix-page
+/// reuse are all observable through the returned logits.
+pub trait ModelBackend {
+    /// Architecture + scheduling config (shape menus, page geometry).
+    fn config(&self) -> &ModelConfig;
+
+    /// Prefill chunk sizes this backend can execute, ascending.
+    fn compiled_chunks(&self) -> Vec<usize>;
+
+    /// Decode batch sizes this backend can execute, ascending.
+    fn compiled_batches(&self) -> Vec<usize>;
+
+    /// Reset the KV pools to their pristine state (bench/test isolation).
+    fn reset_cache(&mut self) -> Result<(), RuntimeError>;
+
+    /// Run one prefill chunk for a single sequence.
+    ///
+    /// `ids` must already be padded to a compiled chunk size; `seq_len`
+    /// is the valid prefix; `block_table` the sequence's pages padded
+    /// with the garbage page 0 to `max_pages_per_seq`. Returns
+    /// last-token logits `[vocab]`.
+    fn prefill(
+        &mut self,
+        ids: &[i32],
+        seq_len: usize,
+        block_table: &[i32],
+    ) -> Result<StepOutput, RuntimeError>;
+
+    /// Run one batched decode step.
+    ///
+    /// All slices are `batch`-sized (a compiled batch size); padding
+    /// slots use seq_len 0 / position 0 / a garbage-page block-table
+    /// row. Returns logits `[batch * vocab]`.
+    fn decode(
+        &mut self,
+        ids: &[i32],
+        positions: &[i32],
+        seq_lens: &[i32],
+        block_tables: &[i32],
+    ) -> Result<StepOutput, RuntimeError>;
+
+    /// Bytes of weight traffic one step touches (browser cost model).
+    fn weight_bytes(&self) -> usize;
+
+    /// Wall time spent loading/compiling this model.
+    fn load_seconds(&self) -> f64;
+}

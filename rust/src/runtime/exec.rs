@@ -1,5 +1,6 @@
 //! Model execution: compiled executables + device-resident state.
 
+use super::backend::ModelBackend;
 use super::literal::{dtype_of, i32_buffer, raw_buffer, zero_f32_buffer};
 use crate::browser::BrowserEnv;
 use crate::models::{Manifest, ModelRecord, WeightFile};
@@ -283,6 +284,54 @@ impl ModelRuntime {
     }
 }
 
+/// The XLA runtime is one [`ModelBackend`]; the engine only ever sees
+/// the trait. Inherent methods stay for the benches and runtime tests
+/// that drive this backend directly.
+impl ModelBackend for ModelRuntime {
+    fn config(&self) -> &crate::models::ModelConfig {
+        ModelRuntime::config(self)
+    }
+
+    fn compiled_chunks(&self) -> Vec<usize> {
+        ModelRuntime::compiled_chunks(self)
+    }
+
+    fn compiled_batches(&self) -> Vec<usize> {
+        ModelRuntime::compiled_batches(self)
+    }
+
+    fn reset_cache(&mut self) -> Result<(), RuntimeError> {
+        ModelRuntime::reset_cache(self)
+    }
+
+    fn prefill(
+        &mut self,
+        ids: &[i32],
+        seq_len: usize,
+        block_table: &[i32],
+    ) -> Result<StepOutput, RuntimeError> {
+        ModelRuntime::prefill(self, ids, seq_len, block_table)
+    }
+
+    fn decode(
+        &mut self,
+        ids: &[i32],
+        positions: &[i32],
+        seq_lens: &[i32],
+        block_tables: &[i32],
+    ) -> Result<StepOutput, RuntimeError> {
+        ModelRuntime::decode(self, ids, positions, seq_lens, block_tables)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        ModelRuntime::weight_bytes(self)
+    }
+
+    fn load_seconds(&self) -> f64 {
+        self.load_seconds
+    }
+}
+
 fn compile_hlo(
     client: &PjRtClient,
     path: &std::path::Path,
@@ -298,6 +347,8 @@ fn compile_hlo(
 /// `dispatchWorkgroups` submissions WebLLM's compiled model issues per
 /// token: per layer 2 norms + 4 projection GEMMs + rope + attention +
 /// 3 MLP GEMMs + cache append, plus embedding + final norm + lm_head.
-fn dispatch_estimate(cfg: &crate::models::ModelConfig) -> usize {
+/// Shared with the reference backend so both charge the browser cost
+/// model identically.
+pub(crate) fn dispatch_estimate(cfg: &crate::models::ModelConfig) -> usize {
     cfg.n_layers * 11 + 3
 }

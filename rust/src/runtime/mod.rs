@@ -14,11 +14,21 @@
 //! client and every runtime it owns live on ONE thread — naturally the
 //! worker thread (`coordinator::worker`), exactly where WebLLM's
 //! `MLCEngine` keeps its GPUDevice.
+//!
+//! The engine itself is written against the [`ModelBackend`] trait, not
+//! this XLA runtime: [`reference::ReferenceBackend`] implements the same
+//! contract in pure Rust (seeded-deterministic logits over real paged-KV
+//! semantics) so the full pipeline runs — and is tested — without
+//! artifacts.
 
+mod backend;
 mod exec;
 mod literal;
+pub mod reference;
 
+pub use backend::ModelBackend;
 pub use exec::{ModelRuntime, RuntimeError, StepOutput};
+pub use reference::ReferenceBackend;
 
 use std::cell::RefCell;
 

@@ -1,0 +1,361 @@
+//! Deterministic reference backend: the [`ModelBackend`] contract in
+//! pure Rust, no artifacts, no PJRT.
+//!
+//! The role model is llguidance's practice of pinning constrained
+//! decoding against an exhaustive reference implementation: instead of a
+//! neural network, logits here are a *seeded-deterministic function of
+//! the full token prefix* a sequence's block table addresses. That makes
+//! every KV-cache behavior checkable with exact equality:
+//!
+//! * **cache chaining** — decoding the same token at a longer prefix
+//!   must change the logits (the prefix fingerprint grew);
+//! * **batch transparency** — a row's logits depend only on its own
+//!   prefix, so the b=1 and padded b=4 executables must agree bit-for-bit;
+//! * **prefix-page reuse** — a reused page already holds the right
+//!   tokens, so a prefix-cache hit is indistinguishable from a rewrite;
+//! * **padding slots** — seq_len-0 rows are skipped entirely and can
+//!   never leak into live rows.
+//!
+//! The backend keeps a token-per-slot page pool mirroring the real
+//! device cache's geometry (`num_pages` x `page_size`). Prefill writes
+//! positions `0..seq_len` through the block table; decode writes the
+//! stepped token at its position, then "attends" by folding every cached
+//! position of the prefix into a fingerprint that seeds the logit hash.
+//! Reading a never-written slot is a hard error — a scheduler or
+//! block-table bug surfaces as a failed test, not silent garbage.
+
+use super::backend::ModelBackend;
+use super::exec::{dispatch_estimate, RuntimeError, StepOutput};
+use crate::browser::BrowserEnv;
+use crate::models::ModelConfig;
+use std::time::Instant;
+
+/// Slot sentinel: no token has ever been written here.
+const UNWRITTEN: i32 = -1;
+
+/// SplitMix64: the one-shot mixer behind both the prefix fingerprint and
+/// the per-token logit hash.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Pure-Rust seeded-deterministic [`ModelBackend`]. See module docs.
+pub struct ReferenceBackend {
+    config: ModelConfig,
+    /// Model identity: mixed from the engine seed and the model name, so
+    /// two models loaded in one engine disagree on every logit while two
+    /// engines loading the same model agree exactly.
+    seed: u64,
+    /// Token id whose logit gets a deterministic boost on ~1/13 of
+    /// states, so unconstrained generations stop organically (finish
+    /// reason diversity) instead of always running to `max_tokens`.
+    stop_token: Option<u32>,
+    /// Flat `[num_pages * page_size]` token-per-slot pool.
+    pages: Vec<i32>,
+    /// Browser-environment cost model; `None` in native mode.
+    env: Option<BrowserEnv>,
+    dispatches_per_step: usize,
+    load_seconds: f64,
+}
+
+impl ReferenceBackend {
+    /// Build a backend for `config`. `seed` is the engine-level model
+    /// seed (the model name is mixed in internally); `stop_token` is the
+    /// tokenizer's EOS id, if generation should be able to end early.
+    pub fn new(
+        config: ModelConfig,
+        seed: u64,
+        stop_token: Option<u32>,
+        env: Option<BrowserEnv>,
+    ) -> Self {
+        let t0 = Instant::now();
+        let pages = vec![UNWRITTEN; config.num_pages * config.page_size];
+        let dispatches_per_step = dispatch_estimate(&config);
+        let seed = splitmix64(seed ^ fnv1a(config.name.as_bytes()));
+        Self {
+            config,
+            seed,
+            stop_token,
+            pages,
+            env,
+            dispatches_per_step,
+            load_seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// The mixed per-model seed (test introspection).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Flat pool index for `pos` under `table`, validating the page id.
+    fn page_slot(&self, pos: usize, table: &[i32]) -> Result<usize, RuntimeError> {
+        let ps = self.config.page_size;
+        let page = *table.get(pos / ps).ok_or_else(|| {
+            RuntimeError::Shape(format!("position {pos} beyond block table"))
+        })?;
+        if page < 0 || page as usize >= self.config.num_pages {
+            return Err(RuntimeError::Shape(format!(
+                "page {page} out of pool (num_pages {})",
+                self.config.num_pages
+            )));
+        }
+        Ok(page as usize * ps + pos % ps)
+    }
+
+    /// Fold every cached token of the prefix `[0, seq_len)` into a
+    /// fingerprint — the reference analog of attention over the KV
+    /// cache. Order- and content-sensitive; errors on unwritten slots.
+    fn prefix_fingerprint(&self, seq_len: usize, table: &[i32]) -> Result<u64, RuntimeError> {
+        let mut h = self.seed ^ 0xA076_1D64_78BD_642F;
+        for pos in 0..seq_len {
+            let tok = self.pages[self.page_slot(pos, table)?];
+            if tok == UNWRITTEN {
+                return Err(RuntimeError::Shape(format!(
+                    "KV position {pos} read before any write (page {}, slot {})",
+                    table[pos / self.config.page_size],
+                    pos % self.config.page_size
+                )));
+            }
+            h = splitmix64(h ^ (tok as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        }
+        Ok(h)
+    }
+
+    /// Fill `out` (one `[vocab]` row) from the prefix fingerprint: every
+    /// logit uniform in [-4, 4), plus the deterministic EOS boost.
+    fn fill_logits(&self, h: u64, out: &mut [f32]) {
+        for (v, slot) in out.iter_mut().enumerate() {
+            let r = splitmix64(h ^ (v as u64).wrapping_mul(0xD1B5_4A32_D192_ED03));
+            *slot = (r >> 40) as f32 / (1u64 << 24) as f32 * 8.0 - 4.0;
+        }
+        if let Some(eos) = self.stop_token {
+            if let Some(slot) = out.get_mut(eos as usize) {
+                if splitmix64(h ^ 0xE05) % 13 == 0 {
+                    // +8 dominates the [-4, 4) band: greedy decode stops
+                    // here, and softmax sampling almost surely does.
+                    *slot += 8.0;
+                }
+            }
+        }
+    }
+
+    fn charge_env(&self) {
+        if let Some(env) = &self.env {
+            env.charge_dispatches(self.dispatches_per_step, ModelBackend::weight_bytes(self));
+        }
+    }
+}
+
+impl ModelBackend for ReferenceBackend {
+    fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    fn compiled_chunks(&self) -> Vec<usize> {
+        self.config.prefill_chunks.clone()
+    }
+
+    fn compiled_batches(&self) -> Vec<usize> {
+        self.config.decode_batches.clone()
+    }
+
+    fn reset_cache(&mut self) -> Result<(), RuntimeError> {
+        self.pages.fill(UNWRITTEN);
+        Ok(())
+    }
+
+    fn prefill(
+        &mut self,
+        ids: &[i32],
+        seq_len: usize,
+        block_table: &[i32],
+    ) -> Result<StepOutput, RuntimeError> {
+        let chunk = ids.len();
+        if !self.config.prefill_chunks.contains(&chunk) {
+            return Err(RuntimeError::Shape(format!(
+                "no prefill executable for chunk {chunk} (have {:?})",
+                self.compiled_chunks()
+            )));
+        }
+        let mp = self.config.max_pages_per_seq();
+        if block_table.len() != mp {
+            return Err(RuntimeError::Shape(format!(
+                "block_table len {} != {mp}",
+                block_table.len()
+            )));
+        }
+        if seq_len == 0 || seq_len > chunk {
+            return Err(RuntimeError::Shape(format!("seq_len {seq_len} not in 1..={chunk}")));
+        }
+
+        let t0 = Instant::now();
+        for (pos, &tok) in ids.iter().enumerate().take(seq_len) {
+            let slot = self.page_slot(pos, block_table)?;
+            self.pages[slot] = tok;
+        }
+        let h = self.prefix_fingerprint(seq_len, block_table)?;
+        let mut logits = vec![0.0f32; self.config.vocab_size];
+        self.fill_logits(h, &mut logits);
+        let exec_seconds = t0.elapsed().as_secs_f64();
+
+        self.charge_env();
+        Ok(StepOutput { logits, dispatches: self.dispatches_per_step, exec_seconds })
+    }
+
+    fn decode(
+        &mut self,
+        ids: &[i32],
+        positions: &[i32],
+        seq_lens: &[i32],
+        block_tables: &[i32],
+    ) -> Result<StepOutput, RuntimeError> {
+        let batch = ids.len();
+        if !self.config.decode_batches.contains(&batch) {
+            return Err(RuntimeError::Shape(format!(
+                "no decode executable for batch {batch} (have {:?})",
+                self.compiled_batches()
+            )));
+        }
+        let mp = self.config.max_pages_per_seq();
+        if positions.len() != batch || seq_lens.len() != batch {
+            return Err(RuntimeError::Shape("positions/seq_lens length mismatch".into()));
+        }
+        if block_tables.len() != batch * mp {
+            return Err(RuntimeError::Shape(format!(
+                "block_tables len {} != {}",
+                block_tables.len(),
+                batch * mp
+            )));
+        }
+
+        let t0 = Instant::now();
+        let vocab = self.config.vocab_size;
+        let mut logits = vec![0.0f32; batch * vocab];
+        for row in 0..batch {
+            let len = seq_lens[row];
+            if len <= 0 {
+                continue; // padding slot: untouched, logits stay zero
+            }
+            let len = len as usize;
+            let pos = positions[row];
+            if pos < 0 || pos as usize != len - 1 {
+                return Err(RuntimeError::Shape(format!(
+                    "row {row}: position {pos} is not seq_len-1 ({len})"
+                )));
+            }
+            let table = &block_tables[row * mp..(row + 1) * mp];
+            let slot = self.page_slot(pos as usize, table)?;
+            self.pages[slot] = ids[row];
+            let h = self.prefix_fingerprint(len, table)?;
+            self.fill_logits(h, &mut logits[row * vocab..(row + 1) * vocab]);
+        }
+        let exec_seconds = t0.elapsed().as_secs_f64();
+
+        self.charge_env();
+        Ok(StepOutput { logits, dispatches: self.dispatches_per_step, exec_seconds })
+    }
+
+    fn weight_bytes(&self) -> usize {
+        // Synthetic f32 footprint; feeds the browser bandwidth tax.
+        self.config.param_count as usize * 4
+    }
+
+    fn load_seconds(&self) -> f64 {
+        self.load_seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::reference_model_config;
+
+    fn backend() -> ReferenceBackend {
+        ReferenceBackend::new(reference_model_config("tiny-ref").unwrap(), 7, Some(2), None)
+    }
+
+    fn padded(ids: &[i32], chunk: usize) -> Vec<i32> {
+        let mut v = vec![0i32; chunk];
+        v[..ids.len()].copy_from_slice(ids);
+        v
+    }
+
+    #[test]
+    fn same_prefix_same_logits_across_instances() {
+        let mut a = backend();
+        let mut b = backend();
+        let mp = a.config().max_pages_per_seq();
+        let mut bt = vec![0i32; mp];
+        bt[0] = 1;
+        let ids = padded(&[5, 6, 7], 16);
+        assert_eq!(
+            a.prefill(&ids, 3, &bt).unwrap().logits,
+            b.prefill(&ids, 3, &bt).unwrap().logits
+        );
+    }
+
+    #[test]
+    fn logits_are_order_sensitive() {
+        let mut a = backend();
+        let mut b = backend();
+        let mp = a.config().max_pages_per_seq();
+        let mut bt = vec![0i32; mp];
+        bt[0] = 1;
+        let x = a.prefill(&padded(&[5, 6], 16), 2, &bt).unwrap().logits;
+        let y = b.prefill(&padded(&[6, 5], 16), 2, &bt).unwrap().logits;
+        assert_ne!(x, y, "swapping token order must change logits");
+    }
+
+    #[test]
+    fn decode_sees_grown_context() {
+        let mut rt = backend();
+        let mp = rt.config().max_pages_per_seq();
+        let mut bt = vec![0i32; mp];
+        bt[0] = 1;
+        bt[1] = 2;
+        rt.prefill(&padded(&[10, 11, 12, 13], 16), 4, &bt).unwrap();
+        let one = rt.decode(&[42], &[4], &[5], &bt).unwrap();
+        let two = rt.decode(&[42], &[5], &[6], &bt).unwrap();
+        assert_ne!(one.logits, two.logits, "cache state must affect logits");
+    }
+
+    #[test]
+    fn reading_unwritten_kv_is_an_error() {
+        let mut rt = backend();
+        let mp = rt.config().max_pages_per_seq();
+        let mut bt = vec![0i32; mp];
+        bt[0] = 3;
+        // Decode claims a 4-token prefix that was never prefilled.
+        let err = rt.decode(&[9], &[3], &[4], &bt).unwrap_err();
+        assert!(err.to_string().contains("read before any write"), "{err}");
+    }
+
+    #[test]
+    fn model_name_changes_logits() {
+        let mut a =
+            ReferenceBackend::new(reference_model_config("tiny-ref").unwrap(), 7, None, None);
+        let mut b =
+            ReferenceBackend::new(reference_model_config("tiny-ref-b").unwrap(), 7, None, None);
+        let mp = a.config().max_pages_per_seq();
+        let mut bt = vec![0i32; mp];
+        bt[0] = 1;
+        let ids = padded(&[5], 16);
+        assert_ne!(
+            a.prefill(&ids, 1, &bt).unwrap().logits,
+            b.prefill(&ids, 1, &bt).unwrap().logits
+        );
+    }
+}

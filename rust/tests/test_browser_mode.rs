@@ -1,48 +1,51 @@
 //! Browser-mode integration: the cost model must slow things down without
 //! changing any observable output (same tokens, same usage counts).
+//!
+//! Runs unconditionally on the deterministic reference backend — the
+//! cost model is backend-agnostic (dispatch counts + weight traffic +
+//! WASM CPU stages), so its transparency and slowdown are fully
+//! checkable without artifacts.
 
 use webllm::api::ChatCompletionRequest;
 use webllm::browser::BrowserConfig;
-use webllm::coordinator::{EngineConfig, MLCEngine};
+use webllm::coordinator::{EngineConfig, MLCEngine, ServiceWorkerMLCEngine};
 
-fn have_artifacts() -> bool {
-    webllm::artifacts_dir().join("manifest.json").exists()
-}
+const MODEL: &str = "tiny-ref";
 
 fn req() -> ChatCompletionRequest {
-    let mut r = ChatCompletionRequest::new("tiny-2m").user("browser parity test");
-    r.max_tokens = 10;
+    let mut r = ChatCompletionRequest::new(MODEL).user("browser parity test");
+    // 24 decode steps: the injected per-step overhead (>1ms even at
+    // default calibration) accumulates far past scheduler noise.
+    r.max_tokens = 24;
     r.sampling.temperature = 0.0;
+    // Pin the token count so the two modes do identical work.
+    r.sampling.logit_bias.insert(2, -100.0); // <eos>
+    r.sampling.logit_bias.insert(7, -100.0); // <|end|>
     r
 }
 
 #[test]
 fn browser_mode_is_output_transparent() {
-    if !have_artifacts() {
-        return;
-    }
-    let mut native = MLCEngine::new(&EngineConfig::native(&["tiny-2m"])).unwrap();
-    let mut browser = MLCEngine::new(&EngineConfig::browser(&["tiny-2m"])).unwrap();
+    let mut native = MLCEngine::new(&EngineConfig::reference(&[MODEL])).unwrap();
+    let mut browser = MLCEngine::new(&EngineConfig::reference_browser(&[MODEL])).unwrap();
     let a = native.chat_completion(req()).unwrap();
     let b = browser.chat_completion(req()).unwrap();
     assert_eq!(a.text(), b.text(), "cost model must not change outputs");
     assert_eq!(a.usage.prompt_tokens, b.usage.prompt_tokens);
     assert_eq!(a.usage.completion_tokens, b.usage.completion_tokens);
+    assert_eq!(a.choices[0].finish_reason, b.choices[0].finish_reason);
 }
 
 #[test]
 fn browser_mode_is_slower_and_accounted() {
-    if !have_artifacts() {
-        return;
-    }
     // Exaggerated overheads so the delta is unambiguous at tiny scale.
-    let mut cfg = EngineConfig::browser(&["tiny-2m"]);
+    let mut cfg = EngineConfig::reference_browser(&[MODEL]);
     cfg.browser = Some(BrowserConfig {
         dispatch_overhead_us: 200.0,
         bandwidth_tax_us_per_mb: 10_000.0,
         wasm_slowdown: 2.0,
     });
-    let mut native = MLCEngine::new(&EngineConfig::native(&["tiny-2m"])).unwrap();
+    let mut native = MLCEngine::new(&EngineConfig::reference(&[MODEL])).unwrap();
     let mut browser = MLCEngine::new(&cfg).unwrap();
     native.chat_completion(req()).unwrap(); // warm
     browser.chat_completion(req()).unwrap();
@@ -54,21 +57,42 @@ fn browser_mode_is_slower_and_accounted() {
         b.usage.decode_tokens_per_s,
         a.usage.decode_tokens_per_s
     );
+    assert!(b.usage.e2e_s > a.usage.e2e_s);
 }
 
 #[test]
-fn default_config_retention_is_plausible_for_tiny() {
-    if !have_artifacts() {
-        return;
-    }
-    // tiny-2m steps are so fast (~5ms) that even small absolute overhead
-    // is a large fraction; just require a sane, non-degenerate ratio.
-    let mut native = MLCEngine::new(&EngineConfig::native(&["tiny-2m"])).unwrap();
-    let mut browser = MLCEngine::new(&EngineConfig::browser(&["tiny-2m"])).unwrap();
+fn default_config_is_still_slower() {
+    // Even the default (calibrated) overheads inject >1ms per decode step
+    // at tiny-ref's weight footprint, dwarfing the reference backend's
+    // microsecond steps.
+    let mut native = MLCEngine::new(&EngineConfig::reference(&[MODEL])).unwrap();
+    let mut browser = MLCEngine::new(&EngineConfig::reference_browser(&[MODEL])).unwrap();
     native.chat_completion(req()).unwrap();
     browser.chat_completion(req()).unwrap();
     let a = native.chat_completion(req()).unwrap();
     let b = browser.chat_completion(req()).unwrap();
     let retention = b.usage.decode_tokens_per_s / a.usage.decode_tokens_per_s;
-    assert!(retention > 0.2 && retention <= 1.5, "retention {retention}");
+    assert!(retention > 0.0, "retention {retention}");
+    assert!(retention < 1.0, "browser mode must retain <100%: {retention}");
+}
+
+#[test]
+fn browser_env_presence_tracks_config() {
+    let native = MLCEngine::new(&EngineConfig::reference(&[MODEL])).unwrap();
+    assert!(native.browser_env().is_none());
+    let browser = MLCEngine::new(&EngineConfig::reference_browser(&[MODEL])).unwrap();
+    assert!(browser.browser_env().is_some());
+}
+
+#[test]
+fn browser_worker_path_is_transparent() {
+    // The full frontend->worker->engine path in browser mode still
+    // matches native-mode outputs byte-for-byte.
+    let mut fe =
+        ServiceWorkerMLCEngine::create(EngineConfig::reference_browser(&[MODEL])).unwrap();
+    let over_wire = fe.chat_completion(req()).unwrap();
+    let mut native = MLCEngine::new(&EngineConfig::reference(&[MODEL])).unwrap();
+    let direct = native.chat_completion(req()).unwrap();
+    assert_eq!(over_wire.text(), direct.text());
+    assert_eq!(over_wire.usage.completion_tokens, direct.usage.completion_tokens);
 }

@@ -1,15 +1,44 @@
 //! HTTP endpoint integration: real TCP round-trips against the served
-//! engine — non-streaming, streaming (SSE), health, and error paths.
+//! engine — non-streaming, streaming (SSE), health, error paths, and
+//! concurrent clients.
+//!
+//! Runs unconditionally on the deterministic reference backend; each
+//! test binds its own port so the suites can run in parallel.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 use webllm::coordinator::EngineConfig;
-use webllm::http::{serve, sse_parse, ServerConfig};
-use webllm::json::parse;
+use webllm::http::{serve, ServerConfig};
+use webllm::json::{parse, Value};
 
-fn have_artifacts() -> bool {
-    webllm::artifacts_dir().join("manifest.json").exists()
+const MODEL: &str = "tiny-ref";
+
+fn start_server(
+    addr: &'static str,
+    max_requests: usize,
+) -> std::thread::JoinHandle<Result<(), String>> {
+    let cfg = ServerConfig {
+        addr: addr.into(),
+        engine: EngineConfig::reference(&[MODEL]),
+        // Only engine-handled completions count toward the shutdown quota
+        // (parse-level 400s and 404s never reach the engine).
+        max_requests: Some(max_requests),
+    };
+    let handle = std::thread::spawn(move || serve(cfg));
+    // Wait for readiness via /health.
+    for _ in 0..600 {
+        if let Ok(mut s) = TcpStream::connect(addr) {
+            let _ = write!(s, "GET /health HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n");
+            let mut b = String::new();
+            let _ = s.read_to_string(&mut b);
+            if b.contains("200 OK") {
+                return handle;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("server on {addr} never became healthy");
 }
 
 fn post(addr: &str, path: &str, body: &str) -> String {
@@ -26,43 +55,61 @@ fn post(addr: &str, path: &str, body: &str) -> String {
     out
 }
 
+fn body_of(resp: &str) -> &str {
+    resp.split_once("\r\n\r\n").expect("no header/body split").1
+}
+
+/// Strict line-by-line SSE parser: every frame must be exactly one
+/// `data: ...` line terminated by a blank line, with `data: [DONE]` as
+/// the final frame. Returns the parsed JSON events.
+fn sse_parse_strict(body: &str) -> (Vec<Value>, bool) {
+    let mut events = Vec::new();
+    let mut done = false;
+    let mut lines = body.lines();
+    while let Some(line) = lines.next() {
+        if line.is_empty() {
+            continue;
+        }
+        let data = line
+            .strip_prefix("data: ")
+            .unwrap_or_else(|| panic!("non-SSE line in stream: {line:?}"));
+        assert!(!done, "frame after [DONE]: {line:?}");
+        if data == "[DONE]" {
+            done = true;
+        } else {
+            events.push(parse(data).unwrap_or_else(|e| panic!("bad SSE json: {e}: {data:?}")));
+        }
+        assert_eq!(lines.next(), Some(""), "SSE frame not blank-line terminated");
+    }
+    (events, done)
+}
+
+fn content_of(completion: &Value) -> String {
+    completion
+        .get("choices")
+        .and_then(|c| c.at(0))
+        .and_then(|c| c.get("message"))
+        .and_then(|m| m.get("content"))
+        .and_then(Value::as_str)
+        .expect("completion has message content")
+        .to_string()
+}
+
 #[test]
 fn endpoint_serves_completions_and_errors() {
-    if !have_artifacts() {
-        return;
-    }
     let addr = "127.0.0.1:18091";
-    let cfg = ServerConfig {
-        addr: addr.into(),
-        engine: EngineConfig::native(&["tiny-2m"]),
-        // Only engine-handled completions count toward the shutdown quota
-        // (parse-level 400s and 404s never reach the engine).
-        max_requests: Some(2),
-    };
-    let server = std::thread::spawn(move || serve(cfg));
-
-    // wait for readiness via /health
-    for _ in 0..600 {
-        if let Ok(mut s) = TcpStream::connect(addr) {
-            let _ = write!(s, "GET /health HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n");
-            let mut b = String::new();
-            let _ = s.read_to_string(&mut b);
-            if b.contains("200 OK") {
-                break;
-            }
-        }
-        std::thread::sleep(Duration::from_millis(200));
-    }
+    // Quota of 3: two completions + the engine-rejected unknown model
+    // (parse-level 400s and route 404s never reach the engine).
+    let server = start_server(addr, 3);
 
     // 1. non-streaming completion
     let resp = post(
         addr,
         "/v1/chat/completions",
-        r#"{"model":"tiny-2m","messages":[{"role":"user","content":"hi"}],"max_tokens":5,"temperature":0}"#,
+        r#"{"model":"tiny-ref","messages":[{"role":"user","content":"hi"}],"max_tokens":5,"temperature":0}"#,
     );
     assert!(resp.contains("200 OK"), "{resp}");
-    let body = resp.split_once("\r\n\r\n").unwrap().1;
-    let v = parse(body).unwrap();
+    let v = parse(body_of(&resp)).unwrap();
     assert_eq!(v.get("object").unwrap().as_str(), Some("chat.completion"));
     assert!(v.get("usage").unwrap().get("completion_tokens").unwrap().as_usize().unwrap() <= 5);
 
@@ -70,27 +117,139 @@ fn endpoint_serves_completions_and_errors() {
     let resp = post(
         addr,
         "/v1/chat/completions",
-        r#"{"model":"tiny-2m","messages":[{"role":"user","content":"hi"}],"max_tokens":5,"temperature":0,"stream":true}"#,
+        r#"{"model":"tiny-ref","messages":[{"role":"user","content":"hi"}],"max_tokens":5,"temperature":0,"stream":true}"#,
     );
     assert!(resp.contains("text/event-stream"), "{resp}");
-    let body = resp.split_once("\r\n\r\n").unwrap().1;
-    let (events, done) = sse_parse(body);
+    let (events, done) = sse_parse_strict(body_of(&resp));
     assert!(done, "missing [DONE]");
     assert!(!events.is_empty());
-    assert!(events
-        .last()
-        .unwrap()
-        .get("usage")
-        .is_some());
+    assert!(events.last().unwrap().get("usage").is_some());
 
     // 3. bad request -> 400 with OpenAI error shape
-    let resp = post(addr, "/v1/chat/completions", r#"{"model":"tiny-2m"}"#);
+    let resp = post(addr, "/v1/chat/completions", r#"{"model":"tiny-ref"}"#);
     assert!(resp.contains("400"), "{resp}");
     assert!(resp.contains("invalid_request_error"));
 
-    // 4. unknown route -> 404
+    // 4. unknown model -> 404 from the reference registry
+    let resp = post(
+        addr,
+        "/v1/chat/completions",
+        r#"{"model":"no-such","messages":[{"role":"user","content":"hi"}]}"#,
+    );
+    assert!(resp.contains("404"), "{resp}");
+
+    // 5. unknown route -> 404
     let resp = post(addr, "/v1/nope", "{}");
     assert!(resp.contains("404"), "{resp}");
+
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn endpoint_sse_stream_matches_nonstreaming() {
+    let addr = "127.0.0.1:18092";
+    let server = start_server(addr, 2);
+    // Ban empty-byte tokens so the text is non-trivial and chunked.
+    let base = r#""model":"tiny-ref","messages":[{"role":"user","content":"stream equivalence"}],"max_tokens":10,"temperature":0,"logit_bias":{"0":-100,"1":-100,"2":-100,"3":-100,"4":-100,"5":-100,"6":-100,"7":-100}"#;
+
+    let resp = post(addr, "/v1/chat/completions", &format!("{{{base}}}"));
+    assert!(resp.contains("200 OK"), "{resp}");
+    let full = parse(body_of(&resp)).unwrap();
+    let full_text = content_of(&full);
+    assert!(!full_text.is_empty());
+
+    let resp = post(addr, "/v1/chat/completions", &format!("{{{base},\"stream\":true}}"));
+    assert!(resp.contains("text/event-stream"), "{resp}");
+    let (events, done) = sse_parse_strict(body_of(&resp));
+    assert!(done, "missing [DONE] terminator");
+
+    // Every event is a chunk object; deltas concatenate to the
+    // non-streaming content; the final chunk carries finish + usage.
+    let mut streamed = String::new();
+    for ev in &events {
+        assert_eq!(ev.get("object").unwrap().as_str(), Some("chat.completion.chunk"));
+        if let Some(delta) = ev
+            .get("choices")
+            .and_then(|c| c.at(0))
+            .and_then(|c| c.get("delta"))
+            .and_then(|d| d.get("content"))
+            .and_then(Value::as_str)
+        {
+            streamed.push_str(delta);
+        }
+    }
+    assert_eq!(streamed, full_text, "SSE deltas must reassemble the full text");
+    let last = events.last().unwrap();
+    assert_eq!(
+        last.get("choices").unwrap().at(0).unwrap().get("finish_reason").unwrap().as_str(),
+        Some("length")
+    );
+    assert!(last.get("usage").is_some());
+
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn endpoint_structured_generation_over_http() {
+    let addr = "127.0.0.1:18093";
+    let server = start_server(addr, 1);
+    // logit_bias 133 = byte token '}' (+5): closes the integer after few
+    // digits so the derivation finishes well inside max_tokens.
+    let body = r#"{
+        "model":"tiny-ref",
+        "messages":[{"role":"user","content":"emit json"}],
+        "max_tokens":100,
+        "seed":3,
+        "logit_bias":{"133":5},
+        "response_format":{"type":"json_schema","schema":{
+            "type":"object",
+            "properties":{"ok":{"type":"boolean"},"n":{"type":"integer"}},
+            "required":["ok","n"]
+        }}
+    }"#;
+    let resp = post(addr, "/v1/chat/completions", body);
+    assert!(resp.contains("200 OK"), "{resp}");
+    let v = parse(body_of(&resp)).unwrap();
+    let text = content_of(&v);
+    let obj = parse(&text).unwrap_or_else(|e| panic!("not JSON over HTTP: {e}: {text}"));
+    assert!(obj.get("ok").is_some() && obj.get("n").is_some(), "{text}");
+
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn endpoint_concurrent_clients_batch() {
+    let addr = "127.0.0.1:18094";
+    let server = start_server(addr, 4);
+    let mk_body = |prompt: &str| {
+        format!(
+            r#"{{"model":"tiny-ref","messages":[{{"role":"user","content":"{prompt}"}}],"max_tokens":6,"temperature":0,"logit_bias":{{"2":-100,"7":-100}}}}"#
+        )
+    };
+    // Two distinct prompts, each posted twice, all in flight at once.
+    let prompts = ["client one", "client two", "client one", "client two"];
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let body = mk_body(p);
+            std::thread::spawn(move || post(addr, "/v1/chat/completions", &body))
+        })
+        .collect();
+    let responses: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let mut texts = Vec::new();
+    for resp in &responses {
+        assert!(resp.contains("200 OK"), "{resp}");
+        let v = parse(body_of(resp)).unwrap();
+        assert_eq!(
+            v.get("usage").unwrap().get("completion_tokens").unwrap().as_usize(),
+            Some(6)
+        );
+        texts.push(content_of(&v));
+    }
+    // Identical prompts produce identical greedy completions even under
+    // concurrent batching.
+    assert_eq!(texts[0], texts[2]);
+    assert_eq!(texts[1], texts[3]);
 
     server.join().unwrap().unwrap();
 }

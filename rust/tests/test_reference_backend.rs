@@ -1,0 +1,210 @@
+//! Reference-backend contract tests: the same runtime-layer checks
+//! `test_runtime.rs` runs against compiled XLA artifacts, executed
+//! unconditionally against `ReferenceBackend` through the `ModelBackend`
+//! trait object — shape validation, KV chaining, batch transparency,
+//! page-content addressing, and reset semantics.
+
+use webllm::models::reference_model_config;
+use webllm::runtime::{ModelBackend, ReferenceBackend};
+
+fn backend() -> Box<dyn ModelBackend> {
+    Box::new(ReferenceBackend::new(
+        reference_model_config("tiny-ref").unwrap(),
+        7,
+        Some(2),
+        None,
+    ))
+}
+
+fn padded(ids: &[i32], chunk: usize) -> Vec<i32> {
+    let mut v = vec![0i32; chunk];
+    v[..ids.len()].copy_from_slice(ids);
+    v
+}
+
+#[test]
+fn reports_compiled_shapes() {
+    let rt = backend();
+    assert_eq!(rt.compiled_chunks(), vec![16, 32, 64]);
+    assert_eq!(rt.compiled_batches(), vec![1, 2, 4, 8]);
+    assert!(rt.load_seconds() >= 0.0);
+    assert!(rt.weight_bytes() > 0);
+    assert_eq!(rt.config().name, "tiny-ref");
+}
+
+#[test]
+fn shape_errors_are_reported() {
+    let mut rt = backend();
+    let mp = rt.config().max_pages_per_seq();
+    // wrong chunk
+    assert!(rt.prefill(&[0; 24], 4, &vec![0; mp]).is_err());
+    // wrong block table length
+    assert!(rt.prefill(&[0; 16], 4, &[0; 3]).is_err());
+    // zero seq_len
+    assert!(rt.prefill(&[0; 16], 0, &vec![0; mp]).is_err());
+    // seq_len beyond chunk
+    assert!(rt.prefill(&[0; 16], 17, &vec![0; mp]).is_err());
+    // page id out of pool
+    let mut bad = vec![0i32; mp];
+    bad[0] = 10_000;
+    assert!(rt.prefill(&[0; 16], 4, &bad).is_err());
+    // wrong batch
+    assert!(rt.decode(&[0; 3], &[0; 3], &[0; 3], &vec![0; 3 * mp]).is_err());
+    // inconsistent lengths
+    assert!(rt.decode(&[0; 1], &[0; 2], &[0; 1], &vec![0; mp]).is_err());
+    // position not seq_len-1
+    assert!(rt.decode(&[0; 1], &[5], &[3], &vec![0; mp]).is_err());
+}
+
+#[test]
+fn prefill_then_decode_logits_change_with_context() {
+    let mut rt = backend();
+    let mp = rt.config().max_pages_per_seq();
+    let mut bt = vec![0i32; mp];
+    bt[0] = 1;
+    bt[1] = 2;
+
+    let out = rt.prefill(&padded(&[10, 11, 12, 13], 16), 4, &bt).unwrap();
+    assert_eq!(out.logits.len(), rt.config().vocab_size);
+
+    // Decode the same next token twice at successive positions: context
+    // grew, so logits must differ (cache actually chained).
+    let one = rt.decode(&[42], &[4], &[5], &bt).unwrap();
+    let two = rt.decode(&[42], &[5], &[6], &bt).unwrap();
+    let d: f32 = one
+        .logits
+        .iter()
+        .zip(&two.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(d > 1e-6, "cache state did not affect logits");
+}
+
+#[test]
+fn reset_cache_restores_initial_state() {
+    let mut rt = backend();
+    let mp = rt.config().max_pages_per_seq();
+    let mut bt = vec![0i32; mp];
+    bt[0] = 1;
+
+    let ids = padded(&[7, 8, 9], 16);
+    let a = rt.prefill(&ids, 3, &bt).unwrap();
+    // pollute cache, then reset, then repeat: identical logits expected
+    rt.decode(&[1], &[3], &[4], &bt).unwrap();
+    rt.reset_cache().unwrap();
+    let b = rt.prefill(&ids, 3, &bt).unwrap();
+    assert_eq!(a.logits, b.logits);
+}
+
+#[test]
+fn batch_sizes_agree_on_shared_sequence() {
+    // The same single sequence decoded through the b=1 and b=2 menus
+    // (padding the second slot) must produce identical logits — the
+    // static-shape menu must be semantically transparent.
+    let mut rt = backend();
+    let mp = rt.config().max_pages_per_seq();
+    let mut bt = vec![0i32; mp];
+    bt[0] = 1;
+
+    let ids = padded(&[5, 6], 16);
+    rt.prefill(&ids, 2, &bt).unwrap();
+    let one = rt.decode(&[9], &[2], &[3], &bt).unwrap();
+
+    // Fresh backend to replay with b=2 (cache state must match).
+    let mut rt2 = backend();
+    rt2.prefill(&ids, 2, &bt).unwrap();
+    let mut bt2 = vec![0i32; 2 * mp];
+    bt2[..mp].copy_from_slice(&bt);
+    let two = rt2.decode(&[9, 0], &[2, 0], &[3, 0], &bt2).unwrap();
+
+    let v = rt.config().vocab_size;
+    assert_eq!(one.logits[..v], two.logits[..v], "b=1 vs b=2 logits diverge");
+    // Padding row contributed nothing.
+    assert!(two.logits[v..].iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn logits_address_page_contents_not_page_ids() {
+    // Two sequences with identical token prefixes but different page
+    // assignments must see identical logits: the KV contract is
+    // content-addressed through the block table.
+    let mut rt = backend();
+    let mp = rt.config().max_pages_per_seq();
+    let ids = padded(&[21, 22, 23, 24, 25, 26, 27, 28, 29], 16);
+
+    let mut bt_a = vec![0i32; mp];
+    bt_a[0] = 1;
+    bt_a[1] = 2;
+    let a = rt.prefill(&ids, 9, &bt_a).unwrap();
+
+    let mut bt_b = vec![0i32; mp];
+    bt_b[0] = 5;
+    bt_b[1] = 6;
+    let b = rt.prefill(&ids, 9, &bt_b).unwrap();
+    assert_eq!(a.logits, b.logits, "page ids leaked into the logits");
+}
+
+#[test]
+fn shared_prefix_pages_are_readable_by_both_sequences() {
+    // Prefix-cache shape: sequence B's table points at A's first page
+    // (same first 8 tokens), then diverges. Both must decode fine, and
+    // B's logits must reflect its own full prefix.
+    let mut rt = backend();
+    let mp = rt.config().max_pages_per_seq();
+    let first_page: Vec<i32> = (100..108).collect();
+
+    let mut ids_a = first_page.clone();
+    ids_a.extend_from_slice(&[1, 2]);
+    let mut bt_a = vec![0i32; mp];
+    bt_a[0] = 1;
+    bt_a[1] = 2;
+    rt.prefill(&padded(&ids_a, 16), 10, &bt_a).unwrap();
+
+    // B shares page 1 (identical first 8 tokens), diverges in page 3.
+    let mut ids_b = first_page.clone();
+    ids_b.extend_from_slice(&[3, 4]);
+    let mut bt_b = vec![0i32; mp];
+    bt_b[0] = 1;
+    bt_b[1] = 3;
+    let b = rt.prefill(&padded(&ids_b, 16), 10, &bt_b).unwrap();
+
+    // An unshared replay of B's exact prefix agrees bit-for-bit.
+    let mut rt2 = backend();
+    let mut bt_c = vec![0i32; mp];
+    bt_c[0] = 7;
+    bt_c[1] = 8;
+    let c = rt2.prefill(&padded(&ids_b, 16), 10, &bt_c).unwrap();
+    assert_eq!(b.logits, c.logits, "shared-page prefix must be transparent");
+}
+
+#[test]
+fn dispatches_and_exec_time_reported() {
+    let mut rt = backend();
+    let mp = rt.config().max_pages_per_seq();
+    let mut bt = vec![0i32; mp];
+    bt[0] = 1;
+    let out = rt.prefill(&padded(&[3], 16), 1, &bt).unwrap();
+    // 2 layers x 11 + 3 (same estimate as the XLA runtime).
+    assert_eq!(out.dispatches, 25);
+    assert!(out.exec_seconds >= 0.0);
+}
+
+#[test]
+fn seed_and_model_identity_change_logits() {
+    let cfg = reference_model_config("tiny-ref").unwrap();
+    let mp = cfg.max_pages_per_seq();
+    let mut bt = vec![0i32; mp];
+    bt[0] = 1;
+    let ids = padded(&[50, 51], 16);
+
+    let mut s7 = ReferenceBackend::new(cfg.clone(), 7, None, None);
+    let mut s8 = ReferenceBackend::new(cfg.clone(), 8, None, None);
+    let a = s7.prefill(&ids, 2, &bt).unwrap();
+    let b = s8.prefill(&ids, 2, &bt).unwrap();
+    assert_ne!(a.logits, b.logits, "engine seed must matter");
+
+    let mut other =
+        ReferenceBackend::new(reference_model_config("tiny-ref-b").unwrap(), 7, None, None);
+    let c = other.prefill(&ids, 2, &bt).unwrap();
+    assert_ne!(a.logits, c.logits, "model identity must matter");
+}

@@ -1,12 +1,26 @@
-//! Runtime-layer integration: artifact loading, shape validation, cache
-//! chaining, and numeric agreement between compiled batch sizes.
+//! Runtime-layer integration for the **XLA backend**: artifact loading,
+//! shape validation, cache chaining, and numeric agreement between
+//! compiled batch sizes.
+//!
+//! These tests need compiled artifacts (`make artifacts`) and log a
+//! `SKIP:` marker when they are absent — CI greps the *reference*
+//! suites' output to ensure no reference test ever prints one. The same
+//! contract is exercised artifact-free in `test_reference_backend.rs`.
 
 use webllm::models::Manifest;
 use webllm::runtime::{thread_client, ModelRuntime};
 
 fn manifest() -> Option<Manifest> {
     let dir = webllm::artifacts_dir();
-    dir.join("manifest.json").exists().then(|| Manifest::load(&dir).unwrap())
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "SKIP: XLA artifacts not found in {} (run `make artifacts`); \
+             skipping XLA-specific runtime test",
+            dir.display()
+        );
+        return None;
+    }
+    Some(Manifest::load(&dir).unwrap())
 }
 
 #[test]
