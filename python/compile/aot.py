@@ -16,8 +16,8 @@ jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
 0.5.1 (the version the Rust `xla` crate binds) rejects; the text parser
 reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
 
-Argument order convention (shared with rust/src/runtime/artifact.rs):
-  prefill: [ids(T) i32, seq_len(1) i32, block_table(MP) i32] + weights + [k_pages, v_pages]
+Argument order convention (shared with rust/src/runtime/exec.rs):
+  prefill: [ids(T) i32, start_pos(1) i32, n(1) i32, block_table(MP) i32] + weights + [k_pages, v_pages]
   decode:  [ids(B) i32, positions(B) i32, seq_lens(B) i32, block_tables(B,MP) i32] + weights + [k_pages, v_pages]
 Outputs (a flat tuple): (logits f32, k_pages, v_pages).
 """
@@ -102,16 +102,17 @@ def lower_prefill(cfg: ModelConfig, chunk: int) -> str:
     wspecs = M.weight_specs(cfg)
     cshape = M.cache_specs(cfg)[0][1]
 
-    def fn(ids, seq_len, block_table, *flat):
-        w = {n: a for (n, _, _), a in zip(wspecs, flat[: len(wspecs)])}
+    def fn(ids, start_pos, n, block_table, *flat):
+        w = {name: a for (name, _, _), a in zip(wspecs, flat[: len(wspecs)])}
         k_pages, v_pages = flat[len(wspecs):]
         return M.prefill(
-            cfg, ids, seq_len[0], block_table, w, k_pages, v_pages,
+            cfg, ids, start_pos[0], n[0], block_table, w, k_pages, v_pages,
             q4_schedule=ARTIFACT_Q4_SCHEDULE,
         )
 
     args = [
         _struct((chunk,), "i32"),
+        _struct((1,), "i32"),
         _struct((1,), "i32"),
         _struct((cfg.max_pages_per_seq,), "i32"),
         *[_struct(s, t) for _, s, t in wspecs],
@@ -182,7 +183,8 @@ def build_model(cfg: ModelConfig, out_dir: str, seed: int, verbose: bool = True)
             "inputs": _spec_dicts(
                 [
                     ("ids", (chunk,), "i32"),
-                    ("seq_len", (1,), "i32"),
+                    ("start_pos", (1,), "i32"),
+                    ("n", (1,), "i32"),
                     ("block_table", (cfg.max_pages_per_seq,), "i32"),
                 ]
             ),
@@ -365,7 +367,11 @@ def main() -> None:
     print(f"kernel bench artifacts ({time.time() - t0:.1f}s)")
 
     manifest = {
-        "version": 1,
+        # Bumped to 2 when prefill gained the positioned calling
+        # convention [ids, start_pos, n, block_table]; the Rust loader
+        # rejects other versions so stale artifacts fail at load, not
+        # with an opaque execution error mid-prefill.
+        "version": 2,
         "fingerprint": fp,
         "group_size": GROUP_SIZE,
         "pack": PACK,

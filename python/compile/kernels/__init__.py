@@ -1,11 +1,12 @@
 """Layer-1 Pallas kernels (the AOT "WebGPU kernel" analog) + jnp oracles."""
 
 from .paged_attention import paged_attention_decode
-from .prefill_attention import prefill_attention
+from .prefill_attention import chunk_prefill_attention, prefill_attention
 from .q4_matmul import q4_matmul
 from .rmsnorm import rmsnorm
 
 __all__ = [
+    "chunk_prefill_attention",
     "paged_attention_decode",
     "prefill_attention",
     "q4_matmul",

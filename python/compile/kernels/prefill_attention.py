@@ -1,16 +1,31 @@
-"""Causal prefill attention Pallas kernel (flash-style, one chunk).
+"""Causal prefill attention Pallas kernels.
 
-WebLLM compiles a FlashAttention-like WebGPU kernel per model; the
-threadblock-per-(head, query-tile) decomposition maps here to a Pallas
-grid over heads with the whole chunk's scores kept in VMEM (chunks are
-<= 128 tokens, so the [T, T] score tile fits comfortably; see DESIGN.md §7).
+Two schedules:
 
-GQA is expressed in the BlockSpec index maps: query head h reads kv head
-h // (H / KVH), so no repeated K/V is ever materialized.
+* ``prefill_attention`` — flash-style attention over one self-contained
+  chunk (the whole prompt lives in the chunk). WebLLM compiles a
+  FlashAttention-like WebGPU kernel per model; the
+  threadblock-per-(head, query-tile) decomposition maps here to a Pallas
+  grid over heads with the whole chunk's scores kept in VMEM (chunks are
+  <= 128 tokens, so the [T, T] score tile fits comfortably; see
+  DESIGN.md §7). Kept as the oracle for ``ref.py`` consistency tests.
 
-Padding: positions >= seq_len are masked out of the keys; their output
-rows are well-defined (softmax over the valid prefix) but the model
-discards them.
+* ``chunk_prefill_attention`` — *positioned* chunk attention for the
+  scheduler's chunked prefill (Sarathi-style prefill/decode
+  interleaving): the chunk's queries sit at absolute positions
+  ``start_pos + i`` and attend over the **paged pool** through the
+  sequence's block table, so keys written by earlier chunks (or reused
+  verbatim from a prefix-cache hit) participate without recompute. The
+  page gather + dense masked softmax mirrors the decode kernel's
+  "gather" schedule (paged_attention.py), which is the XLA:CPU-
+  specialized lowering the artifacts use.
+
+GQA is expressed in the index maps / reshapes: query head h reads kv
+head h // (H / KVH), so no repeated K/V is ever materialized.
+
+Padding: chunk rows >= n (and pool positions >= start_pos + row + 1) are
+masked out of the keys; padding rows' outputs are well-defined but the
+model discards them.
 """
 
 from __future__ import annotations
@@ -71,3 +86,72 @@ def prefill_attention(
         out_shape=jax.ShapeDtypeStruct((t, h, dh), jnp.float32),
         interpret=True,
     )(seq_len, q, k, v)
+
+
+def _chunk_prefill_kernel(
+    start_ref, n_ref, bt_ref, q_ref, k_pages_ref, v_pages_ref, o_ref, *, scale: float, page: int
+):
+    """Single program, whole arrays: gather the sequence's pages, then a
+    dense causally-masked softmax at absolute positions (the XLA:CPU
+    schedule; see paged_attention._paged_attention_gather_kernel)."""
+    q = q_ref[...] * scale  # [T, KVH, group, Dh]
+    start = start_ref[0]
+    n = n_ref[0]
+    bt = bt_ref[...]  # [max_pages]
+    t, kvh, group, dh = q.shape
+    max_pages = bt.shape[0]
+    l_tot = max_pages * page
+
+    k = k_pages_ref[...]  # [P, page, KVH, Dh]
+    v = v_pages_ref[...]
+    # [max_pages, page, KVH, Dh] -> [L, KVH, Dh]
+    k_seq = k[bt].reshape(l_tot, kvh, dh)
+    v_seq = v[bt].reshape(l_tot, kvh, dh)
+
+    # [T, KVH, group, L]
+    s = jnp.einsum("thgd,lhd->thgl", q, k_seq, preferred_element_type=jnp.float32)
+    qpos = start + jax.lax.iota(jnp.int32, t)  # absolute query positions
+    kpos = jax.lax.iota(jnp.int32, l_tot)
+    # Causal at absolute positions; padding rows (i >= n) clamp to the
+    # last valid row's horizon so their softmax stays well-defined.
+    horizon = jnp.minimum(qpos, start + n - 1)
+    mask = kpos[None, :] <= horizon[:, None]  # [T, L]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("thgl,lhd->thgd", p, v_seq, preferred_element_type=jnp.float32)
+    o_ref[...] = out / jnp.maximum(l, 1e-30)
+
+
+def chunk_prefill_attention(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,
+    start_pos: jnp.ndarray,
+    n: jnp.ndarray,
+) -> jnp.ndarray:
+    """Positioned chunk attention over the paged pool. See module docstring.
+
+    q: f32[T, H, Dh] (chunk queries, rows >= n are padding);
+    k_pages, v_pages: f32[P, page, KVH, Dh] (chunk K/V already written);
+    block_table: i32[max_pages]; start_pos, n: i32[] or i32[1].
+    returns f32[T, H, Dh].
+    """
+    t, h, dh = q.shape
+    p_total, page, kvh, dh2 = k_pages.shape
+    assert dh == dh2 and h % kvh == 0
+    group = h // kvh
+    scale = 1.0 / float(dh) ** 0.5
+    start_pos = jnp.asarray(start_pos, jnp.int32).reshape(1)
+    n = jnp.asarray(n, jnp.int32).reshape(1)
+
+    # [T, KVH, group, Dh]: kv-head-major so GQA groups share one gather.
+    qg = q.reshape(t, kvh, group, dh)
+    out = pl.pallas_call(
+        functools.partial(_chunk_prefill_kernel, scale=scale, page=page),
+        out_shape=jax.ShapeDtypeStruct((t, kvh, group, dh), jnp.float32),
+        interpret=True,
+    )(start_pos, n, block_table, qg, k_pages, v_pages)
+    return out.reshape(t, h, dh)

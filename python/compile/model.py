@@ -5,9 +5,11 @@ This is the compute graph MLC-LLM would compile to WebGPU; here it lowers
 PJRT CPU client. Two entry points, both with fully static shapes, mirroring
 the static-shape discipline TVM imposes on WebLLM's WebGPU artifacts:
 
-  * ``prefill``  — one sequence, one padded chunk of T tokens. Writes the
-    chunk's K/V into the sequence's pages and returns the last valid
-    token's logits.
+  * ``prefill``  — one sequence, one padded *positioned* chunk of T
+    tokens at absolute positions start_pos..start_pos+n. Writes the
+    chunk's K/V into the sequence's pages, attends over the pool-resident
+    full prefix (earlier chunks / prefix-cache pages included), and
+    returns the last valid token's logits.
   * ``decode``   — B sequences, one token each (continuous-batching step).
     Appends each token's K/V to its page and runs PagedAttention.
 
@@ -30,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .configs import ModelConfig
-from .kernels import paged_attention_decode, prefill_attention, q4_matmul, rmsnorm
+from .kernels import chunk_prefill_attention, paged_attention_decode, q4_matmul, rmsnorm
 from .kernels.ref import GROUP_SIZE, PACK
 from .quantize import quantize_q4
 
@@ -199,19 +201,31 @@ def _stacked_layer_tree(weights: Dict[str, Array]) -> Dict[str, Array]:
 
 def prefill(
     cfg: ModelConfig,
-    ids: Array,          # i32[T]           padded token ids
-    seq_len: Array,      # i32[]            valid length (<= T)
+    ids: Array,          # i32[T]           padded token ids (n valid)
+    start_pos: Array,    # i32[]            absolute position of ids[0]
+    n: Array,            # i32[]            valid tokens in this chunk (<= T)
     block_table: Array,  # i32[max_pages]   pages allocated to this sequence
     weights: Dict[str, Array],
     k_pages: Array,      # f32[L, P, page, KVH, Dh]
     v_pages: Array,
     q4_schedule: str = "tiled",
 ) -> Tuple[Array, Array, Array]:
-    """Run one prompt chunk; returns (last-token logits [V], new caches)."""
+    """Run one *positioned* prompt chunk; returns (last-valid-token logits
+    [V], new caches).
+
+    The chunk's n tokens occupy absolute positions start_pos..start_pos+n
+    of the sequence. Each layer writes the chunk's K/V into the
+    sequence's pages, then attends over the **pool-resident full prefix**
+    [0, start_pos + n) through the block table (chunk_prefill_attention),
+    so positions written by earlier chunks — or reused verbatim from a
+    prefix-cache hit — participate without recompute. start_pos == 0,
+    n == prompt length is whole-prompt prefill.
+    """
     t = ids.shape[0]
     pg = cfg.page_size
-    positions = jax.lax.iota(jnp.int32, t)
-    valid = positions < seq_len
+    rel = jax.lax.iota(jnp.int32, t)
+    positions = start_pos + rel  # absolute positions (rope + paging)
+    valid = rel < n
 
     x = weights["embed"][ids]  # [T, D]
 
@@ -227,7 +241,7 @@ def prefill(
             nonlocal kp, vp
             kp = kp.at[page_ids, offsets].set(k)
             vp = vp.at[page_ids, offsets].set(v)
-            return prefill_attention(q, k, v, seq_len)
+            return chunk_prefill_attention(q, kp, vp, block_table, start_pos, n)
 
         x = _layer(cfg, x, lw, positions, attend, q4_schedule=q4_schedule)
         return x, (kp, vp)
@@ -237,7 +251,7 @@ def prefill(
     )
 
     x = rmsnorm(x, weights["final_norm"], eps=cfg.norm_eps)
-    last = jax.lax.dynamic_slice_in_dim(x, seq_len - 1, 1, axis=0)  # [1, D]
+    last = jax.lax.dynamic_slice_in_dim(x, n - 1, 1, axis=0)  # [1, D]
     logits = q4_matmul(
         last, weights["lm_head_packed"], weights["lm_head_scales"], schedule=q4_schedule
     )[0]

@@ -42,8 +42,41 @@ def test_prefill_matches_dense_reference(setup):
         pad[:n] = ids
         kp, vp = fresh_cache(cfg)
         bt = seq_block_table(cfg, 1, n)
-        logits, _, _ = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
+        logits, _, _ = M.prefill(cfg, jnp.asarray(pad), jnp.int32(0), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
         np.testing.assert_allclose(np.asarray(logits), ref_logits[n - 1], rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_prefill_matches_whole_prompt(setup):
+    # A prompt fed as positioned chunks (the scheduler's chunked prefill)
+    # must produce the same last-token logits and the same cache contents
+    # as one whole-prompt call — and both must match the dense reference.
+    cfg, w, wj = setup
+    rng = np.random.default_rng(9)
+    n = 21
+    ids = rng.integers(8, 1000, n).astype(np.int32)
+    ref_logits = M.ref_forward(cfg, ids, w)
+    bt = seq_block_table(cfg, 1, n)
+
+    kp, vp = fresh_cache(cfg)
+    pad = np.zeros(32, np.int32)
+    pad[:n] = ids
+    whole, wk, wv = M.prefill(
+        cfg, jnp.asarray(pad), jnp.int32(0), jnp.int32(n), jnp.asarray(bt), wj, kp, vp
+    )
+
+    kp, vp = fresh_cache(cfg)
+    logits = None
+    for start, stop in ((0, 9), (9, 16), (16, n)):
+        m = stop - start
+        pad = np.zeros(16, np.int32)
+        pad[:m] = ids[start:stop]
+        logits, kp, vp = M.prefill(
+            cfg, jnp.asarray(pad), jnp.int32(start), jnp.int32(m), jnp.asarray(bt), wj, kp, vp
+        )
+    np.testing.assert_allclose(np.asarray(logits), ref_logits[n - 1], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(whole), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(kp), np.asarray(wk), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(vp), np.asarray(wv), rtol=1e-5, atol=1e-6)
 
 
 def test_decode_continues_prefill_exactly(setup):
@@ -59,7 +92,7 @@ def test_decode_continues_prefill_exactly(setup):
     pad = np.zeros(16, np.int32)
     pad[:n] = ids
     bt = seq_block_table(cfg, 1, n + len(steps))
-    logits, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
+    logits, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(0), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
     np.testing.assert_allclose(np.asarray(logits), ref_logits[n - 1], rtol=1e-4, atol=1e-4)
 
     d_bt = np.zeros((1, cfg.max_pages_per_seq), np.int32)
@@ -97,10 +130,10 @@ def test_batched_decode_independent_sequences(setup):
     bt2 = seq_block_table(cfg, 4, n2 + 1)
     pad = np.zeros(16, np.int32)
     pad[:n1] = s1[:-1]
-    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n1), jnp.asarray(bt1), wj, kp, vp)
+    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(0), jnp.int32(n1), jnp.asarray(bt1), wj, kp, vp)
     pad = np.zeros(16, np.int32)
     pad[:n2] = s2[:-1]
-    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n2), jnp.asarray(bt2), wj, kp, vp)
+    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(0), jnp.int32(n2), jnp.asarray(bt2), wj, kp, vp)
 
     bts = np.stack([bt1, bt2])
     logits, _, _ = M.decode(
@@ -129,7 +162,7 @@ def test_padding_slots_do_not_corrupt_real_pages(setup):
     bt = seq_block_table(cfg, 1, n + 1)
     pad = np.zeros(16, np.int32)
     pad[:n] = ids[:-1]
-    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
+    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(0), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
 
     bts = np.zeros((2, cfg.max_pages_per_seq), np.int32)
     bts[0] = bt
@@ -155,7 +188,7 @@ def test_decode_gather_schedule_matches_default(setup):
     bt = seq_block_table(cfg, 1, n + 1)
     pad = np.zeros(16, np.int32)
     pad[:n] = ids
-    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
+    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(0), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
     d_bt = np.zeros((1, cfg.max_pages_per_seq), np.int32)
     d_bt[0] = bt
     args = (
@@ -211,7 +244,7 @@ def test_backend_schedules_agree(setup):
     bt = seq_block_table(cfg, 1, n + 1)
     pad = np.zeros(16, np.int32)
     pad[:n] = ids
-    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
+    _, kp, vp = M.prefill(cfg, jnp.asarray(pad), jnp.int32(0), jnp.int32(n), jnp.asarray(bt), wj, kp, vp)
     d_bt = np.zeros((2, cfg.max_pages_per_seq), np.int32)
     d_bt[0] = bt
     args = (
@@ -250,8 +283,8 @@ def test_prefill_q4_single_matches_tiled(setup):
     pad[:n] = ids
     bt = seq_block_table(cfg, 1, n)
     kp, vp = fresh_cache(cfg)
-    a, _, _ = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp,
+    a, _, _ = M.prefill(cfg, jnp.asarray(pad), jnp.int32(0), jnp.int32(n), jnp.asarray(bt), wj, kp, vp,
                         q4_schedule="tiled")
-    b, _, _ = M.prefill(cfg, jnp.asarray(pad), jnp.int32(n), jnp.asarray(bt), wj, kp, vp,
+    b, _, _ = M.prefill(cfg, jnp.asarray(pad), jnp.int32(0), jnp.int32(n), jnp.asarray(bt), wj, kp, vp,
                         q4_schedule="single")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)

@@ -1,5 +1,10 @@
-//! Scheduler ablation (DESIGN.md A5): continuous batching vs sequential
-//! service, and raw decode-step scaling across compiled batch sizes.
+//! Scheduler ablation (DESIGN.md A6): decode-stall / ITL under
+//! concurrent long-prompt admission, chunked vs whole-prompt prefill
+//! (reference backend, always runs — the CI perf smoke); plus the
+//! original continuous-batching-vs-sequential and decode-batch-scaling
+//! sections (XLA artifacts, skipped when absent).
+//!
+//! Writes ../BENCH_scheduler.json (repo root).
 
 #[path = "common/mod.rs"]
 mod common;
@@ -18,7 +23,163 @@ fn req(i: usize, max_tokens: usize) -> ChatCompletionRequest {
     r
 }
 
+struct StallRun {
+    itl: Histogram,
+    ttft: Histogram,
+    prefill_chunks: i64,
+    decode_stall_chunks: i64,
+    decode_stall_ms: f64,
+}
+
+/// One interactive decode row streams continuously while `n_admissions`
+/// prompts of exactly one max-size chunk (64 tokens) are admitted.
+/// Budget == 64 reproduces whole-prompt prefill (one 64-token chunk per
+/// admission, the pre-chunking policy); budget == 16 slices each prompt
+/// into four chunks interleaved with decode. The interactive row's
+/// inter-chunk wall time *is* the decode stall.
+fn reference_stall_run(budget: usize, n_admissions: usize) -> StallRun {
+    let mut cfg = EngineConfig::reference(&["tiny-ref"]);
+    cfg.prefill_token_budget = budget;
+    let mut engine = MLCEngine::new(&cfg).expect("reference engine");
+
+    // Short prompt (6 tokens) so the interactive row's own prefill is one
+    // chunk under every budget and it decodes from the first step.
+    let mut interactive = ChatCompletionRequest::new("tiny-ref").user("hi");
+    interactive.max_tokens = 100;
+    interactive.sampling.temperature = 0.0;
+    interactive.stream = true;
+    webllm::testutil::ban_reference_invisible(&mut interactive);
+    let a_id = engine.submit(interactive).unwrap();
+    engine.step().unwrap(); // prefill + first decode
+    engine.poll_events();
+
+    // 60 content chars + 4 template specials = 64 prompt tokens. A
+    // distinct 2-digit prefix per prompt keeps the prefix cache out of
+    // the measurement (every admission pays its full prefill).
+    for i in 0..n_admissions {
+        let mut r =
+            ChatCompletionRequest::new("tiny-ref").user(format!("{i:02}{}", "x".repeat(58)));
+        r.max_tokens = 2;
+        r.sampling.temperature = 0.0;
+        webllm::testutil::ban_reference_invisible(&mut r);
+        engine.submit(r).unwrap();
+    }
+
+    let mut itl = Histogram::new();
+    let mut ttft = Histogram::new();
+    let mut done = 0usize;
+    // Start the ITL clock only now: the submit loop's tokenization work
+    // must not contaminate the first inter-token sample.
+    let mut last_delta = Instant::now();
+    while engine.has_work() && done < n_admissions {
+        engine.step().unwrap();
+        for ev in engine.poll_events() {
+            match ev {
+                EngineEvent::Chunk(rid, c) if rid == a_id && !c.delta.is_empty() => {
+                    itl.push(last_delta.elapsed().as_secs_f64() * 1e3);
+                    last_delta = Instant::now();
+                }
+                EngineEvent::Done(rid, resp) if rid != a_id => {
+                    done += 1;
+                    ttft.push(resp.usage.ttft_s * 1e3);
+                }
+                _ => {}
+            }
+        }
+    }
+    engine.abort(a_id);
+    engine.run_to_completion().unwrap();
+    engine.poll_events();
+
+    let stats = engine.stats_json();
+    let get = |k: &str| stats.get(k).unwrap().as_i64().unwrap();
+    StallRun {
+        itl,
+        ttft,
+        prefill_chunks: get("prefill_chunks"),
+        decode_stall_chunks: get("decode_stall_chunks"),
+        decode_stall_ms: stats.get("decode_stall_s").unwrap().as_f64().unwrap() * 1e3,
+    }
+}
+
+fn stall_report(name: &str, budget: usize, run: &mut StallRun) -> webllm::json::Value {
+    println!(
+        "{name:<28} itl p50 {:>8.4} ms | p95 {:>8.4} ms | max {:>8.4} ms | \
+         ttft p50 {:>8.4} ms | chunks {} (stalled {})",
+        run.itl.percentile(50.0),
+        run.itl.percentile(95.0),
+        run.itl.percentile(100.0),
+        run.ttft.percentile(50.0),
+        run.prefill_chunks,
+        run.decode_stall_chunks,
+    );
+    webllm::obj! {
+        "policy" => name,
+        "prefill_token_budget" => budget as i64,
+        "itl_p50_ms" => run.itl.percentile(50.0),
+        "itl_p95_ms" => run.itl.percentile(95.0),
+        "itl_max_ms" => run.itl.percentile(100.0),
+        "itl_samples" => run.itl.len() as i64,
+        "ttft_p50_ms" => run.ttft.percentile(50.0),
+        "prefill_chunks" => run.prefill_chunks,
+        "decode_stall_chunks" => run.decode_stall_chunks,
+        "decode_stall_ms_total" => run.decode_stall_ms,
+    }
+}
+
 fn main() {
+    // -- chunked vs whole-prompt decode stall (reference, always runs) ------
+    let n_admissions = common::iters(8, 3);
+    println!(
+        "=== decode stall under concurrent long-prompt admission \
+         (tiny-ref, {n_admissions} x 64-token prompts, 1 interactive row) ==="
+    );
+    // Warm up allocators/caches once so the first measured run isn't cold.
+    reference_stall_run(64, 1);
+    let mut whole = reference_stall_run(64, n_admissions);
+    let mut chunked = reference_stall_run(16, n_admissions);
+    let whole_json = stall_report("whole-prompt (budget 64)", 64, &mut whole);
+    let chunked_json = stall_report("chunked (budget 16)", 16, &mut chunked);
+    let p95_ratio = whole.itl.percentile(95.0) / chunked.itl.percentile(95.0).max(1e-9);
+    println!("itl p95: whole-prompt / chunked = {p95_ratio:.2}x");
+
+    let report = webllm::obj! {
+        "bench" => "scheduler",
+        "generated_by" => "cargo bench --bench scheduler",
+        "quick_mode" => common::quick(),
+        "scenario" => webllm::obj! {
+            "description" => "one interactive decode row streams while N 64-token prompts \
+                              are admitted; the row's inter-chunk wall time is the decode \
+                              stall. whole-prompt = one 64-token chunk per admission (the \
+                              pre-chunking policy); chunked = budget 16, four interleaved \
+                              chunks per admission",
+            "backend" => "reference (seeded-deterministic, native mode)",
+            "n_admissions" => n_admissions as i64,
+            "admitted_prompt_tokens" => 64,
+            "interactive_max_tokens" => 100,
+        },
+        "decode_stall" => webllm::json::Value::Array(vec![whole_json, chunked_json]),
+        "itl_p95_whole_over_chunked" => p95_ratio,
+    };
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_scheduler.json");
+    match std::fs::write(&path, webllm::json::to_string_pretty(&report) + "\n") {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
+    }
+
+    // -- XLA sections (need compiled artifacts) -----------------------------
+    if !webllm::artifacts_dir().join("manifest.json").exists() {
+        eprintln!(
+            "SKIP: XLA artifacts not found in {} (run `make artifacts`); \
+             skipping continuous-batching and batch-scaling sections",
+            webllm::artifacts_dir().display()
+        );
+        return;
+    }
+
     let n_requests = common::iters(12, 4);
     let max_tokens = common::iters(24, 6);
 

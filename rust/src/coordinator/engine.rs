@@ -6,10 +6,18 @@
 //! into the paper's message-driven engine; benches and "native mode"
 //! drive it directly, which is exactly the MLC-LLM baseline shape.
 //!
-//! Scheduling policy (vLLM-style continuous batching under TVM's static-
-//! shape regime): prefill-prioritized admission — at most one prefill per
-//! step, then batched decode over all running sequences, rounded up to
-//! the nearest compiled batch size with garbage-page padding slots.
+//! Scheduling policy (vLLM/Sarathi-style continuous batching under TVM's
+//! static-shape regime): chunked, prefix-aware prefill co-scheduled with
+//! decode. Each `step_model` runs **at most one positioned prefill chunk**
+//! (bounded by [`EngineConfig::prefill_token_budget`], sliced from the
+//! single `Prefilling` sequence) **and** the batched decode over all
+//! running sequences, rounded up to the nearest compiled shapes with
+//! garbage-page padding slots. Prompts longer than the largest compiled
+//! chunk are fed across steps; a prefix-cache hit starts the first chunk
+//! at the cache boundary instead of position 0 (the reused pages are
+//! read, not recomputed). The budget knob trades TTFT (big chunks finish
+//! prompts sooner) against inter-token latency (small chunks stall the
+//! decode batch less per step).
 
 use crate::api::{
     ApiError, ChatChunk, ChatCompletionRequest, ChatCompletionResponse, Choice, FinishReason,
@@ -63,6 +71,13 @@ pub struct EngineConfig {
     /// Automaton states cached per grammar (see `grammar::MaskCache`);
     /// clamped to at least 1.
     pub mask_cache_capacity: usize,
+    /// Chunked-prefill token budget: the most prompt tokens one scheduler
+    /// step spends on prefill before running the decode batch. Clamped to
+    /// the model's compiled chunk menu (`ModelConfig::next_prefill_tokens`),
+    /// so any value is safe; smaller budgets bound the per-step decode
+    /// stall (better ITL under long-prompt admission), larger budgets
+    /// finish prompts in fewer steps (better TTFT).
+    pub prefill_token_budget: usize,
 }
 
 impl EngineConfig {
@@ -74,6 +89,7 @@ impl EngineConfig {
             enable_prefix_cache: true,
             backend: BackendKind::Xla,
             mask_cache_capacity: DEFAULT_MASK_CACHE_CAPACITY,
+            prefill_token_budget: DEFAULT_PREFILL_TOKEN_BUDGET,
         }
     }
 
@@ -163,10 +179,27 @@ impl StepBuffers {
     }
 }
 
+/// A sequence in the `Prefilling` state: admitted (KV pages allocated,
+/// grammar compiled, processor seeded) but its prompt not yet fully
+/// computed. `step_model` feeds it one budget-sized positioned chunk per
+/// step until `next_pos` reaches the prompt end, then samples the first
+/// token from the final chunk's logits and promotes `seq` to the decode
+/// batch. At most one per model: admission order is preserved and the
+/// per-step prefill cost stays bounded by one chunk.
+struct PrefillingSeq {
+    seq: RunningSeq,
+    prompt_ids: Vec<u32>,
+    /// Next absolute prompt position to compute. Starts at the
+    /// prefix-cache skip boundary
+    /// ([`crate::kvcache::Sequence::prefill_start`]), not 0.
+    next_pos: usize,
+}
+
 struct EngineModel {
     backend: Box<dyn ModelBackend>,
     kv: KvCacheManager,
     waiting: VecDeque<PendingReq>,
+    prefilling: Option<PrefillingSeq>,
     running: Vec<RunningSeq>,
     step: StepBuffers,
 }
@@ -191,6 +224,12 @@ const MAX_COMPILED_GRAMMARS: usize = 32;
 /// Default for [`EngineConfig::mask_cache_capacity`].
 pub const DEFAULT_MASK_CACHE_CAPACITY: usize = 256;
 
+/// Default for [`EngineConfig::prefill_token_budget`] — sized for
+/// real-model chunk menus (hundreds to thousands of tokens); on the tiny
+/// reference models it clamps to the largest compiled chunk, preserving
+/// the old one-chunk-per-prompt behavior for short prompts.
+pub const DEFAULT_PREFILL_TOKEN_BUDGET: usize = 2048;
+
 /// The backend engine. See module docs.
 pub struct MLCEngine {
     tokenizer: Rc<Tokenizer>,
@@ -204,6 +243,9 @@ pub struct MLCEngine {
     grammar_clock: u64,
     /// Per-grammar mask-cache capacity (from the config, min 1).
     mask_cache_capacity: usize,
+    /// Chunked-prefill token budget (from the config; clamped to each
+    /// model's compiled chunk menu at use).
+    prefill_token_budget: usize,
     events: VecDeque<EngineEvent>,
     next_req: RequestId,
     next_seq: u64,
@@ -238,6 +280,7 @@ impl MLCEngine {
                     backend,
                     kv,
                     waiting: VecDeque::new(),
+                    prefilling: None,
                     running: Vec::new(),
                     step: StepBuffers::default(),
                 },
@@ -255,6 +298,7 @@ impl MLCEngine {
             grammar_caches: HashMap::new(),
             grammar_clock: 0,
             mask_cache_capacity: cfg.mask_cache_capacity.max(1),
+            prefill_token_budget: cfg.prefill_token_budget.max(1),
             events: VecDeque::new(),
             next_req: 1,
             next_seq: 1,
@@ -352,14 +396,10 @@ impl MLCEngine {
             None => render_chat(&tokenizer, &messages),
         };
 
+        // No compiled-chunk-size cap here: prompts longer than the largest
+        // compiled chunk are fed across steps as positioned chunks. The
+        // only hard limit left is the model's context length.
         let mc = model.backend.config();
-        if prompt_ids.len() > mc.max_prefill_chunk() {
-            return Err(ApiError::invalid(format!(
-                "prompt is {} tokens; max prefill chunk is {}",
-                prompt_ids.len(),
-                mc.max_prefill_chunk()
-            )));
-        }
         if prompt_ids.len() + 1 >= mc.max_seq_len {
             return Err(ApiError::invalid("prompt exceeds model context length"));
         }
@@ -388,6 +428,14 @@ impl MLCEngine {
                 ));
                 return;
             }
+            if let Some(pf) = m.prefilling.as_mut() {
+                if pf.seq.req_id == req_id {
+                    // Mid-prefill: resolved (no further chunks run) on the
+                    // model's next scheduler step.
+                    pf.seq.finish = Some(FinishReason::Abort);
+                    return;
+                }
+            }
             if let Some(seq) = m.running.iter_mut().find(|s| s.req_id == req_id) {
                 seq.finish = Some(FinishReason::Abort);
                 return;
@@ -396,9 +444,9 @@ impl MLCEngine {
     }
 
     pub fn has_work(&self) -> bool {
-        self.models
-            .values()
-            .any(|m| !m.waiting.is_empty() || !m.running.is_empty())
+        self.models.values().any(|m| {
+            !m.waiting.is_empty() || m.prefilling.is_some() || !m.running.is_empty()
+        })
     }
 
     pub fn poll_events(&mut self) -> Vec<EngineEvent> {
@@ -431,8 +479,10 @@ impl MLCEngine {
         Err(ApiError::internal("request produced no completion"))
     }
 
-    /// One scheduler step: admit + prefill one request per model, else
-    /// run one batched decode per model.
+    /// One scheduler step per model: admit into the `Prefilling` slot if
+    /// it is free, run at most one budget-bounded prefill chunk, then run
+    /// the batched decode — prefill and decode share the step instead of
+    /// excluding each other.
     pub fn step(&mut self) -> Result<(), ApiError> {
         let names: Vec<String> = self.models.keys().cloned().collect();
         for name in names {
@@ -443,28 +493,39 @@ impl MLCEngine {
     }
 
     fn step_model(&mut self, name: &str) -> Result<(), RuntimeError> {
-        // Admission: prefill-prioritized, one per step (TTFT over
-        // throughput, the interactive-first policy WebLLM wants in a UI).
+        // Admission into the single `Prefilling` slot: prefill-prioritized
+        // (TTFT over throughput, the interactive-first policy WebLLM wants
+        // in a UI) but no longer exclusive — the admitted prompt is fed in
+        // budget-sized chunks alongside the decode batch below.
         let admit = {
             let m = self.models.get_mut(name).unwrap();
-            match m.waiting.front() {
-                Some(p)
-                    if m.kv.can_admit(p.prompt_ids.len())
-                        && m.running.len() < m.backend.config().max_decode_batch() =>
-                {
-                    m.waiting.pop_front()
+            if m.prefilling.is_some() {
+                None
+            } else {
+                match m.waiting.front() {
+                    Some(p)
+                        if m.kv.can_admit(p.prompt_ids.len())
+                            && m.running.len() < m.backend.config().max_decode_batch() =>
+                    {
+                        m.waiting.pop_front()
+                    }
+                    _ => None,
                 }
-                _ => None,
             }
         };
         if let Some(pending) = admit {
-            self.prefill_one(name, pending)?;
-            return Ok(());
+            self.begin_prefill(name, pending)?;
         }
+        self.prefill_chunk_step(name)?;
         self.decode_batch(name)
     }
 
-    fn prefill_one(&mut self, name: &str, p: PendingReq) -> Result<(), RuntimeError> {
+    /// Admit a pending request into the `Prefilling` state: allocate KV
+    /// residency (reusing prefix-cached pages), compile/fetch the grammar,
+    /// seed the sampler — but run no model compute yet. The first chunk
+    /// starts at the prefix-cache boundary, so fully-cached leading pages
+    /// cost nothing beyond this bookkeeping.
+    fn begin_prefill(&mut self, name: &str, p: PendingReq) -> Result<(), RuntimeError> {
         let seq_id = self.next_seq;
         self.next_seq += 1;
         self.nonce = self.nonce.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
@@ -482,26 +543,14 @@ impl MLCEngine {
             }
         };
 
-        let (chunk, t_prefill, logits) = {
+        let start = {
             let m = self.models.get_mut(name).unwrap();
-            let mc = m.backend.config().clone();
-            let n = p.prompt_ids.len();
-            let chunk = mc.pick_chunk(n).expect("validated at submit");
-            m.kv.admit(seq_id, &p.prompt_ids).map_err(|e| {
+            let seq = m.kv.admit(seq_id, &p.prompt_ids).map_err(|e| {
                 RuntimeError::Shape(format!("admission raced: {e}"))
             })?;
-            let mut ids = vec![0i32; chunk];
-            for (i, &t) in p.prompt_ids.iter().enumerate() {
-                ids[i] = t as i32;
-            }
-            let bt = m.kv.block_table_row(seq_id);
-            let t0 = Instant::now();
-            let out = m.backend.prefill(&ids, n, &bt)?;
-            (chunk, t0.elapsed().as_secs_f64(), out.logits)
+            seq.prefill_start()
         };
-        self.stats.prefill_tokens += p.prompt_ids.len() as u64;
-        self.stats.prefill_padded_tokens += (chunk - p.prompt_ids.len()) as u64;
-        self.stats.prefill_time_s += t_prefill;
+        self.stats.prefill_cached_tokens_skipped += start as u64;
 
         let max_ctx = {
             let m = &self.models[name];
@@ -514,7 +563,7 @@ impl MLCEngine {
             processor.observe(t);
         }
 
-        let mut seq = RunningSeq {
+        let seq = RunningSeq {
             req_id: p.req_id,
             seq_id,
             model: name.to_string(),
@@ -534,18 +583,88 @@ impl MLCEngine {
             t_prefilled: None,
             finish: None,
         };
+        self.models.get_mut(name).unwrap().prefilling =
+            Some(PrefillingSeq { seq, prompt_ids: p.prompt_ids, next_pos: start });
+        Ok(())
+    }
 
-        // Sample the first generated token from the prefill logits.
+    /// Run at most one positioned prefill chunk for the model's
+    /// `Prefilling` sequence. On the final chunk — whose logits are by
+    /// construction the whole prompt's last-token logits — sample the
+    /// first generated token and promote the sequence to the decode
+    /// batch.
+    fn prefill_chunk_step(&mut self, name: &str) -> Result<(), RuntimeError> {
+        // Aborted mid-prefill: resolve without running further chunks.
+        let aborted = {
+            let m = self.models.get_mut(name).unwrap();
+            match &m.prefilling {
+                Some(pf) if pf.seq.finish.is_some() => m.prefilling.take(),
+                _ => None,
+            }
+        };
+        if let Some(pf) = aborted {
+            let m = self.models.get_mut(name).unwrap();
+            Self::finalize(&mut self.events, &mut self.stats, &mut m.kv, pf.seq);
+            return Ok(());
+        }
+
+        let (done, n, chunk, t_chunk, stalled, logits) = {
+            let m = self.models.get_mut(name).unwrap();
+            let Some(pf) = m.prefilling.as_mut() else {
+                return Ok(());
+            };
+            let mc = m.backend.config();
+            let remaining = pf.prompt_ids.len() - pf.next_pos;
+            let (n, chunk) = mc
+                .next_prefill_tokens(remaining, self.prefill_token_budget)
+                .expect("prefilling sequence always has remaining tokens");
+            let mut ids = vec![0i32; chunk];
+            for (i, &t) in pf.prompt_ids[pf.next_pos..pf.next_pos + n].iter().enumerate() {
+                ids[i] = t as i32;
+            }
+            let bt = m.kv.block_table_row(pf.seq.seq_id);
+            let t0 = Instant::now();
+            let out = m.backend.prefill_chunk(&ids, pf.next_pos, n, &bt)?;
+            let t_chunk = t0.elapsed().as_secs_f64();
+            pf.next_pos += n;
+            // The chunk landed: its pages are now real KV, eligible for
+            // prefix-cache registration when the sequence is freed.
+            m.kv.note_written(pf.seq.seq_id, pf.next_pos);
+            let done = pf.next_pos == pf.prompt_ids.len();
+            (done, n, chunk, t_chunk, !m.running.is_empty(), out.logits)
+        };
+        self.stats.prefill_tokens += n as u64;
+        self.stats.prefill_padded_tokens += (chunk - n) as u64;
+        self.stats.prefill_time_s += t_chunk;
+        self.stats.prefill_chunks += 1;
+        if stalled {
+            // Decode rows existed and waited out this chunk: the
+            // interference the chunk budget bounds.
+            self.stats.decode_stall_s += t_chunk;
+            self.stats.decode_stall_chunks += 1;
+        }
+        if !done {
+            return Ok(());
+        }
+
+        // Sample the first generated token from the final chunk's logits.
+        let mut pf = self
+            .models
+            .get_mut(name)
+            .unwrap()
+            .prefilling
+            .take()
+            .expect("checked above");
         let mut logits = logits;
-        self.consume_logits(&mut seq, &mut logits);
-        seq.t_prefilled = Some(Instant::now());
-        self.stats.ttft.push(seq.t_admit.elapsed().as_secs_f64());
+        self.consume_logits(&mut pf.seq, &mut logits);
+        pf.seq.t_prefilled = Some(Instant::now());
+        self.stats.ttft.push(pf.seq.t_admit.elapsed().as_secs_f64());
 
         let m = self.models.get_mut(name).unwrap();
-        if seq.finish.is_some() {
-            Self::finalize(&mut self.events, &mut self.stats, &mut m.kv, seq);
+        if pf.seq.finish.is_some() {
+            Self::finalize(&mut self.events, &mut self.stats, &mut m.kv, pf.seq);
         } else {
-            m.running.push(seq);
+            m.running.push(pf.seq);
         }
         Ok(())
     }
@@ -582,7 +701,12 @@ impl MLCEngine {
                 &m.step.seq_lens,
                 &m.step.tables,
             )?;
-            (live, batch, out.logits, t0.elapsed().as_secs_f64())
+            let t_decode = t0.elapsed().as_secs_f64();
+            // Each live row's stepped token is now pool-resident.
+            for (row, seq) in m.running.iter().take(live).enumerate() {
+                m.kv.note_written(seq.seq_id, m.step.seq_lens[row] as usize);
+            }
+            (live, batch, out.logits, t_decode)
         };
         self.stats.decode_time_s += t_decode;
         self.stats.decode_steps += 1;
@@ -917,6 +1041,7 @@ impl MLCEngine {
                 name.clone(),
                 crate::obj! {
                     "waiting" => m.waiting.len(),
+                    "prefilling" => m.prefilling.is_some() as i64,
                     "running" => m.running.len(),
                     "available_pages" => m.kv.available_pages(),
                     "prefix_cache_hits" => hits as i64,

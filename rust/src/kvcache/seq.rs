@@ -16,6 +16,12 @@ pub struct Sequence {
     pub block_table: Vec<u32>,
     /// How many leading tokens were served from the prefix cache.
     pub cached_tokens: usize,
+    /// Positions `[0, written)` are resident in the backend page pool
+    /// (reused from the prefix cache, prefilled, or written by a decode
+    /// step). Trailing tokens past this point have been *sampled* but
+    /// not yet written back. Maintained via
+    /// [`KvCacheManager::note_written`].
+    written: usize,
     /// Keys of the full pages backing this sequence (parallel prefix of
     /// block_table), used to register pages on free.
     page_keys: Vec<PageKey>,
@@ -28,6 +34,20 @@ impl Sequence {
 
     pub fn is_empty(&self) -> bool {
         self.tokens.is_empty()
+    }
+
+    /// Pool-resident length: positions `[0, written)` hold real KV.
+    pub fn written(&self) -> usize {
+        self.written
+    }
+
+    /// First prompt position whose logits must actually be computed: the
+    /// prefix-cache boundary (`cached_tokens` leading tokens are already
+    /// resident in reused pages), clamped so the *final* prompt token is
+    /// always computed — its logits seed the first sampled token, so
+    /// even a fully-cached prompt pays for exactly one position.
+    pub fn prefill_start(&self) -> usize {
+        self.cached_tokens.min(self.len().saturating_sub(1))
     }
 }
 
@@ -96,8 +116,10 @@ impl KvCacheManager {
     /// Allocate residency for a new sequence over `tokens` (the prompt).
     /// Serves full-page prefixes from the prefix cache where possible.
     /// Returns the sequence; `cached_tokens` says how many leading tokens
-    /// need no prefill compute (the engine may still prefill them —
-    /// benign rewrite — or skip whole cached chunks).
+    /// need no prefill compute — the scheduler starts its first
+    /// positioned chunk at [`Sequence::prefill_start`], so reused pages
+    /// are never recomputed (their contents are read straight through
+    /// the block table by the backend's chunk attention).
     pub fn admit(&mut self, id: SeqId, tokens: &[u32]) -> Result<&Sequence, AllocError> {
         assert!(!self.seqs.contains_key(&id), "sequence {id} already admitted");
         let ps = self.alloc.page_size();
@@ -171,9 +193,30 @@ impl KvCacheManager {
             tokens: tokens.to_vec(),
             block_table,
             cached_tokens,
+            // Reused pages already hold their tokens; everything else is
+            // resident only once the engine reports prefill/decode
+            // progress through `note_written`.
+            written: cached_tokens,
             page_keys,
         };
         Ok(self.seqs.entry(id).or_insert(seq))
+    }
+
+    /// Record that the backend has materialized positions `[0, upto)` of
+    /// sequence `id` in the page pool (a prefill chunk landed, or a
+    /// decode step wrote its token). Monotonic; positions never become
+    /// unwritten. Only fully-written pages are registered in the prefix
+    /// cache on [`Self::free`] — chunked prefill *reads* reused pages
+    /// instead of rewriting them, so a page with an unwritten slot (e.g.
+    /// from a request aborted mid-prefill) must never be offered for
+    /// reuse.
+    pub fn note_written(&mut self, id: SeqId, upto: usize) {
+        if let Some(seq) = self.seqs.get_mut(&id) {
+            debug_assert!(upto <= seq.tokens.len(), "written past sequence end");
+            if upto > seq.written {
+                seq.written = upto;
+            }
+        }
     }
 
     /// Record a generated token, growing the block table when the new
@@ -195,13 +238,15 @@ impl KvCacheManager {
         Ok(())
     }
 
-    /// Free a sequence. Full pages (with computed keys) are registered in
-    /// the prefix cache and parked evictable; the rest return to the free
-    /// list.
+    /// Free a sequence. Fully *written* pages (with computed keys) are
+    /// registered in the prefix cache and parked evictable; the rest
+    /// return to the free list. The `written` bound keeps pages with
+    /// unwritten slots — a prompt aborted mid-prefill, or the final
+    /// sampled-but-never-decoded token — out of the reuse pool.
     pub fn free(&mut self, id: SeqId) {
         let Some(seq) = self.seqs.remove(&id) else { return };
         let ps = self.alloc.page_size();
-        let full_pages = seq.tokens.len() / ps;
+        let full_pages = seq.tokens.len().min(seq.written) / ps;
         for (i, &page) in seq.block_table.iter().enumerate() {
             let mut keep = false;
             if self.enable_prefix_cache && i < full_pages {

@@ -78,6 +78,7 @@ fn prefix_reuse_after_free() {
     let mut m = KvCacheManager::new(16, 4, 8, true);
     let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8, 9]; // two full pages + 1
     let t1 = m.admit(1, &prompt).unwrap().block_table.clone();
+    m.note_written(1, prompt.len()); // prefill landed
     m.free(1);
     let seq2 = m.admit(2, &prompt).unwrap();
     // the two full pages come back from the prefix cache
@@ -93,7 +94,8 @@ fn prefix_sharing_between_live_sequences() {
     let mut m = KvCacheManager::new(16, 4, 8, true);
     let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8];
     m.admit(1, &prompt).unwrap();
-    m.free(1); // registers both pages
+    m.note_written(1, prompt.len());
+    m.free(1); // registers both (written) pages
     m.admit(2, &prompt).unwrap();
     let t2 = m.get(2).unwrap().block_table.clone();
     m.admit(3, &prompt).unwrap();
@@ -111,10 +113,50 @@ fn prefix_sharing_between_live_sequences() {
 fn divergent_prefix_stops_reuse() {
     let mut m = KvCacheManager::new(16, 4, 8, true);
     m.admit(1, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+    m.note_written(1, 8);
     m.free(1);
     let seq = m.admit(2, &[1, 2, 3, 4, 9, 9, 9, 9]).unwrap();
     assert_eq!(seq.cached_tokens, 4, "only the first page matches");
     m.check_invariants();
+}
+
+#[test]
+fn unwritten_pages_are_never_registered_for_reuse() {
+    // Mid-prefill abort shape: a sequence freed before any (or all) of
+    // its prompt landed in the pool must not poison the prefix cache —
+    // chunked prefill would *read* the reused pages, hitting slots that
+    // were never written.
+    let mut m = KvCacheManager::new(16, 4, 8, true);
+    let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12];
+
+    // Freed with nothing written: zero pages registered.
+    m.admit(1, &prompt).unwrap();
+    m.free(1);
+    let seq = m.admit(2, &prompt).unwrap();
+    assert_eq!(seq.cached_tokens, 0, "unwritten pages must not be reused");
+
+    // Freed with one of three full pages written: only that page comes back.
+    m.note_written(2, 5); // page 0 fully written, page 1 partial
+    m.free(2);
+    let seq = m.admit(3, &prompt).unwrap();
+    assert_eq!(seq.cached_tokens, 4, "only the fully-written page is reusable");
+    assert_eq!(seq.written(), 4, "reused pages count as resident");
+    assert_eq!(seq.prefill_start(), 4);
+    m.check_invariants();
+}
+
+#[test]
+fn prefill_start_clamps_to_last_prompt_token() {
+    let mut m = KvCacheManager::new(16, 4, 8, true);
+    let prompt = [7u32, 8, 9, 10, 11, 12, 13, 14]; // exactly two pages
+    m.admit(1, &prompt).unwrap();
+    m.note_written(1, 8);
+    m.free(1);
+    // Fully-cached prompt: everything resident, but the final position
+    // must still be computed for its logits.
+    let seq = m.admit(2, &prompt).unwrap();
+    assert_eq!(seq.cached_tokens, 8);
+    assert_eq!(seq.prefill_start(), 7);
 }
 
 #[test]
@@ -177,6 +219,7 @@ fn disabled_prefix_cache_never_shares() {
     let mut m = KvCacheManager::new(16, 4, 8, false);
     let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8];
     m.admit(1, &prompt).unwrap();
+    m.note_written(1, prompt.len());
     m.free(1);
     let seq = m.admit(2, &prompt).unwrap();
     assert_eq!(seq.cached_tokens, 0);
@@ -212,6 +255,12 @@ fn prop_random_admit_free_append_keeps_invariants() {
                     let id = *rng.choose(&live);
                     let _ = m.append_token(id, rng.range(64) as u32);
                 }
+                3 if !live.is_empty() => {
+                    // Simulate prefill/decode progress reports.
+                    let id = *rng.choose(&live);
+                    let len = m.get(id).unwrap().len();
+                    m.note_written(id, rng.range(len + 1));
+                }
                 _ => {}
             }
             m.check_invariants();
@@ -238,6 +287,7 @@ fn prop_prefix_cache_shared_tables_agree() {
         p1.extend((0..rng.range(6)).map(|_| 100 + rng.range(32) as u32));
         p2.extend((0..rng.range(6)).map(|_| 200 + rng.range(32) as u32));
         m.admit(1, &p1).unwrap();
+        m.note_written(1, p1.len());
         m.free(1); // register prefix
         m.admit(2, &p2).unwrap();
         let seq2 = m.get(2).unwrap();

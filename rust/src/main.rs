@@ -53,10 +53,13 @@ USAGE:
   webllm stats    --model <name>
 
 FLAGS:
-  --browser     run in browser mode (inject WebGPU/WASM cost model)
-  --reference   run on the deterministic reference backend (no artifacts;
-                models: tiny-ref, tiny-ref-b)
-  --artifacts   artifacts directory (default: ./artifacts)",
+  --browser         run in browser mode (inject WebGPU/WASM cost model)
+  --reference       run on the deterministic reference backend (no
+                    artifacts; models: tiny-ref, tiny-ref-b)
+  --artifacts       artifacts directory (default: ./artifacts)
+  --prefill-budget  chunked-prefill tokens per scheduler step (clamped to
+                    the model's compiled chunk menu; small = smoother
+                    streaming under load, large = faster first token)",
         webllm::version()
     );
 }
@@ -102,6 +105,11 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig, String
         } else {
             cfg.artifacts_dir = dir.into();
         }
+    }
+    if let Some(b) = flags.get("prefill-budget") {
+        cfg.prefill_token_budget = b
+            .parse()
+            .map_err(|_| format!("--prefill-budget: '{b}' is not a token count"))?;
     }
     Ok(cfg)
 }

@@ -144,8 +144,20 @@ pub struct EngineStats {
     pub prefill_time_s: f64,
     pub decode_time_s: f64,
     /// Prefill padding waste: slots in the compiled chunk beyond the
-    /// actual prompt length, summed over all prefills.
+    /// chunk's valid tokens, summed over all prefill chunk executions.
     pub prefill_padded_tokens: u64,
+    /// Positioned prefill chunk executions (>= 1 per admitted request;
+    /// > 1 when a prompt outruns the per-step chunk budget).
+    pub prefill_chunks: u64,
+    /// Leading prompt tokens whose prefill compute was skipped because a
+    /// prefix-cache hit left them resident in reused pages.
+    pub prefill_cached_tokens_skipped: u64,
+    /// Wall-clock the decode batch spent stalled behind a prefill chunk
+    /// (chunk exec time accrued while >= 1 sequence was decoding) — the
+    /// interference the chunk budget exists to bound.
+    pub decode_stall_s: f64,
+    /// Prefill chunks that ran while >= 1 sequence was decoding.
+    pub decode_stall_chunks: u64,
     /// Batched decode steps executed.
     pub decode_steps: u64,
     /// Rows in decode batches that carried a live sequence.
@@ -246,6 +258,10 @@ impl EngineStats {
             "prefill_tps" => self.prefill_tps(),
             "decode_tps" => self.decode_tps(),
             "prefill_padded_tokens" => self.prefill_padded_tokens as i64,
+            "prefill_chunks" => self.prefill_chunks as i64,
+            "prefill_cached_tokens_skipped" => self.prefill_cached_tokens_skipped as i64,
+            "decode_stall_s" => self.decode_stall_s,
+            "decode_stall_chunks" => self.decode_stall_chunks as i64,
             "decode_steps" => self.decode_steps as i64,
             "decode_live_rows" => self.decode_live_rows as i64,
             "decode_padded_rows" => self.decode_padded_rows as i64,
@@ -273,6 +289,10 @@ impl EngineStats {
         self.prefill_time_s += other.prefill_time_s;
         self.decode_time_s += other.decode_time_s;
         self.prefill_padded_tokens += other.prefill_padded_tokens;
+        self.prefill_chunks += other.prefill_chunks;
+        self.prefill_cached_tokens_skipped += other.prefill_cached_tokens_skipped;
+        self.decode_stall_s += other.decode_stall_s;
+        self.decode_stall_chunks += other.decode_stall_chunks;
         self.decode_steps += other.decode_steps;
         self.decode_live_rows += other.decode_live_rows;
         self.decode_padded_rows += other.decode_padded_rows;
@@ -373,6 +393,35 @@ mod tests {
         s.merge(&other);
         assert_eq!(s.decode_padded_rows, 8);
         assert_eq!(s.prefill_padded_tokens, 7);
+    }
+
+    #[test]
+    fn engine_stats_chunked_prefill_counters_and_json() {
+        let mut s = EngineStats::new();
+        s.prefill_chunks = 5;
+        s.prefill_cached_tokens_skipped = 24;
+        s.decode_stall_chunks = 3;
+        s.decode_stall_s = 0.25;
+
+        let v = s.stats_json();
+        assert_eq!(v.get("prefill_chunks").and_then(|x| x.as_i64()), Some(5));
+        assert_eq!(
+            v.get("prefill_cached_tokens_skipped").and_then(|x| x.as_i64()),
+            Some(24)
+        );
+        assert_eq!(v.get("decode_stall_chunks").and_then(|x| x.as_i64()), Some(3));
+        assert!((v.get("decode_stall_s").and_then(|x| x.as_f64()).unwrap() - 0.25).abs() < 1e-12);
+
+        let mut other = EngineStats::new();
+        other.prefill_chunks = 2;
+        other.prefill_cached_tokens_skipped = 8;
+        other.decode_stall_chunks = 1;
+        other.decode_stall_s = 0.5;
+        s.merge(&other);
+        assert_eq!(s.prefill_chunks, 7);
+        assert_eq!(s.prefill_cached_tokens_skipped, 32);
+        assert_eq!(s.decode_stall_chunks, 4);
+        assert!((s.decode_stall_s - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -60,9 +60,16 @@ impl ModelConfig {
         self.max_seq_len / self.page_size
     }
 
-    /// Largest prompt the compiled prefill menu accepts.
+    /// Largest chunk the compiled prefill menu holds — the most prompt
+    /// tokens one prefill step can process (prompts longer than this are
+    /// fed in multiple positioned chunks, see `next_prefill_tokens`).
     pub fn max_prefill_chunk(&self) -> usize {
         self.prefill_chunks.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Smallest compiled prefill chunk.
+    pub fn min_prefill_chunk(&self) -> usize {
+        self.prefill_chunks.iter().copied().min().unwrap_or(0)
     }
 
     /// Largest compiled decode batch.
@@ -78,5 +85,36 @@ impl ModelConfig {
     /// Smallest compiled batch that fits `n` live sequences.
     pub fn pick_batch(&self, n: usize) -> Option<usize> {
         self.decode_batches.iter().copied().filter(|&b| b >= n).min()
+    }
+
+    /// The chunked-prefill step policy: given `remaining` uncomputed
+    /// prompt tokens and the engine's per-step token `budget`, how many
+    /// tokens the next prefill chunk should carry and which compiled
+    /// chunk executable runs it. Returns `None` when nothing remains.
+    ///
+    /// The per-step cap is the **largest compiled chunk ≤ budget** —
+    /// never `budget` itself — so a between-menu budget (say 20 on a
+    /// [16, 32, 64] menu) runs a full 16-token chunk rather than paying
+    /// a 32-token executable to advance 20 positions. Budgets below the
+    /// whole menu fall back to the smallest chunk (a smaller executable
+    /// doesn't exist), budgets above it to the largest (the prompt just
+    /// takes more steps) — any value is safe, and the knob only trades
+    /// TTFT (big chunks, prompt done sooner) against decode stall / ITL
+    /// (small chunks, running sequences wait less per step). Only the
+    /// prompt's final slice may under-fill its executable.
+    pub fn next_prefill_tokens(&self, remaining: usize, budget: usize) -> Option<(usize, usize)> {
+        if remaining == 0 || self.prefill_chunks.is_empty() {
+            return None;
+        }
+        let cap = self
+            .prefill_chunks
+            .iter()
+            .copied()
+            .filter(|&c| c <= budget)
+            .max()
+            .unwrap_or_else(|| self.min_prefill_chunk());
+        let n = remaining.min(cap);
+        let chunk = self.pick_chunk(n).expect("n <= max_prefill_chunk");
+        Some((n, chunk))
     }
 }

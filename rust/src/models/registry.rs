@@ -85,7 +85,21 @@ impl Manifest {
         Self::from_json(artifacts_dir, &v)
     }
 
+    /// Artifact ABI version this runtime speaks. 2 = positioned prefill
+    /// (`[ids, start_pos, n, block_table]` executables); older artifacts
+    /// would load fine but fail at the first prefill with an opaque
+    /// shape/arity error, so version skew is rejected up front.
+    pub const ARTIFACT_VERSION: u64 = 2;
+
     pub fn from_json(root: &Path, v: &Value) -> Result<Self, String> {
+        let version = v.get("version").and_then(Value::as_u64).unwrap_or(0);
+        if version != Self::ARTIFACT_VERSION {
+            return Err(format!(
+                "artifact manifest version {version} != {} (this runtime's positioned-prefill \
+                 ABI); re-run `make artifacts`",
+                Self::ARTIFACT_VERSION
+            ));
+        }
         let models_v = v.get("models").and_then(Value::as_object).ok_or("manifest missing models")?;
         let mut models = BTreeMap::new();
         for (name, mv) in models_v.iter() {

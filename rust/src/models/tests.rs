@@ -68,6 +68,33 @@ fn config_pickers() {
     assert_eq!(c.pick_batch(3), Some(4));
     assert_eq!(c.pick_batch(5), None);
     assert_eq!(c.max_prefill_chunk(), 32);
+    assert_eq!(c.min_prefill_chunk(), 16);
+}
+
+#[test]
+fn chunked_prefill_step_policy() {
+    let v = parse(r#"{
+        "name":"x","vocab_size":4096,"d_model":128,"n_layers":2,"n_heads":4,
+        "n_kv_heads":2,"head_dim":32,"ffn_dim":256,"rope_theta":10000.0,
+        "norm_eps":1e-5,"page_size":8,"num_pages":32,"max_seq_len":64,
+        "prefill_chunks":[16,32],"decode_batches":[1,2,4],"param_count":1}"#).unwrap();
+    let c = ModelConfig::from_json(&v).unwrap();
+
+    // Nothing left: no chunk.
+    assert_eq!(c.next_prefill_tokens(0, 16), None);
+    // Budget below the menu clamps up to the smallest compiled chunk.
+    assert_eq!(c.next_prefill_tokens(100, 1), Some((16, 16)));
+    // Budget above the menu clamps down to the largest.
+    assert_eq!(c.next_prefill_tokens(100, usize::MAX), Some((32, 32)));
+    // In-menu budget is honored exactly.
+    assert_eq!(c.next_prefill_tokens(100, 16), Some((16, 16)));
+    // The tail takes the smallest chunk that fits it.
+    assert_eq!(c.next_prefill_tokens(5, 32), Some((5, 16)));
+    assert_eq!(c.next_prefill_tokens(20, 32), Some((20, 32)));
+    // A between-menu budget rounds DOWN to a full compiled chunk — it
+    // never pays a larger executable to advance fewer positions.
+    assert_eq!(c.next_prefill_tokens(100, 20), Some((16, 16)));
+    assert_eq!(c.next_prefill_tokens(100, 31), Some((16, 16)));
 }
 
 #[test]

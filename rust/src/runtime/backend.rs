@@ -37,18 +37,43 @@ pub trait ModelBackend {
     /// Reset the KV pools to their pristine state (bench/test isolation).
     fn reset_cache(&mut self) -> Result<(), RuntimeError>;
 
-    /// Run one prefill chunk for a single sequence.
+    /// Run one *positioned* prefill chunk for a single sequence.
     ///
-    /// `ids` must already be padded to a compiled chunk size; `seq_len`
-    /// is the valid prefix; `block_table` the sequence's pages padded
-    /// with the garbage page 0 to `max_pages_per_seq`. Returns
-    /// last-token logits `[vocab]`.
+    /// `ids` must already be padded to a compiled chunk size; the chunk's
+    /// `n` valid tokens occupy absolute positions
+    /// `start_pos..start_pos + n` of the sequence, addressed through
+    /// `block_table` (the sequence's pages padded with the garbage page 0
+    /// to `max_pages_per_seq`). The backend writes those positions' KV
+    /// and attends over the **full prefix** `[0, start_pos + n)` — every
+    /// position below `start_pos` must already be resident in the pages
+    /// the table names (written by an earlier chunk, or reused verbatim
+    /// from a prefix-cache hit). Returns the logits of the chunk's last
+    /// valid token, `[vocab]`.
+    ///
+    /// This is what lets the scheduler slice a long prompt into
+    /// budget-sized chunks interleaved with decode steps, and skip
+    /// fully-cached leading pages entirely (start at the prefix-cache
+    /// boundary).
+    fn prefill_chunk(
+        &mut self,
+        ids: &[i32],
+        start_pos: usize,
+        n: usize,
+        block_table: &[i32],
+    ) -> Result<StepOutput, RuntimeError>;
+
+    /// Whole-prompt prefill from position 0 — equivalent to (and provided
+    /// as) `prefill_chunk(ids, 0, seq_len, block_table)`. Kept as the
+    /// entry point for benches and direct runtime tests; the engine
+    /// always calls [`Self::prefill_chunk`].
     fn prefill(
         &mut self,
         ids: &[i32],
         seq_len: usize,
         block_table: &[i32],
-    ) -> Result<StepOutput, RuntimeError>;
+    ) -> Result<StepOutput, RuntimeError> {
+        self.prefill_chunk(ids, 0, seq_len, block_table)
+    }
 
     /// Run one batched decode step.
     ///

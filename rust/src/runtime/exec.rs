@@ -156,15 +156,22 @@ impl ModelRuntime {
         Ok(())
     }
 
-    /// Run one prefill chunk for a single sequence.
+    /// Run one positioned prefill chunk for a single sequence (the
+    /// [`ModelBackend::prefill_chunk`] contract).
     ///
-    /// `ids` must already be padded to a compiled chunk size; `seq_len` is
-    /// the valid prefix; `block_table` the sequence's pages padded with 0
-    /// to max_pages_per_seq. Returns last-token logits `[vocab]`.
-    pub fn prefill(
+    /// `ids` must already be padded to a compiled chunk size; the `n`
+    /// valid tokens occupy absolute positions `start_pos..start_pos + n`
+    /// addressed through `block_table` (padded with 0 to
+    /// max_pages_per_seq). The compiled executable (see
+    /// `python/compile/aot.py::lower_prefill`) takes
+    /// `[ids, start_pos, n, block_table]`, writes the chunk's KV into
+    /// the pool pages, and attends over the full pool-resident prefix
+    /// `[0, start_pos + n)`. Returns last-valid-token logits `[vocab]`.
+    pub fn prefill_chunk(
         &mut self,
         ids: &[i32],
-        seq_len: usize,
+        start_pos: usize,
+        n: usize,
         block_table: &[i32],
     ) -> Result<StepOutput, RuntimeError> {
         let chunk = ids.len();
@@ -181,16 +188,23 @@ impl ModelRuntime {
                 block_table.len()
             )));
         }
-        if seq_len == 0 || seq_len > chunk {
-            return Err(RuntimeError::Shape(format!("seq_len {seq_len} not in 1..={chunk}")));
+        if n == 0 || n > chunk {
+            return Err(RuntimeError::Shape(format!("chunk n {n} not in 1..={chunk}")));
+        }
+        if start_pos + n > mp * self.record.config.page_size {
+            return Err(RuntimeError::Shape(format!(
+                "chunk end {} beyond the block table's reach",
+                start_pos + n
+            )));
         }
 
         let ids_b = i32_buffer(&self.client, ids, &[chunk])?;
-        let len_b = i32_buffer(&self.client, &[seq_len as i32], &[1])?;
+        let start_b = i32_buffer(&self.client, &[start_pos as i32], &[1])?;
+        let len_b = i32_buffer(&self.client, &[n as i32], &[1])?;
         let bt_b = i32_buffer(&self.client, block_table, &[mp])?;
 
         let t0 = Instant::now();
-        let inputs: Vec<&PjRtBuffer> = [&ids_b, &len_b, &bt_b]
+        let inputs: Vec<&PjRtBuffer> = [&ids_b, &start_b, &len_b, &bt_b]
             .into_iter()
             .chain(self.weights.iter())
             .chain([&self.k_pages, &self.v_pages])
@@ -205,6 +219,16 @@ impl ModelRuntime {
             env.charge_dispatches(self.dispatches_per_step, self.weight_bytes());
         }
         Ok(StepOutput { logits, dispatches: self.dispatches_per_step, exec_seconds })
+    }
+
+    /// Whole-prompt prefill from position 0 (benches / direct tests).
+    pub fn prefill(
+        &mut self,
+        ids: &[i32],
+        seq_len: usize,
+        block_table: &[i32],
+    ) -> Result<StepOutput, RuntimeError> {
+        self.prefill_chunk(ids, 0, seq_len, block_table)
     }
 
     /// Run one batched decode step.
@@ -304,13 +328,14 @@ impl ModelBackend for ModelRuntime {
         ModelRuntime::reset_cache(self)
     }
 
-    fn prefill(
+    fn prefill_chunk(
         &mut self,
         ids: &[i32],
-        seq_len: usize,
+        start_pos: usize,
+        n: usize,
         block_table: &[i32],
     ) -> Result<StepOutput, RuntimeError> {
-        ModelRuntime::prefill(self, ids, seq_len, block_table)
+        ModelRuntime::prefill_chunk(self, ids, start_pos, n, block_table)
     }
 
     fn decode(

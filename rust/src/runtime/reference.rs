@@ -17,12 +17,16 @@
 //!   never leak into live rows.
 //!
 //! The backend keeps a token-per-slot page pool mirroring the real
-//! device cache's geometry (`num_pages` x `page_size`). Prefill writes
-//! positions `0..seq_len` through the block table; decode writes the
-//! stepped token at its position, then "attends" by folding every cached
-//! position of the prefix into a fingerprint that seeds the logit hash.
-//! Reading a never-written slot is a hard error — a scheduler or
-//! block-table bug surfaces as a failed test, not silent garbage.
+//! device cache's geometry (`num_pages` x `page_size`). A positioned
+//! prefill chunk writes positions `start_pos..start_pos + n` through the
+//! block table; decode writes the stepped token at its position. Both
+//! then "attend" by folding every cached position of the full prefix
+//! into a fingerprint that seeds the logit hash — so chunked prefill is
+//! *exactly* whole-prompt prefill (the fingerprint only sees the final
+//! page contents), which is what makes the scheduler's chunking and
+//! prefix-skip checkable by exact equality. Reading a never-written slot
+//! is a hard error — a scheduler or block-table bug surfaces as a failed
+//! test, not silent garbage.
 
 use super::backend::ModelBackend;
 use super::exec::{dispatch_estimate, RuntimeError, StepOutput};
@@ -32,6 +36,17 @@ use std::time::Instant;
 
 /// Slot sentinel: no token has ever been written here.
 const UNWRITTEN: i32 = -1;
+
+/// Synthetic compute burned per (token, layer) each step, in hash
+/// rounds (~0.1–0.3 us per token-layer on commodity CPUs). The backend
+/// models *cost*, not just content: a 64-token prefill chunk takes
+/// measurably (and roughly proportionally) longer than a 16-token one,
+/// so scheduler latency effects — decode stall behind a big chunk, the
+/// TTFT/ITL trade of `EngineConfig::prefill_token_budget` — are
+/// observable offline with the same ordering a kernel backend shows.
+/// Small enough that test suites spend only low single-digit
+/// milliseconds here in total.
+const WORK_ROUNDS_PER_TOKEN_LAYER: usize = 150;
 
 /// SplitMix64: the one-shot mixer behind both the prefix fingerprint and
 /// the per-token logit hash.
@@ -157,6 +172,18 @@ impl ReferenceBackend {
             env.charge_dispatches(self.dispatches_per_step, ModelBackend::weight_bytes(self));
         }
     }
+
+    /// Burn the synthetic per-token compute for a step that processed
+    /// `tokens` tokens (see [`WORK_ROUNDS_PER_TOKEN_LAYER`]). Runs inside
+    /// the timed section so `exec_seconds` reflects it.
+    fn burn_compute(&self, tokens: usize) {
+        let rounds = tokens * self.config.n_layers * WORK_ROUNDS_PER_TOKEN_LAYER;
+        let mut acc = self.seed;
+        for i in 0..rounds as u64 {
+            acc = splitmix64(acc ^ i);
+        }
+        std::hint::black_box(acc);
+    }
 }
 
 impl ModelBackend for ReferenceBackend {
@@ -177,10 +204,11 @@ impl ModelBackend for ReferenceBackend {
         Ok(())
     }
 
-    fn prefill(
+    fn prefill_chunk(
         &mut self,
         ids: &[i32],
-        seq_len: usize,
+        start_pos: usize,
+        n: usize,
         block_table: &[i32],
     ) -> Result<StepOutput, RuntimeError> {
         let chunk = ids.len();
@@ -197,18 +225,30 @@ impl ModelBackend for ReferenceBackend {
                 block_table.len()
             )));
         }
-        if seq_len == 0 || seq_len > chunk {
-            return Err(RuntimeError::Shape(format!("seq_len {seq_len} not in 1..={chunk}")));
+        if n == 0 || n > chunk {
+            return Err(RuntimeError::Shape(format!("chunk n {n} not in 1..={chunk}")));
+        }
+        if start_pos + n > mp * self.config.page_size {
+            return Err(RuntimeError::Shape(format!(
+                "chunk end {} beyond the block table's reach",
+                start_pos + n
+            )));
         }
 
         let t0 = Instant::now();
-        for (pos, &tok) in ids.iter().enumerate().take(seq_len) {
-            let slot = self.page_slot(pos, block_table)?;
+        // Write the chunk's tokens at their absolute positions; the
+        // fingerprint then reads the *whole* prefix [0, start_pos + n)
+        // back through the table, so a skipped-but-unwritten leading
+        // position (scheduler bug, bogus prefix skip) is a hard
+        // "read before any write" error, not silent garbage.
+        for (i, &tok) in ids.iter().enumerate().take(n) {
+            let slot = self.page_slot(start_pos + i, block_table)?;
             self.pages[slot] = tok;
         }
-        let h = self.prefix_fingerprint(seq_len, block_table)?;
+        let h = self.prefix_fingerprint(start_pos + n, block_table)?;
         let mut logits = vec![0.0f32; self.config.vocab_size];
         self.fill_logits(h, &mut logits);
+        self.burn_compute(n);
         let exec_seconds = t0.elapsed().as_secs_f64();
 
         self.charge_env();
@@ -261,6 +301,7 @@ impl ModelBackend for ReferenceBackend {
             self.pages[slot] = ids[row];
             let h = self.prefix_fingerprint(len, table)?;
             self.fill_logits(h, &mut logits[row * vocab..(row + 1) * vocab]);
+            self.burn_compute(1);
         }
         let exec_seconds = t0.elapsed().as_secs_f64();
 
@@ -341,6 +382,44 @@ mod tests {
         // Decode claims a 4-token prefix that was never prefilled.
         let err = rt.decode(&[9], &[3], &[4], &bt).unwrap_err();
         assert!(err.to_string().contains("read before any write"), "{err}");
+    }
+
+    #[test]
+    fn chunked_prefill_equals_whole_prompt_exactly() {
+        let prompt: Vec<i32> = (40..52).collect(); // 12 tokens, 2 pages
+        let mut bt0 = vec![0i32; backend().config().max_pages_per_seq()];
+        bt0[0] = 1;
+        bt0[1] = 2;
+
+        let mut whole = backend();
+        let want = whole.prefill(&padded(&prompt, 16), 12, &bt0).unwrap().logits;
+
+        // Same prompt fed as 5 + 7 positioned chunks.
+        let mut chunked = backend();
+        chunked.prefill_chunk(&padded(&prompt[..5], 16), 0, 5, &bt0).unwrap();
+        let got = chunked.prefill_chunk(&padded(&prompt[5..], 16), 5, 7, &bt0).unwrap().logits;
+        assert_eq!(want, got, "chunked prefill must be bit-identical to whole-prompt");
+    }
+
+    #[test]
+    fn chunk_over_unwritten_prefix_is_an_error() {
+        let mut rt = backend();
+        let mut bt = vec![0i32; rt.config().max_pages_per_seq()];
+        bt[0] = 1;
+        bt[1] = 2;
+        // Claim positions 0..6 are resident without ever writing them.
+        let err = rt.prefill_chunk(&padded(&[9, 9], 16), 6, 2, &bt).unwrap_err();
+        assert!(err.to_string().contains("read before any write"), "{err}");
+    }
+
+    #[test]
+    fn chunk_beyond_table_reach_is_an_error() {
+        let mut rt = backend();
+        let mp = rt.config().max_pages_per_seq();
+        let bt = vec![1i32; mp];
+        let end = mp * rt.config().page_size;
+        let err = rt.prefill_chunk(&padded(&[1], 16), end, 1, &bt).unwrap_err();
+        assert!(err.to_string().contains("beyond"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! Backend-conformance suite: the [`ModelBackend`] contract as
+//! executable assertions, parameterized over any implementation.
+//!
+//! `tests/test_runtime.rs` (XLA, artifact-gated) and
+//! `tests/test_reference_backend.rs` (reference, always) used to assert
+//! the same contract by hand; this module is the single source of truth
+//! both suites run, so the two backends can't drift. The reference
+//! backend runs it with exact equality (`tol == 0.0`); the XLA backend
+//! with a small float tolerance (kernel reassociation).
+//!
+//! Checks that are *stricter* than the shared contract — the reference
+//! backend's hard error on reading unwritten KV slots, its all-zero
+//! padding rows — stay in the reference suite: the XLA executables
+//! produce well-defined-but-unspecified values there instead of
+//! failing.
+
+use crate::runtime::ModelBackend;
+
+/// Pad `ids` with zeros to `chunk` slots (the compiled static shape).
+pub fn padded(ids: &[i32], chunk: usize) -> Vec<i32> {
+    assert!(ids.len() <= chunk, "{} tokens > chunk {chunk}", ids.len());
+    let mut v = vec![0i32; chunk];
+    v[..ids.len()].copy_from_slice(ids);
+    v
+}
+
+/// The conformance runner: a factory for fresh backend instances (several
+/// checks need two instances with identical state) plus the logit
+/// comparison tolerance.
+pub struct BackendConformance {
+    make: Box<dyn Fn() -> Box<dyn ModelBackend>>,
+    tol: f32,
+}
+
+impl BackendConformance {
+    /// Exact-equality conformance (deterministic backends).
+    pub fn new(make: impl Fn() -> Box<dyn ModelBackend> + 'static) -> Self {
+        Self { make: Box::new(make), tol: 0.0 }
+    }
+
+    /// Allow `tol` max absolute logit difference where the contract says
+    /// "equal" (floating-point backends).
+    pub fn with_tolerance(mut self, tol: f32) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    fn fresh(&self) -> Box<dyn ModelBackend> {
+        (self.make)()
+    }
+
+    fn assert_close(&self, a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: logit length mismatch");
+        if self.tol == 0.0 {
+            assert_eq!(a, b, "{what}: logits differ (exact contract)");
+        } else {
+            let max = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+            assert!(max <= self.tol, "{what}: max |delta| {max} > tol {}", self.tol);
+        }
+    }
+
+    fn assert_far(a: &[f32], b: &[f32], what: &str) {
+        let max = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(max > 1e-6, "{what}: logits did not change");
+    }
+
+    /// Decode one live sequence through the smallest compiled batch,
+    /// padding the remaining slots; returns the live row's logits.
+    fn decode_single(
+        rt: &mut dyn ModelBackend,
+        token: i32,
+        pos: i32,
+        len: i32,
+        bt: &[i32],
+    ) -> Vec<f32> {
+        let mc = rt.config().clone();
+        let b = mc.pick_batch(1).expect("decode menu is non-empty");
+        let mp = mc.max_pages_per_seq();
+        let mut ids = vec![0i32; b];
+        ids[0] = token;
+        let mut positions = vec![0i32; b];
+        positions[0] = pos;
+        let mut lens = vec![0i32; b];
+        lens[0] = len;
+        let mut tables = vec![0i32; b * mp];
+        tables[..mp].copy_from_slice(bt);
+        let out = rt.decode(&ids, &positions, &lens, &tables).expect("decode");
+        out.logits[..mc.vocab_size].to_vec()
+    }
+
+    /// Every check, in order. Each is also callable individually for
+    /// finer-grained test names.
+    pub fn run_all(&self) {
+        self.reports_compiled_shapes();
+        self.shape_errors_are_reported();
+        self.kv_cache_chains_across_steps();
+        self.reset_cache_restores_initial_state();
+        self.batch_menu_is_transparent();
+        self.logits_address_page_contents_not_page_ids();
+        self.chunked_prefill_matches_whole_prompt();
+        self.chunked_prefill_reads_resident_prefix_pages();
+    }
+
+    /// Menus are non-empty, ascending, and sized within the model config.
+    pub fn reports_compiled_shapes(&self) {
+        let rt = self.fresh();
+        let mc = rt.config().clone();
+        let chunks = rt.compiled_chunks();
+        let batches = rt.compiled_batches();
+        assert!(!chunks.is_empty() && !batches.is_empty());
+        assert!(chunks.windows(2).all(|w| w[0] < w[1]), "chunks not ascending");
+        assert!(batches.windows(2).all(|w| w[0] < w[1]), "batches not ascending");
+        assert!(*chunks.last().unwrap() <= mc.max_seq_len);
+        assert!(rt.load_seconds() >= 0.0);
+        assert!(rt.weight_bytes() > 0);
+    }
+
+    /// Malformed static shapes are rejected, not silently reinterpreted.
+    pub fn shape_errors_are_reported(&self) {
+        let mut rt = self.fresh();
+        let mc = rt.config().clone();
+        let mp = mc.max_pages_per_seq();
+        let c0 = rt.compiled_chunks()[0];
+        let bad_chunk = c0 + 1;
+        if !rt.compiled_chunks().contains(&bad_chunk) {
+            assert!(
+                rt.prefill(&vec![0; bad_chunk], 1, &vec![0; mp]).is_err(),
+                "uncompiled chunk size accepted"
+            );
+        }
+        // wrong block-table length
+        assert!(rt.prefill(&vec![0; c0], 1, &vec![0; mp + 1]).is_err());
+        // zero valid tokens
+        assert!(rt.prefill(&vec![0; c0], 0, &vec![0; mp]).is_err());
+        // more valid tokens than the chunk holds
+        assert!(rt.prefill(&vec![0; c0], c0 + 1, &vec![0; mp]).is_err());
+        // chunk reaching past the block table
+        assert!(
+            rt.prefill_chunk(&vec![0; c0], mp * mc.page_size, 1, &vec![1; mp]).is_err(),
+            "chunk past the table's reach accepted"
+        );
+        // uncompiled batch size
+        let bad_batch = rt.compiled_batches().last().unwrap() + 1;
+        assert!(rt
+            .decode(
+                &vec![0; bad_batch],
+                &vec![0; bad_batch],
+                &vec![0; bad_batch],
+                &vec![0; bad_batch * mp],
+            )
+            .is_err());
+        // inconsistent decode input lengths
+        let b0 = rt.compiled_batches()[0];
+        assert!(rt
+            .decode(&vec![0; b0], &vec![0; b0 + 1], &vec![0; b0], &vec![0; b0 * mp])
+            .is_err());
+    }
+
+    /// Decoding the same token at successive positions must change the
+    /// logits: the KV state actually chains between steps.
+    pub fn kv_cache_chains_across_steps(&self) {
+        let mut rt = self.fresh();
+        let mc = rt.config().clone();
+        let chunk = rt.compiled_chunks()[0];
+        let mut bt = vec![0i32; mc.max_pages_per_seq()];
+        bt[0] = 1;
+        bt[1] = 2;
+        let out = rt.prefill(&padded(&[10, 11, 12, 13], chunk), 4, &bt).expect("prefill");
+        assert_eq!(out.logits.len(), mc.vocab_size);
+        let one = Self::decode_single(rt.as_mut(), 42, 4, 5, &bt);
+        let two = Self::decode_single(rt.as_mut(), 42, 5, 6, &bt);
+        Self::assert_far(&one, &two, "same token, longer prefix");
+    }
+
+    /// `reset_cache` restores the pristine pool: a replayed prefill sees
+    /// exactly the first run's logits.
+    pub fn reset_cache_restores_initial_state(&self) {
+        let mut rt = self.fresh();
+        let mc = rt.config().clone();
+        let chunk = rt.compiled_chunks()[0];
+        let mut bt = vec![0i32; mc.max_pages_per_seq()];
+        bt[0] = 1;
+        let ids = padded(&[7, 8, 9], chunk);
+        let a = rt.prefill(&ids, 3, &bt).expect("prefill");
+        Self::decode_single(rt.as_mut(), 1, 3, 4, &bt); // pollute
+        rt.reset_cache().expect("reset");
+        let b = rt.prefill(&ids, 3, &bt).expect("prefill after reset");
+        self.assert_close(&a.logits, &b.logits, "reset_cache replay");
+    }
+
+    /// The same sequence decoded through two different compiled batch
+    /// sizes (padding the extra slots) produces the same live-row logits:
+    /// the static-shape menu is semantically transparent.
+    pub fn batch_menu_is_transparent(&self) {
+        let batches = self.fresh().compiled_batches();
+        if batches.len() < 2 {
+            return; // a single compiled batch size: nothing to compare
+        }
+        let (small, large) = (batches[0], batches[1]);
+
+        let mut results = Vec::new();
+        for b in [small, large] {
+            let mut rt = self.fresh();
+            let mc = rt.config().clone();
+            let mp = mc.max_pages_per_seq();
+            let chunk = rt.compiled_chunks()[0];
+            let mut bt = vec![0i32; mp];
+            bt[0] = 1;
+            rt.prefill(&padded(&[5, 6], chunk), 2, &bt).expect("prefill");
+            let mut ids = vec![0i32; b];
+            ids[0] = 9;
+            let mut positions = vec![0i32; b];
+            positions[0] = 2;
+            let mut lens = vec![0i32; b];
+            lens[0] = 3;
+            let mut tables = vec![0i32; b * mp];
+            tables[..mp].copy_from_slice(&bt);
+            let out = rt.decode(&ids, &positions, &lens, &tables).expect("decode");
+            results.push(out.logits[..mc.vocab_size].to_vec());
+        }
+        self.assert_close(&results[0], &results[1], "b=small vs b=large live row");
+    }
+
+    /// Two sequences with identical token prefixes but different page
+    /// assignments see identical logits: the KV contract is
+    /// content-addressed through the block table, page *ids* never leak.
+    pub fn logits_address_page_contents_not_page_ids(&self) {
+        let mut rt = self.fresh();
+        let mc = rt.config().clone();
+        let chunk = mc.pick_chunk(9).expect("a chunk holding 9 tokens");
+        let ids = padded(&[21, 22, 23, 24, 25, 26, 27, 28, 29], chunk);
+
+        let mut bt_a = vec![0i32; mc.max_pages_per_seq()];
+        bt_a[0] = 1;
+        bt_a[1] = 2;
+        let a = rt.prefill(&ids, 9, &bt_a).expect("prefill a");
+
+        let mut bt_b = vec![0i32; mc.max_pages_per_seq()];
+        bt_b[0] = 5;
+        bt_b[1] = 6;
+        let b = rt.prefill(&ids, 9, &bt_b).expect("prefill b");
+        self.assert_close(&a.logits, &b.logits, "same tokens, different pages");
+    }
+
+    /// The positioned-prefill contract: a prompt fed as several
+    /// `prefill_chunk` slices — including a split that straddles a page
+    /// boundary — produces the same last-token logits as one
+    /// whole-prompt call, and the resulting KV state decodes
+    /// identically.
+    pub fn chunked_prefill_matches_whole_prompt(&self) {
+        let probe = self.fresh();
+        let mc = probe.config().clone();
+        let ps = mc.page_size;
+        // A prompt spanning two pages, longer than one page by 3 tokens.
+        let len = ps + 3;
+        let prompt: Vec<i32> = (0..len as i32).map(|i| 30 + i).collect();
+        let chunk = mc.pick_chunk(len).expect("prompt fits largest chunk");
+        let mut bt = vec![0i32; mc.max_pages_per_seq()];
+        bt[0] = 1;
+        bt[1] = 2;
+
+        let mut whole = self.fresh();
+        let want = whole.prefill(&padded(&prompt, chunk), len, &bt).expect("whole").logits;
+        let want_next = Self::decode_single(whole.as_mut(), 77, len as i32, len as i32 + 1, &bt);
+
+        for splits in [vec![1, len - 1], vec![ps, 3], vec![ps - 1, 2, 2]] {
+            assert_eq!(splits.iter().sum::<usize>(), len);
+            let mut rt = self.fresh();
+            let mut start = 0usize;
+            let mut last = Vec::new();
+            for n in splits.iter().copied() {
+                let c = rt.config().pick_chunk(n).expect("chunk for slice");
+                let ids = padded(&prompt[start..start + n], c);
+                last = rt.prefill_chunk(&ids, start, n, &bt).expect("chunk").logits;
+                start += n;
+            }
+            self.assert_close(&want, &last, &format!("chunked {splits:?} vs whole"));
+            let next = Self::decode_single(rt.as_mut(), 77, len as i32, len as i32 + 1, &bt);
+            self.assert_close(&want_next, &next, &format!("decode after chunked {splits:?}"));
+        }
+    }
+
+    /// The prefix-skip contract: a chunk starting past position 0 reads
+    /// the resident pages below it — pages another sequence's prefill
+    /// wrote (the prefix-cache reuse shape) — instead of requiring a
+    /// rewrite.
+    pub fn chunked_prefill_reads_resident_prefix_pages(&self) {
+        let probe = self.fresh();
+        let mc = probe.config().clone();
+        let ps = mc.page_size;
+        let shared: Vec<i32> = (0..ps as i32).map(|i| 100 + i).collect();
+        let suffix = [3i32, 4];
+        let mut full = shared.clone();
+        full.extend_from_slice(&suffix);
+        let len = full.len();
+        let chunk = mc.pick_chunk(len).expect("prompt fits largest chunk");
+
+        // Baseline: the full prompt, whole-prompt prefilled on its own pages.
+        let mut baseline = self.fresh();
+        let mut bt_base = vec![0i32; mc.max_pages_per_seq()];
+        bt_base[0] = 5;
+        bt_base[1] = 6;
+        let want = baseline.prefill(&padded(&full, chunk), len, &bt_base).expect("whole").logits;
+
+        // Reuse shape: sequence A prefills the shared first page; B's
+        // table points at A's page and B prefills *only* its suffix,
+        // starting at the page boundary.
+        let mut rt = self.fresh();
+        let mut bt_a = vec![0i32; mc.max_pages_per_seq()];
+        bt_a[0] = 1;
+        bt_a[1] = 2;
+        let c_a = mc.pick_chunk(ps).expect("page-sized chunk");
+        rt.prefill_chunk(&padded(&shared, c_a), 0, ps, &bt_a).expect("seq a");
+
+        let mut bt_b = vec![0i32; mc.max_pages_per_seq()];
+        bt_b[0] = 1; // A's page, reused
+        bt_b[1] = 3; // B's own page for the suffix
+        let c_b = mc.pick_chunk(suffix.len()).expect("suffix chunk");
+        let got = rt
+            .prefill_chunk(&padded(&suffix, c_b), ps, suffix.len(), &bt_b)
+            .expect("suffix chunk over reused page")
+            .logits;
+        self.assert_close(&want, &got, "prefix-skip over a reused page");
+    }
+}

@@ -1,8 +1,35 @@
-//! Test utilities: a minimal property-testing harness.
+//! Test utilities: a minimal property-testing harness and the shared
+//! backend-conformance suite.
 //!
 //! The vendored crate set has no proptest/quickcheck, so invariant tests
 //! (scheduler, kv-cache, grammar, json) use this seeded-PRNG runner. It
 //! reports the failing iteration's seed so a failure reproduces with
 //! `WEBLLM_PROP_SEED=<seed> cargo test <name>`.
+//!
+//! `backend_contract` holds the [`crate::runtime::ModelBackend`]
+//! contract as executable assertions, run against the reference backend
+//! unconditionally and against compiled XLA artifacts when present.
 
+pub mod backend_contract;
 pub mod prop;
+
+use crate::api::ChatCompletionRequest;
+
+/// Ban the reference tokenizer's EOS specials (`<eos>` = 2, `<|end|>` =
+/// 7) so a greedy run generates exactly `max_tokens` tokens — for tests
+/// and benches that need a deterministic token count.
+pub fn ban_reference_eos(r: &mut ChatCompletionRequest) {
+    for id in [2u32, 7] {
+        r.sampling.logit_bias.insert(id, -100.0);
+    }
+}
+
+/// Additionally ban every empty-byte token of the reference vocabulary
+/// (specials 0..8, unused tail 268..300) so each generated token
+/// contributes visible text — for streaming tests that count deltas.
+pub fn ban_reference_invisible(r: &mut ChatCompletionRequest) {
+    ban_reference_eos(r);
+    for id in (0..8u32).chain(268..300) {
+        r.sampling.logit_bias.insert(id, -100.0);
+    }
+}

@@ -1,0 +1,321 @@
+//! Chunked, prefix-aware prefill: scheduler-level integration tests on
+//! the deterministic reference backend (no artifacts, runs everywhere).
+//!
+//! The load-bearing property: the chunk budget, the number of chunks a
+//! prompt is sliced into, and the prefix-cache skip are all *scheduling*
+//! decisions — the token stream they produce must be identical to
+//! whole-prompt prefill, bit for bit. The reference backend's
+//! hash-of-prefix logits make that checkable by exact string equality.
+
+use webllm::api::{ChatCompletionRequest, FinishReason};
+use webllm::coordinator::{EngineConfig, EngineEvent, MLCEngine, ServiceWorkerMLCEngine};
+use webllm::testutil::prop::Runner;
+use webllm::testutil::{ban_reference_eos as ban_eos, ban_reference_invisible as ban_invisible};
+
+const MODEL: &str = "tiny-ref";
+/// Reference-model geometry (pinned by `models::reference` tests).
+const MAX_CHUNK: usize = 64;
+const PAGE: usize = 8;
+
+fn engine_with_budget(budget: usize) -> MLCEngine {
+    let mut cfg = EngineConfig::reference(&[MODEL]);
+    cfg.prefill_token_budget = budget;
+    MLCEngine::new(&cfg).expect("engine")
+}
+
+fn engine() -> MLCEngine {
+    MLCEngine::new(&EngineConfig::reference(&[MODEL])).expect("engine")
+}
+
+/// Greedy request whose rendered prompt is `'x' * k` plus the 4 template
+/// specials — 'x' has no merges in the reference vocab, so the prompt is
+/// exactly `k + 4` tokens.
+fn xs_request(k: usize, max_tokens: usize) -> ChatCompletionRequest {
+    let mut r = ChatCompletionRequest::new(MODEL).user("x".repeat(k));
+    r.max_tokens = max_tokens;
+    r.sampling.temperature = 0.0;
+    ban_eos(&mut r);
+    r
+}
+
+fn stat_i64(engine: &MLCEngine, key: &str) -> i64 {
+    engine.stats_json().get(key).unwrap().as_i64().unwrap()
+}
+
+// -- regression: prompts longer than the largest compiled chunk -------------
+
+#[test]
+fn prompt_of_max_chunk_plus_page_size_completes() {
+    // Exactly max_prefill_chunk() + page_size prompt tokens — the shape
+    // `submit` used to reject outright (engine.rs:356 pre-chunking).
+    let mut engine = engine();
+    let want_prompt = MAX_CHUNK + PAGE; // 72
+    let resp = engine.chat_completion(xs_request(want_prompt - 4, 6)).unwrap();
+    assert_eq!(resp.usage.prompt_tokens, want_prompt, "test prompt arithmetic drifted");
+    assert_eq!(resp.usage.completion_tokens, 6);
+    assert_eq!(resp.choices[0].finish_reason, FinishReason::Length);
+    // Sliced as 64 + 8 under the default (menu-clamped) budget.
+    assert_eq!(stat_i64(&engine, "prefill_chunks"), 2);
+    assert_eq!(stat_i64(&engine, "prefill_tokens"), want_prompt as i64);
+    assert_eq!(stat_i64(&engine, "prefill_cached_tokens_skipped"), 0);
+}
+
+#[test]
+fn long_prompt_works_over_the_worker_boundary() {
+    // The submit-time rejection also used to fire on the worker path.
+    let mut fe = ServiceWorkerMLCEngine::create(EngineConfig::reference(&[MODEL])).unwrap();
+    let resp = fe.chat_completion(xs_request(80, 4)).unwrap();
+    assert_eq!(resp.usage.prompt_tokens, 84);
+    assert_eq!(resp.usage.completion_tokens, 4);
+
+    // And the direct engine agrees token-for-token.
+    let direct = engine().chat_completion(xs_request(80, 4)).unwrap();
+    assert_eq!(resp.text(), direct.text());
+}
+
+// -- the equivalence property -----------------------------------------------
+
+#[test]
+fn prop_chunked_prefill_equals_whole_prompt_token_for_token() {
+    // Any chunk budget, warm or cold prefix cache: identical output to
+    // the max-budget cold baseline.
+    const ALPHABET: &[u8] = b"abcdefgh xyz,.qrstuv";
+    Runner::new("chunked_prefill_equivalence", 6).run(|rng| {
+        let k = rng.range(91); // prompt: k + 4 tokens, up to 94 < context
+        let content: String = (0..k)
+            .map(|_| ALPHABET[rng.range(ALPHABET.len())] as char)
+            .collect();
+        let seed = rng.u64();
+        let temperature = 0.2 + rng.f64() as f32;
+        let mk = || {
+            let mut r = ChatCompletionRequest::new(MODEL).user(content.clone());
+            r.max_tokens = 6;
+            r.sampling.seed = Some(seed);
+            r.sampling.temperature = temperature;
+            r
+        };
+
+        let baseline = engine_with_budget(usize::MAX)
+            .chat_completion(mk())
+            .map_err(|e| e.to_string())?;
+
+        for budget in [1usize, 5, 17, 32, 1000] {
+            let mut e = engine_with_budget(budget);
+            // Cold: fresh engine, empty prefix cache.
+            let cold = e.chat_completion(mk()).map_err(|e| e.to_string())?;
+            if cold.text() != baseline.text() {
+                return Err(format!(
+                    "budget {budget} cold: {:?} != baseline {:?} (prompt {k} chars)",
+                    cold.text(),
+                    baseline.text()
+                ));
+            }
+            // Warm: same engine again — leading pages now come from the
+            // prefix cache and are skipped, not recomputed.
+            let skipped_before = stat_i64(&e, "prefill_cached_tokens_skipped");
+            let warm = e.chat_completion(mk()).map_err(|e| e.to_string())?;
+            if warm.text() != baseline.text() {
+                return Err(format!(
+                    "budget {budget} warm: {:?} != baseline {:?} (prompt {k} chars)",
+                    warm.text(),
+                    baseline.text()
+                ));
+            }
+            let skipped = stat_i64(&e, "prefill_cached_tokens_skipped") - skipped_before;
+            let full_pages = (cold.usage.prompt_tokens / PAGE) as i64;
+            if full_pages > 0 && skipped == 0 {
+                return Err(format!(
+                    "budget {budget}: warm rerun of a {}-token prompt skipped nothing",
+                    cold.usage.prompt_tokens
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// -- prefix-cache skip accounting -------------------------------------------
+
+#[test]
+fn fully_cached_prompt_recomputes_only_the_final_token() {
+    // The acceptance criterion: a warm-prefix prompt costs O(uncached
+    // suffix). A prompt of exactly 4 pages, repeated, is fully cached —
+    // only the final token (whose logits seed the first sampled token)
+    // is recomputed.
+    let mut engine = engine();
+    let prompt_tokens = 4 * PAGE; // 32 = 28 'x's + 4 specials
+    let a = engine.chat_completion(xs_request(prompt_tokens - 4, 4)).unwrap();
+    assert_eq!(a.usage.prompt_tokens, prompt_tokens);
+    assert_eq!(stat_i64(&engine, "prefill_tokens"), 32);
+    assert_eq!(stat_i64(&engine, "prefill_cached_tokens_skipped"), 0);
+
+    let b = engine.chat_completion(xs_request(prompt_tokens - 4, 4)).unwrap();
+    assert_eq!(a.text(), b.text(), "prefix skip must not change the output");
+    // Request B prefilled exactly one position: 32 total minus 31 skipped.
+    assert_eq!(stat_i64(&engine, "prefill_cached_tokens_skipped"), 31);
+    assert_eq!(stat_i64(&engine, "prefill_tokens"), 32 + 1);
+    assert_eq!(stat_i64(&engine, "prefill_chunks"), 2);
+
+    // The per-model prefix cache agrees it served the pages.
+    let stats = engine.stats_json();
+    let model = stats.get("models").unwrap().get(MODEL).unwrap();
+    assert!(model.get("prefix_cache_hits").unwrap().as_i64().unwrap() >= 4);
+}
+
+#[test]
+fn partially_cached_prompt_prefills_only_the_suffix() {
+    let mut engine = engine();
+    // First request: 2 full pages + 3 tokens (content 15 'x's => 19 tokens).
+    engine.chat_completion(xs_request(15, 4)).unwrap();
+    let base_tokens = stat_i64(&engine, "prefill_tokens");
+    assert_eq!(base_tokens, 19);
+
+    // Second request shares the first 2 pages (16 tokens), then diverges.
+    let mut r = ChatCompletionRequest::new(MODEL).user(format!("{}yyyyyyyy", "x".repeat(15)));
+    r.max_tokens = 4;
+    r.sampling.temperature = 0.0;
+    ban_eos(&mut r);
+    let resp = engine.chat_completion(r).unwrap();
+    assert_eq!(resp.usage.prompt_tokens, 27);
+    assert_eq!(stat_i64(&engine, "prefill_cached_tokens_skipped"), 16);
+    assert_eq!(stat_i64(&engine, "prefill_tokens"), base_tokens + (27 - 16));
+}
+
+// -- decode/prefill interleaving --------------------------------------------
+
+#[test]
+fn decode_progresses_while_a_long_prompt_prefills() {
+    // The whole point of chunking: admitting a long prompt no longer
+    // stalls running sequences for its entire prefill.
+    let mut engine = engine_with_budget(16);
+
+    // A: streaming, guaranteed-visible tokens, long enough to outlive
+    // B's prefill; short prompt (6 tokens) so A itself takes one chunk.
+    let mut a = ChatCompletionRequest::new(MODEL).user("hi");
+    a.max_tokens = 30;
+    a.sampling.temperature = 0.0;
+    a.stream = true;
+    ban_invisible(&mut a);
+    let a_id = engine.submit(a).unwrap();
+    engine.step().unwrap(); // A prefills (1 chunk) and starts decoding
+    engine.poll_events();
+
+    // B: 72-token prompt => 5 chunks of 16/16/16/16/8 at budget 16.
+    let b_id = engine.submit(xs_request(68, 4)).unwrap();
+    engine.step().unwrap(); // B chunk 1 + A decode, co-scheduled
+    let stats = engine.stats_json();
+    let model = stats.get("models").unwrap().get(MODEL).unwrap();
+    assert_eq!(
+        model.get("prefilling").unwrap().as_i64(),
+        Some(1),
+        "B must still be mid-prefill after one step"
+    );
+    let a_chunks: usize = engine
+        .poll_events()
+        .iter()
+        .filter(|ev| matches!(ev, EngineEvent::Chunk(rid, _) if *rid == a_id))
+        .count();
+    assert!(a_chunks >= 1, "A must receive tokens while B prefills");
+
+    engine.run_to_completion().unwrap();
+    let mut done = 0;
+    for ev in engine.poll_events() {
+        if let EngineEvent::Done(rid, resp) = ev {
+            done += 1;
+            if rid == b_id {
+                assert_eq!(resp.usage.prompt_tokens, 72);
+                assert_eq!(resp.usage.completion_tokens, 4);
+            }
+        }
+    }
+    assert_eq!(done, 2);
+
+    // Stall accounting: every one of B's 5 chunks ran with A decoding.
+    assert_eq!(stat_i64(&engine, "prefill_chunks"), 1 + 5);
+    assert_eq!(stat_i64(&engine, "decode_stall_chunks"), 5);
+    assert!(engine.stats_json().get("decode_stall_s").unwrap().as_f64().unwrap() >= 0.0);
+}
+
+// -- mid-prefill cancellation -----------------------------------------------
+
+#[test]
+fn abort_mid_prefill_resolves_and_leaves_engine_clean() {
+    let mut engine = engine_with_budget(16);
+    let baseline = engine_with_budget(16).chat_completion(xs_request(100, 4)).unwrap();
+
+    // 104-token prompt => 7 chunks at budget 16; abort after 2.
+    let id = engine.submit(xs_request(100, 4)).unwrap();
+    engine.step().unwrap();
+    engine.step().unwrap();
+    engine.abort(id);
+    engine.run_to_completion().unwrap();
+
+    let mut saw = false;
+    for ev in engine.poll_events() {
+        if let EngineEvent::Done(rid, resp) = ev {
+            assert_eq!(rid, id);
+            assert_eq!(resp.choices[0].finish_reason, FinishReason::Abort);
+            assert_eq!(resp.usage.completion_tokens, 0, "no token was ever sampled");
+            assert_eq!(resp.text(), "");
+            saw = true;
+        }
+    }
+    assert!(saw, "aborted prefilling request must resolve");
+
+    // The engine is intact — pages freed, scheduler idle.
+    assert!(!engine.has_work());
+    let stats = engine.stats_json();
+    let model = stats.get("models").unwrap().get(MODEL).unwrap();
+    assert_eq!(model.get("prefilling").unwrap().as_i64(), Some(0));
+    assert_eq!(model.get("running").unwrap().as_i64(), Some(0));
+
+    // And crucially: only pages whose chunks actually landed may have
+    // been registered for prefix reuse — the page holding the abort
+    // boundary was not. The same prompt resubmitted completes correctly
+    // and identically to an untouched engine.
+    let resp = engine.chat_completion(xs_request(100, 4)).unwrap();
+    assert_eq!(resp.text(), baseline.text(), "abort must not poison the prefix cache");
+    assert_eq!(resp.usage.completion_tokens, 4);
+}
+
+#[test]
+fn abort_mid_prefill_does_not_disturb_decoding_neighbors() {
+    let mut engine = engine_with_budget(16);
+    let mut a = xs_request(4, 8);
+    a.sampling.seed = Some(9);
+    let baseline = engine_with_budget(16).chat_completion(a.clone()).unwrap();
+
+    let a_id = engine.submit(a).unwrap();
+    engine.step().unwrap(); // A decoding
+    let b_id = engine.submit(xs_request(100, 4)).unwrap();
+    engine.step().unwrap(); // B chunk 1
+    engine.abort(b_id);
+    engine.run_to_completion().unwrap();
+
+    let mut a_text = None;
+    for ev in engine.poll_events() {
+        if let EngineEvent::Done(rid, resp) = ev {
+            if rid == a_id {
+                a_text = Some(resp.text().to_string());
+            }
+        }
+    }
+    assert_eq!(a_text.as_deref(), Some(baseline.text()), "neighbor output changed");
+}
+
+// -- budget knob ------------------------------------------------------------
+
+#[test]
+fn smaller_budgets_slice_into_more_chunks() {
+    for (budget, want_chunks) in [(usize::MAX, 2), (32, 3), (16, 5), (1, 5)] {
+        let mut e = engine_with_budget(budget);
+        e.chat_completion(xs_request(68, 2)).unwrap(); // 72-token prompt
+        assert_eq!(
+            stat_i64(&e, "prefill_chunks"),
+            want_chunks,
+            "budget {budget}"
+        );
+        // Chunking never changes the total prefill work (cold cache).
+        assert_eq!(stat_i64(&e, "prefill_tokens"), 72, "budget {budget}");
+    }
+}

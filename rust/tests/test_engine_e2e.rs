@@ -11,11 +11,9 @@ use webllm::api::{ChatCompletionRequest, FinishReason, ResponseFormat};
 use webllm::coordinator::{EngineConfig, EngineEvent, MLCEngine, ServiceWorkerMLCEngine};
 use webllm::json::parse;
 use webllm::testutil::prop::Runner;
+use webllm::testutil::{ban_reference_eos as ban_eos, ban_reference_invisible as ban_invisible};
 
 const MODEL: &str = "tiny-ref";
-/// Reference-tokenizer special ids (fixed by `models::reference`).
-const EOS: u32 = 2;
-const END: u32 = 7;
 
 fn engine() -> MLCEngine {
     MLCEngine::new(&EngineConfig::reference(&[MODEL])).expect("engine")
@@ -30,26 +28,6 @@ fn greedy(prompt: &str, max_tokens: usize) -> ChatCompletionRequest {
     r.max_tokens = max_tokens;
     r.sampling.temperature = 0.0;
     r
-}
-
-/// Ban both EOS specials so greedy generation runs to exactly
-/// `max_tokens` — for tests that need a deterministic token count.
-fn ban_eos(r: &mut ChatCompletionRequest) {
-    r.sampling.logit_bias.insert(EOS, -100.0);
-    r.sampling.logit_bias.insert(END, -100.0);
-}
-
-/// Additionally ban every empty-byte token (specials 0..8, unused tail
-/// ids) so each generated token contributes visible text — for tests
-/// that need deterministically non-empty output.
-fn ban_invisible(r: &mut ChatCompletionRequest) {
-    ban_eos(r);
-    for id in 0..8u32 {
-        r.sampling.logit_bias.insert(id, -100.0);
-    }
-    for id in 268..300u32 {
-        r.sampling.logit_bias.insert(id, -100.0);
-    }
 }
 
 /// Drain completion events into (per-request responses, all chunks).
@@ -565,7 +543,9 @@ fn worker_error_paths() {
         .chat_completion(ChatCompletionRequest::new("no-such-model").user("x"))
         .unwrap_err();
     assert_eq!(err.status, 404);
-    // Oversize prompt (max prefill chunk is 64 tokens).
+    // Oversize prompt: longer than the *context length* (prompts merely
+    // longer than the largest compiled chunk are chunked, not rejected —
+    // see test_chunked_prefill.rs).
     let long = "word ".repeat(400);
     let err = fe
         .chat_completion(ChatCompletionRequest::new(MODEL).user(long))
@@ -633,6 +613,12 @@ fn stats_json_is_populated_across_subsystems() {
     let stats = engine.stats_json();
     assert!(stats.get("decode_tokens").unwrap().as_i64().unwrap() > 0);
     assert!(stats.get("e2e_requests").unwrap().as_i64().unwrap() >= 2);
+    // Chunked-prefill accounting: both prompts fit one chunk => exactly
+    // one chunk each; the stall/skip counters exist and start sane.
+    assert_eq!(stats.get("prefill_chunks").unwrap().as_i64(), Some(2));
+    assert!(stats.get("prefill_cached_tokens_skipped").unwrap().as_i64().unwrap() >= 0);
+    assert!(stats.get("decode_stall_chunks").unwrap().as_i64().unwrap() >= 0);
+    assert!(stats.get("decode_stall_s").unwrap().as_f64().unwrap() >= 0.0);
     let grammar = stats.get("grammar").unwrap();
     assert!(grammar.get("compiles").unwrap().as_i64().unwrap() >= 1);
     let masks = grammar.get("mask_hits").unwrap().as_i64().unwrap()

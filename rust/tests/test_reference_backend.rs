@@ -1,11 +1,13 @@
-//! Reference-backend contract tests: the same runtime-layer checks
-//! `test_runtime.rs` runs against compiled XLA artifacts, executed
-//! unconditionally against `ReferenceBackend` through the `ModelBackend`
-//! trait object — shape validation, KV chaining, batch transparency,
-//! page-content addressing, and reset semantics.
+//! Reference-backend contract tests: the shared backend-conformance
+//! suite (`testutil::backend_contract`, the same checks `test_runtime.rs`
+//! runs against compiled XLA artifacts) executed unconditionally with
+//! **exact equality**, plus the reference backend's stricter guarantees —
+//! hard errors on unwritten-KV reads, all-zero padding rows, seed/model
+//! identity — that the shared contract deliberately leaves unspecified.
 
 use webllm::models::reference_model_config;
 use webllm::runtime::{ModelBackend, ReferenceBackend};
+use webllm::testutil::backend_contract::{padded, BackendConformance};
 
 fn backend() -> Box<dyn ModelBackend> {
     Box::new(ReferenceBackend::new(
@@ -16,132 +18,106 @@ fn backend() -> Box<dyn ModelBackend> {
     ))
 }
 
-fn padded(ids: &[i32], chunk: usize) -> Vec<i32> {
-    let mut v = vec![0i32; chunk];
-    v[..ids.len()].copy_from_slice(ids);
-    v
+fn conformance() -> BackendConformance {
+    BackendConformance::new(backend) // tol 0.0: exact equality
 }
 
+// -- shared conformance suite (exact) ---------------------------------------
+
 #[test]
-fn reports_compiled_shapes() {
+fn conformance_reports_compiled_shapes() {
+    conformance().reports_compiled_shapes();
+    // Reference-registry specifics on top of the generic check.
     let rt = backend();
     assert_eq!(rt.compiled_chunks(), vec![16, 32, 64]);
     assert_eq!(rt.compiled_batches(), vec![1, 2, 4, 8]);
-    assert!(rt.load_seconds() >= 0.0);
-    assert!(rt.weight_bytes() > 0);
     assert_eq!(rt.config().name, "tiny-ref");
 }
 
 #[test]
-fn shape_errors_are_reported() {
+fn conformance_shape_errors_are_reported() {
+    conformance().shape_errors_are_reported();
+    // Stricter-than-contract reference checks.
     let mut rt = backend();
     let mp = rt.config().max_pages_per_seq();
-    // wrong chunk
-    assert!(rt.prefill(&[0; 24], 4, &vec![0; mp]).is_err());
-    // wrong block table length
-    assert!(rt.prefill(&[0; 16], 4, &[0; 3]).is_err());
-    // zero seq_len
-    assert!(rt.prefill(&[0; 16], 0, &vec![0; mp]).is_err());
-    // seq_len beyond chunk
-    assert!(rt.prefill(&[0; 16], 17, &vec![0; mp]).is_err());
     // page id out of pool
     let mut bad = vec![0i32; mp];
     bad[0] = 10_000;
     assert!(rt.prefill(&[0; 16], 4, &bad).is_err());
-    // wrong batch
-    assert!(rt.decode(&[0; 3], &[0; 3], &[0; 3], &vec![0; 3 * mp]).is_err());
-    // inconsistent lengths
-    assert!(rt.decode(&[0; 1], &[0; 2], &[0; 1], &vec![0; mp]).is_err());
     // position not seq_len-1
     assert!(rt.decode(&[0; 1], &[5], &[3], &vec![0; mp]).is_err());
 }
 
 #[test]
-fn prefill_then_decode_logits_change_with_context() {
+fn conformance_kv_cache_chains_across_steps() {
+    conformance().kv_cache_chains_across_steps();
+}
+
+#[test]
+fn conformance_reset_cache_restores_initial_state() {
+    conformance().reset_cache_restores_initial_state();
+}
+
+#[test]
+fn conformance_batch_menu_is_transparent() {
+    conformance().batch_menu_is_transparent();
+}
+
+#[test]
+fn conformance_logits_address_page_contents_not_page_ids() {
+    conformance().logits_address_page_contents_not_page_ids();
+}
+
+#[test]
+fn conformance_chunked_prefill_matches_whole_prompt() {
+    conformance().chunked_prefill_matches_whole_prompt();
+}
+
+#[test]
+fn conformance_chunked_prefill_reads_resident_prefix_pages() {
+    conformance().chunked_prefill_reads_resident_prefix_pages();
+}
+
+// -- reference-specific strictness ------------------------------------------
+
+#[test]
+fn padding_rows_are_all_zero() {
+    // The shared contract only pins live rows; the reference backend
+    // additionally zeroes padding rows so leakage is detectable.
+    let mut rt = backend();
+    let mp = rt.config().max_pages_per_seq();
+    let mut bt = vec![0i32; mp];
+    bt[0] = 1;
+    rt.prefill(&padded(&[5, 6], 16), 2, &bt).unwrap();
+    let mut bt2 = vec![0i32; 2 * mp];
+    bt2[..mp].copy_from_slice(&bt);
+    let out = rt.decode(&[9, 0], &[2, 0], &[3, 0], &bt2).unwrap();
+    let v = rt.config().vocab_size;
+    assert!(out.logits[v..].iter().all(|&x| x == 0.0), "padding row leaked");
+}
+
+#[test]
+fn reading_unwritten_kv_is_an_error() {
+    let mut rt = backend();
+    let mp = rt.config().max_pages_per_seq();
+    let mut bt = vec![0i32; mp];
+    bt[0] = 3;
+    // Decode claims a 4-token prefix that was never prefilled.
+    let err = rt.decode(&[9], &[3], &[4], &bt).unwrap_err();
+    assert!(err.to_string().contains("read before any write"), "{err}");
+}
+
+#[test]
+fn chunk_over_unwritten_prefix_is_an_error() {
+    // A positioned chunk claiming residency below start_pos that nothing
+    // ever wrote: the exact failure a bogus prefix skip would cause.
     let mut rt = backend();
     let mp = rt.config().max_pages_per_seq();
     let mut bt = vec![0i32; mp];
     bt[0] = 1;
     bt[1] = 2;
-
-    let out = rt.prefill(&padded(&[10, 11, 12, 13], 16), 4, &bt).unwrap();
-    assert_eq!(out.logits.len(), rt.config().vocab_size);
-
-    // Decode the same next token twice at successive positions: context
-    // grew, so logits must differ (cache actually chained).
-    let one = rt.decode(&[42], &[4], &[5], &bt).unwrap();
-    let two = rt.decode(&[42], &[5], &[6], &bt).unwrap();
-    let d: f32 = one
-        .logits
-        .iter()
-        .zip(&two.logits)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0, f32::max);
-    assert!(d > 1e-6, "cache state did not affect logits");
-}
-
-#[test]
-fn reset_cache_restores_initial_state() {
-    let mut rt = backend();
-    let mp = rt.config().max_pages_per_seq();
-    let mut bt = vec![0i32; mp];
-    bt[0] = 1;
-
-    let ids = padded(&[7, 8, 9], 16);
-    let a = rt.prefill(&ids, 3, &bt).unwrap();
-    // pollute cache, then reset, then repeat: identical logits expected
-    rt.decode(&[1], &[3], &[4], &bt).unwrap();
-    rt.reset_cache().unwrap();
-    let b = rt.prefill(&ids, 3, &bt).unwrap();
-    assert_eq!(a.logits, b.logits);
-}
-
-#[test]
-fn batch_sizes_agree_on_shared_sequence() {
-    // The same single sequence decoded through the b=1 and b=2 menus
-    // (padding the second slot) must produce identical logits — the
-    // static-shape menu must be semantically transparent.
-    let mut rt = backend();
-    let mp = rt.config().max_pages_per_seq();
-    let mut bt = vec![0i32; mp];
-    bt[0] = 1;
-
-    let ids = padded(&[5, 6], 16);
-    rt.prefill(&ids, 2, &bt).unwrap();
-    let one = rt.decode(&[9], &[2], &[3], &bt).unwrap();
-
-    // Fresh backend to replay with b=2 (cache state must match).
-    let mut rt2 = backend();
-    rt2.prefill(&ids, 2, &bt).unwrap();
-    let mut bt2 = vec![0i32; 2 * mp];
-    bt2[..mp].copy_from_slice(&bt);
-    let two = rt2.decode(&[9, 0], &[2, 0], &[3, 0], &bt2).unwrap();
-
-    let v = rt.config().vocab_size;
-    assert_eq!(one.logits[..v], two.logits[..v], "b=1 vs b=2 logits diverge");
-    // Padding row contributed nothing.
-    assert!(two.logits[v..].iter().all(|&x| x == 0.0));
-}
-
-#[test]
-fn logits_address_page_contents_not_page_ids() {
-    // Two sequences with identical token prefixes but different page
-    // assignments must see identical logits: the KV contract is
-    // content-addressed through the block table.
-    let mut rt = backend();
-    let mp = rt.config().max_pages_per_seq();
-    let ids = padded(&[21, 22, 23, 24, 25, 26, 27, 28, 29], 16);
-
-    let mut bt_a = vec![0i32; mp];
-    bt_a[0] = 1;
-    bt_a[1] = 2;
-    let a = rt.prefill(&ids, 9, &bt_a).unwrap();
-
-    let mut bt_b = vec![0i32; mp];
-    bt_b[0] = 5;
-    bt_b[1] = 6;
-    let b = rt.prefill(&ids, 9, &bt_b).unwrap();
-    assert_eq!(a.logits, b.logits, "page ids leaked into the logits");
+    let err = rt.prefill_chunk(&padded(&[9, 9], 16), 6, 2, &bt).unwrap_err();
+    assert!(err.to_string().contains("read before any write"), "{err}");
 }
 
 #[test]

@@ -1,14 +1,15 @@
 //! Runtime-layer integration for the **XLA backend**: artifact loading,
-//! shape validation, cache chaining, and numeric agreement between
-//! compiled batch sizes.
+//! plus the shared backend-conformance suite
+//! (`testutil::backend_contract`) run with a small float tolerance —
+//! the same checks `test_reference_backend.rs` runs exactly.
 //!
 //! These tests need compiled artifacts (`make artifacts`) and log a
 //! `SKIP:` marker when they are absent — CI greps the *reference*
-//! suites' output to ensure no reference test ever prints one. The same
-//! contract is exercised artifact-free in `test_reference_backend.rs`.
+//! suites' output to ensure no reference test ever prints one.
 
 use webllm::models::Manifest;
 use webllm::runtime::{thread_client, ModelRuntime};
+use webllm::testutil::backend_contract::BackendConformance;
 
 fn manifest() -> Option<Manifest> {
     let dir = webllm::artifacts_dir();
@@ -23,13 +24,25 @@ fn manifest() -> Option<Manifest> {
     Some(Manifest::load(&dir).unwrap())
 }
 
+/// Kernel reassociation across compiled shapes: logits that the contract
+/// calls "equal" may differ by float noise on the XLA path.
+const XLA_TOL: f32 = 1e-4;
+
+fn conformance(m: Manifest) -> BackendConformance {
+    BackendConformance::new(move || {
+        let client = thread_client().unwrap();
+        Box::new(ModelRuntime::load(&client, &m, "tiny-2m", None).unwrap())
+    })
+    .with_tolerance(XLA_TOL)
+}
+
 #[test]
 fn load_reports_compiled_shapes() {
     let Some(m) = manifest() else { return };
     let client = thread_client().unwrap();
     let rt = ModelRuntime::load(&client, &m, "tiny-2m", None).unwrap();
-    assert_eq!(rt.compiled_chunks(), vec![16, 32, 64, 128]);
-    assert_eq!(rt.compiled_batches(), vec![1, 2, 4]);
+    assert_eq!(ModelRuntime::compiled_chunks(&rt), vec![16, 32, 64, 128]);
+    assert_eq!(ModelRuntime::compiled_batches(&rt), vec![1, 2, 4]);
     assert!(rt.load_seconds > 0.0);
 }
 
@@ -39,109 +52,17 @@ fn load_subset_restricts_compilation() {
     let client = thread_client().unwrap();
     let rt =
         ModelRuntime::load_subset(&client, &m, "tiny-2m", None, Some(&[16]), Some(&[1])).unwrap();
-    assert_eq!(rt.compiled_chunks(), vec![16]);
-    assert_eq!(rt.compiled_batches(), vec![1]);
+    assert_eq!(ModelRuntime::compiled_chunks(&rt), vec![16]);
+    assert_eq!(ModelRuntime::compiled_batches(&rt), vec![1]);
 }
 
 #[test]
-fn shape_errors_are_reported() {
+fn xla_backend_passes_shared_conformance_suite() {
+    // One test running every shared check: model loads dominate the
+    // runtime here, so the factory-per-check granularity the reference
+    // suite uses would recompile executables eight times over.
     let Some(m) = manifest() else { return };
-    let client = thread_client().unwrap();
-    let mut rt = ModelRuntime::load_subset(&client, &m, "tiny-2m", None, Some(&[16]), Some(&[1]))
-        .unwrap();
-    let mp = rt.config().max_pages_per_seq();
-    // wrong chunk
-    assert!(rt.prefill(&[0; 24], 4, &vec![0; mp]).is_err());
-    // wrong block table length
-    assert!(rt.prefill(&[0; 16], 4, &[0; 3]).is_err());
-    // zero seq_len
-    assert!(rt.prefill(&[0; 16], 0, &vec![0; mp]).is_err());
-    // wrong batch
-    assert!(rt.decode(&[0; 3], &[0; 3], &[0; 3], &vec![0; 3 * mp]).is_err());
-    // inconsistent lengths
-    assert!(rt.decode(&[0; 1], &[0; 2], &[0; 1], &vec![0; mp]).is_err());
-}
-
-#[test]
-fn prefill_then_decode_logits_change_with_context() {
-    let Some(m) = manifest() else { return };
-    let client = thread_client().unwrap();
-    let mut rt = ModelRuntime::load(&client, &m, "tiny-2m", None).unwrap();
-    let mp = rt.config().max_pages_per_seq();
-    let mut bt = vec![0i32; mp];
-    bt[0] = 1;
-    bt[1] = 2;
-
-    let mut ids = vec![0i32; 16];
-    ids[..4].copy_from_slice(&[10, 11, 12, 13]);
-    let out = rt.prefill(&ids, 4, &bt).unwrap();
-    assert_eq!(out.logits.len(), rt.config().vocab_size);
-
-    // Decode the same next token twice at successive positions: context
-    // grew, so logits must differ (cache actually chained).
-    let one = rt.decode(&[42], &[4], &[5], &bt).unwrap();
-    let two = rt.decode(&[42], &[5], &[6], &bt).unwrap();
-    let d: f32 = one
-        .logits
-        .iter()
-        .zip(&two.logits)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0, f32::max);
-    assert!(d > 1e-6, "cache state did not affect logits");
-}
-
-#[test]
-fn reset_cache_restores_initial_state() {
-    let Some(m) = manifest() else { return };
-    let client = thread_client().unwrap();
-    let mut rt = ModelRuntime::load_subset(&client, &m, "tiny-2m", None, Some(&[16]), Some(&[1]))
-        .unwrap();
-    let mp = rt.config().max_pages_per_seq();
-    let mut bt = vec![0i32; mp];
-    bt[0] = 1;
-
-    let mut ids = vec![0i32; 16];
-    ids[..3].copy_from_slice(&[7, 8, 9]);
-    let a = rt.prefill(&ids, 3, &bt).unwrap();
-    // pollute cache, then reset, then repeat: identical logits expected
-    rt.decode(&[1], &[3], &[4], &bt).unwrap();
-    rt.reset_cache().unwrap();
-    let b = rt.prefill(&ids, 3, &bt).unwrap();
-    assert_eq!(a.logits, b.logits);
-}
-
-#[test]
-fn batch_sizes_agree_on_shared_sequence() {
-    // The same single sequence decoded through the b=1 and b=2 executables
-    // (padding the second slot) must produce identical logits — the
-    // static-shape menu must be semantically transparent.
-    let Some(m) = manifest() else { return };
-    let client = thread_client().unwrap();
-    let mut rt = ModelRuntime::load(&client, &m, "tiny-2m", None).unwrap();
-    let mp = rt.config().max_pages_per_seq();
-    let mut bt = vec![0i32; mp];
-    bt[0] = 1;
-
-    let mut ids = vec![0i32; 16];
-    ids[..2].copy_from_slice(&[5, 6]);
-    rt.prefill(&ids, 2, &bt).unwrap();
-
-    let one = rt.decode(&[9], &[2], &[3], &bt).unwrap();
-
-    // Fresh runtime to replay with b=2 (cache state must match).
-    let mut rt2 = ModelRuntime::load(&client, &m, "tiny-2m", None).unwrap();
-    rt2.prefill(&ids, 2, &bt).unwrap();
-    let mut bt2 = vec![0i32; 2 * mp];
-    bt2[..mp].copy_from_slice(&bt);
-    let two = rt2.decode(&[9, 0], &[2, 0], &[3, 0], &bt2).unwrap();
-
-    let v = rt.config().vocab_size;
-    let max_diff: f32 = one.logits[..v]
-        .iter()
-        .zip(&two.logits[..v])
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0, f32::max);
-    assert!(max_diff < 1e-4, "b=1 vs b=2 logits diverge: {max_diff}");
+    conformance(m).run_all();
 }
 
 #[test]
