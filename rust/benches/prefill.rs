@@ -4,23 +4,23 @@
 //! WebLLM compiles a fixed menu of prefill shapes (TVM static shapes);
 //! the engine pads the prompt up to the smallest admissible chunk, so
 //! TTFT is a staircase in prompt length — this bench draws the staircase.
+//!
+//! The reference-backend section always runs (artifact-free); the XLA
+//! section repeats the staircase over compiled artifacts when present.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use webllm::models::Manifest;
-use webllm::runtime::{thread_client, ModelRuntime};
+use webllm::models::{reference_model_config, Manifest};
+use webllm::runtime::{thread_client, ModelBackend, ModelRuntime, ReferenceBackend};
 
-fn main() {
-    let model = if common::quick() { "tiny-2m" } else { "llama-web-80m" };
-    let manifest = Manifest::load(&webllm::artifacts_dir()).expect("artifacts");
-    let client = thread_client().unwrap();
-    let mut rt = ModelRuntime::load(&client, &manifest, model, None).expect("runtime");
-    let mc = rt.config().clone();
+/// Draw the prefill staircase for one backend's compiled chunk menu.
+fn staircase(label: &str, backend: &mut dyn ModelBackend) {
+    let mc = backend.config().clone();
     let mp = mc.max_pages_per_seq();
     let reps = common::iters(8, 2);
 
-    common::print_header(&format!("prefill staircase ({model})"));
+    common::print_header(&format!("prefill staircase ({label})"));
     let chunks = mc.prefill_chunks.clone();
     let mut per_chunk = Vec::new();
     for &chunk in &chunks {
@@ -31,9 +31,9 @@ fn main() {
         for (i, b) in bt.iter_mut().take(pages_needed).enumerate() {
             *b = 1 + i as i32;
         }
-        rt.reset_cache().unwrap();
+        backend.reset_cache().unwrap();
         let r = common::time_it(&format!("prefill chunk={chunk}"), 1, reps, || {
-            rt.prefill(&ids, seq_len, &bt).unwrap();
+            backend.prefill(&ids, seq_len, &bt).unwrap();
         });
         per_chunk.push((chunk, r.mean_ms));
         common::print_result(&r);
@@ -57,5 +57,26 @@ fn main() {
     println!("\nper-token prefill efficiency:");
     for (chunk, ms) in &per_chunk {
         println!("  chunk {chunk:>4}: {:>7.2} ms/token", ms / *chunk as f64);
+    }
+}
+
+fn main() {
+    // Reference backend: in-code registry, runs everywhere.
+    let mc = reference_model_config("tiny-ref").expect("registry");
+    let mut reference = ReferenceBackend::new(mc, 7, None, None);
+    staircase("tiny-ref, reference", &mut reference);
+
+    // XLA runtime: compiled artifacts, when present.
+    let model = if common::quick() { "tiny-2m" } else { "llama-web-80m" };
+    match Manifest::load(&webllm::artifacts_dir()) {
+        Ok(manifest) => {
+            let client = thread_client().unwrap();
+            let mut rt = ModelRuntime::load(&client, &manifest, model, None).expect("runtime");
+            staircase(&format!("{model}, XLA"), &mut rt);
+        }
+        Err(_) => eprintln!(
+            "SKIP: no artifacts in {} (run `make artifacts`); XLA staircase skipped",
+            webllm::artifacts_dir().display()
+        ),
     }
 }

@@ -1,0 +1,191 @@
+//! Multi-token emission (DESIGN.md A8): grammar fast-forward + draft
+//! speculation on a constrained-JSON workload, reference backend
+//! (always runs — part of the CI perf smoke).
+//!
+//! Four configurations over the same greedy JSON-schema requests:
+//! a plain one-token-per-step baseline, fast-forward only, self-draft
+//! speculation + fast-forward (the headline: tokens per target decode
+//! step must clear 1.5x), and a divergent drafter that exercises the
+//! rejection/rollback path. Output text is identical across all four —
+//! the engine only reshapes the schedule, never the stream.
+//!
+//! Writes ../BENCH_specdec.json (repo root).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Instant;
+use webllm::api::{ChatCompletionRequest, ResponseFormat};
+use webllm::coordinator::{EngineConfig, MLCEngine};
+use webllm::json::parse;
+
+const TARGET: &str = "tiny-ref";
+
+/// Greedy JSON-schema request. Two forced property spans around two free
+/// choice points (bool, digits); the '}' nudge closes the integer after
+/// a few digits so derivations finish well inside max_tokens. A distinct
+/// prompt per request keeps the prefix cache out of the measurement.
+fn schema_request(i: usize) -> ChatCompletionRequest {
+    let schema = r#"{
+        "type": "object",
+        "properties": {"status": {"type": "boolean"}, "count": {"type": "integer"}},
+        "required": ["status", "count"]
+    }"#;
+    let mut r = ChatCompletionRequest::new(TARGET).user(format!("structured request {i:02}"));
+    r.max_tokens = 100;
+    r.sampling.temperature = 0.0;
+    r.sampling.logit_bias.insert(8 + b'}' as u32, 5.0); // byte-token id of '}'
+    r.response_format = ResponseFormat::JsonSchema(parse(schema).unwrap());
+    r
+}
+
+struct Run {
+    label: &'static str,
+    completion: usize,
+    decode_steps: i64,
+    decode_tokens: i64,
+    ff_tokens: i64,
+    spec_steps: i64,
+    draft_proposed: i64,
+    draft_accepted: i64,
+    accept_rate: f64,
+    wall_s: f64,
+    text: String,
+}
+
+impl Run {
+    /// Decode-phase emissions per target decode call. Each request's
+    /// first token comes from prefill, so it is excluded; the plain
+    /// baseline lands at exactly 1.0 by construction.
+    fn tokens_per_step(&self, n_requests: usize) -> f64 {
+        (self.completion - n_requests) as f64 / self.decode_steps.max(1) as f64
+    }
+
+    /// Fraction of completion tokens emitted by fast-forward (zero model
+    /// and sampler calls).
+    fn ff_fraction(&self) -> f64 {
+        self.ff_tokens as f64 / (self.completion as f64).max(1.0)
+    }
+}
+
+fn run(label: &'static str, draft: Option<&str>, ff: bool, n_requests: usize) -> Run {
+    let mut cfg = EngineConfig::reference(&[TARGET]);
+    cfg.draft_model = draft.map(str::to_string);
+    cfg.enable_fast_forward = ff;
+    let mut engine = MLCEngine::new(&cfg).expect("reference engine");
+
+    let mut completion = 0usize;
+    let mut text = String::new();
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let resp = engine.chat_completion(schema_request(i)).expect("completion");
+        completion += resp.usage.completion_tokens;
+        if i == 0 {
+            text = resp.text().to_string();
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let stats = engine.stats_json();
+    let top = |k: &str| stats.get(k).unwrap().as_i64().unwrap();
+    let spec = stats.get("speculative").unwrap();
+    let sp = |k: &str| spec.get(k).unwrap().as_i64().unwrap();
+    Run {
+        label,
+        completion,
+        decode_steps: top("decode_steps"),
+        decode_tokens: top("decode_tokens"),
+        ff_tokens: sp("ff_tokens"),
+        spec_steps: sp("spec_steps"),
+        draft_proposed: sp("draft_proposed"),
+        draft_accepted: sp("draft_accepted"),
+        accept_rate: spec.get("draft_accept_rate").unwrap().as_f64().unwrap(),
+        wall_s,
+        text,
+    }
+}
+
+fn report(r: &Run, n_requests: usize) -> webllm::json::Value {
+    println!(
+        "{:<36} {:>5.2} tok/step | {:>4} tok / {:>3} decode steps | ff {:>4.0}% | \
+         accept {:>4.0}% | {:>7.1} ms",
+        r.label,
+        r.tokens_per_step(n_requests),
+        r.completion,
+        r.decode_steps,
+        100.0 * r.ff_fraction(),
+        100.0 * r.accept_rate,
+        r.wall_s * 1e3,
+    );
+    webllm::obj! {
+        "config" => r.label,
+        "tokens_per_step" => r.tokens_per_step(n_requests),
+        "completion_tokens" => r.completion as i64,
+        "decode_steps" => r.decode_steps,
+        "decode_tokens" => r.decode_tokens,
+        "ff_tokens" => r.ff_tokens,
+        "ff_fraction" => r.ff_fraction(),
+        "spec_steps" => r.spec_steps,
+        "draft_proposed" => r.draft_proposed,
+        "draft_accepted" => r.draft_accepted,
+        "draft_accept_rate" => r.accept_rate,
+        "wall_ms" => r.wall_s * 1e3,
+    }
+}
+
+fn main() {
+    let n = common::iters(12, 4);
+    println!(
+        "=== multi-token emission on constrained JSON \
+         ({n} greedy schema requests, tiny-ref) ==="
+    );
+    // Warm up allocators/caches once so the first measured run isn't cold.
+    run("warmup", None, false, 1);
+
+    let baseline = run("baseline (1 token/step)", None, false, n);
+    let ff_only = run("fast-forward only", None, true, n);
+    let headline = run("self-draft + ff (tiny-ref)", Some("tiny-ref"), true, n);
+    let divergent = run("divergent draft + ff (tiny-ref-b)", Some("tiny-ref-b"), true, n);
+
+    let runs = [&baseline, &ff_only, &headline, &divergent];
+    let configs: Vec<_> = runs.iter().map(|r| report(r, n)).collect();
+    for r in &runs[1..] {
+        assert_eq!(r.text, baseline.text, "{}: output diverged from baseline", r.label);
+    }
+    println!(
+        "headline: {:.2} tokens per target decode step (ff {} tok, accept {:.0}%)",
+        headline.tokens_per_step(n),
+        headline.ff_tokens,
+        100.0 * headline.accept_rate,
+    );
+
+    let report = webllm::obj! {
+        "bench" => "specdec",
+        "generated_by" => "cargo bench --bench specdec",
+        "quick_mode" => common::quick(),
+        "scenario" => webllm::obj! {
+            "description" => "greedy JSON-schema requests (two forced property spans, two \
+                              free choice points) served four ways: plain baseline, grammar \
+                              fast-forward, self-draft speculation + ff, divergent-draft \
+                              speculation + ff. All four emit byte-identical text; \
+                              tokens_per_step counts decode-phase emissions per target \
+                              decode call (baseline = 1.0 by construction)",
+            "backend" => "reference (seeded-deterministic, native mode)",
+            "n_requests" => n as i64,
+            "target" => TARGET,
+        },
+        "configs" => webllm::json::Value::Array(configs),
+        "tokens_per_step" => headline.tokens_per_step(n),
+        "draft_accept_rate" => headline.accept_rate,
+        "ff_tokens" => headline.ff_tokens,
+        "ff_fraction" => headline.ff_fraction(),
+    };
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_specdec.json");
+    match std::fs::write(&path, webllm::json::to_string_pretty(&report) + "\n") {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
+    }
+}

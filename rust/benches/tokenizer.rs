@@ -1,6 +1,10 @@
 //! Tokenizer throughput (DESIGN.md A7): the CPU-side subsystem the paper
 //! runs as WASM. Native encode/decode rates, the modeled WASM slowdown,
 //! and the streaming detokenizer.
+//!
+//! The reference-vocabulary section always runs (artifact-free); when
+//! compiled artifacts exist the same battery repeats over the real merge
+//! table, which is the number DESIGN.md A7 quotes.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -14,15 +18,13 @@ a list of pages, and the attention kernel walks the page table to gather keys an
 every head. A scheduler batches prefill and decode requests so the device stays busy while \
 responses stream out token by token. {\"json\": [1, 2.5, true], \"path\": \"/v1/chat\"} ";
 
-fn main() {
-    let manifest = Manifest::load(&webllm::artifacts_dir()).expect("artifacts");
-    let tok = Tokenizer::from_file(&manifest.tokenizer_path).expect("tokenizer");
-
+/// The full measurement battery over one tokenizer.
+fn bench_tokenizer(label: &str, tok: &Tokenizer) {
     let text = SAMPLE.repeat(common::iters(64, 8));
     let bytes = text.len();
     let reps = common::iters(100, 10);
 
-    common::print_header(&format!("byte-level BPE over {} KiB", bytes / 1024));
+    common::print_header(&format!("{label}: byte-level BPE over {} KiB", bytes / 1024));
     let ids = tok.encode(&text);
     let re = common::time_it("encode (native)", 3, reps, || {
         std::hint::black_box(tok.encode(&text));
@@ -68,4 +70,21 @@ fn main() {
         "",
         rs.mean_ms * 1e6 / ids.len() as f64
     );
+}
+
+fn main() {
+    // Reference vocabulary: in-code registry, runs everywhere.
+    bench_tokenizer("reference vocab", &webllm::models::reference_tokenizer());
+
+    // Artifact vocabulary: the real merge table, when compiled.
+    match Manifest::load(&webllm::artifacts_dir()) {
+        Ok(manifest) => {
+            let tok = Tokenizer::from_file(&manifest.tokenizer_path).expect("tokenizer");
+            bench_tokenizer("artifact vocab", &tok);
+        }
+        Err(_) => eprintln!(
+            "SKIP: no artifacts in {} (run `make artifacts`); artifact-vocab section skipped",
+            webllm::artifacts_dir().display()
+        ),
+    }
 }

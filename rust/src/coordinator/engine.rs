@@ -30,13 +30,14 @@ use crate::grammar::{
 };
 use crate::json::Value;
 use crate::kvcache::KvCacheManager;
+use crate::lru::LruMap;
 use crate::metrics::EngineStats;
 use crate::models::Manifest;
 use crate::runtime::{thread_client, ModelBackend, ModelRuntime, ReferenceBackend, RuntimeError};
-use crate::sampler::LogitsProcessor;
+use crate::sampler::{LogitsProcessor, Pcg32, SampleScratch};
 use crate::tokenizer::{render_chat, StreamDecoder, Tokenizer};
 use std::cell::RefCell;
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::rc::Rc;
 use std::time::Instant;
@@ -78,6 +79,19 @@ pub struct EngineConfig {
     /// stall (better ITL under long-prompt admission), larger budgets
     /// finish prompts in fewer steps (better TTFT).
     pub prefill_token_budget: usize,
+    /// Speculative decoding: a cheaper model that proposes
+    /// [`Self::spec_tokens`] tokens per step for the target to verify in
+    /// one positioned batch call. `None` (the default) decodes one token
+    /// per model call. Verification re-samples every position with the
+    /// request's own sampler, so output is token-for-token what plain
+    /// decode would have produced.
+    pub draft_model: Option<String>,
+    /// Tokens the draft proposes per speculation round; clamped to ≥ 1.
+    pub spec_tokens: usize,
+    /// Emit grammar-forced token runs (states whose masks allow exactly
+    /// one token) without model or sampler calls. On by default; turn
+    /// off for the strict one-model-call-per-token baseline.
+    pub enable_fast_forward: bool,
 }
 
 impl EngineConfig {
@@ -90,6 +104,9 @@ impl EngineConfig {
             backend: BackendKind::Xla,
             mask_cache_capacity: DEFAULT_MASK_CACHE_CAPACITY,
             prefill_token_budget: DEFAULT_PREFILL_TOKEN_BUDGET,
+            draft_model: None,
+            spec_tokens: DEFAULT_SPEC_TOKENS,
+            enable_fast_forward: true,
         }
     }
 
@@ -115,6 +132,12 @@ impl EngineConfig {
     }
 }
 
+/// One loaded model: name, target backend, optional draft backend.
+type LoadedModel = (String, Box<dyn ModelBackend>, Option<Box<dyn ModelBackend>>);
+
+/// What [`MLCEngine::load_backends`] resolves a config into.
+type LoadedModels = (Rc<Tokenizer>, Vec<LoadedModel>);
+
 /// Completion events drained via `poll_events`.
 #[derive(Debug)]
 pub enum EngineEvent {
@@ -130,6 +153,9 @@ struct RunningSeq {
     processor: LogitsProcessor,
     matcher: Option<GrammarMatcher>,
     mask_cache: Option<Rc<RefCell<MaskCache>>>,
+    /// Shared per-grammar cache of forced-token runs keyed by start-state
+    /// fingerprint (see [`MLCEngine::fast_forward`]).
+    forced_runs: Option<Rc<RefCell<LruMap<u64, Rc<Vec<u32>>>>>>,
     prompt_tokens: usize,
     max_tokens: usize,
     stop: Vec<String>,
@@ -195,9 +221,24 @@ struct PrefillingSeq {
     next_pos: usize,
 }
 
+/// The speculative-decoding draft: a second, cheaper backend shadowing a
+/// target model. Its KV manager mirrors each running sequence's token
+/// window (rolled back past rejected proposals via
+/// [`KvCacheManager::truncate`]); its own RNG drives proposal choices so
+/// the request's sampler stream — the thing that makes verification
+/// output-identical to plain decode — is never touched here.
+struct DraftModel {
+    backend: Box<dyn ModelBackend>,
+    kv: KvCacheManager,
+    rng: Pcg32,
+}
+
 struct EngineModel {
     backend: Box<dyn ModelBackend>,
     kv: KvCacheManager,
+    /// `Some` when the engine was configured with a draft model; flips
+    /// `decode_batch` over to the speculative path.
+    draft: Option<DraftModel>,
     waiting: VecDeque<PendingReq>,
     prefilling: Option<PrefillingSeq>,
     running: Vec<RunningSeq>,
@@ -205,13 +246,15 @@ struct EngineModel {
 }
 
 /// One compiled grammar shared across requests: the AOT vocabulary
-/// partition plus the LRU mask cache over its residue. Cloning is two
-/// `Rc` bumps — every sequence of every request using the same grammar
-/// (and each row of a multi-sequence request) shares both.
+/// partition, the LRU mask cache over its residue, and the forced-run
+/// cache for fast-forward. Cloning is three `Rc` bumps — every sequence
+/// of every request using the same grammar (and each row of a
+/// multi-sequence request) shares all of them.
 #[derive(Clone)]
 struct GrammarEntry {
     compiled: Rc<CompiledGrammar>,
     cache: Rc<RefCell<MaskCache>>,
+    runs: Rc<RefCell<LruMap<u64, Rc<Vec<u32>>>>>,
 }
 
 /// Distinct compiled grammars retained by the engine. Each entry pins a
@@ -230,22 +273,44 @@ pub const DEFAULT_MASK_CACHE_CAPACITY: usize = 256;
 /// the old one-chunk-per-prompt behavior for short prompts.
 pub const DEFAULT_PREFILL_TOKEN_BUDGET: usize = 2048;
 
+/// Default for [`EngineConfig::spec_tokens`].
+pub const DEFAULT_SPEC_TOKENS: usize = 4;
+
+/// Longest forced-token run emitted per fast-forward cache entry;
+/// longer chains continue from the next state's entry.
+const MAX_FF_RUN: usize = 64;
+
+/// Forced-run cache entries retained per grammar, keyed by start-state
+/// fingerprint. Runs are at most [`MAX_FF_RUN`] token ids, so the bound
+/// is generous.
+const FORCED_RUN_CACHE_CAPACITY: usize = 256;
+
+/// Seed for the draft models' proposal RNG. Draft choices must never
+/// consume the request's own sampler stream — that separation is what
+/// keeps speculative output identical to plain decode.
+const DRAFT_SEED: u64 = 0xD12A_F75E;
+
 /// The backend engine. See module docs.
 pub struct MLCEngine {
     tokenizer: Rc<Tokenizer>,
     trie: Rc<VocabTrie>,
     models: BTreeMap<String, EngineModel>,
     env: Option<Rc<BrowserEnv>>,
-    /// Compiled grammars + mask caches keyed by grammar identity, with a
-    /// recency stamp for LRU bounding (see [`MAX_COMPILED_GRAMMARS`]).
-    grammar_caches: HashMap<String, (GrammarEntry, u64)>,
-    /// Strictly increasing access clock for `grammar_caches` recency.
-    grammar_clock: u64,
+    /// Compiled grammars + mask caches keyed by grammar identity,
+    /// LRU-bounded at [`MAX_COMPILED_GRAMMARS`] entries.
+    grammar_caches: LruMap<String, GrammarEntry>,
     /// Per-grammar mask-cache capacity (from the config, min 1).
     mask_cache_capacity: usize,
     /// Chunked-prefill token budget (from the config; clamped to each
     /// model's compiled chunk menu at use).
     prefill_token_budget: usize,
+    /// Draft proposals per speculation round (from the config, min 1).
+    spec_tokens: usize,
+    /// Grammar fast-forward toggle (from the config).
+    enable_fast_forward: bool,
+    /// Candidate scratch shared by every sequence's sampling calls: one
+    /// set of buffers serves all rows of the decode batch.
+    scratch: SampleScratch,
     events: VecDeque<EngineEvent>,
     next_req: RequestId,
     next_seq: u64,
@@ -266,7 +331,7 @@ impl MLCEngine {
         }));
 
         let mut models = BTreeMap::new();
-        for (name, backend) in backends {
+        for (name, backend, draft) in backends {
             let mc = backend.config().clone();
             let kv = KvCacheManager::new(
                 mc.num_pages,
@@ -274,11 +339,25 @@ impl MLCEngine {
                 mc.max_pages_per_seq(),
                 cfg.enable_prefix_cache,
             );
+            let draft = draft.map(|b| {
+                let dc = b.config().clone();
+                // The mirror tracks one rolling window per sequence;
+                // prefix reuse there would only re-register pages the
+                // next rollback invalidates.
+                let kv = KvCacheManager::new(
+                    dc.num_pages,
+                    dc.page_size,
+                    dc.max_pages_per_seq(),
+                    false,
+                );
+                DraftModel { backend: b, kv, rng: Pcg32::new(DRAFT_SEED) }
+            });
             models.insert(
                 name,
                 EngineModel {
                     backend,
                     kv,
+                    draft,
                     waiting: VecDeque::new(),
                     prefilling: None,
                     running: Vec::new(),
@@ -295,10 +374,12 @@ impl MLCEngine {
             trie,
             models,
             env,
-            grammar_caches: HashMap::new(),
-            grammar_clock: 0,
+            grammar_caches: LruMap::new(MAX_COMPILED_GRAMMARS),
             mask_cache_capacity: cfg.mask_cache_capacity.max(1),
             prefill_token_budget: cfg.prefill_token_budget.max(1),
+            spec_tokens: cfg.spec_tokens.max(1),
+            enable_fast_forward: cfg.enable_fast_forward,
+            scratch: SampleScratch::new(),
             events: VecDeque::new(),
             next_req: 1,
             next_seq: 1,
@@ -308,15 +389,17 @@ impl MLCEngine {
         })
     }
 
-    /// Resolve the configured backend into (tokenizer, one backend per
-    /// model). The XLA arm reads the artifacts manifest; the reference
-    /// arm builds everything from the in-code registry.
+    /// Resolve the configured backend into (tokenizer, one target backend
+    /// per model plus its optional speculative-draft backend). The XLA arm
+    /// reads the artifacts manifest; the reference arm builds everything
+    /// from the in-code registry. Each target gets its own draft instance
+    /// so multi-model engines never share draft KV state.
     fn load_backends(
         cfg: &EngineConfig,
         env: Option<&BrowserEnv>,
-    ) -> Result<(Rc<Tokenizer>, Vec<(String, Box<dyn ModelBackend>)>), ApiError> {
-        let mut backends: Vec<(String, Box<dyn ModelBackend>)> = Vec::new();
-        match &cfg.backend {
+    ) -> Result<LoadedModels, ApiError> {
+        let mut backends: Vec<LoadedModel> = Vec::new();
+        let tokenizer = match &cfg.backend {
             BackendKind::Xla => {
                 let manifest = Manifest::load(&cfg.artifacts_dir)
                     .map_err(|e| ApiError::internal(format!("manifest: {e}")))?;
@@ -333,9 +416,24 @@ impl MLCEngine {
                         env.map(|e| BrowserEnv::new(e.config().clone())),
                     )
                     .map_err(|e| ApiError::internal(format!("load {name}: {e}")))?;
-                    backends.push((name.clone(), Box::new(runtime)));
+                    let draft = match &cfg.draft_model {
+                        Some(dname) => {
+                            let d = ModelRuntime::load(
+                                &client,
+                                &manifest,
+                                dname,
+                                env.map(|e| BrowserEnv::new(e.config().clone())),
+                            )
+                            .map_err(|e| {
+                                ApiError::internal(format!("load draft {dname}: {e}"))
+                            })?;
+                            Some(Box::new(d) as Box<dyn ModelBackend>)
+                        }
+                        None => None,
+                    };
+                    backends.push((name.clone(), Box::new(runtime), draft));
                 }
-                Ok((tokenizer, backends))
+                tokenizer
             }
             BackendKind::Reference { seed } => {
                 let tokenizer = Rc::new(crate::models::reference_tokenizer());
@@ -349,11 +447,38 @@ impl MLCEngine {
                         stop_token,
                         env.map(|e| BrowserEnv::new(e.config().clone())),
                     );
-                    backends.push((name.clone(), Box::new(backend)));
+                    let draft = match &cfg.draft_model {
+                        Some(dname) => {
+                            let dc = crate::models::reference_model_config(dname)
+                                .map_err(ApiError::not_found)?;
+                            let d = ReferenceBackend::new(
+                                dc,
+                                *seed,
+                                stop_token,
+                                env.map(|e| BrowserEnv::new(e.config().clone())),
+                            );
+                            Some(Box::new(d) as Box<dyn ModelBackend>)
+                        }
+                        None => None,
+                    };
+                    backends.push((name.clone(), Box::new(backend), draft));
                 }
-                Ok((tokenizer, backends))
+                tokenizer
+            }
+        };
+        // A draft proposes token ids the target must be able to verify:
+        // the vocabularies have to line up exactly.
+        for (name, backend, draft) in &backends {
+            if let Some(d) = draft {
+                let (tv, dv) = (backend.config().vocab_size, d.config().vocab_size);
+                if tv != dv {
+                    return Err(ApiError::invalid(format!(
+                        "draft model vocab ({dv}) does not match target '{name}' vocab ({tv})"
+                    )));
+                }
             }
         }
+        Ok((tokenizer, backends))
     }
 
     pub fn tokenizer(&self) -> &Rc<Tokenizer> {
@@ -535,11 +660,11 @@ impl MLCEngine {
         // built (or fetched) here, once per distinct grammar — never on
         // the per-token path. The matcher is per-sequence state; the
         // `Rc<CompiledGrammar>` + mask cache are shared.
-        let (matcher, mask_cache) = match &p.req.response_format {
-            ResponseFormat::Text => (None, None),
+        let (matcher, mask_cache, forced_runs) = match &p.req.response_format {
+            ResponseFormat::Text => (None, None, None),
             rf => {
                 let entry = self.grammar_entry_for(rf);
-                (Some(entry.compiled.matcher()), Some(entry.cache))
+                (Some(entry.compiled.matcher()), Some(entry.cache), Some(entry.runs))
             }
         };
 
@@ -570,6 +695,7 @@ impl MLCEngine {
             processor,
             matcher,
             mask_cache,
+            forced_runs,
             prompt_tokens: p.prompt_ids.len(),
             max_tokens,
             stop: p.req.stop.clone(),
@@ -604,7 +730,7 @@ impl MLCEngine {
         };
         if let Some(pf) = aborted {
             let m = self.models.get_mut(name).unwrap();
-            Self::finalize(&mut self.events, &mut self.stats, &mut m.kv, pf.seq);
+            Self::finalize(&mut self.events, &mut self.stats, m, pf.seq);
             return Ok(());
         }
 
@@ -659,17 +785,29 @@ impl MLCEngine {
         self.consume_logits(&mut pf.seq, &mut logits);
         pf.seq.t_prefilled = Some(Instant::now());
         self.stats.ttft.push(pf.seq.t_admit.elapsed().as_secs_f64());
+        // The first token may open a grammar-forced run; take it before
+        // the sequence ever joins the decode batch.
+        let mut ff_err = None;
+        if pf.seq.finish.is_none() {
+            ff_err = self.post_emit(&mut pf.seq).err();
+        }
 
         let m = self.models.get_mut(name).unwrap();
         if pf.seq.finish.is_some() {
-            Self::finalize(&mut self.events, &mut self.stats, &mut m.kv, pf.seq);
+            Self::finalize(&mut self.events, &mut self.stats, m, pf.seq);
         } else {
             m.running.push(pf.seq);
         }
-        Ok(())
+        match ff_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     fn decode_batch(&mut self, name: &str) -> Result<(), RuntimeError> {
+        if self.models[name].draft.is_some() {
+            return self.spec_decode_batch(name);
+        }
         let (rows, batch, logits, t_decode) = {
             let m = self.models.get_mut(name).unwrap();
             if m.running.is_empty() {
@@ -719,31 +857,458 @@ impl MLCEngine {
         let vocab = self.tokenizer.vocab_size();
         let mut running = std::mem::take(&mut self.models.get_mut(name).unwrap().running);
         let mut logits = logits;
+        let mut first_err = None;
         for (row, seq) in running.iter_mut().take(rows).enumerate() {
-            if seq.finish.is_some() {
-                continue; // aborted mid-flight
+            if seq.finish.is_some() || first_err.is_some() {
+                continue; // aborted mid-flight, or bailing out on error
             }
             let row_logits = &mut logits[row * vocab..(row + 1) * vocab];
             self.consume_logits(seq, row_logits);
             self.stats.decode_tokens += 1;
             self.stats.itl.push(t_decode / rows as f64);
+            if seq.finish.is_none() {
+                if let Err(e) = self.post_emit(seq) {
+                    first_err = Some(e);
+                }
+            }
         }
 
         let m = self.models.get_mut(name).unwrap();
         for seq in running {
             if seq.finish.is_some() {
-                Self::finalize(&mut self.events, &mut self.stats, &mut m.kv, seq);
+                Self::finalize(&mut self.events, &mut self.stats, m, seq);
             } else {
                 m.running.push(seq);
             }
         }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// One speculative decode round per running sequence (instead of a
+    /// row in the shared decode batch): the draft proposes a token run,
+    /// the target verifies it in a single positioned call, and the
+    /// request's own sampler decides every emitted token. Rows
+    /// speculation can't serve fall back to [`Self::plain_decode_row`].
+    fn spec_decode_batch(&mut self, name: &str) -> Result<(), RuntimeError> {
+        if self.models[name].running.is_empty() {
+            return Ok(());
+        }
+        let mut running = std::mem::take(&mut self.models.get_mut(name).unwrap().running);
+        let mut first_err = None;
+        for seq in running.iter_mut() {
+            if seq.finish.is_some() || first_err.is_some() {
+                continue; // aborted mid-flight, or bailing out on error
+            }
+            if let Err(e) = self.spec_decode_row(name, seq) {
+                first_err = Some(e);
+            }
+        }
+        let m = self.models.get_mut(name).unwrap();
+        for seq in running {
+            if seq.finish.is_some() {
+                Self::finalize(&mut self.events, &mut self.stats, m, seq);
+            } else {
+                m.running.push(seq);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// One speculative round for one sequence. The draft proposes up to
+    /// `spec_tokens` tokens; the target verifies `[last emitted token,
+    /// proposals...]` as one positioned `verify_chunk` call whose row `i`
+    /// is exactly the logits plain decode would have produced for
+    /// position `i`; the request's sampler runs over each row in order,
+    /// emitting until a sampled token disagrees with the proposal. The
+    /// output stream is therefore token-for-token identical to plain
+    /// decode — acceptance only controls how many tokens one model call
+    /// yields. Rejected KV slots roll back via `note_written`: the pool
+    /// slots stay physically dirty but unattended, and the next
+    /// decode/verify rewrites them.
+    fn spec_decode_row(&mut self, name: &str, seq: &mut RunningSeq) -> Result<(), RuntimeError> {
+        if seq.logprobs.is_some() {
+            // Logprob reports need the plain path's per-token timing; the
+            // verify rows would fold several report entries into one call.
+            return self.plain_decode_row(name, seq);
+        }
+        let k = self.spec_tokens;
+        let proposals = self.draft_propose(name, seq, k)?;
+        if proposals.is_empty() {
+            return self.plain_decode_row(name, seq);
+        }
+
+        let (base_len, want, logits, t_verify) = {
+            let m = self.models.get_mut(name).unwrap();
+            let mc = m.backend.config().clone();
+            let len = m.kv.get(seq.seq_id).expect("running seq has kv").len();
+            let mut want = proposals.len();
+            // Shrink the run rather than fail the row: every verified slot
+            // needs a compiled chunk row and a resident page.
+            while want > 0
+                && (mc.pick_chunk(want + 1).is_none()
+                    || m.kv.reserve(seq.seq_id, len + want).is_err())
+            {
+                want -= 1;
+            }
+            if want == 0 {
+                (len, 0, Vec::new(), 0.0)
+            } else {
+                let n = want + 1;
+                let chunk = mc.pick_chunk(n).expect("checked above");
+                let mut ids = vec![0i32; chunk];
+                let s = m.kv.get(seq.seq_id).expect("running seq has kv");
+                ids[0] = *s.tokens.last().unwrap() as i32;
+                for (i, &t) in proposals[..want].iter().enumerate() {
+                    ids[i + 1] = t as i32;
+                }
+                let bt = m.kv.block_table_row(seq.seq_id);
+                let t0 = Instant::now();
+                let out = m.backend.verify_chunk(&ids, len - 1, n, &bt)?;
+                (len, want, out.logits, t0.elapsed().as_secs_f64())
+            }
+        };
+        if want == 0 {
+            return self.plain_decode_row(name, seq);
+        }
+        self.stats.decode_time_s += t_verify;
+        self.stats.decode_steps += 1;
+        self.stats.decode_live_rows += 1;
+        self.stats.spec_steps += 1;
+        self.stats.draft_proposed += want as u64;
+
+        let vocab = self.tokenizer.vocab_size();
+        let mut logits = logits;
+        let mut accepted = 0usize;
+        let mut emitted = 0usize;
+        for i in 0..=want {
+            if seq.finish.is_some() {
+                break;
+            }
+            let row = &mut logits[i * vocab..(i + 1) * vocab];
+            let token = self.sample_token(seq, row);
+            self.stats.decode_tokens += 1;
+            emitted += 1;
+            let matched = i < want && token == proposals[i];
+            self.emit_token(seq, token);
+            if !matched {
+                break;
+            }
+            accepted += 1;
+            self.stats.draft_accepted += 1;
+        }
+        {
+            // Roll written-ness back to the accepted prefix (plus the slot
+            // row 0 rewrote). Clamped: the final emission may have failed
+            // to append.
+            let m = self.models.get_mut(name).unwrap();
+            let len_now = m.kv.get(seq.seq_id).map(|s| s.len());
+            if let Some(len_now) = len_now {
+                m.kv.note_written(seq.seq_id, (base_len + accepted).min(len_now));
+            }
+        }
+        if emitted > 0 {
+            let per = t_verify / emitted as f64;
+            for _ in 0..emitted {
+                self.stats.itl.push(per);
+            }
+        }
+        if seq.finish.is_none() {
+            self.post_emit(seq)?;
+        }
         Ok(())
     }
 
-    /// Sample one token from `logits`, append it, detokenize, stream, and
-    /// update finish state. Shared by the prefill (first token) and decode
-    /// paths.
-    fn consume_logits(&mut self, seq: &mut RunningSeq, logits: &mut [f32]) {
+    /// Single-sequence decode step outside the shared batch: the fallback
+    /// for rows speculation can't serve (logprob reports, empty draft
+    /// proposals, an exhausted page pool).
+    fn plain_decode_row(&mut self, name: &str, seq: &mut RunningSeq) -> Result<(), RuntimeError> {
+        let (batch, logits, t_decode) = {
+            let m = self.models.get_mut(name).unwrap();
+            let mc = m.backend.config().clone();
+            let batch = mc.pick_batch(1).expect("decode menu is non-empty");
+            let mp = mc.max_pages_per_seq();
+            m.step.reset(batch, mp);
+            let s = m.kv.get(seq.seq_id).expect("running seq has kv");
+            let len = s.len();
+            m.step.ids[0] = *s.tokens.last().unwrap() as i32;
+            m.step.positions[0] = (len - 1) as i32;
+            m.step.seq_lens[0] = len as i32;
+            m.kv.write_block_table_row(seq.seq_id, &mut m.step.tables[..mp]);
+            let t0 = Instant::now();
+            let out = m.backend.decode(
+                &m.step.ids,
+                &m.step.positions,
+                &m.step.seq_lens,
+                &m.step.tables,
+            )?;
+            let t_decode = t0.elapsed().as_secs_f64();
+            m.kv.note_written(seq.seq_id, len);
+            (batch, out.logits, t_decode)
+        };
+        self.stats.decode_time_s += t_decode;
+        self.stats.decode_steps += 1;
+        self.stats.decode_live_rows += 1;
+        self.stats.decode_padded_rows += (batch - 1) as u64;
+        let vocab = self.tokenizer.vocab_size();
+        let mut logits = logits;
+        self.consume_logits(seq, &mut logits[..vocab]);
+        self.stats.decode_tokens += 1;
+        self.stats.itl.push(t_decode);
+        if seq.finish.is_none() {
+            self.post_emit(seq)?;
+        }
+        Ok(())
+    }
+
+    /// Run the draft ahead of the target: mirror the target's token state
+    /// into the draft's own KV manager (truncating whatever a past
+    /// rejection left behind), then decode up to `k` proposals
+    /// autoregressively. Grammar-constrained requests constrain the draft
+    /// too — a proposal the mask bans could never survive verification.
+    fn draft_propose(
+        &mut self,
+        name: &str,
+        seq: &mut RunningSeq,
+        k: usize,
+    ) -> Result<Vec<u32>, RuntimeError> {
+        let tokenizer = self.tokenizer.clone();
+        let eos = self.eos_ids.clone();
+        let temperature = seq.processor.params().temperature;
+        let m = self.models.get_mut(name).unwrap();
+        let Some(d) = m.draft.as_mut() else {
+            return Ok(Vec::new());
+        };
+        let target_tokens = match m.kv.get(seq.seq_id) {
+            Some(s) => s.tokens.clone(),
+            None => return Ok(Vec::new()),
+        };
+
+        // Sync the mirror: roll back past any rejected suffix, then append
+        // what the target emitted since the last round. Failures here are
+        // soft — an empty proposal list falls back to plain decode.
+        if d.kv.get(seq.seq_id).is_none() {
+            if d.kv.admit(seq.seq_id, &target_tokens).is_err() {
+                return Ok(Vec::new());
+            }
+        } else {
+            let common = d
+                .kv
+                .get(seq.seq_id)
+                .unwrap()
+                .tokens
+                .iter()
+                .zip(&target_tokens)
+                .take_while(|(a, b)| a == b)
+                .count();
+            d.kv.truncate(seq.seq_id, common);
+            for &t in &target_tokens[common..] {
+                if d.kv.append_token(seq.seq_id, t).is_err() {
+                    return Ok(Vec::new());
+                }
+            }
+        }
+        Self::flush_unwritten_kv(d.backend.as_mut(), &mut d.kv, seq.seq_id)?;
+
+        let mc = d.backend.config().clone();
+        let Some(batch) = mc.pick_batch(1) else {
+            return Ok(Vec::new());
+        };
+        let mp = mc.max_pages_per_seq();
+        let mut ids = vec![0i32; batch];
+        let mut positions = vec![0i32; batch];
+        let mut seq_lens = vec![0i32; batch];
+        let mut tables = vec![0i32; batch * mp];
+        // The draft's grammar shadow: advanced per proposal, discarded at
+        // the end of the round (the real matcher advances in emit_token).
+        let mut shadow = seq.matcher.clone();
+        let mut proposals = Vec::new();
+        while proposals.len() < k {
+            let s = d.kv.get(seq.seq_id).expect("mirror admitted above");
+            let len = s.len();
+            if len + 1 >= mc.max_seq_len {
+                break;
+            }
+            ids[0] = *s.tokens.last().unwrap() as i32;
+            positions[0] = (len - 1) as i32;
+            seq_lens[0] = len as i32;
+            d.kv.write_block_table_row(seq.seq_id, &mut tables[..mp]);
+            let out = d.backend.decode(&ids, &positions, &seq_lens, &tables)?;
+            d.kv.note_written(seq.seq_id, len);
+            let mask_rc: Rc<TokenBitmask>;
+            let mask = match (&shadow, &seq.mask_cache) {
+                (Some(matcher), Some(cache)) => {
+                    mask_rc = cache.borrow_mut().get_or_compute(matcher);
+                    Some(&*mask_rc)
+                }
+                _ => None,
+            };
+            let pick =
+                draft_pick(temperature, &mut d.rng, &out.logits[..mc.vocab_size], mask, &eos);
+            let Some(tok) = pick else {
+                break;
+            };
+            if let Some(matcher) = shadow.as_mut() {
+                if !matcher.accept_token(tokenizer.token_bytes(tok)) {
+                    break;
+                }
+            }
+            if d.kv.append_token(seq.seq_id, tok).is_err() {
+                break;
+            }
+            proposals.push(tok);
+        }
+        Ok(proposals)
+    }
+
+    /// Everything that should follow an emitted token outside the model
+    /// call itself: fast-forward any grammar-forced run, then compute KV
+    /// for appended-but-unwritten positions so the next step's attention
+    /// sees them.
+    fn post_emit(&mut self, seq: &mut RunningSeq) -> Result<(), RuntimeError> {
+        self.fast_forward(seq);
+        if seq.finish.is_some() {
+            // finalize() frees the pages, and unwritten tails are never
+            // registered for prefix reuse — nothing to flush.
+            return Ok(());
+        }
+        let m = self.models.get_mut(&seq.model).unwrap();
+        Self::flush_unwritten_kv(m.backend.as_mut(), &mut m.kv, seq.seq_id)
+    }
+
+    /// Grammar fast-forward: while the matcher sits in non-accepting
+    /// states whose masks allow exactly one token, emit that run directly
+    /// — zero model calls, zero sampler draws. Runs are memoized per
+    /// start state in the grammar's shared forced-run cache, so a literal
+    /// spanning k tokens costs one lookup after first sight. Greedy
+    /// decoding is unchanged token-for-token; sampled requests skip only
+    /// the deterministic single-candidate draws. Logprob reports need a
+    /// distribution per token, so those requests opt out.
+    fn fast_forward(&mut self, seq: &mut RunningSeq) {
+        if !self.enable_fast_forward || seq.logprobs.is_some() || seq.finish.is_some() {
+            return;
+        }
+        let (cache, runs) = match (&seq.mask_cache, &seq.forced_runs) {
+            (Some(c), Some(r)) => (c.clone(), r.clone()),
+            _ => return,
+        };
+        let compiled = cache.borrow().compiled().clone();
+        if !compiled.ff_possible() {
+            return;
+        }
+        loop {
+            let matcher = seq.matcher.as_ref().expect("mask cache implies matcher");
+            if matcher.is_accepting() {
+                return;
+            }
+            let fp = matcher.fingerprint();
+            let cached = runs.borrow_mut().get(&fp).cloned();
+            let run = match cached {
+                Some(run) => run,
+                None => {
+                    let computed =
+                        Rc::new(Self::forced_run(&compiled, &cache, matcher, &self.tokenizer));
+                    runs.borrow_mut().insert(fp, computed.clone());
+                    computed
+                }
+            };
+            if run.is_empty() {
+                return;
+            }
+            let chained = run.len() == MAX_FF_RUN;
+            for &tok in run.iter() {
+                if seq.finish.is_some() {
+                    return;
+                }
+                // The sampler never sees forced tokens; keep its penalty
+                // state in sync by hand.
+                seq.processor.observe(tok);
+                self.stats.ff_tokens += 1;
+                self.emit_token(seq, tok);
+            }
+            if !chained || seq.finish.is_some() {
+                return;
+            }
+        }
+    }
+
+    /// Chase the forced-state chain from `matcher`'s state: the longest
+    /// run of single-token masks, capped at [`MAX_FF_RUN`] tokens.
+    /// Exactly-compiled grammars answer each link from the AOT per-state
+    /// table; inexact compiles fall back to the mask cache.
+    fn forced_run(
+        compiled: &CompiledGrammar,
+        cache: &Rc<RefCell<MaskCache>>,
+        matcher: &GrammarMatcher,
+        tokenizer: &Tokenizer,
+    ) -> Vec<u32> {
+        let mut probe = matcher.clone();
+        let mut run = Vec::new();
+        while run.len() < MAX_FF_RUN && !probe.is_accepting() {
+            let tok = match compiled.forced_token(&probe) {
+                Some(Some(t)) => t,
+                Some(None) => break,
+                None => {
+                    let mask = cache.borrow_mut().get_or_compute(&probe);
+                    if mask.count_allowed() != 1 {
+                        break;
+                    }
+                    mask.iter_allowed().next().expect("count checked") as u32
+                }
+            };
+            if !probe.accept_token(tokenizer.token_bytes(tok)) {
+                break;
+            }
+            run.push(tok);
+        }
+        run
+    }
+
+    /// Compute KV for a sequence's appended-but-unwritten positions
+    /// `[written, len - 1)` as positioned prefill chunks; the final
+    /// position is the next decode/verify call's input and writes
+    /// itself. Serves both the target and the draft mirror. Deliberately
+    /// not counted in the prefill stats — these are decode-side catch-up
+    /// writes, not prompt work.
+    fn flush_unwritten_kv(
+        backend: &mut dyn ModelBackend,
+        kv: &mut KvCacheManager,
+        seq_id: u64,
+    ) -> Result<(), RuntimeError> {
+        let (len, mut pos) = match kv.get(seq_id) {
+            Some(s) => (s.len(), s.written()),
+            None => return Ok(()),
+        };
+        if len == 0 {
+            return Ok(());
+        }
+        let mc = backend.config().clone();
+        while pos < len - 1 {
+            let (n, chunk) = mc
+                .next_prefill_tokens(len - 1 - pos, usize::MAX)
+                .expect("remaining > 0");
+            let mut ids = vec![0i32; chunk];
+            let s = kv.get(seq_id).expect("checked above");
+            for (i, &t) in s.tokens[pos..pos + n].iter().enumerate() {
+                ids[i] = t as i32;
+            }
+            let bt = kv.block_table_row(seq_id);
+            backend.prefill_chunk(&ids, pos, n, &bt)?;
+            pos += n;
+            kv.note_written(seq_id, pos);
+        }
+        Ok(())
+    }
+
+    /// Sample one token from `logits` under the sequence's grammar mask,
+    /// recording the logprob report entry when requested. Shared by the
+    /// plain decode path and every speculative verify row.
+    fn sample_token(&mut self, seq: &mut RunningSeq, logits: &mut [f32]) -> u32 {
         // Grammar mask straight from the cache — an Rc clone, O(1) even at
         // 128k vocab. The EOS allowance (legal once the derivation is
         // complete) rides along as `allow_extra` instead of copying the
@@ -761,7 +1326,9 @@ impl MLCEngine {
             _ => None,
         };
 
-        let (token, lp) = seq.processor.sample_with_logprobs_masked(logits, mask, extra);
+        let (token, lp) =
+            seq.processor
+                .sample_with_logprobs_masked_with(&mut self.scratch, logits, mask, extra);
         if let (Some(list), Some(lp)) = (&mut seq.logprobs, lp) {
             let tok_str = |t: u32| {
                 String::from_utf8_lossy(self.tokenizer.token_bytes(t)).into_owned()
@@ -772,7 +1339,22 @@ impl MLCEngine {
                 top: lp.top.iter().map(|&(t, l)| (tok_str(t), l as f64)).collect(),
             });
         }
+        token
+    }
 
+    /// Sample one token from `logits`, append it, detokenize, stream, and
+    /// update finish state. Shared by the prefill (first token) and decode
+    /// paths.
+    fn consume_logits(&mut self, seq: &mut RunningSeq, logits: &mut [f32]) {
+        let token = self.sample_token(seq, logits);
+        self.emit_token(seq, token);
+    }
+
+    /// Every post-sample side effect of emitting `token`: grammar
+    /// advance, KV append, detokenization, stop handling, streaming.
+    /// Fast-forwarded and speculative tokens share this path with plain
+    /// decode, so finish semantics can't drift between them.
+    fn emit_token(&mut self, seq: &mut RunningSeq, token: u32) {
         // EOS / special tokens never enter the text.
         if self.eos_ids.contains(&token) {
             seq.finish = Some(FinishReason::Stop);
@@ -858,10 +1440,13 @@ impl MLCEngine {
     fn finalize(
         events: &mut VecDeque<EngineEvent>,
         stats: &mut EngineStats,
-        kv: &mut KvCacheManager,
+        m: &mut EngineModel,
         mut seq: RunningSeq,
     ) {
-        kv.free(seq.seq_id);
+        m.kv.free(seq.seq_id);
+        if let Some(d) = m.draft.as_mut() {
+            d.kv.free(seq.seq_id);
+        }
         seq.text.push_str(&seq.decoder.finish());
         // The final flush may surface held-back bytes; the contract is
         // that a stop string never appears in the returned text.
@@ -973,9 +1558,7 @@ impl MLCEngine {
             ResponseFormat::JsonSchema(s) => format!("schema:{}", crate::json::to_string(s)),
             ResponseFormat::Grammar(g) => format!("ebnf:{g}"),
         };
-        self.grammar_clock += 1;
-        if let Some((entry, used)) = self.grammar_caches.get_mut(&key) {
-            *used = self.grammar_clock;
+        if let Some(entry) = self.grammar_caches.get(&key) {
             return entry.clone();
         }
         let grammar = self
@@ -991,31 +1574,24 @@ impl MLCEngine {
         self.stats.grammar_base_accept_tokens += compiled.base_accept().count_allowed() as u64;
         self.stats.grammar_base_reject_tokens += compiled.base_reject().count_allowed() as u64;
         self.stats.grammar_residue_tokens += compiled.residue().len() as u64;
-        let cache =
-            Rc::new(RefCell::new(MaskCache::new(compiled.clone(), self.mask_cache_capacity)));
-        let entry = GrammarEntry { compiled, cache };
-        if self.grammar_caches.len() >= MAX_COMPILED_GRAMMARS {
-            // LRU-bound the grammar map itself; sequences still decoding
+        // Seeded from the compile pass's per-state masks: states the AOT
+        // exploration already solved never score a runtime miss.
+        let cache = Rc::new(RefCell::new(MaskCache::seeded(
+            compiled.clone(),
+            self.mask_cache_capacity,
+        )));
+        let runs = Rc::new(RefCell::new(LruMap::new(FORCED_RUN_CACHE_CAPACITY)));
+        let entry = GrammarEntry { compiled, cache, runs };
+        if let Some((_, evicted)) = self.grammar_caches.insert(key, entry.clone()) {
+            // Absorb the victim's counters so stats_json stays monotonic
+            // across evictions. (Hits scored afterwards by in-flight
+            // sequences are the one loss.) Sequences still decoding
             // against the victim keep it alive through their own Rcs.
-            let victim = self
-                .grammar_caches
-                .iter()
-                .min_by_key(|(_, (_, used))| *used)
-                .map(|(k, _)| (*k).clone());
-            if let Some(victim) = victim {
-                if let Some((evicted, _)) = self.grammar_caches.remove(&victim) {
-                    // Absorb the victim's counters so stats_json stays
-                    // monotonic across evictions. (Hits scored afterwards
-                    // by in-flight sequences are the one loss.)
-                    let c = evicted.cache.borrow().counters();
-                    self.stats.grammar_mask_hits += c.hits;
-                    self.stats.grammar_mask_misses += c.misses;
-                    self.stats.grammar_mask_evictions += c.evictions;
-                }
-            }
+            let c = evicted.cache.borrow().counters();
+            self.stats.grammar_mask_hits += c.hits;
+            self.stats.grammar_mask_misses += c.misses;
+            self.stats.grammar_mask_evictions += c.evictions;
         }
-        self.grammar_caches
-            .insert(key, (entry.clone(), self.grammar_clock));
         entry
     }
 
@@ -1027,7 +1603,7 @@ impl MLCEngine {
     /// truth while the engine runs.
     pub fn stats_json(&self) -> Value {
         let mut stats = self.stats.clone();
-        for (entry, _) in self.grammar_caches.values() {
+        for entry in self.grammar_caches.values() {
             let c = entry.cache.borrow().counters();
             stats.grammar_mask_hits += c.hits;
             stats.grammar_mask_misses += c.misses;
@@ -1053,4 +1629,64 @@ impl MLCEngine {
         out.set("models", models);
         out
     }
+}
+
+/// The draft model's own cheap sampler: greedy argmax at temperature
+/// zero, plain softmax sampling otherwise, restricted to mask-allowed
+/// tokens. Tokens in `banned` (the EOS set) are never proposed — ending
+/// the stream is the target sampler's call, and keeping EOS out of the
+/// proposal run keeps the rollback arithmetic one-directional. Returns
+/// `None` when no token is proposable (then the round just ends early).
+fn draft_pick(
+    temperature: f32,
+    rng: &mut Pcg32,
+    logits: &[f32],
+    mask: Option<&TokenBitmask>,
+    banned: &[u32],
+) -> Option<u32> {
+    let allowed =
+        |i: usize| mask.map_or(true, |m| m.is_allowed(i)) && !banned.contains(&(i as u32));
+    if temperature <= 0.0 {
+        let mut best: Option<(usize, f32)> = None;
+        for (i, &l) in logits.iter().enumerate() {
+            if !allowed(i) {
+                continue;
+            }
+            // First-wins ties, matching the target's greedy argmax.
+            if best.map_or(true, |(_, b)| l > b) {
+                best = Some((i, l));
+            }
+        }
+        return best.map(|(i, _)| i as u32);
+    }
+    let mut max = f32::NEG_INFINITY;
+    for (i, &l) in logits.iter().enumerate() {
+        if allowed(i) && l > max {
+            max = l;
+        }
+    }
+    if max == f32::NEG_INFINITY {
+        return None;
+    }
+    let mut total = 0f64;
+    for (i, &l) in logits.iter().enumerate() {
+        if allowed(i) {
+            total += (((l - max) / temperature) as f64).exp();
+        }
+    }
+    let target = rng.f32() as f64 * total;
+    let mut acc = 0f64;
+    let mut last = None;
+    for (i, &l) in logits.iter().enumerate() {
+        if !allowed(i) {
+            continue;
+        }
+        acc += (((l - max) / temperature) as f64).exp();
+        last = Some(i as u32);
+        if acc >= target {
+            return last;
+        }
+    }
+    // Float underflow on the final slice: fall back to the last allowed.
+    last
 }

@@ -29,7 +29,7 @@
 use super::bitmask::TokenBitmask;
 use super::grammar::{ByteClass, Grammar, Sym};
 use super::matcher::{GrammarMatcher, VocabTrie};
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -103,6 +103,15 @@ pub struct CompiledGrammar {
     exact: bool,
     states_explored: usize,
     compile_seconds: f64,
+    /// `(fingerprint, full mask)` for every enumerated state — the
+    /// per-state masks the exact sweep computes anyway, kept to seed
+    /// [`super::MaskCache`]s instead of being discarded. Empty when the
+    /// compilation fell back to the NFA approximation.
+    state_masks: Vec<(u64, TokenBitmask)>,
+    /// Fingerprint → forced token for every *forced* state (non-accepting
+    /// with a singleton mask). `Some` only when the enumeration was
+    /// exact, in which case absence from the map proves "not forced".
+    forced: Option<HashMap<u64, u32>>,
 }
 
 impl CompiledGrammar {
@@ -138,17 +147,30 @@ impl CompiledGrammar {
         let reached = reachable_states(&grammar, MAX_EXACT_STATES);
         let exact = reached.complete
             && reached.states.len().saturating_mul(vocab_size) <= MAX_EXACT_MASK_WORK;
+        let mut state_masks = Vec::new();
+        let mut forced = None;
         let (base_accept, base_reject) = if exact {
             // Exact: intersect/union the true mask of every reachable
             // state. Tokens in no mask can never appear; tokens in every
-            // mask are state-independent.
+            // mask are state-independent. The per-state masks are kept
+            // (they seed the runtime mask cache), and non-accepting
+            // singleton-mask states are indexed as *forced*: their next
+            // token is determined, so the engine can append it without a
+            // model or sampler call.
             let mut accept = TokenBitmask::all_allowed(vocab_size);
             let mut ever = TokenBitmask::new(vocab_size);
+            let mut forced_map = HashMap::new();
             for state in &reached.states {
                 let mask = state.token_mask_trie(trie);
                 accept.and_with(&mask);
                 ever.or_with(&mask);
+                if !state.is_accepting() && mask.count_allowed() == 1 {
+                    let tok = mask.iter_allowed().next().unwrap() as u32;
+                    forced_map.insert(state.fingerprint(), tok);
+                }
+                state_masks.push((state.fingerprint(), mask));
             }
+            forced = Some(forced_map);
             (accept, ever.complement())
         } else {
             // Either recursion made the state space unbounded, or the
@@ -183,6 +205,8 @@ impl CompiledGrammar {
             exact,
             states_explored: reached.states.len(),
             compile_seconds: t0.elapsed().as_secs_f64(),
+            state_masks,
+            forced,
         }
     }
 
@@ -261,6 +285,40 @@ impl CompiledGrammar {
         let mut mask = matcher.token_mask_trie(&self.residue_trie);
         mask.or_with(&self.base_accept);
         mask
+    }
+
+    /// The per-state masks computed by the exact sweep, as
+    /// `(fingerprint, mask)` pairs (empty for NFA-approximated
+    /// compilations). Used to seed [`super::MaskCache`]s.
+    pub fn state_masks(&self) -> &[(u64, TokenBitmask)] {
+        &self.state_masks
+    }
+
+    /// Compile-time forced-token lookup for `matcher`'s state.
+    ///
+    /// * `None` — the compilation wasn't exact; forcedness is unknown
+    ///   here and the caller must inspect the state's full mask.
+    /// * `Some(None)` — proven not forced (accepting, dead, or ≥ 2
+    ///   allowed tokens).
+    /// * `Some(Some(t))` — the state is non-accepting with exactly one
+    ///   allowed token `t`: the sampler can only ever emit `t`.
+    pub fn forced_token(&self, matcher: &GrammarMatcher) -> Option<Option<u32>> {
+        self.forced
+            .as_ref()
+            .map(|map| map.get(&matcher.fingerprint()).copied())
+    }
+
+    /// Cheap whole-grammar bail for the fast-forward path: `false` means
+    /// *no* state of this grammar is ever forced, so per-token forced
+    /// lookups can be skipped entirely. (Exact compilations know this
+    /// from the forced index; otherwise a `base_accept` with ≥ 2 tokens
+    /// proves every mask has ≥ 2 tokens, since it is a subset of all of
+    /// them.)
+    pub fn ff_possible(&self) -> bool {
+        match &self.forced {
+            Some(map) => !map.is_empty(),
+            None => self.base_accept.count_allowed() <= 1,
+        }
     }
 }
 

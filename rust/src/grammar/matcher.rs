@@ -23,7 +23,7 @@
 use super::bitmask::TokenBitmask;
 use super::compiler::CompiledGrammar;
 use super::grammar::{Grammar, Sym};
-use std::collections::HashMap;
+use crate::lru::LruMap;
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
 use std::rc::Rc;
@@ -492,42 +492,55 @@ pub struct MaskCacheCounters {
 ///     subsequent visits are a hash lookup returning an
 ///     `Rc<TokenBitmask>` clone: O(1), never an O(vocab) copy.
 ///
-/// Eviction is a capacity-bounded LRU keyed by the state fingerprint:
-/// when a miss would exceed `capacity`, the single least-recently-used
-/// entry is dropped (deterministically — recency ties are impossible
-/// because the internal clock is strictly increasing). Hot states (e.g.
-/// "inside a JSON string") therefore survive grammars whose state count
-/// exceeds the capacity, where the previous full-flush policy threw the
-/// whole working set away.
+/// Eviction is a capacity-bounded LRU keyed by the state fingerprint
+/// (the shared [`LruMap`] clock-stamp policy: when a miss would exceed
+/// `capacity`, the single least-recently-used entry is dropped,
+/// deterministically). Hot states (e.g. "inside a JSON string")
+/// therefore survive grammars whose state count exceeds the capacity,
+/// where the previous full-flush policy threw the whole working set
+/// away.
+///
+/// [`MaskCache::seeded`] additionally pre-populates the cache with the
+/// per-state masks an exact compile pass already computed, so decoding
+/// an exactly-compiled grammar never pays a residue walk at all.
 pub struct MaskCache {
     compiled: Rc<CompiledGrammar>,
-    entries: HashMap<u64, CacheEntry>,
-    capacity: usize,
-    /// Strictly increasing access clock (recency stamp).
-    clock: u64,
+    entries: LruMap<u64, Rc<TokenBitmask>>,
     hits: u64,
     misses: u64,
-    evictions: u64,
-}
-
-struct CacheEntry {
-    mask: Rc<TokenBitmask>,
-    last_used: u64,
 }
 
 impl MaskCache {
     /// A cache over `compiled`'s residue masks holding at most `capacity`
-    /// distinct automaton states (at least one).
+    /// distinct automaton states (at least one). Starts empty; every
+    /// first visit to a state is a miss.
     pub fn new(compiled: Rc<CompiledGrammar>, capacity: usize) -> Self {
         Self {
             compiled,
-            entries: HashMap::new(),
-            capacity: capacity.max(1),
-            clock: 0,
+            entries: LruMap::new(capacity),
             hits: 0,
             misses: 0,
-            evictions: 0,
         }
+    }
+
+    /// Engine-facing constructor: adapts `capacity` down to the exact
+    /// state count when the compile pass enumerated every state (a
+    /// larger cache could never fill), then seeds the cache with the
+    /// masks that pass already computed. Seeded entries count as
+    /// neither hits nor misses; lookups that land on them are hits.
+    pub fn seeded(compiled: Rc<CompiledGrammar>, capacity: usize) -> Self {
+        let capacity = if compiled.is_exact() {
+            capacity.min(compiled.states_explored().max(1))
+        } else {
+            capacity
+        };
+        let mut cache = Self::new(compiled, capacity);
+        let n = cache.entries.capacity();
+        let compiled = cache.compiled.clone();
+        for (fp, mask) in compiled.state_masks().iter().take(n) {
+            cache.entries.insert(*fp, Rc::new(mask.clone()));
+        }
+        cache
     }
 
     /// The compiled grammar this cache computes masks for.
@@ -539,28 +552,14 @@ impl MaskCache {
     /// `base_accept | residue-walk` on a miss (cached afterwards, evicting
     /// the least-recently-used state if at capacity).
     pub fn get_or_compute(&mut self, matcher: &GrammarMatcher) -> Rc<TokenBitmask> {
-        self.clock += 1;
         let key = matcher.fingerprint();
-        if let Some(entry) = self.entries.get_mut(&key) {
-            entry.last_used = self.clock;
+        if let Some(mask) = self.entries.get(&key) {
             self.hits += 1;
-            return entry.mask.clone();
+            return mask.clone();
         }
         self.misses += 1;
         let mask = Rc::new(self.compiled.mask_for(matcher));
-        if self.entries.len() >= self.capacity {
-            let victim = self
-                .entries
-                .iter()
-                .min_by_key(|(k, e)| (e.last_used, **k))
-                .map(|(k, _)| *k);
-            if let Some(victim) = victim {
-                self.entries.remove(&victim);
-                self.evictions += 1;
-            }
-        }
-        self.entries
-            .insert(key, CacheEntry { mask: mask.clone(), last_used: self.clock });
+        self.entries.insert(key, mask.clone());
         mask
     }
 
@@ -575,9 +574,9 @@ impl MaskCache {
         MaskCacheCounters {
             hits: self.hits,
             misses: self.misses,
-            evictions: self.evictions,
+            evictions: self.entries.evictions(),
             entries: self.entries.len(),
-            capacity: self.capacity,
+            capacity: self.entries.capacity(),
         }
     }
 }

@@ -238,6 +238,67 @@ impl KvCacheManager {
         Ok(())
     }
 
+    /// Grow `id`'s block table until it covers positions `[0, upto)`,
+    /// without appending tokens — speculative verification writes a
+    /// draft run's KV *before* knowing which tokens will be accepted, so
+    /// the pages must exist up front. Already-covering tables are a
+    /// no-op. On `OutOfPages` the pages allocated so far are kept (they
+    /// are released by `free`/`truncate` like any other page).
+    pub fn reserve(&mut self, id: SeqId, upto: usize) -> Result<(), AllocError> {
+        let ps = self.alloc.page_size();
+        let need = (upto + ps - 1) / ps;
+        if need > self.max_pages_per_seq {
+            return Err(AllocError::OutOfPages);
+        }
+        let mut result = Ok(());
+        let seq = self.seqs.get_mut(&id).expect("unknown sequence");
+        while seq.block_table.len() < need {
+            match self.alloc.alloc() {
+                Ok(page) => seq.block_table.push(page),
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
+            }
+        }
+        self.sync_evictions();
+        result
+    }
+
+    /// Drop `id`'s tokens past `new_len`, releasing pages wholly beyond
+    /// the shortened sequence. Used to roll a speculative mirror back to
+    /// the accepted prefix after a draft rejection. `written` and
+    /// `cached_tokens` clamp down with the tokens: rejected positions
+    /// become unwritten again, so they can neither be attended over nor
+    /// registered for prefix reuse. No-op if the sequence is unknown or
+    /// already short enough.
+    pub fn truncate(&mut self, id: SeqId, new_len: usize) {
+        let ps = self.alloc.page_size();
+        let Some(seq) = self.seqs.get_mut(&id) else { return };
+        if new_len >= seq.tokens.len() {
+            return;
+        }
+        seq.tokens.truncate(new_len);
+        let keep_pages = (new_len + ps - 1) / ps;
+        while seq.block_table.len() > keep_pages {
+            let page = seq.block_table.pop().unwrap();
+            // A popped page can still be alive as another sequence's
+            // prefix hit; `release` only parks/frees at refcount zero.
+            let keep = self.prefix.contains_page(page);
+            self.alloc.release(page, keep);
+        }
+        // Keys address *full* pages of the old token vector; only pages
+        // still fully backed by surviving tokens keep their keys.
+        seq.page_keys.truncate(new_len / ps);
+        if seq.written > new_len {
+            seq.written = new_len;
+        }
+        if seq.cached_tokens > new_len {
+            seq.cached_tokens = new_len;
+        }
+        self.sync_evictions();
+    }
+
     /// Free a sequence. Fully *written* pages (with computed keys) are
     /// registered in the prefix cache and parked evictable; the rest
     /// return to the free list. The `written` bound keeps pages with

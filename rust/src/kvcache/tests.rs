@@ -180,6 +180,104 @@ fn append_token_respects_max_pages() {
 }
 
 #[test]
+fn truncate_rolls_back_tokens_pages_and_written() {
+    let mut m = KvCacheManager::new(16, 4, 8, false);
+    m.admit(1, &[1, 2, 3, 4, 5]).unwrap(); // 2 pages
+    m.note_written(1, 5);
+    for t in [6u32, 7, 8, 9] {
+        m.append_token(1, t).unwrap(); // grows to 9 tokens, 3 pages
+    }
+    m.note_written(1, 9);
+    assert_eq!(m.get(1).unwrap().block_table.len(), 3);
+    let free_before = m.available_pages();
+
+    m.truncate(1, 5); // drop the speculative suffix
+    let seq = m.get(1).unwrap();
+    assert_eq!(seq.tokens, vec![1, 2, 3, 4, 5]);
+    assert_eq!(seq.block_table.len(), 2);
+    assert_eq!(seq.written(), 5, "rejected positions become unwritten");
+    assert_eq!(m.available_pages(), free_before + 1);
+    m.check_invariants();
+
+    // Truncate to a no-op length: nothing changes.
+    m.truncate(1, 9);
+    assert_eq!(m.get(1).unwrap().len(), 5);
+
+    // The sequence keeps working: appends re-grow the table lazily.
+    for t in [20u32, 21, 22, 23] {
+        m.append_token(1, t).unwrap();
+    }
+    assert_eq!(m.get(1).unwrap().block_table.len(), 3);
+    m.check_invariants();
+    m.free(1);
+    m.check_invariants();
+}
+
+#[test]
+fn truncated_suffix_is_never_registered_for_reuse() {
+    // Speculative-rejection shape: tokens written into the pool, then
+    // rolled back. A later free must not offer the rolled-back pages'
+    // contents for prefix reuse.
+    let mut m = KvCacheManager::new(16, 4, 8, true);
+    m.admit(1, &[1, 2, 3, 4]).unwrap();
+    m.note_written(1, 4);
+    for t in [5u32, 6, 7, 8] {
+        m.append_token(1, t).unwrap();
+    }
+    m.note_written(1, 8); // two full "written" pages
+    m.truncate(1, 4); // reject the second page's worth
+    m.free(1);
+    let seq = m.admit(2, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+    assert_eq!(seq.cached_tokens, 4, "only the surviving page is reusable");
+    m.check_invariants();
+}
+
+#[test]
+fn truncate_to_zero_releases_everything() {
+    let mut m = KvCacheManager::new(16, 4, 8, false);
+    let free0 = m.available_pages();
+    m.admit(1, &[1, 2, 3, 4, 5, 6, 7, 8, 9]).unwrap();
+    m.note_written(1, 9);
+    m.truncate(1, 0);
+    let seq = m.get(1).unwrap();
+    assert!(seq.is_empty());
+    assert_eq!(seq.block_table.len(), 0);
+    assert_eq!(seq.written(), 0);
+    assert_eq!(m.available_pages(), free0);
+    m.check_invariants();
+    m.free(1);
+    m.check_invariants();
+}
+
+#[test]
+fn reserve_grows_table_without_tokens() {
+    let mut m = KvCacheManager::new(16, 4, 4, false);
+    m.admit(1, &[1, 2, 3]).unwrap(); // 1 page
+    assert_eq!(m.get(1).unwrap().block_table.len(), 1);
+    m.reserve(1, 9).unwrap(); // cover positions [0, 9): 3 pages
+    assert_eq!(m.get(1).unwrap().block_table.len(), 3);
+    m.reserve(1, 2).unwrap(); // already covered: no-op
+    assert_eq!(m.get(1).unwrap().block_table.len(), 3);
+    assert_eq!(m.reserve(1, 17), Err(AllocError::OutOfPages)); // > max_pages
+    m.check_invariants();
+    m.free(1);
+    m.check_invariants();
+}
+
+#[test]
+fn reserve_failure_keeps_partial_pages_reclaimable() {
+    let mut m = KvCacheManager::new(4, 4, 8, false); // 3 usable pages
+    m.admit(1, &[1, 2, 3]).unwrap(); // 1 page
+    assert_eq!(m.reserve(1, 16), Err(AllocError::OutOfPages)); // wants 4, pool has 2
+    let got = m.get(1).unwrap().block_table.len();
+    assert!(got >= 1 && got <= 3);
+    m.check_invariants();
+    m.free(1);
+    m.check_invariants();
+    assert_eq!(m.available_pages(), 3, "partial reservation fully reclaimed");
+}
+
+#[test]
 fn admission_control_bounds() {
     let m = KvCacheManager::new(8, 4, 4, false); // 7 usable pages
     assert!(m.can_admit(12));

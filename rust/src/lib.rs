@@ -27,6 +27,7 @@ pub mod grammar;
 pub mod http;
 pub mod json;
 pub mod kvcache;
+pub mod lru;
 pub mod metrics;
 pub mod models;
 pub mod runtime;

@@ -1,0 +1,186 @@
+//! Shared clock-stamped LRU map.
+//!
+//! Three subsystems keep small bounded caches with identical eviction
+//! semantics: the grammar [`MaskCache`](crate::grammar::MaskCache)
+//! (fingerprint → token bitmask), the engine's compiled-grammar table
+//! (grammar key → compiled grammar + caches), and the fast-forward
+//! run cache (state fingerprint → forced token run). This module holds
+//! the one implementation they share.
+//!
+//! Recency is a strictly increasing logical clock, bumped on every
+//! touch ([`get`](LruMap::get) and [`insert`](LruMap::insert)). The
+//! victim is the entry with the smallest `(stamp, key)` pair — the
+//! key tiebreak makes eviction deterministic even for entries stamped
+//! by a bulk seed pass, which matters for reproducible engine stats.
+//!
+//! Eviction is O(n) scan on insert-at-capacity. Every user holds at
+//! most a few hundred entries, so a linked-list LRU would buy nothing
+//! but unsafe code or index juggling.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+struct Entry<V> {
+    value: V,
+    stamp: u64,
+}
+
+/// A bounded map evicting the least-recently-used entry on overflow.
+///
+/// ```
+/// use webllm::lru::LruMap;
+/// let mut m: LruMap<u32, &str> = LruMap::new(2);
+/// m.insert(1, "a");
+/// m.insert(2, "b");
+/// m.get(&1); // bump 1; 2 is now LRU
+/// let evicted = m.insert(3, "c");
+/// assert_eq!(evicted, Some((2, "b")));
+/// assert_eq!(m.len(), 2);
+/// ```
+pub struct LruMap<K, V> {
+    entries: HashMap<K, Entry<V>>,
+    capacity: usize,
+    clock: u64,
+    evictions: u64,
+}
+
+impl<K: Eq + Hash + Ord + Clone, V> LruMap<K, V> {
+    /// A map holding at most `capacity` entries (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        LruMap {
+            entries: HashMap::new(),
+            capacity: capacity.max(1),
+            clock: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Evictions performed since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Look up `key`, marking it most-recently-used on a hit.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.entries.get_mut(key).map(|e| {
+            e.stamp = clock;
+            &e.value
+        })
+    }
+
+    /// Look up `key` without touching recency.
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.entries.get(key).map(|e| &e.value)
+    }
+
+    /// Insert `key → value` as most-recently-used, evicting the LRU
+    /// entry first if the map is full and `key` is new. Returns the
+    /// evicted pair so callers can fold its counters into their stats.
+    pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.value = value;
+            e.stamp = self.clock;
+            return None;
+        }
+        let mut evicted = None;
+        if self.entries.len() >= self.capacity {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(k, e)| (e.stamp, (*k).clone()))
+                .map(|(k, _)| k.clone());
+            if let Some(k) = victim {
+                let e = self.entries.remove(&k).unwrap();
+                self.evictions += 1;
+                evicted = Some((k, e.value));
+            }
+        }
+        self.entries.insert(
+            key,
+            Entry {
+                value,
+                stamp: self.clock,
+            },
+        );
+        evicted
+    }
+
+    /// Iterate over values in arbitrary order (no recency change).
+    pub fn values(&self) -> impl Iterator<Item = &V> {
+        self.entries.values().map(|e| &e.value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut m = LruMap::new(2);
+        assert!(m.is_empty());
+        m.insert(1u32, 10);
+        m.insert(2, 20);
+        assert_eq!(m.get(&1), Some(&10)); // 2 becomes LRU
+        assert_eq!(m.insert(3, 30), Some((2, 20)));
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.evictions(), 1);
+        assert_eq!(m.peek(&2), None);
+        assert_eq!(m.peek(&1), Some(&10));
+        assert_eq!(m.peek(&3), Some(&30));
+    }
+
+    #[test]
+    fn reinsert_updates_without_eviction() {
+        let mut m = LruMap::new(1);
+        m.insert(7u64, "a");
+        assert_eq!(m.insert(7, "b"), None);
+        assert_eq!(m.evictions(), 0);
+        assert_eq!(m.get(&7), Some(&"b"));
+    }
+
+    #[test]
+    fn eviction_order_is_insertion_order_when_untouched() {
+        let mut m = LruMap::new(3);
+        m.insert(5u32, ());
+        m.insert(1, ());
+        m.insert(9, ());
+        // 5 is oldest: it goes first.
+        assert_eq!(m.insert(2, ()), Some((5, ())));
+        assert_eq!(m.insert(3, ()), Some((1, ())));
+    }
+
+    #[test]
+    fn capacity_clamps_to_one() {
+        let mut m = LruMap::new(0);
+        assert_eq!(m.capacity(), 1);
+        m.insert(1u8, 1);
+        assert_eq!(m.insert(2, 2), Some((1, 1)));
+    }
+
+    #[test]
+    fn values_sees_everything() {
+        let mut m = LruMap::new(4);
+        for i in 0..4u32 {
+            m.insert(i, i * 2);
+        }
+        let mut vs: Vec<u32> = m.values().copied().collect();
+        vs.sort_unstable();
+        assert_eq!(vs, vec![0, 2, 4, 6]);
+    }
+}

@@ -59,7 +59,13 @@ FLAGS:
   --artifacts       artifacts directory (default: ./artifacts)
   --prefill-budget  chunked-prefill tokens per scheduler step (clamped to
                     the model's compiled chunk menu; small = smoother
-                    streaming under load, large = faster first token)",
+                    streaming under load, large = faster first token)
+  --draft-model     speculative decoding: cheaper model that proposes
+                    tokens for every loaded target to verify in one
+                    batched call (same tokenizer/vocab required)
+  --spec-tokens     draft proposals per speculation round (default 4)
+  --no-fast-forward disable grammar fast-forward (emit grammar-forced
+                    token runs without model calls; on by default)",
         webllm::version()
     );
 }
@@ -110,6 +116,17 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig, String
         cfg.prefill_token_budget = b
             .parse()
             .map_err(|_| format!("--prefill-budget: '{b}' is not a token count"))?;
+    }
+    if let Some(d) = flags.get("draft-model") {
+        cfg.draft_model = Some(d.clone());
+    }
+    if let Some(k) = flags.get("spec-tokens") {
+        cfg.spec_tokens = k
+            .parse()
+            .map_err(|_| format!("--spec-tokens: '{k}' is not a token count"))?;
+    }
+    if flags.contains_key("no-fast-forward") {
+        cfg.enable_fast_forward = false;
     }
     Ok(cfg)
 }

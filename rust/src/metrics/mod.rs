@@ -186,6 +186,16 @@ pub struct EngineStats {
     pub grammar_mask_misses: u64,
     /// Mask-cache entries evicted by the LRU capacity bound.
     pub grammar_mask_evictions: u64,
+    /// Tokens emitted by grammar fast-forward — appended because the
+    /// grammar forced them, with zero model and zero sampler calls.
+    pub ff_tokens: u64,
+    /// Tokens proposed by the draft model across all speculation rounds.
+    pub draft_proposed: u64,
+    /// Draft proposals confirmed by target verification (emitted without
+    /// their own target decode step).
+    pub draft_accepted: u64,
+    /// Speculative verify calls (draft-propose + target-verify rounds).
+    pub spec_steps: u64,
     /// Time from request admission to first streamed token.
     pub ttft: Histogram,
     /// Inter-token latency.
@@ -223,6 +233,16 @@ impl EngineStats {
             0.0
         } else {
             self.decode_padded_rows as f64 / total as f64
+        }
+    }
+
+    /// Fraction of draft proposals the target confirmed (0.0 before any
+    /// speculation).
+    pub fn draft_accept_rate(&self) -> f64 {
+        if self.draft_proposed == 0 {
+            0.0
+        } else {
+            self.draft_accepted as f64 / self.draft_proposed as f64
         }
     }
 
@@ -268,6 +288,13 @@ impl EngineStats {
             "decode_padding_ratio" => self.decode_padding_ratio(),
             "e2e_requests" => self.e2e.len() as i64,
             "e2e_mean_s" => self.e2e.mean(),
+            "speculative" => crate::obj! {
+                "ff_tokens" => self.ff_tokens as i64,
+                "draft_proposed" => self.draft_proposed as i64,
+                "draft_accepted" => self.draft_accepted as i64,
+                "draft_accept_rate" => self.draft_accept_rate(),
+                "spec_steps" => self.spec_steps as i64,
+            },
             "grammar" => crate::obj! {
                 "compiles" => self.grammar_compiles as i64,
                 "compile_s" => self.grammar_compile_s,
@@ -304,6 +331,10 @@ impl EngineStats {
         self.grammar_mask_hits += other.grammar_mask_hits;
         self.grammar_mask_misses += other.grammar_mask_misses;
         self.grammar_mask_evictions += other.grammar_mask_evictions;
+        self.ff_tokens += other.ff_tokens;
+        self.draft_proposed += other.draft_proposed;
+        self.draft_accepted += other.draft_accepted;
+        self.spec_steps += other.spec_steps;
         for &s in &other.ttft.samples {
             self.ttft.push(s);
         }
@@ -453,5 +484,36 @@ mod tests {
         assert_eq!(s.grammar_mask_hits, 10);
         assert_eq!(s.grammar_mask_evictions, 6);
         assert!((s.grammar_compile_s - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn engine_stats_speculative_counters_and_json() {
+        let mut s = EngineStats::new();
+        assert_eq!(s.draft_accept_rate(), 0.0);
+        s.ff_tokens = 12;
+        s.draft_proposed = 8;
+        s.draft_accepted = 6;
+        s.spec_steps = 3;
+        assert!((s.draft_accept_rate() - 0.75).abs() < 1e-12);
+
+        let v = s.stats_json();
+        let sp = v.get("speculative").expect("speculative section");
+        assert_eq!(sp.get("ff_tokens").and_then(|x| x.as_i64()), Some(12));
+        assert_eq!(sp.get("draft_proposed").and_then(|x| x.as_i64()), Some(8));
+        assert_eq!(sp.get("draft_accepted").and_then(|x| x.as_i64()), Some(6));
+        assert_eq!(sp.get("spec_steps").and_then(|x| x.as_i64()), Some(3));
+        let rate = sp.get("draft_accept_rate").and_then(|x| x.as_f64()).unwrap();
+        assert!((rate - 0.75).abs() < 1e-12);
+
+        let mut other = EngineStats::new();
+        other.ff_tokens = 3;
+        other.draft_proposed = 4;
+        other.draft_accepted = 1;
+        other.spec_steps = 2;
+        s.merge(&other);
+        assert_eq!(s.ff_tokens, 15);
+        assert_eq!(s.draft_proposed, 12);
+        assert_eq!(s.draft_accepted, 7);
+        assert_eq!(s.spec_steps, 5);
     }
 }

@@ -75,6 +75,57 @@ pub trait ModelBackend {
         self.prefill_chunk(ids, 0, seq_len, block_table)
     }
 
+    /// Verify a speculative run: score `n` consecutive tokens of one
+    /// sequence in a single positioned call, returning the logits *after*
+    /// each of them — `[n, vocab]` row-major, where row `i` is the
+    /// distribution conditioned on the prefix `[0, start_pos + i + 1)`.
+    ///
+    /// `ids`, `start_pos` and `block_table` follow the
+    /// [`Self::prefill_chunk`] contract exactly (padded chunk, absolute
+    /// positions, resident prefix below `start_pos`); the only
+    /// difference is that every valid position's logits come back, not
+    /// just the last one's. The KV for positions
+    /// `start_pos..start_pos + n` is written as a side effect, so after
+    /// a partial accept the caller must treat the rejected suffix as
+    /// garbage (track it via `Sequence::written`) and overwrite it.
+    ///
+    /// The default implementation runs `n` single-row decode steps, so
+    /// every backend supports verification; backends with a batched
+    /// scoring path (one forward pass for the whole run) override it.
+    fn verify_chunk(
+        &mut self,
+        ids: &[i32],
+        start_pos: usize,
+        n: usize,
+        block_table: &[i32],
+    ) -> Result<StepOutput, RuntimeError> {
+        let vocab = self.config().vocab_size;
+        let batch = self.config().pick_batch(1).ok_or_else(|| {
+            RuntimeError::Shape("no compiled decode batch can verify a single row".into())
+        })?;
+        let mp = self.config().max_pages_per_seq();
+        let mut out = StepOutput {
+            logits: Vec::with_capacity(n * vocab),
+            dispatches: 0,
+            exec_seconds: 0.0,
+        };
+        for i in 0..n {
+            let mut row_ids = vec![0i32; batch];
+            let mut positions = vec![0i32; batch];
+            let mut seq_lens = vec![0i32; batch];
+            let mut tables = vec![0i32; batch * mp];
+            row_ids[0] = ids[i];
+            positions[0] = (start_pos + i) as i32;
+            seq_lens[0] = (start_pos + i + 1) as i32;
+            tables[..mp].copy_from_slice(&block_table[..mp]);
+            let step = self.decode(&row_ids, &positions, &seq_lens, &tables)?;
+            out.logits.extend_from_slice(&step.logits[..vocab]);
+            out.dispatches += step.dispatches;
+            out.exec_seconds += step.exec_seconds;
+        }
+        Ok(out)
+    }
+
     /// Run one batched decode step.
     ///
     /// All slices are `batch`-sized (a compiled batch size); padding

@@ -255,6 +255,72 @@ impl ModelBackend for ReferenceBackend {
         Ok(StepOutput { logits, dispatches: self.dispatches_per_step, exec_seconds })
     }
 
+    fn verify_chunk(
+        &mut self,
+        ids: &[i32],
+        start_pos: usize,
+        n: usize,
+        block_table: &[i32],
+    ) -> Result<StepOutput, RuntimeError> {
+        let chunk = ids.len();
+        if !self.config.prefill_chunks.contains(&chunk) {
+            return Err(RuntimeError::Shape(format!(
+                "no verify executable for chunk {chunk} (have {:?})",
+                self.compiled_chunks()
+            )));
+        }
+        let mp = self.config.max_pages_per_seq();
+        if block_table.len() != mp {
+            return Err(RuntimeError::Shape(format!(
+                "block_table len {} != {mp}",
+                block_table.len()
+            )));
+        }
+        if n == 0 || n > chunk {
+            return Err(RuntimeError::Shape(format!("chunk n {n} not in 1..={chunk}")));
+        }
+        if start_pos + n > mp * self.config.page_size {
+            return Err(RuntimeError::Shape(format!(
+                "chunk end {} beyond the block table's reach",
+                start_pos + n
+            )));
+        }
+
+        let t0 = Instant::now();
+        // One pass: fold the resident prefix [0, start_pos) once, then
+        // extend the fingerprint incrementally per verified token — the
+        // whole run is scored with O(prefix + n) work instead of the
+        // default implementation's n separate decode passes. Because the
+        // fingerprint after position i only sees positions [0, i], each
+        // row is bit-identical to a sequential decode of the same
+        // prefix, which is what makes accept/reject exactly testable.
+        let vocab = self.config.vocab_size;
+        let mut h = self.seed ^ 0xA076_1D64_78BD_642F;
+        for pos in 0..start_pos {
+            let tok = self.pages[self.page_slot(pos, block_table)?];
+            if tok == UNWRITTEN {
+                return Err(RuntimeError::Shape(format!(
+                    "KV position {pos} read before any write (page {}, slot {})",
+                    block_table[pos / self.config.page_size],
+                    pos % self.config.page_size
+                )));
+            }
+            h = splitmix64(h ^ (tok as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        }
+        let mut logits = vec![0.0f32; n * vocab];
+        for (i, &tok) in ids.iter().enumerate().take(n) {
+            let slot = self.page_slot(start_pos + i, block_table)?;
+            self.pages[slot] = tok;
+            h = splitmix64(h ^ (tok as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            self.fill_logits(h, &mut logits[i * vocab..(i + 1) * vocab]);
+        }
+        self.burn_compute(n);
+        let exec_seconds = t0.elapsed().as_secs_f64();
+
+        self.charge_env();
+        Ok(StepOutput { logits, dispatches: self.dispatches_per_step, exec_seconds })
+    }
+
     fn decode(
         &mut self,
         ids: &[i32],
@@ -420,6 +486,56 @@ mod tests {
         let end = mp * rt.config().page_size;
         let err = rt.prefill_chunk(&padded(&[1], 16), end, 1, &bt).unwrap_err();
         assert!(err.to_string().contains("beyond"), "{err}");
+    }
+
+    #[test]
+    fn verify_chunk_rows_equal_sequential_decode() {
+        let prompt = [10i32, 11, 12];
+        let run = [20i32, 21, 22, 23];
+        let mut bt = vec![0i32; backend().config().max_pages_per_seq()];
+        bt[0] = 1;
+        bt[1] = 2;
+
+        // Sequential truth: decode each run token one position at a time.
+        let mut seq = backend();
+        seq.prefill(&padded(&prompt, 16), 3, &bt).unwrap();
+        let mut want = Vec::new();
+        for (i, &tok) in run.iter().enumerate() {
+            let pos = 3 + i;
+            let out = seq.decode(&[tok], &[pos as i32], &[(pos + 1) as i32], &bt).unwrap();
+            want.extend_from_slice(&out.logits);
+        }
+
+        // verify_chunk scores the same run in one positioned call.
+        let mut ver = backend();
+        ver.prefill(&padded(&prompt, 16), 3, &bt).unwrap();
+        let got = ver.verify_chunk(&padded(&run, 16), 3, 4, &bt).unwrap().logits;
+        assert_eq!(want, got, "verify rows must be bit-identical to sequential decode");
+    }
+
+    #[test]
+    fn verify_chunk_writes_kv_like_prefill() {
+        let mut bt = vec![0i32; backend().config().max_pages_per_seq()];
+        bt[0] = 1;
+
+        let mut a = backend();
+        a.prefill(&padded(&[5, 6], 16), 2, &bt).unwrap();
+        a.verify_chunk(&padded(&[7, 8], 16), 2, 2, &bt).unwrap();
+        let after_verify = a.decode(&[9], &[4], &[5], &bt).unwrap().logits;
+
+        let mut b = backend();
+        b.prefill(&padded(&[5, 6, 7, 8], 16), 4, &bt).unwrap();
+        let after_prefill = b.decode(&[9], &[4], &[5], &bt).unwrap().logits;
+        assert_eq!(after_verify, after_prefill, "verified tokens must be resident KV");
+    }
+
+    #[test]
+    fn verify_chunk_over_unwritten_prefix_is_an_error() {
+        let mut rt = backend();
+        let mut bt = vec![0i32; rt.config().max_pages_per_seq()];
+        bt[0] = 1;
+        let err = rt.verify_chunk(&padded(&[9], 16), 3, 1, &bt).unwrap_err();
+        assert!(err.to_string().contains("read before any write"), "{err}");
     }
 
     #[test]

@@ -133,22 +133,43 @@ fn cmp_desc(a: &(u32, f32), b: &(u32, f32)) -> Ordering {
     b.1.partial_cmp(&a.1).unwrap_or(Ordering::Equal).then_with(|| a.0.cmp(&b.0))
 }
 
+/// Reusable candidate buffers for the fused sampling core.
+///
+/// Every buffer is cleared at the start of the pass that uses it, so a
+/// single instance can serve *any* number of processors — the engine
+/// keeps one per step loop and threads it through every decode row and
+/// speculative verify row (`[batch, vocab]` sampling shares one
+/// allocation instead of one per sequence). Each [`LogitsProcessor`]
+/// also owns one for the standalone entry points.
+#[derive(Default)]
+pub struct SampleScratch {
+    /// Candidate scratch: holds `(token, scaled logit)` during
+    /// collection, `(token, unnormalized prob)` afterwards.
+    cands: Vec<(u32, f32)>,
+    /// Token-id scratch for the `top_logprobs` report.
+    idx: Vec<u32>,
+    /// `allow_extra` folded into per-word OR overlays, sorted by word
+    /// index, so the mask-word loop pays O(1) amortized instead of
+    /// rescanning the extras for every word.
+    extra: Vec<(usize, u64)>,
+}
+
+impl SampleScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Stateful per-sequence processor: tracks occurrence counts for the
 /// penalty terms and owns the request RNG.
 pub struct LogitsProcessor {
     params: SamplingParams,
     rng: Pcg32,
     counts: HashMap<u32, u32>,
-    /// Candidate scratch reused across steps (the decode hot path makes no
-    /// steady-state allocations): holds `(token, scaled logit)` during
-    /// collection, `(token, unnormalized prob)` afterwards.
-    scratch: Vec<(u32, f32)>,
-    /// Token-id scratch for the `top_logprobs` report.
-    idx_scratch: Vec<u32>,
-    /// `allow_extra` folded into per-word OR overlays, sorted by word
-    /// index, so the mask-word loop pays O(1) amortized instead of
-    /// rescanning the extras for every word.
-    extra_scratch: Vec<(usize, u64)>,
+    /// Scratch for the standalone entry points (the decode hot path makes
+    /// no steady-state allocations); the `_with` variants take a shared
+    /// one instead.
+    scratch: SampleScratch,
 }
 
 impl LogitsProcessor {
@@ -160,9 +181,7 @@ impl LogitsProcessor {
             params,
             rng: Pcg32::new(seed),
             counts: HashMap::new(),
-            scratch: Vec::new(),
-            idx_scratch: Vec::new(),
-            extra_scratch: Vec::new(),
+            scratch: SampleScratch::new(),
         }
     }
 
@@ -219,7 +238,7 @@ impl LogitsProcessor {
         }
         let token = match fallback {
             Some(t) => t,
-            None => self.pick(logits, None, &[]),
+            None => pick(&self.params, &mut self.rng, &mut self.scratch, logits, None, &[]),
         };
         self.observe(token);
         token
@@ -238,7 +257,23 @@ impl LogitsProcessor {
         allow_extra: &[u32],
     ) -> u32 {
         self.apply_penalties(logits);
-        let token = self.pick(logits, mask, allow_extra);
+        let token = pick(&self.params, &mut self.rng, &mut self.scratch, logits, mask, allow_extra);
+        self.observe(token);
+        token
+    }
+
+    /// [`Self::sample_masked`] with caller-provided scratch, so a batch
+    /// of rows (or a speculative verify run) shares one set of candidate
+    /// buffers across all its processors.
+    pub fn sample_masked_with(
+        &mut self,
+        scratch: &mut SampleScratch,
+        logits: &mut [f32],
+        mask: Option<&TokenBitmask>,
+        allow_extra: &[u32],
+    ) -> u32 {
+        self.apply_penalties(logits);
+        let token = pick(&self.params, &mut self.rng, scratch, logits, mask, allow_extra);
         self.observe(token);
         token
     }
@@ -257,6 +292,31 @@ impl LogitsProcessor {
         if !self.params.logprobs {
             return (self.sample_masked(logits, mask, allow_extra), None);
         }
+        self.sample_with_logprobs_masked_slow(logits, mask, allow_extra)
+    }
+
+    /// [`Self::sample_with_logprobs_masked`] with caller-provided scratch
+    /// for the hot (no-logprobs) path; the logprobs report path allocates
+    /// regardless, so it keeps using the processor's own buffers.
+    pub fn sample_with_logprobs_masked_with(
+        &mut self,
+        scratch: &mut SampleScratch,
+        logits: &mut [f32],
+        mask: Option<&TokenBitmask>,
+        allow_extra: &[u32],
+    ) -> (u32, Option<TokenLogprob>) {
+        if !self.params.logprobs {
+            return (self.sample_masked_with(scratch, logits, mask, allow_extra), None);
+        }
+        self.sample_with_logprobs_masked_slow(logits, mask, allow_extra)
+    }
+
+    fn sample_with_logprobs_masked_slow(
+        &mut self,
+        logits: &mut [f32],
+        mask: Option<&TokenBitmask>,
+        allow_extra: &[u32],
+    ) -> (u32, Option<TokenLogprob>) {
         match mask {
             None => self.sample_with_logprobs(logits, None),
             Some(m) => {
@@ -302,209 +362,223 @@ impl LogitsProcessor {
         let mut top: Vec<(u32, f32)> = Vec::new();
         let k_req = self.params.top_logprobs;
         if k_req > 0 {
-            self.idx_scratch.clear();
-            self.idx_scratch
-                .extend((0..logits.len() as u32).filter(|&i| logits[i as usize].is_finite()));
-            let k = k_req.min(self.idx_scratch.len());
+            let idx = &mut self.scratch.idx;
+            idx.clear();
+            idx.extend((0..logits.len() as u32).filter(|&i| logits[i as usize].is_finite()));
+            let k = k_req.min(idx.len());
             if k > 0 {
-                self.idx_scratch.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+                idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
                     logits[b as usize]
                         .partial_cmp(&logits[a as usize])
                         .unwrap_or(Ordering::Equal)
                 });
-                self.idx_scratch.truncate(k);
-                self.idx_scratch.sort_unstable_by(|&a, &b| {
+                idx.truncate(k);
+                idx.sort_unstable_by(|&a, &b| {
                     logits[b as usize]
                         .partial_cmp(&logits[a as usize])
                         .unwrap_or(Ordering::Equal)
                 });
-                top = self.idx_scratch.iter().map(|&i| (i, lp(i))).collect();
+                top = idx.iter().map(|&i| (i, lp(i))).collect();
             }
         }
         (token, Some(TokenLogprob { token, logprob: lp(token), top }))
     }
 
-    // -- fused core ---------------------------------------------------------
+}
 
-    /// Select one token from `logits` under `mask` + `allow_extra`.
-    /// Candidates are collected in ascending token order; greedy takes an
-    /// argmax over them, otherwise `sample_stochastic_fused` draws.
-    fn pick(&mut self, logits: &[f32], mask: Option<&TokenBitmask>, extra: &[u32]) -> u32 {
-        let greedy = self.params.temperature == 0.0;
-        if greedy && mask.is_none() {
-            // No collection needed: plain argmax over the row.
-            return argmax(logits);
-        }
-        let inv_t = if greedy { 1.0 } else { 1.0 / self.params.temperature };
+// -- fused core -------------------------------------------------------------
 
-        self.scratch.clear();
-        match mask {
-            Some(m) => {
-                debug_assert_eq!(m.len(), logits.len());
-                // Fold the (tiny) extra allowance into per-word OR
-                // overlays once, sorted by word, so the word loop below
-                // consumes them with a forward cursor instead of scanning
-                // `extra` per word.
-                self.extra_scratch.clear();
-                for &e in extra {
-                    let e = e as usize;
-                    if e < logits.len() {
-                        let (wi, bit) = (e / 64, 1u64 << (e % 64));
-                        match self.extra_scratch.iter_mut().find(|(w, _)| *w == wi) {
-                            Some((_, bits)) => *bits |= bit,
-                            None => self.extra_scratch.push((wi, bit)),
-                        }
-                    }
-                }
-                self.extra_scratch.sort_unstable_by_key(|&(w, _)| w);
-                let mut ei = 0usize;
-                for (wi, &w0) in m.words().iter().enumerate() {
-                    let mut w = w0;
-                    if ei < self.extra_scratch.len() && self.extra_scratch[ei].0 == wi {
-                        w |= self.extra_scratch[ei].1;
-                        ei += 1;
-                    }
-                    if w == 0 {
-                        continue; // 64 banned tokens skipped per test
-                    }
-                    let base = wi * 64;
-                    while w != 0 {
-                        let i = base + w.trailing_zeros() as usize;
-                        w &= w - 1;
-                        // Test the *scaled* value: a tiny (but valid)
-                        // temperature can overflow finite logits to ±inf,
-                        // which would poison step 1 with inf - inf = NaN.
-                        let s = logits[i] * inv_t;
-                        if s.is_finite() {
-                            self.scratch.push((i as u32, s));
-                        }
+/// Select one token from `logits` under `mask` + `allow_extra`.
+/// Candidates are collected in ascending token order; greedy takes an
+/// argmax over them, otherwise `sample_stochastic_fused` draws. A free
+/// function over disjoint processor parts so callers can thread in a
+/// shared [`SampleScratch`] alongside the per-request params/RNG.
+fn pick(
+    params: &SamplingParams,
+    rng: &mut Pcg32,
+    scratch: &mut SampleScratch,
+    logits: &[f32],
+    mask: Option<&TokenBitmask>,
+    extra: &[u32],
+) -> u32 {
+    let greedy = params.temperature == 0.0;
+    if greedy && mask.is_none() {
+        // No collection needed: plain argmax over the row.
+        return argmax(logits);
+    }
+    let inv_t = if greedy { 1.0 } else { 1.0 / params.temperature };
+
+    scratch.cands.clear();
+    match mask {
+        Some(m) => {
+            debug_assert_eq!(m.len(), logits.len());
+            // Fold the (tiny) extra allowance into per-word OR
+            // overlays once, sorted by word, so the word loop below
+            // consumes them with a forward cursor instead of scanning
+            // `extra` per word.
+            scratch.extra.clear();
+            for &e in extra {
+                let e = e as usize;
+                if e < logits.len() {
+                    let (wi, bit) = (e / 64, 1u64 << (e % 64));
+                    match scratch.extra.iter_mut().find(|(w, _)| *w == wi) {
+                        Some((_, bits)) => *bits |= bit,
+                        None => scratch.extra.push((wi, bit)),
                     }
                 }
             }
-            None => {
-                for (i, &l) in logits.iter().enumerate() {
-                    let s = l * inv_t;
+            scratch.extra.sort_unstable_by_key(|&(w, _)| w);
+            let mut ei = 0usize;
+            for (wi, &w0) in m.words().iter().enumerate() {
+                let mut w = w0;
+                if ei < scratch.extra.len() && scratch.extra[ei].0 == wi {
+                    w |= scratch.extra[ei].1;
+                    ei += 1;
+                }
+                if w == 0 {
+                    continue; // 64 banned tokens skipped per test
+                }
+                let base = wi * 64;
+                while w != 0 {
+                    let i = base + w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    // Test the *scaled* value: a tiny (but valid)
+                    // temperature can overflow finite logits to ±inf,
+                    // which would poison step 1 with inf - inf = NaN.
+                    let s = logits[i] * inv_t;
                     if s.is_finite() {
-                        self.scratch.push((i as u32, s));
+                        scratch.cands.push((i as u32, s));
                     }
                 }
             }
         }
-        if self.scratch.is_empty() {
-            // Degenerate state (fully masked, or every scaled logit
-            // non-finite — e.g. temperature small enough to overflow):
-            // argmax over the raw row, which is also the temperature -> 0
-            // limit of the distribution.
-            return argmax(logits);
-        }
-        if greedy {
-            let mut best = self.scratch[0];
-            for &(i, l) in &self.scratch[1..] {
-                if l > best.1 {
-                    best = (i, l);
+        None => {
+            for (i, &l) in logits.iter().enumerate() {
+                let s = l * inv_t;
+                if s.is_finite() {
+                    scratch.cands.push((i as u32, s));
                 }
             }
-            return best.0;
         }
-        self.sample_stochastic_fused()
+    }
+    if scratch.cands.is_empty() {
+        // Degenerate state (fully masked, or every scaled logit
+        // non-finite — e.g. temperature small enough to overflow):
+        // argmax over the raw row, which is also the temperature -> 0
+        // limit of the distribution.
+        return argmax(logits);
+    }
+    if greedy {
+        let mut best = scratch.cands[0];
+        for &(i, l) in &scratch.cands[1..] {
+            if l > best.1 {
+                best = (i, l);
+            }
+        }
+        return best.0;
+    }
+    sample_stochastic_fused(params, rng, &mut scratch.cands)
+}
+
+/// Stochastic draw over the candidates in `cands`.
+///
+/// Spec (mirrored exactly by the reference implementation in the
+/// property tests):
+///   1. values become unnormalized probs `e = exp(l - max_l)`
+///      (so `e_max == 1.0` exactly);
+///   2. top-k keeps the k largest under the `cmp_desc` total order
+///      (partial selection + small sort instead of a full sort);
+///   3. min-p keeps `e >= min_p` (threshold filter — equivalent to the
+///      classic normalized formulation because `e_max == 1`);
+///   4. `total` = sum of kept `e` in the array's current order;
+///   5. top-p keeps the smallest `cmp_desc`-descending prefix with
+///      cumulative mass `>= top_p * total` (lazy descending walk);
+///   6. the inverse-CDF draw walks the kept set in the same descending
+///      order with target `r * kept_total`.
+fn sample_stochastic_fused(
+    params: &SamplingParams,
+    rng: &mut Pcg32,
+    cands: &mut Vec<(u32, f32)>,
+) -> u32 {
+    let top_k = params.top_k;
+    let top_p = params.top_p;
+    let min_p = params.min_p;
+
+    // 1. scaled logits -> unnormalized probs.
+    let max_l = cands.iter().fold(f32::NEG_INFINITY, |a, &(_, l)| a.max(l));
+    for c in cands.iter_mut() {
+        c.1 = (c.1 - max_l).exp();
     }
 
-    /// Stochastic draw over the candidates in `scratch`.
-    ///
-    /// Spec (mirrored exactly by the reference implementation in the
-    /// property tests):
-    ///   1. values become unnormalized probs `e = exp(l - max_l)`
-    ///      (so `e_max == 1.0` exactly);
-    ///   2. top-k keeps the k largest under the `cmp_desc` total order
-    ///      (partial selection + small sort instead of a full sort);
-    ///   3. min-p keeps `e >= min_p` (threshold filter — equivalent to the
-    ///      classic normalized formulation because `e_max == 1`);
-    ///   4. `total` = sum of kept `e` in the array's current order;
-    ///   5. top-p keeps the smallest `cmp_desc`-descending prefix with
-    ///      cumulative mass `>= top_p * total` (lazy descending walk);
-    ///   6. the inverse-CDF draw walks the kept set in the same descending
-    ///      order with target `r * kept_total`.
-    fn sample_stochastic_fused(&mut self) -> u32 {
-        let top_k = self.params.top_k;
-        let top_p = self.params.top_p;
-        let min_p = self.params.min_p;
+    // 2. top-k: partial selection, then sort the kept block so the
+    // array order is descending (k is user-small; sorting it is cheap
+    // and makes min-p/top-p prefix logic trivially order-correct).
+    let mut sorted_len = 0usize;
+    if top_k > 0 && top_k < cands.len() {
+        cands.select_nth_unstable_by(top_k - 1, cmp_desc);
+        cands.truncate(top_k);
+        cands.sort_unstable_by(cmp_desc);
+        sorted_len = cands.len();
+    }
 
-        // 1. scaled logits -> unnormalized probs.
-        let max_l = self.scratch.iter().fold(f32::NEG_INFINITY, |a, &(_, l)| a.max(l));
-        for c in &mut self.scratch {
-            c.1 = (c.1 - max_l).exp();
-        }
+    // 3. min-p threshold filter. Clamped to 1.0 so the max candidate
+    // (e == 1.0 exactly) always survives and the kept set can never
+    // empty — even for out-of-range params that bypassed validate().
+    if min_p > 0.0 {
+        let floor = min_p.min(1.0);
+        cands.retain(|&(_, e)| e >= floor);
+        sorted_len = sorted_len.min(cands.len());
+    }
 
-        // 2. top-k: partial selection, then sort the kept block so the
-        // array order is descending (k is user-small; sorting it is cheap
-        // and makes min-p/top-p prefix logic trivially order-correct).
-        let mut sorted_len = 0usize;
-        if top_k > 0 && top_k < self.scratch.len() {
-            self.scratch.select_nth_unstable_by(top_k - 1, cmp_desc);
-            self.scratch.truncate(top_k);
-            self.scratch.sort_unstable_by(cmp_desc);
-            sorted_len = self.scratch.len();
-        }
+    // 4. total mass in array order.
+    let total: f32 = cands.iter().map(|&(_, e)| e).sum();
+    let mut kept_total = total;
 
-        // 3. min-p threshold filter. Clamped to 1.0 so the max candidate
-        // (e == 1.0 exactly) always survives and the kept set can never
-        // empty — even for out-of-range params that bypassed validate().
-        if min_p > 0.0 {
-            let floor = min_p.min(1.0);
-            self.scratch.retain(|&(_, e)| e >= floor);
-            sorted_len = sorted_len.min(self.scratch.len());
-        }
-
-        // 4. total mass in array order.
-        let total: f32 = self.scratch.iter().map(|&(_, e)| e).sum();
-        let mut kept_total = total;
-
-        // 5. top-p: walk the descending order lazily until the nucleus is
-        // covered; everything past the cut is dropped.
-        if top_p < 1.0 {
-            let target = top_p * total;
-            let mut cum = 0.0f32;
-            let mut i = 0usize;
-            let mut kept = self.scratch.len();
-            'nucleus: while i < self.scratch.len() {
-                if i >= sorted_len {
-                    sorted_len = grow_sorted_prefix(&mut self.scratch, sorted_len);
-                }
-                while i < sorted_len {
-                    cum += self.scratch[i].1;
-                    i += 1;
-                    if cum >= target {
-                        kept = i;
-                        kept_total = cum;
-                        break 'nucleus;
-                    }
-                }
-            }
-            self.scratch.truncate(kept);
-            sorted_len = sorted_len.min(kept);
-        }
-
-        // 6. inverse-CDF draw in descending order (the mass concentrates
-        // up front, so this rarely grows the sorted prefix further).
-        let r = self.rng.f32();
-        let target = r * kept_total;
+    // 5. top-p: walk the descending order lazily until the nucleus is
+    // covered; everything past the cut is dropped.
+    if top_p < 1.0 {
+        let target = top_p * total;
         let mut cum = 0.0f32;
         let mut i = 0usize;
-        while i < self.scratch.len() {
+        let mut kept = cands.len();
+        'nucleus: while i < cands.len() {
             if i >= sorted_len {
-                sorted_len = grow_sorted_prefix(&mut self.scratch, sorted_len);
+                sorted_len = grow_sorted_prefix(cands, sorted_len);
             }
             while i < sorted_len {
-                cum += self.scratch[i].1;
-                if target < cum {
-                    return self.scratch[i].0;
-                }
+                cum += cands[i].1;
                 i += 1;
+                if cum >= target {
+                    kept = i;
+                    kept_total = cum;
+                    break 'nucleus;
+                }
             }
         }
-        // Numerical fallthrough (rounding left target >= cum at the end).
-        self.scratch[self.scratch.len() - 1].0
+        cands.truncate(kept);
+        sorted_len = sorted_len.min(kept);
     }
+
+    // 6. inverse-CDF draw in descending order (the mass concentrates
+    // up front, so this rarely grows the sorted prefix further).
+    let r = rng.f32();
+    let target = r * kept_total;
+    let mut cum = 0.0f32;
+    let mut i = 0usize;
+    while i < cands.len() {
+        if i >= sorted_len {
+            sorted_len = grow_sorted_prefix(cands, sorted_len);
+        }
+        while i < sorted_len {
+            cum += cands[i].1;
+            if target < cum {
+                return cands[i].0;
+            }
+            i += 1;
+        }
+    }
+    // Numerical fallthrough (rounding left target >= cum at the end).
+    cands[cands.len() - 1].0
 }
 
 /// Grow the `cmp_desc`-sorted prefix of `v` by (at least) a doubling step:

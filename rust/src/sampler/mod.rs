@@ -21,7 +21,7 @@
 mod logits;
 mod rng;
 
-pub use logits::{LogitsProcessor, SamplingParams, TokenLogprob};
+pub use logits::{LogitsProcessor, SampleScratch, SamplingParams, TokenLogprob};
 pub use rng::Pcg32;
 
 #[cfg(test)]

@@ -99,6 +99,7 @@ impl BackendConformance {
         self.logits_address_page_contents_not_page_ids();
         self.chunked_prefill_matches_whole_prompt();
         self.chunked_prefill_reads_resident_prefix_pages();
+        self.verify_chunk_matches_sequential_decode();
     }
 
     /// Menus are non-empty, ascending, and sized within the model config.
@@ -321,5 +322,50 @@ impl BackendConformance {
             .expect("suffix chunk over reused page")
             .logits;
         self.assert_close(&want, &got, "prefix-skip over a reused page");
+    }
+
+    /// The speculative-verification contract: `verify_chunk` over a run
+    /// of tokens returns, row for row, the logits that sequential
+    /// single-row decode calls over the same tokens produce — and leaves
+    /// the KV state equally usable (a decode after either path agrees).
+    pub fn verify_chunk_matches_sequential_decode(&self) {
+        let probe = self.fresh();
+        let mc = probe.config().clone();
+        let prompt = [40i32, 41, 42];
+        let run = [50i32, 51, 52, 53];
+        let n = run.len();
+        let chunk = mc.pick_chunk(prompt.len()).expect("prompt chunk");
+        let mut bt = vec![0i32; mc.max_pages_per_seq()];
+        bt[0] = 1;
+        bt[1] = 2;
+
+        // Baseline: the run scored by one decode call per token.
+        let mut seq = self.fresh();
+        seq.prefill(&padded(&prompt, chunk), prompt.len(), &bt).expect("prefill");
+        let mut want = Vec::new();
+        for (i, &tok) in run.iter().enumerate() {
+            let pos = (prompt.len() + i) as i32;
+            want.push(Self::decode_single(seq.as_mut(), tok, pos, pos + 1, &bt));
+        }
+
+        // One verify_chunk call over the whole run.
+        let mut rt = self.fresh();
+        rt.prefill(&padded(&prompt, chunk), prompt.len(), &bt).expect("prefill");
+        let vc = mc.pick_chunk(n).expect("run chunk");
+        let out = rt
+            .verify_chunk(&padded(&run, vc), prompt.len(), n, &bt)
+            .expect("verify_chunk");
+        assert_eq!(out.logits.len(), n * mc.vocab_size, "verify must return [n, vocab]");
+        for (i, want_row) in want.iter().enumerate() {
+            let got = &out.logits[i * mc.vocab_size..(i + 1) * mc.vocab_size];
+            self.assert_close(want_row, got, &format!("verify row {i} vs sequential decode"));
+        }
+
+        // The run's KV landed: both instances decode the next position
+        // identically.
+        let pos = (prompt.len() + n) as i32;
+        let after_seq = Self::decode_single(seq.as_mut(), 60, pos, pos + 1, &bt);
+        let after_vc = Self::decode_single(rt.as_mut(), 60, pos, pos + 1, &bt);
+        self.assert_close(&after_seq, &after_vc, "decode after verify vs after sequential");
     }
 }

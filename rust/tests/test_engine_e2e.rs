@@ -295,7 +295,13 @@ fn streaming_deltas_equal_nonstreaming() {
 
 #[test]
 fn abort_mid_decode_emits_abort_finish() {
-    let mut engine = engine();
+    // Fast-forward off: the long-literal grammar below is one forced run,
+    // which ff would emit to the max_tokens Length finish in the very
+    // first step — the abort needs the one-token-per-step baseline to
+    // land mid-decode.
+    let mut cfg = EngineConfig::reference(&[MODEL]);
+    cfg.enable_fast_forward = false;
+    let mut engine = MLCEngine::new(&cfg).unwrap();
     // A long-literal grammar pins every step to one token ('a') and is
     // not accepting until 80 bytes — generation cannot stop on its own,
     // so the abort deterministically lands mid-decode.

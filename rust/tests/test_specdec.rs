@@ -1,0 +1,281 @@
+//! Multi-token emission: grammar fast-forward + draft-model speculative
+//! decoding, end to end on the deterministic reference backend.
+//!
+//! The load-bearing property throughout: everything here is an
+//! *optimization of the schedule*, never of the output. A speculative
+//! engine (with or without fast-forward) must produce token-for-token
+//! the text a plain one-token-per-step engine produces, because every
+//! emitted token is chosen by the request's own sampler from logits the
+//! target model computed. These tests pin that equivalence, the stats
+//! accounting, and the KV-rollback hygiene around aborts.
+
+use webllm::api::{ChatCompletionRequest, FinishReason, ResponseFormat};
+use webllm::coordinator::{EngineConfig, MLCEngine};
+use webllm::json::parse;
+use webllm::testutil::ban_reference_eos as ban_eos;
+use webllm::testutil::prop::Runner;
+
+const MODEL: &str = "tiny-ref";
+/// Same architecture as the target: proposals nearly always accepted.
+const SELF_DRAFT: &str = "tiny-ref";
+/// Different depth/pool: a genuinely divergent drafter, so rejection and
+/// KV rollback paths actually run.
+const OTHER_DRAFT: &str = "tiny-ref-b";
+
+/// One-token-per-step baseline: no draft, no fast-forward.
+fn baseline_engine() -> MLCEngine {
+    let mut cfg = EngineConfig::reference(&[MODEL]);
+    cfg.enable_fast_forward = false;
+    MLCEngine::new(&cfg).expect("baseline engine")
+}
+
+/// Speculative engine: `draft` proposes, fast-forward per `ff`.
+fn spec_engine(draft: &str, ff: bool) -> MLCEngine {
+    let mut cfg = EngineConfig::reference(&[MODEL]);
+    cfg.draft_model = Some(draft.to_string());
+    cfg.enable_fast_forward = ff;
+    MLCEngine::new(&cfg).expect("spec engine")
+}
+
+fn greedy(prompt: &str, max_tokens: usize) -> ChatCompletionRequest {
+    let mut r = ChatCompletionRequest::new(MODEL).user(prompt);
+    r.max_tokens = max_tokens;
+    r.sampling.temperature = 0.0;
+    r
+}
+
+/// Byte-token id in the reference tokenizer (byte_offset 8).
+const fn byte_tok(b: u8) -> u32 {
+    8 + b as u32
+}
+
+/// The ok/n JSON-schema request used across the structured tests: the
+/// '}' nudge closes the integer after a few digits so greedy derivations
+/// finish well inside max_tokens.
+fn schema_request(prompt: &str) -> ChatCompletionRequest {
+    let schema = r#"{
+        "type": "object",
+        "properties": {"ok": {"type": "boolean"}, "n": {"type": "integer"}},
+        "required": ["ok", "n"]
+    }"#;
+    let mut req = greedy(prompt, 100);
+    req.sampling.logit_bias.insert(byte_tok(b'}'), 5.0);
+    req.response_format = ResponseFormat::JsonSchema(parse(schema).unwrap());
+    req
+}
+
+// -- output equivalence -----------------------------------------------------
+
+#[test]
+fn prop_spec_greedy_grammar_matches_plain_baseline() {
+    // Greedy + grammar + fast-forward + speculation (both drafters) must
+    // reproduce the plain engine's output exactly: greedy draws no RNG,
+    // so even skipped single-candidate states can't shift the stream.
+    let prompts = ["emit json", "structured output", "fill the schema", "data"];
+    let grammars: &[fn(&str) -> ChatCompletionRequest] = &[
+        |p| schema_request(p),
+        |p| {
+            let mut r = greedy(p, 16);
+            r.response_format = ResponseFormat::Grammar(r#"root ::= "yes" | "no""#.into());
+            r
+        },
+        |p| {
+            let mut r = greedy(p, 32);
+            r.response_format =
+                ResponseFormat::Grammar(r#"root ::= "status: " ("ok" | "fail") "!""#.into());
+            r
+        },
+    ];
+    Runner::new("spec_greedy_grammar_parity", 6).run(|rng| {
+        let prompt = *rng.choose(&prompts);
+        let mk = *rng.choose(grammars);
+        let draft = if rng.bool() { SELF_DRAFT } else { OTHER_DRAFT };
+        let want = baseline_engine().chat_completion(mk(prompt)).map_err(|e| e.to_string())?;
+        let mut spec = spec_engine(draft, true);
+        let got = spec.chat_completion(mk(prompt)).map_err(|e| e.to_string())?;
+        if want.text() != got.text() {
+            return Err(format!(
+                "draft {draft} prompt {prompt:?}: {:?} != baseline {:?}",
+                got.text(),
+                want.text()
+            ));
+        }
+        if want.usage.completion_tokens != got.usage.completion_tokens {
+            return Err(format!(
+                "token counts diverged: {} != {}",
+                got.usage.completion_tokens, want.usage.completion_tokens
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spec_sampled_no_grammar_matches_plain_baseline() {
+    // At temperature > 0 the equivalence still holds without a grammar:
+    // each emitted token consumes exactly one sampler draw over logits
+    // identical to plain decode's, whether it came from a verify row or
+    // a plain step. (Fast-forward is a no-op without a grammar.)
+    let prompts = ["alpha", "speculative stream", "hello world", "determinism"];
+    Runner::new("spec_sampled_parity", 6).run(|rng| {
+        let seed = rng.u64();
+        let prompt = *rng.choose(&prompts);
+        let temperature = 0.2 + rng.f64() as f32;
+        let draft = if rng.bool() { SELF_DRAFT } else { OTHER_DRAFT };
+        let mk = || {
+            let mut r = ChatCompletionRequest::new(MODEL).user(prompt);
+            r.max_tokens = 10;
+            r.sampling.seed = Some(seed);
+            r.sampling.temperature = temperature;
+            r
+        };
+        let want = baseline_engine().chat_completion(mk()).map_err(|e| e.to_string())?;
+        let got = spec_engine(draft, true).chat_completion(mk()).map_err(|e| e.to_string())?;
+        if want.text() != got.text() {
+            return Err(format!(
+                "seed {seed} temp {temperature} draft {draft}: {:?} != baseline {:?}",
+                got.text(),
+                want.text()
+            ));
+        }
+        Ok(())
+    });
+}
+
+// -- fast-forward -----------------------------------------------------------
+
+#[test]
+fn fast_forward_emits_forced_runs_without_model_calls() {
+    // A 40-byte literal after one free choice: every post-choice state
+    // forces a single token, so fast-forward must emit nearly the whole
+    // derivation from the cached forced runs, in a handful of steps.
+    let literal = "abcdefghijklmnopqrstuvwxyz0123456789!?.,";
+    let grammar = format!("root ::= (\"L\" | \"R\") \"{literal}\"");
+    let mk = || {
+        let mut r = greedy("pick a side", 60);
+        r.response_format = ResponseFormat::Grammar(grammar.clone());
+        r
+    };
+
+    let mut ff = MLCEngine::new(&EngineConfig::reference(&[MODEL])).unwrap();
+    let resp = ff.chat_completion(mk()).unwrap();
+    assert_eq!(resp.choices[0].finish_reason, FinishReason::Stop);
+    assert!(resp.text().ends_with(literal), "{:?}", resp.text());
+
+    let stats = ff.stats_json();
+    let spec = stats.get("speculative").unwrap();
+    let ff_tokens = spec.get("ff_tokens").unwrap().as_i64().unwrap();
+    assert!(ff_tokens >= literal.len() as i64, "forced run not fast-forwarded: {ff_tokens}");
+    // The literal's tokens never hit the model: far fewer decode-path
+    // samples than completion tokens.
+    let decode_tokens = stats.get("decode_tokens").unwrap().as_i64().unwrap();
+    assert!(
+        (decode_tokens as usize) < resp.usage.completion_tokens,
+        "decode_tokens {decode_tokens} >= completion {}",
+        resp.usage.completion_tokens
+    );
+
+    // And the output is exactly what the one-token-per-step engine says.
+    let want = baseline_engine().chat_completion(mk()).unwrap();
+    assert_eq!(resp.text(), want.text());
+    assert_eq!(resp.usage.completion_tokens, want.usage.completion_tokens);
+}
+
+// -- stats accounting -------------------------------------------------------
+
+#[test]
+fn self_draft_accepts_nearly_everything() {
+    // Drafting with the target's own architecture and seed: proposals
+    // are the target's own argmax, so acceptance is near-total (only a
+    // Length cutoff mid-round leaves scored-but-unreached proposals).
+    let mut engine = spec_engine(SELF_DRAFT, true);
+    let mut req = greedy("steady stream of tokens", 24);
+    ban_eos(&mut req);
+    engine.chat_completion(req).unwrap();
+
+    let stats = engine.stats_json();
+    let spec = stats.get("speculative").unwrap();
+    let steps = spec.get("spec_steps").unwrap().as_i64().unwrap();
+    let proposed = spec.get("draft_proposed").unwrap().as_i64().unwrap();
+    let accepted = spec.get("draft_accepted").unwrap().as_i64().unwrap();
+    let rate = spec.get("draft_accept_rate").unwrap().as_f64().unwrap();
+    assert!(steps > 0, "no speculative steps ran");
+    assert!(proposed >= steps, "each spec step proposes at least one token");
+    assert!(accepted > 0);
+    assert!(rate > 0.7, "self-draft accept rate {rate} unexpectedly low");
+    // Multi-token emission actually happened: more tokens than target
+    // model calls (decode steps), the whole point of speculation.
+    let decode_tokens = stats.get("decode_tokens").unwrap().as_i64().unwrap();
+    let decode_steps = stats.get("decode_steps").unwrap().as_i64().unwrap();
+    assert!(
+        decode_tokens > decode_steps,
+        "no step emitted more than one token ({decode_tokens} tokens / {decode_steps} steps)"
+    );
+}
+
+#[test]
+fn spec_and_ff_compose_on_constrained_json() {
+    // The composed path: forced spans fast-forward, free spans go
+    // through grammar-constrained speculation — both counters move, and
+    // the output still matches the plain baseline.
+    let mut engine = spec_engine(OTHER_DRAFT, true);
+    let resp = engine.chat_completion(schema_request("emit json")).unwrap();
+    let v = parse(resp.text()).unwrap_or_else(|e| panic!("not JSON: {e}: {}", resp.text()));
+    assert!(v.get("ok").is_some() && v.get("n").is_some(), "{}", resp.text());
+
+    let stats = engine.stats_json();
+    let spec = stats.get("speculative").unwrap();
+    assert!(spec.get("ff_tokens").unwrap().as_i64().unwrap() > 0, "schema has forced spans");
+    assert!(spec.get("spec_steps").unwrap().as_i64().unwrap() > 0, "free spans speculate");
+
+    let want = baseline_engine().chat_completion(schema_request("emit json")).unwrap();
+    assert_eq!(resp.text(), want.text());
+}
+
+// -- abort / KV hygiene -----------------------------------------------------
+
+#[test]
+fn abort_mid_spec_leaves_no_reusable_garbage() {
+    // Abort a speculative, grammar-constrained request mid-run — right
+    // when the target KV may hold rejected draft tokens past the
+    // `written` watermark — then rerun the identical request on the same
+    // engine. If freeing the aborted sequence had registered any
+    // partially-garbage page in the prefix cache, the rerun would reuse
+    // it and diverge from a fresh baseline; instead both must agree.
+    let mk = || {
+        let mut r = greedy("long structured run", 40);
+        r.response_format =
+            ResponseFormat::Grammar(format!("root ::= (\"L\" | \"R\") \"{}\"", "a".repeat(60)));
+        r
+    };
+    let mut engine = spec_engine(OTHER_DRAFT, false);
+    let id = engine.submit(mk()).unwrap();
+    for _ in 0..3 {
+        engine.step().unwrap();
+    }
+    engine.abort(id);
+    engine.run_to_completion().unwrap();
+    let mut aborted = None;
+    for ev in engine.poll_events() {
+        if let webllm::coordinator::EngineEvent::Done(rid, resp) = ev {
+            if rid == id {
+                aborted = Some(resp);
+            }
+        }
+    }
+    let aborted = aborted.expect("aborted request resolves with a response");
+    assert_eq!(aborted.choices[0].finish_reason, FinishReason::Abort);
+
+    // Rerun on the same engine (prefix cache warm from the abort) and on
+    // a fresh baseline: byte-identical completions.
+    let rerun = engine.chat_completion(mk()).unwrap();
+    let mut fresh = baseline_engine();
+    let want = fresh.chat_completion(mk()).unwrap();
+    assert_eq!(rerun.text(), want.text(), "aborted KV leaked into a reused page");
+    assert_eq!(rerun.usage.completion_tokens, want.usage.completion_tokens);
+
+    // All pages returned: the engine can still admit and serve requests
+    // back to back (nothing leaked to the draft mirror either).
+    let again = engine.chat_completion(mk()).unwrap();
+    assert_eq!(again.text(), want.text());
+}
