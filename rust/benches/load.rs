@@ -1,0 +1,243 @@
+//! Synthetic load harness (DESIGN.md §2.3): a seeded, deterministic
+//! arrival trace of mixed-length prompts across three priority classes,
+//! with a warm-prefix share (returning "sessions" reusing one system
+//! prompt), driven against a deliberately small KV pool so preemption
+//! and back-pressure actually fire. Reference backend only — runs
+//! everywhere with no artifacts, so it doubles as the CI perf smoke for
+//! the preemption/priority scheduler.
+//!
+//! Reports throughput, TTFT p50/p95 (overall and for the interactive
+//! class), ITL p99, preemptions, recomputed tokens, and queue-full
+//! rejections. Writes ../BENCH_load.json (repo root).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::collections::HashMap;
+use std::time::Instant;
+use webllm::api::ChatCompletionRequest;
+use webllm::coordinator::{EngineConfig, EngineEvent, MLCEngine};
+use webllm::metrics::Histogram;
+
+const MODEL: &str = "tiny-ref";
+/// Shared leading content for the warm-prefix share: identical leading
+/// tokens land on identical pages, so returning sessions hit the prefix
+/// cache instead of re-prefilling.
+const SESSION_PREFIX: &str = "you are a helpful session assistant"; // 35 chars
+
+/// One generated request: everything needed to rebuild it on arrival.
+struct Spec {
+    content: String,
+    priority: i32,
+    max_tokens: usize,
+    /// Engine step at which this request arrives.
+    arrival: usize,
+}
+
+/// Splitmix-style LCG; good enough for a reproducible trace.
+fn next(state: &mut u64) -> u64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+/// Deterministic trace: ~50% short / 35% medium / 15% long prompts,
+/// 40% warm-prefix share, priorities 2 (interactive) / 0 / -1 (batch),
+/// bursty arrivals (0-2 steps between consecutive requests).
+fn trace(n: usize, seed: u64) -> Vec<Spec> {
+    let mut s = seed;
+    let mut at = 0usize;
+    (0..n)
+        .map(|i| {
+            let len_roll = next(&mut s) % 100;
+            let body_len = if len_roll < 50 {
+                8
+            } else if len_roll < 85 {
+                40
+            } else {
+                72
+            };
+            let warm = next(&mut s) % 100 < 40;
+            // A distinct 2-digit tag keeps cold prompts out of the
+            // prefix cache; warm ones share SESSION_PREFIX pages.
+            let mut content = String::new();
+            if warm {
+                content.push_str(SESSION_PREFIX);
+                content.push(' ');
+            }
+            content.push_str(&format!("{:02}{}", i % 100, "x".repeat(body_len)));
+            let prio_roll = next(&mut s) % 100;
+            let priority = if prio_roll < 20 {
+                2
+            } else if prio_roll < 85 {
+                0
+            } else {
+                -1
+            };
+            let max_tokens = 2 + (next(&mut s) % 14) as usize;
+            at += (next(&mut s) % 3) as usize;
+            Spec { content, priority, max_tokens, arrival: at }
+        })
+        .collect()
+}
+
+fn build(spec: &Spec) -> ChatCompletionRequest {
+    let mut r = ChatCompletionRequest::new(MODEL).user(spec.content.clone());
+    r.max_tokens = spec.max_tokens;
+    r.sampling.temperature = 0.0;
+    r.stream = true;
+    r.priority = spec.priority;
+    webllm::testutil::ban_reference_invisible(&mut r);
+    r
+}
+
+fn main() {
+    let n = common::iters(160, 32);
+    let specs = trace(n, 0xC0FFEE);
+    let longs = specs
+        .iter()
+        .filter(|s| s.content.bytes().filter(|&b| b == b'x').count() >= 72)
+        .count();
+    let interactive = specs.iter().filter(|s| s.priority == 2).count();
+    println!(
+        "=== synthetic load: {n} requests ({longs} long, {interactive} interactive) \
+         on {MODEL}, 64-page pool ==="
+    );
+
+    // Small waiting room so bursts exercise QueueFull back-pressure;
+    // everything else is the production default (adaptive prefill on,
+    // 4 concurrent prefills) over the tiny 64-page reference pool.
+    let mut cfg = EngineConfig::reference(&[MODEL]);
+    cfg.max_waiting_requests = 8;
+    let mut engine = MLCEngine::new(&cfg).expect("reference engine");
+
+    let mut prio_of: HashMap<u64, i32> = HashMap::new();
+    let mut last_chunk: HashMap<u64, Instant> = HashMap::new();
+    let mut ttft = Histogram::new();
+    let mut ttft_hi = Histogram::new();
+    let mut itl = Histogram::new();
+    let mut e2e = Histogram::new();
+    let mut tokens = 0usize;
+    let mut completed = 0usize;
+    let mut rejected = 0u64;
+
+    let t0 = Instant::now();
+    let mut next_req = 0usize;
+    let mut step_no = 0usize;
+    while next_req < specs.len() || engine.has_work() {
+        // Arrivals due this step; a QueueFull rejection re-tries the
+        // same request next step (what a client with Retry-After does).
+        while next_req < specs.len() && specs[next_req].arrival <= step_no {
+            match engine.submit(build(&specs[next_req])) {
+                Ok(id) => {
+                    prio_of.insert(id, specs[next_req].priority);
+                    next_req += 1;
+                }
+                Err(e) if e.kind == "queue_full" => {
+                    rejected += 1;
+                    break;
+                }
+                Err(e) => panic!("submit failed: {e:?}"),
+            }
+        }
+        engine.step().expect("engine step");
+        step_no += 1;
+        let now = Instant::now();
+        for ev in engine.poll_events() {
+            match ev {
+                EngineEvent::Chunk(rid, c) if !c.delta.is_empty() => {
+                    if let Some(prev) = last_chunk.insert(rid, now) {
+                        itl.push((now - prev).as_secs_f64() * 1e3);
+                    }
+                }
+                EngineEvent::Done(rid, resp) => {
+                    completed += 1;
+                    tokens += resp.usage.completion_tokens;
+                    ttft.push(resp.usage.ttft_s * 1e3);
+                    if prio_of.get(&rid) == Some(&2) {
+                        ttft_hi.push(resp.usage.ttft_s * 1e3);
+                    }
+                    e2e.push(resp.usage.e2e_s * 1e3);
+                    last_chunk.remove(&rid);
+                }
+                _ => {}
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let stats = engine.stats_json();
+    let top = |k: &str| stats.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+    let per_model = |k: &str| {
+        stats
+            .get("models")
+            .and_then(|m| m.get(MODEL))
+            .and_then(|m| m.get(k))
+            .and_then(|v| v.as_i64())
+            .unwrap_or(0)
+    };
+    let preemptions = top("preemptions");
+    let recomputed = top("preempted_tokens_recomputed");
+
+    assert_eq!(completed, n, "every request must finish");
+    println!(
+        "wall {wall:>6.3}s | {:.0} tok/s | ttft p50 {:.3} ms (interactive {:.3}) | \
+         itl p99 {:.4} ms",
+        tokens as f64 / wall,
+        ttft.percentile(50.0),
+        ttft_hi.percentile(50.0),
+        itl.percentile(99.0),
+    );
+    println!(
+        "preemptions {preemptions} | recomputed {recomputed} tok | \
+         queue-full rejections {rejected} | prefix hits {} / misses {}",
+        per_model("prefix_cache_hits"),
+        per_model("prefix_cache_misses"),
+    );
+
+    let report = webllm::obj! {
+        "bench" => "load",
+        "generated_by" => "cargo bench --bench load",
+        "label" => "measured",
+        "quick_mode" => common::quick(),
+        "scenario" => webllm::obj! {
+            "description" => "seeded deterministic arrival trace, mixed prompt lengths \
+                              (50/35/15 short/medium/long), 40% warm-prefix share, \
+                              priorities 2/0/-1, 64-page reference pool, waiting cap 8",
+            "backend" => "reference (seeded-deterministic, native mode)",
+            "requests" => n as i64,
+            "long_prompts" => longs as i64,
+            "interactive_requests" => interactive as i64,
+            "seed" => 0xC0FFEEi64,
+        },
+        "completed" => completed as i64,
+        "completion_tokens" => tokens as i64,
+        "wall_seconds" => wall,
+        "throughput_tok_s" => tokens as f64 / wall,
+        "ttft_p50_ms" => ttft.percentile(50.0),
+        "ttft_p95_ms" => ttft.percentile(95.0),
+        "ttft_interactive_p50_ms" => ttft_hi.percentile(50.0),
+        "ttft_interactive_p95_ms" => ttft_hi.percentile(95.0),
+        "itl_p99_ms" => itl.percentile(99.0),
+        "e2e_p50_ms" => e2e.percentile(50.0),
+        "preemptions" => preemptions,
+        "preempted_tokens_recomputed" => recomputed,
+        "queue_full_rejections" => rejected as i64,
+        "prefix_cache_hits" => per_model("prefix_cache_hits"),
+        "prefix_cache_misses" => per_model("prefix_cache_misses"),
+    };
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_load.json");
+    match std::fs::write(&path, webllm::json::to_string_pretty(&report) + "\n") {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
+    }
+
+    // The trace is engineered to overcommit the 64-page pool; zero
+    // preemptions means the scheduler stopped feeling memory pressure
+    // (or stopped preempting), which is exactly what this smoke exists
+    // to catch. Asserted after the report is written so a failing run
+    // still leaves its numbers behind.
+    assert!(preemptions > 0, "load trace must trigger preemption");
+}

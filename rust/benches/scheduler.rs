@@ -40,6 +40,10 @@ struct StallRun {
 fn reference_stall_run(budget: usize, n_admissions: usize) -> StallRun {
     let mut cfg = EngineConfig::reference(&["tiny-ref"]);
     cfg.prefill_token_budget = budget;
+    // This ablation contrasts *fixed* budgets; the adaptive policy would
+    // shrink chunks whenever the interactive row is decoding and blur the
+    // whole-prompt-vs-chunked comparison.
+    cfg.adaptive_prefill = false;
     let mut engine = MLCEngine::new(&cfg).expect("reference engine");
 
     // Short prompt (6 tokens) so the interactive row's own prefill is one

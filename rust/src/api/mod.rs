@@ -36,6 +36,14 @@ impl ApiError {
         Self { status: 429, kind: "overloaded_error".into(), message: message.into() }
     }
 
+    /// Admission back-pressure: the target model's waiting queue is at
+    /// capacity, so `submit` rejects instead of queueing unboundedly.
+    /// The HTTP layer maps any 429 to a `Retry-After` header; clients
+    /// should back off and resubmit (possibly at a higher `priority`).
+    pub fn queue_full(message: impl Into<String>) -> Self {
+        Self { status: 429, kind: "queue_full".into(), message: message.into() }
+    }
+
     pub fn internal(message: impl Into<String>) -> Self {
         Self { status: 500, kind: "internal_error".into(), message: message.into() }
     }

@@ -28,6 +28,10 @@ pub struct ChatCompletionRequest {
     pub stop: Vec<String>,
     pub sampling: SamplingParams,
     pub response_format: ResponseFormat,
+    /// Scheduling class (WebLLM extension): higher values are admitted
+    /// first, receive prefill chunks first, and are the last preempted
+    /// under memory pressure. Ties break by arrival order. Default 0.
+    pub priority: i32,
 }
 
 impl ChatCompletionRequest {
@@ -40,7 +44,13 @@ impl ChatCompletionRequest {
             stop: Vec::new(),
             sampling: SamplingParams::default(),
             response_format: ResponseFormat::Text,
+            priority: 0,
         }
+    }
+
+    pub fn with_priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
     }
 
     pub fn message(mut self, role: Role, content: impl Into<String>) -> Self {
@@ -189,6 +199,14 @@ impl ChatCompletionRequest {
             }
         };
 
+        let priority = match v.get("priority") {
+            None | Some(Value::Null) => 0,
+            Some(x) => x
+                .as_i64()
+                .and_then(|n| i32::try_from(n).ok())
+                .ok_or_else(|| ApiError::invalid("'priority' must be an integer"))?,
+        };
+
         Ok(Self {
             model,
             messages,
@@ -197,6 +215,7 @@ impl ChatCompletionRequest {
             stop,
             sampling,
             response_format,
+            priority,
         })
     }
 
@@ -249,6 +268,9 @@ impl ChatCompletionRequest {
         }
         if !self.stop.is_empty() {
             v.set("stop", self.stop.clone());
+        }
+        if self.priority != 0 {
+            v.set("priority", self.priority as i64);
         }
         match &self.response_format {
             ResponseFormat::Text => {}

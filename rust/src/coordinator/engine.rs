@@ -8,16 +8,25 @@
 //!
 //! Scheduling policy (vLLM/Sarathi-style continuous batching under TVM's
 //! static-shape regime): chunked, prefix-aware prefill co-scheduled with
-//! decode. Each `step_model` runs **at most one positioned prefill chunk**
-//! (bounded by [`EngineConfig::prefill_token_budget`], sliced from the
-//! single `Prefilling` sequence) **and** the batched decode over all
-//! running sequences, rounded up to the nearest compiled shapes with
-//! garbage-page padding slots. Prompts longer than the largest compiled
-//! chunk are fed across steps; a prefix-cache hit starts the first chunk
-//! at the cache boundary instead of position 0 (the reused pages are
-//! read, not recomputed). The budget knob trades TTFT (big chunks finish
-//! prompts sooner) against inter-token latency (small chunks stall the
-//! decode batch less per step).
+//! decode, priority-ordered admission, and KV preemption under pool
+//! pressure. Each `step_model` resumes/admits whatever fits, in
+//! importance order (priority class, then arrival), then runs **at most
+//! one positioned prefill chunk** — bounded by
+//! [`EngineConfig::prefill_token_budget`], adaptive by default (the
+//! whole chunk menu when decode is idle, shrinking as rows pile up),
+//! given to the most important of up to
+//! [`EngineConfig::max_concurrent_prefills`] `Prefilling` sequences —
+//! **and** the batched decode over all running sequences, rounded up to
+//! the nearest compiled shapes with garbage-page padding slots. When the
+//! page pool runs dry, the least important KV-holding sequence is
+//! evicted and later recomputed (vLLM's recompute policy); its
+//! sampler/grammar/stream state survives eviction, so the token stream
+//! it eventually produces is unchanged. Prompts longer than the largest
+//! compiled chunk are fed across steps; a prefix-cache hit starts the
+//! first chunk at the cache boundary instead of position 0 (the reused
+//! pages are read, not recomputed). The budget knob trades TTFT (big
+//! chunks finish prompts sooner) against inter-token latency (small
+//! chunks stall the decode batch less per step).
 
 use crate::api::{
     ApiError, ChatChunk, ChatCompletionRequest, ChatCompletionResponse, Choice, FinishReason,
@@ -29,7 +38,7 @@ use crate::grammar::{
     TokenBitmask, VocabTrie,
 };
 use crate::json::Value;
-use crate::kvcache::KvCacheManager;
+use crate::kvcache::{AllocError, KvCacheManager};
 use crate::lru::LruMap;
 use crate::metrics::EngineStats;
 use crate::models::Manifest;
@@ -92,6 +101,22 @@ pub struct EngineConfig {
     /// one token) without model or sampler calls. On by default; turn
     /// off for the strict one-model-call-per-token baseline.
     pub enable_fast_forward: bool,
+    /// Concurrent `Prefilling` sequences per model — admissions whose
+    /// prompts are still being chunked. Each step still runs at most one
+    /// chunk per model; more slots mean new admissions overlap a long
+    /// prompt's chunking instead of queueing behind it. Clamped to ≥ 1.
+    pub max_concurrent_prefills: usize,
+    /// Sarathi-style adaptive chunk budget: scale
+    /// [`Self::prefill_token_budget`] by the live decode batch (see
+    /// `ModelConfig::adaptive_prefill_budget`) — spend the whole chunk
+    /// menu when no decode rows can stall, shrink chunks as the batch
+    /// grows. Off = the configured budget applies verbatim every step.
+    pub adaptive_prefill: bool,
+    /// Admission back-pressure: per-model cap on queued (not yet
+    /// admitted) requests. At the cap, `submit` fails fast with a 429
+    /// `queue_full` error instead of queueing unboundedly; the HTTP
+    /// layer adds a `Retry-After` header. Clamped to ≥ 1.
+    pub max_waiting_requests: usize,
 }
 
 impl EngineConfig {
@@ -107,6 +132,9 @@ impl EngineConfig {
             draft_model: None,
             spec_tokens: DEFAULT_SPEC_TOKENS,
             enable_fast_forward: true,
+            max_concurrent_prefills: DEFAULT_MAX_CONCURRENT_PREFILLS,
+            adaptive_prefill: true,
+            max_waiting_requests: DEFAULT_MAX_WAITING_REQUESTS,
         }
     }
 
@@ -150,6 +178,10 @@ struct RunningSeq {
     req_id: RequestId,
     seq_id: u64,
     model: String,
+    /// Scheduling class (from the request): orders admission and chunk
+    /// allocation, and — inverted — victim selection for preemption.
+    /// Ties break by arrival order (`req_id`).
+    priority: i32,
     processor: LogitsProcessor,
     matcher: Option<GrammarMatcher>,
     mask_cache: Option<Rc<RefCell<MaskCache>>>,
@@ -207,18 +239,49 @@ impl StepBuffers {
 
 /// A sequence in the `Prefilling` state: admitted (KV pages allocated,
 /// grammar compiled, processor seeded) but its prompt not yet fully
-/// computed. `step_model` feeds it one budget-sized positioned chunk per
-/// step until `next_pos` reaches the prompt end, then samples the first
-/// token from the final chunk's logits and promotes `seq` to the decode
-/// batch. At most one per model: admission order is preserved and the
-/// per-step prefill cost stays bounded by one chunk.
+/// computed. Each step, `step_model` feeds the most important prefilling
+/// sequence one budget-sized positioned chunk (round-robin within a
+/// priority class) until `next_pos` reaches `prefill_end`. A fresh
+/// admission then samples its first token from the final chunk's logits
+/// and joins the decode batch; a resumed preemption victim rejoins the
+/// batch directly — its next decode input was sampled before eviction.
+/// Up to [`EngineConfig::max_concurrent_prefills`] per model; the
+/// per-step prefill cost stays bounded by one chunk regardless.
 struct PrefillingSeq {
     seq: RunningSeq,
+    /// For a fresh admission: the prompt. For a resumed victim: its full
+    /// token history (prompt + generated) captured at preemption.
     prompt_ids: Vec<u32>,
-    /// Next absolute prompt position to compute. Starts at the
-    /// prefix-cache skip boundary
-    /// ([`crate::kvcache::Sequence::prefill_start`]), not 0.
+    /// Next absolute position to compute. Starts at the prefix-cache
+    /// skip boundary ([`crate::kvcache::Sequence::prefill_start`]), not 0.
     next_pos: usize,
+    /// One past the last position this prefill computes:
+    /// `prompt_ids.len()` for fresh admissions (the final chunk's logits
+    /// seed the first sampled token), `prompt_ids.len() - 1` for resumed
+    /// victims (the last token is the next decode call's input and
+    /// writes its own KV there).
+    prefill_end: usize,
+}
+
+/// A sequence evicted under page-pool pressure: its KV residency was
+/// freed (fully written full pages parked in the prefix cache), but its
+/// sampler, grammar, and stream state live on in `seq`. Resuming
+/// re-admits the token history and recomputes `[prefix-cache boundary,
+/// prefill_end)` through the ordinary chunked-prefill path; the
+/// `written` watermark machinery makes that recompute reproduce exactly
+/// the KV the sequence lost, so its token stream is unchanged (pinned by
+/// tests/test_preemption.rs).
+struct PreemptedSeq {
+    seq: RunningSeq,
+    /// Full token history (prompt + generated) at preemption.
+    tokens: Vec<u32>,
+    /// Pool-written positions at preemption — the most a resume can have
+    /// to recompute (`preempted_tokens_recomputed` accounting).
+    computed: usize,
+    /// Whether the victim had already sampled its next decode input
+    /// (evicted from the decode batch, or mid-resume). If not, it was
+    /// mid-prefill and the resume still samples its first token.
+    sampled: bool,
 }
 
 /// The speculative-decoding draft: a second, cheaper backend shadowing a
@@ -240,7 +303,9 @@ struct EngineModel {
     /// `decode_batch` over to the speculative path.
     draft: Option<DraftModel>,
     waiting: VecDeque<PendingReq>,
-    prefilling: Option<PrefillingSeq>,
+    prefilling: VecDeque<PrefillingSeq>,
+    /// Victims evicted under page-pool pressure, awaiting re-admission.
+    preempted: VecDeque<PreemptedSeq>,
     running: Vec<RunningSeq>,
     step: StepBuffers,
 }
@@ -276,6 +341,12 @@ pub const DEFAULT_PREFILL_TOKEN_BUDGET: usize = 2048;
 /// Default for [`EngineConfig::spec_tokens`].
 pub const DEFAULT_SPEC_TOKENS: usize = 4;
 
+/// Default for [`EngineConfig::max_concurrent_prefills`].
+pub const DEFAULT_MAX_CONCURRENT_PREFILLS: usize = 4;
+
+/// Default for [`EngineConfig::max_waiting_requests`].
+pub const DEFAULT_MAX_WAITING_REQUESTS: usize = 256;
+
 /// Longest forced-token run emitted per fast-forward cache entry;
 /// longer chains continue from the next state's entry.
 const MAX_FF_RUN: usize = 64;
@@ -304,6 +375,13 @@ pub struct MLCEngine {
     /// Chunked-prefill token budget (from the config; clamped to each
     /// model's compiled chunk menu at use).
     prefill_token_budget: usize,
+    /// Adaptive prefill-budget toggle (from the config).
+    adaptive_prefill: bool,
+    /// Concurrent `Prefilling` admissions per model (from the config,
+    /// min 1).
+    max_concurrent_prefills: usize,
+    /// Per-model waiting-queue cap (from the config, min 1).
+    max_waiting_requests: usize,
     /// Draft proposals per speculation round (from the config, min 1).
     spec_tokens: usize,
     /// Grammar fast-forward toggle (from the config).
@@ -359,7 +437,8 @@ impl MLCEngine {
                     kv,
                     draft,
                     waiting: VecDeque::new(),
-                    prefilling: None,
+                    prefilling: VecDeque::new(),
+                    preempted: VecDeque::new(),
                     running: Vec::new(),
                     step: StepBuffers::default(),
                 },
@@ -377,6 +456,9 @@ impl MLCEngine {
             grammar_caches: LruMap::new(MAX_COMPILED_GRAMMARS),
             mask_cache_capacity: cfg.mask_cache_capacity.max(1),
             prefill_token_budget: cfg.prefill_token_budget.max(1),
+            adaptive_prefill: cfg.adaptive_prefill,
+            max_concurrent_prefills: cfg.max_concurrent_prefills.max(1),
+            max_waiting_requests: cfg.max_waiting_requests.max(1),
             spec_tokens: cfg.spec_tokens.max(1),
             enable_fast_forward: cfg.enable_fast_forward,
             scratch: SampleScratch::new(),
@@ -512,6 +594,16 @@ impl MLCEngine {
         if req.messages.is_empty() {
             return Err(ApiError::invalid("messages must be non-empty"));
         }
+        // Back-pressure: bounded waiting queue, reject-fast over
+        // queue-forever. 429 + Retry-After at the HTTP layer.
+        if model.waiting.len() >= self.max_waiting_requests {
+            return Err(ApiError::queue_full(format!(
+                "model '{}' has {} queued requests (cap {}); retry later",
+                req.model,
+                model.waiting.len(),
+                self.max_waiting_requests
+            )));
+        }
 
         // Tokenize the chat template (a WASM-side CPU stage in the paper).
         let tokenizer = self.tokenizer.clone();
@@ -553,13 +645,17 @@ impl MLCEngine {
                 ));
                 return;
             }
-            if let Some(pf) = m.prefilling.as_mut() {
-                if pf.seq.req_id == req_id {
-                    // Mid-prefill: resolved (no further chunks run) on the
-                    // model's next scheduler step.
-                    pf.seq.finish = Some(FinishReason::Abort);
-                    return;
-                }
+            if let Some(pf) = m.prefilling.iter_mut().find(|p| p.seq.req_id == req_id) {
+                // Mid-prefill: resolved (no further chunks run) on the
+                // model's next scheduler step.
+                pf.seq.finish = Some(FinishReason::Abort);
+                return;
+            }
+            if let Some(p) = m.preempted.iter_mut().find(|p| p.seq.req_id == req_id) {
+                // Evicted: pages already freed; resolved instead of
+                // resumed on the model's next scheduler step.
+                p.seq.finish = Some(FinishReason::Abort);
+                return;
             }
             if let Some(seq) = m.running.iter_mut().find(|s| s.req_id == req_id) {
                 seq.finish = Some(FinishReason::Abort);
@@ -568,9 +664,40 @@ impl MLCEngine {
         }
     }
 
+    /// Forcibly evict a request's KV residency (a test/diagnostic hook —
+    /// the scheduler invokes the same machinery on its own under pool
+    /// pressure). The sequence keeps its sampler/grammar/stream state
+    /// and resumes via recompute on a later step, so its token stream is
+    /// unchanged. Returns false when the request holds no pages
+    /// (waiting, already evicted, finished, or unknown).
+    pub fn preempt(&mut self, req_id: RequestId) -> bool {
+        let names: Vec<String> = self.models.keys().cloned().collect();
+        for name in names {
+            let m = &self.models[&name];
+            if let Some(i) =
+                m.running.iter().position(|s| s.req_id == req_id && s.finish.is_none())
+            {
+                self.preempt_at(&name, true, i);
+                return true;
+            }
+            if let Some(i) = m
+                .prefilling
+                .iter()
+                .position(|p| p.seq.req_id == req_id && p.seq.finish.is_none())
+            {
+                self.preempt_at(&name, false, i);
+                return true;
+            }
+        }
+        false
+    }
+
     pub fn has_work(&self) -> bool {
         self.models.values().any(|m| {
-            !m.waiting.is_empty() || m.prefilling.is_some() || !m.running.is_empty()
+            !m.waiting.is_empty()
+                || !m.prefilling.is_empty()
+                || !m.preempted.is_empty()
+                || !m.running.is_empty()
         })
     }
 
@@ -618,31 +745,200 @@ impl MLCEngine {
     }
 
     fn step_model(&mut self, name: &str) -> Result<(), RuntimeError> {
-        // Admission into the single `Prefilling` slot: prefill-prioritized
-        // (TTFT over throughput, the interactive-first policy WebLLM wants
-        // in a UI) but no longer exclusive — the admitted prompt is fed in
-        // budget-sized chunks alongside the decode batch below.
-        let admit = {
-            let m = self.models.get_mut(name).unwrap();
-            if m.prefilling.is_some() {
-                None
-            } else {
-                match m.waiting.front() {
-                    Some(p)
-                        if m.kv.can_admit(p.prompt_ids.len())
-                            && m.running.len() < m.backend.config().max_decode_batch() =>
-                    {
-                        m.waiting.pop_front()
-                    }
-                    _ => None,
-                }
-            }
-        };
-        if let Some(pending) = admit {
-            self.begin_prefill(name, pending)?;
-        }
+        // Admission: prefill-prioritized (TTFT over throughput, the
+        // interactive-first policy WebLLM wants in a UI) but not
+        // exclusive — admitted prompts are fed in budget-sized chunks
+        // alongside the decode batch below.
+        self.admit_and_resume(name)?;
         self.prefill_chunk_step(name)?;
         self.decode_batch(name)
+    }
+
+    /// Importance order for scheduling and (inverted) victim selection:
+    /// higher priority wins, ties go to the older request. Total —
+    /// request ids are unique — so preemption can never cycle: `a` may
+    /// evict `b` only when `more_important(a, b)`, a strict order.
+    fn more_important(a: (i32, RequestId), b: (i32, RequestId)) -> bool {
+        a.0 > b.0 || (a.0 == b.0 && a.1 < b.1)
+    }
+
+    /// Evict one sequence: pull it out of the decode batch or the
+    /// prefill set, capture its token history, free its KV pages (fully
+    /// written full pages park in the prefix cache, so the resume often
+    /// restarts well past position 0), and queue it for re-admission.
+    /// Sampler, grammar, and stream state ride along untouched — only
+    /// KV residency is given up.
+    fn preempt_at(&mut self, name: &str, from_running: bool, idx: usize) {
+        let m = self.models.get_mut(name).unwrap();
+        let pre = if from_running {
+            let seq = m.running.remove(idx);
+            let s = m.kv.get(seq.seq_id).expect("running seq has kv");
+            PreemptedSeq {
+                tokens: s.tokens.clone(),
+                computed: s.written().min(s.len()),
+                sampled: true,
+                seq,
+            }
+        } else {
+            let pf = m.prefilling.remove(idx).expect("index in bounds");
+            let computed = m.kv.get(pf.seq.seq_id).map_or(0, |s| s.written());
+            PreemptedSeq {
+                computed,
+                // A resume evicted again keeps its sampled-ness through
+                // the shortened prefill_end.
+                sampled: pf.prefill_end < pf.prompt_ids.len(),
+                tokens: pf.prompt_ids,
+                seq: pf.seq,
+            }
+        };
+        m.kv.free(pre.seq.seq_id);
+        if let Some(d) = m.draft.as_mut() {
+            d.kv.free(pre.seq.seq_id);
+        }
+        m.preempted.push_back(pre);
+        self.stats.preemptions += 1;
+    }
+
+    /// The least important KV-holding sequence (decode batch + prefill
+    /// set): the preemption victim. `beneficiary` restricts the pick to
+    /// strictly less important sequences — an admission may only evict
+    /// what it outranks; `None` (decode headroom) takes the global
+    /// minimum. Returns `(from_running, index)`.
+    fn pick_victim(
+        &self,
+        name: &str,
+        beneficiary: Option<(i32, RequestId)>,
+    ) -> Option<(bool, usize)> {
+        let m = &self.models[name];
+        let mut worst: Option<(bool, usize, (i32, RequestId))> = None;
+        for (i, s) in m.running.iter().enumerate() {
+            let key = (s.priority, s.req_id);
+            if worst.map_or(true, |(_, _, w)| Self::more_important(w, key)) {
+                worst = Some((true, i, key));
+            }
+        }
+        for (i, p) in m.prefilling.iter().enumerate() {
+            let key = (p.seq.priority, p.seq.req_id);
+            if worst.map_or(true, |(_, _, w)| Self::more_important(w, key)) {
+                worst = Some((false, i, key));
+            }
+        }
+        let (from_running, idx, key) = worst?;
+        match beneficiary {
+            Some(b) if !Self::more_important(b, key) => None,
+            _ => Some((from_running, idx)),
+        }
+    }
+
+    /// Resume evicted victims and admit waiting requests, both in
+    /// importance order, until the prefill slots, the decode batch, or
+    /// the page pool say stop. A candidate that does not fit first tries
+    /// to evict strictly-less-important victims (the priority-inversion
+    /// guarantee: a high-priority submit waits at most one step behind
+    /// low-priority KV holders); if even that fails, admission stops —
+    /// head-of-line, so a large important prompt is never starved by
+    /// small unimportant ones slipping past it.
+    fn admit_and_resume(&mut self, name: &str) -> Result<(), RuntimeError> {
+        // Aborted while evicted: pages are already free — just resolve.
+        loop {
+            let m = self.models.get_mut(name).unwrap();
+            match m.preempted.iter().position(|p| p.seq.finish.is_some()) {
+                Some(i) => {
+                    let p = m.preempted.remove(i).expect("index in bounds");
+                    Self::finalize(&mut self.events, &mut self.stats, m, p.seq);
+                }
+                None => break,
+            }
+        }
+        loop {
+            let m = &self.models[name];
+            if m.prefilling.len() >= self.max_concurrent_prefills
+                || m.running.len() + m.prefilling.len() >= m.backend.config().max_decode_batch()
+            {
+                return Ok(());
+            }
+            let best_resume = {
+                let mut best: Option<(usize, (i32, RequestId))> = None;
+                for (i, p) in m.preempted.iter().enumerate() {
+                    let key = (p.seq.priority, p.seq.req_id);
+                    if best.map_or(true, |(_, b)| Self::more_important(key, b)) {
+                        best = Some((i, key));
+                    }
+                }
+                best
+            };
+            let best_admit = {
+                let mut best: Option<(usize, (i32, RequestId))> = None;
+                for (i, p) in m.waiting.iter().enumerate() {
+                    let key = (p.req.priority, p.req_id);
+                    if best.map_or(true, |(_, b)| Self::more_important(key, b)) {
+                        best = Some((i, key));
+                    }
+                }
+                best
+            };
+            // Joint importance order across both queues (ids are unique,
+            // so there are no ties to break).
+            let (is_resume, idx, key, need) = match (best_resume, best_admit) {
+                (None, None) => return Ok(()),
+                (Some((i, k)), None) => (true, i, k, m.preempted[i].tokens.len()),
+                (None, Some((i, k))) => (false, i, k, m.waiting[i].prompt_ids.len()),
+                (Some((ri, rk)), Some((ai, ak))) => {
+                    if Self::more_important(ak, rk) {
+                        (false, ai, ak, m.waiting[ai].prompt_ids.len())
+                    } else {
+                        (true, ri, rk, m.preempted[ri].tokens.len())
+                    }
+                }
+            };
+            // Make room: evict what the candidate outranks until it fits.
+            while !self.models[name].kv.can_admit(need) {
+                match self.pick_victim(name, Some(key)) {
+                    Some((fr, vi)) => self.preempt_at(name, fr, vi),
+                    None => return Ok(()),
+                }
+            }
+            if is_resume {
+                self.resume_preempted(name, idx)?;
+            } else {
+                let m = self.models.get_mut(name).unwrap();
+                let pending = m.waiting.remove(idx).expect("index in bounds");
+                self.begin_prefill(name, pending)?;
+            }
+        }
+    }
+
+    /// Re-admit an evicted sequence: allocate fresh KV residency over its
+    /// token history (prefix-cached pages — often its own, parked at
+    /// eviction — shortcut the restart) and route it back through the
+    /// prefill set to recompute the lost positions. A victim whose
+    /// surviving prefix already covers everything rejoins the decode
+    /// batch immediately.
+    fn resume_preempted(&mut self, name: &str, idx: usize) -> Result<(), RuntimeError> {
+        let m = self.models.get_mut(name).unwrap();
+        let p = m.preempted.remove(idx).expect("index in bounds");
+        let start = m
+            .kv
+            .admit(p.seq.seq_id, &p.tokens)
+            .map_err(|e| RuntimeError::Shape(format!("resume raced admission gate: {e}")))?
+            .prefill_start();
+        let prefill_end = if p.sampled { p.tokens.len() - 1 } else { p.tokens.len() };
+        self.stats.preempted_tokens_recomputed +=
+            p.computed.min(prefill_end).saturating_sub(start) as u64;
+        if start >= prefill_end {
+            // Every lost position survived in the prefix cache. Only
+            // possible for sampled victims — a fresh prefill always has
+            // at least the final prompt position left to compute.
+            m.running.push(p.seq);
+            return Ok(());
+        }
+        m.prefilling.push_back(PrefillingSeq {
+            seq: p.seq,
+            prompt_ids: p.tokens,
+            next_pos: start,
+            prefill_end,
+        });
+        Ok(())
     }
 
     /// Admit a pending request into the `Prefilling` state: allocate KV
@@ -692,6 +988,7 @@ impl MLCEngine {
             req_id: p.req_id,
             seq_id,
             model: name.to_string(),
+            priority: p.req.priority,
             processor,
             matcher,
             mask_cache,
@@ -709,40 +1006,67 @@ impl MLCEngine {
             t_prefilled: None,
             finish: None,
         };
-        self.models.get_mut(name).unwrap().prefilling =
-            Some(PrefillingSeq { seq, prompt_ids: p.prompt_ids, next_pos: start });
+        let prefill_end = p.prompt_ids.len();
+        self.models.get_mut(name).unwrap().prefilling.push_back(PrefillingSeq {
+            seq,
+            prompt_ids: p.prompt_ids,
+            next_pos: start,
+            prefill_end,
+        });
         Ok(())
     }
 
-    /// Run at most one positioned prefill chunk for the model's
-    /// `Prefilling` sequence. On the final chunk — whose logits are by
-    /// construction the whole prompt's last-token logits — sample the
-    /// first generated token and promote the sequence to the decode
-    /// batch.
+    /// Run at most one positioned prefill chunk for the model's most
+    /// important `Prefilling` sequence (round-robin within a priority
+    /// class: the fed sequence rotates behind its peers). On a fresh
+    /// admission's final chunk — whose logits are by construction the
+    /// whole prompt's last-token logits — sample the first generated
+    /// token and promote the sequence to the decode batch; a resumed
+    /// preemption victim rejoins the batch directly once its lost
+    /// positions are recomputed.
     fn prefill_chunk_step(&mut self, name: &str) -> Result<(), RuntimeError> {
         // Aborted mid-prefill: resolve without running further chunks.
-        let aborted = {
+        let mut resolved = false;
+        loop {
             let m = self.models.get_mut(name).unwrap();
-            match &m.prefilling {
-                Some(pf) if pf.seq.finish.is_some() => m.prefilling.take(),
-                _ => None,
+            match m.prefilling.iter().position(|pf| pf.seq.finish.is_some()) {
+                Some(i) => {
+                    let pf = m.prefilling.remove(i).expect("index in bounds");
+                    Self::finalize(&mut self.events, &mut self.stats, m, pf.seq);
+                    resolved = true;
+                }
+                None => break,
             }
-        };
-        if let Some(pf) = aborted {
-            let m = self.models.get_mut(name).unwrap();
-            Self::finalize(&mut self.events, &mut self.stats, m, pf.seq);
+        }
+        if resolved {
             return Ok(());
         }
 
-        let (done, n, chunk, t_chunk, stalled, logits) = {
+        let (idx, done, n, chunk, t_chunk, stalled, logits) = {
             let m = self.models.get_mut(name).unwrap();
-            let Some(pf) = m.prefilling.as_mut() else {
+            if m.prefilling.is_empty() {
                 return Ok(());
+            }
+            // Chunk allocation: the highest priority class present owns
+            // the step; within it, the front-most (least recently fed).
+            let top = m.prefilling.iter().map(|p| p.seq.priority).max().expect("non-empty");
+            let idx = m
+                .prefilling
+                .iter()
+                .position(|p| p.seq.priority == top)
+                .expect("top came from this list");
+            let budget = if self.adaptive_prefill {
+                m.backend
+                    .config()
+                    .adaptive_prefill_budget(self.prefill_token_budget, m.running.len())
+            } else {
+                self.prefill_token_budget
             };
             let mc = m.backend.config();
-            let remaining = pf.prompt_ids.len() - pf.next_pos;
+            let pf = &mut m.prefilling[idx];
+            let remaining = pf.prefill_end - pf.next_pos;
             let (n, chunk) = mc
-                .next_prefill_tokens(remaining, self.prefill_token_budget)
+                .next_prefill_tokens(remaining, budget)
                 .expect("prefilling sequence always has remaining tokens");
             let mut ids = vec![0i32; chunk];
             for (i, &t) in pf.prompt_ids[pf.next_pos..pf.next_pos + n].iter().enumerate() {
@@ -756,8 +1080,8 @@ impl MLCEngine {
             // The chunk landed: its pages are now real KV, eligible for
             // prefix-cache registration when the sequence is freed.
             m.kv.note_written(pf.seq.seq_id, pf.next_pos);
-            let done = pf.next_pos == pf.prompt_ids.len();
-            (done, n, chunk, t_chunk, !m.running.is_empty(), out.logits)
+            let done = pf.next_pos == pf.prefill_end;
+            (idx, done, n, chunk, t_chunk, !m.running.is_empty(), out.logits)
         };
         self.stats.prefill_tokens += n as u64;
         self.stats.prefill_padded_tokens += (chunk - n) as u64;
@@ -770,17 +1094,30 @@ impl MLCEngine {
             self.stats.decode_stall_chunks += 1;
         }
         if !done {
+            // Round-robin within the priority class: rotate the fed
+            // sequence behind its peers.
+            let m = self.models.get_mut(name).unwrap();
+            let pf = m.prefilling.remove(idx).expect("index in bounds");
+            m.prefilling.push_back(pf);
             return Ok(());
         }
 
-        // Sample the first generated token from the final chunk's logits.
         let mut pf = self
             .models
             .get_mut(name)
             .unwrap()
             .prefilling
-            .take()
-            .expect("checked above");
+            .remove(idx)
+            .expect("index in bounds");
+        if pf.prefill_end < pf.prompt_ids.len() {
+            // Resumed victim: the KV it lost is recomputed, and its next
+            // decode input was sampled before eviction — rejoin the
+            // batch without sampling.
+            self.models.get_mut(name).unwrap().running.push(pf.seq);
+            return Ok(());
+        }
+
+        // Sample the first generated token from the final chunk's logits.
         let mut logits = logits;
         self.consume_logits(&mut pf.seq, &mut logits);
         pf.seq.t_prefilled = Some(Instant::now());
@@ -804,7 +1141,46 @@ impl MLCEngine {
         }
     }
 
+    /// Make sure this step's decode appends can be served before the
+    /// batch is built: when the page pool cannot cover every running
+    /// row's next token, evict the least important KV-holding sequences
+    /// (vLLM's recompute policy) until the rest fit. The most important
+    /// sequence is never chosen while others remain, so it always makes
+    /// progress and the engine cannot livelock; a lone sequence that
+    /// still cannot grow is genuinely out of room and finishes with
+    /// `Length` via the append failure it is about to hit.
+    fn ensure_decode_headroom(&mut self, name: &str) {
+        loop {
+            let m = &self.models[name];
+            if m.running.is_empty() {
+                return;
+            }
+            let ps = m.backend.config().page_size;
+            let need = m
+                .running
+                .iter()
+                .filter(|seq| seq.finish.is_none())
+                .filter(|seq| {
+                    m.kv
+                        .get(seq.seq_id)
+                        .map_or(false, |s| s.len() / ps >= s.block_table.len())
+                })
+                .count();
+            if need <= m.kv.available_pages() {
+                return;
+            }
+            if m.running.len() + m.prefilling.len() <= 1 {
+                return;
+            }
+            let Some((fr, idx)) = self.pick_victim(name, None) else {
+                return;
+            };
+            self.preempt_at(name, fr, idx);
+        }
+    }
+
     fn decode_batch(&mut self, name: &str) -> Result<(), RuntimeError> {
+        self.ensure_decode_headroom(name);
         if self.models[name].draft.is_some() {
             return self.spec_decode_batch(name);
         }
@@ -1371,13 +1747,28 @@ impl MLCEngine {
             }
         }
 
-        // Bookkeeping in the KV manager; allocation failure = out of
-        // context (finish with Length, vLLM-style).
-        {
+        // Bookkeeping in the KV manager. Hitting the per-sequence cap is
+        // out of context (finish with Length, vLLM-style); pool
+        // exhaustion is recoverable — evict something this sequence
+        // outranks and retry the append.
+        loop {
             let m = self.models.get_mut(&seq.model).unwrap();
-            if m.kv.append_token(seq.seq_id, token).is_err() {
-                seq.finish = Some(FinishReason::Length);
-                return;
+            match m.kv.append_token(seq.seq_id, token) {
+                Ok(()) => break,
+                Err(AllocError::SeqLimit) => {
+                    seq.finish = Some(FinishReason::Length);
+                    return;
+                }
+                Err(AllocError::OutOfPages) => {
+                    let model = seq.model.clone();
+                    match self.pick_victim(&model, Some((seq.priority, seq.req_id))) {
+                        Some((fr, idx)) => self.preempt_at(&model, fr, idx),
+                        None => {
+                            seq.finish = Some(FinishReason::Length);
+                            return;
+                        }
+                    }
+                }
             }
         }
         seq.completion_tokens += 1;
@@ -1613,12 +2004,27 @@ impl MLCEngine {
         let mut models = Value::object();
         for (name, m) in &self.models {
             let (hits, misses) = m.kv.prefix_stats();
+            // Queue depth per priority class: everything waiting for KV
+            // (fresh admissions plus evicted residents awaiting resume).
+            let mut by_prio = std::collections::BTreeMap::<i32, i64>::new();
+            for p in &m.waiting {
+                *by_prio.entry(p.req.priority).or_insert(0) += 1;
+            }
+            for p in &m.preempted {
+                *by_prio.entry(p.seq.priority).or_insert(0) += 1;
+            }
+            let mut queued = Value::object();
+            for (prio, n) in by_prio {
+                queued.set(prio.to_string(), n);
+            }
             models.set(
                 name.clone(),
                 crate::obj! {
                     "waiting" => m.waiting.len(),
-                    "prefilling" => m.prefilling.is_some() as i64,
+                    "prefilling" => m.prefilling.len(),
+                    "preempted" => m.preempted.len(),
                     "running" => m.running.len(),
+                    "queued_by_priority" => queued,
                     "available_pages" => m.kv.available_pages(),
                     "prefix_cache_hits" => hits as i64,
                     "prefix_cache_misses" => misses as i64,

@@ -69,23 +69,34 @@ pub struct HttpResponse {
     pub status: u16,
     pub content_type: &'static str,
     pub body: String,
+    /// `Retry-After` seconds; set automatically on 429 so back-pressured
+    /// clients know to pause before resubmitting.
+    pub retry_after: Option<u64>,
 }
 
 impl HttpResponse {
     pub fn json(status: u16, v: &Value) -> Self {
-        Self { status, content_type: "application/json", body: to_string(v) }
+        Self {
+            status,
+            content_type: "application/json",
+            body: to_string(v),
+            retry_after: (status == 429).then_some(1),
+        }
     }
 
     pub fn write_to(&self, stream: &mut impl Write) -> std::io::Result<()> {
         write!(
             stream,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
             self.status,
             status_text(self.status),
             self.content_type,
             self.body.len(),
-            self.body
-        )
+        )?;
+        if let Some(secs) = self.retry_after {
+            write!(stream, "Retry-After: {secs}\r\n")?;
+        }
+        write!(stream, "\r\n{}", self.body)
     }
 }
 
@@ -214,21 +225,41 @@ fn handle_connection(
             tx.send((request, reply_tx)).map_err(|e| e.to_string())?;
 
             if stream_mode {
-                let mut sse = super::sse::SseWriter::start(&mut out).map_err(|e| e.to_string())?;
-                loop {
-                    match reply_rx.recv_timeout(Duration::from_secs(600)) {
-                        Ok(Event::Chunk(v)) => {
-                            sse.send_json(&v).map_err(|e| e.to_string())?;
+                // The SSE preamble is deferred until the engine produces a
+                // first event: a submit-time rejection (429 queue_full,
+                // 404, ...) goes out as a plain status + Retry-After
+                // instead of burying the error inside a 200 event stream.
+                match reply_rx.recv_timeout(Duration::from_secs(600)) {
+                    Ok(Event::Error(e)) => {
+                        let _ = HttpResponse::json(e.status, &e.to_json()).write_to(&mut out);
+                    }
+                    Err(_) => {
+                        let e = ApiError::internal("engine timeout");
+                        let _ = HttpResponse::json(e.status, &e.to_json()).write_to(&mut out);
+                    }
+                    Ok(first) => {
+                        let mut sse =
+                            super::sse::SseWriter::start(&mut out).map_err(|e| e.to_string())?;
+                        let mut ev = first;
+                        loop {
+                            match ev {
+                                Event::Chunk(v) => {
+                                    sse.send_json(&v).map_err(|e| e.to_string())?;
+                                }
+                                Event::Done(_) => {
+                                    sse.done().map_err(|e| e.to_string())?;
+                                    break;
+                                }
+                                Event::Error(e) => {
+                                    sse.send_json(&e.to_json()).map_err(|er| er.to_string())?;
+                                    break;
+                                }
+                            }
+                            ev = match reply_rx.recv_timeout(Duration::from_secs(600)) {
+                                Ok(ev) => ev,
+                                Err(_) => break,
+                            };
                         }
-                        Ok(Event::Done(_)) => {
-                            sse.done().map_err(|e| e.to_string())?;
-                            break;
-                        }
-                        Ok(Event::Error(e)) => {
-                            sse.send_json(&e.to_json()).map_err(|er| er.to_string())?;
-                            break;
-                        }
-                        Err(_) => break,
                     }
                 }
             } else {

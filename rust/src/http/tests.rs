@@ -16,6 +16,25 @@ fn response_serialization() {
 }
 
 #[test]
+fn back_pressure_responses_carry_retry_after() {
+    let e = crate::api::ApiError::queue_full("waiting queue at capacity");
+    let r = HttpResponse::json(e.status, &e.to_json());
+    let mut buf = Vec::new();
+    r.write_to(&mut buf).unwrap();
+    let s = String::from_utf8(buf).unwrap();
+    assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{s}");
+    assert!(s.contains("Retry-After: 1\r\n"), "{s}");
+    // The header block still terminates correctly before the body.
+    assert!(s.contains("\r\n\r\n{"), "{s}");
+
+    // Non-429 responses must not grow the header.
+    let ok = HttpResponse::json(200, &parse(r#"{"ok":true}"#).unwrap());
+    let mut buf = Vec::new();
+    ok.write_to(&mut buf).unwrap();
+    assert!(!String::from_utf8(buf).unwrap().contains("Retry-After"));
+}
+
+#[test]
 fn status_texts() {
     assert_eq!(status_text(200), "OK");
     assert_eq!(status_text(404), "Not Found");

@@ -4,14 +4,20 @@ use std::fmt;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum AllocError {
-    /// No free or evictable page available.
+    /// No free or evictable page available. The *pool* is exhausted —
+    /// preempting a victim sequence can recover from this.
     OutOfPages,
+    /// The request exceeds `max_pages_per_seq` (the per-sequence context
+    /// cap). No amount of eviction helps; the scheduler must never
+    /// preempt on this variant.
+    SeqLimit,
 }
 
 impl fmt::Display for AllocError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             AllocError::OutOfPages => write!(f, "KV cache out of pages"),
+            AllocError::SeqLimit => write!(f, "sequence exceeds max pages per sequence"),
         }
     }
 }

@@ -125,7 +125,7 @@ impl KvCacheManager {
         let ps = self.alloc.page_size();
         let n_pages = self.pages_needed(tokens.len());
         if n_pages > self.max_pages_per_seq {
-            return Err(AllocError::OutOfPages);
+            return Err(AllocError::SeqLimit);
         }
 
         let mut block_table = Vec::with_capacity(n_pages);
@@ -227,7 +227,7 @@ impl KvCacheManager {
         let pos = seq.tokens.len();
         let page_idx = pos / ps;
         if page_idx >= self.max_pages_per_seq {
-            return Err(AllocError::OutOfPages);
+            return Err(AllocError::SeqLimit);
         }
         if page_idx >= seq.block_table.len() {
             let page = self.alloc.alloc()?;
@@ -248,7 +248,7 @@ impl KvCacheManager {
         let ps = self.alloc.page_size();
         let need = (upto + ps - 1) / ps;
         if need > self.max_pages_per_seq {
-            return Err(AllocError::OutOfPages);
+            return Err(AllocError::SeqLimit);
         }
         let mut result = Ok(());
         let seq = self.seqs.get_mut(&id).expect("unknown sequence");

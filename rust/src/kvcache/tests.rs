@@ -176,7 +176,8 @@ fn append_token_respects_max_pages() {
     let mut m = KvCacheManager::new(64, 4, 2, false);
     m.admit(1, &[1, 2, 3, 4, 5, 6, 7]).unwrap(); // 7 tokens: 2 pages
     m.append_token(1, 8).unwrap(); // pos 7 fills page 2
-    assert_eq!(m.append_token(1, 9), Err(AllocError::OutOfPages));
+    // Per-sequence cap, not pool exhaustion: preemption must not trigger.
+    assert_eq!(m.append_token(1, 9), Err(AllocError::SeqLimit));
 }
 
 #[test]
@@ -258,7 +259,7 @@ fn reserve_grows_table_without_tokens() {
     assert_eq!(m.get(1).unwrap().block_table.len(), 3);
     m.reserve(1, 2).unwrap(); // already covered: no-op
     assert_eq!(m.get(1).unwrap().block_table.len(), 3);
-    assert_eq!(m.reserve(1, 17), Err(AllocError::OutOfPages)); // > max_pages
+    assert_eq!(m.reserve(1, 17), Err(AllocError::SeqLimit)); // > max_pages
     m.check_invariants();
     m.free(1);
     m.check_invariants();
@@ -275,6 +276,45 @@ fn reserve_failure_keeps_partial_pages_reclaimable() {
     m.free(1);
     m.check_invariants();
     assert_eq!(m.available_pages(), 3, "partial reservation fully reclaimed");
+}
+
+#[test]
+fn preempt_free_releases_pages_and_preserves_written_prefix_reuse() {
+    // Preemption shape: a sequence mid-decode is freed to reclaim its
+    // pages, then re-admitted later with the same token vector. Its
+    // fully-written full pages must come back as prefix hits (recompute
+    // only the uncached suffix), and the freed pages must be genuinely
+    // re-allocatable by another sequence in between.
+    let mut m = KvCacheManager::new(8, 4, 8, true); // 7 usable pages
+    let tokens = [1u32, 2, 3, 4, 5, 6, 7, 8, 9, 10]; // 2 full pages + 2
+    m.admit(1, &tokens).unwrap(); // 3 pages
+    m.note_written(1, 10);
+    let before = m.available_pages();
+    m.free(1); // preempt: pages park evictable, full pages registered
+    assert_eq!(m.available_pages(), before + 3, "victim pages reclaimable");
+
+    // Another sequence can consume the whole pool (evicting the parked
+    // pages if needed)...
+    m.admit(2, &[9u32; 26]).unwrap(); // 7 pages: evicts victim pages
+    assert_eq!(m.available_pages(), 0);
+    m.free(2);
+
+    // ...and resume still works, re-admitting from whatever survived
+    // (here: nothing — the interloper evicted everything).
+    let seq = m.admit(1, &tokens).unwrap();
+    assert!(seq.cached_tokens <= 8);
+    assert_eq!(seq.written(), seq.cached_tokens);
+    m.check_invariants();
+    m.free(1);
+
+    // Without an interloper, resume gets full-page prefix hits.
+    m.admit(3, &tokens).unwrap();
+    m.note_written(3, 10);
+    m.free(3);
+    let seq = m.admit(4, &tokens).unwrap();
+    assert_eq!(seq.cached_tokens, 8, "written full pages reused on resume");
+    assert_eq!(seq.prefill_start(), 8);
+    m.check_invariants();
 }
 
 #[test]

@@ -65,7 +65,16 @@ FLAGS:
                     batched call (same tokenizer/vocab required)
   --spec-tokens     draft proposals per speculation round (default 4)
   --no-fast-forward disable grammar fast-forward (emit grammar-forced
-                    token runs without model calls; on by default)",
+                    token runs without model calls; on by default)
+  --priority        scheduling class for chat/generate requests (integer,
+                    default 0; higher = admitted first, preempted last)
+  --max-concurrent-prefills
+                    prompts prefilling at once per model (default 4)
+  --max-waiting     waiting-queue cap per model before submit returns 429
+                    (default 256)
+  --no-adaptive-prefill
+                    fixed per-step prefill budget instead of shrinking it
+                    as the decode batch grows",
         webllm::version()
     );
 }
@@ -128,7 +137,26 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig, String
     if flags.contains_key("no-fast-forward") {
         cfg.enable_fast_forward = false;
     }
+    if let Some(n) = flags.get("max-concurrent-prefills") {
+        cfg.max_concurrent_prefills = n
+            .parse()
+            .map_err(|_| format!("--max-concurrent-prefills: '{n}' is not a count"))?;
+    }
+    if let Some(n) = flags.get("max-waiting") {
+        cfg.max_waiting_requests =
+            n.parse().map_err(|_| format!("--max-waiting: '{n}' is not a count"))?;
+    }
+    if flags.contains_key("no-adaptive-prefill") {
+        cfg.adaptive_prefill = false;
+    }
     Ok(cfg)
+}
+
+fn priority_flag(flags: &HashMap<String, String>) -> Result<i32, String> {
+    match flags.get("priority") {
+        None => Ok(0),
+        Some(p) => p.parse().map_err(|_| format!("--priority: '{p}' is not an integer")),
+    }
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
@@ -172,6 +200,7 @@ fn cmd_chat(flags: &HashMap<String, String>) -> Result<(), String> {
         }
         req.max_tokens = max_tokens;
         req.sampling.temperature = temperature;
+        req.priority = priority_flag(flags)?;
         let resp = fe
             .chat_completion_stream(req, |c| {
                 print!("{}", c.delta);
@@ -196,6 +225,7 @@ fn cmd_generate(flags: &HashMap<String, String>) -> Result<(), String> {
     let mut req = ChatCompletionRequest::new(&model).user(prompt);
     req.max_tokens = flags.get("max-tokens").and_then(|v| v.parse().ok()).unwrap_or(64);
     req.sampling.seed = flags.get("seed").and_then(|v| v.parse().ok());
+    req.priority = priority_flag(flags)?;
     if flags.contains_key("json") {
         req.response_format = ResponseFormat::JsonObject;
     }

@@ -196,6 +196,13 @@ pub struct EngineStats {
     pub draft_accepted: u64,
     /// Speculative verify calls (draft-propose + target-verify rounds).
     pub spec_steps: u64,
+    /// Sequences whose KV pages were evicted under memory pressure (they
+    /// re-enter the prefill path and recompute on resume).
+    pub preemptions: u64,
+    /// Tokens recomputed through `prefill_chunk` because a preempted
+    /// sequence resumed past its surviving prefix-cache boundary — the
+    /// price paid for recompute-on-resume (spill/restore would zero it).
+    pub preempted_tokens_recomputed: u64,
     /// Time from request admission to first streamed token.
     pub ttft: Histogram,
     /// Inter-token latency.
@@ -286,6 +293,8 @@ impl EngineStats {
             "decode_live_rows" => self.decode_live_rows as i64,
             "decode_padded_rows" => self.decode_padded_rows as i64,
             "decode_padding_ratio" => self.decode_padding_ratio(),
+            "preemptions" => self.preemptions as i64,
+            "preempted_tokens_recomputed" => self.preempted_tokens_recomputed as i64,
             "e2e_requests" => self.e2e.len() as i64,
             "e2e_mean_s" => self.e2e.mean(),
             "speculative" => crate::obj! {
@@ -335,6 +344,8 @@ impl EngineStats {
         self.draft_proposed += other.draft_proposed;
         self.draft_accepted += other.draft_accepted;
         self.spec_steps += other.spec_steps;
+        self.preemptions += other.preemptions;
+        self.preempted_tokens_recomputed += other.preempted_tokens_recomputed;
         for &s in &other.ttft.samples {
             self.ttft.push(s);
         }
@@ -453,6 +464,27 @@ mod tests {
         assert_eq!(s.prefill_cached_tokens_skipped, 32);
         assert_eq!(s.decode_stall_chunks, 4);
         assert!((s.decode_stall_s - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn engine_stats_preemption_counters_and_json() {
+        let mut s = EngineStats::new();
+        s.preemptions = 3;
+        s.preempted_tokens_recomputed = 120;
+
+        let v = s.stats_json();
+        assert_eq!(v.get("preemptions").and_then(|x| x.as_i64()), Some(3));
+        assert_eq!(
+            v.get("preempted_tokens_recomputed").and_then(|x| x.as_i64()),
+            Some(120)
+        );
+
+        let mut other = EngineStats::new();
+        other.preemptions = 1;
+        other.preempted_tokens_recomputed = 16;
+        s.merge(&other);
+        assert_eq!(s.preemptions, 4);
+        assert_eq!(s.preempted_tokens_recomputed, 136);
     }
 
     #[test]

@@ -117,4 +117,24 @@ impl ModelConfig {
         let chunk = self.pick_chunk(n).expect("n <= max_prefill_chunk");
         Some((n, chunk))
     }
+
+    /// Sarathi-style adaptive prefill budget: scale the configured
+    /// `budget` by the current decode load before it is clamped to the
+    /// compiled menu by [`Self::next_prefill_tokens`].
+    ///
+    /// With no decode rows there is nobody to stall — spend the whole
+    /// menu (`usize::MAX`; the clamp caps it at the largest compiled
+    /// chunk) and finish the prompt in as few steps as possible (TTFT).
+    /// With `decode_rows >= 1` the budget shrinks as rows pile up —
+    /// halved per doubling of the batch (`budget / next_power_of_two`)
+    /// — bounding the per-step stall every running sequence pays (ITL).
+    /// The menu fallback in `next_prefill_tokens` keeps any result
+    /// executable, so the smallest compiled chunk is the floor.
+    pub fn adaptive_prefill_budget(&self, budget: usize, decode_rows: usize) -> usize {
+        if decode_rows == 0 {
+            usize::MAX
+        } else {
+            budget / decode_rows.next_power_of_two()
+        }
+    }
 }

@@ -98,6 +98,30 @@ fn chunked_prefill_step_policy() {
 }
 
 #[test]
+fn adaptive_prefill_budget_policy() {
+    let v = parse(r#"{
+        "name":"x","vocab_size":4096,"d_model":128,"n_layers":2,"n_heads":4,
+        "n_kv_heads":2,"head_dim":32,"ffn_dim":256,"rope_theta":10000.0,
+        "norm_eps":1e-5,"page_size":8,"num_pages":32,"max_seq_len":64,
+        "prefill_chunks":[16,32],"decode_batches":[1,2,4],"param_count":1}"#).unwrap();
+    let c = ModelConfig::from_json(&v).unwrap();
+
+    // Idle: nobody to stall, spend the whole menu.
+    assert_eq!(c.adaptive_prefill_budget(32, 0), usize::MAX);
+    assert_eq!(c.next_prefill_tokens(100, c.adaptive_prefill_budget(32, 0)), Some((32, 32)));
+    // One decode row: the configured budget applies as-is.
+    assert_eq!(c.adaptive_prefill_budget(32, 1), 32);
+    // Budget halves per doubling of the decode batch...
+    assert_eq!(c.adaptive_prefill_budget(32, 2), 16);
+    assert_eq!(c.adaptive_prefill_budget(32, 3), 8);
+    assert_eq!(c.adaptive_prefill_budget(32, 4), 8);
+    // ...and the menu fallback keeps the result executable (floor =
+    // smallest compiled chunk), never zero.
+    assert_eq!(c.next_prefill_tokens(100, c.adaptive_prefill_budget(32, 4)), Some((16, 16)));
+    assert_eq!(c.next_prefill_tokens(100, c.adaptive_prefill_budget(1, 4)), Some((16, 16)));
+}
+
+#[test]
 fn config_missing_field_errors() {
     let v = parse(r#"{"name":"x"}"#).unwrap();
     assert!(ModelConfig::from_json(&v).is_err());

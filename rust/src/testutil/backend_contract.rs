@@ -100,6 +100,7 @@ impl BackendConformance {
         self.chunked_prefill_matches_whole_prompt();
         self.chunked_prefill_reads_resident_prefix_pages();
         self.verify_chunk_matches_sequential_decode();
+        self.recompute_after_reset_matches_uninterrupted_chain();
     }
 
     /// Menus are non-empty, ascending, and sized within the model config.
@@ -322,6 +323,47 @@ impl BackendConformance {
             .expect("suffix chunk over reused page")
             .logits;
         self.assert_close(&want, &got, "prefix-skip over a reused page");
+    }
+
+    /// The preemption-recompute contract: after the KV pool is wiped
+    /// (`reset_cache`, the backend-level analog of evicting a sequence's
+    /// pages), replaying the full token history — prompt plus
+    /// already-emitted tokens — through positioned `prefill_chunk` calls
+    /// onto *different* pages rebuilds a state from which decode
+    /// continues exactly as the uninterrupted chain would have.
+    pub fn recompute_after_reset_matches_uninterrupted_chain(&self) {
+        let probe = self.fresh();
+        let mc = probe.config().clone();
+        let ps = mc.page_size;
+        let prompt: Vec<i32> = (0..(ps + 2) as i32).map(|i| 60 + i).collect();
+        let len = prompt.len();
+        let chunk = mc.pick_chunk(len).expect("prompt chunk");
+        let mut bt = vec![0i32; mc.max_pages_per_seq()];
+        bt[0] = 1;
+        bt[1] = 2;
+
+        // Uninterrupted chain: prefill, then two decode steps.
+        let mut rt = self.fresh();
+        rt.prefill(&padded(&prompt, chunk), len, &bt).expect("prefill");
+        Self::decode_single(rt.as_mut(), 90, len as i32, len as i32 + 1, &bt);
+        let want = Self::decode_single(rt.as_mut(), 91, len as i32 + 1, len as i32 + 2, &bt);
+
+        // Preempted shape: pages lost, history recomputed in chunks that
+        // straddle the page boundary, onto a different page assignment.
+        rt.reset_cache().expect("reset");
+        let mut history = prompt.clone();
+        history.push(90);
+        let mut bt2 = vec![0i32; mc.max_pages_per_seq()];
+        bt2[0] = 3;
+        bt2[1] = 4;
+        let split = ps - 1;
+        for (start, part) in [(0usize, &history[..split]), (split, &history[split..])] {
+            let c = mc.pick_chunk(part.len()).expect("resume chunk");
+            rt.prefill_chunk(&padded(part, c), start, part.len(), &bt2)
+                .expect("recompute chunk");
+        }
+        let got = Self::decode_single(rt.as_mut(), 91, len as i32 + 1, len as i32 + 2, &bt2);
+        self.assert_close(&want, &got, "decode after recompute vs uninterrupted chain");
     }
 
     /// The speculative-verification contract: `verify_chunk` over a run

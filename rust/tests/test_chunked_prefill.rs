@@ -20,6 +20,9 @@ const PAGE: usize = 8;
 fn engine_with_budget(budget: usize) -> MLCEngine {
     let mut cfg = EngineConfig::reference(&[MODEL]);
     cfg.prefill_token_budget = budget;
+    // These tests pin exact chunk counts to the configured budget; the
+    // adaptive policy would rescale it with the live decode batch.
+    cfg.adaptive_prefill = false;
     MLCEngine::new(&cfg).expect("engine")
 }
 

@@ -218,6 +218,97 @@ fn endpoint_structured_generation_over_http() {
 }
 
 #[test]
+fn endpoint_streaming_submit_errors_return_plain_status_not_sse() {
+    // The SSE preamble is deferred until the engine accepts the request:
+    // a submit-time failure on a streaming request must come back as a
+    // plain HTTP status, never wrapped in a 200 event stream.
+    let addr = "127.0.0.1:18095";
+    let server = start_server(addr, 1);
+    let resp = post(
+        addr,
+        "/v1/chat/completions",
+        r#"{"model":"no-such","messages":[{"role":"user","content":"hi"}],"stream":true}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+    assert!(!resp.contains("text/event-stream"), "{resp}");
+    assert!(!resp.contains("data: "), "{resp}");
+    assert!(resp.contains("not_found_error"), "{resp}");
+
+    // Burn the quota so the server thread exits.
+    let resp = post(
+        addr,
+        "/v1/chat/completions",
+        r#"{"model":"tiny-ref","messages":[{"role":"user","content":"hi"}],"max_tokens":2,"stream":true}"#,
+    );
+    assert!(resp.contains("text/event-stream"), "{resp}");
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn endpoint_back_pressure_returns_429_with_retry_after() {
+    // A server with a 1-deep waiting queue and serialized prefill
+    // (browser-mode latency widens the window) under a burst of
+    // streaming clients: overflow submits get a plain 429 + Retry-After,
+    // admitted ones stream normally.
+    let addr = "127.0.0.1:18096";
+    let mut engine = EngineConfig::reference_browser(&[MODEL]);
+    engine.max_waiting_requests = 1;
+    engine.max_concurrent_prefills = 1;
+    engine.prefill_token_budget = 16;
+    engine.adaptive_prefill = false;
+    let cfg = ServerConfig { addr: addr.into(), engine, max_requests: None };
+    std::thread::spawn(move || serve(cfg));
+    for _ in 0..600 {
+        if let Ok(mut s) = TcpStream::connect(addr) {
+            let _ = write!(s, "GET /health HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n");
+            let mut b = String::new();
+            let _ = s.read_to_string(&mut b);
+            if b.contains("200 OK") {
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // 100 'x's => a 104-token prompt, 7 serialized chunks at budget 16.
+    let body = format!(
+        r#"{{"model":"tiny-ref","messages":[{{"role":"user","content":"{}"}}],"max_tokens":3,"temperature":0,"stream":true}}"#,
+        "x".repeat(100)
+    );
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let body = body.clone();
+            std::thread::spawn(move || post(addr, "/v1/chat/completions", &body))
+        })
+        .collect();
+    let responses: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let mut ok = 0;
+    let mut rejected = 0;
+    for resp in &responses {
+        if resp.starts_with("HTTP/1.1 429") {
+            rejected += 1;
+            // Plain JSON rejection, never an event stream, with the
+            // structured error and the back-off hint.
+            assert!(resp.contains("Retry-After: 1"), "{resp}");
+            assert!(!resp.contains("text/event-stream"), "{resp}");
+            assert!(resp.contains("queue_full"), "{resp}");
+        } else {
+            ok += 1;
+            assert!(resp.contains("text/event-stream"), "{resp}");
+            let (events, done) = sse_parse_strict(body_of(resp));
+            assert!(done, "admitted stream missing [DONE]");
+            assert!(!events.is_empty());
+        }
+    }
+    assert!(ok >= 1, "no request was ever admitted");
+    assert!(
+        rejected >= 1,
+        "8 concurrent clients against a 1-deep queue produced no 429s"
+    );
+}
+
+#[test]
 fn endpoint_concurrent_clients_batch() {
     let addr = "127.0.0.1:18094";
     let server = start_server(addr, 4);

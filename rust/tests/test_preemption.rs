@@ -1,0 +1,360 @@
+//! Preemption-equivalence tier: KV eviction + recompute-on-resume is a
+//! *scheduling* decision, never an output decision.
+//!
+//! The load-bearing properties, all on the deterministic reference
+//! backend (no artifacts, runs everywhere):
+//!   (a) any preempt/resume schedule yields token-identical output to an
+//!       uninterrupted run — sampler, grammar, and stream state survive
+//!       eviction because only KV residency is given up;
+//!   (b) preempted pages are actually freed and re-allocatable;
+//!   (c) mid-flight preemption composes with grammar fast-forward and
+//!       speculative decoding without leaking pages;
+//!   (d) a high-priority submit is never starved behind low-priority KV
+//!       holders for more than one scheduler step.
+
+use webllm::api::{ChatCompletionRequest, FinishReason, ResponseFormat};
+use webllm::coordinator::{EngineConfig, EngineEvent, MLCEngine, RequestId};
+use webllm::json::{parse, Value};
+use webllm::testutil::ban_reference_eos as ban_eos;
+use webllm::testutil::prop::Runner;
+
+const MODEL: &str = "tiny-ref";
+/// Divergent drafter (different depth/pool) so rejection paths run.
+const DRAFT: &str = "tiny-ref-b";
+/// Reference-model geometry (pinned by `models::reference` tests).
+const PAGE: usize = 8;
+
+fn engine() -> MLCEngine {
+    MLCEngine::new(&EngineConfig::reference(&[MODEL])).expect("engine")
+}
+
+/// Greedy request over `'x' * k` (k + 4 prompt tokens, no merges).
+fn xs_request(k: usize, max_tokens: usize) -> ChatCompletionRequest {
+    let mut r = ChatCompletionRequest::new(MODEL).user("x".repeat(k));
+    r.max_tokens = max_tokens;
+    r.sampling.temperature = 0.0;
+    ban_eos(&mut r);
+    r
+}
+
+fn stat_i64(engine: &MLCEngine, key: &str) -> i64 {
+    engine.stats_json().get(key).unwrap().as_i64().unwrap()
+}
+
+fn model_stat(engine: &MLCEngine, key: &str) -> i64 {
+    engine
+        .stats_json()
+        .get("models")
+        .and_then(|m| m.get(MODEL))
+        .and_then(|m| m.get(key))
+        .and_then(Value::as_i64)
+        .unwrap()
+}
+
+/// Drive `engine` to completion, preempting `id` whenever `when` says so,
+/// and return `id`'s response. Bounded so a scheduling bug fails loudly
+/// instead of hanging the suite.
+fn run_with_preemption(
+    engine: &mut MLCEngine,
+    id: RequestId,
+    mut when: impl FnMut(usize) -> bool,
+) -> webllm::api::ChatCompletionResponse {
+    for step in 0..500 {
+        if when(step) {
+            engine.preempt(id);
+        }
+        engine.step().expect("step");
+        for ev in engine.poll_events() {
+            match ev {
+                EngineEvent::Done(rid, resp) if rid == id => return resp,
+                EngineEvent::Error(rid, e) if rid == id => panic!("request failed: {e}"),
+                _ => {}
+            }
+        }
+        if !engine.has_work() {
+            break;
+        }
+    }
+    panic!("request did not complete within 500 steps");
+}
+
+// -- (a) preemption equivalence ----------------------------------------------
+
+#[test]
+fn prop_any_preempt_schedule_is_output_invariant() {
+    // Random prompt length (so preemptions land mid-prefill and
+    // mid-decode), random seeded sampling, random preemption schedule:
+    // the text must match the uninterrupted run bit for bit.
+    Runner::new("preemption_equivalence", 6).run(|rng| {
+        let k = rng.range(91); // prompt: k + 4 tokens
+        let seed = rng.u64();
+        let temperature = 0.2 + rng.f64() as f32;
+        let mk = || {
+            let mut r = ChatCompletionRequest::new(MODEL).user("x".repeat(k));
+            r.max_tokens = 6;
+            r.sampling.seed = Some(seed);
+            r.sampling.temperature = temperature;
+            ban_eos(&mut r);
+            r
+        };
+        let baseline = engine().chat_completion(mk()).map_err(|e| e.to_string())?;
+
+        // Preempt on roughly every third step, including step 0 (still
+        // waiting: a no-op) and back-to-back evictions of a fresh resume.
+        let schedule: Vec<bool> = (0..64).map(|_| rng.range(3) == 0).collect();
+        let mut e = engine();
+        let id = e.submit(mk()).map_err(|e| e.to_string())?;
+        let resp = run_with_preemption(&mut e, id, |s| schedule.get(s).copied().unwrap_or(false));
+        if resp.text() != baseline.text() {
+            return Err(format!(
+                "preempted run {:?} != baseline {:?} (prompt {k}, schedule {schedule:?})",
+                resp.text(),
+                baseline.text()
+            ));
+        }
+        if resp.usage.completion_tokens != baseline.usage.completion_tokens {
+            return Err("completion_tokens drifted under preemption".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn preempt_every_step_still_terminates_identically() {
+    // The adversarial schedule: evict the request before every single
+    // scheduler step. Prefix-cached full pages bound the recompute, so
+    // the run still makes monotonic progress and the output is unchanged.
+    let baseline = engine().chat_completion(xs_request(60, 5)).unwrap();
+    let mut e = engine();
+    let id = e.submit(xs_request(60, 5)).unwrap();
+    let resp = run_with_preemption(&mut e, id, |_| true);
+    assert_eq!(resp.text(), baseline.text());
+    assert_eq!(resp.usage.completion_tokens, 5);
+    assert!(stat_i64(&e, "preemptions") > 0, "schedule never actually evicted");
+}
+
+// -- (b) pages are really freed ----------------------------------------------
+
+#[test]
+fn preempted_pages_are_freed_and_reallocatable() {
+    let baseline = engine().chat_completion(xs_request(100, 12)).unwrap();
+
+    let mut e = engine();
+    let id = e.submit(xs_request(100, 12)).unwrap();
+    // Prefill the 104-token prompt and decode a few tokens.
+    for _ in 0..20 {
+        e.step().unwrap();
+        if model_stat(&e, "running") == 1 && stat_i64(&e, "decode_tokens") >= 3 {
+            break;
+        }
+    }
+    assert_eq!(model_stat(&e, "running"), 1, "sequence never reached decode");
+
+    let before = model_stat(&e, "available_pages");
+    assert!(e.preempt(id), "a running sequence holds pages");
+    let after = model_stat(&e, "available_pages");
+    // 104 prompt + decoded tokens span 14 pages; all of them must be
+    // allocatable again (free or prefix-cached, both count).
+    assert!(
+        after >= before + 14,
+        "eviction freed too little: {before} -> {after} available pages"
+    );
+    assert_eq!(model_stat(&e, "preempted"), 1);
+    assert!(!e.preempt(id), "an evicted sequence holds no pages");
+    assert!(!e.preempt(999_999), "unknown request holds no pages");
+
+    // The freed pages are usable by someone else right now.
+    let other = e.submit(xs_request(96, 2)).unwrap();
+    e.run_to_completion().unwrap();
+    let mut done = 0;
+    for ev in e.poll_events() {
+        if let EngineEvent::Done(rid, resp) = ev {
+            done += 1;
+            if rid == id {
+                assert_eq!(resp.text(), baseline.text(), "resume changed the output");
+                assert_eq!(resp.usage.completion_tokens, 12);
+            } else {
+                assert_eq!(rid, other);
+            }
+        }
+    }
+    assert_eq!(done, 2);
+    assert_eq!(stat_i64(&e, "preemptions"), 1);
+    // The evicted decode suffix sat on a partial page the prefix cache
+    // can't keep, so the resume recomputed at least those positions.
+    assert!(stat_i64(&e, "preempted_tokens_recomputed") >= 2);
+}
+
+// -- (c) composition with fast-forward + speculative decoding ----------------
+
+#[test]
+fn preemption_composes_with_grammar_fast_forward_and_speculation() {
+    let spec_cfg = || {
+        let mut cfg = EngineConfig::reference(&[MODEL]);
+        cfg.draft_model = Some(DRAFT.to_string());
+        cfg.enable_fast_forward = true;
+        cfg
+    };
+    let schema = r#"{
+        "type": "object",
+        "properties": {"ok": {"type": "boolean"}, "n": {"type": "integer"}},
+        "required": ["ok", "n"]
+    }"#;
+    let mk = || {
+        let mut r = ChatCompletionRequest::new(MODEL).user("emit json");
+        r.max_tokens = 100;
+        r.sampling.temperature = 0.0;
+        // '}' nudge closes the integer so greedy derivations finish early.
+        r.sampling.logit_bias.insert(8 + b'}' as u32, 5.0);
+        r.response_format = ResponseFormat::JsonSchema(parse(schema).unwrap());
+        r
+    };
+
+    let baseline = MLCEngine::new(&spec_cfg()).unwrap().chat_completion(mk()).unwrap();
+    assert!(parse(baseline.text()).is_ok(), "baseline must satisfy the schema");
+
+    let mut e = MLCEngine::new(&spec_cfg()).unwrap();
+    let idle_pages = model_stat(&e, "available_pages");
+    let id = e.submit(mk()).unwrap();
+    // Evict on every other step: mid-prefill first, then between
+    // speculation rounds (draft KV mirror included).
+    let resp = run_with_preemption(&mut e, id, |s| s % 2 == 0);
+    assert_eq!(resp.text(), baseline.text(), "spec+grammar output changed");
+    assert!(stat_i64(&e, "preemptions") > 0);
+
+    // No garbage pages: with nothing in flight every page is allocatable
+    // again, and a rerun on the same (warm) engine still agrees.
+    assert!(!e.has_work());
+    assert_eq!(model_stat(&e, "available_pages"), idle_pages, "pages leaked");
+    let warm = e.chat_completion(mk()).unwrap();
+    assert_eq!(warm.text(), baseline.text(), "preemption poisoned the prefix cache");
+}
+
+// -- (d) no priority inversion -----------------------------------------------
+
+#[test]
+fn high_priority_submit_preempts_within_one_step() {
+    let mut e = engine();
+    // Fill the pool: 4 greedy requests of 14 pages each (56 of the 63
+    // usable pages), decoding long enough to still be live below.
+    let mut low_ids = Vec::new();
+    for _ in 0..4 {
+        low_ids.push(e.submit(xs_request(100, 16)).unwrap());
+    }
+    for _ in 0..200 {
+        e.step().unwrap();
+        if model_stat(&e, "running") == 4 {
+            break;
+        }
+    }
+    assert_eq!(model_stat(&e, "running"), 4, "pool never filled");
+
+    // 14 needed > 7 available: admission must evict a low-priority
+    // victim rather than queue behind it.
+    let high = e.submit(xs_request(100, 4).with_priority(5)).unwrap();
+    e.step().unwrap();
+    let stats = e.stats_json();
+    let m = stats.get("models").unwrap().get(MODEL).unwrap();
+    assert!(
+        m.get("queued_by_priority").unwrap().get("5").is_none(),
+        "high-priority request still queued after one step: {}",
+        webllm::json::to_string(m)
+    );
+    assert_eq!(m.get("preempted").unwrap().as_i64(), Some(1));
+    assert_eq!(stat_i64(&e, "preemptions"), 1);
+
+    // Everyone still completes, and the evicted victim's output is the
+    // same as an unpreempted solo run (scheduler-triggered eviction goes
+    // through exactly the machinery properties (a)-(b) pinned).
+    let victim_baseline = engine().chat_completion(xs_request(100, 16)).unwrap();
+    e.run_to_completion().unwrap();
+    let mut done = 0;
+    let mut saw_high = false;
+    for ev in e.poll_events() {
+        if let EngineEvent::Done(rid, resp) = ev {
+            done += 1;
+            assert_eq!(resp.choices[0].finish_reason, FinishReason::Length);
+            if rid == high {
+                saw_high = true;
+                assert_eq!(resp.usage.completion_tokens, 4);
+            } else {
+                assert!(low_ids.contains(&rid));
+                assert_eq!(resp.text(), victim_baseline.text());
+            }
+        }
+    }
+    assert_eq!(done, 5);
+    assert!(saw_high);
+}
+
+#[test]
+fn prefill_chunks_go_to_the_highest_priority_class() {
+    // Two long prompts admitted together; the high-priority one owns
+    // every chunk until it finishes, so it reaches its first token
+    // first even though it arrived second.
+    let mut e = engine();
+    let lo = e.submit(xs_request(90, 30)).unwrap();
+    let hi = e.submit(xs_request(91, 2).with_priority(3)).unwrap();
+    let mut first_done = None;
+    for _ in 0..200 {
+        e.step().unwrap();
+        for ev in e.poll_events() {
+            if let EngineEvent::Done(rid, _) = ev {
+                first_done.get_or_insert(rid);
+            }
+        }
+        if !e.has_work() {
+            break;
+        }
+    }
+    assert_eq!(first_done, Some(hi), "high priority must finish first");
+    let _ = lo;
+}
+
+// -- back-pressure ------------------------------------------------------------
+
+#[test]
+fn submit_rejects_with_queue_full_at_the_waiting_cap() {
+    let mut cfg = EngineConfig::reference(&[MODEL]);
+    cfg.max_waiting_requests = 1;
+    let mut e = MLCEngine::new(&cfg).unwrap();
+    e.submit(xs_request(4, 2)).unwrap();
+    let err = e.submit(xs_request(5, 2)).unwrap_err();
+    assert_eq!(err.status, 429);
+    assert_eq!(err.kind, "queue_full");
+    assert!(err.message.contains("retry"), "{}", err.message);
+    // Draining the queue reopens admission.
+    e.run_to_completion().unwrap();
+    e.submit(xs_request(5, 2)).unwrap();
+    e.run_to_completion().unwrap();
+    assert_eq!(
+        e.poll_events()
+            .iter()
+            .filter(|ev| matches!(ev, EngineEvent::Done(..)))
+            .count(),
+        2
+    );
+}
+
+// -- stats surface ------------------------------------------------------------
+
+#[test]
+fn queue_depth_stats_group_by_priority_class() {
+    let mut e = engine();
+    for p in [0, 0, 2, -1] {
+        e.submit(xs_request(6, 1).with_priority(p)).unwrap();
+    }
+    let stats = e.stats_json();
+    let q = stats
+        .get("models")
+        .unwrap()
+        .get(MODEL)
+        .unwrap()
+        .get("queued_by_priority")
+        .unwrap();
+    assert_eq!(q.get("0").unwrap().as_i64(), Some(2));
+    assert_eq!(q.get("2").unwrap().as_i64(), Some(1));
+    assert_eq!(q.get("-1").unwrap().as_i64(), Some(1));
+    e.run_to_completion().unwrap();
+    assert_eq!(stat_i64(&e, "preemptions"), 0, "{} tokens fit without eviction", PAGE);
+}

@@ -78,6 +78,11 @@ fn conformance_chunked_prefill_reads_resident_prefix_pages() {
     conformance().chunked_prefill_reads_resident_prefix_pages();
 }
 
+#[test]
+fn conformance_recompute_after_reset_matches_uninterrupted_chain() {
+    conformance().recompute_after_reset_matches_uninterrupted_chain();
+}
+
 // -- reference-specific strictness ------------------------------------------
 
 #[test]
