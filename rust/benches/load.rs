@@ -8,7 +8,11 @@
 //!
 //! Reports throughput, TTFT p50/p95 (overall and for the interactive
 //! class), ITL p99, preemptions, recomputed tokens, and queue-full
-//! rejections. Writes ../BENCH_load.json (repo root).
+//! rejections. Then replays the *same* trace under a seeded fault
+//! schedule (transients, NaN rows, stalls, one mid-trace device loss)
+//! and reports goodput plus the recovery tax — the wall-clock premium
+//! the engine pays to absorb the faults. Writes ../BENCH_load.json
+//! (repo root).
 
 #[path = "common/mod.rs"]
 mod common;
@@ -17,7 +21,9 @@ use std::collections::HashMap;
 use std::time::Instant;
 use webllm::api::ChatCompletionRequest;
 use webllm::coordinator::{EngineConfig, EngineEvent, MLCEngine};
+use webllm::json::Value;
 use webllm::metrics::Histogram;
+use webllm::runtime::{FaultKind, FaultPlan};
 
 const MODEL: &str = "tiny-ref";
 /// Shared leading content for the warm-prefix share: identical leading
@@ -90,35 +96,46 @@ fn build(spec: &Spec) -> ChatCompletionRequest {
     r
 }
 
-fn main() {
-    let n = common::iters(160, 32);
-    let specs = trace(n, 0xC0FFEE);
-    let longs = specs
-        .iter()
-        .filter(|s| s.content.bytes().filter(|&b| b == b'x').count() >= 72)
-        .count();
-    let interactive = specs.iter().filter(|s| s.priority == 2).count();
-    println!(
-        "=== synthetic load: {n} requests ({longs} long, {interactive} interactive) \
-         on {MODEL}, 64-page pool ==="
-    );
+/// Everything one replay of the trace produces.
+struct RunOut {
+    wall: f64,
+    tokens: usize,
+    completed: usize,
+    failed: usize,
+    rejected: u64,
+    ttft: Histogram,
+    ttft_hi: Histogram,
+    itl: Histogram,
+    e2e: Histogram,
+    stats: Value,
+}
 
+/// Drive the full trace to idle on a fresh engine, optionally under a
+/// fault schedule. `step()` must stay `Ok` either way — recoverable
+/// faults are the engine's problem, not the driver's.
+fn run_trace(specs: &[Spec], plan: Option<FaultPlan>) -> RunOut {
     // Small waiting room so bursts exercise QueueFull back-pressure;
     // everything else is the production default (adaptive prefill on,
     // 4 concurrent prefills) over the tiny 64-page reference pool.
     let mut cfg = EngineConfig::reference(&[MODEL]);
     cfg.max_waiting_requests = 8;
+    cfg.fault_plan = plan;
     let mut engine = MLCEngine::new(&cfg).expect("reference engine");
 
     let mut prio_of: HashMap<u64, i32> = HashMap::new();
     let mut last_chunk: HashMap<u64, Instant> = HashMap::new();
-    let mut ttft = Histogram::new();
-    let mut ttft_hi = Histogram::new();
-    let mut itl = Histogram::new();
-    let mut e2e = Histogram::new();
-    let mut tokens = 0usize;
-    let mut completed = 0usize;
-    let mut rejected = 0u64;
+    let mut out = RunOut {
+        wall: 0.0,
+        tokens: 0,
+        completed: 0,
+        failed: 0,
+        rejected: 0,
+        ttft: Histogram::new(),
+        ttft_hi: Histogram::new(),
+        itl: Histogram::new(),
+        e2e: Histogram::new(),
+        stats: Value::Null,
+    };
 
     let t0 = Instant::now();
     let mut next_req = 0usize;
@@ -133,7 +150,7 @@ fn main() {
                     next_req += 1;
                 }
                 Err(e) if e.kind == "queue_full" => {
-                    rejected += 1;
+                    out.rejected += 1;
                     break;
                 }
                 Err(e) => panic!("submit failed: {e:?}"),
@@ -146,52 +163,118 @@ fn main() {
             match ev {
                 EngineEvent::Chunk(rid, c) if !c.delta.is_empty() => {
                     if let Some(prev) = last_chunk.insert(rid, now) {
-                        itl.push((now - prev).as_secs_f64() * 1e3);
+                        out.itl.push((now - prev).as_secs_f64() * 1e3);
                     }
                 }
                 EngineEvent::Done(rid, resp) => {
-                    completed += 1;
-                    tokens += resp.usage.completion_tokens;
-                    ttft.push(resp.usage.ttft_s * 1e3);
+                    out.completed += 1;
+                    out.tokens += resp.usage.completion_tokens;
+                    out.ttft.push(resp.usage.ttft_s * 1e3);
                     if prio_of.get(&rid) == Some(&2) {
-                        ttft_hi.push(resp.usage.ttft_s * 1e3);
+                        out.ttft_hi.push(resp.usage.ttft_s * 1e3);
                     }
-                    e2e.push(resp.usage.e2e_s * 1e3);
+                    out.e2e.push(resp.usage.e2e_s * 1e3);
+                    last_chunk.remove(&rid);
+                }
+                EngineEvent::Error(rid, e) => {
+                    // Under the fault schedule, data-plane corruption is
+                    // allowed to fail the implicated request — anything
+                    // else would be a recovery bug.
+                    assert_eq!(e.kind, "data_plane_error", "unexpected failure: {e}");
+                    out.failed += 1;
                     last_chunk.remove(&rid);
                 }
                 _ => {}
             }
         }
     }
-    let wall = t0.elapsed().as_secs_f64();
+    out.wall = t0.elapsed().as_secs_f64();
+    out.stats = engine.stats_json();
+    out
+}
 
-    let stats = engine.stats_json();
-    let top = |k: &str| stats.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+fn stat(stats: &Value, k: &str) -> i64 {
+    stats.get(k).and_then(|v| v.as_i64()).unwrap_or(0)
+}
+
+fn fault_stat(stats: &Value, k: &str) -> i64 {
+    stats.get("faults").and_then(|f| f.get(k)).and_then(|v| v.as_i64()).unwrap_or(0)
+}
+
+fn main() {
+    let n = common::iters(160, 32);
+    let specs = trace(n, 0xC0FFEE);
+    let longs = specs
+        .iter()
+        .filter(|s| s.content.bytes().filter(|&b| b == b'x').count() >= 72)
+        .count();
+    let interactive = specs.iter().filter(|s| s.priority == 2).count();
+    println!(
+        "=== synthetic load: {n} requests ({longs} long, {interactive} interactive) \
+         on {MODEL}, 64-page pool ==="
+    );
+
+    let clean = run_trace(&specs, None);
+    assert_eq!(clean.completed, n, "every request must finish");
+    assert_eq!(clean.failed, 0, "nothing may fail without a fault plan");
+    let preemptions = stat(&clean.stats, "preemptions");
+    let recomputed = stat(&clean.stats, "preempted_tokens_recomputed");
     let per_model = |k: &str| {
-        stats
+        clean
+            .stats
             .get("models")
             .and_then(|m| m.get(MODEL))
             .and_then(|m| m.get(k))
             .and_then(|v| v.as_i64())
             .unwrap_or(0)
     };
-    let preemptions = top("preemptions");
-    let recomputed = top("preempted_tokens_recomputed");
-
-    assert_eq!(completed, n, "every request must finish");
     println!(
-        "wall {wall:>6.3}s | {:.0} tok/s | ttft p50 {:.3} ms (interactive {:.3}) | \
+        "wall {:>6.3}s | {:.0} tok/s | ttft p50 {:.3} ms (interactive {:.3}) | \
          itl p99 {:.4} ms",
-        tokens as f64 / wall,
-        ttft.percentile(50.0),
-        ttft_hi.percentile(50.0),
-        itl.percentile(99.0),
+        clean.wall,
+        clean.tokens as f64 / clean.wall,
+        clean.ttft.percentile(50.0),
+        clean.ttft_hi.percentile(50.0),
+        clean.itl.percentile(99.0),
     );
     println!(
         "preemptions {preemptions} | recomputed {recomputed} tok | \
-         queue-full rejections {rejected} | prefix hits {} / misses {}",
+         queue-full rejections {} | prefix hits {} / misses {}",
+        clean.rejected,
         per_model("prefix_cache_hits"),
         per_model("prefix_cache_misses"),
+    );
+
+    // Same trace, hostile substrate: ~2% of backend ops fault (transient
+    // / NaN row / 1-3ms stall, seeded) plus one guaranteed device loss
+    // mid-trace. Goodput counts only tokens of requests that completed;
+    // the recovery tax is the wall-clock premium over the clean run.
+    let plan = FaultPlan::seeded(0xFA17, 4000, 2).then(400, FaultKind::DeviceLost);
+    let faults_scheduled = plan.len();
+    println!(
+        "\n=== same trace under faults: {faults_scheduled} scheduled \
+         (seeded 2% + 1 device loss) ==="
+    );
+    let faulty = run_trace(&specs, Some(plan));
+    assert_eq!(faulty.completed + faulty.failed, n, "every request must terminate");
+    assert!(
+        fault_stat(&faulty.stats, "device_resets") >= 1,
+        "the scheduled device loss must have fired"
+    );
+    let goodput = faulty.tokens as f64 / faulty.wall;
+    let recovery_tax_pct = (faulty.wall - clean.wall) / clean.wall * 100.0;
+    println!(
+        "wall {:>6.3}s | goodput {:.0} tok/s | completed {} / failed {} | \
+         recovery tax {:+.1}%",
+        faulty.wall, goodput, faulty.completed, faulty.failed, recovery_tax_pct,
+    );
+    println!(
+        "faults injected {} | transient retries {} | device resets {} | \
+         preemptions {}",
+        fault_stat(&faulty.stats, "faults_injected"),
+        fault_stat(&faulty.stats, "transient_retries"),
+        fault_stat(&faulty.stats, "device_resets"),
+        stat(&faulty.stats, "preemptions"),
     );
 
     let report = webllm::obj! {
@@ -209,21 +292,43 @@ fn main() {
             "interactive_requests" => interactive as i64,
             "seed" => 0xC0FFEEi64,
         },
-        "completed" => completed as i64,
-        "completion_tokens" => tokens as i64,
-        "wall_seconds" => wall,
-        "throughput_tok_s" => tokens as f64 / wall,
-        "ttft_p50_ms" => ttft.percentile(50.0),
-        "ttft_p95_ms" => ttft.percentile(95.0),
-        "ttft_interactive_p50_ms" => ttft_hi.percentile(50.0),
-        "ttft_interactive_p95_ms" => ttft_hi.percentile(95.0),
-        "itl_p99_ms" => itl.percentile(99.0),
-        "e2e_p50_ms" => e2e.percentile(50.0),
+        "completed" => clean.completed as i64,
+        "completion_tokens" => clean.tokens as i64,
+        "wall_seconds" => clean.wall,
+        "throughput_tok_s" => clean.tokens as f64 / clean.wall,
+        "ttft_p50_ms" => clean.ttft.percentile(50.0),
+        "ttft_p95_ms" => clean.ttft.percentile(95.0),
+        "ttft_interactive_p50_ms" => clean.ttft_hi.percentile(50.0),
+        "ttft_interactive_p95_ms" => clean.ttft_hi.percentile(95.0),
+        "itl_p99_ms" => clean.itl.percentile(99.0),
+        "e2e_p50_ms" => clean.e2e.percentile(50.0),
         "preemptions" => preemptions,
         "preempted_tokens_recomputed" => recomputed,
-        "queue_full_rejections" => rejected as i64,
+        "queue_full_rejections" => clean.rejected as i64,
         "prefix_cache_hits" => per_model("prefix_cache_hits"),
         "prefix_cache_misses" => per_model("prefix_cache_misses"),
+        "faulty" => webllm::obj! {
+            "description" => "identical trace replayed under a seeded fault schedule: \
+                              ~2% of backend ops fault (transient / NaN row / 1-3ms \
+                              stall, seed 0xFA17 over 4000 ops) plus one device loss \
+                              at op 400",
+            "faults_scheduled" => faults_scheduled as i64,
+            "completed" => faulty.completed as i64,
+            "failed" => faulty.failed as i64,
+            "completion_tokens" => faulty.tokens as i64,
+            "wall_seconds" => faulty.wall,
+            "goodput_tok_s" => goodput,
+            "recovery_tax_pct" => recovery_tax_pct,
+            "ttft_p50_ms" => faulty.ttft.percentile(50.0),
+            "ttft_p95_ms" => faulty.ttft.percentile(95.0),
+            "itl_p99_ms" => faulty.itl.percentile(99.0),
+            "faults_injected" => fault_stat(&faulty.stats, "faults_injected"),
+            "transient_retries" => fault_stat(&faulty.stats, "transient_retries"),
+            "device_resets" => fault_stat(&faulty.stats, "device_resets"),
+            "watchdog_stalls" => fault_stat(&faulty.stats, "watchdog_stalls"),
+            "requests_failed" => fault_stat(&faulty.stats, "requests_failed"),
+            "preemptions" => stat(&faulty.stats, "preemptions"),
+        },
     };
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

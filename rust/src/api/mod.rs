@@ -48,6 +48,26 @@ impl ApiError {
         Self { status: 500, kind: "internal_error".into(), message: message.into() }
     }
 
+    /// A request exceeded its deadline (`deadline_ms` /
+    /// `--request-timeout`) or an engine channel wait timed out
+    /// (`--engine-timeout`). Structured so clients can tell a timeout
+    /// from a genuine internal failure.
+    pub fn timeout(message: impl Into<String>) -> Self {
+        Self { status: 408, kind: "timeout_error".into(), message: message.into() }
+    }
+
+    /// The engine is draining (graceful shutdown): no new admissions.
+    /// The HTTP layer adds `Retry-After` so clients resubmit elsewhere.
+    pub fn unavailable(message: impl Into<String>) -> Self {
+        Self { status: 503, kind: "draining".into(), message: message.into() }
+    }
+
+    /// A data-plane fault (e.g. a non-finite logits row) failed exactly
+    /// this request; the engine itself kept running.
+    pub fn data_plane(message: impl Into<String>) -> Self {
+        Self { status: 500, kind: "data_plane_error".into(), message: message.into() }
+    }
+
     pub fn to_json(&self) -> Value {
         crate::obj! {
             "error" => crate::obj! {

@@ -32,6 +32,11 @@ pub struct ChatCompletionRequest {
     /// first, receive prefill chunks first, and are the last preempted
     /// under memory pressure. Ties break by arrival order. Default 0.
     pub priority: i32,
+    /// Per-request deadline in milliseconds from submission (WebLLM
+    /// extension): past it the scheduler fails the request with a
+    /// structured `timeout_error` instead of running it to completion.
+    /// `None` falls back to the engine's `--request-timeout` default.
+    pub deadline_ms: Option<u64>,
 }
 
 impl ChatCompletionRequest {
@@ -45,11 +50,17 @@ impl ChatCompletionRequest {
             sampling: SamplingParams::default(),
             response_format: ResponseFormat::Text,
             priority: 0,
+            deadline_ms: None,
         }
     }
 
     pub fn with_priority(mut self, priority: i32) -> Self {
         self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.deadline_ms = Some(deadline_ms);
         self
     }
 
@@ -207,6 +218,15 @@ impl ChatCompletionRequest {
                 .ok_or_else(|| ApiError::invalid("'priority' must be an integer"))?,
         };
 
+        let deadline_ms = match v.get("deadline_ms") {
+            None | Some(Value::Null) => None,
+            Some(x) => Some(
+                x.as_i64()
+                    .and_then(|n| u64::try_from(n).ok())
+                    .ok_or_else(|| ApiError::invalid("'deadline_ms' must be a non-negative integer"))?,
+            ),
+        };
+
         Ok(Self {
             model,
             messages,
@@ -216,6 +236,7 @@ impl ChatCompletionRequest {
             sampling,
             response_format,
             priority,
+            deadline_ms,
         })
     }
 
@@ -271,6 +292,9 @@ impl ChatCompletionRequest {
         }
         if self.priority != 0 {
             v.set("priority", self.priority as i64);
+        }
+        if let Some(ms) = self.deadline_ms {
+            v.set("deadline_ms", ms as i64);
         }
         match &self.response_format {
             ResponseFormat::Text => {}

@@ -14,6 +14,7 @@ fn request_roundtrip_through_wire_format() {
     req.sampling.temperature = 0.5;
     req.sampling.seed = Some(7);
     req.response_format = ResponseFormat::JsonObject;
+    req.deadline_ms = Some(1500);
 
     let wire = to_string(&req.to_json());
     let back = ChatCompletionRequest::from_json(&parse(&wire).unwrap()).unwrap();
@@ -26,6 +27,15 @@ fn request_roundtrip_through_wire_format() {
     assert_eq!(back.sampling.temperature, 0.5);
     assert_eq!(back.sampling.seed, Some(7));
     assert_eq!(back.response_format, ResponseFormat::JsonObject);
+    assert_eq!(back.deadline_ms, Some(1500));
+
+    // Absent => None (engine default applies); negative is rejected.
+    let plain = r#"{"model":"m","messages":[{"role":"user","content":"x"}]}"#;
+    let req = ChatCompletionRequest::from_json(&parse(plain).unwrap()).unwrap();
+    assert_eq!(req.deadline_ms, None);
+    let bad = r#"{"model":"m","messages":[{"role":"user","content":"x"}],"deadline_ms":-5}"#;
+    let err = ChatCompletionRequest::from_json(&parse(bad).unwrap()).unwrap_err();
+    assert!(err.message.contains("deadline_ms"), "{err}");
 }
 
 #[test]

@@ -42,14 +42,17 @@ use crate::kvcache::{AllocError, KvCacheManager};
 use crate::lru::LruMap;
 use crate::metrics::EngineStats;
 use crate::models::Manifest;
-use crate::runtime::{thread_client, ModelBackend, ModelRuntime, ReferenceBackend, RuntimeError};
+use crate::runtime::{
+    thread_client, FaultClass, FaultInjectingBackend, FaultPlan, ModelBackend, ModelRuntime,
+    ReferenceBackend, RuntimeError,
+};
 use crate::sampler::{LogitsProcessor, Pcg32, SampleScratch};
 use crate::tokenizer::{render_chat, StreamDecoder, Tokenizer};
 use std::cell::RefCell;
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 pub type RequestId = u64;
 
@@ -117,6 +120,23 @@ pub struct EngineConfig {
     /// `queue_full` error instead of queueing unboundedly; the HTTP
     /// layer adds a `Retry-After` header. Clamped to ≥ 1.
     pub max_waiting_requests: usize,
+    /// Deterministic fault schedule wrapped around every *target*
+    /// backend ([`crate::runtime::FaultInjectingBackend`]) — the offline
+    /// analog of WebGPU device unreliability, for chaos tests and
+    /// benches. `None` (the default) runs the backends bare.
+    pub fault_plan: Option<FaultPlan>,
+    /// Default per-request deadline in ms (`--request-timeout`); a
+    /// request's own `deadline_ms` overrides it. Past the deadline the
+    /// scheduler fails the request with a structured `timeout_error`.
+    /// `None` = no default deadline.
+    pub request_timeout_ms: Option<u64>,
+    /// Stuck-step watchdog: a scheduler step that completes but takes
+    /// longer than this (a stalling backend) increments
+    /// `watchdog_stalls`. Clamped to ≥ 1 ms.
+    pub watchdog_step_ms: u64,
+    /// How long the worker/HTTP layers wait on an engine channel before
+    /// returning a structured `timeout_error` (`--engine-timeout`).
+    pub engine_timeout_ms: u64,
 }
 
 impl EngineConfig {
@@ -135,7 +155,17 @@ impl EngineConfig {
             max_concurrent_prefills: DEFAULT_MAX_CONCURRENT_PREFILLS,
             adaptive_prefill: true,
             max_waiting_requests: DEFAULT_MAX_WAITING_REQUESTS,
+            fault_plan: None,
+            request_timeout_ms: None,
+            watchdog_step_ms: DEFAULT_WATCHDOG_STEP_MS,
+            engine_timeout_ms: DEFAULT_ENGINE_TIMEOUT_MS,
         }
+    }
+
+    /// The channel-wait bound as a `Duration` (worker ready-handshake,
+    /// worker/HTTP event waits).
+    pub fn engine_timeout(&self) -> Duration {
+        Duration::from_millis(self.engine_timeout_ms.max(1))
     }
 
     pub fn browser(models: &[&str]) -> Self {
@@ -202,6 +232,13 @@ struct RunningSeq {
     t_admit: Instant,
     t_prefilled: Option<Instant>,
     finish: Option<FinishReason>,
+    /// Deadline (admission time + effective `deadline_ms`); past it the
+    /// scheduler fails the request with a structured `timeout_error`.
+    deadline: Option<Instant>,
+    /// Structured per-request failure (data-plane fault, lost KV
+    /// residency): the owning scheduling loop routes it to
+    /// [`MLCEngine::fail`] instead of finalizing normally.
+    failed: Option<ApiError>,
 }
 
 struct PendingReq {
@@ -347,6 +384,18 @@ pub const DEFAULT_MAX_CONCURRENT_PREFILLS: usize = 4;
 /// Default for [`EngineConfig::max_waiting_requests`].
 pub const DEFAULT_MAX_WAITING_REQUESTS: usize = 256;
 
+/// Default for [`EngineConfig::watchdog_step_ms`] — far above any sane
+/// step, so only a genuinely wedged backend trips it.
+pub const DEFAULT_WATCHDOG_STEP_MS: u64 = 30_000;
+
+/// Default for [`EngineConfig::engine_timeout_ms`] (the old hardcoded
+/// 600 s channel waits).
+pub const DEFAULT_ENGINE_TIMEOUT_MS: u64 = 600_000;
+
+/// Bounded in-place retries for a transiently-failing backend op before
+/// escalating to a device reset.
+const MAX_TRANSIENT_RETRIES: u32 = 3;
+
 /// Longest forced-token run emitted per fast-forward cache entry;
 /// longer chains continue from the next state's entry.
 const MAX_FF_RUN: usize = 64;
@@ -386,6 +435,15 @@ pub struct MLCEngine {
     spec_tokens: usize,
     /// Grammar fast-forward toggle (from the config).
     enable_fast_forward: bool,
+    /// Default per-request deadline (from the config).
+    request_timeout_ms: Option<u64>,
+    /// Stuck-step watchdog threshold (from the config, min 1 ms).
+    watchdog_step_ms: u64,
+    /// Graceful-shutdown mode: admission stopped, residents running down.
+    draining: bool,
+    /// When set, residents still unfinished past this instant are failed
+    /// (`drain_failed`) so shutdown is bounded.
+    drain_deadline: Option<Instant>,
     /// Candidate scratch shared by every sequence's sampling calls: one
     /// set of buffers serves all rows of the decode batch.
     scratch: SampleScratch,
@@ -461,6 +519,10 @@ impl MLCEngine {
             max_waiting_requests: cfg.max_waiting_requests.max(1),
             spec_tokens: cfg.spec_tokens.max(1),
             enable_fast_forward: cfg.enable_fast_forward,
+            request_timeout_ms: cfg.request_timeout_ms,
+            watchdog_step_ms: cfg.watchdog_step_ms.max(1),
+            draining: false,
+            drain_deadline: None,
             scratch: SampleScratch::new(),
             events: VecDeque::new(),
             next_req: 1,
@@ -548,6 +610,20 @@ impl MLCEngine {
                 tokenizer
             }
         };
+        // Chaos harness: wrap every *target* backend in the fault
+        // injector (drafts stay bare — their failures already soft-fail
+        // into plain decode). The wrapper delegates config/shape
+        // queries, so nothing downstream can tell until a fault fires.
+        if let Some(plan) = &cfg.fault_plan {
+            backends = backends
+                .into_iter()
+                .map(|(name, target, draft)| {
+                    let target: Box<dyn ModelBackend> =
+                        Box::new(FaultInjectingBackend::new(target, plan.clone()));
+                    (name, target, draft)
+                })
+                .collect();
+        }
         // A draft proposes token ids the target must be able to verify:
         // the vocabularies have to line up exactly.
         for (name, backend, draft) in &backends {
@@ -586,6 +662,12 @@ impl MLCEngine {
     /// Queue a request. Errors here are synchronous (bad request / unknown
     /// model / prompt too long); execution errors surface as events.
     pub fn submit(&mut self, req: ChatCompletionRequest) -> Result<RequestId, ApiError> {
+        // Draining: admission is closed, full stop. 503 + Retry-After at
+        // the HTTP layer; residents keep streaming to completion.
+        if self.draining {
+            self.stats.drain_rejected += 1;
+            return Err(ApiError::unavailable("engine is draining; no new requests accepted"));
+        }
         req.sampling.validate().map_err(ApiError::invalid)?;
         let model = self
             .models
@@ -738,10 +820,236 @@ impl MLCEngine {
     pub fn step(&mut self) -> Result<(), ApiError> {
         let names: Vec<String> = self.models.keys().cloned().collect();
         for name in names {
-            self.step_model(&name)
-                .map_err(|e| ApiError::internal(format!("{name}: {e}")))?;
+            self.expire_deadlines(&name);
+            let t0 = Instant::now();
+            let result = self.step_model(&name);
+            if t0.elapsed() >= Duration::from_millis(self.watchdog_step_ms) {
+                // The step completed but blew past the watchdog bound —
+                // a stalling backend. Counted, not failed: the work did
+                // land, and operators alert on the counter.
+                self.stats.watchdog_stalls += 1;
+            }
+            if let Err(e) = result {
+                // Recoverable faults (transient exhaustion, device loss)
+                // are absorbed here: `step()` returns `Err` only for
+                // genuine internal bugs, never for hardware misbehaving.
+                self.recover(&name, e)
+                    .map_err(|e| ApiError::internal(format!("{name}: {e}")))?;
+            }
+            self.enforce_drain(&name);
         }
         Ok(())
+    }
+
+    /// Route a failed `step_model` by fault class. Transient errors are
+    /// normally absorbed in place by [`with_retries`] and arrive here
+    /// only escalated (retry budget exhausted → `DeviceLost`) or from an
+    /// unwrapped path; either way the conservative answer is a device
+    /// reset — surviving streams recompute and stay byte-identical.
+    /// Internal errors (shape bugs, artifact mismatches) still fail the
+    /// step: retrying a logic error just loops.
+    fn recover(&mut self, name: &str, e: RuntimeError) -> Result<(), RuntimeError> {
+        match e.class() {
+            FaultClass::Transient | FaultClass::DeviceLost => self.device_reset(name),
+            FaultClass::Internal => Err(e),
+        }
+    }
+
+    /// Device-loss recovery, the offline analog of re-requesting a
+    /// GPUDevice after `device.lost`: capture every resident sequence's
+    /// token history and sampler/grammar/stream state (the preemption
+    /// machinery), discard ALL pool metadata — the lost device's pages
+    /// must never be parked for prefix reuse — and reset the backend.
+    /// Residents re-enter through `admit_and_resume` and recompute their
+    /// KV from position 0, so the streams they eventually produce are
+    /// unchanged (pinned by tests/test_faults.rs).
+    fn device_reset(&mut self, name: &str) -> Result<(), RuntimeError> {
+        self.stats.device_resets += 1;
+        let mut running = std::mem::take(&mut self.models.get_mut(name).unwrap().running);
+        for seq in running.drain(..) {
+            let m = self.models.get_mut(name).unwrap();
+            match m.kv.get(seq.seq_id) {
+                Some(s) => {
+                    let pre = PreemptedSeq {
+                        tokens: s.tokens.clone(),
+                        computed: s.written().min(s.len()),
+                        sampled: true,
+                        seq,
+                    };
+                    self.stats.preemptions += 1;
+                    m.preempted.push_back(pre);
+                }
+                None => {
+                    // No KV and no token history to recompute from:
+                    // unrecoverable for this one request.
+                    self.stats.requests_failed += 1;
+                    Self::fail(&mut self.events, m, seq, ApiError::internal(
+                        "sequence lost its KV residency during device reset",
+                    ));
+                }
+            }
+        }
+        let m = self.models.get_mut(name).unwrap();
+        let prefilling = std::mem::take(&mut m.prefilling);
+        for pf in prefilling {
+            let computed = m.kv.get(pf.seq.seq_id).map_or(0, |s| s.written());
+            self.stats.preemptions += 1;
+            m.preempted.push_back(PreemptedSeq {
+                computed,
+                sampled: pf.prefill_end < pf.prompt_ids.len(),
+                tokens: pf.prompt_ids,
+                seq: pf.seq,
+            });
+        }
+        // Everything the pool knew — live residency, free pages, parked
+        // prefix pages — described the lost device. Wipe, don't free.
+        m.kv.invalidate_all();
+        if let Some(d) = m.draft.as_mut() {
+            d.kv.invalidate_all();
+            d.backend.reset_cache()?;
+        }
+        m.backend.reset_cache()
+    }
+
+    /// Fail every resident request whose deadline has passed with a
+    /// structured `timeout_error`. Runs before each model's scheduler
+    /// step, so an expired request never consumes another model call.
+    fn expire_deadlines(&mut self, name: &str) {
+        let now = Instant::now();
+        let default_ms = self.request_timeout_ms;
+        let expired =
+            |seq: &RunningSeq| seq.finish.is_none() && seq.deadline.map_or(false, |d| now >= d);
+        // Waiting requests never got a RunningSeq; derive their deadline.
+        loop {
+            let m = self.models.get_mut(name).unwrap();
+            let hit = m.waiting.iter().position(|p| {
+                deadline_at(p.t_admit, p.req.deadline_ms.or(default_ms))
+                    .map_or(false, |d| now >= d)
+            });
+            match hit {
+                Some(i) => {
+                    let p = m.waiting.remove(i).expect("index in bounds");
+                    self.stats.requests_timed_out += 1;
+                    self.events.push_back(EngineEvent::Error(
+                        p.req_id,
+                        ApiError::timeout("request deadline passed before admission"),
+                    ));
+                }
+                None => break,
+            }
+        }
+        loop {
+            let m = self.models.get_mut(name).unwrap();
+            match m.running.iter().position(&expired) {
+                Some(i) => {
+                    let seq = m.running.remove(i);
+                    self.stats.requests_timed_out += 1;
+                    Self::fail(&mut self.events, m, seq, ApiError::timeout(
+                        "request deadline passed mid-decode",
+                    ));
+                }
+                None => break,
+            }
+        }
+        loop {
+            let m = self.models.get_mut(name).unwrap();
+            match m.prefilling.iter().position(|p| expired(&p.seq)) {
+                Some(i) => {
+                    let pf = m.prefilling.remove(i).expect("index in bounds");
+                    self.stats.requests_timed_out += 1;
+                    Self::fail(&mut self.events, m, pf.seq, ApiError::timeout(
+                        "request deadline passed mid-prefill",
+                    ));
+                }
+                None => break,
+            }
+        }
+        loop {
+            let m = self.models.get_mut(name).unwrap();
+            match m.preempted.iter().position(|p| expired(&p.seq)) {
+                Some(i) => {
+                    let p = m.preempted.remove(i).expect("index in bounds");
+                    self.stats.requests_timed_out += 1;
+                    Self::fail(&mut self.events, m, p.seq, ApiError::timeout(
+                        "request deadline passed while evicted",
+                    ));
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Begin a graceful drain: admission stops immediately (`submit`
+    /// returns 503), residents keep running. With `timeout_ms`, anything
+    /// still unfinished that long from now is failed (`drain_failed`) so
+    /// shutdown is bounded; without it the drain waits indefinitely.
+    /// Idempotent — a second call can only tighten the deadline.
+    pub fn drain(&mut self, timeout_ms: Option<u64>) {
+        self.draining = true;
+        if let Some(d) = timeout_ms.and_then(|ms| Instant::now().checked_add(Duration::from_millis(ms)))
+        {
+            let sooner = self.drain_deadline.map_or(true, |cur| d < cur);
+            if sooner {
+                self.drain_deadline = Some(d);
+            }
+        }
+    }
+
+    /// Whether [`Self::drain`] has been called.
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Drain complete: admission closed and no resident work remains.
+    pub fn drained(&self) -> bool {
+        self.draining && !self.has_work()
+    }
+
+    /// Past the drain deadline, fail whatever is still resident so the
+    /// server's shutdown is bounded. Streams get a structured 503 error
+    /// event (not a dropped connection mid-token).
+    fn enforce_drain(&mut self, name: &str) {
+        if !self.draining {
+            return;
+        }
+        let Some(deadline) = self.drain_deadline else { return };
+        if Instant::now() < deadline {
+            return;
+        }
+        loop {
+            let m = self.models.get_mut(name).unwrap();
+            if let Some(p) = m.waiting.pop_front() {
+                self.stats.drain_failed += 1;
+                self.events.push_back(EngineEvent::Error(
+                    p.req_id,
+                    ApiError::unavailable("engine drained before this request ran"),
+                ));
+                continue;
+            }
+            if !m.running.is_empty() {
+                let seq = m.running.remove(0);
+                self.stats.drain_failed += 1;
+                Self::fail(&mut self.events, m, seq, ApiError::unavailable(
+                    "drain deadline passed mid-decode",
+                ));
+                continue;
+            }
+            if let Some(pf) = m.prefilling.pop_front() {
+                self.stats.drain_failed += 1;
+                Self::fail(&mut self.events, m, pf.seq, ApiError::unavailable(
+                    "drain deadline passed mid-prefill",
+                ));
+                continue;
+            }
+            if let Some(p) = m.preempted.pop_front() {
+                self.stats.drain_failed += 1;
+                Self::fail(&mut self.events, m, p.seq, ApiError::unavailable(
+                    "drain deadline passed while evicted",
+                ));
+                continue;
+            }
+            break;
+        }
     }
 
     fn step_model(&mut self, name: &str) -> Result<(), RuntimeError> {
@@ -772,7 +1080,15 @@ impl MLCEngine {
         let m = self.models.get_mut(name).unwrap();
         let pre = if from_running {
             let seq = m.running.remove(idx);
-            let s = m.kv.get(seq.seq_id).expect("running seq has kv");
+            let Some(s) = m.kv.get(seq.seq_id) else {
+                // No KV residency means no token history to recompute
+                // from; fail this one request rather than the engine.
+                self.stats.requests_failed += 1;
+                Self::fail(&mut self.events, m, seq, ApiError::internal(
+                    "running sequence lost its KV residency",
+                ));
+                return;
+            };
             PreemptedSeq {
                 tokens: s.tokens.clone(),
                 computed: s.written().min(s.len()),
@@ -845,7 +1161,7 @@ impl MLCEngine {
             match m.preempted.iter().position(|p| p.seq.finish.is_some()) {
                 Some(i) => {
                     let p = m.preempted.remove(i).expect("index in bounds");
-                    Self::finalize(&mut self.events, &mut self.stats, m, p.seq);
+                    Self::finalize(&mut self.events, &mut self.stats, m, p.seq, self.draining);
                 }
                 None => break,
             }
@@ -1005,6 +1321,8 @@ impl MLCEngine {
             t_admit: p.t_admit,
             t_prefilled: None,
             finish: None,
+            deadline: deadline_at(p.t_admit, p.req.deadline_ms.or(self.request_timeout_ms)),
+            failed: None,
         };
         let prefill_end = p.prompt_ids.len();
         self.models.get_mut(name).unwrap().prefilling.push_back(PrefillingSeq {
@@ -1032,7 +1350,7 @@ impl MLCEngine {
             match m.prefilling.iter().position(|pf| pf.seq.finish.is_some()) {
                 Some(i) => {
                     let pf = m.prefilling.remove(i).expect("index in bounds");
-                    Self::finalize(&mut self.events, &mut self.stats, m, pf.seq);
+                    Self::finalize(&mut self.events, &mut self.stats, m, pf.seq, self.draining);
                     resolved = true;
                 }
                 None => break,
@@ -1074,7 +1392,10 @@ impl MLCEngine {
             }
             let bt = m.kv.block_table_row(pf.seq.seq_id);
             let t0 = Instant::now();
-            let out = m.backend.prefill_chunk(&ids, pf.next_pos, n, &bt)?;
+            let start_pos = pf.next_pos;
+            let out = with_retries(&mut self.stats, || {
+                m.backend.prefill_chunk(&ids, start_pos, n, &bt)
+            })?;
             let t_chunk = t0.elapsed().as_secs_f64();
             pf.next_pos += n;
             // The chunk landed: its pages are now real KV, eligible for
@@ -1092,6 +1413,19 @@ impl MLCEngine {
             // interference the chunk budget bounds.
             self.stats.decode_stall_s += t_chunk;
             self.stats.decode_stall_chunks += 1;
+        }
+        if !row_is_finite(&logits) {
+            // Data-plane fault: the backend computed garbage for exactly
+            // this sequence. Fail it with a structured error; every other
+            // resident stream is untouched.
+            self.stats.faults_injected += 1;
+            self.stats.requests_failed += 1;
+            let m = self.models.get_mut(name).unwrap();
+            let pf = m.prefilling.remove(idx).expect("index in bounds");
+            Self::fail(&mut self.events, m, pf.seq, ApiError::data_plane(
+                "non-finite logits row during prefill",
+            ));
+            return Ok(());
         }
         if !done {
             // Round-robin within the priority class: rotate the fed
@@ -1131,7 +1465,7 @@ impl MLCEngine {
 
         let m = self.models.get_mut(name).unwrap();
         if pf.seq.finish.is_some() {
-            Self::finalize(&mut self.events, &mut self.stats, m, pf.seq);
+            Self::finalize(&mut self.events, &mut self.stats, m, pf.seq, self.draining);
         } else {
             m.running.push(pf.seq);
         }
@@ -1197,8 +1531,16 @@ impl MLCEngine {
             // Refill the persistent step buffers in place (no per-step
             // allocations; padding rows stay zeroed).
             m.step.reset(batch, mp);
-            for (row, seq) in m.running.iter().take(live).enumerate() {
-                let s = m.kv.get(seq.seq_id).expect("running seq has kv");
+            for (row, seq) in m.running.iter_mut().take(live).enumerate() {
+                let Some(s) = m.kv.get(seq.seq_id) else {
+                    // Lost residency: leave the row as zeroed padding
+                    // (the backend skips seq_len 0) and route the failure
+                    // through the push-back loop below — never the batch.
+                    seq.failed = Some(ApiError::internal(
+                        "running sequence lost its KV residency",
+                    ));
+                    continue;
+                };
                 let len = s.len();
                 m.step.ids[row] = *s.tokens.last().unwrap() as i32;
                 m.step.positions[row] = (len - 1) as i32;
@@ -1209,16 +1551,20 @@ impl MLCEngine {
                 );
             }
             let t0 = Instant::now();
-            let out = m.backend.decode(
-                &m.step.ids,
-                &m.step.positions,
-                &m.step.seq_lens,
-                &m.step.tables,
-            )?;
+            let out = with_retries(&mut self.stats, || {
+                m.backend.decode(
+                    &m.step.ids,
+                    &m.step.positions,
+                    &m.step.seq_lens,
+                    &m.step.tables,
+                )
+            })?;
             let t_decode = t0.elapsed().as_secs_f64();
             // Each live row's stepped token is now pool-resident.
             for (row, seq) in m.running.iter().take(live).enumerate() {
-                m.kv.note_written(seq.seq_id, m.step.seq_lens[row] as usize);
+                if m.step.seq_lens[row] > 0 {
+                    m.kv.note_written(seq.seq_id, m.step.seq_lens[row] as usize);
+                }
             }
             (live, batch, out.logits, t_decode)
         };
@@ -1235,10 +1581,19 @@ impl MLCEngine {
         let mut logits = logits;
         let mut first_err = None;
         for (row, seq) in running.iter_mut().take(rows).enumerate() {
-            if seq.finish.is_some() || first_err.is_some() {
-                continue; // aborted mid-flight, or bailing out on error
+            if seq.finish.is_some() || seq.failed.is_some() || first_err.is_some() {
+                continue; // aborted, failed mid-build, or bailing on error
             }
             let row_logits = &mut logits[row * vocab..(row + 1) * vocab];
+            if !row_is_finite(row_logits) {
+                // Poisoned row: exactly this request fails; the other
+                // rows of the same batch sample normally.
+                self.stats.faults_injected += 1;
+                seq.failed = Some(ApiError::data_plane(
+                    "non-finite logits row during decode",
+                ));
+                continue;
+            }
             self.consume_logits(seq, row_logits);
             self.stats.decode_tokens += 1;
             self.stats.itl.push(t_decode / rows as f64);
@@ -1250,9 +1605,12 @@ impl MLCEngine {
         }
 
         let m = self.models.get_mut(name).unwrap();
-        for seq in running {
-            if seq.finish.is_some() {
-                Self::finalize(&mut self.events, &mut self.stats, m, seq);
+        for mut seq in running {
+            if let Some(e) = seq.failed.take() {
+                self.stats.requests_failed += 1;
+                Self::fail(&mut self.events, m, seq, e);
+            } else if seq.finish.is_some() {
+                Self::finalize(&mut self.events, &mut self.stats, m, seq, self.draining);
             } else {
                 m.running.push(seq);
             }
@@ -1275,17 +1633,20 @@ impl MLCEngine {
         let mut running = std::mem::take(&mut self.models.get_mut(name).unwrap().running);
         let mut first_err = None;
         for seq in running.iter_mut() {
-            if seq.finish.is_some() || first_err.is_some() {
-                continue; // aborted mid-flight, or bailing out on error
+            if seq.finish.is_some() || seq.failed.is_some() || first_err.is_some() {
+                continue; // aborted, failed, or bailing out on error
             }
             if let Err(e) = self.spec_decode_row(name, seq) {
                 first_err = Some(e);
             }
         }
         let m = self.models.get_mut(name).unwrap();
-        for seq in running {
-            if seq.finish.is_some() {
-                Self::finalize(&mut self.events, &mut self.stats, m, seq);
+        for mut seq in running {
+            if let Some(e) = seq.failed.take() {
+                self.stats.requests_failed += 1;
+                Self::fail(&mut self.events, m, seq, e);
+            } else if seq.finish.is_some() {
+                Self::finalize(&mut self.events, &mut self.stats, m, seq, self.draining);
             } else {
                 m.running.push(seq);
             }
@@ -1313,6 +1674,14 @@ impl MLCEngine {
             // verify rows would fold several report entries into one call.
             return self.plain_decode_row(name, seq);
         }
+        if self.models[name].kv.get(seq.seq_id).is_none() {
+            // Lost residency: fail exactly this request via the batch
+            // loop's push-back routing.
+            seq.failed = Some(ApiError::internal(
+                "running sequence lost its KV residency",
+            ));
+            return Ok(());
+        }
         let k = self.spec_tokens;
         let proposals = self.draft_propose(name, seq, k)?;
         if proposals.is_empty() {
@@ -1322,7 +1691,13 @@ impl MLCEngine {
         let (base_len, want, logits, t_verify) = {
             let m = self.models.get_mut(name).unwrap();
             let mc = m.backend.config().clone();
-            let len = m.kv.get(seq.seq_id).expect("running seq has kv").len();
+            let Some(s) = m.kv.get(seq.seq_id) else {
+                seq.failed = Some(ApiError::internal(
+                    "running sequence lost its KV residency",
+                ));
+                return Ok(());
+            };
+            let len = s.len();
             let mut want = proposals.len();
             // Shrink the run rather than fail the row: every verified slot
             // needs a compiled chunk row and a resident page.
@@ -1338,14 +1713,16 @@ impl MLCEngine {
                 let n = want + 1;
                 let chunk = mc.pick_chunk(n).expect("checked above");
                 let mut ids = vec![0i32; chunk];
-                let s = m.kv.get(seq.seq_id).expect("running seq has kv");
+                let s = m.kv.get(seq.seq_id).expect("present: checked at row entry");
                 ids[0] = *s.tokens.last().unwrap() as i32;
                 for (i, &t) in proposals[..want].iter().enumerate() {
                     ids[i + 1] = t as i32;
                 }
                 let bt = m.kv.block_table_row(seq.seq_id);
                 let t0 = Instant::now();
-                let out = m.backend.verify_chunk(&ids, len - 1, n, &bt)?;
+                let out = with_retries(&mut self.stats, || {
+                    m.backend.verify_chunk(&ids, len - 1, n, &bt)
+                })?;
                 (len, want, out.logits, t0.elapsed().as_secs_f64())
             }
         };
@@ -1367,6 +1744,15 @@ impl MLCEngine {
                 break;
             }
             let row = &mut logits[i * vocab..(i + 1) * vocab];
+            if !row_is_finite(row) {
+                // Poisoned verify row: everything emitted so far from the
+                // finite prefix stands; the request fails here.
+                self.stats.faults_injected += 1;
+                seq.failed = Some(ApiError::data_plane(
+                    "non-finite logits row during speculative verify",
+                ));
+                break;
+            }
             let token = self.sample_token(seq, row);
             self.stats.decode_tokens += 1;
             emitted += 1;
@@ -1394,7 +1780,7 @@ impl MLCEngine {
                 self.stats.itl.push(per);
             }
         }
-        if seq.finish.is_none() {
+        if seq.finish.is_none() && seq.failed.is_none() {
             self.post_emit(seq)?;
         }
         Ok(())
@@ -1410,19 +1796,26 @@ impl MLCEngine {
             let batch = mc.pick_batch(1).expect("decode menu is non-empty");
             let mp = mc.max_pages_per_seq();
             m.step.reset(batch, mp);
-            let s = m.kv.get(seq.seq_id).expect("running seq has kv");
+            let Some(s) = m.kv.get(seq.seq_id) else {
+                seq.failed = Some(ApiError::internal(
+                    "running sequence lost its KV residency",
+                ));
+                return Ok(());
+            };
             let len = s.len();
             m.step.ids[0] = *s.tokens.last().unwrap() as i32;
             m.step.positions[0] = (len - 1) as i32;
             m.step.seq_lens[0] = len as i32;
             m.kv.write_block_table_row(seq.seq_id, &mut m.step.tables[..mp]);
             let t0 = Instant::now();
-            let out = m.backend.decode(
-                &m.step.ids,
-                &m.step.positions,
-                &m.step.seq_lens,
-                &m.step.tables,
-            )?;
+            let out = with_retries(&mut self.stats, || {
+                m.backend.decode(
+                    &m.step.ids,
+                    &m.step.positions,
+                    &m.step.seq_lens,
+                    &m.step.tables,
+                )
+            })?;
             let t_decode = t0.elapsed().as_secs_f64();
             m.kv.note_written(seq.seq_id, len);
             (batch, out.logits, t_decode)
@@ -1433,10 +1826,17 @@ impl MLCEngine {
         self.stats.decode_padded_rows += (batch - 1) as u64;
         let vocab = self.tokenizer.vocab_size();
         let mut logits = logits;
+        if !row_is_finite(&logits[..vocab]) {
+            self.stats.faults_injected += 1;
+            seq.failed = Some(ApiError::data_plane(
+                "non-finite logits row during decode",
+            ));
+            return Ok(());
+        }
         self.consume_logits(seq, &mut logits[..vocab]);
         self.stats.decode_tokens += 1;
         self.stats.itl.push(t_decode);
-        if seq.finish.is_none() {
+        if seq.finish.is_none() && seq.failed.is_none() {
             self.post_emit(seq)?;
         }
         Ok(())
@@ -1489,7 +1889,7 @@ impl MLCEngine {
                 }
             }
         }
-        Self::flush_unwritten_kv(d.backend.as_mut(), &mut d.kv, seq.seq_id)?;
+        Self::flush_unwritten_kv(&mut self.stats, d.backend.as_mut(), &mut d.kv, seq.seq_id)?;
 
         let mc = d.backend.config().clone();
         let Some(batch) = mc.pick_batch(1) else {
@@ -1554,7 +1954,7 @@ impl MLCEngine {
             return Ok(());
         }
         let m = self.models.get_mut(&seq.model).unwrap();
-        Self::flush_unwritten_kv(m.backend.as_mut(), &mut m.kv, seq.seq_id)
+        Self::flush_unwritten_kv(&mut self.stats, m.backend.as_mut(), &mut m.kv, seq.seq_id)
     }
 
     /// Grammar fast-forward: while the matcher sits in non-accepting
@@ -1652,6 +2052,7 @@ impl MLCEngine {
     /// not counted in the prefill stats — these are decode-side catch-up
     /// writes, not prompt work.
     fn flush_unwritten_kv(
+        stats: &mut EngineStats,
         backend: &mut dyn ModelBackend,
         kv: &mut KvCacheManager,
         seq_id: u64,
@@ -1674,7 +2075,7 @@ impl MLCEngine {
                 ids[i] = t as i32;
             }
             let bt = kv.block_table_row(seq_id);
-            backend.prefill_chunk(&ids, pos, n, &bt)?;
+            with_retries(stats, || backend.prefill_chunk(&ids, pos, n, &bt))?;
             pos += n;
             kv.note_written(seq_id, pos);
         }
@@ -1828,12 +2229,33 @@ impl MLCEngine {
         }
     }
 
+    /// Terminate `seq` with a structured error instead of a completion:
+    /// free its (and any draft mirror's) KV residency and emit an
+    /// `Error` event. The caller owns the counter bump — timeout, drain,
+    /// and data-plane failures each count in their own bucket.
+    fn fail(
+        events: &mut VecDeque<EngineEvent>,
+        m: &mut EngineModel,
+        seq: RunningSeq,
+        error: ApiError,
+    ) {
+        m.kv.free(seq.seq_id);
+        if let Some(d) = m.draft.as_mut() {
+            d.kv.free(seq.seq_id);
+        }
+        events.push_back(EngineEvent::Error(seq.req_id, error));
+    }
+
     fn finalize(
         events: &mut VecDeque<EngineEvent>,
         stats: &mut EngineStats,
         m: &mut EngineModel,
         mut seq: RunningSeq,
+        draining: bool,
     ) {
+        if draining {
+            stats.drain_completed += 1;
+        }
         m.kv.free(seq.seq_id);
         if let Some(d) = m.draft.as_mut() {
             d.kv.free(seq.seq_id);
@@ -2033,6 +2455,7 @@ impl MLCEngine {
             );
         }
         out.set("models", models);
+        out.set("draining", self.draining);
         out
     }
 }
@@ -2095,4 +2518,53 @@ fn draft_pick(
     }
     // Float underflow on the final slice: fall back to the last allowed.
     last
+}
+
+/// Absolute deadline for a request admitted at `t_admit` with an
+/// effective `deadline_ms` (the request's own, or the engine default).
+/// `None` in, or an overflowing add, means no deadline.
+fn deadline_at(t_admit: Instant, deadline_ms: Option<u64>) -> Option<Instant> {
+    t_admit.checked_add(Duration::from_millis(deadline_ms?))
+}
+
+/// Whether a logits row is usable: every entry finite. A single NaN/Inf
+/// poisons softmax for the whole row, so the row's request must fail —
+/// but only that request (per-request error isolation).
+fn row_is_finite(row: &[f32]) -> bool {
+    row.iter().all(|l| l.is_finite())
+}
+
+/// Run `op`, absorbing transient backend faults with bounded
+/// exponential-backoff retries. Counts every observed fault in
+/// `stats`. Exhausting the retry budget escalates to `DeviceLost` —
+/// a fault that persists across retries is treated like a lost device
+/// and triggers a full reset — and an injected `DeviceLost` passes
+/// straight through (retrying a lost device is pointless). Internal
+/// errors also pass through untouched.
+fn with_retries<T>(
+    stats: &mut EngineStats,
+    mut op: impl FnMut() -> Result<T, RuntimeError>,
+) -> Result<T, RuntimeError> {
+    let mut attempt: u32 = 0;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(RuntimeError::Transient(m)) => {
+                stats.faults_injected += 1;
+                if attempt >= MAX_TRANSIENT_RETRIES {
+                    return Err(RuntimeError::DeviceLost(format!(
+                        "transient fault persisted through {MAX_TRANSIENT_RETRIES} retries: {m}"
+                    )));
+                }
+                stats.transient_retries += 1;
+                std::thread::sleep(Duration::from_micros(50 << attempt));
+                attempt += 1;
+            }
+            Err(e @ RuntimeError::DeviceLost(_)) => {
+                stats.faults_injected += 1;
+                return Err(e);
+            }
+            Err(e) => return Err(e),
+        }
+    }
 }

@@ -11,24 +11,25 @@ use crate::json::Value;
 use std::collections::VecDeque;
 use std::time::Duration;
 
-/// Default per-request timeout: generous because CPU-PJRT decode of the
-/// larger model is ~100ms+/token.
-const REQUEST_TIMEOUT: Duration = Duration::from_secs(600);
-
 pub struct ServiceWorkerMLCEngine {
     worker: WorkerHandle,
     models: Vec<String>,
     next_id: u64,
     /// Buffered out-of-order messages (e.g. chunks for another request).
     pending: VecDeque<FromWorker>,
+    /// Bound on any single wait for the worker (`--engine-timeout`);
+    /// generous by default because CPU-PJRT decode of the larger model is
+    /// ~100ms+/token.
+    timeout: Duration,
 }
 
 impl ServiceWorkerMLCEngine {
     /// Create the engine: spawns the worker, which loads the models.
     pub fn create(cfg: EngineConfig) -> Result<Self, ApiError> {
+        let timeout = cfg.engine_timeout();
         let (worker, models) =
             WorkerHandle::spawn(cfg).map_err(ApiError::internal)?;
-        Ok(Self { worker, models, next_id: 1, pending: VecDeque::new() })
+        Ok(Self { worker, models, next_id: 1, pending: VecDeque::new(), timeout })
     }
 
     pub fn models(&self) -> &[String] {
@@ -88,11 +89,33 @@ impl ServiceWorkerMLCEngine {
         self.worker.post(&ToWorker::Abort { id }).map_err(ApiError::internal)
     }
 
+    /// Begin a graceful drain: the worker stops admitting immediately;
+    /// resident requests keep streaming (bounded by `timeout_ms` when
+    /// given). Returns without waiting — pair with [`Self::wait_drained`].
+    pub fn drain(&mut self, timeout_ms: Option<u64>) -> Result<(), ApiError> {
+        self.worker.post(&ToWorker::Drain { timeout_ms }).map_err(ApiError::internal)
+    }
+
+    /// Block until the worker announces the drain is complete, buffering
+    /// (not dropping) any in-flight completion traffic seen on the way.
+    pub fn wait_drained(&mut self) -> Result<(), ApiError> {
+        if let Some(i) = self.pending.iter().position(|m| matches!(m, FromWorker::Drained)) {
+            self.pending.remove(i);
+            return Ok(());
+        }
+        loop {
+            match self.worker.recv(self.timeout).map_err(ApiError::internal)? {
+                FromWorker::Drained => return Ok(()),
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
     /// Engine runtime stats (the `runtime_stats_text` analog).
     pub fn stats(&mut self) -> Result<Value, ApiError> {
         self.worker.post(&ToWorker::Stats).map_err(ApiError::internal)?;
         loop {
-            match self.poll(REQUEST_TIMEOUT)? {
+            match self.poll(self.timeout)? {
                 FromWorker::Stats { payload } => return Ok(payload),
                 other => self.pending.push_back(other),
             }
@@ -114,7 +137,7 @@ impl ServiceWorkerMLCEngine {
             return Ok(self.pending.remove(idx).unwrap());
         }
         loop {
-            let msg = self.worker.recv(REQUEST_TIMEOUT).map_err(ApiError::internal)?;
+            let msg = self.worker.recv(self.timeout).map_err(ApiError::internal)?;
             if message_id(&msg) == Some(id) {
                 return Ok(msg);
             }

@@ -17,6 +17,9 @@ pub enum ToWorker {
     ChatCompletion { id: u64, request: ChatCompletionRequest },
     Abort { id: u64 },
     Stats,
+    /// Graceful drain: stop admitting, finish residents (within
+    /// `timeout_ms` when given), then announce [`FromWorker::Drained`].
+    Drain { timeout_ms: Option<u64> },
     Shutdown,
 }
 
@@ -29,6 +32,8 @@ pub enum FromWorker {
     Stats { payload: Value },
     /// Worker finished loading models and is ready for requests.
     Ready { models: Vec<String> },
+    /// Drain complete: every resident request resolved, none admitted.
+    Drained,
 }
 
 impl ToWorker {
@@ -44,6 +49,13 @@ impl ToWorker {
                 "id" => *id as i64,
             },
             ToWorker::Stats => crate::obj! { "kind" => "stats" },
+            ToWorker::Drain { timeout_ms } => {
+                let mut v = crate::obj! { "kind" => "drain" };
+                if let Some(ms) = timeout_ms {
+                    v.set("timeout_ms", *ms as i64);
+                }
+                v
+            }
             ToWorker::Shutdown => crate::obj! { "kind" => "shutdown" },
         };
         to_string(&v)
@@ -63,6 +75,9 @@ impl ToWorker {
             }),
             "abort" => Ok(ToWorker::Abort { id: id()? }),
             "stats" => Ok(ToWorker::Stats),
+            "drain" => Ok(ToWorker::Drain {
+                timeout_ms: v.get("timeout_ms").and_then(Value::as_u64),
+            }),
             "shutdown" => Ok(ToWorker::Shutdown),
             other => Err(format!("unknown message kind '{other}'")),
         }
@@ -95,6 +110,7 @@ impl FromWorker {
                 "kind" => "ready",
                 "payload" => models.clone(),
             },
+            FromWorker::Drained => crate::obj! { "kind" => "drained" },
         };
         to_string(&v)
     }
@@ -126,6 +142,7 @@ impl FromWorker {
                     .filter_map(|m| m.as_str().map(String::from))
                     .collect(),
             }),
+            "drained" => Ok(FromWorker::Drained),
             other => Err(format!("unknown message kind '{other}'")),
         }
     }
@@ -151,6 +168,22 @@ mod tests {
         assert!(matches!(ToWorker::from_wire(r#"{"kind":"stats"}"#).unwrap(), ToWorker::Stats));
         assert!(ToWorker::from_wire(r#"{"kind":"nope"}"#).is_err());
         assert!(ToWorker::from_wire("not json").is_err());
+    }
+
+    #[test]
+    fn drain_roundtrip() {
+        let wire = ToWorker::Drain { timeout_ms: Some(250) }.to_wire();
+        match ToWorker::from_wire(&wire).unwrap() {
+            ToWorker::Drain { timeout_ms } => assert_eq!(timeout_ms, Some(250)),
+            other => panic!("{other:?}"),
+        }
+        // No bound => drain waits for residents indefinitely.
+        match ToWorker::from_wire(r#"{"kind":"drain"}"#).unwrap() {
+            ToWorker::Drain { timeout_ms } => assert_eq!(timeout_ms, None),
+            other => panic!("{other:?}"),
+        }
+        let wire = FromWorker::Drained.to_wire();
+        assert!(matches!(FromWorker::from_wire(&wire).unwrap(), FromWorker::Drained));
     }
 
     #[test]

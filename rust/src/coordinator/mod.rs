@@ -24,4 +24,5 @@ pub use engine::{
     DEFAULT_MAX_CONCURRENT_PREFILLS, DEFAULT_MAX_WAITING_REQUESTS, DEFAULT_PREFILL_TOKEN_BUDGET,
 };
 pub use frontend::ServiceWorkerMLCEngine;
+pub use messages::{FromWorker, ToWorker};
 pub use worker::WorkerHandle;

@@ -28,6 +28,8 @@ impl WorkerHandle {
     pub fn spawn(cfg: EngineConfig) -> Result<(Self, Vec<String>), String> {
         let (tx_in, rx_in) = channel::<String>();
         let (tx_out, rx_out) = channel::<String>();
+        // Read the configured bound before `cfg` moves into the thread.
+        let ready_timeout = cfg.engine_timeout();
         let join = std::thread::Builder::new()
             .name("mlc-worker".into())
             .spawn(move || worker_main(cfg, rx_in, tx_out))
@@ -36,7 +38,7 @@ impl WorkerHandle {
         // First message must be Ready (or an Error if loading failed).
         let first = handle
             .from_worker
-            .recv_timeout(Duration::from_secs(600))
+            .recv_timeout(ready_timeout)
             .map_err(|e| format!("worker did not become ready: {e}"))?;
         match FromWorker::from_wire(&first)? {
             FromWorker::Ready { models } => Ok((handle, models)),
@@ -87,6 +89,9 @@ fn worker_main(cfg: EngineConfig, inbox: Receiver<String>, outbox: Sender<String
 
     // request-id (wire) <-> engine request id mapping.
     let mut wire_of: HashMap<u64, u64> = HashMap::new();
+    // Drained is announced once per drain request, after the last
+    // resident request's events are flushed.
+    let mut drained_announced = false;
 
     'outer: loop {
         // Message intake: blocking when idle, draining when busy.
@@ -122,6 +127,10 @@ fn worker_main(cfg: EngineConfig, inbox: Receiver<String>, outbox: Sender<String
                 Ok(ToWorker::Stats) => {
                     send(FromWorker::Stats { payload: engine.stats_json() });
                 }
+                Ok(ToWorker::Drain { timeout_ms }) => {
+                    engine.drain(timeout_ms);
+                    drained_announced = false;
+                }
                 Ok(ToWorker::Shutdown) => break 'outer,
                 Err(e) => send(FromWorker::Error {
                     id: 0,
@@ -130,7 +139,9 @@ fn worker_main(cfg: EngineConfig, inbox: Receiver<String>, outbox: Sender<String
             }
         }
 
-        // One scheduler step, then flush events.
+        // One scheduler step, then flush events. `step()` absorbs
+        // recoverable faults (transient retries, device loss) internally;
+        // an `Err` here is a genuine internal failure.
         if engine.has_work() {
             if let Err(e) = engine.step() {
                 // Engine-level failure: fail every in-flight request.
@@ -160,6 +171,10 @@ fn worker_main(cfg: EngineConfig, inbox: Receiver<String>, outbox: Sender<String
                     }
                 }
             }
+        }
+        if engine.drained() && !drained_announced {
+            drained_announced = true;
+            send(FromWorker::Drained);
         }
     }
 }

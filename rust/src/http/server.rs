@@ -80,7 +80,9 @@ impl HttpResponse {
             status,
             content_type: "application/json",
             body: to_string(v),
-            retry_after: (status == 429).then_some(1),
+            // 429 = queue back-pressure, 503 = draining; both mean "this
+            // exact request is fine, try again elsewhere/later".
+            retry_after: (status == 429 || status == 503).then_some(1),
         }
     }
 
@@ -106,8 +108,10 @@ pub fn status_text(code: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         429 => "Too Many Requests",
         499 => "Client Closed Request",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
     }
 }
@@ -130,17 +134,18 @@ pub fn serve(cfg: ServerConfig) -> Result<(), String> {
     let mut frontend = ServiceWorkerMLCEngine::create(cfg.engine.clone()).map_err(|e| e.to_string())?;
     log::info!("models ready: {:?}", frontend.models());
 
-    // Connection threads parse HTTP and forward (request, reply-channel)
-    // here; this loop owns the frontend (single consumer of worker msgs).
-    let (tx, rx) = channel::<(ChatCompletionRequest, std::sync::mpsc::Sender<Event>)>();
+    // Connection threads parse HTTP and forward messages here; this loop
+    // owns the frontend (single consumer of worker msgs).
+    let (tx, rx) = channel::<Incoming>();
     let tx_accept = tx.clone();
     let addr = cfg.addr.clone();
+    let engine_timeout = cfg.engine.engine_timeout();
     std::thread::spawn(move || {
         for stream in listener.incoming() {
             let Ok(stream) = stream else { continue };
             let tx = tx_accept.clone();
             std::thread::spawn(move || {
-                let _ = handle_connection(stream, tx);
+                let _ = handle_connection(stream, tx, engine_timeout);
             });
         }
         let _ = addr;
@@ -150,15 +155,27 @@ pub fn serve(cfg: ServerConfig) -> Result<(), String> {
     // pending wire-id -> reply channel
     let mut replies: std::collections::HashMap<u64, std::sync::mpsc::Sender<Event>> =
         std::collections::HashMap::new();
+    // Drain connections waiting for the worker's Drained announcement.
+    let mut drain_acks: Vec<std::sync::mpsc::Sender<Event>> = Vec::new();
     loop {
         // New requests (non-blocking when work is pending).
-        while let Ok((req, reply)) = rx.try_recv() {
-            match frontend.submit(req) {
-                Ok(id) => {
-                    replies.insert(id, reply);
-                }
-                Err(e) => {
-                    let _ = reply.send(Event::Error(e));
+        while let Ok(incoming) = rx.try_recv() {
+            match incoming {
+                Incoming::Chat(req, reply) => match frontend.submit(req) {
+                    Ok(id) => {
+                        replies.insert(id, reply);
+                    }
+                    Err(e) => {
+                        let _ = reply.send(Event::Error(e));
+                    }
+                },
+                Incoming::Drain { timeout_ms, ack } => {
+                    match frontend.drain(timeout_ms) {
+                        Ok(()) => drain_acks.push(ack),
+                        Err(e) => {
+                            let _ = ack.send(Event::Error(e));
+                        }
+                    }
                 }
             }
         }
@@ -181,6 +198,11 @@ pub fn serve(cfg: ServerConfig) -> Result<(), String> {
                     handled += 1;
                 }
             }
+            Ok(FromWorker::Drained) => {
+                for ack in drain_acks.drain(..) {
+                    let _ = ack.send(Event::Done(crate::obj! {"status" => "drained"}));
+                }
+            }
             _ => {}
         }
         if let Some(max) = cfg.max_requests {
@@ -191,6 +213,14 @@ pub fn serve(cfg: ServerConfig) -> Result<(), String> {
     }
 }
 
+/// Connection-thread -> serve-loop messages.
+pub(crate) enum Incoming {
+    Chat(ChatCompletionRequest, std::sync::mpsc::Sender<Event>),
+    /// `POST /admin/drain`: close admission, resolve residents, ack when
+    /// the worker announces the drain is complete.
+    Drain { timeout_ms: Option<u64>, ack: std::sync::mpsc::Sender<Event> },
+}
+
 pub(crate) enum Event {
     Chunk(Value),
     Done(Value),
@@ -199,7 +229,8 @@ pub(crate) enum Event {
 
 fn handle_connection(
     stream: TcpStream,
-    tx: std::sync::mpsc::Sender<(ChatCompletionRequest, std::sync::mpsc::Sender<Event>)>,
+    tx: std::sync::mpsc::Sender<Incoming>,
+    engine_timeout: Duration,
 ) -> Result<(), String> {
     stream
         .set_read_timeout(Some(Duration::from_secs(30)))
@@ -222,19 +253,19 @@ fn handle_connection(
             };
             let stream_mode = request.stream;
             let (reply_tx, reply_rx) = channel::<Event>();
-            tx.send((request, reply_tx)).map_err(|e| e.to_string())?;
+            tx.send(Incoming::Chat(request, reply_tx)).map_err(|e| e.to_string())?;
 
             if stream_mode {
                 // The SSE preamble is deferred until the engine produces a
                 // first event: a submit-time rejection (429 queue_full,
-                // 404, ...) goes out as a plain status + Retry-After
-                // instead of burying the error inside a 200 event stream.
-                match reply_rx.recv_timeout(Duration::from_secs(600)) {
+                // 503 draining, 404, ...) goes out as a plain status +
+                // Retry-After instead of buried inside a 200 event stream.
+                match reply_rx.recv_timeout(engine_timeout) {
                     Ok(Event::Error(e)) => {
                         let _ = HttpResponse::json(e.status, &e.to_json()).write_to(&mut out);
                     }
                     Err(_) => {
-                        let e = ApiError::internal("engine timeout");
+                        let e = ApiError::timeout("engine produced no event within --engine-timeout");
                         let _ = HttpResponse::json(e.status, &e.to_json()).write_to(&mut out);
                     }
                     Ok(first) => {
@@ -255,15 +286,19 @@ fn handle_connection(
                                     break;
                                 }
                             }
-                            ev = match reply_rx.recv_timeout(Duration::from_secs(600)) {
+                            ev = match reply_rx.recv_timeout(engine_timeout) {
                                 Ok(ev) => ev,
-                                Err(_) => break,
+                                // Surface the stall as a structured SSE
+                                // error event, not a silent hangup.
+                                Err(_) => Event::Error(ApiError::timeout(
+                                    "engine produced no event within --engine-timeout",
+                                )),
                             };
                         }
                     }
                 }
             } else {
-                match reply_rx.recv_timeout(Duration::from_secs(600)) {
+                match reply_rx.recv_timeout(engine_timeout) {
                     Ok(Event::Done(v)) => {
                         let _ = HttpResponse::json(200, &v).write_to(&mut out);
                     }
@@ -272,9 +307,30 @@ fn handle_connection(
                     }
                     Ok(Event::Chunk(_)) => {}
                     Err(_) => {
-                        let e = ApiError::internal("engine timeout");
+                        let e = ApiError::timeout("engine produced no event within --engine-timeout");
                         let _ = HttpResponse::json(e.status, &e.to_json()).write_to(&mut out);
                     }
+                }
+            }
+        }
+        ("POST", "/admin/drain") => {
+            // Optional body: {"timeout_ms": N}. Blocks until the worker
+            // announces the drain is complete, then returns the ack.
+            let timeout_ms = crate::json::parse(&req.body)
+                .ok()
+                .and_then(|v| v.get("timeout_ms").and_then(Value::as_u64));
+            let (ack_tx, ack_rx) = channel::<Event>();
+            tx.send(Incoming::Drain { timeout_ms, ack: ack_tx }).map_err(|e| e.to_string())?;
+            match ack_rx.recv_timeout(engine_timeout) {
+                Ok(Event::Done(v)) => {
+                    let _ = HttpResponse::json(200, &v).write_to(&mut out);
+                }
+                Ok(Event::Error(e)) => {
+                    let _ = HttpResponse::json(e.status, &e.to_json()).write_to(&mut out);
+                }
+                _ => {
+                    let e = ApiError::timeout("drain did not complete within --engine-timeout");
+                    let _ = HttpResponse::json(e.status, &e.to_json()).write_to(&mut out);
                 }
             }
         }

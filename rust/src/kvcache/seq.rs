@@ -340,6 +340,18 @@ impl KvCacheManager {
         self.sync_evictions();
     }
 
+    /// Discard ALL pool state — allocator, prefix cache, and every live
+    /// sequence — after device loss. The physical pages backing them are
+    /// gone with the device, so the usual [`Self::free`] path (which
+    /// parks fully-written pages for prefix reuse) would serve garbage
+    /// KV to future admissions; nothing may survive. Prefix hit/miss
+    /// counters reset with the cache.
+    pub fn invalidate_all(&mut self) {
+        self.alloc = BlockAllocator::new(self.alloc.num_pages(), self.alloc.page_size());
+        self.prefix = PrefixCache::new();
+        self.seqs.clear();
+    }
+
     /// The i32 block-table row for an executable call, padded with the
     /// garbage page 0 to `max_pages_per_seq`.
     pub fn block_table_row(&self, id: SeqId) -> Vec<i32> {

@@ -440,3 +440,29 @@ fn prop_prefix_cache_shared_tables_agree() {
         Ok(())
     });
 }
+
+#[test]
+fn invalidate_all_discards_sequences_pool_and_prefix_cache() {
+    let mut m = KvCacheManager::new(16, 4, 8, true);
+    let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8, 9];
+    m.admit(1, &prompt).unwrap();
+    m.note_written(1, prompt.len());
+    m.free(1); // two full pages parked for reuse
+    m.admit(2, &prompt).unwrap();
+    assert_eq!(m.get(2).unwrap().cached_tokens, 8);
+
+    // Device loss: everything — live seqs, free pages, parked prefix
+    // pages — is garbage now.
+    m.invalidate_all();
+    m.check_invariants();
+    assert_eq!(m.num_sequences(), 0);
+    assert_eq!(m.available_pages(), 15); // pages 1..16; page 0 is garbage
+
+    // Re-admitting the same prompt must NOT hit the (cleared) prefix
+    // cache: a hit would read pages the lost device never rewrote.
+    let seq = m.admit(3, &prompt).unwrap();
+    assert_eq!(seq.cached_tokens, 0);
+    let (hits, _) = m.prefix_stats();
+    assert_eq!(hits, 0);
+    m.check_invariants();
+}

@@ -74,7 +74,12 @@ FLAGS:
                     (default 256)
   --no-adaptive-prefill
                     fixed per-step prefill budget instead of shrinking it
-                    as the decode batch grows",
+                    as the decode batch grows
+  --request-timeout default per-request deadline in seconds (overridden
+                    per request by 'deadline_ms'; expired requests fail
+                    with a structured timeout_error; default: none)
+  --engine-timeout  seconds any channel wait on the engine may block —
+                    worker readiness, HTTP replies, SSE gaps (default 600)",
         webllm::version()
     );
 }
@@ -148,6 +153,16 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig, String
     }
     if flags.contains_key("no-adaptive-prefill") {
         cfg.adaptive_prefill = false;
+    }
+    if let Some(s) = flags.get("request-timeout") {
+        let secs: u64 =
+            s.parse().map_err(|_| format!("--request-timeout: '{s}' is not seconds"))?;
+        cfg.request_timeout_ms = Some(secs.saturating_mul(1000));
+    }
+    if let Some(s) = flags.get("engine-timeout") {
+        let secs: u64 =
+            s.parse().map_err(|_| format!("--engine-timeout: '{s}' is not seconds"))?;
+        cfg.engine_timeout_ms = secs.saturating_mul(1000);
     }
     Ok(cfg)
 }

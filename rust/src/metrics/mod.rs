@@ -203,6 +203,30 @@ pub struct EngineStats {
     /// sequence resumed past its surviving prefix-cache boundary — the
     /// price paid for recompute-on-resume (spill/restore would zero it).
     pub preempted_tokens_recomputed: u64,
+    /// Backend faults the engine observed (transient errors, device
+    /// losses, non-finite logit rows) — injected or real.
+    pub faults_injected: u64,
+    /// In-place retries of transiently-failed backend ops (bounded; an
+    /// exhausted budget escalates to a device reset).
+    pub transient_retries: u64,
+    /// Device-loss recoveries: `reset_cache` + preempt-all + recompute
+    /// on resume.
+    pub device_resets: u64,
+    /// Scheduler steps that completed but overran the stuck-step
+    /// watchdog threshold.
+    pub watchdog_stalls: u64,
+    /// Requests failed individually by a data-plane fault or an engine
+    /// invariant breach (exactly one per fault — never the fleet).
+    pub requests_failed: u64,
+    /// Requests failed by their deadline (`deadline_ms` /
+    /// `--request-timeout`).
+    pub requests_timed_out: u64,
+    /// Submissions rejected with 503 because the engine was draining.
+    pub drain_rejected: u64,
+    /// Resident requests that finished normally during a drain.
+    pub drain_completed: u64,
+    /// Resident requests failed because the drain deadline passed.
+    pub drain_failed: u64,
     /// Time from request admission to first streamed token.
     pub ttft: Histogram,
     /// Inter-token latency.
@@ -304,6 +328,17 @@ impl EngineStats {
                 "draft_accept_rate" => self.draft_accept_rate(),
                 "spec_steps" => self.spec_steps as i64,
             },
+            "faults" => crate::obj! {
+                "faults_injected" => self.faults_injected as i64,
+                "transient_retries" => self.transient_retries as i64,
+                "device_resets" => self.device_resets as i64,
+                "watchdog_stalls" => self.watchdog_stalls as i64,
+                "requests_failed" => self.requests_failed as i64,
+                "requests_timed_out" => self.requests_timed_out as i64,
+                "drain_rejected" => self.drain_rejected as i64,
+                "drain_completed" => self.drain_completed as i64,
+                "drain_failed" => self.drain_failed as i64,
+            },
             "grammar" => crate::obj! {
                 "compiles" => self.grammar_compiles as i64,
                 "compile_s" => self.grammar_compile_s,
@@ -346,6 +381,15 @@ impl EngineStats {
         self.spec_steps += other.spec_steps;
         self.preemptions += other.preemptions;
         self.preempted_tokens_recomputed += other.preempted_tokens_recomputed;
+        self.faults_injected += other.faults_injected;
+        self.transient_retries += other.transient_retries;
+        self.device_resets += other.device_resets;
+        self.watchdog_stalls += other.watchdog_stalls;
+        self.requests_failed += other.requests_failed;
+        self.requests_timed_out += other.requests_timed_out;
+        self.drain_rejected += other.drain_rejected;
+        self.drain_completed += other.drain_completed;
+        self.drain_failed += other.drain_failed;
         for &s in &other.ttft.samples {
             self.ttft.push(s);
         }
@@ -547,5 +591,45 @@ mod tests {
         assert_eq!(s.draft_proposed, 12);
         assert_eq!(s.draft_accepted, 7);
         assert_eq!(s.spec_steps, 5);
+    }
+
+    #[test]
+    fn engine_stats_fault_counters_and_json() {
+        let mut s = EngineStats::new();
+        s.faults_injected = 5;
+        s.transient_retries = 3;
+        s.device_resets = 1;
+        s.watchdog_stalls = 2;
+        s.requests_failed = 1;
+        s.requests_timed_out = 4;
+        s.drain_rejected = 6;
+        s.drain_completed = 7;
+        s.drain_failed = 1;
+
+        let v = s.stats_json();
+        let f = v.get("faults").expect("faults section");
+        assert_eq!(f.get("faults_injected").and_then(|x| x.as_i64()), Some(5));
+        assert_eq!(f.get("transient_retries").and_then(|x| x.as_i64()), Some(3));
+        assert_eq!(f.get("device_resets").and_then(|x| x.as_i64()), Some(1));
+        assert_eq!(f.get("watchdog_stalls").and_then(|x| x.as_i64()), Some(2));
+        assert_eq!(f.get("requests_failed").and_then(|x| x.as_i64()), Some(1));
+        assert_eq!(f.get("requests_timed_out").and_then(|x| x.as_i64()), Some(4));
+        assert_eq!(f.get("drain_rejected").and_then(|x| x.as_i64()), Some(6));
+        assert_eq!(f.get("drain_completed").and_then(|x| x.as_i64()), Some(7));
+        assert_eq!(f.get("drain_failed").and_then(|x| x.as_i64()), Some(1));
+
+        let mut other = EngineStats::new();
+        other.faults_injected = 2;
+        other.transient_retries = 1;
+        other.device_resets = 1;
+        other.requests_failed = 3;
+        other.drain_completed = 2;
+        s.merge(&other);
+        assert_eq!(s.faults_injected, 7);
+        assert_eq!(s.transient_retries, 4);
+        assert_eq!(s.device_resets, 2);
+        assert_eq!(s.requests_failed, 4);
+        assert_eq!(s.drain_completed, 9);
+        assert_eq!(s.watchdog_stalls, 2);
     }
 }

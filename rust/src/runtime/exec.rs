@@ -15,6 +15,39 @@ pub enum RuntimeError {
     Xla(xla::Error),
     Artifact(String),
     Shape(String),
+    /// A spurious backend hiccup (dropped queue submission, transient
+    /// kernel failure): the op is safe to retry as-is — no device state
+    /// was corrupted. The engine retries with bounded backoff and
+    /// escalates to a device reset if the fault persists.
+    Transient(String),
+    /// The device — and with it every backend-resident KV page — is gone:
+    /// the offline analog of WebGPU's `device.lost`. Sticky until the
+    /// backend's `reset_cache` restores a fresh (empty) pool; host-side
+    /// KV metadata must be invalidated and recomputed.
+    DeviceLost(String),
+}
+
+/// Recovery class of a [`RuntimeError`], the engine's dispatch key:
+/// retry, reset-and-recompute, or give up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Retryable in place ([`RuntimeError::Transient`]).
+    Transient,
+    /// Device and KV pool gone ([`RuntimeError::DeviceLost`]); recover
+    /// via `reset_cache` + preempt-all + recompute.
+    DeviceLost,
+    /// Engine/artifact/shape bugs — not recoverable by the scheduler.
+    Internal,
+}
+
+impl RuntimeError {
+    pub fn class(&self) -> FaultClass {
+        match self {
+            RuntimeError::Transient(_) => FaultClass::Transient,
+            RuntimeError::DeviceLost(_) => FaultClass::DeviceLost,
+            _ => FaultClass::Internal,
+        }
+    }
 }
 
 impl fmt::Display for RuntimeError {
@@ -23,6 +56,8 @@ impl fmt::Display for RuntimeError {
             RuntimeError::Xla(e) => write!(f, "xla error: {e}"),
             RuntimeError::Artifact(m) => write!(f, "artifact error: {m}"),
             RuntimeError::Shape(m) => write!(f, "shape error: {m}"),
+            RuntimeError::Transient(m) => write!(f, "transient backend fault: {m}"),
+            RuntimeError::DeviceLost(m) => write!(f, "device lost: {m}"),
         }
     }
 }

@@ -1,0 +1,448 @@
+//! Deterministic fault injection over any [`ModelBackend`].
+//!
+//! The offline analog of WebGPU device unreliability: browsers revoke
+//! GPU devices on tab backgrounding, driver resets, and memory pressure
+//! (`device.lost` resolves and every subsequent submit fails), drivers
+//! hiccup transiently, and buggy kernels return NaN rows. The engine's
+//! recovery paths (`coordinator::engine`) must be *exactly* testable, so
+//! [`FaultInjectingBackend`] wraps a real backend and injects faults on
+//! a reproducible schedule keyed by a monotonic operation index — the
+//! same schedule always produces the same faults at the same ops, which
+//! lets tests assert recovery counters match the plan exactly.
+//!
+//! The op index advances on every `prefill_chunk` / `verify_chunk` /
+//! `decode` call, *including* calls that fail — so a retry of a failed
+//! op observes the next schedule entry, and back-to-back scheduled
+//! transients model a fault that outlives the retry budget.
+
+use std::time::Duration;
+
+use super::backend::ModelBackend;
+use super::exec::{RuntimeError, StepOutput};
+use crate::models::ModelConfig;
+
+/// What to inject at a scheduled operation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// One-shot retryable failure ([`RuntimeError::Transient`]); the op
+    /// does not execute. The next attempt (next op index) sees whatever
+    /// the schedule says there.
+    Transient,
+    /// Fatal device loss ([`RuntimeError::DeviceLost`]): the op does not
+    /// execute and **every** subsequent op fails the same way until
+    /// [`ModelBackend::reset_cache`] — the sticky semantics of a lost
+    /// WebGPU device.
+    DeviceLost,
+    /// Data-plane corruption: the op executes normally, then one live
+    /// logits row is overwritten with NaN. The payload selects which row
+    /// (mod the number of live rows for decode; prefill/verify poison
+    /// the row the engine is guaranteed to consume).
+    NanRow(usize),
+    /// Latency fault: sleep this many milliseconds, then execute the op
+    /// normally. Exercises the engine's stuck-step watchdog.
+    StallMs(u64),
+}
+
+/// A reproducible schedule: `(op_index, fault)` pairs over the wrapped
+/// backend's monotonic operation counter.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    schedule: Vec<(u64, FaultKind)>,
+}
+
+impl FaultPlan {
+    /// An explicit schedule. Later entries win on duplicate op indices.
+    pub fn at(schedule: Vec<(u64, FaultKind)>) -> Self {
+        Self { schedule }
+    }
+
+    /// A seeded pseudo-random schedule over ops `[0, horizon)`: each op
+    /// faults with probability `rate_pct`%, drawing uniformly from
+    /// transient / NaN-row / short-stall. Device loss is deliberately
+    /// excluded (it is sticky, so a random mix would wedge a bare
+    /// backend); add one explicitly with [`Self::then`].
+    pub fn seeded(seed: u64, horizon: u64, rate_pct: u64) -> Self {
+        let mut s = seed | 1;
+        let mut roll = move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            s >> 33
+        };
+        let schedule = (0..horizon)
+            .filter_map(|op| {
+                if roll() % 100 >= rate_pct {
+                    return None;
+                }
+                let kind = match roll() % 3 {
+                    0 => FaultKind::Transient,
+                    1 => FaultKind::NanRow(roll() as usize % 8),
+                    _ => FaultKind::StallMs(1 + roll() % 3),
+                };
+                Some((op, kind))
+            })
+            .collect();
+        Self { schedule }
+    }
+
+    /// Append one more scheduled fault (builder-style).
+    pub fn then(mut self, op: u64, kind: FaultKind) -> Self {
+        self.schedule.push((op, kind));
+        self
+    }
+
+    /// Scheduled fault for `op`, if any (last entry wins).
+    fn lookup(&self, op: u64) -> Option<FaultKind> {
+        self.schedule.iter().rev().find(|(o, _)| *o == op).map(|(_, k)| *k)
+    }
+
+    /// Number of scheduled faults.
+    pub fn len(&self) -> usize {
+        self.schedule.len()
+    }
+
+    /// True when nothing is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.schedule.is_empty()
+    }
+}
+
+/// Injection tallies, for asserting a run observed its schedule exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Total scheduled faults that actually fired (sticky device-lost
+    /// repeats are not re-counted).
+    pub injected: u64,
+    pub transient: u64,
+    pub device_lost: u64,
+    pub nan_rows: u64,
+    pub stalls: u64,
+}
+
+/// [`ModelBackend`] decorator that injects the faults a [`FaultPlan`]
+/// schedules, delegating everything else to the wrapped backend.
+///
+/// Composes with [`super::ReferenceBackend`] (the intended pairing: a
+/// deterministic model under a deterministic fault schedule) and equally
+/// with the compiled runtime.
+pub struct FaultInjectingBackend {
+    inner: Box<dyn ModelBackend>,
+    plan: FaultPlan,
+    /// Monotonic operation index; advances on every prefill/verify/
+    /// decode call, successful or not.
+    op: u64,
+    /// Sticky device-lost latch; cleared only by `reset_cache`.
+    lost: bool,
+    counters: FaultCounters,
+}
+
+impl FaultInjectingBackend {
+    pub fn new(inner: Box<dyn ModelBackend>, plan: FaultPlan) -> Self {
+        Self { inner, plan, op: 0, lost: false, counters: FaultCounters::default() }
+    }
+
+    /// Operations attempted so far (the next op's schedule index).
+    pub fn op(&self) -> u64 {
+        self.op
+    }
+
+    /// True while the simulated device is lost.
+    pub fn is_lost(&self) -> bool {
+        self.lost
+    }
+
+    pub fn counters(&self) -> FaultCounters {
+        self.counters
+    }
+
+    /// Consume the schedule entry for the current op. `Err` means the op
+    /// must not execute; `Ok(Some(kind))` carries a data-plane/latency
+    /// fault for the caller to apply around the real op.
+    fn pre_op(&mut self) -> Result<Option<FaultKind>, RuntimeError> {
+        let idx = self.op;
+        self.op += 1;
+        if self.lost {
+            return Err(RuntimeError::DeviceLost("device already lost (awaiting reset)".into()));
+        }
+        match self.plan.lookup(idx) {
+            None => Ok(None),
+            Some(FaultKind::Transient) => {
+                self.counters.injected += 1;
+                self.counters.transient += 1;
+                Err(RuntimeError::Transient(format!("injected transient at op {idx}")))
+            }
+            Some(FaultKind::DeviceLost) => {
+                self.lost = true;
+                self.counters.injected += 1;
+                self.counters.device_lost += 1;
+                Err(RuntimeError::DeviceLost(format!("injected device loss at op {idx}")))
+            }
+            Some(kind @ (FaultKind::NanRow(_) | FaultKind::StallMs(_))) => Ok(Some(kind)),
+        }
+    }
+
+    fn stall(&mut self, kind: Option<FaultKind>) {
+        if let Some(FaultKind::StallMs(ms)) = kind {
+            self.counters.injected += 1;
+            self.counters.stalls += 1;
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+
+    /// Overwrite logits row `row` (of `rows` total) with NaN.
+    fn poison(&mut self, out: &mut StepOutput, row: usize, rows: usize) {
+        debug_assert!(row < rows);
+        let vocab = self.inner.config().vocab_size;
+        debug_assert!(out.logits.len() >= rows * vocab);
+        out.logits[row * vocab..(row + 1) * vocab].fill(f32::NAN);
+        self.counters.injected += 1;
+        self.counters.nan_rows += 1;
+    }
+}
+
+impl ModelBackend for FaultInjectingBackend {
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn compiled_chunks(&self) -> Vec<usize> {
+        self.inner.compiled_chunks()
+    }
+
+    fn compiled_batches(&self) -> Vec<usize> {
+        self.inner.compiled_batches()
+    }
+
+    /// Clears the device-lost latch (the offline analog of requesting a
+    /// fresh GPUDevice) and resets the wrapped backend's KV pools. The
+    /// op counter and schedule keep advancing — recovery itself can be
+    /// scheduled to fault.
+    fn reset_cache(&mut self) -> Result<(), RuntimeError> {
+        self.lost = false;
+        self.inner.reset_cache()
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        ids: &[i32],
+        start_pos: usize,
+        n: usize,
+        block_table: &[i32],
+    ) -> Result<StepOutput, RuntimeError> {
+        let fault = self.pre_op()?;
+        self.stall(fault);
+        let mut out = self.inner.prefill_chunk(ids, start_pos, n, block_table)?;
+        if let Some(FaultKind::NanRow(_)) = fault {
+            // Prefill returns exactly one row; it is always consumed (the
+            // engine scans every chunk's returned logits).
+            self.poison(&mut out, 0, 1);
+        }
+        Ok(out)
+    }
+
+    fn verify_chunk(
+        &mut self,
+        ids: &[i32],
+        start_pos: usize,
+        n: usize,
+        block_table: &[i32],
+    ) -> Result<StepOutput, RuntimeError> {
+        let fault = self.pre_op()?;
+        self.stall(fault);
+        let mut out = self.inner.verify_chunk(ids, start_pos, n, block_table)?;
+        if let Some(FaultKind::NanRow(_)) = fault {
+            // Row 0 scores the sequence's own last sampled token, so the
+            // engine consumes it unconditionally regardless of how many
+            // speculative tokens it accepts.
+            self.poison(&mut out, 0, n);
+        }
+        Ok(out)
+    }
+
+    fn decode(
+        &mut self,
+        ids: &[i32],
+        positions: &[i32],
+        seq_lens: &[i32],
+        block_tables: &[i32],
+    ) -> Result<StepOutput, RuntimeError> {
+        let fault = self.pre_op()?;
+        self.stall(fault);
+        let mut out = self.inner.decode(ids, positions, seq_lens, block_tables)?;
+        if let Some(FaultKind::NanRow(r)) = fault {
+            // Target a live row (seq_len > 0) so the corruption is
+            // observed; padding rows are never consumed, and poisoning
+            // one would make the schedule under-count.
+            let live: Vec<usize> =
+                (0..seq_lens.len()).filter(|&i| seq_lens[i] > 0).collect();
+            if !live.is_empty() {
+                self.poison(&mut out, live[r % live.len()], seq_lens.len());
+            }
+        }
+        Ok(out)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.inner.weight_bytes()
+    }
+
+    fn load_seconds(&self) -> f64 {
+        self.inner.load_seconds()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::reference_model_config;
+    use crate::runtime::reference::ReferenceBackend;
+    use crate::runtime::FaultClass;
+
+    fn reference() -> Box<dyn ModelBackend> {
+        Box::new(ReferenceBackend::new(
+            reference_model_config("tiny-ref").unwrap(),
+            7,
+            Some(2),
+            None,
+        ))
+    }
+
+    fn wrapped(plan: FaultPlan) -> FaultInjectingBackend {
+        FaultInjectingBackend::new(reference(), plan)
+    }
+
+    fn padded(ids: &[i32], chunk: usize) -> Vec<i32> {
+        let mut v = ids.to_vec();
+        v.resize(chunk, 0);
+        v
+    }
+
+    /// Block table with one real page, padded with garbage page 0.
+    fn table(rt: &dyn ModelBackend, page: i32) -> Vec<i32> {
+        let mut bt = vec![0i32; rt.config().max_pages_per_seq()];
+        bt[0] = page;
+        bt
+    }
+
+    #[test]
+    fn transient_fails_once_then_passes_through_identically() {
+        let mut clean = reference();
+        let bt = table(clean.as_ref(), 1);
+        let want = clean.prefill(&padded(&[5, 6], 16), 2, &bt).unwrap();
+
+        let mut rt = wrapped(FaultPlan::at(vec![(0, FaultKind::Transient)]));
+        let err = rt.prefill(&padded(&[5, 6], 16), 2, &bt).unwrap_err();
+        assert_eq!(err.class(), FaultClass::Transient);
+        // Retry (op 1, unscheduled) executes and matches the clean run.
+        let got = rt.prefill(&padded(&[5, 6], 16), 2, &bt).unwrap();
+        assert_eq!(got.logits, want.logits);
+        assert_eq!(
+            rt.counters(),
+            FaultCounters { injected: 1, transient: 1, ..Default::default() }
+        );
+    }
+
+    #[test]
+    fn device_loss_is_sticky_until_reset() {
+        let mut rt = wrapped(FaultPlan::at(vec![(1, FaultKind::DeviceLost)]));
+        let bt = table(&rt, 1);
+        rt.prefill(&padded(&[5, 6], 16), 2, &bt).unwrap(); // op 0
+        let err = rt.prefill(&padded(&[5, 6], 16), 2, &bt).unwrap_err(); // op 1
+        assert_eq!(err.class(), FaultClass::DeviceLost);
+        assert!(rt.is_lost());
+        // Every op after the loss fails the same way, schedule or not...
+        for _ in 0..3 {
+            let err = rt.decode(&[9], &[2], &[3], &bt).unwrap_err();
+            assert_eq!(err.class(), FaultClass::DeviceLost);
+        }
+        // ...and only the loss itself was counted.
+        assert_eq!(rt.counters().injected, 1);
+        assert_eq!(rt.counters().device_lost, 1);
+        // reset_cache restores the device (and wipes KV, so re-prefill).
+        rt.reset_cache().unwrap();
+        assert!(!rt.is_lost());
+        rt.prefill(&padded(&[5, 6], 16), 2, &bt).unwrap();
+    }
+
+    #[test]
+    fn nan_row_poisons_exactly_the_targeted_live_decode_row() {
+        let mut rt = wrapped(FaultPlan::at(vec![(1, FaultKind::NanRow(0))]));
+        let vocab = rt.config().vocab_size;
+        let mp = rt.config().max_pages_per_seq();
+        let bt = table(&rt, 1);
+        rt.prefill(&padded(&[5, 6], 16), 2, &bt).unwrap(); // op 0
+        // Batch of 2: row 0 live, row 1 padding (seq_len 0).
+        let mut bt2 = vec![0i32; 2 * mp];
+        bt2[..mp].copy_from_slice(&bt);
+        let out = rt.decode(&[9, 0], &[2, 0], &[3, 0], &bt2).unwrap(); // op 1
+        assert!(out.logits[..vocab].iter().all(|x| x.is_nan()), "live row not poisoned");
+        assert!(out.logits[vocab..].iter().all(|x| x.is_finite()), "padding row poisoned");
+        assert_eq!(rt.counters().nan_rows, 1);
+    }
+
+    #[test]
+    fn nan_row_index_wraps_over_live_rows_only() {
+        // NanRow(5) over a single live row must land on that row, not a
+        // padding slot: injection targets what the engine consumes.
+        let mut rt = wrapped(FaultPlan::at(vec![(1, FaultKind::NanRow(5))]));
+        let vocab = rt.config().vocab_size;
+        let bt = table(&rt, 1);
+        rt.prefill(&padded(&[5, 6], 16), 2, &bt).unwrap();
+        let out = rt.decode(&[9], &[2], &[3], &bt).unwrap();
+        assert!(out.logits[..vocab].iter().all(|x| x.is_nan()));
+    }
+
+    #[test]
+    fn verify_chunk_poisons_row_zero() {
+        let mut rt = wrapped(FaultPlan::at(vec![(1, FaultKind::NanRow(3))]));
+        let vocab = rt.config().vocab_size;
+        let bt = table(&rt, 1);
+        rt.prefill(&padded(&[5, 6], 16), 2, &bt).unwrap(); // op 0
+        let out = rt.verify_chunk(&padded(&[9, 9, 9], 16), 2, 3, &bt).unwrap(); // op 1
+        assert!(out.logits[..vocab].iter().all(|x| x.is_nan()), "row 0 not poisoned");
+        assert!(out.logits[vocab..].iter().all(|x| x.is_finite()), "later rows poisoned");
+        // The wrapper's verify is ONE op even though the reference
+        // default decomposes into n decodes internally.
+        assert_eq!(rt.op(), 2);
+    }
+
+    #[test]
+    fn stall_executes_after_sleeping() {
+        let mut rt = wrapped(FaultPlan::at(vec![(0, FaultKind::StallMs(5))]));
+        let bt = table(&rt, 1);
+        let t0 = std::time::Instant::now();
+        let out = rt.prefill(&padded(&[5, 6], 16), 2, &bt).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+        assert_eq!(rt.counters().stalls, 1);
+    }
+
+    #[test]
+    fn seeded_plan_is_reproducible_and_loss_free() {
+        let a = FaultPlan::seeded(0xFA17, 200, 10);
+        let b = FaultPlan::seeded(0xFA17, 200, 10);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert!(!a.is_empty(), "10% over 200 ops scheduled nothing");
+        assert!(a.len() < 60, "rate wildly off");
+        for op in 0..200 {
+            assert_ne!(a.lookup(op), Some(FaultKind::DeviceLost));
+        }
+        // Distinct seeds disagree somewhere.
+        let c = FaultPlan::seeded(0xFA18, 200, 10);
+        assert_ne!(format!("{a:?}"), format!("{c:?}"));
+    }
+
+    #[test]
+    fn unscheduled_ops_are_byte_transparent() {
+        // Same sequence of ops with an empty plan must match the bare
+        // backend exactly — the decorator must add nothing but faults.
+        let mut clean = reference();
+        let mut rt = wrapped(FaultPlan::default());
+        let bt = table(&rt, 1);
+        let a = clean.prefill(&padded(&[1, 2, 3], 16), 3, &bt).unwrap();
+        let b = rt.prefill(&padded(&[1, 2, 3], 16), 3, &bt).unwrap();
+        assert_eq!(a.logits, b.logits);
+        let a = clean.decode(&[7], &[3], &[4], &bt).unwrap();
+        let b = rt.decode(&[7], &[3], &[4], &bt).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(rt.counters(), FaultCounters::default());
+    }
+}

@@ -23,11 +23,13 @@
 
 mod backend;
 mod exec;
+pub mod fault;
 mod literal;
 pub mod reference;
 
 pub use backend::ModelBackend;
-pub use exec::{ModelRuntime, RuntimeError, StepOutput};
+pub use exec::{FaultClass, ModelRuntime, RuntimeError, StepOutput};
+pub use fault::{FaultCounters, FaultInjectingBackend, FaultKind, FaultPlan};
 pub use reference::ReferenceBackend;
 
 use std::cell::RefCell;

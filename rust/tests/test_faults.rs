@@ -1,0 +1,473 @@
+//! Fault-tolerance tier: a seeded [`FaultPlan`] over the deterministic
+//! reference backend must be *invisible* in the output and *exactly*
+//! visible in the counters.
+//!
+//! Load-bearing properties:
+//!   (a) transient faults retry to byte-identical output; a transient
+//!       that outlives the retry budget escalates to a device reset and
+//!       the output is STILL byte-identical;
+//!   (b) a NaN logits row fails exactly the implicated request with a
+//!       structured `data_plane_error` — survivors are untouched;
+//!   (c) device loss preempts every resident, resets the KV pool, and
+//!       recompute-on-resume reproduces every stream bit for bit —
+//!       including under grammar fast-forward + speculative decoding +
+//!       concurrent manual preemption;
+//!   (d) `step()` never returns `Err` for a recoverable fault;
+//!   (e) deadlines and drain produce structured `timeout_error` /
+//!       `draining` failures and exact counters, never hangs.
+
+use std::collections::HashMap;
+use webllm::api::{ApiError, ChatCompletionRequest, ChatCompletionResponse, ResponseFormat};
+use webllm::coordinator::{EngineConfig, EngineEvent, MLCEngine, RequestId};
+use webllm::json::parse;
+use webllm::runtime::{FaultKind, FaultPlan};
+use webllm::testutil::ban_reference_eos as ban_eos;
+
+const MODEL: &str = "tiny-ref";
+/// Divergent drafter (different depth/pool) so rejection paths run.
+const DRAFT: &str = "tiny-ref-b";
+
+fn engine() -> MLCEngine {
+    MLCEngine::new(&EngineConfig::reference(&[MODEL])).expect("engine")
+}
+
+fn faulty_engine(plan: FaultPlan) -> MLCEngine {
+    let mut cfg = EngineConfig::reference(&[MODEL]);
+    cfg.fault_plan = Some(plan);
+    MLCEngine::new(&cfg).expect("engine")
+}
+
+/// Greedy request over `'x' * k` (k + 4 prompt tokens, no merges).
+fn xs_request(k: usize, max_tokens: usize) -> ChatCompletionRequest {
+    let mut r = ChatCompletionRequest::new(MODEL).user("x".repeat(k));
+    r.max_tokens = max_tokens;
+    r.sampling.temperature = 0.0;
+    ban_eos(&mut r);
+    r
+}
+
+/// Counter from the `"faults"` section of `stats_json`.
+fn fault_stat(engine: &MLCEngine, key: &str) -> i64 {
+    engine
+        .stats_json()
+        .get("faults")
+        .unwrap_or_else(|| panic!("stats_json has no 'faults' section"))
+        .get(key)
+        .unwrap_or_else(|| panic!("no fault counter '{key}'"))
+        .as_i64()
+        .unwrap()
+}
+
+/// Drive to idle, asserting `step()` stays `Ok` the whole way (property
+/// (d)); collect terminal events per request. Bounded so a recovery bug
+/// fails loudly instead of hanging the suite.
+fn drive(
+    engine: &mut MLCEngine,
+) -> (HashMap<RequestId, ChatCompletionResponse>, HashMap<RequestId, ApiError>) {
+    let mut done = HashMap::new();
+    let mut failed = HashMap::new();
+    for _ in 0..500 {
+        engine.step().expect("step() must absorb recoverable faults");
+        for ev in engine.poll_events() {
+            match ev {
+                EngineEvent::Done(id, resp) => {
+                    done.insert(id, resp);
+                }
+                EngineEvent::Error(id, e) => {
+                    failed.insert(id, e);
+                }
+                _ => {}
+            }
+        }
+        if !engine.has_work() {
+            return (done, failed);
+        }
+    }
+    panic!("engine did not go idle within 500 steps");
+}
+
+/// Fault-free terminal texts for the same submission order, keyed by the
+/// request ids a fresh engine hands out (ids restart at 1 per engine, so
+/// they line up between baseline and faulted runs).
+fn baseline_texts(reqs: &[ChatCompletionRequest]) -> HashMap<RequestId, String> {
+    let mut e = engine();
+    for r in reqs {
+        e.submit(r.clone()).unwrap();
+    }
+    let (done, failed) = drive(&mut e);
+    assert!(failed.is_empty(), "fault-free baseline failed: {failed:?}");
+    done.into_iter().map(|(id, r)| (id, r.text().to_string())).collect()
+}
+
+// -- (a) transient faults ------------------------------------------------------
+
+#[test]
+fn scheduled_transients_retry_to_identical_output() {
+    let baseline = engine().chat_completion(xs_request(8, 6)).unwrap();
+
+    // Ops for one 12-token prompt: op 0 = prefill chunk, ops 1+ = decodes.
+    // Transients at ops 1 and 2: the op-1 call fails, its retry consumes
+    // op 2 and fails again, the next retry (op 3) succeeds.
+    let mut e = faulty_engine(FaultPlan::at(vec![
+        (1, FaultKind::Transient),
+        (2, FaultKind::Transient),
+    ]));
+    let id = e.submit(xs_request(8, 6)).unwrap();
+    let (done, failed) = drive(&mut e);
+
+    assert!(failed.is_empty(), "transients must be invisible: {failed:?}");
+    assert_eq!(done[&id].text(), baseline.text());
+    assert_eq!(done[&id].usage.completion_tokens, 6);
+    assert_eq!(fault_stat(&e, "faults_injected"), 2, "both scheduled transients observed");
+    assert_eq!(fault_stat(&e, "transient_retries"), 2);
+    assert_eq!(fault_stat(&e, "device_resets"), 0, "retries alone must not reset");
+    assert_eq!(fault_stat(&e, "requests_failed"), 0);
+}
+
+#[test]
+fn transient_exhaustion_escalates_to_device_reset_output_unchanged() {
+    let baseline = engine().chat_completion(xs_request(8, 8)).unwrap();
+
+    // Four back-to-back scheduled transients: one engine call observes
+    // ops 1..=4 (attempt 0 plus MAX_TRANSIENT_RETRIES = 3 retries), gives
+    // up, and escalates to the device-loss path — preempt, reset,
+    // recompute. The stream must still be byte-identical.
+    let mut e = faulty_engine(FaultPlan::at(vec![
+        (1, FaultKind::Transient),
+        (2, FaultKind::Transient),
+        (3, FaultKind::Transient),
+        (4, FaultKind::Transient),
+    ]));
+    let id = e.submit(xs_request(8, 8)).unwrap();
+    let (done, failed) = drive(&mut e);
+
+    assert!(failed.is_empty(), "escalation must recover, not fail: {failed:?}");
+    assert_eq!(done[&id].text(), baseline.text(), "reset+recompute changed the stream");
+    assert_eq!(fault_stat(&e, "faults_injected"), 4);
+    assert_eq!(fault_stat(&e, "transient_retries"), 3, "retry budget is 3");
+    assert_eq!(fault_stat(&e, "device_resets"), 1, "4th observation escalates");
+    assert_eq!(fault_stat(&e, "requests_failed"), 0);
+}
+
+// -- (b) data-plane isolation --------------------------------------------------
+
+#[test]
+fn nan_row_fails_exactly_one_request_and_survivors_are_byte_identical() {
+    let reqs = [xs_request(8, 24), xs_request(16, 24)];
+    let baseline = baseline_texts(&reqs);
+
+    // Op 10 is deep in steady-state decode with both sequences live;
+    // NanRow(0) poisons the first live row only.
+    let mut e = faulty_engine(FaultPlan::at(vec![(10, FaultKind::NanRow(0))]));
+    for r in &reqs {
+        e.submit(r.clone()).unwrap();
+    }
+    let (done, failed) = drive(&mut e);
+
+    assert_eq!(failed.len(), 1, "exactly one request fails per poisoned row");
+    let (victim, err) = failed.iter().next().unwrap();
+    assert_eq!(err.kind, "data_plane_error", "{err}");
+    assert_eq!(err.status, 500);
+    assert!(err.message.contains("non-finite"), "{err}");
+    assert_eq!(done.len(), 1);
+    for (id, resp) in &done {
+        assert_ne!(id, victim);
+        assert_eq!(resp.text(), baseline[id], "survivor's stream was disturbed");
+    }
+    assert_eq!(fault_stat(&e, "faults_injected"), 1);
+    assert_eq!(fault_stat(&e, "requests_failed"), 1);
+    assert_eq!(fault_stat(&e, "device_resets"), 0, "data-plane faults must not reset");
+}
+
+// -- (c) device loss -----------------------------------------------------------
+
+#[test]
+fn device_loss_preempts_everyone_and_every_stream_resumes_identically() {
+    let reqs = [xs_request(8, 12), xs_request(12, 12), xs_request(16, 12)];
+    let baseline = baseline_texts(&reqs);
+
+    let mut e = faulty_engine(FaultPlan::at(vec![(9, FaultKind::DeviceLost)]));
+    for r in &reqs {
+        e.submit(r.clone()).unwrap();
+    }
+    let (done, failed) = drive(&mut e);
+
+    assert!(failed.is_empty(), "device loss must fail no one: {failed:?}");
+    assert_eq!(done.len(), 3);
+    for (id, resp) in &done {
+        assert_eq!(resp.text(), baseline[id], "request {id} diverged across the reset");
+        assert_eq!(resp.usage.completion_tokens, 12);
+    }
+    assert_eq!(fault_stat(&e, "faults_injected"), 1, "sticky repeats are not re-counted");
+    assert_eq!(fault_stat(&e, "device_resets"), 1);
+    assert!(
+        e.stats_json().get("preemptions").unwrap().as_i64().unwrap() >= 1,
+        "reset must go through the preemption machinery"
+    );
+}
+
+#[test]
+fn device_loss_composes_with_speculation_grammar_and_manual_preemption() {
+    let spec_cfg = |plan: Option<FaultPlan>| {
+        let mut cfg = EngineConfig::reference(&[MODEL]);
+        cfg.draft_model = Some(DRAFT.to_string());
+        cfg.enable_fast_forward = true;
+        cfg.fault_plan = plan;
+        cfg
+    };
+    let schema = r#"{
+        "type": "object",
+        "properties": {"ok": {"type": "boolean"}, "n": {"type": "integer"}},
+        "required": ["ok", "n"]
+    }"#;
+    let mk = |k: usize| {
+        let mut r = ChatCompletionRequest::new(MODEL).user(format!("emit json {}", "x".repeat(k)));
+        r.max_tokens = 100;
+        r.sampling.temperature = 0.0;
+        r.sampling.logit_bias.insert(8 + b'}' as u32, 5.0);
+        r.response_format = ResponseFormat::JsonSchema(parse(schema).unwrap());
+        r
+    };
+
+    let baseline = MLCEngine::new(&spec_cfg(None)).unwrap().chat_completion(mk(60)).unwrap();
+    assert!(parse(baseline.text()).is_ok(), "baseline must satisfy the schema");
+
+    // Device loss mid-prefill of the 68-token prompt (op 2), a transient
+    // during the speculation rounds (op 5), and a manual eviction every
+    // third step on top: three output-invariant mechanisms stacked.
+    let plan = FaultPlan::at(vec![(2, FaultKind::DeviceLost), (5, FaultKind::Transient)]);
+    let mut e = MLCEngine::new(&spec_cfg(Some(plan))).unwrap();
+    let id = e.submit(mk(60)).unwrap();
+    let mut resp = None;
+    for step in 0..500 {
+        if step % 3 == 0 {
+            e.preempt(id);
+        }
+        e.step().expect("step() must absorb recoverable faults");
+        for ev in e.poll_events() {
+            match ev {
+                EngineEvent::Done(_, r) => resp = Some(r),
+                EngineEvent::Error(_, err) => panic!("request failed: {err}"),
+                _ => {}
+            }
+        }
+        if !e.has_work() {
+            break;
+        }
+    }
+    let resp = resp.expect("request did not complete");
+    assert_eq!(resp.text(), baseline.text(), "spec+grammar+preempt+faults changed output");
+    assert_eq!(fault_stat(&e, "device_resets"), 1);
+    assert_eq!(fault_stat(&e, "faults_injected"), 2);
+    assert_eq!(fault_stat(&e, "requests_failed"), 0);
+}
+
+// -- mixed-schedule acceptance -------------------------------------------------
+
+#[test]
+fn mixed_schedule_counters_match_exactly_and_survivors_are_identical() {
+    let reqs = [xs_request(8, 16), xs_request(12, 16), xs_request(16, 16)];
+    let baseline = baseline_texts(&reqs);
+
+    // One transient (retries), one NaN row (fails one request), one
+    // device loss (resets, everyone else resumes).
+    let plan = FaultPlan::at(vec![
+        (4, FaultKind::Transient),
+        (9, FaultKind::NanRow(0)),
+        (15, FaultKind::DeviceLost),
+    ]);
+    let mut e = faulty_engine(plan);
+    for r in &reqs {
+        e.submit(r.clone()).unwrap();
+    }
+    let (done, failed) = drive(&mut e);
+
+    assert_eq!(failed.len(), 1, "exactly the NaN-row victim fails: {failed:?}");
+    assert_eq!(failed.values().next().unwrap().kind, "data_plane_error");
+    assert_eq!(done.len(), 2);
+    for (id, resp) in &done {
+        assert_eq!(resp.text(), baseline[id], "survivor {id} diverged");
+    }
+    assert_eq!(fault_stat(&e, "faults_injected"), 3, "schedule observed exactly");
+    assert_eq!(fault_stat(&e, "transient_retries"), 1);
+    assert_eq!(fault_stat(&e, "device_resets"), 1);
+    assert_eq!(fault_stat(&e, "requests_failed"), 1);
+    assert_eq!(fault_stat(&e, "requests_timed_out"), 0);
+}
+
+#[test]
+fn seeded_chaos_never_wedges_the_engine() {
+    // A randomized (but reproducible) schedule: transients, NaN rows,
+    // short stalls at 15% of ops. Whatever lands, every request reaches a
+    // terminal state, `step()` stays Ok, and the engine goes idle.
+    let mut cfg = EngineConfig::reference(&[MODEL]);
+    // `.then` pins one engine-visible fault so the injected-counter
+    // assertion below can't depend on where the seeded rolls land.
+    cfg.fault_plan = Some(FaultPlan::seeded(0xC0FFEE, 60, 15).then(1, FaultKind::Transient));
+    let mut e = MLCEngine::new(&cfg).unwrap();
+    let n = 3;
+    for k in [6, 10, 14] {
+        e.submit(xs_request(k, 8)).unwrap();
+    }
+    let (done, failed) = drive(&mut e);
+    assert_eq!(done.len() + failed.len(), n, "every request must terminate");
+    for err in failed.values() {
+        assert_eq!(err.kind, "data_plane_error", "only NaN rows may fail requests: {err}");
+    }
+    assert!(!e.has_work());
+    assert!(fault_stat(&e, "faults_injected") >= 1, "15% over 60 ops scheduled nothing?");
+}
+
+// -- watchdog ------------------------------------------------------------------
+
+#[test]
+fn stalled_step_trips_the_watchdog_without_changing_output() {
+    let baseline = engine().chat_completion(xs_request(8, 5)).unwrap();
+
+    let mut cfg = EngineConfig::reference(&[MODEL]);
+    cfg.watchdog_step_ms = 5;
+    cfg.fault_plan = Some(FaultPlan::at(vec![(1, FaultKind::StallMs(20))]));
+    let mut e = MLCEngine::new(&cfg).unwrap();
+    let id = e.submit(xs_request(8, 5)).unwrap();
+    let (done, failed) = drive(&mut e);
+
+    assert!(failed.is_empty(), "a stall is latency, not an error: {failed:?}");
+    assert_eq!(done[&id].text(), baseline.text());
+    assert!(fault_stat(&e, "watchdog_stalls") >= 1, "20ms stall above a 5ms watchdog");
+}
+
+// -- deadlines -----------------------------------------------------------------
+
+#[test]
+fn expired_deadline_fails_with_structured_timeout() {
+    let mut e = engine();
+    // deadline_ms = 0: expired the moment it was admitted to the queue.
+    let id = e.submit(xs_request(8, 4).with_deadline_ms(0)).unwrap();
+    let ok = e.submit(xs_request(8, 4)).unwrap();
+    let (done, failed) = drive(&mut e);
+
+    let err = &failed[&id];
+    assert_eq!(err.status, 408, "{err}");
+    assert_eq!(err.kind, "timeout_error", "{err}");
+    assert_eq!(fault_stat(&e, "requests_timed_out"), 1);
+    assert_eq!(fault_stat(&e, "requests_failed"), 0, "timeouts are counted separately");
+    assert!(done.contains_key(&ok), "the undeadlined request must be untouched");
+}
+
+#[test]
+fn engine_default_timeout_applies_when_request_sets_none() {
+    let mut cfg = EngineConfig::reference(&[MODEL]);
+    cfg.request_timeout_ms = Some(0); // --request-timeout 0: everything expires
+    let mut e = MLCEngine::new(&cfg).unwrap();
+    let id = e.submit(xs_request(8, 4)).unwrap();
+    let generous = e.submit(xs_request(8, 4).with_deadline_ms(60_000)).unwrap();
+    let (done, failed) = drive(&mut e);
+
+    assert_eq!(failed[&id].kind, "timeout_error");
+    assert!(done.contains_key(&generous), "per-request deadline overrides the default");
+    assert_eq!(fault_stat(&e, "requests_timed_out"), 1);
+}
+
+#[test]
+fn deadline_expires_mid_decode_and_frees_the_slot() {
+    let mut e = engine();
+    let id = e.submit(xs_request(8, 400).with_deadline_ms(30)).unwrap();
+    // Reach steady-state decode, then let the deadline lapse.
+    for _ in 0..3 {
+        e.step().unwrap();
+    }
+    std::thread::sleep(std::time::Duration::from_millis(40));
+    let (done, failed) = drive(&mut e);
+
+    assert!(done.is_empty());
+    let err = &failed[&id];
+    assert_eq!(err.kind, "timeout_error", "{err}");
+    assert!(err.message.contains("mid-decode") || err.message.contains("deadline"), "{err}");
+    assert_eq!(fault_stat(&e, "requests_timed_out"), 1);
+    assert!(!e.has_work(), "timed-out request must release its residency");
+}
+
+// -- graceful drain ------------------------------------------------------------
+
+#[test]
+fn drain_finishes_residents_rejects_new_and_reports_drained() {
+    let mut e = engine();
+    let a = e.submit(xs_request(8, 4)).unwrap();
+    let b = e.submit(xs_request(12, 4)).unwrap();
+    for _ in 0..2 {
+        e.step().unwrap();
+    }
+
+    e.drain(None);
+    assert!(e.is_draining());
+    assert!(!e.drained(), "residents still in flight");
+    let err = e.submit(xs_request(8, 4)).unwrap_err();
+    assert_eq!(err.status, 503, "{err}");
+    assert_eq!(err.kind, "draining", "{err}");
+    assert_eq!(fault_stat(&e, "drain_rejected"), 1);
+
+    let (done, failed) = drive(&mut e);
+    assert!(failed.is_empty(), "an unbounded drain fails no resident: {failed:?}");
+    assert!(done.contains_key(&a) && done.contains_key(&b));
+    assert!(e.drained());
+    assert_eq!(fault_stat(&e, "drain_completed"), 2);
+    assert_eq!(fault_stat(&e, "drain_failed"), 0);
+    // `stats_json` advertises the lifecycle state for ops tooling.
+    assert_eq!(e.stats_json().get("draining").unwrap().as_bool(), Some(true));
+}
+
+#[test]
+fn drain_deadline_bounds_shutdown_by_failing_stragglers() {
+    let mut e = engine();
+    for k in [8, 12] {
+        e.submit(xs_request(k, 64)).unwrap();
+    }
+    for _ in 0..3 {
+        e.step().unwrap();
+    }
+
+    // Zero grace: the next step must evict everyone still resident.
+    e.drain(Some(0));
+    let (done, failed) = drive(&mut e);
+
+    assert!(done.is_empty(), "64-token requests cannot finish in zero grace");
+    assert_eq!(failed.len(), 2);
+    for err in failed.values() {
+        assert_eq!(err.status, 503, "{err}");
+        assert_eq!(err.kind, "draining", "{err}");
+    }
+    assert_eq!(fault_stat(&e, "drain_failed"), 2);
+    assert!(e.drained());
+    assert!(!e.has_work(), "drained engine must hold no residents");
+}
+
+#[test]
+fn drain_completes_through_the_worker_wire_protocol() {
+    // End-to-end through ServiceWorkerMLCEngine: Drain posts on the wire,
+    // Drained comes back exactly once, and completions beat the ack.
+    use webllm::coordinator::ServiceWorkerMLCEngine;
+    let mut fe = ServiceWorkerMLCEngine::create(EngineConfig::reference(&[MODEL])).unwrap();
+    let mut req = ChatCompletionRequest::new(MODEL).user("x".repeat(8));
+    req.max_tokens = 3;
+    req.sampling.temperature = 0.0;
+    ban_eos(&mut req);
+    let id = fe.submit(req.clone()).unwrap();
+    fe.drain(None).unwrap();
+    fe.wait_drained().unwrap();
+    // The resident finished before the ack; its Done is buffered, not lost.
+    let mut saw_done = false;
+    for _ in 0..50 {
+        match fe.poll(std::time::Duration::from_millis(500)).unwrap() {
+            webllm::coordinator::FromWorker::Done { id: did, .. } => {
+                assert_eq!(did, id);
+                saw_done = true;
+                break;
+            }
+            _ => {}
+        }
+    }
+    assert!(saw_done, "drain dropped a completion");
+    // Post-drain submissions are turned away with the structured error.
+    let err = fe.chat_completion(req).unwrap_err();
+    assert_eq!(err.kind, "draining", "{err}");
+}
