@@ -38,8 +38,67 @@ const SCHEMA: &str = r#"{
 
 const EBNF: &str = r#"root ::= ("ab" | "cd")+ [0-9] [0-9]?"#;
 
+/// Realistic tool-call schemas exercising the extended keyword families
+/// (pattern, format, bounded numerics, length bounds, typed maps, tuples).
+const TOOL_SCHEMAS: &[(&str, &str)] = &[
+    (
+        "get_weather",
+        r#"{
+            "type": "object",
+            "properties": {
+                "location": {"type": "string", "pattern": "^[A-Za-z ]{1,32}$"},
+                "units": {"enum": ["celsius", "fahrenheit"]},
+                "days": {"type": "integer", "minimum": 1, "maximum": 14}
+            },
+            "required": ["location", "units"]
+        }"#,
+    ),
+    (
+        "create_event",
+        r#"{
+            "type": "object",
+            "properties": {
+                "title": {"type": "string", "maxLength": 64},
+                "start": {"type": "string", "format": "date-time"},
+                "attendees": {
+                    "type": "array",
+                    "items": {"type": "string", "format": "email"},
+                    "maxItems": 8
+                },
+                "reminder_minutes": {"oneOf": [{"type": "integer"}, {"type": "null"}]}
+            },
+            "required": ["title", "start"]
+        }"#,
+    ),
+    (
+        "search_docs",
+        r#"{
+            "type": "object",
+            "properties": {
+                "query": {"type": "string", "minLength": 1, "maxLength": 128},
+                "filters": {
+                    "type": "object",
+                    "additionalProperties": {"type": ["string", "null"]}
+                },
+                "range": {
+                    "type": "array",
+                    "prefixItems": [
+                        {"type": "integer", "minimum": 0},
+                        {"type": "integer", "minimum": 0}
+                    ],
+                    "items": false,
+                    "minItems": 2
+                },
+                "top_k": {"type": "integer", "exclusiveMinimum": 0, "maximum": 100}
+            },
+            "required": ["query"]
+        }"#,
+    ),
+];
+
 fn main() {
     compile_bench();
+    tool_call_bench();
     mask_microbench();
     if webllm::artifacts_dir().join("manifest.json").exists() {
         engine_bench();
@@ -118,6 +177,73 @@ fn compile_bench() {
             } else {
                 println!("  -> no saving at this state (residue ~ whole vocab)");
             }
+        }
+    }
+}
+
+/// Schema-compile + AOT + mask latency over the three tool-call schemas
+/// — the request-admission cost a serving stack pays per distinct
+/// `response_format` (amortized across requests by the engine's grammar
+/// cache). Feeds the "grammar" section of BENCH_sampling.json.
+fn tool_call_bench() {
+    let vocab = if common::quick() { 32_768 } else { 131_072 };
+    let raw = common::synthetic_vocab(vocab);
+    let trie = Rc::new(VocabTrie::build(vocab, |i| raw[i as usize].as_slice()));
+
+    common::print_header(&format!("tool-call schemas: compile + mask latency, vocab {vocab}"));
+    for (name, text) in TOOL_SCHEMAS {
+        let schema = parse(text).unwrap();
+        let mut built: Option<Grammar> = None;
+        let r = common::time_it(
+            &format!("schema->grammar {name}"),
+            1,
+            common::iters(50, 5),
+            || {
+                built = Some(schema_to_grammar(&schema).unwrap());
+            },
+        );
+        common::print_result(&r);
+        let grammar = Rc::new(built.expect("at least one iteration ran"));
+
+        let mut compiled: Option<CompiledGrammar> = None;
+        let r = common::time_it(&format!("AOT compile {name}"), 1, common::iters(3, 1), || {
+            compiled = Some(CompiledGrammar::compile(grammar.clone(), &trie, |i| {
+                raw[i as usize].as_slice()
+            }));
+        });
+        common::print_result(&r);
+        let c = compiled.expect("at least one iteration ran");
+        let ci = c.context_independent_fraction();
+        println!(
+            "  {name}: {} rules | context-independent {:.1}% | {}",
+            grammar.rules.len(),
+            100.0 * ci,
+            if c.is_exact() { "exact" } else { "NFA approximation" },
+        );
+        // Acceptance gate: every tool-call schema must yield a nonzero
+        // base partition, or the AOT pass is doing nothing for the
+        // schemas it exists for.
+        assert!(ci > 0.0, "{name}: context-independent fraction must be nonzero");
+
+        let start = GrammarMatcher::new(grammar.clone());
+        let mut mid = GrammarMatcher::new(grammar.clone());
+        let probe: &[u8] = match *name {
+            "get_weather" => b"{\"location\":\"Pa",
+            "create_event" => b"{\"title\":\"sync",
+            _ => b"{\"query\":\"web",
+        };
+        assert!(mid.advance_bytes(probe), "{name}: probe prefix rejected");
+        for (label, state) in [("@start", &start), ("@mid", &mid)] {
+            let r = common::time_it(
+                &format!("  residue mask {name} {label}"),
+                1,
+                common::iters(20, 4),
+                || {
+                    let m = c.mask_for(state);
+                    std::hint::black_box(&m);
+                },
+            );
+            common::print_result(&r);
         }
     }
 }

@@ -1,0 +1,15 @@
+//! Fuzz the GBNF-style EBNF parser: arbitrary UTF-8 in, no panics out,
+//! and any grammar it accepts must pass its own structural validation.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(text) = std::str::from_utf8(data) else { return };
+    if text.len() > 8192 {
+        return;
+    }
+    if let Ok(g) = webllm::grammar::parse_ebnf(text) {
+        g.validate().expect("parse_ebnf produced an invalid grammar");
+    }
+});

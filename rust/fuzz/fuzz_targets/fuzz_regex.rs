@@ -1,0 +1,24 @@
+//! Fuzz both regex engines (the grammar compiler and the oracle's Pike
+//! VM) on the same pattern: no panics, and compiled grammars validate.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(text) = std::str::from_utf8(data) else { return };
+    if text.len() > 2048 {
+        return;
+    }
+    // First half = pattern, second half = subject text (split nudged
+    // back onto a char boundary).
+    let mut mid = text.len() / 2;
+    while !text.is_char_boundary(mid) {
+        mid -= 1;
+    }
+    let (pat, subject) = text.split_at(mid);
+    if let Ok(g) = webllm::grammar::regex_to_grammar(pat) {
+        g.validate().expect("regex_to_grammar produced an invalid grammar");
+    }
+    let _ = webllm::testutil::schema_oracle::regex_matches(pat, subject, false);
+    let _ = webllm::testutil::schema_oracle::regex_matches(pat, subject, true);
+});

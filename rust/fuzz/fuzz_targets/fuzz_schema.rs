@@ -1,0 +1,18 @@
+//! Fuzz the JSON-Schema compiler: any JSON document in, `Ok` with a
+//! valid bounded grammar or a structured error out — never a panic.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(text) = std::str::from_utf8(data) else { return };
+    if text.len() > 16384 {
+        return;
+    }
+    let Ok(schema) = webllm::json::parse(text) else { return };
+    if let Ok(g) = webllm::grammar::schema_to_grammar(&schema) {
+        g.validate().expect("schema_to_grammar produced an invalid grammar");
+    }
+    // The oracle validator must be equally panic-free on hostile schemas.
+    let _ = webllm::testutil::schema_oracle::validate(&schema, &webllm::json::Value::Null);
+});

@@ -10,8 +10,9 @@
 //! ```
 //!
 //! Literals support \n \t \r \\ \" \xHH escapes; classes support ranges,
-//! negation ([^...]) and the same escapes. Postfix `* + ?` bind to the
-//! immediately preceding item; `( ... )` groups; `|` separates
+//! negation ([^...]) and the same escapes. Postfix `* + ?` and bounded
+//! repetition `{m} {m,} {m,n}` (counts capped, expansion budgeted) bind to
+//! the immediately preceding item; `( ... )` groups; `|` separates
 //! alternatives.
 
 use super::grammar::{ByteClass, Grammar, GrammarError, Sym};
@@ -84,7 +85,14 @@ pub fn parse_ebnf(text: &str) -> Result<Grammar, GrammarError> {
 
     for (name, body) in &defs {
         let rule = index[name];
-        let mut p = P { bytes: body.as_bytes(), pos: 0, g: &mut g, index: &index, hint: name };
+        let mut p = P {
+            bytes: body.as_bytes(),
+            pos: 0,
+            g: &mut g,
+            index: &index,
+            hint: name,
+            budget: MAX_EXPANSION,
+        };
         let alts = p.alternatives()?;
         p.skip_ws();
         if p.pos != p.bytes.len() {
@@ -154,12 +162,18 @@ fn strip_comment(line: &str) -> &str {
     line
 }
 
+/// Largest `{m,n}` repetition count.
+const MAX_REPEAT: usize = 1024;
+/// Per-rule symbol-expansion budget (guards `("a"{999}){999}`).
+const MAX_EXPANSION: usize = 65_536;
+
 struct P<'a> {
     bytes: &'a [u8],
     pos: usize,
     g: &'a mut Grammar,
     index: &'a HashMap<String, usize>,
     hint: &'a str,
+    budget: usize,
 }
 
 impl<'a> P<'a> {
@@ -218,6 +232,18 @@ impl<'a> P<'a> {
                     let s = self.g.opt(item, self.hint);
                     seq.push(s);
                 }
+                Some(b'{') => {
+                    self.pos += 1;
+                    let (min, max) = self.repeat_counts()?;
+                    let copies = max.unwrap_or(min) + 1;
+                    let cost = item.len().max(1).saturating_mul(copies);
+                    if cost > self.budget {
+                        return Err(self.err("repetition expansion exceeds budget"));
+                    }
+                    self.budget -= cost;
+                    let s = self.g.repeat(item, min, max, self.hint);
+                    seq.extend(s);
+                }
                 _ => seq.extend(item),
             }
         }
@@ -244,8 +270,8 @@ impl<'a> P<'a> {
             }
             Some(c) if c.is_ascii_alphanumeric() || c == b'_' || c == b'-' => {
                 let start = self.pos;
-                while matches!(self.peek(), Some(c) if c.is_ascii_alphanumeric() || c == b'_' || c == b'-')
-                {
+                let is_name = |c: u8| c.is_ascii_alphanumeric() || c == b'_' || c == b'-';
+                while matches!(self.peek(), Some(c) if is_name(c)) {
                     self.pos += 1;
                 }
                 let name = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
@@ -257,6 +283,54 @@ impl<'a> P<'a> {
             Some(c) => Err(self.err(format!("unexpected character '{}'", c as char))),
             None => Err(self.err("unexpected end of rule")),
         }
+    }
+
+    /// `{m}` / `{m,}` / `{m,n}` counts; the opening `{` is consumed.
+    fn repeat_counts(&mut self) -> Result<(usize, Option<usize>), GrammarError> {
+        let min = self.count()?;
+        let max = match self.peek() {
+            Some(b'}') => Some(min),
+            Some(b',') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    None
+                } else {
+                    Some(self.count()?)
+                }
+            }
+            _ => return Err(self.err("expected ',' or '}' in repetition")),
+        };
+        if self.peek() != Some(b'}') {
+            return Err(self.err("expected '}' in repetition"));
+        }
+        self.pos += 1;
+        if min > MAX_REPEAT || max.map_or(false, |n| n > MAX_REPEAT) {
+            return Err(self.err(format!("repetition count exceeds {MAX_REPEAT}")));
+        }
+        if let Some(n) = max {
+            if n < min {
+                return Err(self.err("repetition max < min"));
+            }
+        }
+        Ok((min, max))
+    }
+
+    fn count(&mut self) -> Result<usize, GrammarError> {
+        self.skip_ws();
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.pos == start || self.pos - start > 7 {
+            return Err(self.err("expected repetition count"));
+        }
+        let n: usize = std::str::from_utf8(&self.bytes[start..self.pos])
+            .unwrap()
+            .parse()
+            .map_err(|_| self.err("bad repetition count"))?;
+        self.skip_ws();
+        Ok(n)
     }
 
     fn literal(&mut self) -> Result<Vec<Sym>, GrammarError> {

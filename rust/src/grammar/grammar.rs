@@ -121,6 +121,41 @@ impl Grammar {
         seq
     }
 
+    /// Desugar bounded repetition `inner{min,max}` into a symbol sequence:
+    /// `min` mandatory copies followed by `max - min` nested optionals
+    /// (`(inner (inner ...)?)?`), or a trailing star when `max` is `None`.
+    /// Callers must validate `max >= min`; a smaller `max` yields just the
+    /// mandatory prefix.
+    pub fn repeat(
+        &mut self,
+        inner: Vec<Sym>,
+        min: usize,
+        max: Option<usize>,
+        hint: &str,
+    ) -> Vec<Sym> {
+        let mut seq = Vec::new();
+        for _ in 0..min {
+            seq.extend(inner.iter().cloned());
+        }
+        match max {
+            None => seq.push(self.star(inner, hint)),
+            Some(max) => {
+                let mut tail: Option<Sym> = None;
+                for _ in min..max {
+                    let mut v = inner.clone();
+                    if let Some(t) = tail.take() {
+                        v.push(t);
+                    }
+                    tail = Some(self.opt(v, hint));
+                }
+                if let Some(t) = tail {
+                    seq.push(t);
+                }
+            }
+        }
+        seq
+    }
+
     /// Desugar `inner?` into a fresh rule R -> inner | ε.
     pub fn opt(&mut self, inner: Vec<Sym>, hint: &str) -> Sym {
         let r = self.add_rule(format!("{hint}?"));

@@ -1,18 +1,45 @@
 //! JSON Schema -> grammar compiler (the `response_format: json_schema`
 //! path of the OpenAI-style API, WebLLM §2.1).
 //!
-//! Supported subset (documented in DESIGN.md): object/properties/required
-//! (additionalProperties treated as false), string, number, integer,
-//! boolean, null, enum (scalars), const, array/items/minItems/maxItems,
-//! anyOf/oneOf, $ref into #/$defs or #/definitions (recursion allowed),
-//! and the empty schema (any JSON value).
+//! Supported keywords (full matrix in DESIGN.md §2): `type` (strings and
+//! arrays), `enum`/`const` (any values), `anyOf`, `oneOf` (branches must
+//! be provably disjoint by type/literal discriminators), `allOf` (merged
+//! by keyword normalization), `$ref` into `#/$defs` or `#/definitions`
+//! (recursion allowed), `properties`/`required`, `additionalProperties`
+//! (`false`, `true`, or a value schema — typed maps when no properties
+//! are declared), `items`/`prefixItems`/`minItems`/`maxItems`, string
+//! `minLength`/`maxLength`/`pattern`/`format` (`date`, `date-time`,
+//! `uuid`, `email`), and integer/number `minimum`/`maximum`/
+//! `exclusiveMinimum`/`exclusiveMaximum` compiled to digit-DFA prefixes.
+//! Unsupported or contradictory combinations are rejected with a
+//! structured [`GrammarError::Schema`](super::GrammarError::Schema) —
+//! never silently relaxed.
 //!
 //! Emitted JSON is **compact** (no inter-token whitespace) — the same
 //! canonicalization XGrammar defaults to; it keeps token masks tight.
+//! The grammar therefore describes a *canonical subset* of each schema's
+//! instances: properties appear in schema order, numbers carry no
+//! exponent or leading zeros, and pattern-constrained strings avoid
+//! escapes. Every instance the grammar derives validates against the
+//! schema; the conformance suite (`tests/test_schema_conformance.rs`)
+//! cross-checks that against an independent oracle validator.
 
 use super::grammar::{ByteClass, Grammar, GrammarError, Sym};
+use super::regex;
 use crate::json::Value;
 use std::collections::HashMap;
+
+/// Largest `maxItems`/`minItems`/`prefixItems` the compiler will expand.
+const MAX_ARRAY_ITEMS: usize = 4096;
+/// Largest `minLength`/`maxLength` the compiler will expand.
+const MAX_STRING_LEN: usize = 1024;
+/// Rule budget: a schema whose expansion exceeds this fails structurally
+/// instead of exhausting memory (fuzz harness relies on it).
+const MAX_SCHEMA_RULES: usize = 20_000;
+/// Numeric bounds beyond this magnitude are rejected (exact in f64/i64).
+const MAX_ABS_BOUND: f64 = 1e15;
+/// allOf normalization depth cap (cyclic $ref chains through allOf).
+const MAX_ALLOF_DEPTH: usize = 32;
 
 /// Compile a JSON Schema (as a parsed [`Value`]) into a byte-level
 /// [`Grammar`] matching its *compact* JSON serialization.
@@ -39,6 +66,74 @@ use std::collections::HashMap;
 /// assert!(!m.advance_bytes(br#"{ "ok": true }"#));
 /// ```
 ///
+/// Numeric bounds compile to digit-DFA prefixes and `type` accepts
+/// arrays (nullable fields):
+///
+/// ```
+/// use std::rc::Rc;
+/// use webllm::grammar::{schema_to_grammar, GrammarMatcher};
+/// use webllm::json::parse;
+///
+/// let schema = parse(r#"{"type": "integer", "minimum": 1, "maximum": 40}"#).unwrap();
+/// let g = Rc::new(schema_to_grammar(&schema).unwrap());
+/// let ok = |s: &[u8]| { let mut m = GrammarMatcher::new(g.clone()); m.advance_bytes(s) && m.is_accepting() };
+/// assert!(ok(b"7") && ok(b"40"));
+/// assert!(!ok(b"0") && !ok(b"41"));
+///
+/// let nullable = parse(r#"{"type": ["string", "null"]}"#).unwrap();
+/// let g = Rc::new(schema_to_grammar(&nullable).unwrap());
+/// let ok = |s: &[u8]| { let mut m = GrammarMatcher::new(g.clone()); m.advance_bytes(s) && m.is_accepting() };
+/// assert!(ok(b"null") && ok(br#""x""#));
+/// ```
+///
+/// String `pattern` (a bounded regex subset, see
+/// [`regex_to_grammar`](super::regex_to_grammar)) and `format` compile to
+/// concrete byte grammars; `additionalProperties` with a value schema
+/// yields a typed map:
+///
+/// ```
+/// use std::rc::Rc;
+/// use webllm::grammar::{schema_to_grammar, GrammarMatcher};
+/// use webllm::json::parse;
+///
+/// let schema = parse(r#"{"type": "string", "pattern": "[A-Z]{2}-[0-9]{3}"}"#).unwrap();
+/// let g = Rc::new(schema_to_grammar(&schema).unwrap());
+/// let ok = |s: &[u8]| { let mut m = GrammarMatcher::new(g.clone()); m.advance_bytes(s) && m.is_accepting() };
+/// assert!(ok(br#""AB-123""#));
+/// assert!(!ok(br#""ab-123""#));
+///
+/// let map = parse(r#"{"type": "object", "additionalProperties": {"type": "integer"}}"#).unwrap();
+/// let g = Rc::new(schema_to_grammar(&map).unwrap());
+/// let ok = |s: &[u8]| { let mut m = GrammarMatcher::new(g.clone()); m.advance_bytes(s) && m.is_accepting() };
+/// assert!(ok(br#"{"a":1,"b":2}"#) && ok(b"{}"));
+/// assert!(!ok(br#"{"a":true}"#));
+/// ```
+///
+/// `allOf` branches are merged keyword-by-keyword; `prefixItems` gives
+/// positional element types:
+///
+/// ```
+/// use std::rc::Rc;
+/// use webllm::grammar::{schema_to_grammar, GrammarMatcher};
+/// use webllm::json::parse;
+///
+/// let schema = parse(r#"{"allOf": [
+///     {"type": "object", "properties": {"a": {"type": "integer"}}, "required": ["a"]},
+///     {"type": "object", "properties": {"b": {"type": "boolean"}}, "required": ["b"]}
+/// ]}"#).unwrap();
+/// let g = Rc::new(schema_to_grammar(&schema).unwrap());
+/// let ok = |s: &[u8]| { let mut m = GrammarMatcher::new(g.clone()); m.advance_bytes(s) && m.is_accepting() };
+/// assert!(ok(br#"{"a":1,"b":true}"#));
+///
+/// let tuple = parse(r#"{"type": "array",
+///     "prefixItems": [{"type": "integer"}, {"type": "string"}],
+///     "items": false}"#).unwrap();
+/// let g = Rc::new(schema_to_grammar(&tuple).unwrap());
+/// let ok = |s: &[u8]| { let mut m = GrammarMatcher::new(g.clone()); m.advance_bytes(s) && m.is_accepting() };
+/// assert!(ok(br#"[1,"x"]"#));
+/// assert!(!ok(br#"["x",1]"#));
+/// ```
+///
 /// The empty schema (`{}`) matches any JSON value; unsupported keywords
 /// produce [`GrammarError::Schema`](super::GrammarError::Schema).
 pub fn schema_to_grammar(schema: &Value) -> Result<Grammar, GrammarError> {
@@ -47,6 +142,7 @@ pub fn schema_to_grammar(schema: &Value) -> Result<Grammar, GrammarError> {
         root_schema: schema,
         refs: HashMap::new(),
         shared: HashMap::new(),
+        allof_depth: 0,
     };
     let root = c.g.add_rule("root");
     debug_assert_eq!(root, 0);
@@ -56,6 +152,193 @@ pub fn schema_to_grammar(schema: &Value) -> Result<Grammar, GrammarError> {
     Ok(c.g)
 }
 
+/// The anchored pattern implementing a supported `format`, shared between
+/// the grammar compiler and the conformance-test oracle so both sides
+/// agree on the (syntactic) language. Unknown formats return `None` and
+/// are treated as annotations, per the spec's default vocabulary.
+pub fn format_pattern(name: &str) -> Option<&'static str> {
+    match name {
+        "date" => Some("[0-9]{4}-(0[1-9]|1[0-2])-(0[1-9]|[12][0-9]|3[01])"),
+        "date-time" => Some(
+            "[0-9]{4}-(0[1-9]|1[0-2])-(0[1-9]|[12][0-9]|3[01])\
+             T([01][0-9]|2[0-3]):[0-5][0-9]:[0-5][0-9](\\.[0-9]{1,9})?\
+             (Z|[+-]([01][0-9]|2[0-3]):[0-5][0-9])",
+        ),
+        "uuid" => Some(
+            "[0-9a-f]{8}-[0-9a-f]{4}-[0-9a-f]{4}-[0-9a-f]{4}-[0-9a-f]{12}",
+        ),
+        "email" => Some("[A-Za-z0-9._%+-]+@[A-Za-z0-9.-]+\\.[A-Za-z]{2,8}"),
+        _ => None,
+    }
+}
+
+/// Type-kind bits for oneOf disjointness discrimination.
+const K_NULL: u8 = 1;
+const K_BOOL: u8 = 2;
+const K_NUM: u8 = 4;
+const K_STR: u8 = 8;
+const K_OBJ: u8 = 16;
+const K_ARR: u8 = 32;
+
+/// What provably distinguishes a oneOf branch: a set of JSON type kinds,
+/// or a finite set of literal serializations (const/enum).
+enum Disc {
+    Kinds(u8),
+    Lits(Vec<String>),
+}
+
+impl Disc {
+    fn kinds(&self) -> u8 {
+        match self {
+            Disc::Kinds(k) => *k,
+            Disc::Lits(ls) => ls.iter().fold(0, |acc, l| acc | lit_kind(l)),
+        }
+    }
+}
+
+fn kind_bit(t: &str) -> Option<u8> {
+    Some(match t {
+        "null" => K_NULL,
+        "boolean" => K_BOOL,
+        "number" | "integer" => K_NUM,
+        "string" => K_STR,
+        "object" => K_OBJ,
+        "array" => K_ARR,
+        _ => return None,
+    })
+}
+
+/// The kind of a serialized literal, by its first byte.
+fn lit_kind(s: &str) -> u8 {
+    match s.as_bytes().first() {
+        Some(b'"') => K_STR,
+        Some(b't') | Some(b'f') => K_BOOL,
+        Some(b'n') => K_NULL,
+        Some(b'{') => K_OBJ,
+        Some(b'[') => K_ARR,
+        _ => K_NUM,
+    }
+}
+
+fn disjoint(a: &Disc, b: &Disc) -> bool {
+    match (a, b) {
+        (Disc::Lits(x), Disc::Lits(y)) => !x.iter().any(|l| y.contains(l)),
+        _ => a.kinds() & b.kinds() == 0,
+    }
+}
+
+fn wrap_alts(g: &mut Grammar, mut alts: Vec<Vec<Sym>>, hint: &str) -> Vec<Sym> {
+    if alts.len() == 1 {
+        alts.pop().unwrap()
+    } else {
+        vec![g.choice(alts, hint)]
+    }
+}
+
+fn digit(lo: u8, hi: u8) -> Sym {
+    Sym::Class(ByteClass { ranges: vec![(lo, hi)], negated: false })
+}
+
+/// Alternatives matching the decimal digit strings in `[lo, hi]`
+/// position-by-position (equal lengths; leading zeros allowed — the
+/// caller constrains the first digit).
+fn digits_range(g: &mut Grammar, lo: &[u8], hi: &[u8], hint: &str) -> Vec<Vec<Sym>> {
+    debug_assert_eq!(lo.len(), hi.len());
+    if lo.is_empty() {
+        return vec![Vec::new()];
+    }
+    if lo.iter().all(|&b| b == b'0') && hi.iter().all(|&b| b == b'9') {
+        return vec![(0..lo.len()).map(|_| digit(b'0', b'9')).collect()];
+    }
+    let rest = lo.len() - 1;
+    if lo[0] == hi[0] {
+        let sub = digits_range(g, &lo[1..], &hi[1..], hint);
+        let mut seq = vec![digit(lo[0], lo[0])];
+        seq.extend(wrap_alts(g, sub, hint));
+        return vec![seq];
+    }
+    let mut alts = Vec::new();
+    {
+        let nines = vec![b'9'; rest];
+        let sub = digits_range(g, &lo[1..], &nines, hint);
+        let mut seq = vec![digit(lo[0], lo[0])];
+        seq.extend(wrap_alts(g, sub, hint));
+        alts.push(seq);
+    }
+    if hi[0] - lo[0] >= 2 {
+        let mut seq = vec![digit(lo[0] + 1, hi[0] - 1)];
+        for _ in 0..rest {
+            seq.push(digit(b'0', b'9'));
+        }
+        alts.push(seq);
+    }
+    {
+        let zeros = vec![b'0'; rest];
+        let sub = digits_range(g, &zeros, &hi[1..], hint);
+        let mut seq = vec![digit(hi[0], hi[0])];
+        seq.extend(wrap_alts(g, sub, hint));
+        alts.push(seq);
+    }
+    alts
+}
+
+/// Alternatives matching the canonical decimal form (no leading zeros) of
+/// every integer in `[a, b]` (or `[a, ∞)` when `b` is `None`).
+fn pos_range_alts(g: &mut Grammar, a: u64, b: Option<u64>, hint: &str) -> Vec<Vec<Sym>> {
+    let a_s = a.to_string().into_bytes();
+    let mut alts = Vec::new();
+    match b {
+        Some(bv) => {
+            debug_assert!(a <= bv);
+            let b_s = bv.to_string().into_bytes();
+            if a_s.len() == b_s.len() {
+                alts.extend(digits_range(g, &a_s, &b_s, hint));
+            } else {
+                let nines = vec![b'9'; a_s.len()];
+                alts.extend(digits_range(g, &a_s, &nines, hint));
+                for d in a_s.len() + 1..b_s.len() {
+                    let mut seq = vec![digit(b'1', b'9')];
+                    for _ in 1..d {
+                        seq.push(digit(b'0', b'9'));
+                    }
+                    alts.push(seq);
+                }
+                let mut low = vec![b'0'; b_s.len()];
+                low[0] = b'1';
+                alts.extend(digits_range(g, &low, &b_s, hint));
+            }
+        }
+        None => {
+            let nines = vec![b'9'; a_s.len()];
+            alts.extend(digits_range(g, &a_s, &nines, hint));
+            // Any canonical integer with strictly more digits.
+            let mut seq = vec![digit(b'1', b'9')];
+            for _ in 0..a_s.len() {
+                seq.push(digit(b'0', b'9'));
+            }
+            seq.push(g.star(vec![digit(b'0', b'9')], hint));
+            alts.push(seq);
+        }
+    }
+    alts
+}
+
+/// Raw numeric bounds as read from the schema (value, before exclusivity
+/// adjustment).
+#[derive(Default)]
+struct RawBounds {
+    min: Option<f64>,
+    emin: Option<f64>,
+    max: Option<f64>,
+    emax: Option<f64>,
+}
+
+impl RawBounds {
+    fn any(&self) -> bool {
+        self.min.is_some() || self.emin.is_some() || self.max.is_some() || self.emax.is_some()
+    }
+}
+
 struct Compiler<'a> {
     g: Grammar,
     root_schema: &'a Value,
@@ -63,6 +346,8 @@ struct Compiler<'a> {
     refs: HashMap<String, usize>,
     /// Shared primitive rules ("string", "number", ...) by name.
     shared: HashMap<&'static str, usize>,
+    /// allOf normalization recursion depth (cycle guard).
+    allof_depth: usize,
 }
 
 impl<'a> Compiler<'a> {
@@ -71,6 +356,9 @@ impl<'a> Compiler<'a> {
     }
 
     fn compile(&mut self, schema: &Value, hint: &str) -> Result<Vec<Sym>, GrammarError> {
+        if self.g.rules.len() > MAX_SCHEMA_RULES {
+            return Err(Self::err("schema grammar exceeds rule budget"));
+        }
         match schema {
             // `true` / `{}` -> any JSON value.
             Value::Bool(true) => Ok(vec![Sym::Ref(self.any_value())]),
@@ -89,6 +377,16 @@ impl<'a> Compiler<'a> {
         if let Some(r) = schema.get("$ref").and_then(Value::as_str) {
             return Ok(vec![Sym::Ref(self.resolve_ref(r)?)]);
         }
+        if schema.get("allOf").is_some() {
+            if self.allof_depth >= MAX_ALLOF_DEPTH {
+                return Err(Self::err("allOf nesting too deep (cyclic $ref?)"));
+            }
+            let merged = self.merge_all_of(schema)?;
+            self.allof_depth += 1;
+            let r = self.compile(&merged, hint);
+            self.allof_depth -= 1;
+            return r;
+        }
         if let Some(c) = schema.get("const") {
             return Ok(Grammar::lit(crate::json::to_string(c).as_bytes()));
         }
@@ -102,36 +400,344 @@ impl<'a> Compiler<'a> {
             }
             return Ok(vec![self.g.choice(alts, hint)]);
         }
-        for key in ["anyOf", "oneOf"] {
-            if let Some(list) = schema.get(key).and_then(Value::as_array) {
-                let mut alts = Vec::new();
-                for (i, s) in list.iter().enumerate() {
-                    alts.push(self.compile(s, &format!("{hint}.{key}{i}"))?);
+        if let Some(list) = schema.get("anyOf").and_then(Value::as_array) {
+            return self.alternation(list, hint, "anyOf");
+        }
+        if let Some(list) = schema.get("oneOf").and_then(Value::as_array) {
+            // oneOf means *exactly one* branch validates. A CFG union can
+            // only express that when the branches are pairwise disjoint —
+            // check it via type/literal discriminators, otherwise reject
+            // (see DESIGN.md §2; pinned by a corpus fixture).
+            let discs: Vec<Option<Disc>> = list.iter().map(|s| self.discriminator(s, 0)).collect();
+            for i in 0..discs.len() {
+                for j in i + 1..discs.len() {
+                    let ok = match (&discs[i], &discs[j]) {
+                        (Some(a), Some(b)) => disjoint(a, b),
+                        _ => false,
+                    };
+                    if !ok {
+                        return Err(Self::err(format!(
+                            "oneOf branches {i} and {j} are not provably disjoint \
+                             (need distinct types or distinct const/enum literals); \
+                             use anyOf for overlapping unions"
+                        )));
+                    }
                 }
-                if alts.is_empty() {
-                    return Err(Self::err(format!("empty {key}")));
-                }
-                return Ok(vec![self.g.choice(alts, hint)]);
             }
+            return self.alternation(list, hint, "oneOf");
         }
 
-        match schema.get("type").and_then(Value::as_str) {
-            Some("string") => Ok(vec![Sym::Ref(self.string_rule())]),
-            Some("number") => Ok(vec![Sym::Ref(self.number_rule())]),
-            Some("integer") => Ok(vec![Sym::Ref(self.integer_rule())]),
-            Some("boolean") => {
-                Ok(vec![self.g.choice(
-                    vec![Grammar::lit(b"true"), Grammar::lit(b"false")],
-                    hint,
-                )])
+        match schema.get("type") {
+            Some(Value::String(t)) => self.compile_typed(t, schema, hint),
+            Some(Value::Array(ts)) => {
+                if ts.is_empty() {
+                    return Err(Self::err("empty 'type' array"));
+                }
+                let mut alts = Vec::new();
+                for t in ts {
+                    let t = t
+                        .as_str()
+                        .ok_or_else(|| Self::err("'type' array entries must be strings"))?;
+                    alts.push(self.compile_typed(t, schema, &format!("{hint}.{t}"))?);
+                }
+                Ok(wrap_alts(&mut self.g, alts, hint))
             }
-            Some("null") => Ok(Grammar::lit(b"null")),
-            Some("object") => self.object_rule(schema, hint),
-            Some("array") => self.array_rule(schema, hint),
-            Some(other) => Err(Self::err(format!("unsupported type '{other}'"))),
+            Some(_) => Err(Self::err("'type' must be a string or array of strings")),
             None => Ok(vec![Sym::Ref(self.any_value())]),
         }
     }
+
+    fn alternation(
+        &mut self,
+        list: &[Value],
+        hint: &str,
+        key: &str,
+    ) -> Result<Vec<Sym>, GrammarError> {
+        let mut alts = Vec::new();
+        for (i, s) in list.iter().enumerate() {
+            alts.push(self.compile(s, &format!("{hint}.{key}{i}"))?);
+        }
+        if alts.is_empty() {
+            return Err(Self::err(format!("empty {key}")));
+        }
+        Ok(vec![self.g.choice(alts, hint)])
+    }
+
+    /// One `type` keyword applied with its sibling constraints.
+    fn compile_typed(
+        &mut self,
+        t: &str,
+        schema: &Value,
+        hint: &str,
+    ) -> Result<Vec<Sym>, GrammarError> {
+        match t {
+            "string" => self.string_schema(schema, hint),
+            "number" => self.number_schema(schema, hint),
+            "integer" => self.integer_schema(schema, hint),
+            "boolean" => Ok(vec![self.g.choice(
+                vec![Grammar::lit(b"true"), Grammar::lit(b"false")],
+                hint,
+            )]),
+            "null" => Ok(Grammar::lit(b"null")),
+            "object" => self.object_rule(schema, hint),
+            "array" => self.array_rule(schema, hint),
+            other => Err(Self::err(format!("unsupported type '{other}'"))),
+        }
+    }
+
+    // -- oneOf discrimination -----------------------------------------------
+
+    /// Read-only $defs lookup (no rule registration) for discrimination.
+    fn ref_target(&self, path: &str) -> Option<&'a Value> {
+        let target = path
+            .strip_prefix("#/$defs/")
+            .or_else(|| path.strip_prefix("#/definitions/"))?;
+        self.root_schema
+            .get("$defs")
+            .or_else(|| self.root_schema.get("definitions"))?
+            .get(target)
+    }
+
+    fn discriminator(&self, schema: &Value, depth: usize) -> Option<Disc> {
+        if depth > 16 {
+            return None;
+        }
+        let o = schema.as_object()?;
+        if let Some(r) = o.get("$ref").and_then(Value::as_str) {
+            return self.discriminator(self.ref_target(r)?, depth + 1);
+        }
+        if let Some(c) = o.get("const") {
+            return Some(Disc::Lits(vec![crate::json::to_string(c)]));
+        }
+        if let Some(e) = o.get("enum").and_then(Value::as_array) {
+            return Some(Disc::Lits(e.iter().map(crate::json::to_string).collect()));
+        }
+        if o.get("allOf").is_some() {
+            return None;
+        }
+        for key in ["anyOf", "oneOf"] {
+            if let Some(list) = o.get(key).and_then(Value::as_array) {
+                let branches: Option<Vec<Disc>> =
+                    list.iter().map(|s| self.discriminator(s, depth + 1)).collect();
+                let branches = branches?;
+                if branches.iter().all(|d| matches!(d, Disc::Lits(_))) {
+                    let mut lits = Vec::new();
+                    for d in branches {
+                        if let Disc::Lits(ls) = d {
+                            lits.extend(ls);
+                        }
+                    }
+                    return Some(Disc::Lits(lits));
+                }
+                return Some(Disc::Kinds(branches.iter().fold(0, |acc, d| acc | d.kinds())));
+            }
+        }
+        match o.get("type") {
+            Some(Value::String(t)) => kind_bit(t).map(Disc::Kinds),
+            Some(Value::Array(ts)) => {
+                let mut bits = 0u8;
+                for t in ts {
+                    bits |= kind_bit(t.as_str()?)?;
+                }
+                Some(Disc::Kinds(bits))
+            }
+            _ => None,
+        }
+    }
+
+    // -- allOf normalization ------------------------------------------------
+
+    /// Resolve a pure `{"$ref": ...}` branch to its target (chains
+    /// depth-limited); anything else passes through.
+    fn deref_schema<'b>(
+        &'b self,
+        schema: &'b Value,
+        depth: usize,
+    ) -> Result<&'b Value, GrammarError> {
+        if depth > MAX_ALLOF_DEPTH {
+            return Err(Self::err("$ref chain too deep (cyclic?)"));
+        }
+        if let Some(o) = schema.as_object() {
+            if o.len() == 1 {
+                if let Some(r) = o.get("$ref").and_then(Value::as_str) {
+                    let target = self
+                        .ref_target(r)
+                        .ok_or_else(|| Self::err(format!("unresolved $ref '{r}'")))?;
+                    return self.deref_schema(target, depth + 1);
+                }
+            }
+        }
+        Ok(schema)
+    }
+
+    /// Merge `allOf` branches plus sibling keywords into one schema value.
+    /// Keywords we can intersect are intersected (`type`, bounds, `enum`,
+    /// `const`); `required` unions; same-name `properties` nest as
+    /// `{"allOf": [a, b]}` so recursion intersects them; anything else
+    /// must be byte-identical or the merge is rejected.
+    fn merge_all_of(&mut self, schema: &Value) -> Result<Value, GrammarError> {
+        let list = schema
+            .get("allOf")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Self::err("allOf must be an array"))?;
+        if list.is_empty() {
+            return Err(Self::err("empty allOf"));
+        }
+        let mut merged = crate::json::Map::new();
+        if let Some(o) = schema.as_object() {
+            for (k, v) in o.iter() {
+                if k != "allOf" {
+                    merged.insert(k.clone(), v.clone());
+                }
+            }
+        }
+        for branch in list {
+            let branch = self.deref_schema(branch, 0)?;
+            match branch {
+                Value::Bool(true) => continue,
+                Value::Bool(false) => return Err(Self::err("allOf branch 'false' matches nothing")),
+                Value::Object(bo) => {
+                    for (k, v) in bo.iter() {
+                        Self::merge_keyword(&mut merged, k, v)?;
+                    }
+                }
+                _ => return Err(Self::err("allOf branch must be an object or boolean")),
+            }
+        }
+        Ok(Value::Object(merged))
+    }
+
+    fn merge_keyword(
+        merged: &mut crate::json::Map,
+        k: &str,
+        v: &Value,
+    ) -> Result<(), GrammarError> {
+        let existing = match merged.get(k) {
+            None => {
+                merged.insert(k.to_string(), v.clone());
+                return Ok(());
+            }
+            Some(e) => e.clone(),
+        };
+        let out: Value = match k {
+            "type" => {
+                let a = Self::type_set(&existing)?;
+                let b = Self::type_set(v)?;
+                let mut inter: Vec<String> = Vec::new();
+                for t in &a {
+                    let keep = if b.contains(t) {
+                        Some(t.clone())
+                    } else if t == "number" && b.iter().any(|x| x == "integer") {
+                        Some("integer".to_string())
+                    } else if t == "integer" && b.iter().any(|x| x == "number") {
+                        Some("integer".to_string())
+                    } else {
+                        None
+                    };
+                    if let Some(t) = keep {
+                        if !inter.contains(&t) {
+                            inter.push(t);
+                        }
+                    }
+                }
+                match inter.len() {
+                    0 => return Err(Self::err("allOf: contradictory 'type'")),
+                    1 => Value::String(inter.pop().unwrap()),
+                    _ => Value::Array(inter.into_iter().map(Value::String).collect()),
+                }
+            }
+            "required" => {
+                let mut names: Vec<Value> = existing
+                    .as_array()
+                    .ok_or_else(|| Self::err("'required' must be an array"))?
+                    .clone();
+                for n in v.as_array().ok_or_else(|| Self::err("'required' must be an array"))? {
+                    if !names.contains(n) {
+                        names.push(n.clone());
+                    }
+                }
+                Value::Array(names)
+            }
+            "properties" => {
+                let mut props = existing
+                    .as_object()
+                    .ok_or_else(|| Self::err("'properties' must be an object"))?
+                    .clone();
+                let new = v
+                    .as_object()
+                    .ok_or_else(|| Self::err("'properties' must be an object"))?;
+                for (name, sub) in new.iter() {
+                    let merged_sub = match props.get(name) {
+                        None => sub.clone(),
+                        Some(old) => {
+                            let mut both = crate::json::Map::new();
+                            both.insert("allOf", Value::Array(vec![old.clone(), sub.clone()]));
+                            Value::Object(both)
+                        }
+                    };
+                    props.insert(name.clone(), merged_sub);
+                }
+                Value::Object(props)
+            }
+            "minimum" | "exclusiveMinimum" | "minLength" | "minItems" => {
+                let (a, b) = (Self::as_num(&existing, k)?, Self::as_num(v, k)?);
+                Value::Number(a.max(b))
+            }
+            "maximum" | "exclusiveMaximum" | "maxLength" | "maxItems" => {
+                let (a, b) = (Self::as_num(&existing, k)?, Self::as_num(v, k)?);
+                Value::Number(a.min(b))
+            }
+            "enum" => {
+                let a = existing
+                    .as_array()
+                    .ok_or_else(|| Self::err("'enum' must be an array"))?;
+                let b = v.as_array().ok_or_else(|| Self::err("'enum' must be an array"))?;
+                let inter: Vec<Value> = a.iter().filter(|x| b.contains(x)).cloned().collect();
+                if inter.is_empty() {
+                    return Err(Self::err("allOf: contradictory 'enum'"));
+                }
+                Value::Array(inter)
+            }
+            "const" => {
+                if existing == *v {
+                    existing
+                } else {
+                    return Err(Self::err("allOf: contradictory 'const'"));
+                }
+            }
+            _ => {
+                if existing == *v {
+                    existing
+                } else {
+                    return Err(Self::err(format!("allOf: cannot merge keyword '{k}'")));
+                }
+            }
+        };
+        merged.insert(k.to_string(), out);
+        Ok(())
+    }
+
+    fn type_set(v: &Value) -> Result<Vec<String>, GrammarError> {
+        match v {
+            Value::String(s) => Ok(vec![s.clone()]),
+            Value::Array(a) => a
+                .iter()
+                .map(|t| {
+                    t.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| Self::err("'type' array entries must be strings"))
+                })
+                .collect(),
+            _ => Err(Self::err("'type' must be a string or array of strings")),
+        }
+    }
+
+    fn as_num(v: &Value, k: &str) -> Result<f64, GrammarError> {
+        v.as_f64()
+            .ok_or_else(|| Self::err(format!("'{k}' must be a number")))
+    }
+
+    // -- $ref ---------------------------------------------------------------
 
     fn resolve_ref(&mut self, path: &str) -> Result<usize, GrammarError> {
         if let Some(&idx) = self.refs.get(path) {
@@ -158,6 +764,266 @@ impl<'a> Compiler<'a> {
         Ok(rule)
     }
 
+    // -- strings ------------------------------------------------------------
+
+    fn string_schema(&mut self, schema: &Value, hint: &str) -> Result<Vec<Sym>, GrammarError> {
+        let pattern = schema.get("pattern").and_then(Value::as_str);
+        let format = schema.get("format").and_then(Value::as_str);
+        let min_len = schema.get("minLength").and_then(Value::as_usize);
+        let max_len = schema.get("maxLength").and_then(Value::as_usize);
+
+        let effective = match (pattern, format) {
+            (Some(_), Some(_)) => {
+                return Err(Self::err("'pattern' and 'format' cannot be combined"))
+            }
+            (Some(p), None) => Some(p),
+            // Unknown formats are annotations (spec default); known ones
+            // compile as anchored byte grammars.
+            (None, Some(f)) => format_pattern(f),
+            (None, None) => None,
+        };
+        if let Some(p) = effective {
+            if min_len.is_some() || max_len.is_some() {
+                return Err(Self::err(
+                    "'pattern'/'format' cannot be combined with length bounds",
+                ));
+            }
+            let mut seq = Grammar::lit(b"\"");
+            seq.extend(regex::compile_fragment(&mut self.g, p, hint)?);
+            seq.extend(Grammar::lit(b"\""));
+            return Ok(seq);
+        }
+        if min_len.is_none() && max_len.is_none() {
+            return Ok(vec![Sym::Ref(self.string_rule())]);
+        }
+        let min = min_len.unwrap_or(0);
+        if min > MAX_STRING_LEN || max_len.map_or(false, |m| m > MAX_STRING_LEN) {
+            return Err(Self::err(format!("string length bound exceeds {MAX_STRING_LEN}")));
+        }
+        if let Some(max) = max_len {
+            if max < min {
+                return Err(Self::err("maxLength < minLength"));
+            }
+        }
+        // One grammar char = one escaped or unescaped code point. (Code
+        // points above the BMP count 1 here but 2 in UTF-16-centric
+        // validators; the canon avoids surrogate-pair escapes.)
+        let ch = self.char_rule();
+        let mut seq = Grammar::lit(b"\"");
+        seq.extend(self.g.repeat(vec![Sym::Ref(ch)], min, max_len, hint));
+        seq.extend(Grammar::lit(b"\""));
+        Ok(seq)
+    }
+
+    // -- numbers ------------------------------------------------------------
+
+    fn raw_bounds(&self, schema: &Value) -> Result<RawBounds, GrammarError> {
+        let mut rb = RawBounds::default();
+        for (key, slot) in [
+            ("minimum", 0usize),
+            ("exclusiveMinimum", 1),
+            ("maximum", 2),
+            ("exclusiveMaximum", 3),
+        ] {
+            if let Some(v) = schema.get(key) {
+                let n = v.as_f64().ok_or_else(|| {
+                    Self::err(format!(
+                        "'{key}' must be a number (draft-4 boolean form unsupported)"
+                    ))
+                })?;
+                if !n.is_finite() || n.abs() > MAX_ABS_BOUND {
+                    return Err(Self::err(format!("'{key}' out of supported range")));
+                }
+                match slot {
+                    0 => rb.min = Some(n),
+                    1 => rb.emin = Some(n),
+                    2 => rb.max = Some(n),
+                    _ => rb.emax = Some(n),
+                }
+            }
+        }
+        Ok(rb)
+    }
+
+    fn integer_schema(&mut self, schema: &Value, hint: &str) -> Result<Vec<Sym>, GrammarError> {
+        let rb = self.raw_bounds(schema)?;
+        if !rb.any() {
+            return Ok(vec![Sym::Ref(self.integer_rule())]);
+        }
+        // Effective inclusive integer bounds (non-integral bounds round
+        // inward; integral exclusive bounds step by one).
+        let lo_c = rb.min.map(|m| m.ceil() as i64);
+        let lo_e = rb.emin.map(|m| if m.fract() == 0.0 { m as i64 + 1 } else { m.ceil() as i64 });
+        let li = match (lo_c, lo_e) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+        let hi_f = rb.max.map(|m| m.floor() as i64);
+        let hi_e = rb.emax.map(|m| if m.fract() == 0.0 { m as i64 - 1 } else { m.floor() as i64 });
+        let ui = match (hi_f, hi_e) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        if let (Some(a), Some(b)) = (li, ui) {
+            if a > b {
+                return Err(Self::err("contradictory numeric bounds"));
+            }
+        }
+        self.int_range_syms(li, ui, hint)
+    }
+
+    /// The canonical integers in `[lo, hi]` (either side may be open) as
+    /// a digit-DFA symbol sequence: sign split + per-digit-length range
+    /// decomposition. No leading zeros, no `-0`.
+    fn int_range_syms(
+        &mut self,
+        lo: Option<i64>,
+        hi: Option<i64>,
+        hint: &str,
+    ) -> Result<Vec<Sym>, GrammarError> {
+        if lo.is_none() && hi.is_none() {
+            return Ok(vec![Sym::Ref(self.integer_rule())]);
+        }
+        if let (Some(l), Some(h)) = (lo, hi) {
+            if l > h {
+                return Err(Self::err("contradictory numeric bounds"));
+            }
+        }
+        let mut alts: Vec<Vec<Sym>> = Vec::new();
+        // Negative side: magnitudes m with -m in [lo, min(hi, -1)].
+        if lo.map_or(true, |l| l < 0) {
+            let m_min = match hi {
+                Some(h) if h < 0 => (-h) as u64,
+                _ => 1,
+            };
+            let m_max = lo.map(|l| (-l) as u64);
+            if m_max.map_or(true, |mm| m_min <= mm) {
+                for alt in pos_range_alts(&mut self.g, m_min, m_max, hint) {
+                    let mut seq = vec![Sym::Class(ByteClass::byte(b'-'))];
+                    seq.extend(alt);
+                    alts.push(seq);
+                }
+            }
+        }
+        // Non-negative side.
+        if hi.map_or(true, |h| h >= 0) {
+            let a = lo.map_or(0, |l| l.max(0)) as u64;
+            let b = hi.map(|h| h as u64);
+            alts.extend(pos_range_alts(&mut self.g, a, b, hint));
+        }
+        if alts.is_empty() {
+            return Err(Self::err("contradictory numeric bounds"));
+        }
+        Ok(wrap_alts(&mut self.g, alts, hint))
+    }
+
+    /// Bounded `number`: integer literals in range, plus decimal forms
+    /// `n.digits` whose whole unit interval fits the bounds, plus
+    /// nonzero-fraction forms hugging an exclusive integral bound. Bounds
+    /// must be integral (a structured error otherwise); exponents are not
+    /// part of the bounded canon.
+    fn number_schema(&mut self, schema: &Value, hint: &str) -> Result<Vec<Sym>, GrammarError> {
+        let rb = self.raw_bounds(schema)?;
+        if !rb.any() {
+            return Ok(vec![Sym::Ref(self.number_rule())]);
+        }
+        for v in [rb.min, rb.emin, rb.max, rb.emax].iter().flatten() {
+            if v.fract() != 0.0 {
+                return Err(Self::err(
+                    "non-integral bounds on type 'number' unsupported (use integral bounds)",
+                ));
+            }
+        }
+        // Strictest lower/upper as (value, exclusive); ties prefer the
+        // exclusive form.
+        let lo: Option<(i64, bool)> = match (rb.min.map(|v| v as i64), rb.emin.map(|v| v as i64)) {
+            (None, None) => None,
+            (Some(a), None) => Some((a, false)),
+            (None, Some(b)) => Some((b, true)),
+            (Some(a), Some(b)) => Some(if b >= a { (b, true) } else { (a, false) }),
+        };
+        let hi: Option<(i64, bool)> = match (rb.max.map(|v| v as i64), rb.emax.map(|v| v as i64)) {
+            (None, None) => None,
+            (Some(a), None) => Some((a, false)),
+            (None, Some(b)) => Some((b, true)),
+            (Some(a), Some(b)) => Some(if b <= a { (b, true) } else { (a, false) }),
+        };
+        // Inclusive integer attainment bounds.
+        let li = lo.map(|(l, ex)| if ex { l + 1 } else { l });
+        let ui = hi.map(|(h, ex)| if ex { h - 1 } else { h });
+
+        let digits1 = self.digits1_rule();
+        let nonzero = self.nonzero_frac_rule();
+        let mut alts: Vec<Vec<Sym>> = Vec::new();
+
+        // 1. Integer literals.
+        let int_ok = match (li, ui) {
+            (Some(a), Some(b)) => a <= b,
+            _ => true,
+        };
+        if int_ok {
+            alts.push(self.int_range_syms(li, ui, hint)?);
+        }
+        // 2. Non-negative decimals n.f with [n, n+1) inside the bounds:
+        //    n >= max(li, 0) and n + 1 <= hi-value.
+        {
+            let a = li.map_or(0, |l| l.max(0));
+            let b = hi.map(|(h, _)| h - 1);
+            if b.map_or(true, |b| a <= b) {
+                let pr = pos_range_alts(&mut self.g, a as u64, b.map(|b| b as u64), hint);
+                let mut seq = wrap_alts(&mut self.g, pr, hint);
+                seq.push(Sym::Class(ByteClass::byte(b'.')));
+                seq.push(Sym::Ref(digits1));
+                alts.push(seq);
+            }
+        }
+        // 3. Negative decimals -m.f with (-(m+1), -m] inside the bounds:
+        //    -m <= ui and m + 1 <= -lo-value.
+        {
+            let m_min = match ui {
+                Some(u) if u < 0 => -u,
+                _ => 0,
+            };
+            let m_max = lo.map(|(l, _)| -l - 1);
+            if m_max.map_or(true, |mm| m_min <= mm) && lo.map_or(true, |(l, _)| l <= -1) {
+                let pr =
+                    pos_range_alts(&mut self.g, m_min as u64, m_max.map(|m| m as u64), hint);
+                let mut seq = vec![Sym::Class(ByteClass::byte(b'-'))];
+                seq.extend(wrap_alts(&mut self.g, pr, hint));
+                seq.push(Sym::Class(ByteClass::byte(b'.')));
+                seq.push(Sym::Ref(digits1));
+                alts.push(seq);
+            }
+        }
+        // 4. Exclusive lower bound l >= 0: "l." nonzero-fraction lies in
+        //    (l, l+1).
+        if let Some((l, true)) = lo {
+            if l >= 0 && hi.map_or(true, |(h, _)| l + 1 <= h) {
+                let mut seq = Grammar::lit(l.to_string().as_bytes());
+                seq.push(Sym::Class(ByteClass::byte(b'.')));
+                seq.push(Sym::Ref(nonzero));
+                alts.push(seq);
+            }
+        }
+        // 5. Exclusive upper bound h <= 0: "-|h|." nonzero-fraction lies
+        //    in (h-1, h).
+        if let Some((h, true)) = hi {
+            if h <= 0 && lo.map_or(true, |(l, _)| l <= h - 1) {
+                let mut seq = Grammar::lit(b"-");
+                seq.extend(Grammar::lit((-h).to_string().as_bytes()));
+                seq.push(Sym::Class(ByteClass::byte(b'.')));
+                seq.push(Sym::Ref(nonzero));
+                alts.push(seq);
+            }
+        }
+        if alts.is_empty() {
+            return Err(Self::err("contradictory numeric bounds"));
+        }
+        Ok(wrap_alts(&mut self.g, alts, hint))
+    }
+
+    // -- objects ------------------------------------------------------------
+
     fn object_rule(&mut self, schema: &Value, hint: &str) -> Result<Vec<Sym>, GrammarError> {
         let empty = crate::json::Map::new();
         let props = schema
@@ -175,10 +1041,26 @@ impl<'a> Compiler<'a> {
                 return Err(Self::err(format!("required property '{r}' not declared")));
             }
         }
+        let addl = schema.get("additionalProperties");
 
         if props.is_empty() {
-            // {"type":"object"} with no properties -> any object.
-            return Ok(vec![Sym::Ref(self.any_object())]);
+            return match addl {
+                // {"type":"object"} / additionalProperties:true -> any object.
+                None | Some(Value::Bool(true)) => Ok(vec![Sym::Ref(self.any_object())]),
+                // No properties at all: only the empty object.
+                Some(Value::Bool(false)) => Ok(Grammar::lit(b"{}")),
+                // Typed map: { "k": V, ... } with free string keys.
+                Some(sub) => self.map_rule(sub, hint),
+            };
+        }
+        match addl {
+            None | Some(Value::Bool(false)) => {}
+            Some(_) => {
+                return Err(Self::err(
+                    "additionalProperties alongside declared properties unsupported \
+                     (the grammar cannot distinguish extra keys from declared ones)",
+                ))
+            }
         }
 
         // Compile each property's value grammar + its `"name":` prefix.
@@ -205,7 +1087,8 @@ impl<'a> Compiler<'a> {
         let mut memo: HashMap<(usize, bool), usize> = HashMap::new();
         for i in (0..n).rev() {
             for &first in &[false, true] {
-                let rule = self.g.add_rule(format!("{hint}.members{i}{}", if first { "F" } else { "" }));
+                let suffix = if first { "F" } else { "" };
+                let rule = self.g.add_rule(format!("{hint}.members{i}{suffix}"));
                 memo.insert((i, first), rule);
             }
         }
@@ -245,50 +1128,74 @@ impl<'a> Compiler<'a> {
         Ok(seq)
     }
 
+    /// `{}` | `{"k":V(,"k":V)*}` — free string keys, typed values.
+    fn map_rule(&mut self, value_schema: &Value, hint: &str) -> Result<Vec<Sym>, GrammarError> {
+        let key = self.string_rule();
+        let val = self.compile(value_schema, &format!("{hint}.additional"))?;
+        let member = self.g.add_rule(format!("{hint}.map-member"));
+        let mut m = vec![Sym::Ref(key)];
+        m.extend(Grammar::lit(b":"));
+        m.extend(val);
+        self.g.add_alt(member, m);
+        let mut rep = Grammar::lit(b",");
+        rep.push(Sym::Ref(member));
+        let more = self.g.star(rep, hint);
+        let inner = self.g.opt(vec![Sym::Ref(member), more], hint);
+        let mut seq = Grammar::lit(b"{");
+        seq.push(inner);
+        seq.extend(Grammar::lit(b"}"));
+        Ok(seq)
+    }
+
+    // -- arrays -------------------------------------------------------------
+
     fn array_rule(&mut self, schema: &Value, hint: &str) -> Result<Vec<Sym>, GrammarError> {
+        let mut prefix: Vec<Vec<Sym>> = Vec::new();
+        if let Some(p) = schema.get("prefixItems") {
+            let list = p
+                .as_array()
+                .ok_or_else(|| Self::err("'prefixItems' must be an array"))?;
+            if list.len() > MAX_ARRAY_ITEMS {
+                return Err(Self::err(format!("prefixItems > {MAX_ARRAY_ITEMS} unsupported")));
+            }
+            for (i, s) in list.iter().enumerate() {
+                prefix.push(self.compile(s, &format!("{hint}.prefix{i}"))?);
+            }
+        }
+        let k = prefix.len();
+        let items_false = matches!(schema.get("items"), Some(Value::Bool(false)));
         let item = match schema.get("items") {
+            Some(Value::Bool(false)) => Vec::new(), // never referenced
             Some(s) => self.compile(s, &format!("{hint}.items"))?,
             None => vec![Sym::Ref(self.any_value())],
         };
         let min = schema.get("minItems").and_then(Value::as_usize).unwrap_or(0);
-        let max = schema.get("maxItems").and_then(Value::as_usize);
+        let mut max = schema.get("maxItems").and_then(Value::as_usize);
+        if items_false {
+            // items:false forbids elements beyond the prefix.
+            max = Some(max.map_or(k, |m| m.min(k)));
+        }
         if let Some(max) = max {
             if max < min {
                 return Err(Self::err("maxItems < minItems"));
             }
-            if max > 64 {
-                return Err(Self::err("maxItems > 64 unsupported"));
+            if max > MAX_ARRAY_ITEMS {
+                return Err(Self::err(format!("maxItems > {MAX_ARRAY_ITEMS} unsupported")));
             }
+        }
+        if min > MAX_ARRAY_ITEMS {
+            return Err(Self::err(format!("minItems > {MAX_ARRAY_ITEMS} unsupported")));
         }
 
         let mut seq = Grammar::lit(b"[");
-        match (min, max) {
-            (0, None) => {
-                // [ (item ("," item)*)? ]
-                let mut rep = Grammar::lit(b",");
-                rep.extend(item.clone());
-                let more = self.g.star(rep, hint);
-                let mut inner = item;
-                inner.push(more);
-                seq.push(self.g.opt(inner, hint));
-            }
-            (min, None) => {
+        match max {
+            Some(max) => {
                 for i in 0..min {
                     if i > 0 {
                         seq.extend(Grammar::lit(b","));
                     }
-                    seq.extend(item.clone());
-                }
-                let mut rep = Grammar::lit(b",");
-                rep.extend(item.clone());
-                seq.push(self.g.star(rep, hint));
-            }
-            (min, Some(max)) => {
-                for i in 0..min {
-                    if i > 0 {
-                        seq.extend(Grammar::lit(b","));
-                    }
-                    seq.extend(item.clone());
+                    let it = if i < k { prefix[i].clone() } else { item.clone() };
+                    seq.extend(it);
                 }
                 // Optional tail built back-to-front so commas nest
                 // correctly: (,item (,item ...)?)? — never "[,x]".
@@ -298,7 +1205,8 @@ impl<'a> Compiler<'a> {
                     if i > 0 {
                         inner.extend(Grammar::lit(b","));
                     }
-                    inner.extend(item.clone());
+                    let it = if i < k { prefix[i].clone() } else { item.clone() };
+                    inner.extend(it);
                     if let Some(t) = tail.take() {
                         inner.push(t);
                     }
@@ -308,6 +1216,40 @@ impl<'a> Compiler<'a> {
                     seq.push(t);
                 }
             }
+            None => {
+                for i in 0..min {
+                    if i > 0 {
+                        seq.extend(Grammar::lit(b","));
+                    }
+                    let it = if i < k { prefix[i].clone() } else { item.clone() };
+                    seq.extend(it);
+                }
+                let mut rep = Grammar::lit(b",");
+                rep.extend(item.clone());
+                let star = self.g.star(rep, hint);
+                if k > min {
+                    // Prefix items min..k are optional but positional; the
+                    // unbounded `items` tail only opens past the prefix.
+                    let mut tail: Sym = star;
+                    for i in (min..k).rev() {
+                        let mut inner = Vec::new();
+                        if i > 0 {
+                            inner.extend(Grammar::lit(b","));
+                        }
+                        inner.extend(prefix[i].clone());
+                        inner.push(tail);
+                        tail = self.g.opt(inner, hint);
+                    }
+                    seq.push(tail);
+                } else if min == 0 {
+                    // [ (item ("," item)*)? ]
+                    let mut inner = item;
+                    inner.push(star);
+                    seq.push(self.g.opt(inner, hint));
+                } else {
+                    seq.push(star);
+                }
+            }
         }
         seq.extend(Grammar::lit(b"]"));
         Ok(seq)
@@ -315,7 +1257,11 @@ impl<'a> Compiler<'a> {
 
     // -- shared primitive rules ---------------------------------------------
 
-    fn shared_rule(&mut self, name: &'static str, build: impl FnOnce(&mut Grammar, usize)) -> usize {
+    fn shared_rule(
+        &mut self,
+        name: &'static str,
+        build: impl FnOnce(&mut Grammar, usize),
+    ) -> usize {
         if let Some(&r) = self.shared.get(name) {
             return r;
         }
@@ -325,59 +1271,86 @@ impl<'a> Compiler<'a> {
         r
     }
 
-    /// JSON string: `"` chars `"` with escapes. Multibyte characters are
-    /// modeled as *valid UTF-8 sequences* (lead byte + the right number of
-    /// continuation bytes, surrogate range excluded), so byte-level token
-    /// masking can never strand a partial character in the output —
-    /// the same treatment XGrammar applies.
-    fn string_rule(&mut self) -> usize {
-        self.shared_rule("json-string", |g, r| {
-            let cls = |ranges: Vec<(u8, u8)>| Sym::Class(ByteClass { ranges, negated: false });
-            let cont = || cls(vec![(0x80, 0xBF)]);
-            // ASCII printable minus quote/backslash.
-            let ascii = cls(vec![(0x20, 0x21), (0x23, 0x5B), (0x5D, 0x7F)]);
-            let utf8 = g.add_rule("json-utf8-char");
-            g.add_alt(utf8, vec![ascii]);
-            g.add_alt(utf8, vec![cls(vec![(0xC2, 0xDF)]), cont()]);
-            g.add_alt(utf8, vec![cls(vec![(0xE0, 0xE0)]), cls(vec![(0xA0, 0xBF)]), cont()]);
-            g.add_alt(utf8, vec![cls(vec![(0xE1, 0xEC), (0xEE, 0xEF)]), cont(), cont()]);
-            g.add_alt(utf8, vec![cls(vec![(0xED, 0xED)]), cls(vec![(0x80, 0x9F)]), cont()]);
-            g.add_alt(utf8, vec![cls(vec![(0xF0, 0xF0)]), cls(vec![(0x90, 0xBF)]), cont(), cont()]);
-            g.add_alt(utf8, vec![cls(vec![(0xF1, 0xF3)]), cont(), cont(), cont()]);
-            g.add_alt(utf8, vec![cls(vec![(0xF4, 0xF4)]), cls(vec![(0x80, 0x8F)]), cont(), cont()]);
-            let plain = Sym::Ref(utf8);
-            let esc_simple = Sym::Class(ByteClass {
-                ranges: [b'"', b'\\', b'/', b'b', b'f', b'n', b'r', b't']
-                    .iter()
-                    .map(|&c| (c, c))
-                    .collect(),
+    /// One JSON string character: a valid UTF-8 sequence (surrogate range
+    /// excluded, so byte-level token masking can never strand a partial
+    /// character — the same treatment XGrammar applies) or an escape.
+    /// Counts as one code point for length-bounded strings.
+    fn char_rule(&mut self) -> usize {
+        if let Some(&r) = self.shared.get("json-char") {
+            return r;
+        }
+        let r = self.g.add_rule("json-char");
+        self.shared.insert("json-char", r);
+        let g = &mut self.g;
+        let cls = |ranges: Vec<(u8, u8)>| Sym::Class(ByteClass { ranges, negated: false });
+        let cont = || cls(vec![(0x80, 0xBF)]);
+        // ASCII printable minus quote/backslash.
+        let ascii = cls(vec![(0x20, 0x21), (0x23, 0x5B), (0x5D, 0x7F)]);
+        let utf8 = g.add_rule("json-utf8-char");
+        g.add_alt(utf8, vec![ascii]);
+        g.add_alt(utf8, vec![cls(vec![(0xC2, 0xDF)]), cont()]);
+        g.add_alt(utf8, vec![cls(vec![(0xE0, 0xE0)]), cls(vec![(0xA0, 0xBF)]), cont()]);
+        g.add_alt(utf8, vec![cls(vec![(0xE1, 0xEC), (0xEE, 0xEF)]), cont(), cont()]);
+        g.add_alt(utf8, vec![cls(vec![(0xED, 0xED)]), cls(vec![(0x80, 0x9F)]), cont()]);
+        g.add_alt(utf8, vec![cls(vec![(0xF0, 0xF0)]), cls(vec![(0x90, 0xBF)]), cont(), cont()]);
+        g.add_alt(utf8, vec![cls(vec![(0xF1, 0xF3)]), cont(), cont(), cont()]);
+        g.add_alt(utf8, vec![cls(vec![(0xF4, 0xF4)]), cls(vec![(0x80, 0x8F)]), cont(), cont()]);
+        let esc_simple = Sym::Class(ByteClass {
+            ranges: [b'"', b'\\', b'/', b'b', b'f', b'n', b'r', b't']
+                .iter()
+                .map(|&c| (c, c))
+                .collect(),
+            negated: false,
+        });
+        let hex = || {
+            Sym::Class(ByteClass {
+                ranges: vec![(b'0', b'9'), (b'a', b'f'), (b'A', b'F')],
                 negated: false,
-            });
-            let hex = || {
-                Sym::Class(ByteClass {
-                    ranges: vec![(b'0', b'9'), (b'a', b'f'), (b'A', b'F')],
-                    negated: false,
-                })
-            };
-            let chars = g.add_rule("json-string-chars");
-            // chars := ε | plain chars | '\' esc chars
-            g.add_alt(chars, Vec::new());
-            g.add_alt(chars, vec![plain, Sym::Ref(chars)]);
-            let mut esc = vec![Sym::Class(ByteClass::byte(b'\\'))];
-            let esc_alt = g.add_rule("json-escape");
-            g.add_alt(esc_alt, vec![esc_simple]);
-            g.add_alt(
-                esc_alt,
-                vec![Sym::Class(ByteClass::byte(b'u')), hex(), hex(), hex(), hex()],
-            );
-            esc.push(Sym::Ref(esc_alt));
-            esc.push(Sym::Ref(chars));
-            g.add_alt(chars, esc);
+            })
+        };
+        let esc_alt = g.add_rule("json-escape");
+        g.add_alt(esc_alt, vec![esc_simple]);
+        g.add_alt(
+            esc_alt,
+            vec![Sym::Class(ByteClass::byte(b'u')), hex(), hex(), hex(), hex()],
+        );
+        g.add_alt(r, vec![Sym::Ref(utf8)]);
+        g.add_alt(r, vec![Sym::Class(ByteClass::byte(b'\\')), Sym::Ref(esc_alt)]);
+        r
+    }
 
-            let mut alt = Grammar::lit(b"\"");
-            alt.push(Sym::Ref(chars));
-            alt.extend(Grammar::lit(b"\""));
-            g.add_alt(r, alt);
+    /// JSON string: `"` char* `"`.
+    fn string_rule(&mut self) -> usize {
+        if let Some(&r) = self.shared.get("json-string") {
+            return r;
+        }
+        let ch = self.char_rule();
+        let r = self.g.add_rule("json-string");
+        self.shared.insert("json-string", r);
+        let chars = self.g.add_rule("json-string-chars");
+        self.g.add_alt(chars, Vec::new());
+        self.g.add_alt(chars, vec![Sym::Ref(ch), Sym::Ref(chars)]);
+        let mut alt = Grammar::lit(b"\"");
+        alt.push(Sym::Ref(chars));
+        alt.extend(Grammar::lit(b"\""));
+        self.g.add_alt(r, alt);
+        r
+    }
+
+    /// `[0-9]+`
+    fn digits1_rule(&mut self) -> usize {
+        self.shared_rule("digits1", |g, r| {
+            g.add_alt(r, vec![digit(b'0', b'9')]);
+            g.add_alt(r, vec![digit(b'0', b'9'), Sym::Ref(r)]);
+        })
+    }
+
+    /// Fraction digits with at least one nonzero: `0* [1-9] [0-9]*`.
+    fn nonzero_frac_rule(&mut self) -> usize {
+        self.shared_rule("frac-nonzero", |g, r| {
+            let zeros = g.star(vec![digit(b'0', b'0')], "frac-nonzero");
+            let rest = g.star(vec![digit(b'0', b'9')], "frac-nonzero");
+            g.add_alt(r, vec![zeros, digit(b'1', b'9'), rest]);
         })
     }
 
@@ -385,12 +1358,11 @@ impl<'a> Compiler<'a> {
     fn number_rule(&mut self) -> usize {
         let int = self.integer_rule();
         self.shared_rule("json-number", |g, r| {
-            let digit = || Sym::Class(ByteClass { ranges: vec![(b'0', b'9')], negated: false });
             // frac := "." [0-9]+ ; exp := [eE] [+-]? [0-9]+
             let digits1 = {
                 let d = g.add_rule("digits");
-                g.add_alt(d, vec![digit()]);
-                g.add_alt(d, vec![digit(), Sym::Ref(d)]);
+                g.add_alt(d, vec![digit(b'0', b'9')]);
+                g.add_alt(d, vec![digit(b'0', b'9'), Sym::Ref(d)]);
                 d
             };
             let frac = g.add_rule("frac?");
@@ -403,13 +1375,12 @@ impl<'a> Compiler<'a> {
             let exp = g.add_rule("exp?");
             g.add_alt(exp, Vec::new());
             {
-                let e = Sym::Class(ByteClass { ranges: vec![(b'e', b'e'), (b'E', b'E')], negated: false });
+                let e_ranges = vec![(b'e', b'e'), (b'E', b'E')];
+                let e = Sym::Class(ByteClass { ranges: e_ranges, negated: false });
                 let sign = g.add_rule("sign?");
                 g.add_alt(sign, Vec::new());
-                g.add_alt(
-                    sign,
-                    vec![Sym::Class(ByteClass { ranges: vec![(b'+', b'+'), (b'-', b'-')], negated: false })],
-                );
+                let signs = ByteClass { ranges: vec![(b'+', b'+'), (b'-', b'-')], negated: false };
+                g.add_alt(sign, vec![Sym::Class(signs)]);
                 g.add_alt(exp, vec![e, Sym::Ref(sign), Sym::Ref(digits1)]);
             }
             g.add_alt(r, vec![Sym::Ref(int), Sym::Ref(frac), Sym::Ref(exp)]);
@@ -422,16 +1393,10 @@ impl<'a> Compiler<'a> {
             let neg = g.add_rule("neg?");
             g.add_alt(neg, Vec::new());
             g.add_alt(neg, Grammar::lit(b"-"));
-            let nz = Sym::Class(ByteClass { ranges: vec![(b'1', b'9')], negated: false });
+            let nz = digit(b'1', b'9');
             let d0 = g.add_rule("digits*");
             g.add_alt(d0, Vec::new());
-            g.add_alt(
-                d0,
-                vec![
-                    Sym::Class(ByteClass { ranges: vec![(b'0', b'9')], negated: false }),
-                    Sym::Ref(d0),
-                ],
-            );
+            g.add_alt(d0, vec![digit(b'0', b'9'), Sym::Ref(d0)]);
             g.add_alt(r, vec![Sym::Ref(neg), Sym::Class(ByteClass::byte(b'0'))]);
             g.add_alt(r, vec![Sym::Ref(neg), nz, Sym::Ref(d0)]);
         })

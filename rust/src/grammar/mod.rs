@@ -33,13 +33,15 @@ mod ebnf;
 mod grammar;
 mod json_schema;
 mod matcher;
+mod regex;
 
 pub use bitmask::TokenBitmask;
 pub use compiler::CompiledGrammar;
 pub use ebnf::parse_ebnf;
 pub use grammar::{Grammar, GrammarError, Sym};
-pub use json_schema::schema_to_grammar;
+pub use json_schema::{format_pattern, schema_to_grammar};
 pub use matcher::{GrammarMatcher, MaskCache, MaskCacheCounters, VocabTrie};
+pub use regex::regex_to_grammar;
 
 #[cfg(test)]
 mod tests;

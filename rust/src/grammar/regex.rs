@@ -1,0 +1,432 @@
+//! Bounded regex -> grammar compiler (the `pattern` / `format` keywords of
+//! the JSON-Schema frontend, DESIGN.md §2).
+//!
+//! Supported syntax: literals, `.`, character classes (`[a-z0-9_]`,
+//! negation, ranges, `\d \w \s`), groups `( )` / `(?: )`, alternation
+//! `|`, and the postfix operators `* + ? {m} {m,} {m,n}`. A leading `^`
+//! and trailing `$` are accepted and ignored: the compiled grammar is
+//! **always anchored** (it describes the complete string between the JSON
+//! quotes). Mid-pattern anchors, backreferences, and lookaround are
+//! rejected with [`GrammarError::Schema`].
+//!
+//! The alphabet is the *JSON-safe* byte set — printable ASCII `0x20..=0x7E`
+//! minus `"` and `\` — so every string the grammar derives can be emitted
+//! inside a JSON string without escaping. `.` and negated classes are
+//! complemented relative to that set; `\s` narrows to a single space
+//! (raw tabs/newlines are not legal inside a JSON string). Repetition
+//! counts are capped and the total expansion is budgeted, so adversarial
+//! patterns fail with a structured error instead of exhausting memory.
+
+use super::grammar::{ByteClass, Grammar, GrammarError, Sym};
+
+/// Longest accepted pattern, in bytes.
+pub const MAX_PATTERN_LEN: usize = 1024;
+/// Largest `{m,n}` repetition count.
+const MAX_REPEAT: usize = 1024;
+/// Total symbol-expansion budget per pattern (guards `("x"{999}){999}`).
+const MAX_EXPANSION: usize = 65_536;
+
+/// Compile an anchored regex into a byte-level [`Grammar`] (rule 0 is the
+/// root). The language is the set of complete strings the pattern matches,
+/// over the JSON-safe alphabet (printable ASCII minus `"` and `\`).
+///
+/// # Examples
+///
+/// ```
+/// use std::rc::Rc;
+/// use webllm::grammar::{regex_to_grammar, GrammarMatcher};
+///
+/// let g = Rc::new(regex_to_grammar("[A-Z]{2}-[0-9]{3}").unwrap());
+///
+/// let mut m = GrammarMatcher::new(g.clone());
+/// assert!(m.advance_bytes(b"AB-123") && m.is_accepting());
+///
+/// // Anchored: a matching prefix with trailing garbage is rejected.
+/// let mut m = GrammarMatcher::new(g);
+/// assert!(!m.advance_bytes(b"AB-1234x"));
+/// ```
+///
+/// Unsupported constructs produce [`GrammarError::Schema`]:
+///
+/// ```
+/// use webllm::grammar::{regex_to_grammar, GrammarError};
+///
+/// assert!(matches!(regex_to_grammar("a(?=b)"), Err(GrammarError::Schema(_))));
+/// ```
+pub fn regex_to_grammar(pattern: &str) -> Result<Grammar, GrammarError> {
+    let mut g = Grammar::new();
+    let root = g.add_rule("root");
+    debug_assert_eq!(root, 0);
+    let seq = compile_fragment(&mut g, pattern, "regex")?;
+    g.add_alt(0, seq);
+    g.validate()?;
+    Ok(g)
+}
+
+/// Compile `pattern` into a symbol sequence inside an existing grammar
+/// (used by the schema compiler to inline `pattern`/`format` between the
+/// JSON string quotes).
+pub(crate) fn compile_fragment(
+    g: &mut Grammar,
+    pattern: &str,
+    hint: &str,
+) -> Result<Vec<Sym>, GrammarError> {
+    if pattern.len() > MAX_PATTERN_LEN {
+        return Err(GrammarError::Schema(format!(
+            "regex: pattern longer than {MAX_PATTERN_LEN} bytes"
+        )));
+    }
+    if !pattern.is_ascii() {
+        return Err(GrammarError::Schema(
+            "regex: non-ASCII patterns unsupported".into(),
+        ));
+    }
+    let mut p = Rx { bytes: pattern.as_bytes(), pos: 0, g, hint, budget: MAX_EXPANSION };
+    let alts = p.alternation()?;
+    if p.pos != p.bytes.len() {
+        return Err(p.err("unbalanced ')'"));
+    }
+    Ok(wrap_alts(p.g, alts, hint))
+}
+
+fn wrap_alts(g: &mut Grammar, mut alts: Vec<Vec<Sym>>, hint: &str) -> Vec<Sym> {
+    if alts.len() == 1 {
+        alts.pop().unwrap()
+    } else {
+        vec![g.choice(alts, hint)]
+    }
+}
+
+/// JSON-safe: printable ASCII minus `"` and `\` — emittable unescaped.
+fn is_safe(b: u8) -> bool {
+    (0x20..=0x7E).contains(&b) && b != b'"' && b != b'\\'
+}
+
+fn safe_class() -> ByteClass {
+    ByteClass { ranges: vec![(0x20, 0x21), (0x23, 0x5B), (0x5D, 0x7E)], negated: false }
+}
+
+fn is_meta(b: u8) -> bool {
+    matches!(
+        b,
+        b'(' | b')' | b'[' | b']' | b'{' | b'}' | b'*' | b'+' | b'?' | b'|' | b'.' | b'^' | b'$'
+    )
+}
+
+struct Rx<'a, 'g> {
+    bytes: &'a [u8],
+    pos: usize,
+    g: &'g mut Grammar,
+    hint: &'a str,
+    budget: usize,
+}
+
+impl<'a, 'g> Rx<'a, 'g> {
+    fn err(&self, m: impl Into<String>) -> GrammarError {
+        GrammarError::Schema(format!("regex: {} (at byte {} of pattern)", m.into(), self.pos))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn charge(&mut self, n: usize) -> Result<(), GrammarError> {
+        if n > self.budget {
+            return Err(self.err("pattern expansion exceeds budget"));
+        }
+        self.budget -= n;
+        Ok(())
+    }
+
+    fn alternation(&mut self) -> Result<Vec<Vec<Sym>>, GrammarError> {
+        let mut alts = vec![self.concat()?];
+        while self.peek() == Some(b'|') {
+            self.pos += 1;
+            alts.push(self.concat()?);
+        }
+        Ok(alts)
+    }
+
+    fn concat(&mut self) -> Result<Vec<Sym>, GrammarError> {
+        let mut seq = Vec::new();
+        loop {
+            match self.peek() {
+                None | Some(b'|') | Some(b')') => return Ok(seq),
+                Some(b'^') => {
+                    // Zero-width anchor: a no-op (the grammar is anchored),
+                    // accepted only at the start of a branch.
+                    if !seq.is_empty() {
+                        return Err(self.err("'^' only supported at the start"));
+                    }
+                    self.pos += 1;
+                }
+                Some(b'$') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        None | Some(b'|') | Some(b')') => {}
+                        _ => return Err(self.err("'$' only supported at the end")),
+                    }
+                }
+                _ => {
+                    let atom = self.atom()?;
+                    let expanded = self.postfix(atom)?;
+                    seq.extend(expanded);
+                }
+            }
+        }
+    }
+
+    fn atom(&mut self) -> Result<Vec<Sym>, GrammarError> {
+        self.charge(1)?;
+        match self.peek().expect("concat checked for end") {
+            b'(' => {
+                self.pos += 1;
+                if self.peek() == Some(b'?') {
+                    if self.bytes.get(self.pos + 1) == Some(&b':') {
+                        self.pos += 2; // non-capturing group marker
+                    } else {
+                        return Err(self.err("unsupported '(?' construct (lookaround/flags)"));
+                    }
+                }
+                let alts = self.alternation()?;
+                if self.peek() != Some(b')') {
+                    return Err(self.err("expected ')'"));
+                }
+                self.pos += 1;
+                Ok(wrap_alts(self.g, alts, self.hint))
+            }
+            b'[' => Ok(vec![Sym::Class(self.class()?)]),
+            b'.' => {
+                self.pos += 1;
+                Ok(vec![Sym::Class(safe_class())])
+            }
+            b'\\' => {
+                self.pos += 1;
+                let c = self.peek().ok_or_else(|| self.err("dangling escape"))?;
+                self.pos += 1;
+                Ok(vec![Sym::Class(self.escape_class(c)?)])
+            }
+            b'*' | b'+' | b'?' | b'{' => Err(self.err("repetition with nothing to repeat")),
+            c if is_safe(c) && !is_meta(c) => {
+                self.pos += 1;
+                Ok(vec![Sym::Class(ByteClass::byte(c))])
+            }
+            c => Err(self.err(format!(
+                "character 0x{c:02x} not representable in an unescaped JSON string"
+            ))),
+        }
+    }
+
+    /// A `\x` escape outside a class, as a byte class.
+    fn escape_class(&self, c: u8) -> Result<ByteClass, GrammarError> {
+        Ok(match c {
+            b'd' => ByteClass { ranges: vec![(b'0', b'9')], negated: false },
+            b'w' => ByteClass {
+                ranges: vec![(b'0', b'9'), (b'A', b'Z'), (b'_', b'_'), (b'a', b'z')],
+                negated: false,
+            },
+            // Raw tab/newline are illegal inside a JSON string; the
+            // JSON-safe narrowing of \s is a single space.
+            b's' => ByteClass::byte(b' '),
+            c if is_safe(c) && !c.is_ascii_alphanumeric() => ByteClass::byte(c),
+            b'\\' | b'"' | b'n' | b't' | b'r' | b'f' | b'b' | b'0' => {
+                return Err(self.err(format!(
+                    "escape '\\{}' not representable in an unescaped JSON string",
+                    c as char
+                )))
+            }
+            other => return Err(self.err(format!("unknown escape '\\{}'", other as char))),
+        })
+    }
+
+    /// `[...]` class, intersected with the JSON-safe alphabet.
+    fn class(&mut self) -> Result<ByteClass, GrammarError> {
+        self.pos += 1; // '['
+        let negated = if self.peek() == Some(b'^') {
+            self.pos += 1;
+            true
+        } else {
+            false
+        };
+        let mut set = [false; 128];
+        let mut any = false;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated class")),
+                Some(b']') => {
+                    if !any {
+                        return Err(self.err("empty character class"));
+                    }
+                    self.pos += 1;
+                    break;
+                }
+                _ => {
+                    if let Some(lo) = self.class_item(&mut set)? {
+                        if self.peek() == Some(b'-')
+                            && self.bytes.get(self.pos + 1).map_or(false, |&c| c != b']')
+                        {
+                            self.pos += 1;
+                            let hi = self
+                                .class_item(&mut set)?
+                                .ok_or_else(|| self.err("invalid range endpoint"))?;
+                            if hi < lo {
+                                return Err(self.err("inverted range"));
+                            }
+                            for b in lo..=hi {
+                                if (b as usize) < 128 {
+                                    set[b as usize] = true;
+                                }
+                            }
+                        } else if (lo as usize) < 128 {
+                            set[lo as usize] = true;
+                        }
+                    }
+                    any = true;
+                }
+            }
+        }
+        // Complement relative to — and intersect with — the JSON-safe set.
+        let mut ranges: Vec<(u8, u8)> = Vec::new();
+        let mut run: Option<(u8, u8)> = None;
+        for b in 0u8..128 {
+            let inside = set[b as usize] != negated;
+            if inside && is_safe(b) {
+                run = match run {
+                    Some((lo, hi)) if hi + 1 == b => Some((lo, b)),
+                    Some(r) => {
+                        ranges.push(r);
+                        Some((b, b))
+                    }
+                    None => Some((b, b)),
+                };
+            }
+        }
+        if let Some(r) = run {
+            ranges.push(r);
+        }
+        if ranges.is_empty() {
+            return Err(self.err("character class matches no JSON-safe character"));
+        }
+        Ok(ByteClass { ranges, negated: false })
+    }
+
+    /// One class member: a literal/escaped byte (`Some`) or a perl class
+    /// that was added to `set` directly (`None`).
+    fn class_item(&mut self, set: &mut [bool; 128]) -> Result<Option<u8>, GrammarError> {
+        match self.peek() {
+            None => Err(self.err("unterminated class")),
+            Some(b'\\') => {
+                self.pos += 1;
+                let c = self.peek().ok_or_else(|| self.err("dangling escape"))?;
+                self.pos += 1;
+                match c {
+                    b'd' => {
+                        for b in b'0'..=b'9' {
+                            set[b as usize] = true;
+                        }
+                        Ok(None)
+                    }
+                    b'w' => {
+                        for b in (b'0'..=b'9').chain(b'A'..=b'Z').chain(b'a'..=b'z') {
+                            set[b as usize] = true;
+                        }
+                        set[b'_' as usize] = true;
+                        Ok(None)
+                    }
+                    b's' => {
+                        set[b' ' as usize] = true;
+                        Ok(None)
+                    }
+                    b'n' | b't' | b'r' | b'f' => Err(self.err(format!(
+                        "escape '\\{}' not representable in an unescaped JSON string",
+                        c as char
+                    ))),
+                    other => Ok(Some(other)),
+                }
+            }
+            Some(c) => {
+                self.pos += 1;
+                Ok(Some(c))
+            }
+        }
+    }
+
+    fn postfix(&mut self, atom: Vec<Sym>) -> Result<Vec<Sym>, GrammarError> {
+        if atom.is_empty() {
+            // Repetition of an empty group derives only ε; desugaring it
+            // would build an epsilon-cycle rule, so short-circuit.
+            if matches!(self.peek(), Some(b'*' | b'+' | b'?')) {
+                self.pos += 1;
+            } else if self.peek() == Some(b'{') {
+                while self.peek().is_some() && self.peek() != Some(b'}') {
+                    self.pos += 1;
+                }
+                if self.peek() != Some(b'}') {
+                    return Err(self.err("expected '}' in repetition"));
+                }
+                self.pos += 1;
+            }
+            return Ok(atom);
+        }
+        match self.peek() {
+            Some(b'*') => {
+                self.pos += 1;
+                Ok(vec![self.g.star(atom, self.hint)])
+            }
+            Some(b'+') => {
+                self.pos += 1;
+                Ok(self.g.plus(atom, self.hint))
+            }
+            Some(b'?') => {
+                self.pos += 1;
+                Ok(vec![self.g.opt(atom, self.hint)])
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let min = self.number()?;
+                let max = match self.peek() {
+                    Some(b'}') => Some(min),
+                    Some(b',') => {
+                        self.pos += 1;
+                        if self.peek() == Some(b'}') {
+                            None
+                        } else {
+                            Some(self.number()?)
+                        }
+                    }
+                    _ => return Err(self.err("expected ',' or '}' in repetition")),
+                };
+                if self.peek() != Some(b'}') {
+                    return Err(self.err("expected '}' in repetition"));
+                }
+                self.pos += 1;
+                if min > MAX_REPEAT || max.map_or(false, |n| n > MAX_REPEAT) {
+                    return Err(self.err(format!("repetition count exceeds {MAX_REPEAT}")));
+                }
+                if let Some(n) = max {
+                    if n < min {
+                        return Err(self.err("repetition max < min"));
+                    }
+                }
+                let copies = max.unwrap_or(min) + 1;
+                self.charge(atom.len().max(1).saturating_mul(copies))?;
+                Ok(self.g.repeat(atom, min, max, self.hint))
+            }
+            _ => Ok(atom),
+        }
+    }
+
+    fn number(&mut self) -> Result<usize, GrammarError> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.pos == start || self.pos - start > 7 {
+            return Err(self.err("expected repetition count"));
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .unwrap()
+            .parse()
+            .map_err(|_| self.err("bad repetition count"))
+    }
+}

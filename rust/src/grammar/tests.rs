@@ -709,3 +709,322 @@ fn prop_schemaless_grammar_accepts_all_serializer_output() {
         Ok(())
     });
 }
+
+// -- regex -> grammar compiler ------------------------------------------------
+
+fn regex(p: &str) -> Rc<Grammar> {
+    Rc::new(regex_to_grammar(p).unwrap())
+}
+
+#[test]
+fn regex_literals_classes_postfix() {
+    let g = regex("ab*c");
+    assert!(accepts(&g, "ac"));
+    assert!(accepts(&g, "abbbc"));
+    assert!(!accepts(&g, "a"));
+    assert!(rejects_prefix(&g, "x"));
+
+    let g = regex("[a-f0-9]+");
+    assert!(accepts(&g, "deadbeef42"));
+    assert!(!accepts(&g, ""));
+    assert!(rejects_prefix(&g, "g"));
+
+    let g = regex("colou?r");
+    assert!(accepts(&g, "color"));
+    assert!(accepts(&g, "colour"));
+}
+
+#[test]
+fn regex_counted_repetition_and_alternation() {
+    let g = regex("^(ab|cd){2,3}$");
+    assert!(accepts(&g, "abab"));
+    assert!(accepts(&g, "abcdab"));
+    assert!(!accepts(&g, "ab"));
+    assert!(!accepts(&g, "abababab"));
+
+    let g = regex("a{3}");
+    assert!(accepts(&g, "aaa"));
+    assert!(!accepts(&g, "aa"));
+    assert!(!accepts(&g, "aaaa"));
+
+    let g = regex("x{2,}");
+    assert!(accepts(&g, "xx"));
+    assert!(accepts(&g, "xxxxxx"));
+    assert!(!accepts(&g, "x"));
+}
+
+#[test]
+fn regex_anchored_and_json_safe_alphabet() {
+    // Anchors are epsilon; the language is always the full string.
+    let g = regex("^v[0-9]+\\.[0-9]+$");
+    assert!(accepts(&g, "v1.12"));
+    assert!(!accepts(&g, "v1"));
+
+    // `.` and negated classes complement within printable-minus-quote.
+    let g = regex(".+");
+    assert!(accepts(&g, "any text!"));
+    assert!(rejects_prefix(&g, "\""));
+    assert!(rejects_prefix(&g, "\n"));
+    let g = regex("[^0-9]");
+    assert!(accepts(&g, "z"));
+    assert!(rejects_prefix(&g, "5"));
+    assert!(rejects_prefix(&g, "\\"));
+}
+
+#[test]
+fn regex_errors_are_structured() {
+    for bad in [
+        "a(?=b)",     // lookahead
+        "(a",         // unbalanced
+        "a)",         // unbalanced
+        "*a",         // nothing to repeat
+        "[z-a]",      // inverted range
+        "[]",         // empty class
+        "a{5,2}",     // max < min
+        "a{2000}",    // over MAX_REPEAT
+        "\\n",        // raw control char can't sit unescaped in JSON
+        "a\"b",       // quote would need a JSON escape
+        "caf\u{e9}",  // non-ASCII pattern
+    ] {
+        assert!(
+            matches!(regex_to_grammar(bad), Err(GrammarError::Schema(_))),
+            "{bad:?} should be a structured Schema error"
+        );
+    }
+}
+
+// -- extended JSON-Schema keyword families ------------------------------------
+
+#[test]
+fn schema_type_arrays() {
+    let g = schema(r#"{"type": ["integer", "null"]}"#);
+    assert!(accepts(&g, "3"));
+    assert!(accepts(&g, "-12"));
+    assert!(accepts(&g, "null"));
+    assert!(!accepts(&g, "3.5"));
+    assert!(rejects_prefix(&g, "\"x\""));
+
+    // Sibling keywords apply to the branch they constrain.
+    let g = schema(r#"{"type": ["string", "null"], "maxLength": 2}"#);
+    assert!(accepts(&g, "\"ab\""));
+    assert!(accepts(&g, "null"));
+    assert!(!accepts(&g, "\"abc\""));
+}
+
+#[test]
+fn schema_integer_bounds_compile_to_digit_ranges() {
+    let g = schema(r#"{"type": "integer", "minimum": 1, "maximum": 40}"#);
+    for ok in ["1", "9", "12", "40"] {
+        assert!(accepts(&g, ok), "{ok}");
+    }
+    for bad in ["0", "41", "-1", "07"] {
+        assert!(!accepts(&g, bad), "{bad} wrongly accepted");
+    }
+
+    let g = schema(r#"{"type": "integer", "minimum": -25, "maximum": -3}"#);
+    assert!(accepts(&g, "-25"));
+    assert!(accepts(&g, "-3"));
+    assert!(!accepts(&g, "-2"));
+    assert!(!accepts(&g, "-26"));
+    assert!(!accepts(&g, "0"));
+
+    let g = schema(r#"{"type": "integer", "exclusiveMinimum": 0, "exclusiveMaximum": 100}"#);
+    assert!(accepts(&g, "1"));
+    assert!(accepts(&g, "99"));
+    assert!(!accepts(&g, "0"));
+    assert!(!accepts(&g, "100"));
+
+    // One-sided bound: unbounded above.
+    let g = schema(r#"{"type": "integer", "minimum": 200}"#);
+    assert!(accepts(&g, "200"));
+    assert!(accepts(&g, "123456"));
+    assert!(!accepts(&g, "199"));
+}
+
+#[test]
+fn schema_number_bounds_with_decimals() {
+    let g = schema(r#"{"type": "number", "minimum": 0, "maximum": 10}"#);
+    for ok in ["0", "10", "3.5", "0.25", "9.999"] {
+        assert!(accepts(&g, ok), "{ok}");
+    }
+    for bad in ["-0.5", "10.1", "11", "1e2"] {
+        assert!(!accepts(&g, bad), "{bad} wrongly accepted");
+    }
+
+    // Exclusive bound at the boundary value needs a nonzero fraction.
+    let g = schema(r#"{"type": "number", "exclusiveMinimum": 0, "maximum": 2}"#);
+    assert!(accepts(&g, "0.5"));
+    assert!(accepts(&g, "0.001"));
+    assert!(accepts(&g, "2"));
+    assert!(!accepts(&g, "0"));
+    assert!(!accepts(&g, "0.0"));
+    assert!(!accepts(&g, "2.1"));
+
+    let g = schema(r#"{"type": "number", "minimum": -2, "exclusiveMaximum": 0}"#);
+    assert!(accepts(&g, "-0.5"));
+    assert!(accepts(&g, "-2"));
+    assert!(!accepts(&g, "0"));
+    assert!(!accepts(&g, "-2.5"));
+}
+
+#[test]
+fn schema_string_length_counts_code_points() {
+    let g = schema(r#"{"type": "string", "minLength": 2, "maxLength": 3}"#);
+    assert!(accepts(&g, "\"ab\""));
+    assert!(accepts(&g, "\"abc\""));
+    assert!(accepts(&g, "\"日本語\""));
+    assert!(accepts(&g, "\"a\\nb\""));
+    assert!(!accepts(&g, "\"a\""));
+    assert!(!accepts(&g, "\"abcd\""));
+    assert!(!accepts(&g, "\"\""));
+}
+
+#[test]
+fn schema_pattern_and_formats() {
+    let g = schema(r#"{"type": "string", "pattern": "^[A-Z]{2}-[0-9]{3}$"}"#);
+    assert!(accepts(&g, "\"AB-123\""));
+    assert!(!accepts(&g, "\"ab-123\""));
+    assert!(!accepts(&g, "\"AB-12\""));
+
+    let g = schema(r#"{"type": "string", "format": "date"}"#);
+    assert!(accepts(&g, "\"2024-02-29\""));
+    assert!(!accepts(&g, "\"2024-13-01\""));
+    assert!(!accepts(&g, "\"2024-1-1\""));
+
+    let g = schema(r#"{"type": "string", "format": "date-time"}"#);
+    assert!(accepts(&g, "\"2024-01-15T10:30:00Z\""));
+    assert!(accepts(&g, "\"2024-01-15T10:30:00.123+05:30\""));
+    assert!(!accepts(&g, "\"2024-01-15 10:30:00Z\""));
+
+    let g = schema(r#"{"type": "string", "format": "uuid"}"#);
+    assert!(accepts(&g, "\"123e4567-e89b-12d3-a456-426614174000\""));
+    assert!(!accepts(&g, "\"123E4567-E89B-12D3-A456-426614174000\""));
+
+    let g = schema(r#"{"type": "string", "format": "email"}"#);
+    assert!(accepts(&g, "\"a.b+tag@example.co\""));
+    assert!(!accepts(&g, "\"no-at-sign\""));
+
+    // Unknown formats are annotations: plain string.
+    let g = schema(r#"{"type": "string", "format": "hostname"}"#);
+    assert!(accepts(&g, "\"anything at all\""));
+}
+
+#[test]
+fn schema_all_of_merges() {
+    let g = schema(
+        r#"{"allOf": [
+            {"type": "object", "properties": {"a": {"type": "integer"}}, "required": ["a"]},
+            {"type": "object", "properties": {"b": {"type": "boolean"}}, "required": ["b"]}
+        ]}"#,
+    );
+    assert!(accepts(&g, r#"{"a":1,"b":true}"#));
+    assert!(!accepts(&g, r#"{"a":1}"#));
+    assert!(!accepts(&g, r#"{"b":true}"#));
+
+    let g = schema(r#"{"type": "integer", "allOf": [{"minimum": 0}, {"maximum": 10}]}"#);
+    assert!(accepts(&g, "7"));
+    assert!(!accepts(&g, "11"));
+
+    for bad in [
+        r#"{"allOf": [{"type": "string"}, {"type": "integer"}]}"#,
+        r#"{"allOf": [{"const": 1}, {"const": 2}]}"#,
+        r#"{"type": "integer", "allOf": [{"minimum": 5}, {"maximum": 2}]}"#,
+    ] {
+        assert!(
+            matches!(schema_to_grammar(&parse(bad).unwrap()), Err(GrammarError::Schema(_))),
+            "{bad}"
+        );
+    }
+}
+
+#[test]
+fn schema_one_of_requires_disjoint_branches() {
+    let g = schema(r#"{"oneOf": [{"type": "integer"}, {"type": "string"}]}"#);
+    assert!(accepts(&g, "7"));
+    assert!(accepts(&g, "\"x\""));
+    assert!(!accepts(&g, "true"));
+
+    let g = schema(r#"{"oneOf": [{"const": "a"}, {"enum": ["b", "c"]}]}"#);
+    assert!(accepts(&g, "\"a\""));
+    assert!(accepts(&g, "\"c\""));
+    assert!(!accepts(&g, "\"d\""));
+
+    // integer and number overlap (3 matches both) -> structured error.
+    for bad in [
+        r#"{"oneOf": [{"type": "integer"}, {"type": "number"}]}"#,
+        r#"{"oneOf": [{"type": "string"}, {}]}"#,
+        r#"{"oneOf": [{"const": "a"}, {"enum": ["a", "b"]}]}"#,
+    ] {
+        assert!(
+            matches!(schema_to_grammar(&parse(bad).unwrap()), Err(GrammarError::Schema(_))),
+            "{bad}"
+        );
+    }
+}
+
+#[test]
+fn schema_additional_properties_maps() {
+    let g = schema(r#"{"type": "object", "additionalProperties": {"type": "integer"}}"#);
+    assert!(accepts(&g, "{}"));
+    assert!(accepts(&g, r#"{"a":1}"#));
+    assert!(accepts(&g, r#"{"a":1,"b":-2}"#));
+    assert!(!accepts(&g, r#"{"a":true}"#));
+
+    // Bare object type admits arbitrary members.
+    let g = schema(r#"{"type": "object"}"#);
+    assert!(accepts(&g, "{}"));
+    assert!(accepts(&g, r#"{"x":[1,{"y":null}]}"#));
+
+    // additionalProperties: false without properties pins the empty object.
+    let g = schema(r#"{"type": "object", "additionalProperties": false}"#);
+    assert!(accepts(&g, "{}"));
+    assert!(!accepts(&g, r#"{"a":1}"#));
+}
+
+#[test]
+fn schema_prefix_items_tuples() {
+    let g = schema(
+        r#"{"type": "array",
+            "prefixItems": [{"type": "string"}, {"type": "integer"}],
+            "items": false}"#,
+    );
+    assert!(accepts(&g, "[]"));
+    assert!(accepts(&g, r#"["x"]"#));
+    assert!(accepts(&g, r#"["x",3]"#));
+    assert!(!accepts(&g, r#"["x",3,4]"#));
+    assert!(!accepts(&g, "[3]"));
+
+    let g = schema(
+        r#"{"type": "array",
+            "prefixItems": [{"type": "integer"}],
+            "items": {"type": "boolean"},
+            "minItems": 1}"#,
+    );
+    assert!(accepts(&g, "[1]"));
+    assert!(accepts(&g, "[1,true,false]"));
+    assert!(!accepts(&g, "[]"));
+    assert!(!accepts(&g, "[true]"));
+    assert!(!accepts(&g, "[1,2]"));
+}
+
+#[test]
+fn ebnf_counted_repetition() {
+    let g = Rc::new(parse_ebnf(r#"root ::= "a"{2,4}"#).unwrap());
+    assert!(accepts(&g, "aa"));
+    assert!(accepts(&g, "aaaa"));
+    assert!(!accepts(&g, "a"));
+    assert!(!accepts(&g, "aaaaa"));
+
+    let g = Rc::new(parse_ebnf("root ::= [0-9]{3}").unwrap());
+    assert!(accepts(&g, "042"));
+    assert!(!accepts(&g, "42"));
+    assert!(!accepts(&g, "0424"));
+
+    let g = Rc::new(parse_ebnf(r#"root ::= "x"{2,}"#).unwrap());
+    assert!(accepts(&g, "xx"));
+    assert!(accepts(&g, "xxxxx"));
+    assert!(!accepts(&g, "x"));
+
+    assert!(parse_ebnf(r#"root ::= "a"{5,2}"#).is_err());
+    assert!(parse_ebnf(r#"root ::= "a"{999999}"#).is_err());
+}

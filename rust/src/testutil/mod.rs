@@ -12,6 +12,7 @@
 
 pub mod backend_contract;
 pub mod prop;
+pub mod schema_oracle;
 
 use crate::api::ChatCompletionRequest;
 

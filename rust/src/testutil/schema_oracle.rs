@@ -1,0 +1,818 @@
+//! Independent JSON-Schema instance validator — the conformance-test
+//! oracle.
+//!
+//! Deliberately shares no machinery with `grammar::json_schema`: keywords
+//! are applied conjunctively per the spec (not compiled to a byte
+//! grammar), `pattern` uses an unanchored substring search over a
+//! Thompson-NFA regex engine (no backtracking), string lengths count
+//! Unicode code points, and object key order / whitespace don't matter.
+//! The grammar emits a *canonical subset* of each schema's language, so
+//! the differential contract is one-sided: everything the grammar accepts
+//! must validate here, and anything rejected here must be rejected by the
+//! grammar. The only shared artifact is [`format_pattern`] — both sides
+//! must agree on what, say, a `uuid` looks like.
+//!
+//! Unknown keywords are ignored (annotation semantics); keywords with
+//! shapes we cannot judge return `Err` so a test can't silently pass.
+
+use crate::grammar::format_pattern;
+use crate::json::Value;
+
+const MAX_DEPTH: usize = 256;
+
+/// Validate `instance` against `schema` (draft 2020-12 subset).
+/// `Ok(true)` / `Ok(false)` = verdict; `Err` = the schema itself is
+/// malformed or outside the supported subset.
+pub fn validate(schema: &Value, instance: &Value) -> Result<bool, String> {
+    check(schema, schema, instance, 0)
+}
+
+fn check(root: &Value, schema: &Value, inst: &Value, depth: usize) -> Result<bool, String> {
+    if depth > MAX_DEPTH {
+        return Err("schema recursion too deep".into());
+    }
+    let o = match schema {
+        Value::Bool(b) => return Ok(*b),
+        Value::Object(o) => o,
+        _ => return Err("schema must be an object or boolean".into()),
+    };
+
+    if let Some(r) = o.get("$ref") {
+        let path = r.as_str().ok_or("$ref must be a string")?;
+        let target = deref(root, path)?;
+        if !check(root, target, inst, depth + 1)? {
+            return Ok(false);
+        }
+    }
+    if let Some(t) = o.get("type") {
+        if !type_ok(t, inst)? {
+            return Ok(false);
+        }
+    }
+    if let Some(c) = o.get("const") {
+        if inst != c {
+            return Ok(false);
+        }
+    }
+    if let Some(e) = o.get("enum") {
+        let list = e.as_array().ok_or("'enum' must be an array")?;
+        if !list.iter().any(|v| v == inst) {
+            return Ok(false);
+        }
+    }
+    if let Some(l) = o.get("allOf") {
+        for s in l.as_array().ok_or("'allOf' must be an array")? {
+            if !check(root, s, inst, depth + 1)? {
+                return Ok(false);
+            }
+        }
+    }
+    if let Some(l) = o.get("anyOf") {
+        let list = l.as_array().ok_or("'anyOf' must be an array")?;
+        let mut any = false;
+        for s in list {
+            if check(root, s, inst, depth + 1)? {
+                any = true;
+            }
+        }
+        if !any {
+            return Ok(false);
+        }
+    }
+    if let Some(l) = o.get("oneOf") {
+        // Exactly one branch must validate (the keyword the grammar can
+        // only express for provably disjoint branches).
+        let list = l.as_array().ok_or("'oneOf' must be an array")?;
+        let mut hits = 0;
+        for s in list {
+            if check(root, s, inst, depth + 1)? {
+                hits += 1;
+            }
+        }
+        if hits != 1 {
+            return Ok(false);
+        }
+    }
+
+    match inst {
+        Value::String(s) => {
+            let len = s.chars().count();
+            if let Some(m) = o.get("minLength") {
+                if len < m.as_usize().ok_or("'minLength' must be an integer")? {
+                    return Ok(false);
+                }
+            }
+            if let Some(m) = o.get("maxLength") {
+                if len > m.as_usize().ok_or("'maxLength' must be an integer")? {
+                    return Ok(false);
+                }
+            }
+            if let Some(p) = o.get("pattern") {
+                let p = p.as_str().ok_or("'pattern' must be a string")?;
+                if !regex_matches(p, s, false)? {
+                    return Ok(false);
+                }
+            }
+            if let Some(f) = o.get("format") {
+                let f = f.as_str().ok_or("'format' must be a string")?;
+                if let Some(p) = format_pattern(f) {
+                    if !regex_matches(p, s, true)? {
+                        return Ok(false);
+                    }
+                }
+            }
+        }
+        Value::Number(n) => {
+            if let Some(b) = o.get("minimum") {
+                if *n < b.as_f64().ok_or("'minimum' must be a number")? {
+                    return Ok(false);
+                }
+            }
+            if let Some(b) = o.get("exclusiveMinimum") {
+                if *n <= b.as_f64().ok_or("'exclusiveMinimum' must be a number")? {
+                    return Ok(false);
+                }
+            }
+            if let Some(b) = o.get("maximum") {
+                if *n > b.as_f64().ok_or("'maximum' must be a number")? {
+                    return Ok(false);
+                }
+            }
+            if let Some(b) = o.get("exclusiveMaximum") {
+                if *n >= b.as_f64().ok_or("'exclusiveMaximum' must be a number")? {
+                    return Ok(false);
+                }
+            }
+        }
+        Value::Object(io) => {
+            if let Some(r) = o.get("required") {
+                for name in r.as_array().ok_or("'required' must be an array")? {
+                    let name = name.as_str().ok_or("'required' entries must be strings")?;
+                    if !io.contains_key(name) {
+                        return Ok(false);
+                    }
+                }
+            }
+            let props = o.get("properties");
+            if let Some(p) = props {
+                let p = p.as_object().ok_or("'properties' must be an object")?;
+                for (k, sub) in p.iter() {
+                    if let Some(v) = io.get(k) {
+                        if !check(root, sub, v, depth + 1)? {
+                            return Ok(false);
+                        }
+                    }
+                }
+            }
+            if let Some(ap) = o.get("additionalProperties") {
+                let declared = |k: &str| {
+                    props
+                        .and_then(Value::as_object)
+                        .map_or(false, |p| p.contains_key(k))
+                };
+                for (k, v) in io.iter() {
+                    if declared(k) {
+                        continue;
+                    }
+                    match ap {
+                        Value::Bool(false) => return Ok(false),
+                        Value::Bool(true) => {}
+                        sub => {
+                            if !check(root, sub, v, depth + 1)? {
+                                return Ok(false);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Value::Array(items) => {
+            if let Some(m) = o.get("minItems") {
+                if items.len() < m.as_usize().ok_or("'minItems' must be an integer")? {
+                    return Ok(false);
+                }
+            }
+            if let Some(m) = o.get("maxItems") {
+                if items.len() > m.as_usize().ok_or("'maxItems' must be an integer")? {
+                    return Ok(false);
+                }
+            }
+            let prefix = match o.get("prefixItems") {
+                Some(p) => p.as_array().ok_or("'prefixItems' must be an array")?.as_slice(),
+                None => &[],
+            };
+            for (i, v) in items.iter().enumerate() {
+                if i < prefix.len() {
+                    if !check(root, &prefix[i], v, depth + 1)? {
+                        return Ok(false);
+                    }
+                } else if let Some(sub) = o.get("items") {
+                    match sub {
+                        Value::Bool(false) => return Ok(false),
+                        _ => {
+                            if !check(root, sub, v, depth + 1)? {
+                                return Ok(false);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        _ => {}
+    }
+    Ok(true)
+}
+
+fn deref<'a>(root: &'a Value, path: &str) -> Result<&'a Value, String> {
+    let target = path
+        .strip_prefix("#/$defs/")
+        .or_else(|| path.strip_prefix("#/definitions/"))
+        .ok_or_else(|| format!("unsupported $ref '{path}'"))?;
+    root.get("$defs")
+        .or_else(|| root.get("definitions"))
+        .and_then(|d| d.get(target))
+        .ok_or_else(|| format!("unresolved $ref '{path}'"))
+}
+
+fn type_ok(t: &Value, inst: &Value) -> Result<bool, String> {
+    match t {
+        Value::String(s) => Ok(one_type_ok(s, inst)),
+        Value::Array(ts) => {
+            for t in ts {
+                let s = t.as_str().ok_or("'type' array entries must be strings")?;
+                if one_type_ok(s, inst) {
+                    return Ok(true);
+                }
+            }
+            Ok(false)
+        }
+        _ => Err("'type' must be a string or array of strings".into()),
+    }
+}
+
+fn one_type_ok(t: &str, inst: &Value) -> bool {
+    match t {
+        "null" => inst.is_null(),
+        "boolean" => matches!(inst, Value::Bool(_)),
+        "string" => matches!(inst, Value::String(_)),
+        "number" => matches!(inst, Value::Number(_)),
+        "integer" => matches!(inst, Value::Number(n) if n.fract() == 0.0 && n.is_finite()),
+        "object" => matches!(inst, Value::Object(_)),
+        "array" => matches!(inst, Value::Array(_)),
+        _ => false,
+    }
+}
+
+// --- regex engine (Thompson NFA, Pike-style set simulation) --------------
+//
+// Standard ECMA-ish semantics over Unicode scalar values: `.` is
+// any-but-newline, classes are true complements, `pattern` searches
+// unanchored unless the pattern leads with `^` / ends with `$`. This is
+// intentionally a different construction than `grammar::regex` (byte-level
+// CFG, always anchored, JSON-safe alphabet) so the two implementations
+// cross-check each other.
+
+const MAX_INSTS: usize = 100_000;
+const MAX_COUNT: usize = 1024;
+
+#[derive(Clone, Debug)]
+struct Class {
+    ranges: Vec<(u32, u32)>,
+    negated: bool,
+}
+
+impl Class {
+    fn matches(&self, c: char) -> bool {
+        let c = c as u32;
+        let inside = self.ranges.iter().any(|&(lo, hi)| lo <= c && c <= hi);
+        inside != self.negated
+    }
+}
+
+enum Re {
+    Empty,
+    Char(Class),
+    Concat(Vec<Re>),
+    Alt(Vec<Re>),
+    Star(Box<Re>),
+    Plus(Box<Re>),
+    Opt(Box<Re>),
+    Repeat(Box<Re>, usize, Option<usize>),
+}
+
+enum Inst {
+    Char(Class),
+    Split(usize, usize),
+    Jmp(usize),
+    Match,
+}
+
+/// Whether `pattern` matches `text`: full match when `anchored`
+/// (format semantics), else substring search (pattern semantics, with
+/// leading `^` / trailing `$` respected).
+pub fn regex_matches(pattern: &str, text: &str, anchored: bool) -> Result<bool, String> {
+    let cs: Vec<char> = pattern.chars().collect();
+    let mut p = Pat { cs: &cs, pos: 0 };
+    let ast = p.alt()?;
+    if p.pos < cs.len() {
+        return Err(format!("unexpected '{}' at {}", cs[p.pos], p.pos));
+    }
+    let anchor_start = anchored || pattern.starts_with('^');
+    let anchor_end = anchored || ends_with_anchor(&cs);
+    let mut c = Codegen { insts: Vec::new() };
+    c.emit(&ast)?;
+    c.insts.push(Inst::Match);
+    let chars: Vec<char> = text.chars().collect();
+    Ok(run(&c.insts, &chars, anchor_start, anchor_end))
+}
+
+fn ends_with_anchor(cs: &[char]) -> bool {
+    if cs.last() != Some(&'$') {
+        return false;
+    }
+    // `\$` is a literal dollar; count the preceding backslash run.
+    let mut backslashes = 0;
+    for &c in cs[..cs.len() - 1].iter().rev() {
+        if c == '\\' {
+            backslashes += 1;
+        } else {
+            break;
+        }
+    }
+    backslashes % 2 == 0
+}
+
+struct Pat<'a> {
+    cs: &'a [char],
+    pos: usize,
+}
+
+impl<'a> Pat<'a> {
+    fn peek(&self) -> Option<char> {
+        self.cs.get(self.pos).copied()
+    }
+
+    fn alt(&mut self) -> Result<Re, String> {
+        let mut branches = vec![self.concat()?];
+        while self.peek() == Some('|') {
+            self.pos += 1;
+            branches.push(self.concat()?);
+        }
+        Ok(if branches.len() == 1 { branches.pop().unwrap() } else { Re::Alt(branches) })
+    }
+
+    fn concat(&mut self) -> Result<Re, String> {
+        let mut seq = Vec::new();
+        while let Some(c) = self.peek() {
+            if c == '|' || c == ')' {
+                break;
+            }
+            let atom = self.atom()?;
+            seq.push(self.postfix(atom)?);
+        }
+        Ok(match seq.len() {
+            0 => Re::Empty,
+            1 => seq.pop().unwrap(),
+            _ => Re::Concat(seq),
+        })
+    }
+
+    fn atom(&mut self) -> Result<Re, String> {
+        let c = self.cs[self.pos];
+        self.pos += 1;
+        match c {
+            '(' => {
+                if self.peek() == Some('?') {
+                    if self.cs.get(self.pos + 1) == Some(&':') {
+                        self.pos += 2;
+                    } else {
+                        return Err("unsupported (?...) group".into());
+                    }
+                }
+                let inner = self.alt()?;
+                if self.peek() != Some(')') {
+                    return Err("unclosed group".into());
+                }
+                self.pos += 1;
+                Ok(inner)
+            }
+            '[' => self.class(),
+            '.' => Ok(Re::Char(Class { ranges: vec![('\n' as u32, '\n' as u32)], negated: true })),
+            // Anchors apply at the pattern edges (handled by the caller);
+            // elsewhere they are epsilon here.
+            '^' | '$' => Ok(Re::Empty),
+            '\\' => {
+                let e = self.escape(false)?;
+                Ok(Re::Char(e))
+            }
+            '*' | '+' | '?' => Err(format!("dangling quantifier '{c}'")),
+            _ => Ok(Re::Char(lit(c))),
+        }
+    }
+
+    fn postfix(&mut self, atom: Re) -> Result<Re, String> {
+        match self.peek() {
+            Some('*') => {
+                self.pos += 1;
+                Ok(Re::Star(Box::new(atom)))
+            }
+            Some('+') => {
+                self.pos += 1;
+                Ok(Re::Plus(Box::new(atom)))
+            }
+            Some('?') => {
+                self.pos += 1;
+                Ok(Re::Opt(Box::new(atom)))
+            }
+            Some('{') => {
+                let save = self.pos;
+                match self.counts() {
+                    Ok((min, max)) => Ok(Re::Repeat(Box::new(atom), min, max)),
+                    // Not a quantifier — `{` is a literal atom.
+                    Err(_) => {
+                        self.pos = save;
+                        Ok(atom)
+                    }
+                }
+            }
+            _ => Ok(atom),
+        }
+    }
+
+    fn counts(&mut self) -> Result<(usize, Option<usize>), String> {
+        debug_assert_eq!(self.peek(), Some('{'));
+        self.pos += 1;
+        let min = self.number()?;
+        let out = match self.peek() {
+            Some('}') => (min, Some(min)),
+            Some(',') => {
+                self.pos += 1;
+                if self.peek() == Some('}') {
+                    (min, None)
+                } else {
+                    let max = self.number()?;
+                    if max < min {
+                        return Err("repetition max < min".into());
+                    }
+                    (min, Some(max))
+                }
+            }
+            _ => return Err("malformed repetition".into()),
+        };
+        if self.peek() != Some('}') {
+            return Err("malformed repetition".into());
+        }
+        self.pos += 1;
+        Ok(out)
+    }
+
+    fn number(&mut self) -> Result<usize, String> {
+        let start = self.pos;
+        while self.peek().map_or(false, |c| c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err("expected a count".into());
+        }
+        let n: usize = self.cs[start..self.pos]
+            .iter()
+            .collect::<String>()
+            .parse()
+            .map_err(|_| "count overflow".to_string())?;
+        if n > MAX_COUNT {
+            return Err(format!("count exceeds {MAX_COUNT}"));
+        }
+        Ok(n)
+    }
+
+    fn class(&mut self) -> Result<Re, String> {
+        let negated = if self.peek() == Some('^') {
+            self.pos += 1;
+            true
+        } else {
+            false
+        };
+        let mut ranges: Vec<(u32, u32)> = Vec::new();
+        loop {
+            let c = self.peek().ok_or("unclosed character class")?;
+            if c == ']' {
+                self.pos += 1;
+                break;
+            }
+            self.pos += 1;
+            let lo = if c == '\\' {
+                let e = self.escape(true)?;
+                if e.ranges.len() != 1 || e.ranges[0].0 != e.ranges[0].1 {
+                    // Multi-range escape (\d, \w, \s): no range syntax.
+                    ranges.extend(e.ranges);
+                    continue;
+                }
+                e.ranges[0].0
+            } else {
+                c as u32
+            };
+            // `a-z` range (a trailing `-` is a literal).
+            if self.peek() == Some('-') && self.cs.get(self.pos + 1).map_or(false, |&c| c != ']') {
+                self.pos += 1;
+                let hc = self.cs[self.pos];
+                self.pos += 1;
+                let hi = if hc == '\\' {
+                    let e = self.escape(true)?;
+                    if e.ranges.len() != 1 || e.ranges[0].0 != e.ranges[0].1 {
+                        return Err("class escape cannot end a range".into());
+                    }
+                    e.ranges[0].0
+                } else {
+                    hc as u32
+                };
+                if hi < lo {
+                    return Err("reversed class range".into());
+                }
+                ranges.push((lo, hi));
+            } else {
+                ranges.push((lo, lo));
+            }
+        }
+        if ranges.is_empty() && !negated {
+            return Err("empty character class".into());
+        }
+        Ok(Re::Char(Class { ranges, negated }))
+    }
+
+    /// After a `\`. `in_class` only affects which metacharacters make
+    /// sense, not the result shape.
+    fn escape(&mut self, in_class: bool) -> Result<Class, String> {
+        let c = self.peek().ok_or("trailing backslash")?;
+        self.pos += 1;
+        let single = |c: char| Class { ranges: vec![(c as u32, c as u32)], negated: false };
+        Ok(match c {
+            'd' => Class { ranges: vec![('0' as u32, '9' as u32)], negated: false },
+            'D' => Class { ranges: vec![('0' as u32, '9' as u32)], negated: true },
+            'w' => word_class(false),
+            'W' => word_class(true),
+            's' => space_class(false),
+            'S' => space_class(true),
+            'n' => single('\n'),
+            't' => single('\t'),
+            'r' => single('\r'),
+            'f' => single('\u{0C}'),
+            'v' => single('\u{0B}'),
+            '0' => single('\0'),
+            'u' | 'x' => return Err(format!("unsupported escape '\\{c}'")),
+            _ => {
+                let _ = in_class;
+                single(c)
+            }
+        })
+    }
+}
+
+fn lit(c: char) -> Class {
+    Class { ranges: vec![(c as u32, c as u32)], negated: false }
+}
+
+fn word_class(negated: bool) -> Class {
+    Class {
+        ranges: vec![
+            ('0' as u32, '9' as u32),
+            ('A' as u32, 'Z' as u32),
+            ('_' as u32, '_' as u32),
+            ('a' as u32, 'z' as u32),
+        ],
+        negated,
+    }
+}
+
+fn space_class(negated: bool) -> Class {
+    Class {
+        ranges: vec![(0x09, 0x0D), (' ' as u32, ' ' as u32)],
+        negated,
+    }
+}
+
+struct Codegen {
+    insts: Vec<Inst>,
+}
+
+impl Codegen {
+    fn emit(&mut self, re: &Re) -> Result<(), String> {
+        if self.insts.len() > MAX_INSTS {
+            return Err("pattern too large".into());
+        }
+        match re {
+            Re::Empty => {}
+            Re::Char(c) => self.insts.push(Inst::Char(c.clone())),
+            Re::Concat(v) => {
+                for r in v {
+                    self.emit(r)?;
+                }
+            }
+            Re::Alt(branches) => {
+                let mut jmps = Vec::new();
+                for (i, b) in branches.iter().enumerate() {
+                    if i + 1 < branches.len() {
+                        let sp = self.insts.len();
+                        self.insts.push(Inst::Split(sp + 1, 0));
+                        self.emit(b)?;
+                        jmps.push(self.insts.len());
+                        self.insts.push(Inst::Jmp(0));
+                        let next = self.insts.len();
+                        if let Inst::Split(_, alt) = &mut self.insts[sp] {
+                            *alt = next;
+                        }
+                    } else {
+                        self.emit(b)?;
+                    }
+                }
+                let end = self.insts.len();
+                for j in jmps {
+                    if let Inst::Jmp(t) = &mut self.insts[j] {
+                        *t = end;
+                    }
+                }
+            }
+            Re::Star(r) => {
+                let sp = self.insts.len();
+                self.insts.push(Inst::Split(sp + 1, 0));
+                self.emit(r)?;
+                self.insts.push(Inst::Jmp(sp));
+                let end = self.insts.len();
+                if let Inst::Split(_, alt) = &mut self.insts[sp] {
+                    *alt = end;
+                }
+            }
+            Re::Plus(r) => {
+                let start = self.insts.len();
+                self.emit(r)?;
+                let sp = self.insts.len();
+                self.insts.push(Inst::Split(start, sp + 1));
+            }
+            Re::Opt(r) => {
+                let sp = self.insts.len();
+                self.insts.push(Inst::Split(sp + 1, 0));
+                self.emit(r)?;
+                let end = self.insts.len();
+                if let Inst::Split(_, alt) = &mut self.insts[sp] {
+                    *alt = end;
+                }
+            }
+            Re::Repeat(r, min, max) => {
+                for _ in 0..*min {
+                    self.emit(r)?;
+                }
+                match max {
+                    None => self.emit_star(r)?,
+                    // `r? r? ...` — copies are identical, so sequential
+                    // optionals count the same as nested ones.
+                    Some(max) => {
+                        for _ in *min..*max {
+                            let sp = self.insts.len();
+                            self.insts.push(Inst::Split(sp + 1, 0));
+                            self.emit(r)?;
+                            let end = self.insts.len();
+                            if let Inst::Split(_, alt) = &mut self.insts[sp] {
+                                *alt = end;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn emit_star(&mut self, r: &Re) -> Result<(), String> {
+        let sp = self.insts.len();
+        self.insts.push(Inst::Split(sp + 1, 0));
+        self.emit(r)?;
+        self.insts.push(Inst::Jmp(sp));
+        let end = self.insts.len();
+        if let Inst::Split(_, alt) = &mut self.insts[sp] {
+            *alt = end;
+        }
+        Ok(())
+    }
+}
+
+fn add_closure(insts: &[Inst], set: &mut Vec<bool>, start: usize) {
+    let mut work = vec![start];
+    while let Some(i) = work.pop() {
+        if set[i] {
+            continue;
+        }
+        set[i] = true;
+        match &insts[i] {
+            Inst::Split(a, b) => {
+                work.push(*a);
+                work.push(*b);
+            }
+            Inst::Jmp(t) => work.push(*t),
+            _ => {}
+        }
+    }
+}
+
+fn has_match(insts: &[Inst], set: &[bool]) -> bool {
+    set.iter()
+        .enumerate()
+        .any(|(i, &on)| on && matches!(insts[i], Inst::Match))
+}
+
+fn run(insts: &[Inst], text: &[char], anchor_start: bool, anchor_end: bool) -> bool {
+    let mut cur = vec![false; insts.len()];
+    add_closure(insts, &mut cur, 0);
+    for &c in text {
+        if !anchor_end && has_match(insts, &cur) {
+            return true;
+        }
+        if !anchor_start {
+            // A new match attempt may begin at this position.
+            add_closure(insts, &mut cur, 0);
+        }
+        let mut next = vec![false; insts.len()];
+        for (i, &on) in cur.iter().enumerate() {
+            if !on {
+                continue;
+            }
+            if let Inst::Char(cl) = &insts[i] {
+                if cl.matches(c) {
+                    add_closure(insts, &mut next, i + 1);
+                }
+            }
+        }
+        cur = next;
+    }
+    if !anchor_start && !has_match(insts, &cur) {
+        // An empty match at the very end still counts.
+        add_closure(insts, &mut cur, 0);
+    }
+    has_match(insts, &cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    #[test]
+    fn regex_search_vs_anchored() {
+        assert!(regex_matches("b+c", "abbcd", false).unwrap());
+        assert!(!regex_matches("b+c", "abbcd", true).unwrap());
+        assert!(regex_matches("^ab", "abc", false).unwrap());
+        assert!(!regex_matches("^bc", "abc", false).unwrap());
+        assert!(regex_matches("bc$", "abc", false).unwrap());
+        assert!(!regex_matches("ab$", "abc", false).unwrap());
+        assert!(regex_matches("a{2,3}", "xaaay", false).unwrap());
+        assert!(!regex_matches("^a{2,3}$", "aaaa", false).unwrap());
+        assert!(regex_matches("[^0-9]+", "abc", true).unwrap());
+        assert!(regex_matches("(ab|cd)+", "abcdab", true).unwrap());
+        assert!(regex_matches("\\d{3}", "12345", false).unwrap());
+        assert!(regex_matches("", "anything", false).unwrap());
+        assert!(regex_matches("x.z", "x№z", true).unwrap());
+        assert!(regex_matches("日+", "日日", true).unwrap());
+        assert!(regex_matches("(?=a)", "a", false).is_err());
+    }
+
+    #[test]
+    fn validates_basic_keywords() {
+        let schema = parse(
+            r#"{"type":"object",
+                "properties":{"n":{"type":"integer","minimum":2}},
+                "required":["n"],
+                "additionalProperties":false}"#,
+        )
+        .unwrap();
+        let yes = parse(r#"{"n":3}"#).unwrap();
+        let no_low = parse(r#"{"n":1}"#).unwrap();
+        let no_extra = parse(r#"{"n":3,"x":1}"#).unwrap();
+        assert!(validate(&schema, &yes).unwrap());
+        assert!(!validate(&schema, &no_low).unwrap());
+        assert!(!validate(&schema, &no_extra).unwrap());
+    }
+
+    #[test]
+    fn one_of_is_exactly_one() {
+        let schema = parse(
+            r#"{"oneOf":[{"type":"integer","minimum":0},
+                          {"type":"integer","maximum":10}]}"#,
+        )
+        .unwrap();
+        // 5 matches both branches -> invalid under oneOf.
+        assert!(!validate(&schema, &parse("5").unwrap()).unwrap());
+        assert!(validate(&schema, &parse("-3").unwrap()).unwrap());
+        assert!(validate(&schema, &parse("12").unwrap()).unwrap());
+    }
+
+    #[test]
+    fn format_is_anchored_pattern_is_searched() {
+        let schema = parse(r#"{"type":"string","format":"uuid"}"#).unwrap();
+        let ok = parse(r#""123e4567-e89b-12d3-a456-426614174000""#).unwrap();
+        let bad = parse(r#""x123e4567-e89b-12d3-a456-426614174000""#).unwrap();
+        assert!(validate(&schema, &ok).unwrap());
+        assert!(!validate(&schema, &bad).unwrap());
+
+        let schema = parse(r#"{"type":"string","pattern":"[0-9]{3}"}"#).unwrap();
+        assert!(validate(&schema, &parse(r#""ab1234""#).unwrap()).unwrap());
+        assert!(!validate(&schema, &parse(r#""ab12""#).unwrap()).unwrap());
+    }
+}

@@ -424,6 +424,41 @@ fn structured_generation_ebnf_choice() {
 }
 
 #[test]
+fn structured_generation_bounded_number_and_pattern() {
+    // The extended keyword families end-to-end: a regex `pattern` and a
+    // digit-DFA integer range, decoded through the real masked sampler
+    // on the reference backend and checked with the independent JSON
+    // parser. The schema is fully bounded, so decoding must terminate
+    // with Stop well inside max_tokens.
+    let schema = r#"{
+        "type": "object",
+        "properties": {
+            "code": {"type": "string", "pattern": "^[A-Z]{2}-[0-9]{3}$"},
+            "score": {"type": "integer", "minimum": 1, "maximum": 40}
+        },
+        "required": ["code", "score"]
+    }"#;
+    let mut engine = engine();
+    let mut req = ChatCompletionRequest::new(MODEL).user("emit a code and score");
+    req.max_tokens = 120;
+    req.sampling.seed = Some(5);
+    req.sampling.logit_bias.insert(byte_tok(b'}'), 5.0);
+    req.response_format = ResponseFormat::JsonSchema(parse(schema).unwrap());
+    let resp = engine.chat_completion(req).unwrap();
+    let v = parse(resp.text()).unwrap_or_else(|e| panic!("not JSON: {e}: {}", resp.text()));
+
+    let code = v.get("code").and_then(|c| c.as_str()).expect("missing 'code'");
+    let b = code.as_bytes();
+    assert_eq!(b.len(), 6, "code {code:?} violates ^[A-Z]{{2}}-[0-9]{{3}}$");
+    assert!(b[0].is_ascii_uppercase() && b[1].is_ascii_uppercase() && b[2] == b'-');
+    assert!(b[3..].iter().all(|c| c.is_ascii_digit()), "bad code {code:?}");
+
+    let score = v.get("score").and_then(|s| s.as_i64()).expect("missing 'score'");
+    assert!((1..=40).contains(&score), "score {score} outside [1, 40]");
+    assert_eq!(resp.choices[0].finish_reason, FinishReason::Stop);
+}
+
+#[test]
 fn invalid_grammar_rejected_at_submit() {
     let mut engine = engine();
     let mut req = ChatCompletionRequest::new(MODEL).user("x");

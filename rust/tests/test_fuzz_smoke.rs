@@ -1,0 +1,234 @@
+//! Structure-aware fuzz smoke for the grammar front-ends.
+//!
+//! Deterministic (seeded), offline, and bounded — this is the in-tree
+//! complement to the `cargo fuzz` targets under `fuzz/fuzz_targets/`,
+//! which require a libfuzzer toolchain and are NOT built by CI. Each
+//! smoke test mutates realistic seeds and asserts the invariant that
+//! matters for an inference server taking untrusted schemas over HTTP:
+//! the front-ends return `Ok` or a structured `GrammarError` — they
+//! never panic, and anything they do accept yields a bounded, internally
+//! consistent grammar the matcher can run.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::rc::Rc;
+
+use webllm::grammar::{parse_ebnf, regex_to_grammar, schema_to_grammar, Grammar, GrammarMatcher};
+use webllm::json::{parse, to_string, Value};
+use webllm::testutil::prop::PropRng;
+use webllm::testutil::schema_oracle;
+
+const ITERS: usize = 400;
+/// Generous ceiling over the compiler's own rule budget (20k) — a
+/// mutated input that slips past `Err` must still come out bounded.
+const MAX_RULES: usize = 25_000;
+const MAX_DRIVE_BYTES: usize = 64;
+
+/// Run `f`, mapping a panic to an error carrying the offending input.
+fn no_panic<T>(what: &str, input: &str, f: impl FnOnce() -> T) -> T {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(v) => v,
+        Err(_) => panic!("{what} panicked on input: {input:?}"),
+    }
+}
+
+/// Drive the matcher over random bytes; exercises the pushdown stacks
+/// (and their dead-state pruning) on whatever grammar came out.
+fn drive_matcher(rng: &mut PropRng, g: Grammar, input: &str) {
+    if g.rules.len() > MAX_RULES {
+        panic!("grammar from {input:?} exceeded rule budget: {}", g.rules.len());
+    }
+    if let Err(e) = g.validate() {
+        panic!("invalid grammar from {input:?}: {e}");
+    }
+    let g = Rc::new(g);
+    no_panic("matcher", input, || {
+        let mut m = GrammarMatcher::new(g.clone());
+        for _ in 0..MAX_DRIVE_BYTES {
+            let b = match rng.range(4) {
+                0 => b' ' + rng.range(95) as u8, // printable ASCII
+                1 => *rng.choose(b"{}[]\",:0129ae-.tfn"),
+                2 => rng.range(256) as u8, // arbitrary, incl. invalid UTF-8
+                _ => b'"',
+            };
+            if !m.advance_bytes(&[b]) {
+                break;
+            }
+            let _ = m.is_accepting();
+        }
+        let _ = m.fingerprint();
+    });
+}
+
+/// Splice random bytes of `text` from a structure-biased pool.
+fn mutate_text(rng: &mut PropRng, text: &str, pool: &[u8]) -> String {
+    let mut bytes = text.as_bytes().to_vec();
+    for _ in 0..1 + rng.range(4) {
+        match rng.range(3) {
+            0 if !bytes.is_empty() => {
+                let i = rng.range(bytes.len());
+                bytes[i] = *rng.choose(pool);
+            }
+            1 => {
+                let i = rng.range(bytes.len() + 1);
+                bytes.insert(i, *rng.choose(pool));
+            }
+            _ if !bytes.is_empty() => {
+                bytes.remove(rng.range(bytes.len()));
+            }
+            _ => {}
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[test]
+fn fuzz_smoke_ebnf() {
+    let seeds = [
+        r#"root ::= "a" | "b" root"#,
+        r#"root ::= obj
+obj ::= "{" ( pair ( "," pair )* )? "}"
+pair ::= "\"" [a-z]+ "\"" ":" [0-9]+"#,
+        r#"root ::= [a-zA-Z_] [a-zA-Z0-9_]*"#,
+        r#"root ::= item{2,5}
+item ::= [0-9] | "x""#,
+        r#"root ::= ( "ab" | "cd" )+ [^\n]?"#,
+    ];
+    let pool = br#"rot:=|()[]{}*+?^-,"\ abz09_n"#;
+    let mut rng = PropRng::new(0xEB0F);
+    let mut parsed = 0usize;
+    for i in 0..ITERS {
+        let text = mutate_text(&mut rng, seeds[i % seeds.len()], pool);
+        if let Ok(g) = no_panic("parse_ebnf", &text, || parse_ebnf(&text)) {
+            parsed += 1;
+            drive_matcher(&mut rng, g, &text);
+        }
+    }
+    // The mutations are small, so a decent share must still parse —
+    // otherwise the smoke test is only exercising the error path.
+    assert!(parsed > ITERS / 20, "only {parsed}/{ITERS} mutants parsed");
+    println!("fuzz_smoke_ebnf: {parsed}/{ITERS} mutants parsed and driven");
+}
+
+#[test]
+fn fuzz_smoke_regex() {
+    let seeds = [
+        "^[A-Z]{2}-[0-9]{3}$",
+        "^(ab|cd)+e?$",
+        "^v[0-9]+\\.[0-9]+\\.[0-9]+$",
+        "^[a-z]+(_[a-z]+)*$",
+        "^a{2,4}b*c?$",
+        "^x[0-9a-f]*$",
+    ];
+    let pool = br#"^$()[]{}|*+?\.-09azAZ,"#;
+    let mut rng = PropRng::new(0x4E6E);
+    let mut compiled = 0usize;
+    for i in 0..ITERS {
+        let pat = mutate_text(&mut rng, seeds[i % seeds.len()], pool);
+        let res = no_panic("regex_to_grammar", &pat, || regex_to_grammar(&pat));
+        // The independent oracle regex engine must also never panic on
+        // the same pattern (it may reject it differently).
+        no_panic("oracle regex", &pat, || {
+            let _ = schema_oracle::regex_matches(&pat, "sample-090", false);
+        });
+        if let Ok(g) = res {
+            compiled += 1;
+            drive_matcher(&mut rng, g, &pat);
+        }
+    }
+    assert!(compiled > ITERS / 20, "only {compiled}/{ITERS} mutants compiled");
+    println!("fuzz_smoke_regex: {compiled}/{ITERS} mutants compiled and driven");
+}
+
+/// Pull every schema out of the conformance corpus as mutation seeds.
+fn corpus_schemas() -> Vec<String> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/corpus");
+    let mut files: Vec<_> = std::fs::read_dir(&dir)
+        .expect("tests/corpus must exist")
+        .map(|e| e.expect("dir entry").path())
+        .filter(|p| p.extension().map_or(false, |x| x == "json"))
+        .collect();
+    files.sort();
+    let mut out = Vec::new();
+    for p in files {
+        let doc = parse(&std::fs::read_to_string(&p).expect("read")).expect("corpus json");
+        for fx in doc.as_array().expect("fixture array") {
+            if let Some(s) = fx.get("schema") {
+                out.push(to_string(s));
+            }
+        }
+    }
+    assert!(out.len() >= 40, "too few corpus schemas: {}", out.len());
+    out
+}
+
+#[test]
+fn fuzz_smoke_schema() {
+    let seeds = corpus_schemas();
+    let pool = br#"{}[]",:0-9ae tfn\minmaxtypelng"#;
+    let mut rng = PropRng::new(0x5C4E);
+    let mut compiled = 0usize;
+    for i in 0..ITERS {
+        let seed = &seeds[i % seeds.len()];
+        // Alternate byte-level splices with structural keyword grafts.
+        let text = if rng.bool() {
+            mutate_text(&mut rng, seed, pool)
+        } else {
+            match parse(seed) {
+                Ok(mut v) => {
+                    graft_keyword(&mut rng, &mut v);
+                    to_string(&v)
+                }
+                Err(_) => seed.clone(),
+            }
+        };
+        let Ok(schema) = parse(&text) else { continue };
+        if let Ok(g) = no_panic("schema_to_grammar", &text, || schema_to_grammar(&schema)) {
+            compiled += 1;
+            drive_matcher(&mut rng, g, &text);
+        }
+        // The oracle must stay panic-free on the same mutant schema.
+        no_panic("schema oracle", &text, || {
+            let _ = schema_oracle::validate(&schema, &Value::Null);
+        });
+    }
+    assert!(compiled > ITERS / 20, "only {compiled}/{ITERS} mutants compiled");
+    println!("fuzz_smoke_schema: {compiled}/{ITERS} mutants compiled and driven");
+}
+
+/// Graft a random (often nonsensical) keyword somewhere in the schema.
+fn graft_keyword(rng: &mut PropRng, v: &mut Value) {
+    let keywords: &[(&str, fn(&mut PropRng) -> Value)] = &[
+        ("minimum", |r| Value::Number(r.i64_in(-50, 50) as f64)),
+        ("maximum", |r| Value::Number(r.i64_in(-50, 50) as f64)),
+        ("minLength", |r| Value::Number(r.range(8) as f64)),
+        ("maxLength", |r| Value::Number(r.range(8) as f64)),
+        ("minItems", |r| Value::Number(r.range(5) as f64)),
+        ("maxItems", |r| Value::Number(r.range(5) as f64)),
+        ("pattern", |r| Value::String(if r.bool() { "^a+$".into() } else { "(".into() })),
+        ("format", |r| Value::String(if r.bool() { "uuid".into() } else { "bogus".into() })),
+        ("type", |r| {
+            Value::String((*r.choose(&["string", "integer", "object", "bogus"])).into())
+        }),
+        ("required", |_| Value::Array(vec![Value::String("zzz".into())])),
+        ("additionalProperties", |r| Value::Bool(r.bool())),
+        ("items", |_| Value::Bool(false)),
+    ];
+    match v {
+        Value::Object(o) => {
+            // Either graft here or descend into a random entry.
+            if o.is_empty() || rng.bool() {
+                let (k, make) = *rng.choose(keywords);
+                o.insert(k, make(rng));
+            } else {
+                let keys: Vec<String> = o.keys().cloned().collect();
+                let k = rng.choose(&keys).clone();
+                graft_keyword(rng, o.get_mut(&k).unwrap());
+            }
+        }
+        Value::Array(items) if !items.is_empty() => {
+            let i = rng.range(items.len());
+            graft_keyword(rng, &mut items[i]);
+        }
+        _ => {}
+    }
+}

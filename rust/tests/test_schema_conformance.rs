@@ -1,0 +1,559 @@
+//! JSON-Schema grammar conformance suite.
+//!
+//! Three layers, per ROADMAP item 3 (llguidance-style conformance):
+//!
+//! 1. A fixture corpus (`tests/corpus/*.json`, `{schema, valid, invalid}`)
+//!    driven through BOTH the byte-level grammar matcher and the
+//!    independent oracle validator (`testutil::schema_oracle`), plus an
+//!    AOT compile sanity check per fixture.
+//! 2. A differential property test: a seeded generator emits a random
+//!    supported schema together with a canonical conforming instance;
+//!    the grammar must accept it and the oracle must validate it. Byte-
+//!    and structure-level mutants that the oracle rejects (or that are
+//!    not JSON at all) must be rejected by the grammar.
+//! 3. Keyword coverage accounting: the corpus must exercise every
+//!    supported keyword, and the suite fails if one goes missing.
+//!
+//! The grammar emits a canonical *subset* of each schema's language
+//! (compact bytes, schema-ordered properties), so `oracle_only` fixture
+//! entries capture instances that validate but are not canonical.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use webllm::grammar::{
+    schema_to_grammar, CompiledGrammar, Grammar, GrammarError, GrammarMatcher, VocabTrie,
+};
+use webllm::json::{parse, to_string, Value};
+use webllm::testutil::prop::{PropRng, Runner};
+use webllm::testutil::schema_oracle;
+
+/// Every keyword the compiler supports; the corpus must cover each.
+const REQUIRED_KEYWORDS: &[&str] = &[
+    "type",
+    "enum",
+    "const",
+    "anyOf",
+    "oneOf",
+    "allOf",
+    "$ref",
+    "properties",
+    "required",
+    "additionalProperties",
+    "items",
+    "prefixItems",
+    "minItems",
+    "maxItems",
+    "minLength",
+    "maxLength",
+    "pattern",
+    "format",
+    "minimum",
+    "maximum",
+    "exclusiveMinimum",
+    "exclusiveMaximum",
+];
+
+fn corpus() -> Vec<(String, Value)> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/corpus");
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)
+        .expect("tests/corpus must exist")
+        .map(|e| e.expect("read_dir entry").path())
+        .filter(|p| p.extension().map_or(false, |x| x == "json"))
+        .collect();
+    files.sort();
+    assert!(!files.is_empty(), "empty corpus directory");
+    files
+        .into_iter()
+        .map(|p| {
+            let text = std::fs::read_to_string(&p).expect("read corpus file");
+            let doc = parse(&text).unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+            (p.file_name().unwrap().to_string_lossy().into_owned(), doc)
+        })
+        .collect()
+}
+
+fn byte_vocab() -> Vec<Vec<u8>> {
+    (0u16..=255).map(|b| vec![b as u8]).collect()
+}
+
+fn accepts(g: &Rc<Grammar>, bytes: &[u8]) -> bool {
+    let mut m = GrammarMatcher::new(g.clone());
+    m.advance_bytes(bytes) && m.is_accepting()
+}
+
+fn list<'a>(fx: &'a Value, key: &str) -> &'a [Value] {
+    fx.get(key).and_then(Value::as_array).map_or(&[], |a| a.as_slice())
+}
+
+#[test]
+fn schema_conformance_corpus() {
+    let vocab = byte_vocab();
+    let trie = VocabTrie::build(vocab.len(), |i| vocab[i as usize].as_slice());
+    let mut tally: BTreeMap<String, usize> = BTreeMap::new();
+    let mut fixtures = 0usize;
+    let mut instances = 0usize;
+
+    for (file, doc) in corpus() {
+        for fx in doc.as_array().unwrap_or_else(|| panic!("{file}: not an array")) {
+            fixtures += 1;
+            let name = fx.get("name").and_then(Value::as_str).unwrap_or("?");
+            let ctx = format!("{file} :: {name}");
+            for k in list(fx, "keywords") {
+                let k = k.as_str().expect("keywords must be strings");
+                *tally.entry(k.to_string()).or_default() += 1;
+            }
+            let schema = fx.get("schema").unwrap_or_else(|| panic!("[{ctx}] missing schema"));
+
+            if fx.get("error").and_then(Value::as_bool).unwrap_or(false) {
+                match schema_to_grammar(schema) {
+                    Err(GrammarError::Schema(_)) => {}
+                    Err(other) => panic!("[{ctx}] expected Schema error, got {other:?}"),
+                    Ok(_) => panic!("[{ctx}] expected Schema error, schema compiled"),
+                }
+                continue;
+            }
+
+            let g = Rc::new(
+                schema_to_grammar(schema).unwrap_or_else(|e| panic!("[{ctx}] compile: {e}")),
+            );
+            // Every supported keyword flows through the AOT pass, and the
+            // byte-level base partition is never trivial (e.g. control
+            // bytes can never appear in compact JSON).
+            let compiled =
+                CompiledGrammar::compile(g.clone(), &trie, |i| vocab[i as usize].as_slice());
+            assert!(
+                compiled.base_reject().count_allowed() > 0,
+                "[{ctx}] AOT pass found no context-independent rejects"
+            );
+
+            for v in list(fx, "valid") {
+                instances += 1;
+                let bytes = to_string(v);
+                let oracle = schema_oracle::validate(schema, v)
+                    .unwrap_or_else(|e| panic!("[{ctx}] oracle: {e}"));
+                assert!(oracle, "[{ctx}] oracle rejected valid instance {bytes}");
+                assert!(
+                    accepts(&g, bytes.as_bytes()),
+                    "[{ctx}] grammar rejected valid instance {bytes}"
+                );
+            }
+            for v in list(fx, "invalid") {
+                instances += 1;
+                let bytes = to_string(v);
+                let oracle = schema_oracle::validate(schema, v)
+                    .unwrap_or_else(|e| panic!("[{ctx}] oracle: {e}"));
+                assert!(!oracle, "[{ctx}] oracle accepted invalid instance {bytes}");
+                assert!(
+                    !accepts(&g, bytes.as_bytes()),
+                    "[{ctx}] grammar accepted invalid instance {bytes}"
+                );
+            }
+            // Valid per the spec (oracle) but outside the canonical
+            // subset the grammar emits (key order, unanchored pattern).
+            for v in list(fx, "oracle_only") {
+                instances += 1;
+                let oracle = schema_oracle::validate(schema, v)
+                    .unwrap_or_else(|e| panic!("[{ctx}] oracle: {e}"));
+                assert!(oracle, "[{ctx}] oracle rejected oracle_only instance");
+            }
+        }
+    }
+
+    assert!(fixtures >= 40, "corpus too small: {fixtures} fixtures (need >= 40)");
+    let missing: Vec<&str> = REQUIRED_KEYWORDS
+        .iter()
+        .copied()
+        .filter(|k| !tally.contains_key(*k))
+        .collect();
+    assert!(missing.is_empty(), "keywords with no corpus coverage: {missing:?}");
+
+    println!("schema conformance: {fixtures} fixtures, {instances} instances");
+    println!("per-keyword fixture tally:");
+    for (k, n) in &tally {
+        println!("  {k:<24} {n}");
+    }
+}
+
+// --- differential property test ------------------------------------------
+
+/// A randomly generated supported schema plus one canonical conforming
+/// instance (generated together so the pair is correct by construction).
+fn gen_pair(rng: &mut PropRng, depth: usize) -> (Value, Value) {
+    // Past depth 2 only scalar shapes, so instances stay small.
+    let arm = if depth >= 2 { rng.range(9) } else { rng.range(16) };
+    match arm {
+        // Bounded integer (inclusive/exclusive mix).
+        0 => {
+            let a = rng.i64_in(-999, 999);
+            let b = a + rng.i64_in(0, 500);
+            let mut s = webllm::json::Map::new();
+            s.insert("type", "integer");
+            if rng.bool() {
+                s.insert("minimum", a);
+            } else {
+                s.insert("exclusiveMinimum", a - 1);
+            }
+            if rng.bool() {
+                s.insert("maximum", b);
+            } else {
+                s.insert("exclusiveMaximum", b + 1);
+            }
+            let inst = rng.i64_in(a, b);
+            (Value::Object(s), Value::Number(inst as f64))
+        }
+        // Bounded number: integer or mid-interval decimal.
+        1 => {
+            let a = rng.i64_in(-999, 999);
+            let b = a + rng.i64_in(1, 500);
+            let mut s = webllm::json::Map::new();
+            s.insert("type", "number");
+            s.insert("minimum", a);
+            s.insert("maximum", b);
+            let inst = if rng.bool() {
+                rng.i64_in(a, b) as f64
+            } else {
+                rng.i64_in(a, b - 1) as f64 + 0.5
+            };
+            (Value::Object(s), Value::Number(inst))
+        }
+        // Plain string (escapes, unicode).
+        2 => {
+            let mut s = webllm::json::Map::new();
+            s.insert("type", "string");
+            let inst = rng.string(6);
+            (Value::Object(s), Value::String(inst))
+        }
+        // Length-bounded string counting code points.
+        3 => {
+            let min = rng.range(4);
+            let max = min + rng.range(4);
+            let mut s = webllm::json::Map::new();
+            s.insert("type", "string");
+            s.insert("minLength", min);
+            s.insert("maxLength", max);
+            let len = min + rng.range(max - min + 1);
+            let pool = ['a', 'Z', '5', '_', 'é', '日', '😀'];
+            let inst: String = (0..len).map(|_| *rng.choose(&pool)).collect();
+            (Value::Object(s), Value::String(inst))
+        }
+        // Pattern from a pool, sample generated alongside.
+        4 => {
+            let pick = rng.range(4);
+            let (pat, sample): (&str, String) = match pick {
+                0 => {
+                    let len = 2 + rng.range(3);
+                    let s: String =
+                        (0..len).map(|_| (b'a' + rng.range(26) as u8) as char).collect();
+                    ("^[a-z]{2,4}$", s)
+                }
+                1 => {
+                    let mut s = String::new();
+                    s.push((b'A' + rng.range(26) as u8) as char);
+                    for _ in 0..1 + rng.range(4) {
+                        s.push((b'0' + rng.range(10) as u8) as char);
+                    }
+                    ("^[A-Z][0-9]+$", s)
+                }
+                2 => {
+                    let mut s = String::new();
+                    for _ in 0..1 + rng.range(3) {
+                        s.push_str(if rng.bool() { "ab" } else { "cd" });
+                    }
+                    ("^(ab|cd)+$", s)
+                }
+                _ => {
+                    let mut s = String::from("x");
+                    for _ in 0..3 {
+                        s.push((b'0' + rng.range(10) as u8) as char);
+                    }
+                    s.push('-');
+                    for _ in 0..2 {
+                        s.push((b'a' + rng.range(6) as u8) as char);
+                    }
+                    ("^x[0-9]{3}-[a-f]{2}$", s)
+                }
+            };
+            let mut s = webllm::json::Map::new();
+            s.insert("type", "string");
+            s.insert("pattern", pat);
+            (Value::Object(s), Value::String(sample))
+        }
+        // Format: uuid or date.
+        5 => {
+            let mut s = webllm::json::Map::new();
+            s.insert("type", "string");
+            let inst = if rng.bool() {
+                s.insert("format", "uuid");
+                let hex = |rng: &mut PropRng, n: usize| -> String {
+                    (0..n)
+                        .map(|_| {
+                            let d = rng.range(16);
+                            char::from_digit(d as u32, 16).unwrap()
+                        })
+                        .collect()
+                };
+                format!(
+                    "{}-{}-{}-{}-{}",
+                    hex(rng, 8),
+                    hex(rng, 4),
+                    hex(rng, 4),
+                    hex(rng, 4),
+                    hex(rng, 12)
+                )
+            } else {
+                s.insert("format", "date");
+                format!(
+                    "{:04}-{:02}-{:02}",
+                    1900 + rng.range(200),
+                    1 + rng.range(12),
+                    1 + rng.range(28)
+                )
+            };
+            (Value::Object(s), Value::String(inst))
+        }
+        6 => {
+            let mut s = webllm::json::Map::new();
+            s.insert("type", "boolean");
+            (Value::Object(s), Value::Bool(rng.bool()))
+        }
+        7 => {
+            let mut s = webllm::json::Map::new();
+            s.insert("type", "null");
+            (Value::Object(s), Value::Null)
+        }
+        // Scalar enum.
+        8 => {
+            let n = 2 + rng.range(3);
+            let opts: Vec<Value> = (0..n)
+                .map(|i| {
+                    if rng.bool() {
+                        Value::String(format!("opt{i}"))
+                    } else {
+                        Value::Number((i as i64 * 17 - 5) as f64)
+                    }
+                })
+                .collect();
+            let inst = rng.choose(&opts).clone();
+            let mut s = webllm::json::Map::new();
+            s.insert("enum", Value::Array(opts));
+            (Value::Object(s), inst)
+        }
+        // Object with required/optional properties (schema order).
+        9 => {
+            let n = 1 + rng.range(3);
+            let mut props = webllm::json::Map::new();
+            let mut required = Vec::new();
+            let mut inst = webllm::json::Map::new();
+            for i in 0..n {
+                let name = format!("p{i}");
+                let (sub_s, sub_i) = gen_pair(rng, depth + 1);
+                props.insert(name.clone(), sub_s);
+                let req = rng.bool();
+                if req {
+                    required.push(Value::String(name.clone()));
+                }
+                if req || rng.bool() {
+                    inst.insert(name, sub_i);
+                }
+            }
+            let mut s = webllm::json::Map::new();
+            s.insert("type", "object");
+            s.insert("properties", Value::Object(props));
+            if !required.is_empty() {
+                s.insert("required", Value::Array(required));
+            }
+            (Value::Object(s), Value::Object(inst))
+        }
+        // Typed map via additionalProperties.
+        10 => {
+            let (sub_s, sub_i) = gen_pair(rng, depth + 1);
+            let mut s = webllm::json::Map::new();
+            s.insert("type", "object");
+            s.insert("additionalProperties", sub_s);
+            let mut inst = webllm::json::Map::new();
+            for i in 0..rng.range(4) {
+                inst.insert(format!("k{i}"), sub_i.clone());
+            }
+            (Value::Object(s), Value::Object(inst))
+        }
+        // Homogeneous array with optional bounds.
+        11 => {
+            let (sub_s, sub_i) = gen_pair(rng, depth + 1);
+            let min = rng.range(2);
+            let len = min + rng.range(3);
+            let mut s = webllm::json::Map::new();
+            s.insert("type", "array");
+            s.insert("items", sub_s);
+            if min > 0 {
+                s.insert("minItems", min);
+            }
+            if rng.bool() {
+                s.insert("maxItems", min + 3);
+            }
+            let inst: Vec<Value> = (0..len).map(|_| sub_i.clone()).collect();
+            (Value::Object(s), Value::Array(inst))
+        }
+        // Closed tuple via prefixItems + items:false.
+        12 => {
+            let n = 1 + rng.range(3);
+            let mut prefix = Vec::new();
+            let mut inst = Vec::new();
+            for _ in 0..n {
+                let (sub_s, sub_i) = gen_pair(rng, depth + 1);
+                prefix.push(sub_s);
+                inst.push(sub_i);
+            }
+            let mut s = webllm::json::Map::new();
+            s.insert("type", "array");
+            s.insert("prefixItems", Value::Array(prefix));
+            s.insert("items", false);
+            (Value::Object(s), Value::Array(inst))
+        }
+        // Nullable type union.
+        13 => {
+            let t = *rng.choose(&["string", "integer", "boolean"]);
+            let mut s = webllm::json::Map::new();
+            s.insert("type", Value::Array(vec![Value::from(t), Value::from("null")]));
+            let inst = if rng.bool() {
+                Value::Null
+            } else {
+                match t {
+                    "string" => Value::String(rng.string(5)),
+                    "integer" => Value::Number(rng.i64_in(-100, 100) as f64),
+                    _ => Value::Bool(rng.bool()),
+                }
+            };
+            (Value::Object(s), inst)
+        }
+        // oneOf over disjoint types.
+        14 => {
+            let mut s = webllm::json::Map::new();
+            let branches = vec![
+                parse(r#"{"type":"integer"}"#).unwrap(),
+                parse(r#"{"type":"string"}"#).unwrap(),
+            ];
+            s.insert("oneOf", Value::Array(branches));
+            let inst = if rng.bool() {
+                Value::Number(rng.i64_in(-500, 500) as f64)
+            } else {
+                Value::String(rng.string(5))
+            };
+            (Value::Object(s), inst)
+        }
+        // allOf merging numeric bounds.
+        _ => {
+            let a = rng.i64_in(-99, 99);
+            let b = a + rng.i64_in(0, 100);
+            let mut lo = webllm::json::Map::new();
+            lo.insert("minimum", a);
+            let mut hi = webllm::json::Map::new();
+            hi.insert("maximum", b);
+            let mut s = webllm::json::Map::new();
+            s.insert("type", "integer");
+            s.insert("allOf", Value::Array(vec![Value::Object(lo), Value::Object(hi)]));
+            (Value::Object(s), Value::Number(rng.i64_in(a, b) as f64))
+        }
+    }
+}
+
+/// Mutate one byte of a serialized instance.
+fn mutate_bytes(rng: &mut PropRng, bytes: &[u8]) -> Vec<u8> {
+    let mut out = bytes.to_vec();
+    if out.is_empty() {
+        return out;
+    }
+    let pool: &[u8] = b"0197azAZ\"{}[],:.-xq ";
+    let idx = rng.range(out.len());
+    out[idx] = pool[rng.range(pool.len())];
+    out
+}
+
+/// Replace a random subtree of the instance with a wrong-shaped scalar,
+/// or drop/append container entries.
+fn mutate_value(rng: &mut PropRng, v: &mut Value) {
+    let descend = rng.bool();
+    match v {
+        Value::Object(o) if descend && !o.is_empty() => {
+            let keys: Vec<String> = o.keys().cloned().collect();
+            let k = rng.choose(&keys).clone();
+            if rng.range(4) == 0 {
+                o.remove(&k);
+            } else {
+                mutate_value(rng, o.get_mut(&k).unwrap());
+            }
+        }
+        Value::Array(items) if descend && !items.is_empty() => {
+            let i = rng.range(items.len());
+            if rng.range(4) == 0 {
+                items.remove(i);
+            } else {
+                mutate_value(rng, &mut items[i]);
+            }
+        }
+        _ => {
+            *v = match rng.range(4) {
+                0 => Value::Null,
+                1 => Value::Bool(true),
+                2 => Value::Number(987654321.0),
+                _ => Value::String("§mutant§".into()),
+            };
+        }
+    }
+}
+
+#[test]
+fn schema_differential_property() {
+    Runner::new("schema_differential", 150).run(|rng| {
+        let (schema, inst) = gen_pair(rng, 0);
+        let sctx = to_string(&schema);
+        let g = Rc::new(
+            schema_to_grammar(&schema)
+                .map_err(|e| format!("compile failed for {sctx}: {e}"))?,
+        );
+        let bytes = to_string(&inst);
+        match schema_oracle::validate(&schema, &inst) {
+            Ok(true) => {}
+            Ok(false) => return Err(format!("oracle rejected generated {bytes} for {sctx}")),
+            Err(e) => return Err(format!("oracle error for {sctx}: {e}")),
+        }
+        if !accepts(&g, bytes.as_bytes()) {
+            return Err(format!("grammar rejected generated {bytes} for {sctx}"));
+        }
+
+        // Byte-level mutants: anything that no longer validates (or no
+        // longer parses as JSON at all) must be grammar-rejected.
+        for _ in 0..4 {
+            let mutant = mutate_bytes(rng, bytes.as_bytes());
+            if mutant == bytes.as_bytes() {
+                continue;
+            }
+            let oracle_ok = match std::str::from_utf8(&mutant).ok().and_then(|s| parse(s).ok()) {
+                Some(mv) => schema_oracle::validate(&schema, &mv)
+                    .map_err(|e| format!("oracle error on mutant: {e}"))?,
+                None => false,
+            };
+            if !oracle_ok && accepts(&g, &mutant) {
+                return Err(format!(
+                    "grammar accepted oracle-rejected mutant {:?} of {bytes} for {sctx}",
+                    String::from_utf8_lossy(&mutant)
+                ));
+            }
+        }
+
+        // Structural mutants: replace/drop subtrees, then re-serialize.
+        for _ in 0..2 {
+            let mut mutant = inst.clone();
+            mutate_value(rng, &mut mutant);
+            let mbytes = to_string(&mutant);
+            let oracle_ok = schema_oracle::validate(&schema, &mutant)
+                .map_err(|e| format!("oracle error on structural mutant: {e}"))?;
+            if !oracle_ok && accepts(&g, mbytes.as_bytes()) {
+                return Err(format!(
+                    "grammar accepted oracle-rejected structural mutant {mbytes} for {sctx}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
