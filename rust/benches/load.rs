@@ -46,10 +46,16 @@ fn next(state: &mut u64) -> u64 {
     *state >> 33
 }
 
-/// Deterministic trace: ~50% short / 35% medium / 15% long prompts,
-/// 40% warm-prefix share, priorities 2 (interactive) / 0 / -1 (batch),
-/// bursty arrivals (0-2 steps between consecutive requests).
-fn trace(n: usize, seed: u64) -> Vec<Spec> {
+/// Uniform draw in (0, 1] from the LCG's top 31 bits.
+fn unit(state: &mut u64) -> f64 {
+    ((next(state) & 0x7FFF_FFFF) as f64 + 1.0) / 2_147_483_649.0
+}
+
+/// Deterministic request mix shared by every trace shape: ~50% short /
+/// 35% medium / 15% long prompts, 40% warm-prefix share, priorities 2
+/// (interactive) / 0 / -1 (batch). `gap` yields the arrival spacing (in
+/// engine steps) before request `i`.
+fn mixed_specs(n: usize, seed: u64, mut gap: impl FnMut(&mut u64, usize) -> usize) -> Vec<Spec> {
     let mut s = seed;
     let mut at = 0usize;
     (0..n)
@@ -80,10 +86,33 @@ fn trace(n: usize, seed: u64) -> Vec<Spec> {
                 -1
             };
             let max_tokens = 2 + (next(&mut s) % 14) as usize;
-            at += (next(&mut s) % 3) as usize;
+            at += gap(&mut s, i);
             Spec { content, priority, max_tokens, arrival: at }
         })
         .collect()
+}
+
+/// The headline trace: bursty arrivals, 0-2 steps between requests.
+fn trace(n: usize, seed: u64) -> Vec<Spec> {
+    mixed_specs(n, seed, |s, _| (next(s) % 3) as usize)
+}
+
+/// Open-loop Poisson arrivals at `rate` requests per engine step:
+/// exponential inter-arrival times, independent of service progress.
+fn poisson_trace(n: usize, seed: u64, rate: f64) -> Vec<Spec> {
+    mixed_specs(n, seed, |s, _| (-unit(s).ln() / rate).round() as usize)
+}
+
+/// Same mean `rate`, but arrivals land in back-to-back bursts of
+/// `burst`: one exponential gap per burst, zero spacing inside it.
+fn bursty_trace(n: usize, seed: u64, rate: f64, burst: usize) -> Vec<Spec> {
+    mixed_specs(n, seed, |s, i| {
+        if i % burst == 0 {
+            (-unit(s).ln() * burst as f64 / rate).round() as usize
+        } else {
+            0
+        }
+    })
 }
 
 fn build(spec: &Spec) -> ChatCompletionRequest {
@@ -99,6 +128,7 @@ fn build(spec: &Spec) -> ChatCompletionRequest {
 /// Everything one replay of the trace produces.
 struct RunOut {
     wall: f64,
+    steps: usize,
     tokens: usize,
     completed: usize,
     failed: usize,
@@ -112,20 +142,30 @@ struct RunOut {
 
 /// Drive the full trace to idle on a fresh engine, optionally under a
 /// fault schedule. `step()` must stay `Ok` either way — recoverable
-/// faults are the engine's problem, not the driver's.
-fn run_trace(specs: &[Spec], plan: Option<FaultPlan>) -> RunOut {
+/// faults are the engine's problem, not the driver's. With `open_loop`
+/// a queue-full rejection *drops* the request (arrivals never wait on
+/// service, the saturation-sweep contract); otherwise the driver
+/// retries it next step, like a client honoring Retry-After.
+fn run_trace(
+    specs: &[Spec],
+    plan: Option<FaultPlan>,
+    prefix_cache: bool,
+    open_loop: bool,
+) -> RunOut {
     // Small waiting room so bursts exercise QueueFull back-pressure;
     // everything else is the production default (adaptive prefill on,
     // 4 concurrent prefills) over the tiny 64-page reference pool.
     let mut cfg = EngineConfig::reference(&[MODEL]);
     cfg.max_waiting_requests = 8;
     cfg.fault_plan = plan;
+    cfg.enable_prefix_cache = prefix_cache;
     let mut engine = MLCEngine::new(&cfg).expect("reference engine");
 
     let mut prio_of: HashMap<u64, i32> = HashMap::new();
     let mut last_chunk: HashMap<u64, Instant> = HashMap::new();
     let mut out = RunOut {
         wall: 0.0,
+        steps: 0,
         tokens: 0,
         completed: 0,
         failed: 0,
@@ -151,6 +191,11 @@ fn run_trace(specs: &[Spec], plan: Option<FaultPlan>) -> RunOut {
                 }
                 Err(e) if e.kind == "queue_full" => {
                     out.rejected += 1;
+                    if open_loop {
+                        // Open loop: the arrival is lost, not deferred.
+                        next_req += 1;
+                        continue;
+                    }
                     break;
                 }
                 Err(e) => panic!("submit failed: {e:?}"),
@@ -189,12 +234,86 @@ fn run_trace(specs: &[Spec], plan: Option<FaultPlan>) -> RunOut {
         }
     }
     out.wall = t0.elapsed().as_secs_f64();
+    out.steps = step_no;
     out.stats = engine.stats_json();
     out
 }
 
 fn stat(stats: &Value, k: &str) -> i64 {
     stats.get(k).and_then(|v| v.as_i64()).unwrap_or(0)
+}
+
+/// n=4 parallel sampling vs four independent copies of every prompt,
+/// prefix cache off so each prefill token is honestly paid: forking must
+/// collapse the family's prompt compute to a single pass, sharing full
+/// prompt pages and CoW-copying only partial tails.
+fn fork_section(n_prompts: usize) -> (i64, Value) {
+    let run = |n_choices: usize, copies: usize| {
+        let mut cfg = EngineConfig::reference(&[MODEL]);
+        cfg.enable_prefix_cache = false;
+        let mut engine = MLCEngine::new(&cfg).expect("reference engine");
+        let mut tokens = 0usize;
+        let t0 = Instant::now();
+        for i in 0..n_prompts {
+            for _ in 0..copies {
+                let mut r = ChatCompletionRequest::new(MODEL)
+                    .user(format!("{SESSION_PREFIX} fork {i:02} {}", "x".repeat(37 + i % 8)));
+                r.max_tokens = 8;
+                r.sampling.temperature = 0.7;
+                r.sampling.seed = Some(0xF00D + i as u64);
+                webllm::testutil::ban_reference_invisible(&mut r);
+                let resp = engine.chat_completion(r.with_n(n_choices)).expect("completion");
+                tokens += resp.usage.completion_tokens;
+            }
+        }
+        (tokens, t0.elapsed().as_secs_f64(), engine.stats_json())
+    };
+
+    let (tok_fork, wall_fork, forked) = run(4, 1);
+    let (tok_solo, wall_solo, nofork) = run(1, 4);
+    let prefill_forked = stat(&forked, "prefill_tokens");
+    let prefill_nofork = stat(&nofork, "prefill_tokens");
+    let saved = prefill_nofork - prefill_forked;
+    println!(
+        "n=4 forked   : {prefill_forked:>5} prefill tok | {tok_fork:>4} completion tok | \
+         forks {} | cow copies {} | shared pages {} | {:.1} ms",
+        stat(&forked, "forks"),
+        stat(&forked, "cow_page_copies"),
+        stat(&forked, "shared_pages"),
+        wall_fork * 1e3,
+    );
+    println!(
+        "4x independent: {prefill_nofork:>5} prefill tok | {tok_solo:>4} completion tok | \
+         {:.1} ms",
+        wall_solo * 1e3,
+    );
+    println!(
+        "prefill tokens saved by forking: {saved} ({:.0}% of the no-fork bill)",
+        100.0 * saved as f64 / prefill_nofork.max(1) as f64,
+    );
+    assert!(stat(&forked, "forks") > 0, "n=4 requests must fork");
+    assert!(stat(&forked, "cow_page_copies") > 0, "partial tail pages must be CoW-copied");
+    assert!(
+        prefill_forked < prefill_nofork,
+        "forking must cut prefill compute: {prefill_forked} vs {prefill_nofork}"
+    );
+    let report = webllm::obj! {
+        "description" => "identical prompts served as one n=4 request vs four independent \
+                          n=1 requests, prefix cache disabled; prefill tokens saved is the \
+                          prompt compute the fork avoids",
+        "n_prompts" => n_prompts as i64,
+        "prefill_tokens_forked" => prefill_forked,
+        "prefill_tokens_nofork" => prefill_nofork,
+        "prefill_tokens_saved" => saved,
+        "completion_tokens_forked" => tok_fork as i64,
+        "completion_tokens_nofork" => tok_solo as i64,
+        "forks" => stat(&forked, "forks"),
+        "cow_page_copies" => stat(&forked, "cow_page_copies"),
+        "shared_pages_high_water" => stat(&forked, "shared_pages"),
+        "wall_ms_forked" => wall_fork * 1e3,
+        "wall_ms_nofork" => wall_solo * 1e3,
+    };
+    (saved, report)
 }
 
 fn fault_stat(stats: &Value, k: &str) -> i64 {
@@ -214,7 +333,7 @@ fn main() {
          on {MODEL}, 64-page pool ==="
     );
 
-    let clean = run_trace(&specs, None);
+    let clean = run_trace(&specs, None, true, false);
     assert_eq!(clean.completed, n, "every request must finish");
     assert_eq!(clean.failed, 0, "nothing may fail without a fault plan");
     let preemptions = stat(&clean.stats, "preemptions");
@@ -255,7 +374,7 @@ fn main() {
         "\n=== same trace under faults: {faults_scheduled} scheduled \
          (seeded 2% + 1 device loss) ==="
     );
-    let faulty = run_trace(&specs, Some(plan));
+    let faulty = run_trace(&specs, Some(plan), true, false);
     assert_eq!(faulty.completed + faulty.failed, n, "every request must terminate");
     assert!(
         fault_stat(&faulty.stats, "device_resets") >= 1,
@@ -276,6 +395,77 @@ fn main() {
         fault_stat(&faulty.stats, "device_resets"),
         stat(&faulty.stats, "preemptions"),
     );
+
+    // Preemption-aware retention: replay the headline trace with the
+    // prefix cache disabled. Eviction then surrenders every computed
+    // token instead of only partial tail pages, so retention must show
+    // up as a strictly smaller recompute bill on resume.
+    println!("\n=== same trace, prefix cache disabled (retention off) ===");
+    let bare = run_trace(&specs, None, false, false);
+    let recomputed_bare = stat(&bare.stats, "preempted_tokens_recomputed");
+    assert!(stat(&bare.stats, "preemptions") > 0, "retention-off run must still preempt");
+    println!(
+        "recomputed on resume: {recomputed} tok with retention vs {recomputed_bare} without \
+         ({} preemptions vs {})",
+        preemptions,
+        stat(&bare.stats, "preemptions"),
+    );
+    assert!(
+        recomputed < recomputed_bare,
+        "prefix-cache retention must cut preemption recompute: \
+         {recomputed} with vs {recomputed_bare} without"
+    );
+
+    // Open-loop arrival sweep: Poisson and bursty processes at rising
+    // offered rates over the same request mix. Delivered rate tracks
+    // offered until the pool and waiting room saturate; the knee is the
+    // first rate where the engine sheds load (rejections) or falls
+    // behind (delivered < 75% of offered).
+    let sweep_n = common::iters(64, 24);
+    let rates = [0.125, 0.25, 0.5, 1.0, 2.0];
+    let mut sweep_rows: Vec<Value> = Vec::new();
+    let mut knee_of: HashMap<&str, f64> = HashMap::new();
+    println!("\n=== open-loop QPS sweep ({sweep_n} requests per point) ===");
+    for process in ["poisson", "bursty"] {
+        for &rate in &rates {
+            let sp = match process {
+                "poisson" => poisson_trace(sweep_n, 0xA11CE, rate),
+                _ => bursty_trace(sweep_n, 0xA11CE, rate, 4),
+            };
+            let out = run_trace(&sp, None, true, true);
+            let delivered = out.completed as f64 / out.steps.max(1) as f64;
+            let saturated = out.rejected > 0 || delivered < 0.75 * rate;
+            if saturated {
+                knee_of.entry(process).or_insert(rate);
+            }
+            println!(
+                "{process:<8} offered {rate:>5.3} req/step | delivered {delivered:>5.3} | \
+                 dropped {:>2} | ttft p95 {:>7.3} ms{}",
+                out.rejected,
+                out.ttft.percentile(95.0),
+                if saturated { "  <- saturated" } else { "" },
+            );
+            sweep_rows.push(webllm::obj! {
+                "process" => process,
+                "offered_req_per_step" => rate,
+                "delivered_req_per_step" => delivered,
+                "completed" => out.completed as i64,
+                "dropped" => out.rejected as i64,
+                "steps" => out.steps as i64,
+                "ttft_p95_ms" => out.ttft.percentile(95.0),
+                "saturated" => saturated,
+            });
+        }
+    }
+    for process in ["poisson", "bursty"] {
+        let knee = knee_of.get(process);
+        assert!(knee.is_some(), "{process} sweep never saturated; raise the rate ceiling");
+        println!("{process} saturation knee: {} req/step", knee.unwrap());
+    }
+
+    // n=4 parallel sampling: prefill once, decode four branches.
+    println!("\n=== n=4 parallel sampling via CoW forking ===");
+    let (prefill_saved, fork_report) = fork_section(common::iters(12, 4));
 
     let report = webllm::obj! {
         "bench" => "load",
@@ -307,6 +497,22 @@ fn main() {
         "queue_full_rejections" => clean.rejected as i64,
         "prefix_cache_hits" => per_model("prefix_cache_hits"),
         "prefix_cache_misses" => per_model("prefix_cache_misses"),
+        "retention" => webllm::obj! {
+            "description" => "headline trace replayed with the prefix cache disabled: \
+                              without retention every preempted token is recomputed on \
+                              resume, with it only partial tail pages are",
+            "preempted_tokens_recomputed_with_retention" => recomputed,
+            "preempted_tokens_recomputed_without" => recomputed_bare,
+            "preemptions_with_retention" => preemptions,
+            "preemptions_without" => stat(&bare.stats, "preemptions"),
+        },
+        "arrival_sweep" => Value::Array(sweep_rows),
+        "saturation_knee" => webllm::obj! {
+            "poisson_req_per_step" => *knee_of.get("poisson").unwrap(),
+            "bursty_req_per_step" => *knee_of.get("bursty").unwrap(),
+        },
+        "fork" => fork_report,
+        "fork_prefill_tokens_saved" => prefill_saved,
         "faulty" => webllm::obj! {
             "description" => "identical trace replayed under a seeded fault schedule: \
                               ~2% of backend ops fault (transient / NaN row / 1-3ms \

@@ -72,6 +72,10 @@ fn run(label: &'static str, draft: Option<&str>, ff: bool, n_requests: usize) ->
     let mut cfg = EngineConfig::reference(&[TARGET]);
     cfg.draft_model = draft.map(str::to_string);
     cfg.enable_fast_forward = ff;
+    // The four headline configs keep fixed-k speculation so their rows
+    // stay comparable across runs; the adaptive policy gets its own
+    // section below.
+    cfg.adaptive_spec_tokens = false;
     let mut engine = MLCEngine::new(&cfg).expect("reference engine");
 
     let mut completion = 0usize;
@@ -133,6 +137,94 @@ fn report(r: &Run, n_requests: usize) -> webllm::json::Value {
     }
 }
 
+/// Mixed-accept-rate trace for the adaptive-k section: even requests
+/// are grammar-constrained (the divergent drafter tracks forced spans
+/// well, so acceptance is high), odd ones are free-text sampling at
+/// temperature 0.9 (verification re-samples, so most proposals lose the
+/// draw and acceptance is low). A fixed k pays full draft cost on both
+/// halves; the per-request EWMA should shrink k only where it loses.
+fn mixed_request(i: usize) -> ChatCompletionRequest {
+    if i % 2 == 0 {
+        return schema_request(i);
+    }
+    let mut r = ChatCompletionRequest::new(TARGET).user(format!("free text {i:02}"));
+    r.max_tokens = 24;
+    r.sampling.temperature = 0.9;
+    r.sampling.seed = Some(0xAD0_5EED + i as u64);
+    webllm::testutil::ban_reference_eos(&mut r);
+    r
+}
+
+struct MixedRun {
+    texts: Vec<String>,
+    completion: usize,
+    decode_steps: i64,
+    proposed: i64,
+    accepted: i64,
+    wall_s: f64,
+}
+
+impl MixedRun {
+    /// Draft tokens proposed but rejected: pure speculative overhead.
+    fn waste(&self) -> i64 {
+        self.proposed - self.accepted
+    }
+}
+
+fn mixed_run(adaptive: bool, n_requests: usize) -> MixedRun {
+    let mut cfg = EngineConfig::reference(&[TARGET]);
+    cfg.draft_model = Some("tiny-ref-b".to_string());
+    cfg.enable_fast_forward = true;
+    cfg.adaptive_spec_tokens = adaptive;
+    let mut engine = MLCEngine::new(&cfg).expect("reference engine");
+
+    let mut out = MixedRun {
+        texts: Vec::with_capacity(n_requests),
+        completion: 0,
+        decode_steps: 0,
+        proposed: 0,
+        accepted: 0,
+        wall_s: 0.0,
+    };
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let resp = engine.chat_completion(mixed_request(i)).expect("completion");
+        out.completion += resp.usage.completion_tokens;
+        out.texts.push(resp.text().to_string());
+    }
+    out.wall_s = t0.elapsed().as_secs_f64();
+
+    let stats = engine.stats_json();
+    let spec = stats.get("speculative").unwrap();
+    out.decode_steps = stats.get("decode_steps").unwrap().as_i64().unwrap();
+    out.proposed = spec.get("draft_proposed").unwrap().as_i64().unwrap();
+    out.accepted = spec.get("draft_accepted").unwrap().as_i64().unwrap();
+    out
+}
+
+fn report_mixed(label: &str, r: &MixedRun, n_requests: usize) -> webllm::json::Value {
+    let tps = (r.completion - n_requests) as f64 / r.decode_steps.max(1) as f64;
+    println!(
+        "{:<36} {:>5.2} tok/step | proposed {:>4} accepted {:>4} wasted {:>4} | {:>7.1} ms",
+        label,
+        tps,
+        r.proposed,
+        r.accepted,
+        r.waste(),
+        r.wall_s * 1e3,
+    );
+    webllm::obj! {
+        "config" => label,
+        "tokens_per_step" => tps,
+        "completion_tokens" => r.completion as i64,
+        "decode_steps" => r.decode_steps,
+        "draft_proposed" => r.proposed,
+        "draft_accepted" => r.accepted,
+        "draft_wasted" => r.waste(),
+        "wall_ms" => r.wall_s * 1e3,
+    }
+}
+
 fn main() {
     let n = common::iters(12, 4);
     println!(
@@ -159,6 +251,35 @@ fn main() {
         100.0 * headline.accept_rate,
     );
 
+    // Adaptive spec_tokens vs fixed k on a mixed-accept-rate trace: the
+    // per-request acceptance EWMA must cut draft waste (proposed but
+    // rejected tokens) without changing a single output byte.
+    let n_mixed = common::iters(16, 6);
+    println!(
+        "\n=== adaptive spec_tokens vs fixed k={} \
+         (divergent draft, mixed-accept trace, {n_mixed} requests) ===",
+        webllm::coordinator::DEFAULT_SPEC_TOKENS
+    );
+    let fixed_k = mixed_run(false, n_mixed);
+    let adaptive_k = mixed_run(true, n_mixed);
+    let mixed_configs = vec![
+        report_mixed("fixed k (divergent draft)", &fixed_k, n_mixed),
+        report_mixed("adaptive k (accept-rate EWMA)", &adaptive_k, n_mixed),
+    ];
+    assert_eq!(adaptive_k.texts, fixed_k.texts, "adaptive k changed output bytes");
+    assert!(
+        adaptive_k.waste() < fixed_k.waste(),
+        "adaptive k must beat fixed k on draft waste: {} vs {}",
+        adaptive_k.waste(),
+        fixed_k.waste()
+    );
+    println!(
+        "adaptive policy: {} wasted draft tokens vs {} fixed ({:.0}% less)",
+        adaptive_k.waste(),
+        fixed_k.waste(),
+        100.0 * (1.0 - adaptive_k.waste() as f64 / fixed_k.waste().max(1) as f64),
+    );
+
     let report = webllm::obj! {
         "bench" => "specdec",
         "generated_by" => "cargo bench --bench specdec",
@@ -179,6 +300,16 @@ fn main() {
         "draft_accept_rate" => headline.accept_rate,
         "ff_tokens" => headline.ff_tokens,
         "ff_fraction" => headline.ff_fraction(),
+        "adaptive_policy" => webllm::obj! {
+            "description" => "divergent drafter over a mixed trace (grammar-constrained \
+                              requests interleaved with temperature-0.9 free text): the \
+                              per-request acceptance EWMA shrinks k where proposals lose \
+                              the verification draw, identical output bytes either way",
+            "n_requests" => n_mixed as i64,
+            "configs" => webllm::json::Value::Array(mixed_configs),
+            "draft_wasted_fixed" => fixed_k.waste(),
+            "draft_wasted_adaptive" => adaptive_k.waste(),
+        },
     };
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

@@ -37,6 +37,11 @@ pub struct ChatCompletionRequest {
     /// structured `timeout_error` instead of running it to completion.
     /// `None` falls back to the engine's `--request-timeout` default.
     pub deadline_ms: Option<u64>,
+    /// Number of parallel completions (OpenAI `n`). The engine prefills
+    /// the prompt once, forks the KV pages, and decodes `n` branches
+    /// with independent sampler state; choices stream with their own
+    /// `index` and the final response carries all `n`. Default 1.
+    pub n: usize,
 }
 
 impl ChatCompletionRequest {
@@ -51,11 +56,17 @@ impl ChatCompletionRequest {
             response_format: ResponseFormat::Text,
             priority: 0,
             deadline_ms: None,
+            n: 1,
         }
     }
 
     pub fn with_priority(mut self, priority: i32) -> Self {
         self.priority = priority;
+        self
+    }
+
+    pub fn with_n(mut self, n: usize) -> Self {
+        self.n = n;
         self
     }
 
@@ -227,6 +238,19 @@ impl ChatCompletionRequest {
             ),
         };
 
+        let n = match v.get("n") {
+            None | Some(Value::Null) => 1,
+            Some(x) => {
+                let n = x
+                    .as_usize()
+                    .ok_or_else(|| ApiError::invalid("'n' must be a positive integer"))?;
+                if n == 0 {
+                    return Err(ApiError::invalid("'n' must be >= 1"));
+                }
+                n
+            }
+        };
+
         Ok(Self {
             model,
             messages,
@@ -237,6 +261,7 @@ impl ChatCompletionRequest {
             response_format,
             priority,
             deadline_ms,
+            n,
         })
     }
 
@@ -295,6 +320,9 @@ impl ChatCompletionRequest {
         }
         if let Some(ms) = self.deadline_ms {
             v.set("deadline_ms", ms as i64);
+        }
+        if self.n != 1 {
+            v.set("n", self.n);
         }
         match &self.response_format {
             ResponseFormat::Text => {}

@@ -198,10 +198,15 @@ impl ChatCompletionResponse {
 pub struct ChatChunk {
     pub id: String,
     pub model: String,
+    /// Which choice this delta extends (`n>1` requests interleave the
+    /// chunks of all their branches on one stream; 0 for `n=1`).
+    pub index: usize,
     pub delta: String,
-    /// Set on the final chunk.
+    /// Set on the final chunk of this choice.
     pub finish_reason: Option<FinishReason>,
-    /// Usage rides on the final chunk (stream_options include_usage style).
+    /// Usage rides on the final chunk (stream_options include_usage
+    /// style); for `n>1` it is the whole request's aggregate, carried by
+    /// the last choice to finish.
     pub usage: Option<Usage>,
 }
 
@@ -212,7 +217,7 @@ impl ChatChunk {
             delta.set("content", self.delta.clone());
         }
         let choice = crate::obj! {
-            "index" => 0,
+            "index" => self.index,
             "delta" => delta,
             "finish_reason" => match self.finish_reason {
                 Some(fr) => Value::from(fr.as_str()),
@@ -236,6 +241,7 @@ impl ChatChunk {
         Some(Self {
             id: v.get("id")?.as_str()?.to_string(),
             model: v.get("model")?.as_str()?.to_string(),
+            index: c0.get("index").and_then(Value::as_usize).unwrap_or(0),
             delta: c0
                 .get("delta")
                 .and_then(|d| d.get("content"))

@@ -124,6 +124,7 @@ fn chunk_roundtrip_and_final_chunk() {
     let mid = ChatChunk {
         id: "c1".into(),
         model: "m".into(),
+        index: 1,
         delta: "tok".into(),
         finish_reason: None,
         usage: None,
@@ -135,6 +136,7 @@ fn chunk_roundtrip_and_final_chunk() {
     let last = ChatChunk {
         id: "c1".into(),
         model: "m".into(),
+        index: 2,
         delta: "".into(),
         finish_reason: Some(FinishReason::Length),
         usage: Some(Usage { prompt_tokens: 1, completion_tokens: 2, ..Default::default() }),

@@ -46,7 +46,7 @@ use crate::runtime::{
     thread_client, FaultClass, FaultInjectingBackend, FaultPlan, ModelBackend, ModelRuntime,
     ReferenceBackend, RuntimeError,
 };
-use crate::sampler::{LogitsProcessor, Pcg32, SampleScratch};
+use crate::sampler::{branch_seed, LogitsProcessor, Pcg32, SampleScratch, SamplingParams};
 use crate::tokenizer::{render_chat, StreamDecoder, Tokenizer};
 use std::cell::RefCell;
 use std::collections::{BTreeMap, VecDeque};
@@ -100,6 +100,14 @@ pub struct EngineConfig {
     pub draft_model: Option<String>,
     /// Tokens the draft proposes per speculation round; clamped to ≥ 1.
     pub spec_tokens: usize,
+    /// Scale each speculation round's proposal count to the request's
+    /// observed acceptance rate (an EWMA): high-accept requests keep
+    /// proposing [`Self::spec_tokens`], low-accept ones shrink toward 1
+    /// and stop paying for verify rows the sampler rejects. Verification
+    /// re-samples every position either way, so this never changes
+    /// output bytes — only how many tokens one model call yields. On by
+    /// default; turn off for fixed-`k` speculation.
+    pub adaptive_spec_tokens: bool,
     /// Emit grammar-forced token runs (states whose masks allow exactly
     /// one token) without model or sampler calls. On by default; turn
     /// off for the strict one-model-call-per-token baseline.
@@ -151,6 +159,7 @@ impl EngineConfig {
             prefill_token_budget: DEFAULT_PREFILL_TOKEN_BUDGET,
             draft_model: None,
             spec_tokens: DEFAULT_SPEC_TOKENS,
+            adaptive_spec_tokens: true,
             enable_fast_forward: true,
             max_concurrent_prefills: DEFAULT_MAX_CONCURRENT_PREFILLS,
             adaptive_prefill: true,
@@ -204,16 +213,55 @@ pub enum EngineEvent {
     Error(RequestId, ApiError),
 }
 
+/// Per-*branch* state of a decode row. For the common `n = 1` request
+/// this is just the generation half of the request; an `n > 1` request
+/// fans out into `n` of these at the end of its (single) prefill — each
+/// with its own KV sequence (page-level copy-on-write fork of the
+/// parent's), sampler RNG and penalty state (branch-mixed seed, see
+/// [`crate::sampler::branch_seed`]), grammar matcher, stream decoder,
+/// and stop/finish state. Everything branches share — the request
+/// identity, scheduling class, sampling template, limits — stays on
+/// [`RunningSeq`].
+struct BranchState {
+    /// Choice index within the request (0 for `n = 1`).
+    index: usize,
+    seq_id: u64,
+    processor: LogitsProcessor,
+    matcher: Option<GrammarMatcher>,
+    decoder: StreamDecoder,
+    /// Full decoded text so far.
+    text: String,
+    /// Bytes of `text` already emitted as stream deltas.
+    emitted: usize,
+    completion_tokens: usize,
+    logprobs: Option<Vec<LogprobEntry>>,
+    finish: Option<FinishReason>,
+    /// Structured per-branch failure (data-plane fault, lost KV
+    /// residency): the owning scheduling loop routes it to
+    /// [`MLCEngine::fail`] instead of finalizing normally.
+    failed: Option<ApiError>,
+}
+
+/// One decode row: one branch of a request plus the request-level state
+/// every branch shares. An `n = 1` request is exactly one of these; an
+/// `n > 1` request becomes `n` after fan-out, aggregated through
+/// [`FamilyState`].
 struct RunningSeq {
     req_id: RequestId,
-    seq_id: u64,
     model: String,
     /// Scheduling class (from the request): orders admission and chunk
     /// allocation, and — inverted — victim selection for preemption.
     /// Ties break by arrival order (`req_id`).
     priority: i32,
-    processor: LogitsProcessor,
-    matcher: Option<GrammarMatcher>,
+    /// Requested parallel choices (`n`); fan-out happens once, at the
+    /// end of the request's single prefill pass.
+    n_branches: usize,
+    /// Sampling template the request arrived with — branch `i`'s
+    /// processor is rebuilt from it with a branch-mixed seed at fork.
+    sampling: SamplingParams,
+    /// Fallback sampler seed (per-request nonce) when the request sets
+    /// none; branch mixing applies to whichever seed is effective.
+    fallback_seed: u64,
     mask_cache: Option<Rc<RefCell<MaskCache>>>,
     /// Shared per-grammar cache of forced-token runs keyed by start-state
     /// fingerprint (see [`MLCEngine::fast_forward`]).
@@ -222,23 +270,38 @@ struct RunningSeq {
     max_tokens: usize,
     stop: Vec<String>,
     stream: bool,
-    decoder: StreamDecoder,
-    /// Full decoded text so far.
-    text: String,
-    /// Bytes of `text` already emitted as stream deltas.
-    emitted: usize,
-    completion_tokens: usize,
-    logprobs: Option<Vec<LogprobEntry>>,
     t_admit: Instant,
     t_prefilled: Option<Instant>,
-    finish: Option<FinishReason>,
     /// Deadline (admission time + effective `deadline_ms`); past it the
     /// scheduler fails the request with a structured `timeout_error`.
     deadline: Option<Instant>,
-    /// Structured per-request failure (data-plane fault, lost KV
-    /// residency): the owning scheduling loop routes it to
-    /// [`MLCEngine::fail`] instead of finalizing normally.
-    failed: Option<ApiError>,
+    /// Speculative-decoding acceptance EWMA for this branch; drives the
+    /// adaptive per-round proposal count (see
+    /// [`EngineConfig::adaptive_spec_tokens`]). Starts optimistic so the
+    /// first rounds propose the configured maximum.
+    accept_ewma: f64,
+    branch: BranchState,
+}
+
+/// Aggregation state for one `n > 1` request after fan-out: branches
+/// resolve independently (finish, fail, abort — in any order, under any
+/// preemption schedule) and the request's single terminal `Done`/`Error`
+/// event fires when the last one does. Created only at fork time, so a
+/// request that dies before fan-out resolves through the ordinary
+/// single-sequence path.
+struct FamilyState {
+    /// Branches this family is waiting on.
+    expected: usize,
+    /// Branches that have finished or failed.
+    resolved: usize,
+    /// Finished choices, slotted by branch index.
+    choices: Vec<Option<Choice>>,
+    /// First branch failure; a failed family reports one error and
+    /// discards partial choices.
+    error: Option<ApiError>,
+    /// Aggregate usage: prompt counted once, completions summed, timings
+    /// from the slowest branch. Rates are computed at completion.
+    usage: Usage,
 }
 
 struct PendingReq {
@@ -433,8 +496,14 @@ pub struct MLCEngine {
     max_waiting_requests: usize,
     /// Draft proposals per speculation round (from the config, min 1).
     spec_tokens: usize,
+    /// Acceptance-adaptive speculation toggle (from the config).
+    adaptive_spec_tokens: bool,
     /// Grammar fast-forward toggle (from the config).
     enable_fast_forward: bool,
+    /// Fan-out aggregation for in-flight `n>1` requests, keyed by
+    /// request id; entries exist only between fork and the terminal
+    /// `Done`/`Error` event.
+    families: BTreeMap<RequestId, FamilyState>,
     /// Default per-request deadline (from the config).
     request_timeout_ms: Option<u64>,
     /// Stuck-step watchdog threshold (from the config, min 1 ms).
@@ -469,12 +538,16 @@ impl MLCEngine {
         let mut models = BTreeMap::new();
         for (name, backend, draft) in backends {
             let mc = backend.config().clone();
-            let kv = KvCacheManager::new(
+            let mut kv = KvCacheManager::new(
                 mc.num_pages,
                 mc.page_size,
                 mc.max_pages_per_seq(),
                 cfg.enable_prefix_cache,
             );
+            // With a backend page-copy primitive, fork tails and CoW
+            // un-shares are physical copies; without one the manager
+            // clamps `written` and the flush path recomputes instead.
+            kv.set_page_copy(backend.supports_page_copy());
             let draft = draft.map(|b| {
                 let dc = b.config().clone();
                 // The mirror tracks one rolling window per sequence;
@@ -518,7 +591,9 @@ impl MLCEngine {
             max_concurrent_prefills: cfg.max_concurrent_prefills.max(1),
             max_waiting_requests: cfg.max_waiting_requests.max(1),
             spec_tokens: cfg.spec_tokens.max(1),
+            adaptive_spec_tokens: cfg.adaptive_spec_tokens,
             enable_fast_forward: cfg.enable_fast_forward,
+            families: BTreeMap::new(),
             request_timeout_ms: cfg.request_timeout_ms,
             watchdog_step_ms: cfg.watchdog_step_ms.max(1),
             draining: false,
@@ -676,6 +751,18 @@ impl MLCEngine {
         if req.messages.is_empty() {
             return Err(ApiError::invalid("messages must be non-empty"));
         }
+        // Every branch of an `n>1` fan-out is its own decode row; the
+        // family can never fit a batch smaller than `n`.
+        if req.n == 0 {
+            return Err(ApiError::invalid("'n' must be >= 1"));
+        }
+        let max_batch = model.backend.config().max_decode_batch();
+        if req.n > max_batch {
+            return Err(ApiError::invalid(format!(
+                "'n' ({}) exceeds model '{}' max decode batch ({max_batch})",
+                req.n, req.model
+            )));
+        }
         // Back-pressure: bounded waiting queue, reject-fast over
         // queue-forever. 429 + Retry-After at the HTTP layer.
         if model.waiting.len() >= self.max_waiting_requests {
@@ -716,7 +803,10 @@ impl MLCEngine {
         Ok(req_id)
     }
 
-    /// Abort a queued or running request.
+    /// Abort a queued or running request. After an `n>1` fan-out the
+    /// request is several branches spread across the scheduler queues
+    /// (some may be preempted while others decode); every one is marked,
+    /// so the family resolves completely and no branch's pages leak.
     pub fn abort(&mut self, req_id: RequestId) {
         for (_, m) in self.models.iter_mut() {
             if let Some(idx) = m.waiting.iter().position(|p| p.req_id == req_id) {
@@ -727,21 +817,18 @@ impl MLCEngine {
                 ));
                 return;
             }
-            if let Some(pf) = m.prefilling.iter_mut().find(|p| p.seq.req_id == req_id) {
+            for pf in m.prefilling.iter_mut().filter(|p| p.seq.req_id == req_id) {
                 // Mid-prefill: resolved (no further chunks run) on the
                 // model's next scheduler step.
-                pf.seq.finish = Some(FinishReason::Abort);
-                return;
+                pf.seq.branch.finish = Some(FinishReason::Abort);
             }
-            if let Some(p) = m.preempted.iter_mut().find(|p| p.seq.req_id == req_id) {
+            for p in m.preempted.iter_mut().filter(|p| p.seq.req_id == req_id) {
                 // Evicted: pages already freed; resolved instead of
                 // resumed on the model's next scheduler step.
-                p.seq.finish = Some(FinishReason::Abort);
-                return;
+                p.seq.branch.finish = Some(FinishReason::Abort);
             }
-            if let Some(seq) = m.running.iter_mut().find(|s| s.req_id == req_id) {
-                seq.finish = Some(FinishReason::Abort);
-                return;
+            for seq in m.running.iter_mut().filter(|s| s.req_id == req_id) {
+                seq.branch.finish = Some(FinishReason::Abort);
             }
         }
     }
@@ -757,7 +844,7 @@ impl MLCEngine {
         for name in names {
             let m = &self.models[&name];
             if let Some(i) =
-                m.running.iter().position(|s| s.req_id == req_id && s.finish.is_none())
+                m.running.iter().position(|s| s.req_id == req_id && s.branch.finish.is_none())
             {
                 self.preempt_at(&name, true, i);
                 return true;
@@ -765,7 +852,7 @@ impl MLCEngine {
             if let Some(i) = m
                 .prefilling
                 .iter()
-                .position(|p| p.seq.req_id == req_id && p.seq.finish.is_none())
+                .position(|p| p.seq.req_id == req_id && p.seq.branch.finish.is_none())
             {
                 self.preempt_at(&name, false, i);
                 return true;
@@ -868,7 +955,7 @@ impl MLCEngine {
         let mut running = std::mem::take(&mut self.models.get_mut(name).unwrap().running);
         for seq in running.drain(..) {
             let m = self.models.get_mut(name).unwrap();
-            match m.kv.get(seq.seq_id) {
+            match m.kv.get(seq.branch.seq_id) {
                 Some(s) => {
                     let pre = PreemptedSeq {
                         tokens: s.tokens.clone(),
@@ -883,7 +970,7 @@ impl MLCEngine {
                     // No KV and no token history to recompute from:
                     // unrecoverable for this one request.
                     self.stats.requests_failed += 1;
-                    Self::fail(&mut self.events, m, seq, ApiError::internal(
+                    Self::fail(&mut self.events, &mut self.families, m, seq, ApiError::internal(
                         "sequence lost its KV residency during device reset",
                     ));
                 }
@@ -892,7 +979,7 @@ impl MLCEngine {
         let m = self.models.get_mut(name).unwrap();
         let prefilling = std::mem::take(&mut m.prefilling);
         for pf in prefilling {
-            let computed = m.kv.get(pf.seq.seq_id).map_or(0, |s| s.written());
+            let computed = m.kv.get(pf.seq.branch.seq_id).map_or(0, |s| s.written());
             self.stats.preemptions += 1;
             m.preempted.push_back(PreemptedSeq {
                 computed,
@@ -917,8 +1004,9 @@ impl MLCEngine {
     fn expire_deadlines(&mut self, name: &str) {
         let now = Instant::now();
         let default_ms = self.request_timeout_ms;
-        let expired =
-            |seq: &RunningSeq| seq.finish.is_none() && seq.deadline.map_or(false, |d| now >= d);
+        let expired = |seq: &RunningSeq| {
+            seq.branch.finish.is_none() && seq.deadline.map_or(false, |d| now >= d)
+        };
         // Waiting requests never got a RunningSeq; derive their deadline.
         loop {
             let m = self.models.get_mut(name).unwrap();
@@ -944,7 +1032,7 @@ impl MLCEngine {
                 Some(i) => {
                     let seq = m.running.remove(i);
                     self.stats.requests_timed_out += 1;
-                    Self::fail(&mut self.events, m, seq, ApiError::timeout(
+                    Self::fail(&mut self.events, &mut self.families, m, seq, ApiError::timeout(
                         "request deadline passed mid-decode",
                     ));
                 }
@@ -957,7 +1045,7 @@ impl MLCEngine {
                 Some(i) => {
                     let pf = m.prefilling.remove(i).expect("index in bounds");
                     self.stats.requests_timed_out += 1;
-                    Self::fail(&mut self.events, m, pf.seq, ApiError::timeout(
+                    Self::fail(&mut self.events, &mut self.families, m, pf.seq, ApiError::timeout(
                         "request deadline passed mid-prefill",
                     ));
                 }
@@ -970,7 +1058,7 @@ impl MLCEngine {
                 Some(i) => {
                     let p = m.preempted.remove(i).expect("index in bounds");
                     self.stats.requests_timed_out += 1;
-                    Self::fail(&mut self.events, m, p.seq, ApiError::timeout(
+                    Self::fail(&mut self.events, &mut self.families, m, p.seq, ApiError::timeout(
                         "request deadline passed while evicted",
                     ));
                 }
@@ -986,7 +1074,8 @@ impl MLCEngine {
     /// Idempotent — a second call can only tighten the deadline.
     pub fn drain(&mut self, timeout_ms: Option<u64>) {
         self.draining = true;
-        if let Some(d) = timeout_ms.and_then(|ms| Instant::now().checked_add(Duration::from_millis(ms)))
+        if let Some(d) =
+            timeout_ms.and_then(|ms| Instant::now().checked_add(Duration::from_millis(ms)))
         {
             let sooner = self.drain_deadline.map_or(true, |cur| d < cur);
             if sooner {
@@ -1029,21 +1118,21 @@ impl MLCEngine {
             if !m.running.is_empty() {
                 let seq = m.running.remove(0);
                 self.stats.drain_failed += 1;
-                Self::fail(&mut self.events, m, seq, ApiError::unavailable(
+                Self::fail(&mut self.events, &mut self.families, m, seq, ApiError::unavailable(
                     "drain deadline passed mid-decode",
                 ));
                 continue;
             }
             if let Some(pf) = m.prefilling.pop_front() {
                 self.stats.drain_failed += 1;
-                Self::fail(&mut self.events, m, pf.seq, ApiError::unavailable(
+                Self::fail(&mut self.events, &mut self.families, m, pf.seq, ApiError::unavailable(
                     "drain deadline passed mid-prefill",
                 ));
                 continue;
             }
             if let Some(p) = m.preempted.pop_front() {
                 self.stats.drain_failed += 1;
-                Self::fail(&mut self.events, m, p.seq, ApiError::unavailable(
+                Self::fail(&mut self.events, &mut self.families, m, p.seq, ApiError::unavailable(
                     "drain deadline passed while evicted",
                 ));
                 continue;
@@ -1080,11 +1169,11 @@ impl MLCEngine {
         let m = self.models.get_mut(name).unwrap();
         let pre = if from_running {
             let seq = m.running.remove(idx);
-            let Some(s) = m.kv.get(seq.seq_id) else {
+            let Some(s) = m.kv.get(seq.branch.seq_id) else {
                 // No KV residency means no token history to recompute
                 // from; fail this one request rather than the engine.
                 self.stats.requests_failed += 1;
-                Self::fail(&mut self.events, m, seq, ApiError::internal(
+                Self::fail(&mut self.events, &mut self.families, m, seq, ApiError::internal(
                     "running sequence lost its KV residency",
                 ));
                 return;
@@ -1097,7 +1186,7 @@ impl MLCEngine {
             }
         } else {
             let pf = m.prefilling.remove(idx).expect("index in bounds");
-            let computed = m.kv.get(pf.seq.seq_id).map_or(0, |s| s.written());
+            let computed = m.kv.get(pf.seq.branch.seq_id).map_or(0, |s| s.written());
             PreemptedSeq {
                 computed,
                 // A resume evicted again keeps its sampled-ness through
@@ -1107,9 +1196,9 @@ impl MLCEngine {
                 seq: pf.seq,
             }
         };
-        m.kv.free(pre.seq.seq_id);
+        m.kv.free(pre.seq.branch.seq_id);
         if let Some(d) = m.draft.as_mut() {
-            d.kv.free(pre.seq.seq_id);
+            d.kv.free(pre.seq.branch.seq_id);
         }
         m.preempted.push_back(pre);
         self.stats.preemptions += 1;
@@ -1158,10 +1247,17 @@ impl MLCEngine {
         // Aborted while evicted: pages are already free — just resolve.
         loop {
             let m = self.models.get_mut(name).unwrap();
-            match m.preempted.iter().position(|p| p.seq.finish.is_some()) {
+            match m.preempted.iter().position(|p| p.seq.branch.finish.is_some()) {
                 Some(i) => {
                     let p = m.preempted.remove(i).expect("index in bounds");
-                    Self::finalize(&mut self.events, &mut self.stats, m, p.seq, self.draining);
+                    Self::finalize(
+                        &mut self.events,
+                        &mut self.stats,
+                        &mut self.families,
+                        m,
+                        p.seq,
+                        self.draining,
+                    );
                 }
                 None => break,
             }
@@ -1194,21 +1290,25 @@ impl MLCEngine {
                 best
             };
             // Joint importance order across both queues (ids are unique,
-            // so there are no ties to break).
-            let (is_resume, idx, key, need) = match (best_resume, best_admit) {
+            // so there are no ties to break). `nb` is the fork fan-out a
+            // fresh admission will need room for (a resumed victim is
+            // one branch of its family and resumes alone).
+            let (is_resume, idx, key, need, nb) = match (best_resume, best_admit) {
                 (None, None) => return Ok(()),
-                (Some((i, k)), None) => (true, i, k, m.preempted[i].tokens.len()),
-                (None, Some((i, k))) => (false, i, k, m.waiting[i].prompt_ids.len()),
+                (Some((i, k)), None) => (true, i, k, m.preempted[i].tokens.len(), 1),
+                (None, Some((i, k))) => {
+                    (false, i, k, m.waiting[i].prompt_ids.len(), m.waiting[i].req.n)
+                }
                 (Some((ri, rk)), Some((ai, ak))) => {
                     if Self::more_important(ak, rk) {
-                        (false, ai, ak, m.waiting[ai].prompt_ids.len())
+                        (false, ai, ak, m.waiting[ai].prompt_ids.len(), m.waiting[ai].req.n)
                     } else {
-                        (true, ri, rk, m.preempted[ri].tokens.len())
+                        (true, ri, rk, m.preempted[ri].tokens.len(), 1)
                     }
                 }
             };
             // Make room: evict what the candidate outranks until it fits.
-            while !self.models[name].kv.can_admit(need) {
+            while !self.models[name].kv.can_admit_family(need, nb) {
                 match self.pick_victim(name, Some(key)) {
                     Some((fr, vi)) => self.preempt_at(name, fr, vi),
                     None => return Ok(()),
@@ -1235,7 +1335,7 @@ impl MLCEngine {
         let p = m.preempted.remove(idx).expect("index in bounds");
         let start = m
             .kv
-            .admit(p.seq.seq_id, &p.tokens)
+            .admit(p.seq.branch.seq_id, &p.tokens)
             .map_err(|e| RuntimeError::Shape(format!("resume raced admission gate: {e}")))?
             .prefill_start();
         let prefill_end = if p.sampled { p.tokens.len() - 1 } else { p.tokens.len() };
@@ -1302,27 +1402,34 @@ impl MLCEngine {
 
         let seq = RunningSeq {
             req_id: p.req_id,
-            seq_id,
             model: name.to_string(),
             priority: p.req.priority,
-            processor,
-            matcher,
+            n_branches: p.req.n,
+            sampling: p.req.sampling.clone(),
+            fallback_seed,
             mask_cache,
             forced_runs,
             prompt_tokens: p.prompt_ids.len(),
             max_tokens,
             stop: p.req.stop.clone(),
             stream: p.req.stream,
-            decoder: StreamDecoder::new(),
-            text: String::new(),
-            emitted: 0,
-            completion_tokens: 0,
-            logprobs: p.req.sampling.logprobs.then(Vec::new),
             t_admit: p.t_admit,
             t_prefilled: None,
-            finish: None,
             deadline: deadline_at(p.t_admit, p.req.deadline_ms.or(self.request_timeout_ms)),
-            failed: None,
+            accept_ewma: 1.0,
+            branch: BranchState {
+                index: 0,
+                seq_id,
+                processor,
+                matcher,
+                decoder: StreamDecoder::new(),
+                text: String::new(),
+                emitted: 0,
+                completion_tokens: 0,
+                logprobs: p.req.sampling.logprobs.then(Vec::new),
+                finish: None,
+                failed: None,
+            },
         };
         let prefill_end = p.prompt_ids.len();
         self.models.get_mut(name).unwrap().prefilling.push_back(PrefillingSeq {
@@ -1347,10 +1454,17 @@ impl MLCEngine {
         let mut resolved = false;
         loop {
             let m = self.models.get_mut(name).unwrap();
-            match m.prefilling.iter().position(|pf| pf.seq.finish.is_some()) {
+            match m.prefilling.iter().position(|pf| pf.seq.branch.finish.is_some()) {
                 Some(i) => {
                     let pf = m.prefilling.remove(i).expect("index in bounds");
-                    Self::finalize(&mut self.events, &mut self.stats, m, pf.seq, self.draining);
+                    Self::finalize(
+                        &mut self.events,
+                        &mut self.stats,
+                        &mut self.families,
+                        m,
+                        pf.seq,
+                        self.draining,
+                    );
                     resolved = true;
                 }
                 None => break,
@@ -1390,7 +1504,8 @@ impl MLCEngine {
             for (i, &t) in pf.prompt_ids[pf.next_pos..pf.next_pos + n].iter().enumerate() {
                 ids[i] = t as i32;
             }
-            let bt = m.kv.block_table_row(pf.seq.seq_id);
+            let bt = m.kv.block_table_row(pf.seq.branch.seq_id);
+            Self::apply_pending_copies(&mut self.stats, m.backend.as_mut(), &mut m.kv)?;
             let t0 = Instant::now();
             let start_pos = pf.next_pos;
             let out = with_retries(&mut self.stats, || {
@@ -1400,7 +1515,7 @@ impl MLCEngine {
             pf.next_pos += n;
             // The chunk landed: its pages are now real KV, eligible for
             // prefix-cache registration when the sequence is freed.
-            m.kv.note_written(pf.seq.seq_id, pf.next_pos);
+            m.kv.note_written(pf.seq.branch.seq_id, pf.next_pos);
             let done = pf.next_pos == pf.prefill_end;
             (idx, done, n, chunk, t_chunk, !m.running.is_empty(), out.logits)
         };
@@ -1422,7 +1537,7 @@ impl MLCEngine {
             self.stats.requests_failed += 1;
             let m = self.models.get_mut(name).unwrap();
             let pf = m.prefilling.remove(idx).expect("index in bounds");
-            Self::fail(&mut self.events, m, pf.seq, ApiError::data_plane(
+            Self::fail(&mut self.events, &mut self.families, m, pf.seq, ApiError::data_plane(
                 "non-finite logits row during prefill",
             ));
             return Ok(());
@@ -1451,28 +1566,177 @@ impl MLCEngine {
             return Ok(());
         }
 
-        // Sample the first generated token from the final chunk's logits.
-        let mut logits = logits;
-        self.consume_logits(&mut pf.seq, &mut logits);
+        // Fan out `n>1` parallel sampling here, while the sequence is
+        // exactly the prefilled prompt: the prompt was computed once, in
+        // the chunks above, and every extra choice forks the parent's KV
+        // pages — full written pages shared by refcount bump, only the
+        // partially-filled tail page copied (or recomputed) — then gets
+        // its own sampler, grammar matcher, and stream state.
+        let siblings = match self.fork_family(name, &pf) {
+            Ok(s) => s,
+            Err(e) => {
+                // Even eviction could not fund every branch's tail page:
+                // fail the whole request rather than return fewer
+                // choices than asked for.
+                self.stats.requests_failed += 1;
+                let m = self.models.get_mut(name).unwrap();
+                Self::fail(&mut self.events, &mut self.families, m, pf.seq, e);
+                return Ok(());
+            }
+        };
+
         pf.seq.t_prefilled = Some(Instant::now());
         self.stats.ttft.push(pf.seq.t_admit.elapsed().as_secs_f64());
-        // The first token may open a grammar-forced run; take it before
-        // the sequence ever joins the decode batch.
-        let mut ff_err = None;
-        if pf.seq.finish.is_none() {
-            ff_err = self.post_emit(&mut pf.seq).err();
-        }
+        let t_prefilled = pf.seq.t_prefilled;
+        let mut branches = Vec::with_capacity(1 + siblings.len());
+        branches.push(pf.seq);
+        branches.extend(siblings);
 
-        let m = self.models.get_mut(name).unwrap();
-        if pf.seq.finish.is_some() {
-            Self::finalize(&mut self.events, &mut self.stats, m, pf.seq, self.draining);
-        } else {
-            m.running.push(pf.seq);
+        // Sample each branch's first generated token from the final
+        // chunk's logits — by construction the whole prompt's last-token
+        // logits, identical for every branch. Samplers mutate the row in
+        // place, so each branch works on its own copy.
+        let mut logits = logits;
+        let last = branches.len() - 1;
+        let mut ff_err = None;
+        for (i, mut seq) in branches.into_iter().enumerate() {
+            seq.t_prefilled = t_prefilled;
+            let mut row = if i < last { logits.clone() } else { std::mem::take(&mut logits) };
+            self.consume_logits(&mut seq, &mut row);
+            // The first token may open a grammar-forced run; take it
+            // before the branch ever joins the decode batch.
+            if seq.branch.finish.is_none() && ff_err.is_none() {
+                ff_err = self.post_emit(&mut seq).err();
+            }
+            let m = self.models.get_mut(name).unwrap();
+            if seq.branch.finish.is_some() {
+                Self::finalize(
+                    &mut self.events,
+                    &mut self.stats,
+                    &mut self.families,
+                    m,
+                    seq,
+                    self.draining,
+                );
+            } else {
+                m.running.push(seq);
+            }
         }
         match ff_err {
             Some(e) => Err(e),
             None => Ok(()),
         }
+    }
+
+    /// Fork branches `1..n` of a freshly prefilled `n>1` request off its
+    /// parent sequence. Each fork shares every full written page by
+    /// refcount and takes a fresh tail page (queued for a physical copy
+    /// when the backend supports it, recomputed by the flush path
+    /// otherwise), so the family's prompt compute stays O(one prefill).
+    /// Branch `i`'s sampler is rebuilt from the request's sampling
+    /// template with the branch-mixed seed — byte-identical to an
+    /// independent request carrying that seed. Page-pool pressure evicts
+    /// strictly-less-important victims; if the pool still cannot fund a
+    /// branch, everything forked so far is rolled back and the whole
+    /// family fails.
+    fn fork_family(
+        &mut self,
+        name: &str,
+        pf: &PrefillingSeq,
+    ) -> Result<Vec<RunningSeq>, ApiError> {
+        let n = pf.seq.n_branches;
+        let mut siblings: Vec<RunningSeq> = Vec::with_capacity(n.saturating_sub(1));
+        if n <= 1 {
+            return Ok(siblings);
+        }
+        let parent = pf.seq.branch.seq_id;
+        let effective = pf.seq.sampling.seed.unwrap_or(pf.seq.fallback_seed);
+        for i in 1..n {
+            let child = self.next_seq;
+            self.next_seq += 1;
+            loop {
+                let m = self.models.get_mut(name).unwrap();
+                match m.kv.fork(parent, child) {
+                    Ok(()) => break,
+                    Err(AllocError::OutOfPages) => {
+                        let key = (pf.seq.priority, pf.seq.req_id);
+                        if let Some((fr, idx)) = self.pick_victim(name, Some(key)) {
+                            self.preempt_at(name, fr, idx);
+                            continue;
+                        }
+                        let m = self.models.get_mut(name).unwrap();
+                        for s in &siblings {
+                            m.kv.free(s.branch.seq_id);
+                        }
+                        return Err(ApiError::unavailable(format!(
+                            "page pool cannot hold a {n}-way fork of this prompt"
+                        )));
+                    }
+                    Err(AllocError::SeqLimit) => {
+                        let m = self.models.get_mut(name).unwrap();
+                        for s in &siblings {
+                            m.kv.free(s.branch.seq_id);
+                        }
+                        return Err(ApiError::invalid(
+                            "prompt too long to fork within the per-sequence page limit",
+                        ));
+                    }
+                }
+            }
+            self.stats.forks += 1;
+            let mut params = pf.seq.sampling.clone();
+            params.seed = Some(branch_seed(effective, i));
+            let mut processor = LogitsProcessor::new(params, pf.seq.fallback_seed);
+            for &t in &pf.prompt_ids {
+                processor.observe(t);
+            }
+            siblings.push(RunningSeq {
+                req_id: pf.seq.req_id,
+                model: pf.seq.model.clone(),
+                priority: pf.seq.priority,
+                n_branches: n,
+                sampling: pf.seq.sampling.clone(),
+                fallback_seed: pf.seq.fallback_seed,
+                mask_cache: pf.seq.mask_cache.clone(),
+                forced_runs: pf.seq.forced_runs.clone(),
+                prompt_tokens: pf.seq.prompt_tokens,
+                max_tokens: pf.seq.max_tokens,
+                stop: pf.seq.stop.clone(),
+                stream: pf.seq.stream,
+                t_admit: pf.seq.t_admit,
+                t_prefilled: pf.seq.t_prefilled,
+                deadline: pf.seq.deadline,
+                accept_ewma: 1.0,
+                branch: BranchState {
+                    index: i,
+                    seq_id: child,
+                    processor,
+                    matcher: pf.seq.branch.matcher.clone(),
+                    decoder: StreamDecoder::new(),
+                    text: String::new(),
+                    emitted: 0,
+                    completion_tokens: 0,
+                    logprobs: pf.seq.sampling.logprobs.then(Vec::new),
+                    finish: None,
+                    failed: None,
+                },
+            });
+        }
+        let shared = self.models[name].kv.shared_pages() as u64;
+        if shared > self.stats.shared_pages {
+            self.stats.shared_pages = shared;
+        }
+        self.families.insert(
+            pf.seq.req_id,
+            FamilyState {
+                expected: n,
+                resolved: 0,
+                choices: (0..n).map(|_| None).collect(),
+                error: None,
+                usage: Usage::default(),
+            },
+        );
+        Ok(siblings)
     }
 
     /// Make sure this step's decode appends can be served before the
@@ -1493,10 +1757,10 @@ impl MLCEngine {
             let need = m
                 .running
                 .iter()
-                .filter(|seq| seq.finish.is_none())
+                .filter(|seq| seq.branch.finish.is_none())
                 .filter(|seq| {
                     m.kv
-                        .get(seq.seq_id)
+                        .get(seq.branch.seq_id)
                         .map_or(false, |s| s.len() / ps >= s.block_table.len())
                 })
                 .count();
@@ -1532,11 +1796,11 @@ impl MLCEngine {
             // allocations; padding rows stay zeroed).
             m.step.reset(batch, mp);
             for (row, seq) in m.running.iter_mut().take(live).enumerate() {
-                let Some(s) = m.kv.get(seq.seq_id) else {
+                let Some(s) = m.kv.get(seq.branch.seq_id) else {
                     // Lost residency: leave the row as zeroed padding
                     // (the backend skips seq_len 0) and route the failure
                     // through the push-back loop below — never the batch.
-                    seq.failed = Some(ApiError::internal(
+                    seq.branch.failed = Some(ApiError::internal(
                         "running sequence lost its KV residency",
                     ));
                     continue;
@@ -1546,10 +1810,11 @@ impl MLCEngine {
                 m.step.positions[row] = (len - 1) as i32;
                 m.step.seq_lens[row] = len as i32;
                 m.kv.write_block_table_row(
-                    seq.seq_id,
+                    seq.branch.seq_id,
                     &mut m.step.tables[row * mp..row * mp + mp],
                 );
             }
+            Self::apply_pending_copies(&mut self.stats, m.backend.as_mut(), &mut m.kv)?;
             let t0 = Instant::now();
             let out = with_retries(&mut self.stats, || {
                 m.backend.decode(
@@ -1563,7 +1828,7 @@ impl MLCEngine {
             // Each live row's stepped token is now pool-resident.
             for (row, seq) in m.running.iter().take(live).enumerate() {
                 if m.step.seq_lens[row] > 0 {
-                    m.kv.note_written(seq.seq_id, m.step.seq_lens[row] as usize);
+                    m.kv.note_written(seq.branch.seq_id, m.step.seq_lens[row] as usize);
                 }
             }
             (live, batch, out.logits, t_decode)
@@ -1581,7 +1846,7 @@ impl MLCEngine {
         let mut logits = logits;
         let mut first_err = None;
         for (row, seq) in running.iter_mut().take(rows).enumerate() {
-            if seq.finish.is_some() || seq.failed.is_some() || first_err.is_some() {
+            if seq.branch.finish.is_some() || seq.branch.failed.is_some() || first_err.is_some() {
                 continue; // aborted, failed mid-build, or bailing on error
             }
             let row_logits = &mut logits[row * vocab..(row + 1) * vocab];
@@ -1589,7 +1854,7 @@ impl MLCEngine {
                 // Poisoned row: exactly this request fails; the other
                 // rows of the same batch sample normally.
                 self.stats.faults_injected += 1;
-                seq.failed = Some(ApiError::data_plane(
+                seq.branch.failed = Some(ApiError::data_plane(
                     "non-finite logits row during decode",
                 ));
                 continue;
@@ -1597,7 +1862,7 @@ impl MLCEngine {
             self.consume_logits(seq, row_logits);
             self.stats.decode_tokens += 1;
             self.stats.itl.push(t_decode / rows as f64);
-            if seq.finish.is_none() {
+            if seq.branch.finish.is_none() {
                 if let Err(e) = self.post_emit(seq) {
                     first_err = Some(e);
                 }
@@ -1606,11 +1871,18 @@ impl MLCEngine {
 
         let m = self.models.get_mut(name).unwrap();
         for mut seq in running {
-            if let Some(e) = seq.failed.take() {
+            if let Some(e) = seq.branch.failed.take() {
                 self.stats.requests_failed += 1;
-                Self::fail(&mut self.events, m, seq, e);
-            } else if seq.finish.is_some() {
-                Self::finalize(&mut self.events, &mut self.stats, m, seq, self.draining);
+                Self::fail(&mut self.events, &mut self.families, m, seq, e);
+            } else if seq.branch.finish.is_some() {
+                Self::finalize(
+                    &mut self.events,
+                    &mut self.stats,
+                    &mut self.families,
+                    m,
+                    seq,
+                    self.draining,
+                );
             } else {
                 m.running.push(seq);
             }
@@ -1633,7 +1905,7 @@ impl MLCEngine {
         let mut running = std::mem::take(&mut self.models.get_mut(name).unwrap().running);
         let mut first_err = None;
         for seq in running.iter_mut() {
-            if seq.finish.is_some() || seq.failed.is_some() || first_err.is_some() {
+            if seq.branch.finish.is_some() || seq.branch.failed.is_some() || first_err.is_some() {
                 continue; // aborted, failed, or bailing out on error
             }
             if let Err(e) = self.spec_decode_row(name, seq) {
@@ -1642,11 +1914,18 @@ impl MLCEngine {
         }
         let m = self.models.get_mut(name).unwrap();
         for mut seq in running {
-            if let Some(e) = seq.failed.take() {
+            if let Some(e) = seq.branch.failed.take() {
                 self.stats.requests_failed += 1;
-                Self::fail(&mut self.events, m, seq, e);
-            } else if seq.finish.is_some() {
-                Self::finalize(&mut self.events, &mut self.stats, m, seq, self.draining);
+                Self::fail(&mut self.events, &mut self.families, m, seq, e);
+            } else if seq.branch.finish.is_some() {
+                Self::finalize(
+                    &mut self.events,
+                    &mut self.stats,
+                    &mut self.families,
+                    m,
+                    seq,
+                    self.draining,
+                );
             } else {
                 m.running.push(seq);
             }
@@ -1669,20 +1948,30 @@ impl MLCEngine {
     /// slots stay physically dirty but unattended, and the next
     /// decode/verify rewrites them.
     fn spec_decode_row(&mut self, name: &str, seq: &mut RunningSeq) -> Result<(), RuntimeError> {
-        if seq.logprobs.is_some() {
+        if seq.branch.logprobs.is_some() {
             // Logprob reports need the plain path's per-token timing; the
             // verify rows would fold several report entries into one call.
             return self.plain_decode_row(name, seq);
         }
-        if self.models[name].kv.get(seq.seq_id).is_none() {
+        if self.models[name].kv.get(seq.branch.seq_id).is_none() {
             // Lost residency: fail exactly this request via the batch
             // loop's push-back routing.
-            seq.failed = Some(ApiError::internal(
+            seq.branch.failed = Some(ApiError::internal(
                 "running sequence lost its KV residency",
             ));
             return Ok(());
         }
-        let k = self.spec_tokens;
+        // Proposal depth. Fixed at `--spec-tokens`, or — when adaptive —
+        // scaled to this request's acceptance EWMA so low-accept rows
+        // stop paying for draft tokens verification keeps discarding.
+        // Output bytes never change either way: verification re-samples
+        // every position, `k` only sizes the batch of candidates.
+        let k = if self.adaptive_spec_tokens {
+            let max = self.spec_tokens;
+            (1 + (seq.accept_ewma * max.saturating_sub(1) as f64).round() as usize).min(max)
+        } else {
+            self.spec_tokens
+        };
         let proposals = self.draft_propose(name, seq, k)?;
         if proposals.is_empty() {
             return self.plain_decode_row(name, seq);
@@ -1691,8 +1980,8 @@ impl MLCEngine {
         let (base_len, want, logits, t_verify) = {
             let m = self.models.get_mut(name).unwrap();
             let mc = m.backend.config().clone();
-            let Some(s) = m.kv.get(seq.seq_id) else {
-                seq.failed = Some(ApiError::internal(
+            let Some(s) = m.kv.get(seq.branch.seq_id) else {
+                seq.branch.failed = Some(ApiError::internal(
                     "running sequence lost its KV residency",
                 ));
                 return Ok(());
@@ -1703,7 +1992,7 @@ impl MLCEngine {
             // needs a compiled chunk row and a resident page.
             while want > 0
                 && (mc.pick_chunk(want + 1).is_none()
-                    || m.kv.reserve(seq.seq_id, len + want).is_err())
+                    || m.kv.reserve(seq.branch.seq_id, len + want).is_err())
             {
                 want -= 1;
             }
@@ -1713,12 +2002,13 @@ impl MLCEngine {
                 let n = want + 1;
                 let chunk = mc.pick_chunk(n).expect("checked above");
                 let mut ids = vec![0i32; chunk];
-                let s = m.kv.get(seq.seq_id).expect("present: checked at row entry");
+                let s = m.kv.get(seq.branch.seq_id).expect("present: checked at row entry");
                 ids[0] = *s.tokens.last().unwrap() as i32;
                 for (i, &t) in proposals[..want].iter().enumerate() {
                     ids[i + 1] = t as i32;
                 }
-                let bt = m.kv.block_table_row(seq.seq_id);
+                let bt = m.kv.block_table_row(seq.branch.seq_id);
+                Self::apply_pending_copies(&mut self.stats, m.backend.as_mut(), &mut m.kv)?;
                 let t0 = Instant::now();
                 let out = with_retries(&mut self.stats, || {
                     m.backend.verify_chunk(&ids, len - 1, n, &bt)
@@ -1740,7 +2030,7 @@ impl MLCEngine {
         let mut accepted = 0usize;
         let mut emitted = 0usize;
         for i in 0..=want {
-            if seq.finish.is_some() {
+            if seq.branch.finish.is_some() {
                 break;
             }
             let row = &mut logits[i * vocab..(i + 1) * vocab];
@@ -1748,7 +2038,7 @@ impl MLCEngine {
                 // Poisoned verify row: everything emitted so far from the
                 // finite prefix stands; the request fails here.
                 self.stats.faults_injected += 1;
-                seq.failed = Some(ApiError::data_plane(
+                seq.branch.failed = Some(ApiError::data_plane(
                     "non-finite logits row during speculative verify",
                 ));
                 break;
@@ -1769,9 +2059,9 @@ impl MLCEngine {
             // row 0 rewrote). Clamped: the final emission may have failed
             // to append.
             let m = self.models.get_mut(name).unwrap();
-            let len_now = m.kv.get(seq.seq_id).map(|s| s.len());
+            let len_now = m.kv.get(seq.branch.seq_id).map(|s| s.len());
             if let Some(len_now) = len_now {
-                m.kv.note_written(seq.seq_id, (base_len + accepted).min(len_now));
+                m.kv.note_written(seq.branch.seq_id, (base_len + accepted).min(len_now));
             }
         }
         if emitted > 0 {
@@ -1780,7 +2070,10 @@ impl MLCEngine {
                 self.stats.itl.push(per);
             }
         }
-        if seq.finish.is_none() && seq.failed.is_none() {
+        // Fold this round's acceptance into the request's EWMA (starts
+        // optimistic at 1.0, so fully-accepting streams never shrink).
+        seq.accept_ewma = 0.7 * seq.accept_ewma + 0.3 * (accepted as f64 / want as f64);
+        if seq.branch.finish.is_none() && seq.branch.failed.is_none() {
             self.post_emit(seq)?;
         }
         Ok(())
@@ -1796,8 +2089,8 @@ impl MLCEngine {
             let batch = mc.pick_batch(1).expect("decode menu is non-empty");
             let mp = mc.max_pages_per_seq();
             m.step.reset(batch, mp);
-            let Some(s) = m.kv.get(seq.seq_id) else {
-                seq.failed = Some(ApiError::internal(
+            let Some(s) = m.kv.get(seq.branch.seq_id) else {
+                seq.branch.failed = Some(ApiError::internal(
                     "running sequence lost its KV residency",
                 ));
                 return Ok(());
@@ -1806,7 +2099,8 @@ impl MLCEngine {
             m.step.ids[0] = *s.tokens.last().unwrap() as i32;
             m.step.positions[0] = (len - 1) as i32;
             m.step.seq_lens[0] = len as i32;
-            m.kv.write_block_table_row(seq.seq_id, &mut m.step.tables[..mp]);
+            m.kv.write_block_table_row(seq.branch.seq_id, &mut m.step.tables[..mp]);
+            Self::apply_pending_copies(&mut self.stats, m.backend.as_mut(), &mut m.kv)?;
             let t0 = Instant::now();
             let out = with_retries(&mut self.stats, || {
                 m.backend.decode(
@@ -1817,7 +2111,7 @@ impl MLCEngine {
                 )
             })?;
             let t_decode = t0.elapsed().as_secs_f64();
-            m.kv.note_written(seq.seq_id, len);
+            m.kv.note_written(seq.branch.seq_id, len);
             (batch, out.logits, t_decode)
         };
         self.stats.decode_time_s += t_decode;
@@ -1828,7 +2122,7 @@ impl MLCEngine {
         let mut logits = logits;
         if !row_is_finite(&logits[..vocab]) {
             self.stats.faults_injected += 1;
-            seq.failed = Some(ApiError::data_plane(
+            seq.branch.failed = Some(ApiError::data_plane(
                 "non-finite logits row during decode",
             ));
             return Ok(());
@@ -1836,7 +2130,7 @@ impl MLCEngine {
         self.consume_logits(seq, &mut logits[..vocab]);
         self.stats.decode_tokens += 1;
         self.stats.itl.push(t_decode);
-        if seq.finish.is_none() && seq.failed.is_none() {
+        if seq.branch.finish.is_none() && seq.branch.failed.is_none() {
             self.post_emit(seq)?;
         }
         Ok(())
@@ -1855,12 +2149,12 @@ impl MLCEngine {
     ) -> Result<Vec<u32>, RuntimeError> {
         let tokenizer = self.tokenizer.clone();
         let eos = self.eos_ids.clone();
-        let temperature = seq.processor.params().temperature;
+        let temperature = seq.branch.processor.params().temperature;
         let m = self.models.get_mut(name).unwrap();
         let Some(d) = m.draft.as_mut() else {
             return Ok(Vec::new());
         };
-        let target_tokens = match m.kv.get(seq.seq_id) {
+        let target_tokens = match m.kv.get(seq.branch.seq_id) {
             Some(s) => s.tokens.clone(),
             None => return Ok(Vec::new()),
         };
@@ -1868,28 +2162,33 @@ impl MLCEngine {
         // Sync the mirror: roll back past any rejected suffix, then append
         // what the target emitted since the last round. Failures here are
         // soft — an empty proposal list falls back to plain decode.
-        if d.kv.get(seq.seq_id).is_none() {
-            if d.kv.admit(seq.seq_id, &target_tokens).is_err() {
+        if d.kv.get(seq.branch.seq_id).is_none() {
+            if d.kv.admit(seq.branch.seq_id, &target_tokens).is_err() {
                 return Ok(Vec::new());
             }
         } else {
             let common = d
                 .kv
-                .get(seq.seq_id)
+                .get(seq.branch.seq_id)
                 .unwrap()
                 .tokens
                 .iter()
                 .zip(&target_tokens)
                 .take_while(|(a, b)| a == b)
                 .count();
-            d.kv.truncate(seq.seq_id, common);
+            d.kv.truncate(seq.branch.seq_id, common);
             for &t in &target_tokens[common..] {
-                if d.kv.append_token(seq.seq_id, t).is_err() {
+                if d.kv.append_token(seq.branch.seq_id, t).is_err() {
                     return Ok(Vec::new());
                 }
             }
         }
-        Self::flush_unwritten_kv(&mut self.stats, d.backend.as_mut(), &mut d.kv, seq.seq_id)?;
+        Self::flush_unwritten_kv(
+            &mut self.stats,
+            d.backend.as_mut(),
+            &mut d.kv,
+            seq.branch.seq_id,
+        )?;
 
         let mc = d.backend.config().clone();
         let Some(batch) = mc.pick_batch(1) else {
@@ -1902,10 +2201,10 @@ impl MLCEngine {
         let mut tables = vec![0i32; batch * mp];
         // The draft's grammar shadow: advanced per proposal, discarded at
         // the end of the round (the real matcher advances in emit_token).
-        let mut shadow = seq.matcher.clone();
+        let mut shadow = seq.branch.matcher.clone();
         let mut proposals = Vec::new();
         while proposals.len() < k {
-            let s = d.kv.get(seq.seq_id).expect("mirror admitted above");
+            let s = d.kv.get(seq.branch.seq_id).expect("mirror admitted above");
             let len = s.len();
             if len + 1 >= mc.max_seq_len {
                 break;
@@ -1913,9 +2212,9 @@ impl MLCEngine {
             ids[0] = *s.tokens.last().unwrap() as i32;
             positions[0] = (len - 1) as i32;
             seq_lens[0] = len as i32;
-            d.kv.write_block_table_row(seq.seq_id, &mut tables[..mp]);
+            d.kv.write_block_table_row(seq.branch.seq_id, &mut tables[..mp]);
             let out = d.backend.decode(&ids, &positions, &seq_lens, &tables)?;
-            d.kv.note_written(seq.seq_id, len);
+            d.kv.note_written(seq.branch.seq_id, len);
             let mask_rc: Rc<TokenBitmask>;
             let mask = match (&shadow, &seq.mask_cache) {
                 (Some(matcher), Some(cache)) => {
@@ -1934,7 +2233,7 @@ impl MLCEngine {
                     break;
                 }
             }
-            if d.kv.append_token(seq.seq_id, tok).is_err() {
+            if d.kv.append_token(seq.branch.seq_id, tok).is_err() {
                 break;
             }
             proposals.push(tok);
@@ -1948,13 +2247,13 @@ impl MLCEngine {
     /// sees them.
     fn post_emit(&mut self, seq: &mut RunningSeq) -> Result<(), RuntimeError> {
         self.fast_forward(seq);
-        if seq.finish.is_some() {
+        if seq.branch.finish.is_some() {
             // finalize() frees the pages, and unwritten tails are never
             // registered for prefix reuse — nothing to flush.
             return Ok(());
         }
         let m = self.models.get_mut(&seq.model).unwrap();
-        Self::flush_unwritten_kv(&mut self.stats, m.backend.as_mut(), &mut m.kv, seq.seq_id)
+        Self::flush_unwritten_kv(&mut self.stats, m.backend.as_mut(), &mut m.kv, seq.branch.seq_id)
     }
 
     /// Grammar fast-forward: while the matcher sits in non-accepting
@@ -1966,7 +2265,10 @@ impl MLCEngine {
     /// the deterministic single-candidate draws. Logprob reports need a
     /// distribution per token, so those requests opt out.
     fn fast_forward(&mut self, seq: &mut RunningSeq) {
-        if !self.enable_fast_forward || seq.logprobs.is_some() || seq.finish.is_some() {
+        if !self.enable_fast_forward
+            || seq.branch.logprobs.is_some()
+            || seq.branch.finish.is_some()
+        {
             return;
         }
         let (cache, runs) = match (&seq.mask_cache, &seq.forced_runs) {
@@ -1978,7 +2280,7 @@ impl MLCEngine {
             return;
         }
         loop {
-            let matcher = seq.matcher.as_ref().expect("mask cache implies matcher");
+            let matcher = seq.branch.matcher.as_ref().expect("mask cache implies matcher");
             if matcher.is_accepting() {
                 return;
             }
@@ -1998,16 +2300,16 @@ impl MLCEngine {
             }
             let chained = run.len() == MAX_FF_RUN;
             for &tok in run.iter() {
-                if seq.finish.is_some() {
+                if seq.branch.finish.is_some() {
                     return;
                 }
                 // The sampler never sees forced tokens; keep its penalty
                 // state in sync by hand.
-                seq.processor.observe(tok);
+                seq.branch.processor.observe(tok);
                 self.stats.ff_tokens += 1;
                 self.emit_token(seq, tok);
             }
-            if !chained || seq.finish.is_some() {
+            if !chained || seq.branch.finish.is_some() {
                 return;
             }
         }
@@ -2045,6 +2347,25 @@ impl MLCEngine {
         run
     }
 
+    /// Drain the KV manager's queued copy-on-write page copies into the
+    /// backend. Forks and CoW un-shares only redirect page-table entries
+    /// and queue `(src, dst)` pairs; the physical KV moves happen here,
+    /// immediately before the next model call reads or writes those
+    /// pages. Backends without `copy_page` never queue (the manager
+    /// clamps `written` instead and the flush path recomputes), so this
+    /// is a no-op for them.
+    fn apply_pending_copies(
+        stats: &mut EngineStats,
+        backend: &mut dyn ModelBackend,
+        kv: &mut KvCacheManager,
+    ) -> Result<(), RuntimeError> {
+        for (src, dst) in kv.take_pending_copies() {
+            with_retries(stats, || backend.copy_page(src, dst))?;
+            stats.cow_page_copies += 1;
+        }
+        Ok(())
+    }
+
     /// Compute KV for a sequence's appended-but-unwritten positions
     /// `[written, len - 1)` as positioned prefill chunks; the final
     /// position is the next decode/verify call's input and writes
@@ -2057,6 +2378,7 @@ impl MLCEngine {
         kv: &mut KvCacheManager,
         seq_id: u64,
     ) -> Result<(), RuntimeError> {
+        Self::apply_pending_copies(stats, backend, kv)?;
         let (len, mut pos) = match kv.get(seq_id) {
             Some(s) => (s.len(), s.written()),
             None => return Ok(()),
@@ -2092,7 +2414,7 @@ impl MLCEngine {
         // mask to flip bits on it.
         let mask_rc: Rc<TokenBitmask>;
         let mut extra: &[u32] = &[];
-        let mask: Option<&TokenBitmask> = match (&seq.matcher, &seq.mask_cache) {
+        let mask: Option<&TokenBitmask> = match (&seq.branch.matcher, &seq.mask_cache) {
             (Some(matcher), Some(cache)) => {
                 mask_rc = cache.borrow_mut().get_or_compute(matcher);
                 if matcher.is_accepting() {
@@ -2104,9 +2426,9 @@ impl MLCEngine {
         };
 
         let (token, lp) =
-            seq.processor
+            seq.branch.processor
                 .sample_with_logprobs_masked_with(&mut self.scratch, logits, mask, extra);
-        if let (Some(list), Some(lp)) = (&mut seq.logprobs, lp) {
+        if let (Some(list), Some(lp)) = (&mut seq.branch.logprobs, lp) {
             let tok_str = |t: u32| {
                 String::from_utf8_lossy(self.tokenizer.token_bytes(t)).into_owned()
             };
@@ -2134,16 +2456,16 @@ impl MLCEngine {
     fn emit_token(&mut self, seq: &mut RunningSeq, token: u32) {
         // EOS / special tokens never enter the text.
         if self.eos_ids.contains(&token) {
-            seq.finish = Some(FinishReason::Stop);
+            seq.branch.finish = Some(FinishReason::Stop);
             return;
         }
 
         // Advance the grammar.
-        if let Some(matcher) = &mut seq.matcher {
+        if let Some(matcher) = &mut seq.branch.matcher {
             let ok = matcher.accept_token(self.tokenizer.token_bytes(token));
             if !ok {
                 // Fallback-path token (fully-masked state): end the output.
-                seq.finish = Some(FinishReason::Stop);
+                seq.branch.finish = Some(FinishReason::Stop);
                 return;
             }
         }
@@ -2154,10 +2476,10 @@ impl MLCEngine {
         // outranks and retry the append.
         loop {
             let m = self.models.get_mut(&seq.model).unwrap();
-            match m.kv.append_token(seq.seq_id, token) {
+            match m.kv.append_token(seq.branch.seq_id, token) {
                 Ok(()) => break,
                 Err(AllocError::SeqLimit) => {
-                    seq.finish = Some(FinishReason::Length);
+                    seq.branch.finish = Some(FinishReason::Length);
                     return;
                 }
                 Err(AllocError::OutOfPages) => {
@@ -2165,61 +2487,64 @@ impl MLCEngine {
                     match self.pick_victim(&model, Some((seq.priority, seq.req_id))) {
                         Some((fr, idx)) => self.preempt_at(&model, fr, idx),
                         None => {
-                            seq.finish = Some(FinishReason::Length);
+                            seq.branch.finish = Some(FinishReason::Length);
                             return;
                         }
                     }
                 }
             }
         }
-        seq.completion_tokens += 1;
+        seq.branch.completion_tokens += 1;
 
         // Detokenize incrementally (WASM CPU stage in browser mode).
         let bytes = self.tokenizer.token_bytes(token);
         let piece = match &self.env {
-            Some(env) => env.cpu_stage(|| seq.decoder.push(bytes)),
-            None => seq.decoder.push(bytes),
+            Some(env) => env.cpu_stage(|| seq.branch.decoder.push(bytes)),
+            None => seq.branch.decoder.push(bytes),
         };
-        seq.text.push_str(&piece);
+        seq.branch.text.push_str(&piece);
 
         // Stop strings with holdback.
         let max_stop = seq.stop.iter().map(String::len).max().unwrap_or(0);
         if max_stop > 0 {
-            let scan_from = seq.emitted.saturating_sub(max_stop);
+            let scan_from = seq.branch.emitted.saturating_sub(max_stop);
             if let Some((at, _)) = seq
                 .stop
                 .iter()
-                .filter_map(|s| seq.text[scan_from..].find(s.as_str()).map(|i| (scan_from + i, s)))
+                .filter_map(|s| {
+                    seq.branch.text[scan_from..].find(s.as_str()).map(|i| (scan_from + i, s))
+                })
                 .min_by_key(|(i, _)| *i)
             {
-                seq.text.truncate(at);
-                seq.finish = Some(FinishReason::Stop);
+                seq.branch.text.truncate(at);
+                seq.branch.finish = Some(FinishReason::Stop);
                 return;
             }
         }
 
-        if seq.completion_tokens >= seq.max_tokens {
-            seq.finish = Some(FinishReason::Length);
+        if seq.branch.completion_tokens >= seq.max_tokens {
+            seq.branch.finish = Some(FinishReason::Length);
         }
 
         // Grammar complete and nothing more derivable => stop.
-        if let Some(matcher) = &seq.matcher {
+        if let Some(matcher) = &seq.branch.matcher {
             if matcher.is_accepting() && matcher.is_dead() {
-                seq.finish = Some(FinishReason::Stop);
+                seq.branch.finish = Some(FinishReason::Stop);
             }
         }
 
         // Stream the safe region (hold back potential stop-string prefixes).
-        if seq.stream && seq.finish.is_none() {
-            let safe_end = seq.text.len().saturating_sub(max_stop.saturating_sub(1));
-            if safe_end > seq.emitted && seq.text.is_char_boundary(safe_end) {
-                let delta = seq.text[seq.emitted..safe_end].to_string();
-                seq.emitted = safe_end;
+        if seq.stream && seq.branch.finish.is_none() {
+            let safe_end = seq.branch.text.len().saturating_sub(max_stop.saturating_sub(1));
+            if safe_end > seq.branch.emitted && seq.branch.text.is_char_boundary(safe_end) {
+                let delta = seq.branch.text[seq.branch.emitted..safe_end].to_string();
+                seq.branch.emitted = safe_end;
                 self.events.push_back(EngineEvent::Chunk(
                     seq.req_id,
                     ChatChunk {
                         id: format!("chatcmpl-{}", seq.req_id),
                         model: seq.model.clone(),
+                        index: seq.branch.index,
                         delta,
                         finish_reason: None,
                         usage: None,
@@ -2232,71 +2557,178 @@ impl MLCEngine {
     /// Terminate `seq` with a structured error instead of a completion:
     /// free its (and any draft mirror's) KV residency and emit an
     /// `Error` event. The caller owns the counter bump — timeout, drain,
-    /// and data-plane failures each count in their own bucket.
+    /// and data-plane failures each count in their own bucket. A branch
+    /// of a forked family records the first error and stays silent until
+    /// every sibling has resolved (each must free its pages through this
+    /// path or [`Self::finalize`]); the request then emits exactly one
+    /// `Error`, discarding any partial choices.
     fn fail(
         events: &mut VecDeque<EngineEvent>,
+        families: &mut BTreeMap<RequestId, FamilyState>,
         m: &mut EngineModel,
         seq: RunningSeq,
         error: ApiError,
     ) {
-        m.kv.free(seq.seq_id);
+        m.kv.free(seq.branch.seq_id);
         if let Some(d) = m.draft.as_mut() {
-            d.kv.free(seq.seq_id);
+            d.kv.free(seq.branch.seq_id);
+        }
+        if let Some(fam) = families.get_mut(&seq.req_id) {
+            if fam.error.is_none() {
+                fam.error = Some(error);
+            }
+            fam.resolved += 1;
+            if fam.resolved == fam.expected {
+                let fam = families.remove(&seq.req_id).expect("entry just seen");
+                events.push_back(EngineEvent::Error(
+                    seq.req_id,
+                    fam.error.expect("set above"),
+                ));
+            }
+            return;
         }
         events.push_back(EngineEvent::Error(seq.req_id, error));
     }
 
+    /// Complete one finished branch. For `n=1` that is the whole
+    /// request: stream the trailing chunks and emit `Done`. A branch of
+    /// a forked family instead parks its `Choice` in the family slot
+    /// (and streams its own trailing chunks, tagged with its index); the
+    /// single `Done` — index-ordered choices, aggregate usage — goes out
+    /// when the last sibling lands. Per-request counters (`e2e`,
+    /// `drain_completed`) bump once per family, not once per branch.
     fn finalize(
         events: &mut VecDeque<EngineEvent>,
         stats: &mut EngineStats,
+        families: &mut BTreeMap<RequestId, FamilyState>,
         m: &mut EngineModel,
         mut seq: RunningSeq,
         draining: bool,
     ) {
-        if draining {
-            stats.drain_completed += 1;
-        }
-        m.kv.free(seq.seq_id);
+        m.kv.free(seq.branch.seq_id);
         if let Some(d) = m.draft.as_mut() {
-            d.kv.free(seq.seq_id);
+            d.kv.free(seq.branch.seq_id);
         }
-        seq.text.push_str(&seq.decoder.finish());
+        seq.branch.text.push_str(&seq.branch.decoder.finish());
         // The final flush may surface held-back bytes; the contract is
         // that a stop string never appears in the returned text.
         if let Some(at) = seq
             .stop
             .iter()
-            .filter_map(|s| seq.text.find(s.as_str()))
+            .filter_map(|s| seq.branch.text.find(s.as_str()))
             .min()
         {
-            seq.text.truncate(at);
-            seq.finish = Some(FinishReason::Stop);
+            seq.branch.text.truncate(at);
+            seq.branch.finish = Some(FinishReason::Stop);
         }
-        let finish = seq.finish.unwrap_or(FinishReason::Stop);
+        let finish = seq.branch.finish.unwrap_or(FinishReason::Stop);
         let e2e = seq.t_admit.elapsed().as_secs_f64();
         let ttft = seq
             .t_prefilled
             .map(|t| e2e - t.elapsed().as_secs_f64())
             .unwrap_or(e2e);
         let decode_s = (e2e - ttft).max(1e-9);
-        stats.e2e.push(e2e);
         let usage = Usage {
             prompt_tokens: seq.prompt_tokens,
-            completion_tokens: seq.completion_tokens,
+            completion_tokens: seq.branch.completion_tokens,
             prefill_tokens_per_s: seq.prompt_tokens as f64 / ttft.max(1e-9),
-            decode_tokens_per_s: seq.completion_tokens as f64 / decode_s,
+            decode_tokens_per_s: seq.branch.completion_tokens as f64 / decode_s,
             ttft_s: ttft,
             e2e_s: e2e,
         };
-        if seq.stream {
-            // Trailing un-emitted text, then the final chunk.
-            if seq.text.len() > seq.emitted {
+
+        if let Some(fam) = families.get_mut(&seq.req_id) {
+            // Aggregate usage: the prompt was prefilled once for the
+            // whole family, completions sum, wall-clock is the slowest
+            // branch. Rates are recomputed from the aggregate once the
+            // family completes.
+            fam.usage.prompt_tokens = usage.prompt_tokens;
+            fam.usage.completion_tokens += usage.completion_tokens;
+            fam.usage.ttft_s = fam.usage.ttft_s.max(usage.ttft_s);
+            fam.usage.e2e_s = fam.usage.e2e_s.max(usage.e2e_s);
+            fam.resolved += 1;
+            let done = fam.resolved == fam.expected;
+            if done {
+                fam.usage.prefill_tokens_per_s =
+                    fam.usage.prompt_tokens as f64 / fam.usage.ttft_s.max(1e-9);
+                fam.usage.decode_tokens_per_s = fam.usage.completion_tokens as f64
+                    / (fam.usage.e2e_s - fam.usage.ttft_s).max(1e-9);
+            }
+            if seq.stream {
+                if seq.branch.text.len() > seq.branch.emitted {
+                    events.push_back(EngineEvent::Chunk(
+                        seq.req_id,
+                        ChatChunk {
+                            id: format!("chatcmpl-{}", seq.req_id),
+                            model: seq.model.clone(),
+                            index: seq.branch.index,
+                            delta: seq.branch.text[seq.branch.emitted..].to_string(),
+                            finish_reason: None,
+                            usage: None,
+                        },
+                    ));
+                }
                 events.push_back(EngineEvent::Chunk(
                     seq.req_id,
                     ChatChunk {
                         id: format!("chatcmpl-{}", seq.req_id),
                         model: seq.model.clone(),
-                        delta: seq.text[seq.emitted..].to_string(),
+                        index: seq.branch.index,
+                        delta: String::new(),
+                        finish_reason: Some(finish),
+                        // The aggregate rides the last branch to land.
+                        usage: done.then(|| fam.usage.clone()),
+                    },
+                ));
+            }
+            fam.choices[seq.branch.index] = Some(Choice {
+                index: seq.branch.index,
+                content: seq.branch.text,
+                finish_reason: finish,
+                logprobs: seq.branch.logprobs,
+            });
+            if done {
+                if draining {
+                    stats.drain_completed += 1;
+                }
+                if fam.error.is_none() {
+                    stats.e2e.push(fam.usage.e2e_s);
+                }
+                let fam = families.remove(&seq.req_id).expect("entry just seen");
+                match fam.error {
+                    Some(e) => events.push_back(EngineEvent::Error(seq.req_id, e)),
+                    None => events.push_back(EngineEvent::Done(
+                        seq.req_id,
+                        ChatCompletionResponse {
+                            id: format!("chatcmpl-{}", seq.req_id),
+                            model: seq.model.clone(),
+                            created: std::time::SystemTime::now()
+                                .duration_since(std::time::UNIX_EPOCH)
+                                .map(|d| d.as_secs())
+                                .unwrap_or(0),
+                            choices: fam.choices.into_iter().flatten().collect(),
+                            usage: fam.usage,
+                        },
+                    )),
+                }
+            }
+            return;
+        }
+
+        if draining {
+            stats.drain_completed += 1;
+        }
+        stats.e2e.push(e2e);
+        if seq.stream {
+            // Trailing un-emitted text, then the final chunk.
+            if seq.branch.text.len() > seq.branch.emitted {
+                events.push_back(EngineEvent::Chunk(
+                    seq.req_id,
+                    ChatChunk {
+                        id: format!("chatcmpl-{}", seq.req_id),
+                        model: seq.model.clone(),
+                        index: seq.branch.index,
+                        delta: seq.branch.text[seq.branch.emitted..].to_string(),
                         finish_reason: None,
                         usage: None,
                     },
@@ -2307,6 +2739,7 @@ impl MLCEngine {
                 ChatChunk {
                     id: format!("chatcmpl-{}", seq.req_id),
                     model: seq.model.clone(),
+                    index: seq.branch.index,
                     delta: String::new(),
                     finish_reason: Some(finish),
                     usage: Some(usage.clone()),
@@ -2323,10 +2756,10 @@ impl MLCEngine {
                     .map(|d| d.as_secs())
                     .unwrap_or(0),
                 choices: vec![Choice {
-                    index: 0,
-                    content: seq.text,
+                    index: seq.branch.index,
+                    content: seq.branch.text,
                     finish_reason: finish,
-                    logprobs: seq.logprobs,
+                    logprobs: seq.branch.logprobs,
                 }],
                 usage,
             },
@@ -2421,6 +2854,11 @@ impl MLCEngine {
             stats.grammar_mask_hits += c.hits;
             stats.grammar_mask_misses += c.misses;
             stats.grammar_mask_evictions += c.evictions;
+        }
+        // `shared_pages` is a high-water gauge: fold in the live pools so
+        // a snapshot taken mid-family sees the current sharing too.
+        for m in self.models.values() {
+            stats.shared_pages = stats.shared_pages.max(m.kv.shared_pages() as u64);
         }
         let mut out = stats.stats_json();
         let mut models = Value::object();

@@ -191,6 +191,7 @@ mod tests {
         let chunk = ChatChunk {
             id: "c".into(),
             model: "m".into(),
+            index: 1,
             delta: "hi".into(),
             finish_reason: Some(FinishReason::Stop),
             usage: None,

@@ -22,6 +22,7 @@ pub mod worker;
 pub use engine::{
     BackendKind, EngineConfig, EngineEvent, MLCEngine, RequestId, DEFAULT_MASK_CACHE_CAPACITY,
     DEFAULT_MAX_CONCURRENT_PREFILLS, DEFAULT_MAX_WAITING_REQUESTS, DEFAULT_PREFILL_TOKEN_BUDGET,
+    DEFAULT_SPEC_TOKENS,
 };
 pub use frontend::ServiceWorkerMLCEngine;
 pub use messages::{FromWorker, ToWorker};

@@ -81,6 +81,12 @@ impl BlockAllocator {
         self.refcount[page as usize]
     }
 
+    /// Pages held by more than one owner right now — forked-family
+    /// shares plus live prefix-cache hits. A gauge, not a counter.
+    pub fn num_shared(&self) -> usize {
+        self.refcount.iter().filter(|&&rc| rc > 1).count()
+    }
+
     /// Allocate a fresh page (refcount 1), evicting the LRU cached page
     /// if the free list is empty. Evicted page ids are queued for the
     /// prefix cache to unmap (`take_evicted`).

@@ -58,6 +58,12 @@ pub struct KvCacheManager {
     seqs: HashMap<SeqId, Sequence>,
     max_pages_per_seq: usize,
     enable_prefix_cache: bool,
+    /// Whether the backend can physically copy a page (so CoW queues a
+    /// copy instead of clamping `written` and recomputing the tail).
+    cow_copy: bool,
+    /// Queued `(src, dst)` page copies the backend must apply before its
+    /// next KV write — fork tail copies and CoW un-shares.
+    pending_copies: Vec<(u32, u32)>,
 }
 
 impl KvCacheManager {
@@ -73,7 +79,26 @@ impl KvCacheManager {
             seqs: HashMap::new(),
             max_pages_per_seq,
             enable_prefix_cache,
+            cow_copy: false,
+            pending_copies: Vec::new(),
         }
+    }
+
+    /// Enable queueing physical page copies for fork tails and CoW.
+    /// Called at engine init when the backend implements
+    /// `ModelBackend::copy_page`; without it the manager clamps `written`
+    /// instead and the engine's flush path recomputes the lost positions
+    /// (exact by the benign-rewrite property, just slower).
+    pub fn set_page_copy(&mut self, enabled: bool) {
+        self.cow_copy = enabled;
+    }
+
+    /// Drain the queued `(src, dst)` page copies. The engine must apply
+    /// each via the backend's page-copy primitive *before* its next
+    /// model call — the destination pages are already in live block
+    /// tables.
+    pub fn take_pending_copies(&mut self) -> Vec<(u32, u32)> {
+        std::mem::take(&mut self.pending_copies)
     }
 
     pub fn page_size(&self) -> usize {
@@ -111,6 +136,30 @@ impl KvCacheManager {
     pub fn can_admit(&self, n_tokens: usize) -> bool {
         let need = self.pages_needed(n_tokens);
         need <= self.max_pages_per_seq && need <= self.alloc.available()
+    }
+
+    /// Pages needed to admit an `n_branches`-way fork family over a
+    /// prompt of `n_tokens`: one full allocation for the parent plus,
+    /// per extra branch, only the pages past the shared full-page
+    /// boundary (the fork shares everything else by refcount).
+    pub fn pages_needed_family(&self, n_tokens: usize, n_branches: usize) -> usize {
+        let ps = self.alloc.page_size();
+        let base = self.pages_needed(n_tokens);
+        let tail = base - n_tokens / ps;
+        base + n_branches.saturating_sub(1) * tail
+    }
+
+    /// Whether an `n_branches`-way family over an `n_tokens` prompt fits
+    /// right now (conservative: ignores possible prefix hits).
+    pub fn can_admit_family(&self, n_tokens: usize, n_branches: usize) -> bool {
+        self.pages_needed(n_tokens) <= self.max_pages_per_seq
+            && self.pages_needed_family(n_tokens, n_branches) <= self.alloc.available()
+    }
+
+    /// Pages currently shared (refcount > 1) across live sequences —
+    /// forked families plus live prefix-cache hits. A gauge.
+    pub fn shared_pages(&self) -> usize {
+        self.alloc.num_shared()
     }
 
     /// Allocate residency for a new sequence over `tokens` (the prompt).
@@ -202,6 +251,80 @@ impl KvCacheManager {
         Ok(self.seqs.entry(id).or_insert(seq))
     }
 
+    /// Fork `parent` into a new sequence `child` that shares its KV:
+    /// every fully-*written* full page is shared by bumping its refcount
+    /// (no compute, no copy); each tail page holding partial content is
+    /// given to the child as a fresh page — physically copied via the
+    /// pending-copy queue when the backend has a page-copy primitive,
+    /// otherwise left for the engine's flush path to recompute (the
+    /// child's `written` clamps to the shared boundary). A fork
+    /// therefore costs O(tail) pages instead of O(context), which is
+    /// what makes `n>1` parallel sampling prefill once. Writes by
+    /// either side into a still-shared page trigger copy-on-write in
+    /// [`Self::append_token`] / [`Self::reserve`]. On `OutOfPages`
+    /// everything is rolled back and the parent is untouched.
+    pub fn fork(&mut self, parent: SeqId, child: SeqId) -> Result<(), AllocError> {
+        assert!(!self.seqs.contains_key(&child), "sequence {child} already admitted");
+        let ps = self.alloc.page_size();
+        let p = self.seqs.get(&parent).expect("unknown parent sequence");
+        let tokens = p.tokens.clone();
+        let parent_table = p.block_table.clone();
+        let parent_keys = p.page_keys.clone();
+        let parent_written = p.written;
+        let parent_cached = p.cached_tokens;
+        let shared = (parent_written / ps).min(parent_table.len());
+
+        let mut block_table = Vec::with_capacity(parent_table.len());
+        let mut queued = 0usize;
+        let mut written = parent_written;
+        for (i, &page) in parent_table.iter().enumerate() {
+            if i < shared {
+                self.alloc.retain(page);
+                block_table.push(page);
+                continue;
+            }
+            // Tail or reserved-ahead page: the child gets its own copy.
+            match self.alloc.alloc() {
+                Ok(fresh) => {
+                    if parent_written > i * ps {
+                        if self.cow_copy {
+                            self.pending_copies.push((page, fresh));
+                            queued += 1;
+                        } else {
+                            written = written.min(i * ps);
+                        }
+                    }
+                    block_table.push(fresh);
+                }
+                Err(e) => {
+                    // Roll back: drop this fork's queued copies and
+                    // return every page taken so far (shared pages just
+                    // lose the child's ref and stay with the parent).
+                    self.pending_copies.truncate(self.pending_copies.len() - queued);
+                    for &pg in &block_table {
+                        let keep = self.prefix.contains_page(pg);
+                        self.alloc.release(pg, keep);
+                    }
+                    self.sync_evictions();
+                    return Err(e);
+                }
+            }
+        }
+        self.sync_evictions();
+        let seq = Sequence {
+            id: child,
+            tokens,
+            block_table,
+            cached_tokens: parent_cached.min(written),
+            written,
+            // Keys hash token content, which the branches share; the
+            // clone keeps the child's pages registrable on free.
+            page_keys: parent_keys,
+        };
+        self.seqs.insert(child, seq);
+        Ok(())
+    }
+
     /// Record that the backend has materialized positions `[0, upto)` of
     /// sequence `id` in the page pool (a prefill chunk landed, or a
     /// decode step wrote its token). Monotonic; positions never become
@@ -220,7 +343,10 @@ impl KvCacheManager {
     }
 
     /// Record a generated token, growing the block table when the new
-    /// position crosses into an unallocated page.
+    /// position crosses into an unallocated page. If the page that will
+    /// hold the new position is shared with a forked sibling (refcount
+    /// > 1), it is un-shared first — copy-on-write — so the upcoming
+    /// decode write cannot corrupt the sibling's context.
     pub fn append_token(&mut self, id: SeqId, token: u32) -> Result<(), AllocError> {
         let ps = self.alloc.page_size();
         let seq = self.seqs.get_mut(&id).expect("unknown sequence");
@@ -232,9 +358,51 @@ impl KvCacheManager {
         if page_idx >= seq.block_table.len() {
             let page = self.alloc.alloc()?;
             seq.block_table.push(page);
+        } else if self.alloc.refcount(seq.block_table[page_idx]) > 1 {
+            Self::cow_page(
+                &mut self.alloc,
+                &self.prefix,
+                &mut self.pending_copies,
+                self.cow_copy,
+                seq,
+                page_idx,
+            )?;
         }
         seq.tokens.push(token);
         self.sync_evictions();
+        Ok(())
+    }
+
+    /// Give `seq` an exclusive copy of block-table slot `page_idx`,
+    /// whose current page is shared (refcount > 1). With a backend
+    /// page-copy primitive the old contents are queued for a physical
+    /// copy; without one, `written` clamps to the page boundary and the
+    /// engine's flush path recomputes the lost positions (exact by the
+    /// benign-rewrite property: re-materializing the same tokens at the
+    /// same positions writes identical KV).
+    fn cow_page(
+        alloc: &mut BlockAllocator,
+        prefix: &PrefixCache,
+        pending: &mut Vec<(u32, u32)>,
+        cow_copy: bool,
+        seq: &mut Sequence,
+        page_idx: usize,
+    ) -> Result<(), AllocError> {
+        let ps = alloc.page_size();
+        let old = seq.block_table[page_idx];
+        let fresh = alloc.alloc()?;
+        if seq.written > page_idx * ps {
+            if cow_copy {
+                pending.push((old, fresh));
+            } else {
+                seq.written = page_idx * ps;
+                seq.cached_tokens = seq.cached_tokens.min(seq.written);
+            }
+        }
+        // The old page stays alive through its other holders; `release`
+        // only parks/frees at refcount zero.
+        alloc.release(old, prefix.contains_page(old));
+        seq.block_table[page_idx] = fresh;
         Ok(())
     }
 
@@ -252,7 +420,32 @@ impl KvCacheManager {
         }
         let mut result = Ok(());
         let seq = self.seqs.get_mut(&id).expect("unknown sequence");
-        while seq.block_table.len() < need {
+        // Verification writes positions [len-1, upto); an existing page
+        // overlapping that range that is still shared with a forked
+        // sibling must be un-shared before the backend writes into it.
+        // (Unreachable for current fork families — their write range is
+        // exclusive by construction — so only the copy-capable path
+        // bothers; the recompute fallback would leave the verify read
+        // window unwritten.)
+        if self.cow_copy {
+            let first_write = seq.tokens.len().saturating_sub(1) / ps;
+            for idx in first_write..seq.block_table.len().min(need) {
+                if self.alloc.refcount(seq.block_table[idx]) > 1 {
+                    if let Err(e) = Self::cow_page(
+                        &mut self.alloc,
+                        &self.prefix,
+                        &mut self.pending_copies,
+                        true,
+                        seq,
+                        idx,
+                    ) {
+                        result = Err(e);
+                        break;
+                    }
+                }
+            }
+        }
+        while result.is_ok() && seq.block_table.len() < need {
             match self.alloc.alloc() {
                 Ok(page) => seq.block_table.push(page),
                 Err(e) => {
@@ -280,12 +473,9 @@ impl KvCacheManager {
         }
         seq.tokens.truncate(new_len);
         let keep_pages = (new_len + ps - 1) / ps;
+        let mut popped = Vec::new();
         while seq.block_table.len() > keep_pages {
-            let page = seq.block_table.pop().unwrap();
-            // A popped page can still be alive as another sequence's
-            // prefix hit; `release` only parks/frees at refcount zero.
-            let keep = self.prefix.contains_page(page);
-            self.alloc.release(page, keep);
+            popped.push(seq.block_table.pop().unwrap());
         }
         // Keys address *full* pages of the old token vector; only pages
         // still fully backed by surviving tokens keep their keys.
@@ -296,6 +486,13 @@ impl KvCacheManager {
         if seq.cached_tokens > new_len {
             seq.cached_tokens = new_len;
         }
+        for page in popped {
+            // A popped page can still be alive as another sequence's
+            // prefix hit; `release` only parks/frees at refcount zero.
+            let keep = self.prefix.contains_page(page);
+            self.alloc.release(page, keep);
+            self.purge_dead_copies(page);
+        }
         self.sync_evictions();
     }
 
@@ -305,29 +502,29 @@ impl KvCacheManager {
     /// unwritten slots — a prompt aborted mid-prefill, or the final
     /// sampled-but-never-decoded token — out of the reuse pool.
     pub fn free(&mut self, id: SeqId) {
-        let Some(seq) = self.seqs.remove(&id) else { return };
+        let Some(mut seq) = self.seqs.remove(&id) else { return };
         let ps = self.alloc.page_size();
         let full_pages = seq.tokens.len().min(seq.written) / ps;
+        if self.enable_prefix_cache {
+            // Keys may be missing for pages past the originally-hashed
+            // prompt prefix (tokens generated later). Compute them
+            // lazily *and chain them*: each computed key becomes the
+            // next page's parent, so a whole decoded suffix re-enters
+            // the cache warm — the preempted-victim resume path skips
+            // every fully-written page, not just the first one.
+            while seq.page_keys.len() < full_pages {
+                let i = seq.page_keys.len();
+                let parent = if i == 0 { None } else { Some(seq.page_keys[i - 1]) };
+                seq.page_keys.push(page_key(parent, &seq.tokens[i * ps..(i + 1) * ps]));
+            }
+        }
         for (i, &page) in seq.block_table.iter().enumerate() {
             let mut keep = false;
             if self.enable_prefix_cache && i < full_pages {
-                // Key may be missing for pages past the originally-hashed
-                // prompt prefix (tokens generated later); compute lazily.
-                let key = if i < seq.page_keys.len() {
-                    seq.page_keys[i]
-                } else {
-                    let parent = if i == 0 {
-                        None
-                    } else if i - 1 < seq.page_keys.len() {
-                        Some(seq.page_keys[i - 1])
-                    } else {
-                        None
-                    };
-                    match parent {
-                        None if i > 0 => 0, // broken chain: don't cache
-                        p => page_key(p, &seq.tokens[i * ps..(i + 1) * ps]),
-                    }
-                };
+                let key = seq.page_keys[i];
+                // Register only sole-owner pages: a forked sibling still
+                // holds shared pages live, and the *last* branch to free
+                // is the one that parks them for future reuse.
                 if key != 0 && self.alloc.refcount(page) == 1 {
                     self.prefix.insert(key, page);
                     keep = self.prefix.contains_page(page);
@@ -336,8 +533,19 @@ impl KvCacheManager {
             // Shared pages stay alive through other sequences' refs.
             let keep = keep || self.prefix.contains_page(page);
             self.alloc.release(page, keep);
+            self.purge_dead_copies(page);
         }
         self.sync_evictions();
+    }
+
+    /// Drop pending copies touching a page that just hit refcount zero:
+    /// a freed page can be re-allocated and rewritten before the engine
+    /// drains the queue, so a stale copy would clobber (dst) or leak
+    /// garbage from (src) an unrelated sequence.
+    fn purge_dead_copies(&mut self, page: u32) {
+        if self.alloc.refcount(page) == 0 && !self.pending_copies.is_empty() {
+            self.pending_copies.retain(|&(s, d)| s != page && d != page);
+        }
     }
 
     /// Discard ALL pool state — allocator, prefix cache, and every live
@@ -350,6 +558,8 @@ impl KvCacheManager {
         self.alloc = BlockAllocator::new(self.alloc.num_pages(), self.alloc.page_size());
         self.prefix = PrefixCache::new();
         self.seqs.clear();
+        // Queued copies referenced pages on the lost device.
+        self.pending_copies.clear();
     }
 
     /// The i32 block-table row for an executable call, padded with the
@@ -397,6 +607,11 @@ impl KvCacheManager {
     #[cfg(test)]
     pub fn check_invariants(&self) {
         self.alloc.check_invariants();
+        // Pending copies must reference live pages only (purged on free).
+        for &(s, d) in &self.pending_copies {
+            assert!(self.alloc.refcount(s) >= 1, "pending copy src {s} dead");
+            assert!(self.alloc.refcount(d) >= 1, "pending copy dst {d} dead");
+        }
         // Every live sequence's table pages have refcount >= 1.
         for seq in self.seqs.values() {
             for &p in &seq.block_table {

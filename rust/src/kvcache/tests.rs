@@ -442,6 +442,245 @@ fn prop_prefix_cache_shared_tables_agree() {
 }
 
 #[test]
+fn family_admission_accounting() {
+    let m = KvCacheManager::new(16, 4, 8, false); // 15 usable pages
+    // 6 tokens: 2 pages base (7 slots), of which 1 is full -> each extra
+    // branch re-allocates only the non-full tail page.
+    assert_eq!(m.pages_needed(6), 2);
+    assert_eq!(m.pages_needed_family(6, 1), 2);
+    assert_eq!(m.pages_needed_family(6, 3), 4);
+    assert!(m.can_admit_family(6, 3));
+    // 7 tokens fill page 1 exactly only after the +1 decode slot, so
+    // every branch still re-allocates one tail page.
+    assert_eq!(m.pages_needed_family(7, 4), 5);
+    // Family total may exceed the pool even when one branch fits.
+    let small = KvCacheManager::new(4, 4, 8, false); // 3 usable
+    assert!(small.can_admit(6));
+    assert!(!small.can_admit_family(6, 3));
+}
+
+#[test]
+fn fork_shares_full_pages_and_copies_tail() {
+    let mut m = KvCacheManager::new(16, 4, 8, true);
+    m.set_page_copy(true);
+    let prompt = [1u32, 2, 3, 4, 5, 6]; // page 0 full, page 1 partial
+    m.admit(1, &prompt).unwrap();
+    m.note_written(1, 6);
+    let t1 = m.get(1).unwrap().block_table.clone();
+    let avail = m.available_pages();
+
+    m.fork(1, 2).unwrap();
+    let t2 = m.get(2).unwrap().block_table.clone();
+    assert_eq!(t2[0], t1[0], "full written page is shared");
+    assert_eq!(m.allocator().refcount(t1[0]), 2);
+    assert_ne!(t2[1], t1[1], "tail page is private per branch");
+    assert_eq!(m.allocator().refcount(t1[1]), 1);
+    assert_eq!(m.available_pages(), avail - 1, "fork costs exactly the tail");
+    assert_eq!(m.shared_pages(), 1);
+    // The physical tail copy is queued for the backend, and the child is
+    // fully resident (the copy carries the parent's written content).
+    assert_eq!(m.take_pending_copies(), vec![(t1[1], t2[1])]);
+    assert_eq!(m.get(2).unwrap().written(), 6);
+    assert_eq!(m.get(2).unwrap().tokens, prompt);
+    m.check_invariants();
+    m.free(1);
+    m.free(2);
+    m.check_invariants();
+}
+
+#[test]
+fn fork_without_copy_primitive_clamps_written() {
+    // No backend page copy: the child's tail page starts unwritten and
+    // the engine's flush path recomputes it (benign rewrite).
+    let mut m = KvCacheManager::new(16, 4, 8, false);
+    m.set_page_copy(false);
+    m.admit(1, &[1, 2, 3, 4, 5, 6]).unwrap();
+    m.note_written(1, 6);
+    m.fork(1, 2).unwrap();
+    assert!(m.take_pending_copies().is_empty());
+    assert_eq!(m.get(2).unwrap().written(), 4, "clamped to the shared boundary");
+    assert_eq!(m.get(1).unwrap().written(), 6, "parent untouched");
+    m.check_invariants();
+}
+
+#[test]
+fn reserve_unshares_cow_page_with_exact_accounting() {
+    // Page-aligned fork: every page is shared. A speculative reserve on
+    // the child rewrites slot len-1, which lives in a shared page — that
+    // page must be un-shared (copy-on-write) before the write.
+    let mut m = KvCacheManager::new(16, 4, 8, true);
+    m.set_page_copy(true);
+    m.admit(1, &[1, 2, 3, 4, 5, 6, 7]).unwrap(); // 2 pages, 8 slots
+    m.append_token(1, 8).unwrap(); // fills page 1
+    m.note_written(1, 8);
+    let t1 = m.get(1).unwrap().block_table.clone();
+    m.fork(1, 2).unwrap();
+    assert!(m.take_pending_copies().is_empty(), "aligned fork copies nothing");
+    assert_eq!(m.get(2).unwrap().block_table, t1);
+    assert_eq!(m.shared_pages(), 2);
+    let avail = m.available_pages();
+
+    m.reserve(2, 10).unwrap(); // verify window rewrites position 7
+    let t2 = m.get(2).unwrap().block_table.clone();
+    assert_eq!(t2[0], t1[0], "read-only page stays shared");
+    assert_ne!(t2[1], t1[1], "rewritten page is un-shared");
+    assert_eq!(t2.len(), 3);
+    assert_eq!(m.allocator().refcount(t1[1]), 1, "parent owns its tail again");
+    assert_eq!(m.available_pages(), avail - 2, "one CoW page + one growth page");
+    assert_eq!(m.take_pending_copies(), vec![(t1[1], t2[1])]);
+    // Branch A's divergence never reached branch B.
+    assert_eq!(m.get(1).unwrap().block_table, t1);
+    assert_eq!(m.get(1).unwrap().written(), 8);
+    m.check_invariants();
+    m.free(2);
+    assert_eq!(m.allocator().refcount(t1[0]), 1);
+    m.free(1);
+    m.check_invariants();
+}
+
+#[test]
+fn fork_rolls_back_on_exhaustion() {
+    let mut m = KvCacheManager::new(5, 4, 8, false); // 4 usable pages
+    m.set_page_copy(true);
+    m.admit(1, &[0; 9]).unwrap(); // 3 pages
+    m.note_written(1, 5); // page 0 full; pages 1-2 are unshareable tails
+    assert_eq!(m.available_pages(), 1);
+    let t1 = m.get(1).unwrap().block_table.clone();
+
+    // The fork needs 2 fresh tail pages; the pool has 1.
+    assert_eq!(m.fork(1, 2), Err(AllocError::OutOfPages));
+    assert_eq!(m.num_sequences(), 1);
+    assert_eq!(m.available_pages(), 1, "taken pages returned");
+    assert!(m.take_pending_copies().is_empty(), "queued copies rolled back");
+    for &p in &t1 {
+        assert_eq!(m.allocator().refcount(p), 1, "parent refs unchanged");
+    }
+    m.check_invariants();
+    m.free(1);
+    m.check_invariants();
+    assert_eq!(m.available_pages(), 4);
+}
+
+#[test]
+fn family_frees_in_any_order_without_leaks_and_registers_prefix_once() {
+    let mut m = KvCacheManager::new(16, 4, 8, true);
+    m.set_page_copy(true);
+    let prompt = [1u32, 2, 3, 4, 5, 6];
+    let total = m.available_pages();
+    for order in [[1u64, 2, 3], [3, 1, 2], [2, 3, 1]] {
+        m.admit(1, &prompt).unwrap();
+        m.note_written(1, 6);
+        let shared_page = m.get(1).unwrap().block_table[0];
+        m.fork(1, 2).unwrap();
+        m.fork(1, 3).unwrap();
+        let _ = m.take_pending_copies();
+        assert_eq!(m.allocator().refcount(shared_page), 3);
+        for (i, id) in order.iter().enumerate() {
+            m.free(*id);
+            m.check_invariants();
+            let left = (order.len() - 1 - i) as u32;
+            if left > 0 {
+                assert_eq!(m.allocator().refcount(shared_page), left);
+            }
+        }
+        assert_eq!(m.available_pages(), total, "family fully reclaimed");
+        // The last-freeing sibling registered the shared full page: a
+        // session turn re-admitting the same prefix hits it.
+        let seq = m.admit(9, &prompt).unwrap();
+        assert_eq!(seq.cached_tokens, 4, "shared page reused across turns");
+        m.free(9);
+        m.check_invariants();
+    }
+}
+
+#[test]
+fn dead_sequences_purge_their_pending_copies() {
+    // A branch can be aborted between fork and the next backend call;
+    // its queued tail copy must die with it, or the engine would later
+    // copy into (or out of) a recycled page.
+    let mut m = KvCacheManager::new(16, 4, 8, false);
+    m.set_page_copy(true);
+    m.admit(1, &[1, 2, 3, 4, 5, 6]).unwrap();
+    m.note_written(1, 6);
+    m.fork(1, 2).unwrap();
+    m.free(2); // abort the branch, pending copy still queued
+    assert!(m.take_pending_copies().is_empty(), "copy for a dead page purged");
+    m.check_invariants();
+    m.free(1);
+    m.check_invariants();
+}
+
+#[test]
+fn prop_random_fork_cow_keeps_invariants() {
+    Runner::new("fork_cow_invariants", 120).run(|rng| {
+        let ps = *rng.choose(&[4usize, 8]);
+        let num_pages = 6 + rng.range(30);
+        let mut m = KvCacheManager::new(num_pages, ps, 12, rng.bool());
+        m.set_page_copy(rng.bool());
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..150 {
+            match rng.range(6) {
+                0 => {
+                    let n = 1 + rng.range(ps * 3);
+                    let toks: Vec<u32> = (0..n).map(|_| rng.range(64) as u32).collect();
+                    next_id += 1;
+                    if m.admit(next_id, &toks).is_ok() {
+                        live.push(next_id);
+                    }
+                }
+                1 if !live.is_empty() => {
+                    // Fork a random live sequence (the n>1 fan-out shape).
+                    let parent = *rng.choose(&live);
+                    next_id += 1;
+                    if m.fork(parent, next_id).is_ok() {
+                        live.push(next_id);
+                    }
+                }
+                2 if !live.is_empty() => {
+                    let idx = rng.range(live.len());
+                    let id = live.swap_remove(idx);
+                    m.free(id);
+                }
+                3 if !live.is_empty() => {
+                    let id = *rng.choose(&live);
+                    let _ = m.append_token(id, rng.range(64) as u32);
+                }
+                4 if !live.is_empty() => {
+                    // Speculative reserve: may trigger reserve-side CoW.
+                    let id = *rng.choose(&live);
+                    let len = m.get(id).unwrap().len();
+                    let _ = m.reserve(id, len + rng.range(ps));
+                }
+                5 if !live.is_empty() => {
+                    let id = *rng.choose(&live);
+                    let len = m.get(id).unwrap().len();
+                    m.note_written(id, rng.range(len + 1));
+                }
+                _ => {}
+            }
+            m.check_invariants();
+            if rng.range(4) == 0 {
+                // The engine drains copies before each backend call.
+                let _ = m.take_pending_copies();
+            }
+        }
+        for id in live {
+            m.free(id);
+        }
+        m.check_invariants();
+        if m.available_pages() != num_pages - 1 {
+            return Err(format!(
+                "leak: {} of {} pages available after freeing everything",
+                m.available_pages(),
+                num_pages - 1
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn invalidate_all_discards_sequences_pool_and_prefix_cache() {
     let mut m = KvCacheManager::new(16, 4, 8, true);
     let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8, 9];

@@ -48,7 +48,7 @@ fn usage() {
 USAGE:
   webllm serve    --model <name>[,<name>...] [--addr HOST:PORT] [--browser]
   webllm chat     --model <name> [--browser] [--max-tokens N] [--temperature T]
-  webllm generate --model <name> --prompt TEXT [--json] [--max-tokens N] [--seed S]
+  webllm generate --model <name> --prompt TEXT [--json] [--max-tokens N] [--seed S] [--n K]
   webllm models
   webllm stats    --model <name>
 
@@ -63,7 +63,13 @@ FLAGS:
   --draft-model     speculative decoding: cheaper model that proposes
                     tokens for every loaded target to verify in one
                     batched call (same tokenizer/vocab required)
-  --spec-tokens     draft proposals per speculation round (default 4)
+  --spec-tokens     draft proposals per speculation round (default 4;
+                    the cap when the adaptive policy is active)
+  --no-adaptive-spec
+                    propose a fixed --spec-tokens run every round instead
+                    of scaling it to the request's acceptance rate
+  --n               parallel completions per generate request (prompt
+                    prefilled once, KV forked per choice; default 1)
   --no-fast-forward disable grammar fast-forward (emit grammar-forced
                     token runs without model calls; on by default)
   --priority        scheduling class for chat/generate requests (integer,
@@ -141,6 +147,9 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig, String
     }
     if flags.contains_key("no-fast-forward") {
         cfg.enable_fast_forward = false;
+    }
+    if flags.contains_key("no-adaptive-spec") {
+        cfg.adaptive_spec_tokens = false;
     }
     if let Some(n) = flags.get("max-concurrent-prefills") {
         cfg.max_concurrent_prefills = n
@@ -241,11 +250,21 @@ fn cmd_generate(flags: &HashMap<String, String>) -> Result<(), String> {
     req.max_tokens = flags.get("max-tokens").and_then(|v| v.parse().ok()).unwrap_or(64);
     req.sampling.seed = flags.get("seed").and_then(|v| v.parse().ok());
     req.priority = priority_flag(flags)?;
+    if let Some(n) = flags.get("n") {
+        req.n = n.parse().map_err(|_| format!("--n: '{n}' is not a count"))?;
+    }
     if flags.contains_key("json") {
         req.response_format = ResponseFormat::JsonObject;
     }
     let resp = fe.chat_completion(req).map_err(|e| e.to_string())?;
-    println!("{}", resp.text());
+    if resp.choices.len() == 1 {
+        println!("{}", resp.text());
+    } else {
+        for c in &resp.choices {
+            println!("--- choice {} [{}]", c.index, c.finish_reason.as_str());
+            println!("{}", c.content);
+        }
+    }
     eprintln!(
         "[prompt {} tok | completion {} tok | ttft {:.3}s | {:.1} tok/s]",
         resp.usage.prompt_tokens,

@@ -203,6 +203,16 @@ pub struct EngineStats {
     /// sequence resumed past its surviving prefix-cache boundary — the
     /// price paid for recompute-on-resume (spill/restore would zero it).
     pub preempted_tokens_recomputed: u64,
+    /// KV forks: each `n>1` fan-out branch (beyond the first) that
+    /// shared its parent's pages instead of re-prefilling the prompt.
+    pub forks: u64,
+    /// Physical page copies applied for fork tails and copy-on-write
+    /// un-shares (backends with a page-copy primitive; the recompute
+    /// fallback shows up in `prefill_chunks` instead).
+    pub cow_page_copies: u64,
+    /// Peak number of pool pages simultaneously shared (refcount > 1)
+    /// by forked families and live prefix hits. A high-water gauge.
+    pub shared_pages: u64,
     /// Backend faults the engine observed (transient errors, device
     /// losses, non-finite logit rows) — injected or real.
     pub faults_injected: u64,
@@ -319,6 +329,9 @@ impl EngineStats {
             "decode_padding_ratio" => self.decode_padding_ratio(),
             "preemptions" => self.preemptions as i64,
             "preempted_tokens_recomputed" => self.preempted_tokens_recomputed as i64,
+            "forks" => self.forks as i64,
+            "cow_page_copies" => self.cow_page_copies as i64,
+            "shared_pages" => self.shared_pages as i64,
             "e2e_requests" => self.e2e.len() as i64,
             "e2e_mean_s" => self.e2e.mean(),
             "speculative" => crate::obj! {
@@ -381,6 +394,10 @@ impl EngineStats {
         self.spec_steps += other.spec_steps;
         self.preemptions += other.preemptions;
         self.preempted_tokens_recomputed += other.preempted_tokens_recomputed;
+        self.forks += other.forks;
+        self.cow_page_copies += other.cow_page_copies;
+        // High-water gauge, not a flow: peak of the peaks.
+        self.shared_pages = self.shared_pages.max(other.shared_pages);
         self.faults_injected += other.faults_injected;
         self.transient_retries += other.transient_retries;
         self.device_resets += other.device_resets;
@@ -529,6 +546,28 @@ mod tests {
         s.merge(&other);
         assert_eq!(s.preemptions, 4);
         assert_eq!(s.preempted_tokens_recomputed, 136);
+    }
+
+    #[test]
+    fn engine_stats_fork_counters_and_json() {
+        let mut s = EngineStats::new();
+        s.forks = 3;
+        s.cow_page_copies = 5;
+        s.shared_pages = 12;
+
+        let v = s.stats_json();
+        assert_eq!(v.get("forks").and_then(|x| x.as_i64()), Some(3));
+        assert_eq!(v.get("cow_page_copies").and_then(|x| x.as_i64()), Some(5));
+        assert_eq!(v.get("shared_pages").and_then(|x| x.as_i64()), Some(12));
+
+        let mut other = EngineStats::new();
+        other.forks = 1;
+        other.cow_page_copies = 2;
+        other.shared_pages = 7; // below s's peak: max wins, not sum
+        s.merge(&other);
+        assert_eq!(s.forks, 4);
+        assert_eq!(s.cow_page_copies, 7);
+        assert_eq!(s.shared_pages, 12);
     }
 
     #[test]

@@ -139,6 +139,26 @@ pub trait ModelBackend {
         block_tables: &[i32],
     ) -> Result<StepOutput, RuntimeError>;
 
+    /// Whether [`Self::copy_page`] works on this backend. When it does,
+    /// KV forking copies a partially-filled tail page device-side and
+    /// copy-on-write un-shares pages without recompute; when it does
+    /// not, the engine falls back to recomputing the affected positions
+    /// (exact, just slower).
+    fn supports_page_copy(&self) -> bool {
+        false
+    }
+
+    /// Copy the full KV contents of page `src` into page `dst`
+    /// device-side. Both must be valid non-garbage pages of the pool.
+    /// Used by the fork/copy-on-write machinery; never on the logits
+    /// path, so the default for backends without a copy primitive is a
+    /// structured error (the engine checks [`Self::supports_page_copy`]
+    /// first and routes around it).
+    fn copy_page(&mut self, src: u32, dst: u32) -> Result<(), RuntimeError> {
+        let _ = (src, dst);
+        Err(RuntimeError::Shape("backend has no page-copy primitive".into()))
+    }
+
     /// Bytes of weight traffic one step touches (browser cost model).
     fn weight_bytes(&self) -> usize;
 

@@ -280,6 +280,16 @@ impl ModelBackend for FaultInjectingBackend {
         Ok(out)
     }
 
+    /// Plain delegation — page copies are pool maintenance, not a model
+    /// op; the fault schedule's op counter only advances on compute.
+    fn supports_page_copy(&self) -> bool {
+        self.inner.supports_page_copy()
+    }
+
+    fn copy_page(&mut self, src: u32, dst: u32) -> Result<(), RuntimeError> {
+        self.inner.copy_page(src, dst)
+    }
+
     fn weight_bytes(&self) -> usize {
         self.inner.weight_bytes()
     }

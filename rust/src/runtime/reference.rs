@@ -204,6 +204,28 @@ impl ModelBackend for ReferenceBackend {
         Ok(())
     }
 
+    fn supports_page_copy(&self) -> bool {
+        true
+    }
+
+    fn copy_page(&mut self, src: u32, dst: u32) -> Result<(), RuntimeError> {
+        let np = self.config.num_pages;
+        for page in [src, dst] {
+            // Page 0 is the garbage page: copying from it would launder
+            // unwritten slots into a live table, copying into it would
+            // corrupt every padding row.
+            if page == 0 || page as usize >= np {
+                return Err(RuntimeError::Shape(format!(
+                    "copy_page {page} out of pool (num_pages {np})"
+                )));
+            }
+        }
+        let ps = self.config.page_size;
+        let s = src as usize * ps;
+        self.pages.copy_within(s..s + ps, dst as usize * ps);
+        Ok(())
+    }
+
     fn prefill_chunk(
         &mut self,
         ids: &[i32],

@@ -22,7 +22,7 @@ mod logits;
 mod rng;
 
 pub use logits::{LogitsProcessor, SampleScratch, SamplingParams, TokenLogprob};
-pub use rng::Pcg32;
+pub use rng::{branch_seed, Pcg32};
 
 #[cfg(test)]
 mod tests;

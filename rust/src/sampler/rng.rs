@@ -20,6 +20,33 @@ pub struct Pcg32 {
     inc: u64,
 }
 
+/// The effective sampler seed of branch `index` of an `n>1` request
+/// whose (explicit or fallback) seed is `seed`.
+///
+/// Branch 0 *is* the parent request — it keeps `seed` unchanged, so an
+/// `n>1` request's first choice is byte-identical to the same request
+/// with `n: 1`. Later branches mix the index through a splitmix-style
+/// finalizer, giving each its own decorrelated stream while staying a
+/// pure function of `(seed, index)` — which is what lets tests submit n
+/// independent requests with `seed = branch_seed(s, i)` and demand byte
+/// equality against the forked family.
+///
+/// ```
+/// use webllm::sampler::branch_seed;
+///
+/// assert_eq!(branch_seed(42, 0), 42);
+/// assert_ne!(branch_seed(42, 1), branch_seed(42, 2));
+/// ```
+pub fn branch_seed(seed: u64, index: usize) -> u64 {
+    if index == 0 {
+        return seed;
+    }
+    let mut x = seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
 impl Pcg32 {
     /// Seed a generator (any seed is fine, including 0).
     pub fn new(seed: u64) -> Self {

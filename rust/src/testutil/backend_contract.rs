@@ -101,6 +101,7 @@ impl BackendConformance {
         self.chunked_prefill_reads_resident_prefix_pages();
         self.verify_chunk_matches_sequential_decode();
         self.recompute_after_reset_matches_uninterrupted_chain();
+        self.forked_family_decodes_like_independent_sequences();
     }
 
     /// Menus are non-empty, ascending, and sized within the model config.
@@ -409,5 +410,60 @@ impl BackendConformance {
         let after_seq = Self::decode_single(seq.as_mut(), 60, pos, pos + 1, &bt);
         let after_vc = Self::decode_single(rt.as_mut(), 60, pos, pos + 1, &bt);
         self.assert_close(&after_seq, &after_vc, "decode after verify vs after sequential");
+    }
+
+    /// The copy-on-write fork contract (backends advertising
+    /// `supports_page_copy`): after one prompt prefill, a branch whose
+    /// table shares the full pages and owns a `copy_page` duplicate of
+    /// the partial tail page decodes exactly like an independent
+    /// sequence that prefilled the same prompt on its own pages — and
+    /// divergent appends on the two branches never bleed into each
+    /// other through the shared page.
+    pub fn forked_family_decodes_like_independent_sequences(&self) {
+        let mut rt = self.fresh();
+        if !rt.supports_page_copy() {
+            assert!(rt.copy_page(1, 2).is_err(), "copy_page must error when unsupported");
+            return;
+        }
+        let mc = rt.config().clone();
+        let ps = mc.page_size;
+        // A prompt with one full shared page and a 2-token partial tail.
+        let prompt: Vec<i32> = (0..(ps + 2) as i32).map(|i| 70 + i).collect();
+        let len = prompt.len() as i32;
+        let chunk = mc.pick_chunk(prompt.len()).expect("prompt chunk");
+
+        // Parent on pages [1, 2]; the fork shares page 1 and copies the
+        // tail page 2 -> 3.
+        let mut bt_parent = vec![0i32; mc.max_pages_per_seq()];
+        bt_parent[0] = 1;
+        bt_parent[1] = 2;
+        rt.prefill(&padded(&prompt, chunk), prompt.len(), &bt_parent).expect("prefill");
+        rt.copy_page(2, 3).expect("tail page copy");
+        let mut bt_child = bt_parent.clone();
+        bt_child[1] = 3;
+
+        // Diverge: parent appends 90, the fork appends 91 — both writing
+        // position `len`, which lands in their private tail pages.
+        let parent_t1 = Self::decode_single(rt.as_mut(), 90, len, len + 1, &bt_parent);
+        let child_t1 = Self::decode_single(rt.as_mut(), 91, len, len + 1, &bt_child);
+        Self::assert_far(&parent_t1, &child_t1, "diverged branches");
+        // Chain one more step each; reads cross the shared/private split.
+        let parent_t2 = Self::decode_single(rt.as_mut(), 92, len + 1, len + 2, &bt_parent);
+        let child_t2 = Self::decode_single(rt.as_mut(), 93, len + 1, len + 2, &bt_child);
+
+        // Baselines: independent sequences with the same histories on
+        // disjoint pages, no sharing anywhere.
+        let families = [([90i32, 92], [parent_t1, parent_t2]), ([91, 93], [child_t1, child_t2])];
+        for (history, forked) in families {
+            let mut solo = self.fresh();
+            let mut bt = vec![0i32; mc.max_pages_per_seq()];
+            bt[0] = 5;
+            bt[1] = 6;
+            solo.prefill(&padded(&prompt, chunk), prompt.len(), &bt).expect("prefill");
+            let t1 = Self::decode_single(solo.as_mut(), history[0], len, len + 1, &bt);
+            let t2 = Self::decode_single(solo.as_mut(), history[1], len + 1, len + 2, &bt);
+            self.assert_close(&t1, &forked[0], &format!("fork vs solo, token {}", history[0]));
+            self.assert_close(&t2, &forked[1], &format!("fork vs solo, token {}", history[1]));
+        }
     }
 }

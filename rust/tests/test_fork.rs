@@ -1,0 +1,392 @@
+//! Parallel sampling (`n > 1`) via page-level copy-on-write KV forking:
+//! prefill once, decode many.
+//!
+//! The load-bearing properties, all on the deterministic reference
+//! backend (no artifacts, runs everywhere):
+//!   (a) every choice of an `n>1` request is byte-identical to an
+//!       independent `n=1` request carrying that branch's derived seed —
+//!       the fork is a scheduling optimization, never an output one;
+//!   (b) the family runs exactly one prefill pass over the prompt
+//!       (prefill-token accounting) and shares full prompt pages by
+//!       refcount (fork/CoW stats);
+//!   (c) the identity in (a) survives randomized preemption schedules,
+//!       grammar fast-forward, and speculative decoding;
+//!   (d) streamed families partition their chunks by choice `index`;
+//!   (e) aborts resolve the whole family without leaking pages, and a
+//!       finished family seeds the prefix cache for O(new-tokens)
+//!       follow-up sessions.
+
+use webllm::api::{ChatCompletionRequest, FinishReason, ResponseFormat};
+use webllm::coordinator::{EngineConfig, EngineEvent, MLCEngine, RequestId};
+use webllm::json::{parse, Value};
+use webllm::sampler::branch_seed;
+use webllm::testutil::ban_reference_eos as ban_eos;
+use webllm::testutil::prop::Runner;
+
+const MODEL: &str = "tiny-ref";
+/// Different depth/pool: a genuinely divergent drafter, so rejection
+/// paths run under speculation.
+const DRAFT: &str = "tiny-ref-b";
+
+fn engine() -> MLCEngine {
+    MLCEngine::new(&EngineConfig::reference(&[MODEL])).expect("engine")
+}
+
+/// Seeded sampling request over `'x' * k` (k + 4 prompt tokens).
+fn xs_request(k: usize, max_tokens: usize, seed: u64, temperature: f32) -> ChatCompletionRequest {
+    let mut r = ChatCompletionRequest::new(MODEL).user("x".repeat(k));
+    r.max_tokens = max_tokens;
+    r.sampling.seed = Some(seed);
+    r.sampling.temperature = temperature;
+    ban_eos(&mut r);
+    r
+}
+
+fn stat_i64(engine: &MLCEngine, key: &str) -> i64 {
+    engine.stats_json().get(key).unwrap().as_i64().unwrap()
+}
+
+fn model_stat(engine: &MLCEngine, key: &str) -> i64 {
+    engine
+        .stats_json()
+        .get("models")
+        .and_then(|m| m.get(MODEL))
+        .and_then(|m| m.get(key))
+        .and_then(Value::as_i64)
+        .unwrap()
+}
+
+/// Drive `engine` to completion, preempting one of `id`'s branches
+/// whenever `when` says so, and return `id`'s response. Bounded so a
+/// scheduling bug fails loudly instead of hanging the suite.
+fn run_family_with_preemption(
+    engine: &mut MLCEngine,
+    id: RequestId,
+    mut when: impl FnMut(usize) -> bool,
+) -> webllm::api::ChatCompletionResponse {
+    for step in 0..800 {
+        if when(step) {
+            engine.preempt(id);
+        }
+        engine.step().expect("step");
+        for ev in engine.poll_events() {
+            match ev {
+                EngineEvent::Done(rid, resp) if rid == id => return resp,
+                EngineEvent::Error(rid, e) if rid == id => panic!("family failed: {e}"),
+                _ => {}
+            }
+        }
+        if !engine.has_work() {
+            break;
+        }
+    }
+    panic!("family did not complete within 800 steps");
+}
+
+// -- (a)+(b) choice-level byte identity + single-prefill accounting ----------
+
+#[test]
+fn prop_each_choice_matches_an_independent_seeded_request() {
+    // Random prompt length, temperature, seed, and fan-out width: choice
+    // `i` of an n-way request must be byte-identical to a solo request
+    // seeded with `branch_seed(seed, i)` (branch 0 IS the plain seed),
+    // while the family prefills the prompt exactly once.
+    Runner::new("fork_choice_equivalence", 5).run(|rng| {
+        let k = rng.range(61);
+        let seed = rng.u64();
+        let temperature = 0.2 + rng.f64() as f32;
+        let n = 2 + rng.range(3);
+
+        let mut want = Vec::new();
+        for i in 0..n {
+            let solo = engine()
+                .chat_completion(xs_request(k, 6, branch_seed(seed, i), temperature))
+                .map_err(|e| e.to_string())?;
+            want.push(solo);
+        }
+
+        let mut e = engine();
+        let resp = e
+            .chat_completion(xs_request(k, 6, seed, temperature).with_n(n))
+            .map_err(|e| e.to_string())?;
+        if resp.choices.len() != n {
+            return Err(format!("asked for {n} choices, got {}", resp.choices.len()));
+        }
+        for (i, choice) in resp.choices.iter().enumerate() {
+            if choice.index != i {
+                return Err(format!("choice {i} carries index {}", choice.index));
+            }
+            if choice.content != want[i].text() {
+                return Err(format!(
+                    "choice {i} (n={n}, k={k}) {:?} != independent run {:?}",
+                    choice.content,
+                    want[i].text()
+                ));
+            }
+        }
+        // One prefill pass for the whole family: prompt tokens computed
+        // once, not n times, and every extra branch is a recorded fork.
+        if stat_i64(&e, "prefill_tokens") != (k + 4) as i64 {
+            return Err(format!(
+                "family recomputed the prompt: {} prefill tokens for a {}-token prompt",
+                stat_i64(&e, "prefill_tokens"),
+                k + 4
+            ));
+        }
+        if stat_i64(&e, "forks") != (n - 1) as i64 {
+            return Err(format!("expected {} forks, saw {}", n - 1, stat_i64(&e, "forks")));
+        }
+        // Usage aggregates across the family: prompt counted once,
+        // completions summed over branches.
+        if resp.usage.prompt_tokens != k + 4 {
+            return Err(format!("family prompt_tokens {} != {}", resp.usage.prompt_tokens, k + 4));
+        }
+        let sum: usize = want.iter().map(|w| w.usage.completion_tokens).sum();
+        if resp.usage.completion_tokens != sum {
+            return Err(format!(
+                "family completion_tokens {} != summed branches {sum}",
+                resp.usage.completion_tokens
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn greedy_family_prefills_once_and_shares_pages() {
+    // Deterministic spot check with exact stats: a 62-token prompt spans
+    // 7 full pages (shared by refcount across the family) plus a partial
+    // tail page (copied per branch — the reference backend implements
+    // the page-copy primitive, so each fork queues one physical copy).
+    let baseline = engine().chat_completion(xs_request(58, 6, 7, 0.0)).unwrap();
+
+    let mut e = engine();
+    let idle_pages = model_stat(&e, "available_pages");
+    let resp = e.chat_completion(xs_request(58, 6, 7, 0.0).with_n(4)).unwrap();
+    assert_eq!(resp.choices.len(), 4);
+    for choice in &resp.choices {
+        // Greedy sampling draws no RNG: every branch must agree with the
+        // solo greedy run exactly.
+        assert_eq!(choice.content, baseline.text(), "choice {} diverged", choice.index);
+        assert_eq!(choice.finish_reason, FinishReason::Length);
+    }
+    assert_eq!(stat_i64(&e, "prefill_tokens"), 62, "prompt must be prefilled exactly once");
+    assert_eq!(stat_i64(&e, "forks"), 3);
+    assert!(stat_i64(&e, "shared_pages") >= 7, "full prompt pages must be refcount-shared");
+    assert!(stat_i64(&e, "cow_page_copies") >= 3, "each fork copies the partial tail page");
+    // Nothing in flight: every page is allocatable again (free or
+    // prefix-cached, both count).
+    assert!(!e.has_work());
+    assert_eq!(model_stat(&e, "available_pages"), idle_pages, "family leaked pages");
+}
+
+// -- (c) identity survives preemption + speculation + grammar ----------------
+
+#[test]
+fn prop_fork_identity_survives_random_preemption_schedules() {
+    // Evicting individual branches mid-decode (recompute-on-resume) must
+    // not change any choice: divergent tokens live in branch-private
+    // pages, shared prompt pages are refcounted, and the sampler state
+    // survives eviction.
+    Runner::new("fork_preemption_equivalence", 5).run(|rng| {
+        let k = rng.range(71);
+        let seed = rng.u64();
+        let temperature = 0.2 + rng.f64() as f32;
+
+        let mut want = Vec::new();
+        for i in 0..3 {
+            let solo = engine()
+                .chat_completion(xs_request(k, 5, branch_seed(seed, i), temperature))
+                .map_err(|e| e.to_string())?;
+            want.push(solo);
+        }
+
+        let schedule: Vec<bool> = (0..96).map(|_| rng.range(3) == 0).collect();
+        let mut e = engine();
+        let req = xs_request(k, 5, seed, temperature).with_n(3);
+        let id = e.submit(req).map_err(|e| e.to_string())?;
+        let resp =
+            run_family_with_preemption(&mut e, id, |s| schedule.get(s).copied().unwrap_or(false));
+        for (i, choice) in resp.choices.iter().enumerate() {
+            if choice.content != want[i].text() {
+                return Err(format!(
+                    "preempted choice {i} {:?} != independent run {:?} (k={k})",
+                    choice.content,
+                    want[i].text()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fork_composes_with_grammar_fast_forward_and_speculation() {
+    // The full stack at once: n=2 fan-out, JSON-schema grammar with
+    // fast-forward, a divergent draft model, and eviction every other
+    // step. Each choice still matches its independent seeded run on the
+    // same speculative configuration, and no pages leak.
+    let spec_cfg = || {
+        let mut cfg = EngineConfig::reference(&[MODEL]);
+        cfg.draft_model = Some(DRAFT.to_string());
+        cfg.enable_fast_forward = true;
+        cfg
+    };
+    let schema = r#"{
+        "type": "object",
+        "properties": {"ok": {"type": "boolean"}, "n": {"type": "integer"}},
+        "required": ["ok", "n"]
+    }"#;
+    let seed = 0xF0_5EED;
+    let mk = |s: u64| {
+        let mut r = ChatCompletionRequest::new(MODEL).user("emit json");
+        r.max_tokens = 100;
+        r.sampling.temperature = 0.8;
+        r.sampling.seed = Some(s);
+        // '}' nudge closes the integer so derivations finish early.
+        r.sampling.logit_bias.insert(8 + b'}' as u32, 5.0);
+        r.response_format = ResponseFormat::JsonSchema(parse(schema).unwrap());
+        r
+    };
+
+    let mut want = Vec::new();
+    for i in 0..2 {
+        let solo =
+            MLCEngine::new(&spec_cfg()).unwrap().chat_completion(mk(branch_seed(seed, i))).unwrap();
+        assert!(parse(solo.text()).is_ok(), "baseline must satisfy the schema");
+        want.push(solo);
+    }
+
+    let mut e = MLCEngine::new(&spec_cfg()).unwrap();
+    let idle_pages = model_stat(&e, "available_pages");
+    let id = e.submit(mk(seed).with_n(2)).unwrap();
+    let resp = run_family_with_preemption(&mut e, id, |s| s % 2 == 0);
+    for (i, choice) in resp.choices.iter().enumerate() {
+        assert_eq!(choice.content, want[i].text(), "spec+grammar choice {i} diverged");
+        assert!(parse(&choice.content).is_ok(), "choice {i} broke the schema");
+    }
+    assert_eq!(stat_i64(&e, "forks"), 1);
+    assert!(stat_i64(&e, "preemptions") > 0, "schedule never actually evicted");
+    assert!(!e.has_work());
+    assert_eq!(model_stat(&e, "available_pages"), idle_pages, "pages leaked");
+}
+
+// -- (d) streamed families partition by choice index -------------------------
+
+#[test]
+fn streamed_family_chunks_carry_choice_indices() {
+    let n = 3;
+    let mut req = xs_request(10, 5, 99, 0.9).with_n(n);
+    req.stream = true;
+    let mut e = engine();
+    let id = e.submit(req).unwrap();
+
+    let mut texts = vec![String::new(); n];
+    let mut finishes = vec![0usize; n];
+    let mut usage_chunks = 0;
+    let mut done = None;
+    for _ in 0..200 {
+        e.step().unwrap();
+        for ev in e.poll_events() {
+            match ev {
+                EngineEvent::Chunk(rid, c) => {
+                    assert_eq!(rid, id);
+                    assert!(c.index < n, "chunk index {} out of range", c.index);
+                    texts[c.index].push_str(&c.delta);
+                    if c.finish_reason.is_some() {
+                        finishes[c.index] += 1;
+                    }
+                    if c.usage.is_some() {
+                        usage_chunks += 1;
+                    }
+                }
+                EngineEvent::Done(rid, resp) => {
+                    assert_eq!(rid, id);
+                    done = Some(resp);
+                }
+                EngineEvent::Error(_, e) => panic!("stream failed: {e}"),
+            }
+        }
+        if !e.has_work() {
+            break;
+        }
+    }
+    let done = done.expect("family never completed");
+
+    // Every choice streamed to its own index lane: one finish chunk per
+    // branch, aggregate usage on exactly one (the last) chunk, and the
+    // concatenated deltas reproduce each final choice byte for byte.
+    assert_eq!(finishes, vec![1; n], "each choice needs exactly one finish chunk");
+    assert_eq!(usage_chunks, 1, "aggregate usage rides exactly one chunk");
+    assert_eq!(done.choices.len(), n);
+    for (i, choice) in done.choices.iter().enumerate() {
+        assert_eq!(choice.index, i);
+        assert_eq!(texts[i], choice.content, "streamed bytes != choice {i}");
+    }
+}
+
+// -- (e) abort hygiene + prefix-cache session reuse --------------------------
+
+#[test]
+fn abort_resolves_the_whole_family_without_leaking_pages() {
+    let mut e = engine();
+    let idle_pages = model_stat(&e, "available_pages");
+    let id = e.submit(xs_request(40, 40, 1, 0.7).with_n(3)).unwrap();
+    // Reach steady-state decode: all three branches running.
+    for _ in 0..40 {
+        e.step().unwrap();
+        if model_stat(&e, "running") == 3 {
+            break;
+        }
+    }
+    assert_eq!(model_stat(&e, "running"), 3, "family never fanned out");
+
+    e.abort(id);
+    e.abort(999_999); // unknown ids are a no-op
+    e.run_to_completion().unwrap();
+    let terminal = e
+        .poll_events()
+        .into_iter()
+        .filter(|ev| {
+            matches!(ev, EngineEvent::Done(rid, _) | EngineEvent::Error(rid, _) if *rid == id)
+        })
+        .count();
+    assert_eq!(terminal, 1, "an aborted family must resolve exactly once");
+    assert_eq!(model_stat(&e, "available_pages"), idle_pages, "abort leaked pages");
+
+    // The pool is genuinely reusable afterwards.
+    let resp = e.chat_completion(xs_request(40, 2, 1, 0.0).with_n(2)).unwrap();
+    assert_eq!(resp.choices.len(), 2);
+}
+
+#[test]
+fn family_completion_seeds_the_prefix_cache_for_session_reuse() {
+    // After a family finishes, its full prompt pages land in the prefix
+    // cache exactly once (refcounts drained in any free order), so a
+    // follow-up request over the same prompt prefills O(new tokens).
+    let mut e = engine();
+    let first = e.chat_completion(xs_request(40, 4, 3, 0.0).with_n(2)).unwrap();
+    assert_eq!(stat_i64(&e, "prefill_cached_tokens_skipped"), 0);
+
+    let again = e.chat_completion(xs_request(40, 4, 3, 0.0)).unwrap();
+    assert_eq!(again.text(), first.choices[0].content, "warm rerun diverged");
+    // 44 prompt tokens = 5 full pages the cache can keep (40 tokens).
+    assert!(
+        stat_i64(&e, "prefill_cached_tokens_skipped") >= 32,
+        "follow-up session recomputed the shared prompt: only {} tokens skipped",
+        stat_i64(&e, "prefill_cached_tokens_skipped")
+    );
+}
+
+// -- validation ---------------------------------------------------------------
+
+#[test]
+fn submit_rejects_unservable_n() {
+    let mut e = engine();
+    let err = e.submit(xs_request(4, 2, 0, 0.0).with_n(0)).unwrap_err();
+    assert_eq!(err.status, 400);
+    assert!(err.message.contains("'n'"), "{}", err.message);
+    let err = e.submit(xs_request(4, 2, 0, 0.0).with_n(10_000)).unwrap_err();
+    assert_eq!(err.status, 400);
+    assert!(err.message.contains("max decode batch"), "{}", err.message);
+}
